@@ -1,0 +1,69 @@
+//! eigen-100 sweep through BOTH live backends, reporting the per-job
+//! makespan contrast the paper's Fig 3 shows for its fastest benchmark:
+//! per-job SLURM submission pays queue + prolog per evaluation; the HQ
+//! backend pays the allocation wait once, then ms-level dispatch.
+//!
+//! Run: `cargo run --release --example eigen_sweep [-- --evals 12]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use uqsched::cli::Args;
+use uqsched::coordinator::start_live;
+use uqsched::json::Value;
+use uqsched::metrics::BoxStats;
+use uqsched::models;
+use uqsched::runtime::Engine;
+use uqsched::umbridge::HttpModel;
+use uqsched::workload::{scenario, App};
+
+fn run_backend(engine: Arc<Engine>, backend: &str, evals: usize,
+               time_scale: f64) -> anyhow::Result<Vec<f64>> {
+    let stack = start_live(
+        engine,
+        models::EIGEN_SMALL_NAME,
+        backend,
+        2,
+        &scenario(App::Eigen100),
+        time_scale,
+        // Per-job servers: the configuration the paper measured.
+        false,
+    )?;
+    let mut client = HttpModel::connect(&stack.balancer.url(),
+                                        models::EIGEN_SMALL_NAME)?;
+    let cfg = Value::Obj(Default::default());
+    let mut makespans = Vec::new();
+    for i in 0..evals {
+        let t0 = Instant::now();
+        let out = client.evaluate(&[vec![(i + 1) as f64]], &cfg)?;
+        makespans.push(t0.elapsed().as_secs_f64());
+        assert_eq!(out[0].len(), 100); // 100 eigenvalues
+    }
+    Ok(makespans)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let evals = args.usize_or("evals", 10)?;
+    let time_scale = args.f64_or("time-scale", 2000.0)?;
+
+    println!("=== eigen-100 sweep: {evals} evaluations per backend, \
+              per-job servers ===");
+    let engine = Arc::new(Engine::from_default_dir()?);
+    engine.warmup(&["eigen_small"])?;
+
+    let slurm = run_backend(engine.clone(), "slurm", evals, time_scale)?;
+    println!("slurm backend per-eval makespan [s]: {}",
+             BoxStats::from(&slurm).row());
+
+    let hq = run_backend(engine.clone(), "hq", evals, time_scale)?;
+    println!("hq backend    per-eval makespan [s]: {}",
+             BoxStats::from(&hq).row());
+
+    let ms = slurm.iter().sum::<f64>() / slurm.len() as f64;
+    let mh = hq.iter().sum::<f64>() / hq.len() as f64;
+    println!("\nmean makespan: slurm {ms:.3}s vs hq {mh:.3}s -> {:.1}x \
+              (paper Fig 3: HQ ~3x quicker on eigen-100)", ms / mh);
+    println!("eigen_sweep OK");
+    std::process::exit(0);
+}

@@ -1,0 +1,43 @@
+//! Quickstart: serve the GP surrogate over UM-Bridge, evaluate a few
+//! points, print mean/uncertainty — the paper's section II.D example,
+//! in Rust end to end (HTTP + PJRT, no Python at runtime).
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use std::sync::Arc;
+
+use uqsched::json::Value;
+use uqsched::models;
+use uqsched::runtime::Engine;
+use uqsched::umbridge::{serve_models, HttpModel};
+use uqsched::workload::lhs;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Model server (the paper's `umbridge.serve_models`).
+    let engine = Arc::new(Engine::from_default_dir()?);
+    let model = models::by_name(engine, models::GP_NAME)?;
+    let server = serve_models(vec![model], 0)?;
+    println!("GP surrogate serving at {}", server.url());
+
+    // 2. Client (the paper's `umbridge.HTTPModel`).
+    let mut client = HttpModel::connect(&server.url(), models::GP_NAME)?;
+    let (ver, names) = client.info()?;
+    println!("protocol {ver}, models {names:?}");
+    println!("input sizes  {:?}", client.input_sizes()?);
+    println!("output sizes {:?}", client.output_sizes()?);
+
+    // 3. Evaluate a few LHS points of the Table-II parameter space.
+    let cfg = Value::Obj(Default::default());
+    println!("\n{:<58} {:>10} {:>10} {:>10}", "theta (7 GS2 inputs)",
+             "gamma", "omega", "sd(gamma)");
+    for p in lhs(8, 42) {
+        let out = client.evaluate(&[p.to_vec()], &cfg)?;
+        let mean = &out[0];
+        let var = &out[1];
+        println!("{:<58} {:>10.4} {:>10.4} {:>10.4}",
+                 format!("{:.2?}", p), mean[0], mean[1], var[0].sqrt());
+    }
+    println!("\nquickstart OK");
+    std::process::exit(0);
+}

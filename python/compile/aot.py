@@ -1,0 +1,186 @@
+"""AOT pipeline: train the GP, lower every L2 entry point to HLO text.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+  * ``<entry>.hlo.txt``   one per registry entry (six total)
+  * ``manifest.json``     shapes/dtypes per entry + model metadata the
+                          Rust side needs (grid sizes, parameter ranges,
+                          GP hyperparameters, initial-state spec)
+  * ``gp_train.npz``      cached training data (rebuilds are incremental)
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import eigen, gp as gp_mod, gs2lite, model
+from .kernels import rbf
+
+TRAIN_N = 224
+TRAIN_SEED = 20250710
+TRAIN_STEPS = 250
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _train_cache_key() -> str:
+    h = hashlib.sha256()
+    here = os.path.dirname(__file__)
+    for f in ("gs2lite.py",):
+        with open(os.path.join(here, f), "rb") as fh:
+            h.update(fh.read())
+    h.update(f"{TRAIN_N}:{TRAIN_SEED}:{gs2lite.NGRID}".encode())
+    return h.hexdigest()[:16]
+
+
+def get_training_data(art_dir: str):
+    cache = os.path.join(art_dir, "gp_train.npz")
+    key = _train_cache_key()
+    if os.path.exists(cache):
+        z = np.load(cache, allow_pickle=False)
+        if str(z.get("key", "")) == key or (
+                "key" in z.files and str(z["key"]) == key):
+            return z["x01"], z["x_phys"], z["y"]
+    print(f"[aot] generating GP training data: {TRAIN_N} direct solves "
+          f"of gs2lite (n={gs2lite.NGRID}) ...", flush=True)
+    x01, x_phys, y = gp_mod.training_data(TRAIN_N, TRAIN_SEED)
+    np.savez(cache, x01=x01, x_phys=x_phys, y=y, key=np.str_(key))
+    return x01, x_phys, y
+
+
+def lower_entry(name, fn, specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=TRAIN_STEPS)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    x01, x_phys, y = get_training_data(args.out_dir)
+    print(f"[aot] training GP on {len(x01)} samples "
+          f"({args.train_steps} Adam steps on exact MLL) ...", flush=True)
+    gpp = gp_mod.train(x01, y, steps=args.train_steps)
+    print(f"[aot] GP fitted: sf2={gpp.sf2:.4f} sn2={gpp.sn2:.6f} "
+          f"ls={np.round(1/np.sqrt(gpp.inv_ls), 3).tolist()}", flush=True)
+
+    entries = model.build_entries(gpp)
+    manifest = {
+        "format": "hlo-text",
+        "time_scale_note": "see DESIGN.md section 7",
+        "entries": {},
+        "gs2": {
+            "ngrid": gs2lite.NGRID,
+            "chunk_iters": gs2lite.CHUNK_ITERS,
+            "theta_max": float(gs2lite.THETA_MAX),
+            "residual_tol": 1e-4,
+            "max_chunks": 400,
+        },
+        "eigen": {
+            "n_small": eigen.N_SMALL,
+            "n_large": eigen.N_LARGE,
+            "sweeps_small": eigen.SWEEPS_SMALL,
+            "sweeps_large": eigen.SWEEPS_LARGE,
+        },
+        "gp": {
+            "train_n": int(len(x01)),
+            "train_seed": TRAIN_SEED,
+            "sf2": float(gpp.sf2),
+            "sn2": float(gpp.sn2),
+            "lengthscales": (1.0 / np.sqrt(gpp.inv_ls)).tolist(),
+            "y_mean": gpp.y_mean.tolist(),
+            "y_std": gpp.y_std.tolist(),
+        },
+        "params": {
+            "names": list(gs2lite.PARAM_NAMES),
+            "lo": gpp.lo.tolist(),
+            "hi": gpp.hi.tolist(),
+        },
+        "pallas": rbf.vmem_footprint_bytes(),
+    }
+
+    for name, (fn, specs) in entries.items():
+        print(f"[aot] lowering {name} ...", flush=True)
+        text = lower_entry(name, fn, specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)}
+                       for s in specs],
+            "hlo_bytes": len(text),
+        }
+        print(f"[aot]   {path}: {len(text)} bytes", flush=True)
+
+    # Golden test vectors: deterministic inputs -> expected outputs, so the
+    # Rust runtime tests can assert end-to-end numerics across the AOT
+    # boundary without a Python dependency.
+    testvec = {}
+    for name, (fn, specs) in entries.items():
+        ins = []
+        for i, spec in enumerate(specs):
+            size = int(np.prod(spec.shape))
+            v = np.sin(0.1 * (np.arange(size, dtype=np.float32) + 1 + i))
+            if name.startswith("gp_predict") or name == "qoi_integral":
+                lo = np.asarray(gpp.lo); hi = np.asarray(gpp.hi)
+                u = v.reshape(spec.shape)
+                u = lo + (0.5 + 0.5 * u) * (hi - lo)
+                ins.append(u.astype(np.float32))
+            elif name == "gs2_chunk" and i == 1:
+                ins.append(np.asarray(gs2lite.initial_state(),
+                                      dtype=np.float32))
+            elif name == "gs2_chunk" and i == 0:
+                lo = np.asarray(gpp.lo); hi = np.asarray(gpp.hi)
+                u = 0.5 + 0.5 * v.reshape(spec.shape)
+                ins.append((lo + u * (hi - lo)).astype(np.float32))
+            elif name.startswith("eigen"):
+                n = spec.shape[0]
+                a = v.reshape(n, n)
+                ins.append((0.5 * (a + a.T)).astype(np.float32))
+            else:
+                ins.append(v.reshape(spec.shape))
+        outs = jax.jit(fn)(*[jnp.asarray(x) for x in ins])
+        outs = jax.tree_util.tree_leaves(outs)
+        testvec[name] = {
+            "inputs": [x.reshape(-1).tolist() for x in ins],
+            "input_shapes": [list(x.shape) for x in ins],
+            "outputs": [np.asarray(o).reshape(-1).tolist() for o in outs],
+            "output_shapes": [list(np.asarray(o).shape) for o in outs],
+        }
+    with open(os.path.join(args.out_dir, "testvec.json"), "w") as f:
+        json.dump(testvec, f)
+    print("[aot] testvec.json written.", flush=True)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("[aot] manifest.json written; artifacts complete.", flush=True)
+
+
+if __name__ == "__main__":
+    main()

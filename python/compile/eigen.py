@@ -1,0 +1,114 @@
+"""Parallel-order cyclic Jacobi eigensolver (the paper's eigen benchmarks).
+
+The paper's cheap/moderate workloads are ``numpy.linalg.eig`` on dense
+n=100 and n=5000 matrices (LAPACK ``_geev``).  LAPACK custom-calls cannot
+cross the HLO-text AOT boundary, so we implement the solver itself: a
+*parallel-order* Jacobi method for symmetric matrices in which each round
+applies n/2 disjoint Givens rotations as one orthogonal similarity
+``A <- Q^T A Q`` — two dense matmuls, which is exactly the memory-bound
+dense-algebra profile the paper's eigen benchmark exercises (and maps to
+the MXU on real hardware rather than a scalar rotation loop).
+
+The round-robin (circle method) schedule covering all n(n-1)/2 pairs in
+n-1 rounds is precomputed and baked into the HLO as a constant.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Benchmark sizes: eigen-100 matches the paper; the paper's eigen-5000 is
+# scaled to n=256 to keep the compiled artifact inside this testbed's CPU
+# budget (see DESIGN.md section 2) while preserving the cheap-vs-moderate
+# runtime contrast.
+N_SMALL = 100
+N_LARGE = 256
+SWEEPS_SMALL = 12
+SWEEPS_LARGE = 18
+SWEEPS = SWEEPS_SMALL
+
+
+def round_robin_schedule(n: int) -> np.ndarray:
+    """(n-1, n//2, 2) disjoint-pair schedule via the circle method."""
+    assert n % 2 == 0, "parallel Jacobi needs even n"
+    players = list(range(n))
+    rounds = []
+    for _ in range(n - 1):
+        pairs = []
+        for k in range(n // 2):
+            a, b = players[k], players[n - 1 - k]
+            pairs.append((min(a, b), max(a, b)))
+        rounds.append(pairs)
+        # rotate all but the first
+        players = [players[0]] + [players[-1]] + players[1:-1]
+    return np.asarray(rounds, dtype=np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps",))
+def jacobi_eigvals(a: jax.Array, sweeps: int = SWEEPS):
+    """Eigenvalues of a symmetric matrix by parallel-order Jacobi.
+
+    Args:
+      a: (n, n) symmetric f32 matrix (only its symmetric part is used).
+      sweeps: number of full sweeps (each = n-1 rounds of n/2 rotations).
+
+    Returns:
+      w:   (n,) eigenvalues, ascending.
+      off: ()   final off-diagonal Frobenius norm (convergence measure).
+    """
+    n = a.shape[0]
+    a = 0.5 * (a + a.T).astype(jnp.float32)
+    sched = jnp.asarray(round_robin_schedule(n))       # (n-1, n/2, 2)
+    eye = jnp.eye(n, dtype=jnp.float32)
+
+    def round_body(r, a):
+        pairs = jax.lax.dynamic_index_in_dim(sched, r % (n - 1), 0,
+                                             keepdims=False)  # (n/2, 2)
+        ps, qs = pairs[:, 0], pairs[:, 1]
+        apq = a[ps, qs]
+        app = a[ps, ps]
+        aqq = a[qs, qs]
+        theta = 0.5 * jnp.arctan2(2.0 * apq, aqq - app)
+        c = jnp.cos(theta)
+        s = jnp.sin(theta)
+        q = eye.at[(ps, ps)].set(c)
+        q = q.at[(qs, qs)].set(c)
+        q = q.at[(ps, qs)].set(s)
+        q = q.at[(qs, ps)].set(-s)
+        a = q.T @ a @ q
+        return 0.5 * (a + a.T)   # re-symmetrise against drift
+
+    total_rounds = sweeps * (n - 1)
+    a = jax.lax.fori_loop(0, total_rounds, round_body, a)
+
+    w = jnp.sort(jnp.diagonal(a))
+    off = jnp.sqrt(jnp.sum((a - jnp.diag(jnp.diagonal(a))) ** 2))
+    return w, off
+
+
+def random_symmetric(n: int, seed: int) -> np.ndarray:
+    """Seeded benchmark matrix, matching the Rust-side generator.
+
+    Uses SplitMix64 so the Rust workload generator can produce the exact
+    same matrices (same seed -> same bits) without numpy.
+    """
+    x = np.uint64(seed)
+    out = np.empty(n * n, dtype=np.float32)
+    GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+    M1 = np.uint64(0xBF58476D1CE4E5B9)
+    M2 = np.uint64(0x94D049BB133111EB)
+    with np.errstate(over="ignore"):
+        for i in range(n * n):
+            x = x + GOLDEN
+            z = x
+            z = (z ^ (z >> np.uint64(30))) * M1
+            z = (z ^ (z >> np.uint64(27))) * M2
+            z = z ^ (z >> np.uint64(31))
+            # top 24 bits -> [0, 1) -> [-1, 1)
+            out[i] = (float(z >> np.uint64(40)) / float(1 << 24)) * 2.0 - 1.0
+    a = out.reshape(n, n)
+    return 0.5 * (a + a.T)

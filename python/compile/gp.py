@@ -1,0 +1,182 @@
+"""Gaussian-process surrogate of gs2lite (the paper's GP workload).
+
+The paper benchmarks a pre-trained GP (Hornsby et al. 2024) that maps the
+seven Table-II inputs to (mode growth rate, mode frequency).  We train the
+equivalent surrogate at build time on seeded LHS samples of the gs2lite
+dispersion model, with an anisotropic RBF kernel and exact conditioning:
+
+* hyperparameters (per-dimension lengthscales, signal variance, noise)
+  are fitted by Adam on the exact log marginal likelihood;
+* ``alpha = (K + sn2 I)^{-1} Y`` and the Cholesky factor ``L`` are baked
+  into the prediction artifact as constants, so the Rust request path is
+  a single PJRT execution with no host-side linear algebra;
+* the prediction mean runs through the L1 Pallas kernel
+  (:mod:`compile.kernels.rbf`); the variance path is a triangular solve
+  against the baked ``L`` (a native HLO TriangularSolve op).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gs2lite
+from .kernels import rbf, ref
+
+
+@dataclasses.dataclass
+class GpParams:
+    """Everything needed to evaluate the trained GP."""
+    x_train: np.ndarray     # (N, 7) normalised inputs in [0, 1]
+    alpha: np.ndarray       # (N, 2)
+    chol: np.ndarray        # (N, N) lower Cholesky of K + sn2 I
+    kinv: np.ndarray        # (N, N) inverse of K + sn2 I (baked so the
+                            # variance path is pure matmul HLO; LAPACK
+                            # custom-calls cannot cross the AOT boundary)
+    inv_ls: np.ndarray      # (7,) inverse squared lengthscales
+    sf2: float              # signal variance
+    sn2: float              # noise variance
+    y_mean: np.ndarray      # (2,) output standardisation
+    y_std: np.ndarray       # (2,)
+    lo: np.ndarray          # (7,) input range, for normalisation
+    hi: np.ndarray          # (7,)
+
+
+def lhs_sample(n: int, dim: int, seed: int) -> np.ndarray:
+    """Seeded Latin hypercube in [0,1]^dim (paper section IV.B: seeded LHS)."""
+    rng = np.random.default_rng(seed)
+    u = (rng.permutation(n).reshape(-1, 1) if dim == 1 else
+         np.stack([rng.permutation(n) for _ in range(dim)], axis=1))
+    return (u + rng.uniform(size=(n, dim))) / n
+
+
+def param_bounds() -> tuple[np.ndarray, np.ndarray]:
+    lo = np.array([r[0] for r in gs2lite.PARAM_RANGES], dtype=np.float32)
+    hi = np.array([r[1] for r in gs2lite.PARAM_RANGES], dtype=np.float32)
+    return lo, hi
+
+
+def training_data(n: int, seed: int, ngrid: int = gs2lite.NGRID):
+    """LHS inputs + direct-solve (gamma, omega) targets of gs2lite."""
+    lo, hi = param_bounds()
+    x01 = lhs_sample(n, 7, seed).astype(np.float32)
+    x_phys = lo + x01 * (hi - lo)
+    y = np.empty((n, 2), dtype=np.float32)
+    for i in range(n):
+        g, w = gs2lite.solve_direct(x_phys[i], n=ngrid)
+        y[i] = (g, w)
+    return x01, x_phys, y
+
+
+def _mll(params, x, y):
+    """Exact negative log marginal likelihood, shared kernel over outputs."""
+    log_ls, log_sf2, log_sn2 = params
+    inv_ls = jnp.exp(-2.0 * log_ls)
+    sf2 = jnp.exp(log_sf2)
+    sn2 = jnp.exp(log_sn2) + 1e-6
+    k = ref.rbf_kernel_matrix(x, x, inv_ls, sf2)
+    n = x.shape[0]
+    kn = k + sn2 * jnp.eye(n, dtype=jnp.float32)
+    chol = jnp.linalg.cholesky(kn)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
+    quad = jnp.sum(alpha * y)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)))
+    o = y.shape[1]
+    return 0.5 * quad + 0.5 * o * logdet + 0.5 * o * n * jnp.log(2 * jnp.pi)
+
+
+def train(x01: np.ndarray, y_raw: np.ndarray, steps: int = 250,
+          lr: float = 0.05, seed: int = 0) -> GpParams:
+    """Fit hyperparameters by Adam on the exact MLL; return baked params."""
+    y_mean = y_raw.mean(axis=0)
+    y_std = y_raw.std(axis=0) + 1e-8
+    y = ((y_raw - y_mean) / y_std).astype(np.float32)
+    x = jnp.asarray(x01, jnp.float32)
+    yj = jnp.asarray(y)
+
+    params = [jnp.full((7,), -0.7, jnp.float32),   # log lengthscales ~0.5
+              jnp.asarray(0.0, jnp.float32),       # log sf2
+              jnp.asarray(-4.0, jnp.float32)]      # log sn2
+
+    loss_grad = jax.jit(jax.value_and_grad(lambda p: _mll(p, x, yj)))
+
+    # Minimal Adam (no optax dependency needed at build time).
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    loss = None
+    for t in range(1, steps + 1):
+        loss, g = loss_grad(params)
+        for i in range(len(params)):
+            m[i] = b1 * m[i] + (1 - b1) * g[i]
+            v[i] = b2 * v[i] + (1 - b2) * g[i] ** 2
+            mh = m[i] / (1 - b1**t)
+            vh = v[i] / (1 - b2**t)
+            params[i] = params[i] - lr * mh / (jnp.sqrt(vh) + eps)
+
+    log_ls, log_sf2, log_sn2 = params
+    inv_ls = np.exp(-2.0 * np.asarray(log_ls))
+    sf2 = float(np.exp(log_sf2))
+    sn2 = float(np.exp(log_sn2)) + 1e-6
+
+    k = np.asarray(ref.rbf_kernel_matrix(x, x, jnp.asarray(inv_ls), sf2))
+    kn = k + sn2 * np.eye(len(x01), dtype=np.float32)
+    chol = np.linalg.cholesky(kn.astype(np.float64)).astype(np.float32)
+    alpha = np.linalg.solve(kn.astype(np.float64),
+                            y.astype(np.float64)).astype(np.float32)
+    kinv = np.linalg.inv(kn.astype(np.float64)).astype(np.float32)
+
+    lo, hi = param_bounds()
+    return GpParams(x_train=np.asarray(x01, np.float32), alpha=alpha,
+                    chol=chol, kinv=kinv,
+                    inv_ls=inv_ls.astype(np.float32), sf2=sf2,
+                    sn2=sn2, y_mean=y_mean.astype(np.float32),
+                    y_std=y_std.astype(np.float32), lo=lo, hi=hi)
+
+
+def make_predict_fn(gp: GpParams):
+    """Build the AOT prediction entry point with all constants baked.
+
+    Signature: (B, 7) physical-units inputs ->
+      mean (B, 2) physical units, var (B, 2) physical units^2.
+    """
+    xt = jnp.asarray(gp.x_train)
+    alpha = jnp.asarray(gp.alpha)
+    inv_ls = jnp.asarray(gp.inv_ls)
+    sf2 = jnp.asarray(gp.sf2, jnp.float32)
+    kinv = jnp.asarray(gp.kinv)
+    lo = jnp.asarray(gp.lo)
+    hi = jnp.asarray(gp.hi)
+    y_mean = jnp.asarray(gp.y_mean)
+    y_std = jnp.asarray(gp.y_std)
+
+    def predict(x_phys):
+        x01 = (x_phys.astype(jnp.float32) - lo) / (hi - lo)
+        mean_n, kstar = rbf.rbf_mean(x01, xt, inv_ls, alpha, sf2)
+        # var = sf2 - k*^T (K + sn2 I)^-1 k*, with the precision matrix
+        # baked as a constant: two matmuls, no LAPACK custom-call.
+        quad = jnp.sum((kstar @ kinv) * kstar, axis=1)
+        var_lat = jnp.maximum(sf2 - quad, 0.0)  # (B,)
+        mean = mean_n * y_std[None, :] + y_mean[None, :]
+        var = var_lat[:, None] * (y_std[None, :] ** 2)
+        return mean, var
+
+    return predict
+
+
+def predict_ref(gp: GpParams, x_phys: np.ndarray):
+    """Numpy oracle for the baked predict fn (used by pytest)."""
+    x01 = (np.asarray(x_phys, np.float32) - gp.lo) / (gp.hi - gp.lo)
+    diff = x01[:, None, :] - gp.x_train[None, :, :]
+    d2 = np.sum(diff**2 * gp.inv_ls[None, None, :], axis=-1)
+    kstar = gp.sf2 * np.exp(-0.5 * d2)
+    mean_n = kstar @ gp.alpha
+    v = np.linalg.solve(np.tril(gp.chol), kstar.T)  # triangular solve
+    var_lat = np.maximum(gp.sf2 - np.sum(v * v, axis=0), 0.0)
+    mean = mean_n * gp.y_std[None, :] + gp.y_mean[None, :]
+    var = var_lat[:, None] * gp.y_std[None, :] ** 2
+    return mean, var

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness references).
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain ``jax.numpy`` ops only.  pytest (and the hypothesis
+sweeps in ``python/tests``) assert the Pallas outputs against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_kernel_matrix(xs, xt, inv_ls, sf2):
+    """Reference RBF cross-kernel: K*[i,j] = sf2 exp(-0.5 sum_d il_d dx^2)."""
+    xs = xs.astype(jnp.float32)
+    xt = xt.astype(jnp.float32)
+    diff = xs[:, None, :] - xt[None, :, :]            # (M, N, d)
+    d2 = jnp.sum(diff * diff * inv_ls[None, None, :], axis=-1)
+    return sf2 * jnp.exp(-0.5 * d2)
+
+
+def rbf_mean(xs, xt, inv_ls, alpha, sf2):
+    """Reference fused kernel+mean: returns (mean, kstar) like the kernel."""
+    kstar = rbf_kernel_matrix(xs, xt, inv_ls, sf2)
+    mean = kstar @ alpha.astype(jnp.float32)
+    return mean, kstar
+
+
+def gp_predict(xs, xt, inv_ls, alpha, sf2, chol, sn2):
+    """Full-reference GP posterior: mean and per-point latent variance.
+
+    ``chol`` is the lower Cholesky factor of ``K(xt, xt) + sn2 I``.
+    Variance of the latent function: k(x,x) - || L^-1 k* ||^2.
+    """
+    import jax.scipy.linalg as jsl
+
+    mean, kstar = rbf_mean(xs, xt, inv_ls, alpha, sf2)
+    v = jsl.solve_triangular(chol, kstar.T, lower=True)   # (N, M)
+    var = sf2 - jnp.sum(v * v, axis=0)
+    return mean, jnp.maximum(var, 0.0)

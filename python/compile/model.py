@@ -1,0 +1,51 @@
+"""L2 entry-point registry: every AOT artifact the Rust runtime loads.
+
+Each entry is (name, build_fn) where ``build_fn(gp)`` returns
+``(fn, example_args)``; ``aot.py`` lowers ``jax.jit(fn)`` at the example
+shapes to HLO text.  All model constants (GP training set, Cholesky
+factor, quadrature grids, Jacobi schedules) are baked into the HLO so the
+Rust request path is pure PJRT execution.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import eigen, gp as gp_mod, gs2lite, qoi
+
+# Batch sizes for the GP prediction artifacts: b16 serves interactive
+# requests; b256 is the perf-bench / campaign shape.
+GP_BATCH_SMALL = 16
+GP_BATCH_LARGE = 256
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entries(gp_params):
+    """Return {name: (fn, example_specs)} for every artifact."""
+    predict = gp_mod.make_predict_fn(gp_params)
+    qoi_fn = qoi.make_qoi_fn(gp_params)
+
+    def gs2_chunk(theta, state):
+        return gs2lite.chunk(theta, state)
+
+    def eigen_small(a):
+        return eigen.jacobi_eigvals(a, sweeps=eigen.SWEEPS_SMALL)
+
+    def eigen_large(a):
+        return eigen.jacobi_eigvals(a, sweeps=eigen.SWEEPS_LARGE)
+
+    return {
+        "gp_predict_b16": (predict, [_spec((GP_BATCH_SMALL, 7))]),
+        "gp_predict_b256": (predict, [_spec((GP_BATCH_LARGE, 7))]),
+        "gs2_chunk": (gs2_chunk,
+                      [_spec((7,)), _spec((gs2lite.NGRID, 2))]),
+        "eigen_small": (eigen_small,
+                        [_spec((eigen.N_SMALL, eigen.N_SMALL))]),
+        "eigen_large": (eigen_large,
+                        [_spec((eigen.N_LARGE, eigen.N_LARGE))]),
+        "qoi_integral": (qoi_fn, [_spec((7,))]),
+    }

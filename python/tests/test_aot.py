@@ -1,0 +1,81 @@
+"""AOT pipeline: every registry entry lowers to parseable HLO text, and the
+lowered text has the properties the Rust loader depends on (single module,
+f32-only I/O, tuple root)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, gp as gp_mod, model, qoi
+
+
+@pytest.fixture(scope="module")
+def small_gp():
+    x01 = gp_mod.lhs_sample(24, 7, 9).astype(np.float32)
+    y = np.stack([x01[:, 0], x01[:, 1] * 2.0], axis=1).astype(np.float32)
+    return gp_mod.train(x01, y, steps=25)
+
+
+@pytest.fixture(scope="module")
+def entries(small_gp):
+    return model.build_entries(small_gp)
+
+
+class TestLowering:
+    def test_all_entries_lower(self, entries):
+        for name, (fn, specs) in entries.items():
+            text = aot.lower_entry(name, fn, specs)
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_no_complex_types_in_hlo(self, entries):
+        """The Rust literal path is f32-only; complex must never leak."""
+        for name, (fn, specs) in entries.items():
+            text = aot.lower_entry(name, fn, specs)
+            assert "c64" not in text and "c128" not in text, name
+
+    def test_no_custom_calls(self, entries):
+        """LAPACK/Mosaic custom-calls cannot cross the AOT boundary."""
+        for name, (fn, specs) in entries.items():
+            text = aot.lower_entry(name, fn, specs)
+            assert "custom-call" not in text, name
+
+    def test_gp_predict_shapes(self, small_gp):
+        fn = gp_mod.make_predict_fn(small_gp)
+        x = jnp.zeros((16, 7), jnp.float32)
+        mean, var = fn(x)
+        assert mean.shape == (16, 2)
+        assert var.shape == (16, 2)
+
+    def test_qoi_scalar_output(self, small_gp):
+        fn = qoi.make_qoi_fn(small_gp)
+        q, gamma = fn(jnp.asarray(
+            [5.0, 2.0, 5.0, 3.0, 0.1, 0.05, 0.5], dtype=jnp.float32))
+        assert q.shape == (1,)
+        assert gamma.shape == (qoi.N_KY, qoi.N_THETA0)
+        assert np.isfinite(float(q[0]))
+
+
+class TestQuadrature:
+    def test_gauss_legendre_integrates_poly(self):
+        x, w = qoi.gauss_legendre(8, 0.0, 2.0)
+        # integral of x^3 over [0,2] = 4
+        assert abs(float(np.sum(w * x**3)) - 4.0) < 1e-4
+
+    def test_weights_positive_and_sum_to_length(self):
+        x, w = qoi.gauss_legendre(16, -1.0, 3.0)
+        assert (w > 0).all()
+        assert abs(float(np.sum(w)) - 4.0) < 1e-4
+
+    def test_spectral_weight_peaked_interior(self):
+        ky = jnp.linspace(0.05, 1.0, 50)
+        lam = np.asarray(qoi.spectral_weight(ky))
+        peak = lam.argmax()
+        assert 0 < peak < 49
+
+
+class TestTrainCache:
+    def test_cache_key_stable(self):
+        assert aot._train_cache_key() == aot._train_cache_key()

@@ -1,0 +1,117 @@
+"""GP training + baked-predict correctness (L2), including the exact
+posterior identities the surrogate must satisfy."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import gp as gp_mod
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def toy_gp():
+    """Small GP trained on an analytic function (fast, deterministic)."""
+    rng = np.random.default_rng(0)
+    x01 = gp_mod.lhs_sample(48, 7, 123).astype(np.float32)
+    # smooth target with two outputs
+    y = np.stack([
+        np.sin(2 * x01[:, 0]) + x01[:, 1] ** 2,
+        np.cos(3 * x01[:, 2]) * x01[:, 3],
+    ], axis=1).astype(np.float32)
+    return gp_mod.train(x01, y, steps=60), x01, y
+
+
+class TestLhs:
+    def test_shape_and_range(self):
+        x = gp_mod.lhs_sample(32, 7, 0)
+        assert x.shape == (32, 7)
+        assert (x >= 0).all() and (x < 1).all()
+
+    def test_stratified(self):
+        """Each dimension has exactly one sample per 1/n stratum."""
+        n = 16
+        x = gp_mod.lhs_sample(n, 7, 3)
+        for d in range(7):
+            bins = np.floor(x[:, d] * n).astype(int)
+            assert sorted(bins) == list(range(n))
+
+    def test_seeded(self):
+        assert np.array_equal(gp_mod.lhs_sample(8, 7, 5),
+                              gp_mod.lhs_sample(8, 7, 5))
+        assert not np.array_equal(gp_mod.lhs_sample(8, 7, 5),
+                                  gp_mod.lhs_sample(8, 7, 6))
+
+
+class TestTraining:
+    def test_interpolates_training_data(self, toy_gp):
+        gp, x01, y = toy_gp
+        lo, hi = gp.lo, gp.hi
+        x_phys = lo + x01 * (hi - lo)
+        fn = gp_mod.make_predict_fn(gp)
+        mean, var = fn(jnp.asarray(x_phys))
+        # with small fitted noise the posterior mean passes near the data
+        err = np.abs(np.asarray(mean) - y)
+        assert np.median(err) < 0.1, np.median(err)
+
+    def test_variance_zero_at_training_points(self, toy_gp):
+        gp, x01, y = toy_gp
+        x_phys = gp.lo + x01 * (gp.hi - gp.lo)
+        fn = gp_mod.make_predict_fn(gp)
+        _, var = fn(jnp.asarray(x_phys))
+        # latent variance at training inputs ~ noise level
+        assert float(np.median(np.asarray(var))) < 0.1
+
+    def test_variance_grows_off_data(self, toy_gp):
+        gp, x01, _ = toy_gp
+        fn = gp_mod.make_predict_fn(gp)
+        x_on = gp.lo + x01[:8] * (gp.hi - gp.lo)
+        # corner far from LHS samples
+        x_off = np.tile(gp.hi * 0.999, (8, 1)).astype(np.float32)
+        _, v_on = fn(jnp.asarray(x_on))
+        _, v_off = fn(jnp.asarray(x_off))
+        assert np.mean(np.asarray(v_off)) > np.mean(np.asarray(v_on))
+
+    def test_alpha_solves_system(self, toy_gp):
+        """alpha must satisfy (K + sn2 I) alpha = Y_standardised."""
+        gp, x01, y = toy_gp
+        k = np.asarray(ref.rbf_kernel_matrix(
+            jnp.asarray(x01), jnp.asarray(x01),
+            jnp.asarray(gp.inv_ls), gp.sf2))
+        kn = k + gp.sn2 * np.eye(len(x01), dtype=np.float32)
+        y_std = (y - gp.y_mean) / gp.y_std
+        np.testing.assert_allclose(kn @ gp.alpha, y_std, atol=2e-3)
+
+    def test_chol_factorises(self, toy_gp):
+        gp, x01, _ = toy_gp
+        k = np.asarray(ref.rbf_kernel_matrix(
+            jnp.asarray(x01), jnp.asarray(x01),
+            jnp.asarray(gp.inv_ls), gp.sf2))
+        kn = k + gp.sn2 * np.eye(len(x01), dtype=np.float32)
+        np.testing.assert_allclose(gp.chol @ gp.chol.T, kn,
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestPredictConsistency:
+    def test_predict_fn_matches_numpy_oracle(self, toy_gp):
+        gp, _, _ = toy_gp
+        rng = np.random.default_rng(1)
+        x01 = rng.uniform(size=(20, 7)).astype(np.float32)
+        x_phys = gp.lo + x01 * (gp.hi - gp.lo)
+        fn = gp_mod.make_predict_fn(gp)
+        mean_j, var_j = fn(jnp.asarray(x_phys))
+        mean_n, var_n = gp_mod.predict_ref(gp, x_phys)
+        np.testing.assert_allclose(np.asarray(mean_j), mean_n,
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(var_j), var_n,
+                                   rtol=1e-2, atol=1e-3)
+
+    def test_variance_nonnegative(self, toy_gp):
+        gp, _, _ = toy_gp
+        rng = np.random.default_rng(2)
+        x01 = rng.uniform(size=(64, 7)).astype(np.float32)
+        x_phys = gp.lo + x01 * (gp.hi - gp.lo)
+        fn = gp_mod.make_predict_fn(gp)
+        _, var = fn(jnp.asarray(x_phys))
+        assert (np.asarray(var) >= 0).all()

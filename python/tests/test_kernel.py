@@ -1,0 +1,153 @@
+"""L1 correctness: Pallas RBF kernel vs the pure-jnp oracle.
+
+The hypothesis sweep is the core correctness signal: shapes (including
+non-multiples of the tile size, which exercise the padding path), tile
+sizes, dtypes, and degenerate values.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rbf, ref
+
+
+def _rand(rng, *shape):
+    return rng.uniform(-2.0, 2.0, size=shape).astype(np.float32)
+
+
+def run_both(xs, xt, inv_ls, alpha, sf2, bm=32, bn=32):
+    m1, k1 = rbf.rbf_mean(jnp.asarray(xs), jnp.asarray(xt),
+                          jnp.asarray(inv_ls), jnp.asarray(alpha),
+                          jnp.asarray(sf2), bm=bm, bn=bn)
+    m2, k2 = ref.rbf_mean(jnp.asarray(xs), jnp.asarray(xt),
+                          jnp.asarray(inv_ls), jnp.asarray(alpha),
+                          jnp.asarray(sf2))
+    return np.asarray(m1), np.asarray(k1), np.asarray(m2), np.asarray(k2)
+
+
+class TestRbfMeanBasics:
+    def test_exact_tile_multiple(self):
+        rng = np.random.default_rng(0)
+        m1, k1, m2, k2 = run_both(_rand(rng, 64, 7), _rand(rng, 64, 7),
+                                  rng.uniform(0.5, 2.0, 7).astype(np.float32),
+                                  _rand(rng, 64, 2), np.float32(1.0))
+        np.testing.assert_allclose(k1, k2, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(m1, m2, rtol=1e-4, atol=1e-4)
+
+    def test_ragged_shapes(self):
+        rng = np.random.default_rng(1)
+        m1, k1, m2, k2 = run_both(_rand(rng, 37, 7), _rand(rng, 53, 7),
+                                  rng.uniform(0.5, 2.0, 7).astype(np.float32),
+                                  _rand(rng, 53, 2), np.float32(1.7))
+        np.testing.assert_allclose(k1, k2, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(m1, m2, rtol=1e-4, atol=1e-4)
+
+    def test_single_row_and_col(self):
+        rng = np.random.default_rng(2)
+        m1, k1, m2, k2 = run_both(_rand(rng, 1, 7), _rand(rng, 1, 7),
+                                  rng.uniform(0.5, 2.0, 7).astype(np.float32),
+                                  _rand(rng, 1, 2), np.float32(0.5))
+        np.testing.assert_allclose(k1, k2, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(m1, m2, rtol=1e-4, atol=1e-4)
+
+    def test_identical_points_give_sf2(self):
+        """k(x, x) must equal the signal variance exactly."""
+        rng = np.random.default_rng(3)
+        x = _rand(rng, 8, 7)
+        inv = rng.uniform(0.5, 2.0, 7).astype(np.float32)
+        _, k1, _, _ = run_both(x, x, inv, _rand(rng, 8, 2), np.float32(2.5))
+        np.testing.assert_allclose(np.diag(k1), 2.5, rtol=1e-5)
+
+    def test_zero_lengthscale_dims_ignored(self):
+        """inv_ls == 0 dims (the DPAD padding contract) contribute nothing."""
+        rng = np.random.default_rng(4)
+        xs, xt = _rand(rng, 16, 7), _rand(rng, 24, 7)
+        al = _rand(rng, 24, 2)
+        inv = rng.uniform(0.5, 2.0, 7).astype(np.float32)
+        inv[3] = 0.0
+        xs2 = xs.copy()
+        xs2[:, 3] = 99.0   # differs only on the dead dimension
+        _, k1, _, _ = run_both(xs, xt, inv, al, np.float32(1.0))
+        _, k1b, _, _ = run_both(xs2, xt, inv, al, np.float32(1.0))
+        np.testing.assert_allclose(k1, k1b, rtol=1e-6)
+
+    def test_mean_is_kstar_times_alpha(self):
+        rng = np.random.default_rng(5)
+        xs, xt = _rand(rng, 40, 7), _rand(rng, 72, 7)
+        al = _rand(rng, 72, 2)
+        inv = rng.uniform(0.5, 2.0, 7).astype(np.float32)
+        m1, k1, _, _ = run_both(xs, xt, inv, al, np.float32(1.0))
+        np.testing.assert_allclose(m1, k1 @ al, rtol=1e-4, atol=1e-4)
+
+    def test_default_tiles_large_problem(self):
+        rng = np.random.default_rng(6)
+        m1, k1, m2, k2 = run_both(_rand(rng, 256, 7), _rand(rng, 224, 7),
+                                  rng.uniform(0.5, 2.0, 7).astype(np.float32),
+                                  _rand(rng, 224, 2), np.float32(1.0),
+                                  bm=rbf.DEF_BM, bn=rbf.DEF_BN)
+        np.testing.assert_allclose(k1, k2, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(m1, m2, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    n=st.integers(1, 90),
+    d=st.integers(1, 7),
+    o=st.integers(1, 3),
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+    sf2=st.floats(0.1, 4.0),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_matches_ref_hypothesis(m, n, d, o, bm, bn, sf2, seed):
+    """Property: Pallas == oracle across shape/tile/scale space."""
+    rng = np.random.default_rng(seed)
+    xs = _rand(rng, m, d)
+    xt = _rand(rng, n, d)
+    inv = rng.uniform(0.1, 3.0, d).astype(np.float32)
+    al = _rand(rng, n, o)
+    m1, k1, m2, k2 = run_both(xs, xt, inv, al, np.float32(sf2), bm=bm, bn=bn)
+    np.testing.assert_allclose(k1, k2, rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(m1, m2, rtol=2e-4, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_kernel_bf16_inputs(seed):
+    """bf16 inputs upcast internally; tolerances follow bf16 resolution."""
+    rng = np.random.default_rng(seed)
+    xs = _rand(rng, 24, 7).astype(jnp.bfloat16)
+    xt = _rand(rng, 40, 7).astype(jnp.bfloat16)
+    inv = rng.uniform(0.1, 2.0, 7).astype(np.float32)
+    al = _rand(rng, 40, 2)
+    m1, k1 = rbf.rbf_mean(jnp.asarray(xs), jnp.asarray(xt),
+                          jnp.asarray(inv), jnp.asarray(al),
+                          jnp.asarray(1.0, jnp.float32), bm=16, bn=16)
+    m2, k2 = ref.rbf_mean(jnp.asarray(xs), jnp.asarray(xt),
+                          jnp.asarray(inv), jnp.asarray(al),
+                          jnp.asarray(1.0, jnp.float32))
+    np.testing.assert_allclose(np.asarray(k1), np.asarray(k2),
+                               rtol=3e-2, atol=3e-2)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2),
+                               rtol=5e-2, atol=5e-1)
+
+
+class TestPerfEstimators:
+    def test_vmem_footprint_fits(self):
+        fp = rbf.vmem_footprint_bytes()
+        assert fp["fits"]
+        assert fp["total_bytes"] < fp["vmem_budget_bytes"]
+
+    def test_vmem_scales_with_tiles(self):
+        small = rbf.vmem_footprint_bytes(bm=64, bn=64)
+        big = rbf.vmem_footprint_bytes(bm=256, bn=256)
+        assert big["total_bytes"] > small["total_bytes"]
+
+    def test_mxu_estimate_counts_flops(self):
+        est = rbf.mxu_utilization_estimate(256, 224)
+        assert est["mxu_flops"] == 2 * 256 * 224 * 8 + 2 * 256 * 224 * 2
+        assert 0.0 < est["reduction_depth_efficiency"] <= 1.0

@@ -1,0 +1,76 @@
+//! Regenerates paper Appendix A (Figures 5 and 6): naive SLURM vs the
+//! UM-Bridge SLURM backend, GS2 only, queue depths 2 and 10.
+//!
+//! Expected shape (paper): the SLURM backend submits individual jobs
+//! without changing the scheduling mechanism, so there are no gains over
+//! the baseline — similar makespan/overhead, slightly higher CPU time
+//! from the in-job model-server start-up.
+
+use std::path::Path;
+
+use uqsched::experiments::{run_naive_slurm, run_umbridge_slurm, Config};
+use uqsched::metrics::report::Panel;
+use uqsched::workload::App;
+
+fn mean(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>() / v.len().max(1) as f64
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let results = Path::new("results");
+    let n_evals: u64 = std::env::var("UQSCHED_EVALS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+
+    println!("=== Fig 5 + Fig 6 harness: gs2 x {{2,10}} jobs x \
+              {{SLURM, UM-Bridge SLURM}} x {n_evals} evaluations ===\n");
+
+    for queue_depth in [2usize, 10] {
+        let mut cfg = Config::paper(App::Gs2, queue_depth,
+                                    0xF56 + queue_depth as u64);
+        cfg.n_evals = n_evals;
+        let s = run_naive_slurm(&cfg);
+        let u = run_umbridge_slurm(&cfg);
+
+        let mut p_mk = Panel::new(
+            &format!("Fig 6 makespan, {queue_depth} jobs"), "s", false);
+        let mut p_cpu = Panel::new(
+            &format!("Fig 6 CPU time, {queue_depth} jobs"), "s", false);
+        let mut p_ov = Panel::new(
+            &format!("Fig 6 scheduler overhead, {queue_depth} jobs"), "s",
+            true);
+        let mut p_slr = Panel::new(
+            &format!("Fig 5 SLR, {queue_depth} jobs"), "ratio", false);
+
+        p_mk.push("gs2", "SLURM", s.makespans_sec());
+        p_mk.push("gs2", "UM-SLURM", u.makespans_sec());
+        p_cpu.push("gs2", "SLURM", s.cpus_sec());
+        p_cpu.push("gs2", "UM-SLURM", u.cpus_sec());
+        p_ov.push("gs2", "SLURM", s.overheads_sec());
+        p_ov.push("gs2", "UM-SLURM", u.overheads_sec());
+        p_slr.push("gs2", "SLURM", s.slrs());
+        p_slr.push("gs2", "UM-SLURM", u.slrs());
+
+        for (panel, stem) in [
+            (&p_mk, format!("fig6_makespan_q{queue_depth}")),
+            (&p_cpu, format!("fig6_cpu_q{queue_depth}")),
+            (&p_ov, format!("fig6_overhead_q{queue_depth}")),
+            (&p_slr, format!("fig5_slr_q{queue_depth}")),
+        ] {
+            println!("{}", panel.render());
+            panel.save(results, &stem).expect("save csv");
+        }
+
+        let ms = mean(&s.makespans_sec());
+        let mu = mean(&u.makespans_sec());
+        println!(
+            "check q{queue_depth}: mean makespan SLURM {ms:.0}s vs UM-Bridge \
+             SLURM {mu:.0}s -> {} (paper: no performance gains)\n",
+            if mu >= ms * 0.95 { "no gain, OK" } else { "CHECK" }
+        );
+    }
+    println!("fig5_fig6 harness done in {:.1?} (CSV in results/)",
+             t0.elapsed());
+}

@@ -1,0 +1,121 @@
+//! L3/L1 hot-path microbenchmarks (the in-crate criterion substitute):
+//!
+//!   * PJRT GP prediction throughput (single and batched entry)
+//!   * gs2 chunk latency (the serving inner loop)
+//!   * JSON parse/serialise of evaluate bodies
+//!   * HTTP+UM-Bridge round-trip latency and throughput
+//!   * end-to-end balancer throughput (queue -> registry -> forward)
+//!
+//! Used by the performance pass (EXPERIMENTS.md section Perf); each
+//! measurement prints ops/s and per-op latency.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use uqsched::coordinator::start_live;
+use uqsched::json::{self, Value};
+use uqsched::models::{self, GP_NAME};
+use uqsched::runtime::Engine;
+use uqsched::umbridge::{serve_models, HttpModel};
+use uqsched::workload::{lhs, scenario, App};
+
+fn bench<F: FnMut() -> ()>(name: &str, iters: u64, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters.min(3) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let per = dt / iters as f64;
+    println!("  {name:<42} {:>10.1} ops/s   {:>10.3} ms/op",
+             1.0 / per, per * 1e3);
+    per
+}
+
+fn main() {
+    println!("=== hotpath microbenchmarks ===");
+    let dir = std::env::var("UQSCHED_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    let eng = Arc::new(Engine::new(Path::new(&dir)).expect("engine"));
+    eng.warmup(&["gp_predict_b16", "gp_predict_b256", "gs2_chunk"])
+        .expect("warmup");
+
+    let points = lhs(256, 7);
+
+    // L1/L2: PJRT GP prediction.
+    let gp = models::GpModel::new(eng.clone());
+    let one: Vec<Vec<f64>> = vec![points[0].to_vec()];
+    bench("gp predict (b16 entry, 1 point)", 200, || {
+        gp.predict_batch(&one).unwrap();
+    });
+    let batch16: Vec<Vec<f64>> = points[..16].iter().map(|p| p.to_vec())
+        .collect();
+    let per16 = bench("gp predict (b16 entry, 16 points)", 200, || {
+        gp.predict_batch(&batch16).unwrap();
+    });
+    println!("    -> {:.0} predictions/s through the b16 entry",
+             16.0 / per16);
+    let flat256: Vec<f32> = points.iter().flat_map(|p| p.iter())
+        .map(|&v| v as f32).collect();
+    let per256 = bench("gp predict (b256 entry, 256 points)", 100, || {
+        eng.execute("gp_predict_b256", &[flat256.clone()]).unwrap();
+    });
+    println!("    -> {:.0} predictions/s through the b256 entry",
+             256.0 / per256);
+
+    // gs2 chunk latency.
+    let gs2 = models::Gs2Model::new(eng.clone());
+    let st = gs2.initial_state();
+    let th: Vec<f32> = points[1].iter().map(|&v| v as f32).collect();
+    bench("gs2 chunk (64 power iterations)", 100, || {
+        eng.execute("gs2_chunk", &[th.clone(), st.clone()]).unwrap();
+    });
+
+    // JSON substrate on an /Evaluate body.
+    let body = json::write(&Value::obj(vec![
+        ("name", Value::str("gp")),
+        ("input", Value::from_f64s2(&[points[0].to_vec()])),
+        ("config", Value::Obj(Default::default())),
+    ]));
+    bench("json parse /Evaluate body", 20_000, || {
+        json::parse(&body).unwrap();
+    });
+
+    // HTTP + UM-Bridge round trip (direct to a model server).
+    let srv = serve_models(
+        vec![models::by_name(eng.clone(), GP_NAME).unwrap()], 0).unwrap();
+    let mut client = HttpModel::connect(&srv.url(), GP_NAME).unwrap();
+    let cfgv = Value::Obj(Default::default());
+    bench("umbridge evaluate round-trip (direct)", 300, || {
+        client.evaluate(&[points[2].to_vec()], &cfgv).unwrap();
+    });
+
+    // End-to-end through the balancer (persistent servers, hq backend).
+    let stack = start_live(eng.clone(), GP_NAME, "hq", 2,
+                           &scenario(App::Gp), 2000.0, true)
+        .expect("live stack");
+    // Wait for a server to register.
+    let t0 = Instant::now();
+    while stack.balancer.registry().total() == 0 {
+        if t0.elapsed().as_secs() > 30 {
+            panic!("no server registered");
+        }
+        // Post one request to trigger scale-up.
+        if let Ok(mut c) = HttpModel::connect(&stack.balancer.url(), GP_NAME) {
+            let _ = c.evaluate(&[points[3].to_vec()], &cfgv);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    let mut lb_client = HttpModel::connect(&stack.balancer.url(), GP_NAME)
+        .unwrap();
+    bench("balancer end-to-end evaluate (hq backend)", 300, || {
+        lb_client.evaluate(&[points[4].to_vec()], &cfgv).unwrap();
+    });
+
+    println!("hotpath done");
+    std::process::exit(0); // skip slow teardown of live threads
+}

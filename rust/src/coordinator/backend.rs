@@ -1,0 +1,361 @@
+//! Live scheduling backends for the balancer: per-job SLURM submission
+//! vs HyperQueue-style tasks on a bulk allocation — the paper's two
+//! deployment modes, running against the live `slurmlite` daemon with
+//! real model-server threads (HTTP + PJRT).
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::cluster::{JobRequest, OverheadModel};
+use crate::clock::MS;
+use crate::models;
+use crate::runtime::Engine;
+use crate::slurmlite::daemon::{DaemonEvent, SlurmDaemon};
+use crate::umbridge;
+
+use super::portfile;
+
+/// A scheduling backend the balancer spawns servers through.
+pub trait Backend: Send + Sync {
+    /// Request one more model-server instance (async).
+    fn spawn_server(&self);
+    /// Endpoints of servers that came up since the last poll.
+    fn poll_new_servers(&self) -> Vec<String>;
+    /// Spawns requested but not yet registered.
+    fn spawns_in_flight(&self) -> usize;
+    /// Per-job mode: the server served its evaluation; stop it.
+    fn retire_server(&self, endpoint: &str);
+    /// Health check failed; reclaim resources.
+    fn server_lost(&self, endpoint: &str) {
+        self.retire_server(endpoint);
+    }
+    /// Stop everything.
+    fn teardown(&self);
+}
+
+/// One live model-server instance (an HTTP server thread over the shared
+/// PJRT engine) plus its scheduler bookkeeping.
+struct Instance {
+    server: crate::httpd::Server,
+    slurm_job: Option<u64>,
+}
+
+struct ServerPool {
+    engine: Arc<Engine>,
+    model: &'static str,
+    run_dir: PathBuf,
+    /// endpoint -> instance
+    live: Mutex<HashMap<String, Instance>>,
+    sync_workaround: bool,
+}
+
+impl ServerPool {
+    /// Start a model server now; returns its endpoint after writing the
+    /// port file (the registration path the balancer watches).
+    fn start_instance(&self, job_tag: u64, slurm_job: Option<u64>) {
+        let model = match models::by_name(self.engine.clone(), self.model) {
+            Ok(m) => m,
+            Err(e) => {
+                crate::log_error!("backend", "model build failed: {e:#}");
+                return;
+            }
+        };
+        match umbridge::serve_models(vec![model], 0) {
+            Ok(server) => {
+                let url = server.url();
+                let _ = portfile::write_portfile(
+                    &self.run_dir, job_tag, &url, self.sync_workaround,
+                );
+                self.live.lock().unwrap().insert(
+                    url,
+                    Instance { server, slurm_job },
+                );
+            }
+            Err(e) => crate::log_error!("backend", "server start failed: {e:#}"),
+        }
+    }
+
+    fn stop_instance(&self, endpoint: &str) -> Option<u64> {
+        let mut live = self.live.lock().unwrap();
+        if let Some(mut inst) = live.remove(endpoint) {
+            inst.server.shutdown();
+            inst.slurm_job
+        } else {
+            None
+        }
+    }
+
+    fn stop_all(&self) -> Vec<u64> {
+        let mut live = self.live.lock().unwrap();
+        let mut jobs = Vec::new();
+        for (_, mut inst) in live.drain() {
+            inst.server.shutdown();
+            if let Some(j) = inst.slurm_job {
+                jobs.push(j);
+            }
+        }
+        jobs
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Per-job SLURM backend: one slurmlite job per model server.
+pub struct SlurmBackend {
+    daemon: Arc<SlurmDaemon>,
+    pool: Arc<ServerPool>,
+    request: JobRequest,
+    in_flight: Arc<AtomicUsize>,
+    stopped: Arc<AtomicBool>,
+}
+
+impl SlurmBackend {
+    pub fn new(
+        daemon: Arc<SlurmDaemon>,
+        engine: Arc<Engine>,
+        model: &'static str,
+        request: JobRequest,
+        _overheads: OverheadModel,
+        run_dir: PathBuf,
+        sync_workaround: bool,
+    ) -> Arc<SlurmBackend> {
+        let pool = Arc::new(ServerPool {
+            engine,
+            model,
+            run_dir,
+            live: Mutex::new(HashMap::new()),
+            sync_workaround,
+        });
+        let backend = Arc::new(SlurmBackend {
+            daemon: daemon.clone(),
+            pool,
+            request,
+            in_flight: Arc::new(AtomicUsize::new(0)),
+            stopped: Arc::new(AtomicBool::new(false)),
+        });
+        backend
+    }
+
+    /// Event sink to install on the SlurmDaemon: launches model servers
+    /// when their job starts (after queue + prolog), modelling the
+    /// server-init cost before the port file appears.
+    pub fn sink(self: &Arc<Self>, server_init: Duration)
+                -> crate::slurmlite::daemon::EventSink {
+        let me = self.clone();
+        Arc::new(move |ev: DaemonEvent| {
+            if let DaemonEvent::Launched { job, .. } = ev {
+                if me.stopped.load(Ordering::SeqCst) {
+                    return;
+                }
+                let me2 = me.clone();
+                std::thread::spawn(move || {
+                    // Model-server start-up (~1 s paper scale).
+                    std::thread::sleep(server_init);
+                    me2.pool.start_instance(job, Some(job));
+                });
+            }
+        })
+    }
+}
+
+impl Backend for SlurmBackend {
+    fn spawn_server(&self) {
+        if self.stopped.load(Ordering::SeqCst) {
+            return;
+        }
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.daemon.submit(0, 0, self.request.clone());
+    }
+
+    fn poll_new_servers(&self) -> Vec<String> {
+        let found = portfile::poll_portfiles(&self.pool.run_dir);
+        if !found.is_empty() {
+            self.in_flight
+                .fetch_sub(found.len().min(self.in_flight.load(Ordering::SeqCst)),
+                           Ordering::SeqCst);
+        }
+        found.into_iter().map(|(_, ep)| ep).collect()
+    }
+
+    fn spawns_in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    fn retire_server(&self, endpoint: &str) {
+        if let Some(job) = self.pool.stop_instance(endpoint) {
+            self.daemon.finish(job);
+        }
+    }
+
+    fn teardown(&self) {
+        self.stopped.store(true, Ordering::SeqCst);
+        for job in self.pool.stop_all() {
+            self.daemon.finish(job);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// HyperQueue-style backend: one bulk allocation absorbs the queue wait;
+/// server "tasks" then start at dispatch latency inside it.
+pub struct HqBackend {
+    daemon: Arc<SlurmDaemon>,
+    pool: Arc<ServerPool>,
+    alloc_request: JobRequest,
+    /// Worker concurrency inside the allocation.
+    max_workers: usize,
+    dispatch_latency: Duration,
+    server_init: Duration,
+    state: Arc<Mutex<HqState>>,
+    stopped: Arc<AtomicBool>,
+}
+
+#[derive(Default)]
+struct HqState {
+    /// Allocation slurm job ids (pending or running).
+    allocs: Vec<u64>,
+    /// Allocation up (workers available).
+    workers_up: usize,
+    /// Queued spawn requests waiting for a worker slot.
+    backlog: VecDeque<u64>,
+    in_flight: usize,
+    next_tag: u64,
+    busy_workers: usize,
+}
+
+impl HqBackend {
+    pub fn new(
+        daemon: Arc<SlurmDaemon>,
+        engine: Arc<Engine>,
+        model: &'static str,
+        alloc_request: JobRequest,
+        max_workers: usize,
+        overheads: &OverheadModel,
+        run_dir: PathBuf,
+    ) -> Arc<HqBackend> {
+        let pool = Arc::new(ServerPool {
+            engine,
+            model,
+            run_dir,
+            live: Mutex::new(HashMap::new()),
+            sync_workaround: false,
+        });
+        Arc::new(HqBackend {
+            daemon,
+            pool,
+            alloc_request,
+            max_workers,
+            dispatch_latency: Duration::from_micros(overheads.hq_dispatch),
+            server_init: Duration::from_micros(overheads.server_init.max(MS)),
+            state: Arc::new(Mutex::new(HqState::default())),
+            stopped: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// Event sink for the SlurmDaemon: allocation launches register
+    /// workers and drain the backlog.
+    pub fn sink(self: &Arc<Self>) -> crate::slurmlite::daemon::EventSink {
+        let me = self.clone();
+        Arc::new(move |ev: DaemonEvent| {
+            if let DaemonEvent::Launched { job, .. } = ev {
+                let is_alloc =
+                    me.state.lock().unwrap().allocs.contains(&job);
+                if is_alloc {
+                    {
+                        let mut st = me.state.lock().unwrap();
+                        st.workers_up += 1;
+                    }
+                    me.drain();
+                }
+            }
+        })
+    }
+
+    /// Start backlogged server tasks while workers are free.
+    fn drain(&self) {
+        if self.stopped.load(Ordering::SeqCst) {
+            return;
+        }
+        loop {
+            let tag = {
+                let mut st = self.state.lock().unwrap();
+                if st.workers_up == 0
+                    || st.busy_workers >= st.workers_up
+                    || st.backlog.is_empty()
+                {
+                    break;
+                }
+                st.busy_workers += 1;
+                st.backlog.pop_front().unwrap()
+            };
+            let me_pool = self.pool.clone();
+            let dispatch = self.dispatch_latency;
+            let init = self.server_init;
+            std::thread::spawn(move || {
+                std::thread::sleep(dispatch); // HQ task dispatch (~1 ms)
+                std::thread::sleep(init);     // model-server start-up
+                me_pool.start_instance(tag, None);
+            });
+        }
+    }
+}
+
+impl Backend for HqBackend {
+    fn spawn_server(&self) {
+        if self.stopped.load(Ordering::SeqCst) {
+            return;
+        }
+        let need_alloc = {
+            let mut st = self.state.lock().unwrap();
+            let tag = st.next_tag;
+            st.next_tag += 1;
+            st.backlog.push_back(tag);
+            st.in_flight += 1;
+            // One allocation per worker slot, up to max_workers — the
+            // "--workers-per-alloc 1" configuration.
+            st.allocs.len() < self.max_workers
+        };
+        if need_alloc {
+            let id = self.daemon.submit(0, u64::MAX - 1,
+                                        self.alloc_request.clone());
+            self.state.lock().unwrap().allocs.push(id);
+        }
+        self.drain();
+    }
+
+    fn poll_new_servers(&self) -> Vec<String> {
+        let found = portfile::poll_portfiles(&self.pool.run_dir);
+        if !found.is_empty() {
+            let mut st = self.state.lock().unwrap();
+            st.in_flight = st.in_flight.saturating_sub(found.len());
+        }
+        found.into_iter().map(|(_, ep)| ep).collect()
+    }
+
+    fn spawns_in_flight(&self) -> usize {
+        self.state.lock().unwrap().in_flight
+    }
+
+    fn retire_server(&self, endpoint: &str) {
+        self.pool.stop_instance(endpoint);
+        {
+            let mut st = self.state.lock().unwrap();
+            st.busy_workers = st.busy_workers.saturating_sub(1);
+        }
+        self.drain();
+    }
+
+    fn teardown(&self) {
+        self.stopped.store(true, Ordering::SeqCst);
+        self.pool.stop_all();
+        let allocs = std::mem::take(&mut self.state.lock().unwrap().allocs);
+        for a in allocs {
+            self.daemon.cancel(a);
+        }
+    }
+}

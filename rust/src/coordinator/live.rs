@@ -1,0 +1,102 @@
+//! Live-plane bring-up helpers shared by the CLI, the examples and the
+//! integration tests: one call starts slurmlite + backend + balancer.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::cluster::{ClusterSpec, OverheadModel};
+use crate::runtime::Engine;
+use crate::slurmlite::daemon::{EventSink, SlurmDaemon};
+use crate::workload::Scenario;
+
+use super::{Backend, BalancerConfig, HqBackend, LoadBalancer, SlurmBackend};
+
+/// Everything a live deployment needs, torn down on drop.
+pub struct LiveStack {
+    pub balancer: LoadBalancer,
+    pub daemon: Arc<SlurmDaemon>,
+    pub backend: Arc<dyn Backend>,
+}
+
+/// Start slurmlite + the chosen backend + the balancer.
+///
+/// `time_scale` compresses paper-scale scheduler overheads (60.0 maps one
+/// paper-minute onto one live second; see DESIGN.md section 7).
+pub fn start_live(
+    eng: Arc<Engine>,
+    model: &'static str,
+    backend_kind: &str,
+    servers: usize,
+    scen: &Scenario,
+    time_scale: f64,
+    persistent_servers: bool,
+) -> Result<LiveStack> {
+    let overheads = OverheadModel::quiet().scaled(time_scale);
+    let run_dir = std::env::temp_dir().join(format!(
+        "uqsched-lb-{}-{}",
+        std::process::id(),
+        crate::util::Rng::new(std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(1))
+        .next_u64()
+    ));
+    let cfg = BalancerConfig {
+        model_name: model,
+        max_servers: servers,
+        persistent_servers,
+        ..Default::default()
+    };
+
+    // The daemon needs a sink, but the backend that provides it needs the
+    // daemon: a late-bound slot breaks the cycle.
+    let sink_slot: Arc<Mutex<Option<EventSink>>> = Arc::new(Mutex::new(None));
+    let slot2 = sink_slot.clone();
+    let daemon = Arc::new(SlurmDaemon::start(
+        ClusterSpec::small(8),
+        overheads.clone(),
+        1,
+        Arc::new(move |ev| {
+            if let Some(s) = slot2.lock().unwrap().as_ref() {
+                s(ev)
+            }
+        }),
+    ));
+
+    let backend: Arc<dyn Backend> = match backend_kind {
+        "slurm" => {
+            let b = SlurmBackend::new(
+                daemon.clone(),
+                eng,
+                model,
+                scen.slurm_request(),
+                overheads.clone(),
+                run_dir,
+                true, // the paper's sync workaround, on by default
+            );
+            *sink_slot.lock().unwrap() = Some(b.sink(
+                std::time::Duration::from_micros(overheads.server_init),
+            ));
+            b
+        }
+        "hq" => {
+            let b = HqBackend::new(
+                daemon.clone(),
+                eng,
+                model,
+                scen.hq_alloc_request(),
+                servers,
+                &overheads,
+                run_dir,
+            );
+            *sink_slot.lock().unwrap() = Some(b.sink());
+            b
+        }
+        other => bail!("unknown backend '{other}'"),
+    };
+
+    let balancer = LoadBalancer::start(cfg, backend.clone())?;
+    Ok(LiveStack { balancer, daemon, backend })
+}

@@ -1,0 +1,117 @@
+//! Port-file registration: the paper's mechanism for a model server on a
+//! compute node to announce its address to the balancer.
+//!
+//! "UM-Bridge relies on a text file to communicate the IP address and
+//! port number of the model running on the compute node ... we manually
+//! integrated the sync command into the load balancer's source code"
+//! (section IV).  Both ends are implemented here, including that fsync
+//! workaround as an option.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Server side: write `host:port` atomically (tmp + rename), optionally
+/// fsync'ing file and directory — the paper's Hamilton8 workaround.
+pub fn write_portfile(dir: &Path, job_id: u64, endpoint: &str,
+                      sync: bool) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let tmp = dir.join(format!(".srv-{job_id}.tmp"));
+    let fin = dir.join(format!("srv-{job_id}.addr"));
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(endpoint.as_bytes())?;
+        if sync {
+            f.sync_all()?; // the paper's `sync` integration
+        }
+    }
+    std::fs::rename(&tmp, &fin)?;
+    if sync {
+        // Directory entry flush (best effort).
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(fin)
+}
+
+/// Balancer side: scan for new `srv-*.addr` files, consume (delete) and
+/// return their endpoints.
+pub fn poll_portfiles(dir: &Path) -> Vec<(u64, String)> {
+    let mut out = Vec::new();
+    let Ok(rd) = std::fs::read_dir(dir) else { return out };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(idpart) = name
+            .strip_prefix("srv-")
+            .and_then(|s| s.strip_suffix(".addr"))
+        else {
+            continue;
+        };
+        let Ok(job_id) = idpart.parse::<u64>() else { continue };
+        if let Ok(endpoint) = std::fs::read_to_string(entry.path()) {
+            let endpoint = endpoint.trim().to_string();
+            if !endpoint.is_empty() {
+                let _ = std::fs::remove_file(entry.path());
+                out.push((job_id, endpoint));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("uqsched_pf_{tag}_{}",
+                                                  std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let d = tmpdir("rt");
+        write_portfile(&d, 7, "http://127.0.0.1:4242", false).unwrap();
+        write_portfile(&d, 3, "http://127.0.0.1:4243", true).unwrap();
+        let got = poll_portfiles(&d);
+        assert_eq!(got, vec![
+            (3, "http://127.0.0.1:4243".to_string()),
+            (7, "http://127.0.0.1:4242".to_string()),
+        ]);
+        // Consumed: second poll is empty.
+        assert!(poll_portfiles(&d).is_empty());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn ignores_foreign_files() {
+        let d = tmpdir("ff");
+        std::fs::write(d.join("notes.txt"), "hi").unwrap();
+        std::fs::write(d.join("srv-x.addr"), "bad id").unwrap();
+        assert!(poll_portfiles(&d).is_empty());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn empty_portfile_not_consumed() {
+        let d = tmpdir("ep");
+        std::fs::write(d.join("srv-1.addr"), "").unwrap();
+        assert!(poll_portfiles(&d).is_empty());
+        // Still there for a later poll once written.
+        assert!(d.join("srv-1.addr").exists());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn missing_dir_is_empty() {
+        assert!(poll_portfiles(Path::new("/nonexistent/uqsched")).is_empty());
+    }
+}

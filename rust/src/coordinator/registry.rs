@@ -1,0 +1,150 @@
+//! Server registry: endpoint pool with Idle/Busy state, FCFS acquisition.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ServerState {
+    Idle,
+    Busy,
+}
+
+#[derive(Default)]
+struct Inner {
+    servers: BTreeMap<String, ServerState>,
+    last_acquired: Option<String>,
+    /// Lifetime counters.
+    registered_total: u64,
+    removed_total: u64,
+}
+
+/// Thread-safe registry of model-server endpoints.
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { inner: Mutex::new(Inner::default()) }
+    }
+
+    pub fn register(&self, endpoint: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if g.servers
+            .insert(endpoint.to_string(), ServerState::Idle)
+            .is_none()
+        {
+            g.registered_total += 1;
+        }
+    }
+
+    pub fn remove(&self, endpoint: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if g.servers.remove(endpoint).is_some() {
+            g.removed_total += 1;
+        }
+    }
+
+    /// Mark the first idle server busy and return it.
+    pub fn acquire_idle(&self) -> Option<String> {
+        let mut g = self.inner.lock().unwrap();
+        let ep = g
+            .servers
+            .iter()
+            .find(|(_, s)| **s == ServerState::Idle)
+            .map(|(e, _)| e.clone())?;
+        g.servers.insert(ep.clone(), ServerState::Busy);
+        g.last_acquired = Some(ep.clone());
+        Some(ep)
+    }
+
+    /// Endpoint returned by the most recent successful `acquire_idle`.
+    pub fn last_acquired(&self) -> Option<String> {
+        self.inner.lock().unwrap().last_acquired.clone()
+    }
+
+    pub fn release(&self, endpoint: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(s) = g.servers.get_mut(endpoint) {
+            *s = ServerState::Idle;
+        }
+    }
+
+    pub fn state(&self, endpoint: &str) -> Option<ServerState> {
+        self.inner.lock().unwrap().servers.get(endpoint).copied()
+    }
+
+    pub fn endpoints(&self) -> Vec<String> {
+        self.inner.lock().unwrap().servers.keys().cloned().collect()
+    }
+
+    pub fn total(&self) -> usize {
+        self.inner.lock().unwrap().servers.len()
+    }
+
+    pub fn idle_count(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .servers
+            .values()
+            .filter(|s| **s == ServerState::Idle)
+            .count()
+    }
+
+    pub fn registered_total(&self) -> u64 {
+        self.inner.lock().unwrap().registered_total
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_acquire_release() {
+        let r = Registry::new();
+        r.register("http://h:1");
+        r.register("http://h:2");
+        assert_eq!(r.total(), 2);
+        assert_eq!(r.idle_count(), 2);
+        let a = r.acquire_idle().unwrap();
+        assert_eq!(r.idle_count(), 1);
+        assert_eq!(r.state(&a), Some(ServerState::Busy));
+        r.release(&a);
+        assert_eq!(r.idle_count(), 2);
+    }
+
+    #[test]
+    fn acquire_exhausts() {
+        let r = Registry::new();
+        r.register("http://h:1");
+        assert!(r.acquire_idle().is_some());
+        assert!(r.acquire_idle().is_none());
+    }
+
+    #[test]
+    fn remove_busy_server() {
+        let r = Registry::new();
+        r.register("http://h:1");
+        let a = r.acquire_idle().unwrap();
+        r.remove(&a);
+        assert_eq!(r.total(), 0);
+        assert_eq!(r.registered_total(), 1);
+    }
+
+    #[test]
+    fn duplicate_register_is_idempotent() {
+        let r = Registry::new();
+        r.register("http://h:1");
+        r.register("http://h:1");
+        assert_eq!(r.total(), 1);
+        assert_eq!(r.registered_total(), 1);
+    }
+}

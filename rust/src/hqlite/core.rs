@@ -1,0 +1,572 @@
+//! The hqlite server state machine (pure logic, both planes).
+
+use std::collections::HashMap;
+
+use crate::cluster::JobRequest;
+use crate::clock::Micros;
+use crate::metrics::JobRecord;
+
+pub type TaskId = u64;
+pub type WorkerId = u64;
+
+/// One task submitted to the HQ server.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub tag: u64,
+    pub cores: u32,
+    /// Scheduling hint: expected runtime (HQ `--time-request`).
+    pub time_request: Micros,
+    /// Hard kill limit (HQ `--time-limit`).
+    pub time_limit: Micros,
+}
+
+/// Automatic-allocation configuration (the paper's section II.D example:
+/// `--backlog 1 --workers-per-alloc 1 --max-worker-count N`).
+#[derive(Clone, Debug)]
+pub struct AutoAllocConfig {
+    /// Max allocations waiting in the native queue at once.
+    pub backlog: u32,
+    /// Workers started per allocation.
+    pub workers_per_alloc: u32,
+    /// Upper bound on simultaneously existing workers.
+    pub max_worker_count: u32,
+    /// Resources requested per allocation (cores sized for one worker).
+    pub alloc_request: JobRequest,
+    /// Per-task dispatch latency (server -> worker handoff).
+    pub dispatch_latency: Micros,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum TaskState {
+    Pending,
+    Dispatched,
+    Running,
+    Done,
+}
+
+#[derive(Clone, Debug)]
+struct Task {
+    spec: TaskSpec,
+    state: TaskState,
+    submit_t: Micros,
+    start_t: Micros,
+    worker: WorkerId,
+}
+
+#[derive(Clone, Debug)]
+struct Worker {
+    /// Cores available on the worker.
+    cores: u32,
+    cores_free: u32,
+    /// Virtual time at which the surrounding allocation expires.
+    expires_t: Micros,
+    alive: bool,
+    /// Running task count (for idle tests).
+    running: u32,
+}
+
+/// Actions the driver must interpret.
+#[derive(Clone, Debug)]
+pub enum HqAction {
+    /// Submit an allocation to the native scheduler (tag it so the driver
+    /// can route the eventual worker registration back).
+    SubmitAllocation { alloc_tag: u64, req: JobRequest },
+    /// Begin task execution on a worker: the driver runs the workload and
+    /// calls [`HqCore::on_task_done`] (sim: after the sampled duration).
+    StartTask { task: TaskId, worker: WorkerId },
+    /// Kill the task (exceeded its time limit).
+    KillTask { task: TaskId },
+    /// Terminal per-task record.
+    TaskCompleted { task: TaskId, record: JobRecord },
+    /// Re-invoke `on_timer` at this time.
+    Timer(Micros, HqTimer),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum HqTimer {
+    /// Dispatch latency elapsed: task actually starts on the worker.
+    Dispatched(TaskId),
+    /// Task time-limit enforcement.
+    Limit(TaskId),
+}
+
+/// The HQ server.
+pub struct HqCore {
+    cfg: AutoAllocConfig,
+    tasks: HashMap<TaskId, Task>,
+    queue: Vec<TaskId>,
+    workers: HashMap<WorkerId, Worker>,
+    next_task: TaskId,
+    next_worker: WorkerId,
+    next_alloc_tag: u64,
+    /// Allocations submitted to the native scheduler, not yet up.
+    allocs_in_queue: u32,
+    workers_started: u32,
+    /// Stats: dispatches performed.
+    pub dispatches: u64,
+}
+
+impl HqCore {
+    pub fn new(cfg: AutoAllocConfig) -> Self {
+        HqCore {
+            cfg,
+            tasks: HashMap::new(),
+            queue: Vec::new(),
+            workers: HashMap::new(),
+            next_task: 1,
+            next_worker: 1,
+            next_alloc_tag: 1,
+            allocs_in_queue: 0,
+            workers_started: 0,
+            dispatches: 0,
+        }
+    }
+
+    /// Submit a task; may trigger autoalloc and immediate dispatch.
+    pub fn submit_task(&mut self, t: Micros, spec: TaskSpec) -> (TaskId, Vec<HqAction>) {
+        let id = self.next_task;
+        self.next_task += 1;
+        self.tasks.insert(
+            id,
+            Task {
+                spec,
+                state: TaskState::Pending,
+                submit_t: t,
+                start_t: 0,
+                worker: 0,
+            },
+        );
+        self.queue.push(id);
+        let mut acts = self.autoalloc();
+        acts.extend(self.dispatch(t));
+        (id, acts)
+    }
+
+    /// A native allocation came up: start `workers_per_alloc` workers,
+    /// each living until the allocation's time limit.
+    pub fn on_alloc_up(
+        &mut self,
+        t: Micros,
+        time_limit: Micros,
+        cores_per_worker: u32,
+    ) -> Vec<HqAction> {
+        self.allocs_in_queue = self.allocs_in_queue.saturating_sub(1);
+        for _ in 0..self.cfg.workers_per_alloc {
+            if self.live_workers() as u32 >= self.cfg.max_worker_count {
+                break;
+            }
+            let wid = self.next_worker;
+            self.next_worker += 1;
+            self.workers.insert(
+                wid,
+                Worker {
+                    cores: cores_per_worker,
+                    cores_free: cores_per_worker,
+                    expires_t: t + time_limit,
+                    alive: true,
+                    running: 0,
+                },
+            );
+            self.workers_started += 1;
+        }
+        self.dispatch(t)
+    }
+
+    /// A worker disappeared (allocation ended); requeue its tasks.
+    pub fn on_worker_lost(&mut self, t: Micros, wid: WorkerId) -> Vec<HqAction> {
+        if let Some(w) = self.workers.get_mut(&wid) {
+            w.alive = false;
+        }
+        let mut requeued = Vec::new();
+        for (id, task) in self.tasks.iter_mut() {
+            if task.worker == wid
+                && matches!(task.state, TaskState::Running | TaskState::Dispatched)
+            {
+                task.state = TaskState::Pending;
+                requeued.push(*id);
+            }
+        }
+        self.queue.extend(requeued);
+        let mut acts = self.autoalloc();
+        acts.extend(self.dispatch(t));
+        acts
+    }
+
+    /// Driver reports a task's workload finished.
+    pub fn on_task_done(&mut self, t: Micros, id: TaskId) -> Vec<HqAction> {
+        self.complete(t, id, false)
+    }
+
+    pub fn on_timer(&mut self, t: Micros, timer: HqTimer) -> Vec<HqAction> {
+        match timer {
+            HqTimer::Dispatched(id) => {
+                let Some(task) = self.tasks.get_mut(&id) else { return vec![] };
+                if task.state != TaskState::Dispatched {
+                    return vec![];
+                }
+                task.state = TaskState::Running;
+                task.start_t = t;
+                let worker = task.worker;
+                let limit = task.spec.time_limit;
+                vec![
+                    HqAction::StartTask { task: id, worker },
+                    HqAction::Timer(t + limit, HqTimer::Limit(id)),
+                ]
+            }
+            HqTimer::Limit(id) => {
+                let running = matches!(
+                    self.tasks.get(&id).map(|x| x.state),
+                    Some(TaskState::Running)
+                );
+                if running {
+                    let mut acts = vec![HqAction::KillTask { task: id }];
+                    acts.extend(self.complete(t, id, true));
+                    acts
+                } else {
+                    vec![]
+                }
+            }
+        }
+    }
+
+    fn complete(&mut self, t: Micros, id: TaskId, truncated: bool) -> Vec<HqAction> {
+        let Some(task) = self.tasks.get_mut(&id) else { return vec![] };
+        if task.state == TaskState::Done {
+            return vec![];
+        }
+        task.state = TaskState::Done;
+        let record = JobRecord {
+            tag: task.spec.tag,
+            submit: task.submit_t,
+            start: task.start_t,
+            end: t,
+            // HQ CPU time: from task start on the worker (includes the
+            // model-server init the driver folds into the duration).
+            cpu: t.saturating_sub(task.start_t),
+            truncated,
+        };
+        let wid = task.worker;
+        let cores = task.spec.cores;
+        if let Some(w) = self.workers.get_mut(&wid) {
+            w.cores_free += cores;
+            w.running = w.running.saturating_sub(1);
+        }
+        let mut acts = vec![HqAction::TaskCompleted { task: id, record }];
+        acts.extend(self.dispatch(t));
+        acts
+    }
+
+    /// Submit allocations while there are pending tasks, the backlog
+    /// allows it, and the worker cap is not reached.
+    fn autoalloc(&mut self) -> Vec<HqAction> {
+        let mut acts = Vec::new();
+        while !self.queue.is_empty()
+            && self.allocs_in_queue < self.cfg.backlog
+            && self.live_workers() as u32
+                + self.allocs_in_queue * self.cfg.workers_per_alloc
+                < self.cfg.max_worker_count
+        {
+            self.allocs_in_queue += 1;
+            let tag = self.next_alloc_tag;
+            self.next_alloc_tag += 1;
+            acts.push(HqAction::SubmitAllocation {
+                alloc_tag: tag,
+                req: self.cfg.alloc_request.clone(),
+            });
+        }
+        acts
+    }
+
+    /// FCFS dispatch honouring cores and the time-request semantics.
+    fn dispatch(&mut self, t: Micros) -> Vec<HqAction> {
+        let mut acts = Vec::new();
+        let mut remaining: Vec<TaskId> = Vec::new();
+        let queue = std::mem::take(&mut self.queue);
+        for id in queue {
+            let task = &self.tasks[&id];
+            if task.state != TaskState::Pending {
+                continue;
+            }
+            // A worker qualifies if it is alive, has the cores free, and
+            // its allocation will outlive the task's *time request*.
+            let need = task.spec.cores;
+            let tr = task.spec.time_request;
+            let pick = self
+                .workers
+                .iter()
+                .filter(|(_, w)| {
+                    w.alive && w.cores_free >= need && w.expires_t >= t + tr
+                })
+                .min_by_key(|(wid, _)| **wid)
+                .map(|(wid, _)| *wid);
+            match pick {
+                Some(wid) => {
+                    let w = self.workers.get_mut(&wid).unwrap();
+                    w.cores_free -= need;
+                    w.running += 1;
+                    let task = self.tasks.get_mut(&id).unwrap();
+                    task.state = TaskState::Dispatched;
+                    task.worker = wid;
+                    self.dispatches += 1;
+                    acts.push(HqAction::Timer(
+                        t + self.cfg.dispatch_latency,
+                        HqTimer::Dispatched(id),
+                    ));
+                }
+                None => remaining.push(id),
+            }
+        }
+        self.queue = remaining;
+        // Unschedulable tasks may need more allocations.
+        acts.extend(self.autoalloc());
+        acts
+    }
+
+    /// Expire workers whose allocation has ended (driver calls this when
+    /// the native allocation job finishes); requeues their tasks and
+    /// replaces capacity via autoalloc.
+    pub fn expire_workers(&mut self, t: Micros) -> Vec<HqAction> {
+        let expired: Vec<WorkerId> = self
+            .workers
+            .iter()
+            .filter(|(_, w)| w.alive && w.expires_t <= t)
+            .map(|(id, _)| *id)
+            .collect();
+        let mut acts = Vec::new();
+        for wid in expired {
+            acts.extend(self.on_worker_lost(t, wid));
+        }
+        acts
+    }
+
+    // ---- introspection ---------------------------------------------------
+
+    pub fn pending_tasks(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn live_workers(&self) -> usize {
+        self.workers.values().filter(|w| w.alive).count()
+    }
+
+    pub fn allocs_waiting(&self) -> u32 {
+        self.allocs_in_queue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::{Des, MS, SEC};
+
+    fn cfg() -> AutoAllocConfig {
+        AutoAllocConfig {
+            backlog: 1,
+            workers_per_alloc: 1,
+            max_worker_count: 4,
+            alloc_request: JobRequest::new(16, 16, 3600 * SEC),
+            dispatch_latency: 1 * MS,
+        }
+    }
+
+    /// Sim-drive: allocations come up `alloc_delay` after submission;
+    /// tasks run `dur(tag)`.
+    fn drive(
+        core: &mut HqCore,
+        submissions: Vec<(Micros, TaskSpec)>,
+        alloc_delay: Micros,
+        dur: impl Fn(u64) -> Micros,
+    ) -> Vec<JobRecord> {
+        #[derive(Debug)]
+        enum Ev {
+            Submit(TaskSpec),
+            AllocUp,
+            Timer(HqTimer),
+            TaskDone(TaskId),
+        }
+        let mut des: Des<Ev> = Des::new();
+        for (t, s) in submissions {
+            des.schedule(t, Ev::Submit(s));
+        }
+        let mut records = Vec::new();
+        let mut guard = 0;
+        while let Some((t, ev)) = des.pop() {
+            guard += 1;
+            assert!(guard < 1_000_000, "runaway");
+            let acts = match ev {
+                Ev::Submit(s) => core.submit_task(t, s).1,
+                Ev::AllocUp => core.on_alloc_up(t, 3600 * SEC, 16),
+                Ev::Timer(tm) => core.on_timer(t, tm),
+                Ev::TaskDone(id) => core.on_task_done(t, id),
+            };
+            for a in acts {
+                match a {
+                    HqAction::SubmitAllocation { .. } => {
+                        des.schedule(t + alloc_delay, Ev::AllocUp)
+                    }
+                    HqAction::StartTask { task, .. } => {
+                        let tag = records.len() as u64; // not used for dur
+                        let _ = tag;
+                        des.schedule(t + dur(task), Ev::TaskDone(task));
+                    }
+                    HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                    HqAction::TaskCompleted { record, .. } => {
+                        records.push(record)
+                    }
+                    HqAction::KillTask { .. } => {}
+                }
+            }
+        }
+        records
+    }
+
+    #[test]
+    fn single_task_through_alloc() {
+        let mut core = HqCore::new(cfg());
+        let recs = drive(
+            &mut core,
+            vec![(0, TaskSpec { tag: 1, cores: 1, time_request: SEC,
+                                time_limit: 10 * SEC })],
+            30 * SEC, // allocation queue wait
+            |_| 2 * SEC,
+        );
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        // Start only after the allocation came up (30 s) + dispatch (1 ms).
+        assert!(r.start >= 30 * SEC);
+        assert!(r.start <= 30 * SEC + 10 * MS);
+        assert_eq!(r.cpu, 2 * SEC);
+        // Overhead = queue wait + dispatch, NOT per-task sbatch costs.
+        assert!(r.overhead() >= 30 * SEC);
+    }
+
+    #[test]
+    fn later_tasks_have_tiny_overhead() {
+        // The paper's core claim: after the first allocation, per-task
+        // overhead collapses to dispatch latency (ms).
+        let mut core = HqCore::new(cfg());
+        let subs: Vec<_> = (0..10)
+            .map(|i| (i as Micros, TaskSpec {
+                tag: i, cores: 16, time_request: SEC, time_limit: 100 * SEC,
+            }))
+            .collect();
+        let recs = drive(&mut core, subs, 60 * SEC, |_| SEC);
+        assert_eq!(recs.len(), 10);
+        let mut overheads: Vec<_> = recs.iter().map(|r| r.overhead()).collect();
+        overheads.sort();
+        // First task pays the allocation wait...
+        assert!(*overheads.last().unwrap() >= 60 * SEC);
+        // ...subsequent ones only the dispatch (served serially on one
+        // 16-core worker, so overhead includes waiting for the previous
+        // task; the *scheduler* overhead per task is ms).  Check that at
+        // least the dispatch-only component is visible on task 2's start:
+        let mut starts: Vec<_> = recs.iter().map(|r| r.start).collect();
+        starts.sort();
+        let gap = starts[1] - starts[0];
+        assert!(gap >= SEC && gap <= SEC + 50 * MS,
+                "serial tasks start back-to-back, gap {gap}");
+    }
+
+    #[test]
+    fn time_request_gates_dispatch() {
+        let mut core = HqCore::new(cfg());
+        // Allocation lives 10 s; task requests 3600 s: must NOT dispatch.
+        let (id, acts) = core.submit_task(0, TaskSpec {
+            tag: 1, cores: 1, time_request: 3600 * SEC, time_limit: 2 * 3600 * SEC,
+        });
+        // Process the allocation coming up with a 10 s lifetime.
+        let mut up = core.on_alloc_up(0, 10 * SEC, 16);
+        up.extend(acts);
+        assert!(core.pending_tasks() == 1,
+                "task with long time request stays queued");
+        let _ = id;
+    }
+
+    #[test]
+    fn time_limit_kills_runaway() {
+        let mut core = HqCore::new(cfg());
+        let recs = drive(
+            &mut core,
+            vec![(0, TaskSpec { tag: 9, cores: 1, time_request: SEC,
+                                time_limit: 5 * SEC })],
+            SEC,
+            |_| 60 * SEC, // runs way past the limit
+        );
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].truncated);
+        assert!(recs[0].cpu <= 5 * SEC + MS);
+    }
+
+    #[test]
+    fn backlog_bounds_queued_allocations() {
+        let mut core = HqCore::new(AutoAllocConfig { backlog: 2, ..cfg() });
+        let mut alloc_submissions = 0;
+        for i in 0..8 {
+            let (_, acts) = core.submit_task(i, TaskSpec {
+                tag: i, cores: 1, time_request: SEC, time_limit: 10 * SEC,
+            });
+            alloc_submissions += acts.iter()
+                .filter(|a| matches!(a, HqAction::SubmitAllocation { .. }))
+                .count();
+        }
+        assert_eq!(alloc_submissions, 2, "backlog=2 caps queued allocs");
+        assert_eq!(core.allocs_waiting(), 2);
+    }
+
+    #[test]
+    fn max_worker_count_respected() {
+        let mut core = HqCore::new(AutoAllocConfig {
+            backlog: 10, max_worker_count: 2, ..cfg()
+        });
+        for i in 0..10 {
+            core.submit_task(i, TaskSpec {
+                tag: i, cores: 16, time_request: SEC, time_limit: 10 * SEC,
+            });
+        }
+        core.on_alloc_up(10, 3600 * SEC, 16);
+        core.on_alloc_up(11, 3600 * SEC, 16);
+        core.on_alloc_up(12, 3600 * SEC, 16);
+        assert!(core.live_workers() <= 2);
+    }
+
+    #[test]
+    fn worker_loss_requeues_tasks() {
+        let mut core = HqCore::new(cfg());
+        let (id, _) = core.submit_task(0, TaskSpec {
+            tag: 1, cores: 1, time_request: SEC, time_limit: 100 * SEC,
+        });
+        let acts = core.on_alloc_up(0, 3600 * SEC, 16);
+        // Fire the dispatch timer.
+        let mut started = false;
+        for a in acts {
+            if let HqAction::Timer(t, tm) = a {
+                for b in core.on_timer(t, tm) {
+                    if matches!(b, HqAction::StartTask { .. }) {
+                        started = true;
+                    }
+                }
+            }
+        }
+        assert!(started);
+        let wid = 1;
+        core.on_worker_lost(5 * SEC, wid);
+        assert_eq!(core.pending_tasks(), 1, "running task requeued");
+        let _ = id;
+    }
+
+    #[test]
+    fn parallel_tasks_share_worker_cores() {
+        // 16-core worker, 8-core tasks: two run concurrently.
+        let mut core = HqCore::new(cfg());
+        let subs: Vec<_> = (0..2)
+            .map(|i| (0, TaskSpec {
+                tag: i, cores: 8, time_request: SEC, time_limit: 100 * SEC,
+            }))
+            .collect();
+        let recs = drive(&mut core, subs, SEC, |_| 10 * SEC);
+        assert_eq!(recs.len(), 2);
+        let starts: Vec<_> = recs.iter().map(|r| r.start).collect();
+        assert!((starts[0] as i64 - starts[1] as i64).abs() < MS as i64 * 10,
+                "both start together: {starts:?}");
+    }
+}

@@ -1,0 +1,21 @@
+//! hqlite — a from-scratch HyperQueue-like meta-scheduler.
+//!
+//! The architecture matches HQ's (Böhm et al., SC21 poster): a
+//! lightweight server manages its own task queue; *workers* run inside
+//! allocations obtained from the native scheduler (slurmlite here) via an
+//! automatic allocator; tasks are dispatched to idle workers at
+//! millisecond granularity.  The paper-critical semantics are
+//! implemented:
+//!
+//! * **time request vs time limit** — a task is only placed on a worker
+//!   whose allocation has at least `time_request` remaining; the limit
+//!   only kills runaways (section II.C);
+//! * **automatic allocation** — `backlog`, `workers_per_alloc`,
+//!   `max_worker_count` (the configuration example in section II.D);
+//! * **one bulk allocation absorbs the queue wait once** — the mechanism
+//!   behind the paper's three-orders-of-magnitude overhead reduction.
+
+pub mod core;
+
+pub use core::{AutoAllocConfig, HqAction, HqCore, HqTimer, TaskId, TaskSpec,
+               WorkerId};

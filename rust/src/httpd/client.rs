@@ -1,0 +1,154 @@
+//! HTTP client with persistent (keep-alive) connections and reconnect.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::types::{read_message, Request, Response};
+
+/// A client bound to one `http://host:port` endpoint, reusing a single
+/// keep-alive connection and transparently reconnecting once on failure
+/// (the server may have restarted — the balancer relies on this).
+pub struct HttpClient {
+    host: String,
+    port: u16,
+    conn: Option<Conn>,
+    /// Per-request timeout; evaluation calls can be long (gs2 chunks), so
+    /// the default is generous.
+    pub timeout: Duration,
+}
+
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl HttpClient {
+    /// Parse `http://host:port` (path ignored) and prepare a client; the
+    /// TCP connection is opened lazily on first request.
+    pub fn connect(url: &str) -> Result<HttpClient> {
+        let (host, port) = parse_url(url)?;
+        let mut c = HttpClient {
+            host,
+            port,
+            conn: None,
+            timeout: Duration::from_secs(600),
+        };
+        c.ensure_conn()?; // fail fast on unreachable endpoints
+        Ok(c)
+    }
+
+    pub fn endpoint(&self) -> String {
+        format!("http://{}:{}", self.host, self.port)
+    }
+
+    fn ensure_conn(&mut self) -> Result<()> {
+        if self.conn.is_none() {
+            let stream = TcpStream::connect((self.host.as_str(), self.port))
+                .with_context(|| {
+                    format!("connect {}:{}", self.host, self.port)
+                })?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(self.timeout))?;
+            let writer = stream.try_clone()?;
+            self.conn = Some(Conn { writer, reader: BufReader::new(stream) });
+        }
+        Ok(())
+    }
+
+    /// Issue a request; retries once on a broken connection.
+    pub fn request(&mut self, req: &Request) -> Result<Response> {
+        match self.try_request(req) {
+            Ok(r) => Ok(r),
+            Err(_first) => {
+                // Reconnect once: the peer may have closed an idle
+                // keep-alive connection or restarted.
+                self.conn = None;
+                self.ensure_conn()?;
+                self.try_request(req)
+            }
+        }
+    }
+
+    fn try_request(&mut self, req: &Request) -> Result<Response> {
+        self.ensure_conn()?;
+        let conn = self.conn.as_mut().unwrap();
+        let host = format!("{}:{}", self.host, self.port);
+        if let Err(e) = req.write_to(&host, &mut conn.writer) {
+            self.conn = None;
+            return Err(e);
+        }
+        match read_message(&mut conn.reader) {
+            Ok(Some((start, headers, body))) => {
+                let status = parse_status(&start)?;
+                let keep = headers
+                    .get("connection")
+                    .map(|v| !v.eq_ignore_ascii_case("close"))
+                    .unwrap_or(true);
+                if !keep {
+                    self.conn = None;
+                }
+                Ok(Response { status, headers, body })
+            }
+            Ok(None) => {
+                self.conn = None;
+                bail!("server closed connection");
+            }
+            Err(e) => {
+                self.conn = None;
+                Err(e)
+            }
+        }
+    }
+}
+
+fn parse_url(url: &str) -> Result<(String, u16)> {
+    let rest = url
+        .strip_prefix("http://")
+        .ok_or_else(|| anyhow!("only http:// urls supported: {url}"))?;
+    let hostport = rest.split('/').next().unwrap_or(rest);
+    let (host, port) = hostport
+        .split_once(':')
+        .ok_or_else(|| anyhow!("missing port in url: {url}"))?;
+    Ok((host.to_string(), port.parse().context("bad port")?))
+}
+
+fn parse_status(start: &str) -> Result<u16> {
+    // "HTTP/1.1 200 OK"
+    start
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line: {start}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_urls() {
+        assert_eq!(parse_url("http://127.0.0.1:8080").unwrap(),
+                   ("127.0.0.1".to_string(), 8080));
+        assert_eq!(parse_url("http://h:1/path/x").unwrap(),
+                   ("h".to_string(), 1));
+        assert!(parse_url("https://h:1").is_err());
+        assert!(parse_url("http://h").is_err());
+    }
+
+    #[test]
+    fn parses_status_lines() {
+        assert_eq!(parse_status("HTTP/1.1 200 OK").unwrap(), 200);
+        assert_eq!(parse_status("HTTP/1.1 503 Service Unavailable").unwrap(),
+                   503);
+        assert!(parse_status("garbage").is_err());
+    }
+
+    #[test]
+    fn connect_refused_errors() {
+        // Port 1 is essentially never listening.
+        assert!(HttpClient::connect("http://127.0.0.1:1").is_err());
+    }
+}

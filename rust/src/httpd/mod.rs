@@ -1,0 +1,14 @@
+//! Minimal HTTP/1.1 substrate over `std::net`: threaded server + client.
+//!
+//! This carries the UM-Bridge protocol (JSON bodies, `Content-Length`
+//! framing, keep-alive connections).  Scope is deliberately what the
+//! system needs — GET/POST, persistent connections, a bounded worker
+//! pool — implemented carefully rather than generally.
+
+mod client;
+mod server;
+mod types;
+
+pub use client::HttpClient;
+pub use server::{Handler, Server};
+pub use types::{read_message, Request, Response};

@@ -1,0 +1,256 @@
+//! Threaded HTTP server with keep-alive and a bounded accept pool.
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::types::{read_message, Request, Response};
+
+/// Request handler: must be cheap to clone across worker threads.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// A running HTTP server.  Dropping the handle does NOT stop the server;
+/// call [`Server::shutdown`].
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    live_conns: Arc<AtomicUsize>,
+}
+
+impl Server {
+    /// Bind on 127.0.0.1 with an OS-assigned port (port 0) or a fixed one.
+    pub fn serve(port: u16, handler: Handler) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let live_conns = Arc::new(AtomicUsize::new(0));
+
+        let stop2 = stop.clone();
+        let conns2 = live_conns.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("httpd-{}", addr.port()))
+            .spawn(move || {
+                accept_loop(listener, handler, stop2, conns2);
+            })?;
+
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread), live_conns })
+    }
+
+    pub fn port(&self) -> u16 {
+        self.addr.port()
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://127.0.0.1:{}", self.addr.port())
+    }
+
+    /// Number of currently open connections (used by tests/metrics).
+    pub fn live_connections(&self) -> usize {
+        self.live_conns.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting and join the accept loop.  In-flight connection
+    /// threads drain on their own (they observe the stop flag).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    handler: Handler,
+    stop: Arc<AtomicBool>,
+    conns: Arc<AtomicUsize>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let h = handler.clone();
+                let st = stop.clone();
+                let c = conns.clone();
+                c.fetch_add(1, Ordering::Relaxed);
+                // One thread per connection; connections are few (model
+                // servers + balancer) and long-lived via keep-alive.
+                let _ = std::thread::Builder::new()
+                    .name("httpd-conn".into())
+                    .spawn(move || {
+                        let _ = handle_conn(stream, h, st);
+                        c.fetch_sub(1, Ordering::Relaxed);
+                    });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // Perf pass: 500us accept poll (was 2 ms) — new
+                // connections are rare once the balancer pools them, but
+                // registration latency still benefits.
+                std::thread::sleep(Duration::from_micros(500));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    handler: Handler,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    // Periodic read timeout so the connection thread can observe `stop`.
+    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let msg = match read_message(&mut reader) {
+            Ok(Some(m)) => m,
+            Ok(None) => return Ok(()), // peer closed
+            Err(e) => {
+                // Timeout: loop to re-check stop; anything else: drop conn.
+                if let Some(ioe) = e.downcast_ref::<std::io::Error>() {
+                    if matches!(
+                        ioe.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                    ) {
+                        continue;
+                    }
+                }
+                return Err(e);
+            }
+        };
+        let (start, headers, body) = msg;
+        let mut parts = start.split_whitespace();
+        let method = parts.next().unwrap_or("").to_string();
+        let path = parts.next().unwrap_or("").to_string();
+        if method.is_empty() || path.is_empty() {
+            return Err(anyhow!("malformed request line: {start}"));
+        }
+        let keep_alive = headers
+            .get("connection")
+            .map(|v| !v.eq_ignore_ascii_case("close"))
+            .unwrap_or(true);
+
+        let req = Request { method, path, headers, body };
+        let resp = handler(&req);
+        resp.write_to(keep_alive, &mut writer)?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::httpd::HttpClient;
+
+    fn echo_server() -> Server {
+        Server::serve(
+            0,
+            Arc::new(|req: &Request| {
+                if req.path == "/echo" {
+                    Response::ok_json(
+                        String::from_utf8_lossy(&req.body).to_string(),
+                    )
+                } else if req.path == "/hello" {
+                    Response::text(200, "world")
+                } else {
+                    Response::not_found()
+                }
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn get_and_post() {
+        let srv = echo_server();
+        let mut c = HttpClient::connect(&srv.url()).unwrap();
+        let r = c.request(&Request::get("/hello")).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body_str().unwrap(), "world");
+        let r = c.request(&Request::post("/echo", "{\"x\":3}")).unwrap();
+        assert_eq!(r.body_str().unwrap(), "{\"x\":3}");
+    }
+
+    #[test]
+    fn keep_alive_reuses_connection() {
+        let srv = echo_server();
+        let mut c = HttpClient::connect(&srv.url()).unwrap();
+        for i in 0..20 {
+            let body = format!("{{\"i\":{i}}}");
+            let r = c.request(&Request::post("/echo", &body)).unwrap();
+            assert_eq!(r.body_str().unwrap(), body);
+        }
+        // 20 requests over one connection.
+        assert!(srv.live_connections() <= 1);
+    }
+
+    #[test]
+    fn not_found() {
+        let srv = echo_server();
+        let mut c = HttpClient::connect(&srv.url()).unwrap();
+        let r = c.request(&Request::get("/nope")).unwrap();
+        assert_eq!(r.status, 404);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let srv = echo_server();
+        let url = srv.url();
+        let mut threads = Vec::new();
+        for t in 0..8 {
+            let url = url.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut c = HttpClient::connect(&url).unwrap();
+                for i in 0..10 {
+                    let body = format!("{{\"t\":{t},\"i\":{i}}}");
+                    let r = c.request(&Request::post("/echo", &body)).unwrap();
+                    assert_eq!(r.body_str().unwrap(), body);
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn large_body_roundtrip() {
+        let srv = echo_server();
+        let mut c = HttpClient::connect(&srv.url()).unwrap();
+        let big = "x".repeat(2 * 1024 * 1024);
+        let r = c.request(&Request::post("/echo", &big)).unwrap();
+        assert_eq!(r.body.len(), big.len());
+    }
+
+    #[test]
+    fn shutdown_stops_accepting() {
+        let mut srv = echo_server();
+        let url = srv.url();
+        srv.shutdown();
+        // New connections should fail (listener dropped with the loop).
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(HttpClient::connect(&url)
+            .and_then(|mut c| c.request(&Request::get("/hello")))
+            .is_err());
+    }
+}

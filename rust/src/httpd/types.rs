@@ -1,0 +1,198 @@
+//! HTTP message types and the shared read/parse path.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Incoming request (server side) / outgoing request (client side).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: HashMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn get(path: &str) -> Request {
+        Request {
+            method: "GET".into(),
+            path: path.into(),
+            headers: HashMap::new(),
+            body: Vec::new(),
+        }
+    }
+
+    pub fn post(path: &str, body: &str) -> Request {
+        Request {
+            method: "POST".into(),
+            path: path.into(),
+            headers: HashMap::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("request body not utf-8")
+    }
+
+    /// Serialise onto the wire.
+    pub fn write_to(&self, host: &str, w: &mut impl std::io::Write) -> Result<()> {
+        write!(w, "{} {} HTTP/1.1\r\n", self.method, self.path)?;
+        write!(w, "host: {host}\r\n")?;
+        write!(w, "content-length: {}\r\n", self.body.len())?;
+        for (k, v) in &self.headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        write!(w, "\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+/// HTTP response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: HashMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn ok_json(json: String) -> Response {
+        let mut headers = HashMap::new();
+        headers.insert("content-type".into(), "application/json".into());
+        Response { status: 200, headers, body: json.into_bytes() }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        let mut headers = HashMap::new();
+        headers.insert("content-type".into(), "text/plain".into());
+        Response { status, headers, body: body.as_bytes().to_vec() }
+    }
+
+    pub fn not_found() -> Response {
+        Response::text(404, "not found")
+    }
+
+    pub fn error(msg: &str) -> Response {
+        Response::text(500, msg)
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("response body not utf-8")
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+
+    pub fn write_to(&self, keep_alive: bool, w: &mut impl std::io::Write) -> Result<()> {
+        write!(w, "HTTP/1.1 {} {}\r\n", self.status, self.reason())?;
+        write!(w, "content-length: {}\r\n", self.body.len())?;
+        write!(
+            w,
+            "connection: {}\r\n",
+            if keep_alive { "keep-alive" } else { "close" }
+        )?;
+        for (k, v) in &self.headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        write!(w, "\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+/// Read one HTTP message (request or response) from a buffered stream.
+/// Returns (start_line, headers, body); None on clean EOF before any byte.
+pub fn read_message(
+    r: &mut BufReader<TcpStream>,
+) -> Result<Option<(String, HashMap<String, String>, Vec<u8>)>> {
+    let mut start = String::new();
+    let n = r.read_line(&mut start)?;
+    if n == 0 {
+        return Ok(None); // connection closed between messages
+    }
+    let start = start.trim_end().to_string();
+    if start.is_empty() {
+        bail!("empty start line");
+    }
+
+    let mut headers = HashMap::new();
+    loop {
+        let mut line = String::new();
+        let n = r.read_line(&mut line)?;
+        if n == 0 {
+            bail!("eof in headers");
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| anyhow!("malformed header: {line}"))?;
+        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+    }
+
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.parse())
+        .transpose()
+        .context("bad content-length")?
+        .unwrap_or(0);
+    // Bound body size: largest legitimate payload is an eigen-large matrix
+    // (~a few MB of JSON); 64 MiB is a safety ceiling, not a target.
+    if len > 64 * 1024 * 1024 {
+        bail!("body too large: {len}");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("short body")?;
+    Ok(Some((start, headers, body)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_serialises() {
+        let rq = Request::post("/Evaluate", "{\"a\":1}");
+        let mut buf = Vec::new();
+        rq.write_to("h", &mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.starts_with("POST /Evaluate HTTP/1.1\r\n"));
+        assert!(s.contains("content-length: 7\r\n"));
+        assert!(s.ends_with("\r\n\r\n{\"a\":1}"));
+    }
+
+    #[test]
+    fn response_serialises() {
+        let rs = Response::ok_json("[1]".into());
+        let mut buf = Vec::new();
+        rs.write_to(true, &mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("connection: keep-alive"));
+        assert!(s.ends_with("[1]"));
+    }
+
+    #[test]
+    fn status_reasons() {
+        assert_eq!(Response::not_found().status, 404);
+        assert_eq!(Response::error("x").status, 500);
+    }
+}

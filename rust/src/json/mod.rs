@@ -1,0 +1,508 @@
+//! From-scratch JSON: parser, writer, and a small accessor API.
+//!
+//! This is the UM-Bridge wire format (the protocol is JSON over HTTP) and
+//! the reader for `artifacts/manifest.json` / `testvec.json`.  No serde in
+//! the offline environment, so the substrate is built here, with the
+//! usual strictness: UTF-8 strings with escapes, nested containers,
+//! numbers via the grammar in RFC 8259, and precise error positions.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value.  Object keys are ordered (BTreeMap) so serialisation is
+/// deterministic — useful for golden tests and reproducible logs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|f| f as i64)
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|f| if f >= 0.0 { Some(f as usize) } else { None })
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+    /// `value.get("a")` on objects, None otherwise.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_obj().and_then(|o| o.get(key))
+    }
+    /// Index into arrays.
+    pub fn at(&self, idx: usize) -> Option<&Value> {
+        self.as_arr().and_then(|a| a.get(idx))
+    }
+    /// Flatten a numeric array (used for tensor payloads).
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        self.as_arr()?
+            .iter()
+            .map(|v| v.as_f64())
+            .collect::<Option<Vec<_>>>()
+    }
+    /// Flatten a nested `[[f64]]` payload (UM-Bridge input/output lists).
+    pub fn as_f64_vec2(&self) -> Option<Vec<Vec<f64>>> {
+        self.as_arr()?
+            .iter()
+            .map(|v| v.as_f64_vec())
+            .collect::<Option<Vec<_>>>()
+    }
+
+    /// Build an object from pairs.
+    pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+    pub fn arr(vals: Vec<Value>) -> Value {
+        Value::Arr(vals)
+    }
+    pub fn str(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+    pub fn num(n: f64) -> Value {
+        Value::Num(n)
+    }
+    pub fn from_f64s(xs: &[f64]) -> Value {
+        Value::Arr(xs.iter().map(|&x| Value::Num(x)).collect())
+    }
+    pub fn from_f64s2(xs: &[Vec<f64>]) -> Value {
+        Value::Arr(xs.iter().map(|r| Value::from_f64s(r)).collect())
+    }
+}
+
+/// Parse error with byte offset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+impl std::error::Error for ParseError {}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err<T>(&self, msg: &str) -> Result<T, ParseError> {
+        Err(ParseError { pos: self.pos, msg: msg.to_string() })
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), ParseError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            self.err(&format!("expected '{}'", b as char))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, ParseError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.lit("true", Value::Bool(true)),
+            Some(b'f') => self.lit("false", Value::Bool(false)),
+            Some(b'n') => self.lit("null", Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => self.err(&format!("unexpected byte '{}'", c as char)),
+            None => self.err("unexpected end of input"),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Value) -> Result<Value, ParseError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            self.err(&format!("expected '{word}'"))
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, ParseError> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Value::Obj(map)),
+                _ => return self.err("expected ',' or '}'"),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value, ParseError> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Value::Arr(out)),
+                _ => return self.err("expected ',' or ']'"),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, ParseError> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.bump() {
+                None => return self.err("unterminated string"),
+                Some(b'"') => return Ok(s),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'b') => s.push('\u{0008}'),
+                    Some(b'f') => s.push('\u{000C}'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'u') => {
+                        let cp = self.hex4()?;
+                        // Surrogate pairs.
+                        let c = if (0xD800..0xDC00).contains(&cp) {
+                            if self.bump() != Some(b'\\')
+                                || self.bump() != Some(b'u')
+                            {
+                                return self.err("missing low surrogate");
+                            }
+                            let lo = self.hex4()?;
+                            let hi10 = cp - 0xD800;
+                            let lo10 = lo.wrapping_sub(0xDC00);
+                            char::from_u32(
+                                0x10000 + ((hi10 as u32) << 10) + lo10 as u32,
+                            )
+                        } else {
+                            char::from_u32(cp as u32)
+                        };
+                        match c {
+                            Some(c) => s.push(c),
+                            None => return self.err("invalid codepoint"),
+                        }
+                    }
+                    _ => return self.err("bad escape"),
+                },
+                Some(c) if c < 0x20 => return self.err("control in string"),
+                Some(c) => {
+                    // Re-assemble UTF-8 multibyte sequences.
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let len = if c >= 0xF0 {
+                            4
+                        } else if c >= 0xE0 {
+                            3
+                        } else {
+                            2
+                        };
+                        let end = start + len;
+                        if end > self.bytes.len() {
+                            return self.err("truncated utf-8");
+                        }
+                        match std::str::from_utf8(&self.bytes[start..end]) {
+                            Ok(frag) => {
+                                s.push_str(frag);
+                                self.pos = end;
+                            }
+                            Err(_) => return self.err("invalid utf-8"),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u16, ParseError> {
+        let mut v: u16 = 0;
+        for _ in 0..4 {
+            let c = match self.bump() {
+                Some(c) => c,
+                None => return self.err("truncated \\u escape"),
+            };
+            let d = match c {
+                b'0'..=b'9' => c - b'0',
+                b'a'..=b'f' => c - b'a' + 10,
+                b'A'..=b'F' => c - b'A' + 10,
+                _ => return self.err("bad hex digit"),
+            };
+            v = (v << 4) | d as u16;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Value, ParseError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| ParseError { pos: start, msg: "utf8".into() })?;
+        text.parse::<f64>()
+            .map(Value::Num)
+            .map_err(|e| ParseError { pos: start, msg: e.to_string() })
+    }
+}
+
+/// Parse a complete JSON document (trailing whitespace allowed).
+pub fn parse(input: &str) -> Result<Value, ParseError> {
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return p.err("trailing data");
+    }
+    Ok(v)
+}
+
+/// Serialise a value to compact JSON.
+pub fn write(v: &Value) -> String {
+    let mut out = String::new();
+    write_into(v, &mut out);
+    out
+}
+
+fn write_into(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                out.push_str(&format!("{}", *n as i64));
+            } else {
+                out.push_str(&format!("{n}"));
+            }
+        }
+        Value::Str(s) => write_str(s, out),
+        Value::Arr(a) => {
+            out.push('[');
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_into(x, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(o) => {
+            out.push('{');
+            for (i, (k, x)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_str(k, out);
+                out.push(':');
+                write_into(x, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("false").unwrap(), Value::Bool(false));
+        assert_eq!(parse("42").unwrap(), Value::Num(42.0));
+        assert_eq!(parse("-3.5e2").unwrap(), Value::Num(-350.0));
+        assert_eq!(parse("\"hi\"").unwrap(), Value::str("hi"));
+    }
+
+    #[test]
+    fn parses_containers() {
+        let v = parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(v.get("c").unwrap().as_str().unwrap(), "x");
+        assert_eq!(v.get("a").unwrap().at(1).unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(v.get("a").unwrap().at(2).unwrap().get("b").unwrap(),
+                   &Value::Null);
+    }
+
+    #[test]
+    fn parses_escapes_and_unicode() {
+        let v = parse(r#""a\n\t\"\\ é 😀 é""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\n\t\"\\ é 😀 é");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("nul").is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn error_has_position() {
+        let err = parse("[1, x]").unwrap_err();
+        assert_eq!(err.pos, 4);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"arr":[1,2.5,true,null,"s"],"nested":{"k":[[1,2],[3,4]]}}"#;
+        let v = parse(src).unwrap();
+        let out = write(&v);
+        assert_eq!(parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn roundtrip_floats_precisely() {
+        let v = Value::from_f64s(&[1.5, -0.25, 3.141592653589793, 1e-8]);
+        let back = parse(&write(&v)).unwrap();
+        for (a, b) in v.as_f64_vec().unwrap().iter()
+            .zip(back.as_f64_vec().unwrap())
+        {
+            assert_eq!(*a, b);
+        }
+    }
+
+    #[test]
+    fn integers_render_without_fraction() {
+        assert_eq!(write(&Value::Num(3.0)), "3");
+        assert_eq!(write(&Value::Num(3.5)), "3.5");
+    }
+
+    #[test]
+    fn f64_vec2_accessor() {
+        let v = parse("[[1,2],[3,4,5]]").unwrap();
+        let vv = v.as_f64_vec2().unwrap();
+        assert_eq!(vv, vec![vec![1.0, 2.0], vec![3.0, 4.0, 5.0]]);
+        assert!(parse("[[1],\"x\"]").unwrap().as_f64_vec2().is_none());
+    }
+
+    #[test]
+    fn deep_nesting() {
+        let mut s = String::new();
+        for _ in 0..200 {
+            s.push('[');
+        }
+        s.push('1');
+        for _ in 0..200 {
+            s.push(']');
+        }
+        assert!(parse(&s).is_ok());
+    }
+}

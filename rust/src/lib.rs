@@ -1,0 +1,28 @@
+//! uqsched — reproduction of "A Performance Analysis of Task Scheduling
+//! for UQ Workflows on HPC Systems" (CS.DC 2025).
+//!
+//! The crate implements the paper's UM-Bridge load balancer together with
+//! every substrate it depends on: an HTTP/JSON stack, a SLURM-like batch
+//! scheduler (`slurmlite`), a HyperQueue-like meta-scheduler (`hqlite`),
+//! a PJRT runtime executing AOT-compiled JAX/Pallas artifacts, the
+//! GS2-surrogate workloads, and the metrics/benchmark harness that
+//! regenerates every table and figure in the paper's evaluation.
+//!
+//! See DESIGN.md for the architecture and the experiment index.
+
+pub mod cli;
+pub mod clock;
+pub mod cluster;
+pub mod coordinator;
+pub mod experiments;
+pub mod hqlite;
+pub mod httpd;
+pub mod json;
+pub mod logging;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod slurmlite;
+pub mod umbridge;
+pub mod util;
+pub mod workload;

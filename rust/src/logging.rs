@@ -1,0 +1,103 @@
+//! Leveled stderr logging with per-component tags and a global level.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn set_level_from_str(s: &str) {
+    set_level(match s {
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "debug" => Level::Debug,
+        _ => Level::Info,
+    });
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, component: &str, msg: &str) {
+    if !enabled(l) {
+        return;
+    }
+    let t = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() % 100_000_000)
+        .unwrap_or(0);
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+    };
+    eprintln!("[{:>8}.{:03}] {tag} {component:<12} {msg}", t / 1000, t % 1000);
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Info, $comp,
+                             &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Warn, $comp,
+                             &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Error, $comp,
+                             &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($comp:expr, $($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Debug, $comp,
+                             &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn from_str() {
+        set_level_from_str("debug");
+        assert!(enabled(Level::Debug));
+        set_level_from_str("info");
+        assert!(!enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,156 @@
+//! uqsched CLI: the leader entrypoint.
+//!
+//! Subcommands:
+//!   serve      — run an UM-Bridge model server (gp | gs2 | eigen-100 |
+//!                eigen-5000 | qoi) on a port
+//!   client     — evaluate a model through any UM-Bridge endpoint
+//!   balancer   — run the load balancer live (slurm | hq backend)
+//!   selftest   — artifact round-trip: PJRT vs golden test vectors
+//!   experiment — run one sim-plane benchmark cell and print its stats
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use uqsched::cli::Args;
+use uqsched::coordinator::start_live;
+use uqsched::experiments::{run_naive_slurm, run_umbridge_hq, Config};
+use uqsched::json::Value;
+use uqsched::metrics::BoxStats;
+use uqsched::models;
+use uqsched::runtime::{check_testvec, Engine, Manifest};
+use uqsched::umbridge::{self, HttpModel};
+use uqsched::workload::{scenario, App};
+use uqsched::{log_info, logging};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    logging::set_level_from_str(&args.str_or("log", "info"));
+    match args.subcommand() {
+        Some("serve") => serve(&args),
+        Some("client") => client(&args),
+        Some("balancer") => balancer(&args),
+        Some("selftest") => selftest(&args),
+        Some("experiment") => experiment(&args),
+        _ => {
+            eprintln!(
+                "usage: uqsched <serve|client|balancer|selftest|experiment>\n\
+                 \n\
+                 serve      --model gp|gs2|eigen-100|eigen-5000|qoi [--port N]\n\
+                 client     --url http://h:p --model NAME --params 1,2,...\n\
+                 balancer   --model NAME --backend slurm|hq [--servers N]\n\
+                 selftest   [--artifacts DIR]\n\
+                 experiment --app gs2|GP|eigen-100|eigen-5000 [--queue 2]\n\
+                            [--evals 100] [--seed 1]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn engine(args: &Args) -> Result<Arc<Engine>> {
+    let dir = args
+        .opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    Ok(Arc::new(Engine::new(&dir)?))
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let name = args.str_or("model", "gp");
+    let port = args.u64_or("port", 4242)? as u16;
+    let eng = engine(args)?;
+    let model = models::by_name(eng, &name)?;
+    let srv = umbridge::serve_models(vec![model], port)?;
+    log_info!("serve", "model '{name}' on {}", srv.url());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn client(args: &Args) -> Result<()> {
+    let url = args.required("url")?;
+    let name = args.str_or("model", "gp");
+    let params: Vec<f64> = args
+        .str_or("params", "5,2,6,3,0.15,0.02,0.5")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().map_err(|e| anyhow!("{e}")))
+        .collect::<Result<_>>()?;
+    let mut m = HttpModel::connect(url, &name)?;
+    let out = m.evaluate(&[params], &Value::Obj(Default::default()))?;
+    println!("{}", uqsched::json::write(&Value::from_f64s2(&out)));
+    Ok(())
+}
+
+fn balancer(args: &Args) -> Result<()> {
+    let model = leak(&args.str_or("model", "gp"));
+    let backend_kind = args.str_or("backend", "hq");
+    let servers = args.usize_or("servers", 2)?;
+    let scale = args.f64_or("time-scale", 60.0)?;
+    let eng = engine(args)?;
+    let app = app_for_model(model)?;
+    let scen = scenario(app);
+    let stack = start_live(eng, model, &backend_kind, servers, &scen,
+                           scale, !args.flag("per-job-servers"))?;
+    log_info!("balancer", "front door at {}", stack.balancer.url());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn app_for_model(model: &str) -> Result<App> {
+    Ok(match model {
+        models::GP_NAME | models::QOI_NAME => App::Gp,
+        models::GS2_NAME => App::Gs2,
+        models::EIGEN_SMALL_NAME => App::Eigen100,
+        models::EIGEN_LARGE_NAME => App::Eigen5000,
+        other => bail!("no scenario for model '{other}'"),
+    })
+}
+
+fn selftest(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    println!("artifact self-test ({} entries):", eng.entry_names().len());
+    let mut worst: f64 = 0.0;
+    for name in eng.entry_names() {
+        let err = check_testvec(&eng, &name)?;
+        println!("  {name:<18} max rel err {err:.3e}");
+        worst = worst.max(err);
+    }
+    if worst < 1e-4 {
+        println!("selftest OK (worst {worst:.3e})");
+        Ok(())
+    } else {
+        bail!("selftest FAILED (worst {worst:.3e})")
+    }
+}
+
+fn experiment(args: &Args) -> Result<()> {
+    let app = match args.str_or("app", "gs2").as_str() {
+        "gs2" => App::Gs2,
+        "GP" | "gp" => App::Gp,
+        "eigen-100" => App::Eigen100,
+        "eigen-5000" => App::Eigen5000,
+        other => bail!("unknown app '{other}'"),
+    };
+    let mut cfg = Config::paper(app, args.usize_or("queue", 2)?,
+                                args.u64_or("seed", 1)?);
+    cfg.n_evals = args.u64_or("evals", 100)?;
+    let s = run_naive_slurm(&cfg);
+    let h = run_umbridge_hq(&cfg);
+    for (label, e) in [("SLURM", &s), ("HQ", &h)] {
+        println!("{label:<6} {} makespan[s]: {}", app.label(),
+                 BoxStats::from(&e.makespans_sec()).row());
+        println!("       {} cpu[s]:      {}", app.label(),
+                 BoxStats::from(&e.cpus_sec()).row());
+        println!("       {} overhead[s]: {}", app.label(),
+                 BoxStats::from(&e.overheads_sec()).row());
+        println!("       experiment SLR {:.3}", e.slr());
+    }
+    Ok(())
+}
+
+fn leak(s: &str) -> &'static str {
+    Box::leak(s.to_string().into_boxed_str())
+}

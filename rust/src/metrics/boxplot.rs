@@ -1,0 +1,181 @@
+//! Boxplot statistics (Tukey) and ASCII rendering — the paper presents
+//! every result (Figs 3-6) as boxplots; these are the numbers behind them.
+
+/// Five-number summary with 1.5-IQR whiskers and explicit outliers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BoxStats {
+    pub n: usize,
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub whisker_lo: f64,
+    pub whisker_hi: f64,
+    pub outliers: Vec<f64>,
+}
+
+/// Linear-interpolation quantile on a sorted slice (numpy default).
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+impl BoxStats {
+    pub fn from(values: &[f64]) -> BoxStats {
+        let mut v: Vec<f64> = values.iter().copied()
+            .filter(|x| x.is_finite()).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if v.is_empty() {
+            return BoxStats {
+                n: 0, min: f64::NAN, q1: f64::NAN, median: f64::NAN,
+                q3: f64::NAN, max: f64::NAN, mean: f64::NAN,
+                whisker_lo: f64::NAN, whisker_hi: f64::NAN,
+                outliers: vec![],
+            };
+        }
+        let q1 = quantile(&v, 0.25);
+        let median = quantile(&v, 0.5);
+        let q3 = quantile(&v, 0.75);
+        let iqr = q3 - q1;
+        let lo_fence = q1 - 1.5 * iqr;
+        let hi_fence = q3 + 1.5 * iqr;
+        let whisker_lo = v.iter().copied().find(|&x| x >= lo_fence)
+            .unwrap_or(v[0]);
+        let whisker_hi = v.iter().rev().copied().find(|&x| x <= hi_fence)
+            .unwrap_or(v[v.len() - 1]);
+        let outliers: Vec<f64> = v.iter().copied()
+            .filter(|&x| x < whisker_lo || x > whisker_hi).collect();
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        BoxStats {
+            n: v.len(),
+            min: v[0],
+            q1,
+            median,
+            q3,
+            max: v[v.len() - 1],
+            mean,
+            whisker_lo,
+            whisker_hi,
+            outliers,
+        }
+    }
+
+    /// One-line summary, the row format the bench harnesses print.
+    pub fn row(&self) -> String {
+        format!(
+            "n={:<4} min={:<10.3} q1={:<10.3} med={:<10.3} q3={:<10.3} \
+             max={:<10.3} mean={:<10.3} outliers={}",
+            self.n, self.min, self.q1, self.median, self.q3, self.max,
+            self.mean, self.outliers.len()
+        )
+    }
+
+    /// ASCII boxplot on a shared [lo, hi] axis, `width` chars wide.
+    pub fn ascii(&self, lo: f64, hi: f64, width: usize) -> String {
+        if self.n == 0 || hi <= lo {
+            return " ".repeat(width);
+        }
+        let pos = |x: f64| -> usize {
+            let f = ((x - lo) / (hi - lo)).clamp(0.0, 1.0);
+            ((f * (width.saturating_sub(1)) as f64).round() as usize)
+                .min(width - 1)
+        };
+        let mut row = vec![b' '; width];
+        let (wl, q1, md, q3, wh) = (
+            pos(self.whisker_lo), pos(self.q1), pos(self.median),
+            pos(self.q3), pos(self.whisker_hi),
+        );
+        for c in row.iter_mut().take(q1).skip(wl) {
+            *c = b'-';
+        }
+        for c in row.iter_mut().take(wh + 1).skip(q3) {
+            *c = b'-';
+        }
+        for c in row.iter_mut().take(q3 + 1).skip(q1) {
+            *c = b'=';
+        }
+        row[wl] = b'|';
+        row[wh] = b'|';
+        row[md] = b'#';
+        for &o in &self.outliers {
+            row[pos(o)] = b'o';
+        }
+        String::from_utf8(row).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_number_summary() {
+        let s = BoxStats::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.q1, 2.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.q3, 4.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert!(s.outliers.is_empty());
+    }
+
+    #[test]
+    fn detects_outliers() {
+        let mut v: Vec<f64> = (0..20).map(|i| 10.0 + i as f64 * 0.1).collect();
+        v.push(1000.0);
+        let s = BoxStats::from(&v);
+        assert_eq!(s.outliers, vec![1000.0]);
+        assert!(s.whisker_hi < 1000.0);
+        assert_eq!(s.max, 1000.0);
+    }
+
+    #[test]
+    fn single_value() {
+        let s = BoxStats::from(&[7.0]);
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.q1, 7.0);
+        assert_eq!(s.n, 1);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let s = BoxStats::from(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.median.is_nan());
+    }
+
+    #[test]
+    fn nan_inputs_filtered() {
+        let s = BoxStats::from(&[1.0, f64::NAN, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.median, 2.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile(&v, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile(&v, 0.25) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ascii_renders_box() {
+        let s = BoxStats::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let a = s.ascii(0.0, 6.0, 40);
+        assert_eq!(a.len(), 40);
+        assert!(a.contains('#'));
+        assert!(a.contains('='));
+    }
+}

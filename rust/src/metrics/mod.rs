@@ -1,0 +1,182 @@
+//! Metrics: the paper's measured quantities (section IV.A) and their
+//! presentation (boxplot statistics, ASCII rendering, CSV export).
+//!
+//! * makespan  — job end minus job submission
+//! * CPU time  — timer starts when the job starts on the node
+//! * overhead  — makespan - CPU time (queueing deliberately included)
+//! * SLR       — makespan / CPU time (Schedule Length Ratio, [39])
+
+use crate::clock::{Micros, SEC};
+
+pub mod boxplot;
+pub mod report;
+
+pub use boxplot::BoxStats;
+
+/// Per-job timing record (native-log equivalent).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRecord {
+    /// Caller correlation id (evaluation index).
+    pub tag: u64,
+    /// Submission time.
+    pub submit: Micros,
+    /// Job start on the node (allocation granted).
+    pub start: Micros,
+    /// Job end.
+    pub end: Micros,
+    /// CPU time (from job start, includes environment setup).
+    pub cpu: Micros,
+    /// True if killed by a time limit / cancellation.
+    pub truncated: bool,
+}
+
+impl JobRecord {
+    pub fn makespan(&self) -> Micros {
+        self.end.saturating_sub(self.submit)
+    }
+
+    /// Scheduling overhead: makespan minus CPU time.
+    pub fn overhead(&self) -> Micros {
+        self.makespan().saturating_sub(self.cpu)
+    }
+
+    /// Per-job Schedule Length Ratio.
+    pub fn slr(&self) -> f64 {
+        if self.cpu == 0 {
+            1.0
+        } else {
+            self.makespan() as f64 / self.cpu as f64
+        }
+    }
+
+    /// Apply log granularity (paper: SLURM logs whole seconds, with
+    /// "extra checks ... to prevent erroneous results such as negative
+    /// overhead"; if the rounded makespan underflows the CPU time, set it
+    /// to the CPU time and assume zero overhead).
+    pub fn quantised(&self, granularity: Micros) -> JobRecord {
+        let q = |v: Micros| (v / granularity) * granularity;
+        let mut r = JobRecord {
+            tag: self.tag,
+            submit: q(self.submit),
+            start: q(self.start),
+            end: q(self.end),
+            cpu: self.cpu, // SLURM keeps CPU time at microsecond accuracy
+            truncated: self.truncated,
+        };
+        if r.end.saturating_sub(r.submit) < r.cpu {
+            // The paper's workaround, reproduced.
+            r.end = r.submit + r.cpu;
+        }
+        r
+    }
+}
+
+/// A finished benchmark: one scheduler x application x queue-depth cell.
+#[derive(Clone, Debug, Default)]
+pub struct Experiment {
+    pub label: String,
+    pub records: Vec<JobRecord>,
+}
+
+impl Experiment {
+    pub fn new(label: &str) -> Self {
+        Experiment { label: label.to_string(), records: Vec::new() }
+    }
+
+    /// Whole-experiment makespan: last end minus first submit.
+    pub fn makespan(&self) -> Micros {
+        let first = self.records.iter().map(|r| r.submit).min().unwrap_or(0);
+        let last = self.records.iter().map(|r| r.end).max().unwrap_or(0);
+        last.saturating_sub(first)
+    }
+
+    pub fn total_cpu(&self) -> Micros {
+        self.records.iter().map(|r| r.cpu).sum()
+    }
+
+    /// Experiment-level SLR (the paper's headline formulation).
+    pub fn slr(&self) -> f64 {
+        let cpu = self.total_cpu();
+        if cpu == 0 {
+            1.0
+        } else {
+            self.makespan() as f64 / cpu as f64
+        }
+    }
+
+    pub fn makespans_sec(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.makespan() as f64 / SEC as f64).collect()
+    }
+
+    pub fn cpus_sec(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.cpu as f64 / SEC as f64).collect()
+    }
+
+    pub fn overheads_sec(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.overhead() as f64 / SEC as f64).collect()
+    }
+
+    pub fn slrs(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.slr()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::MS;
+
+    fn rec(submit: Micros, start: Micros, end: Micros, cpu: Micros) -> JobRecord {
+        JobRecord { tag: 0, submit, start, end, cpu, truncated: false }
+    }
+
+    #[test]
+    fn per_job_metrics() {
+        let r = rec(0, 10 * SEC, 30 * SEC, 15 * SEC);
+        assert_eq!(r.makespan(), 30 * SEC);
+        assert_eq!(r.overhead(), 15 * SEC);
+        assert!((r.slr() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_cpu_slr_is_one() {
+        let r = rec(0, 0, 0, 0);
+        assert_eq!(r.slr(), 1.0);
+    }
+
+    #[test]
+    fn quantisation_prevents_negative_overhead() {
+        // 400 ms job inside one log second: naive rounding would give
+        // makespan 0 < cpu.
+        let r = rec(100 * MS, 150 * MS, 500 * MS, 350 * MS);
+        let q = r.quantised(SEC);
+        assert!(q.makespan() >= q.cpu);
+        assert_eq!(q.overhead(), 0);
+    }
+
+    #[test]
+    fn quantisation_floors_to_grain() {
+        let r = rec(1_400 * MS, 2_300 * MS, 9_900 * MS, 2 * SEC);
+        let q = r.quantised(SEC);
+        assert_eq!(q.submit, 1 * SEC);
+        assert_eq!(q.end, 9 * SEC);
+        assert_eq!(q.cpu, 2 * SEC); // untouched
+    }
+
+    #[test]
+    fn experiment_makespan_spans_all() {
+        let mut e = Experiment::new("x");
+        e.records.push(rec(5 * SEC, 6 * SEC, 20 * SEC, 10 * SEC));
+        e.records.push(rec(0, 1 * SEC, 9 * SEC, 8 * SEC));
+        assert_eq!(e.makespan(), 20 * SEC);
+        assert_eq!(e.total_cpu(), 18 * SEC);
+        assert!((e.slr() - 20.0 / 18.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncated_flag_carried() {
+        let mut r = rec(0, 0, SEC, SEC);
+        r.truncated = true;
+        assert!(r.quantised(SEC).truncated);
+    }
+}

@@ -1,0 +1,186 @@
+//! Figure/table rendering: grouped boxplot panels (the paper's Figs 3-6)
+//! as ASCII + CSV files under `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::boxplot::BoxStats;
+
+/// One boxplot cell: (group label, series label, values).
+pub struct Cell {
+    pub group: String,
+    pub series: String,
+    pub values: Vec<f64>,
+}
+
+/// A figure panel (e.g. "makespan, 2 jobs"): cells grouped by application
+/// with one box per scheduler, exactly the paper's layout.
+pub struct Panel {
+    pub title: String,
+    pub unit: String,
+    pub cells: Vec<Cell>,
+    /// Log-scale axis for rendering (the paper's overhead plots span
+    /// orders of magnitude).
+    pub log: bool,
+}
+
+impl Panel {
+    pub fn new(title: &str, unit: &str, log: bool) -> Panel {
+        Panel { title: title.into(), unit: unit.into(), cells: vec![], log }
+    }
+
+    pub fn push(&mut self, group: &str, series: &str, values: Vec<f64>) {
+        self.cells.push(Cell {
+            group: group.into(),
+            series: series.into(),
+            values,
+        });
+    }
+
+    fn axis(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for c in &self.cells {
+            for &v in &c.values {
+                if v.is_finite() {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+            }
+        }
+        if !lo.is_finite() {
+            return (0.0, 1.0);
+        }
+        if self.log {
+            (lo.max(1e-9), hi.max(lo.max(1e-9) * 10.0))
+        } else {
+            (lo.min(0.0), hi.max(lo + 1e-9))
+        }
+    }
+
+    /// ASCII rendering with a shared axis across cells.
+    pub fn render(&self) -> String {
+        let (lo, hi) = self.axis();
+        let width = 56usize;
+        let mut out = String::new();
+        let _ = writeln!(out, "## {} [{}]", self.title, self.unit);
+        let _ = writeln!(
+            out,
+            "   axis: {:.4} .. {:.4} {}",
+            lo, hi, if self.log { "(log)" } else { "" }
+        );
+        for c in &self.cells {
+            let vals: Vec<f64> = if self.log {
+                c.values.iter().map(|v| v.max(1e-9).log10()).collect()
+            } else {
+                c.values.clone()
+            };
+            let (alo, ahi) = if self.log {
+                (lo.log10(), hi.log10())
+            } else {
+                (lo, hi)
+            };
+            let s = BoxStats::from(&vals);
+            let raw = BoxStats::from(&c.values);
+            let _ = writeln!(
+                out,
+                "   {:>12} {:>6} |{}| med={:.4}",
+                c.group,
+                c.series,
+                s.ascii(alo, ahi, width),
+                raw.median
+            );
+        }
+        out
+    }
+
+    /// CSV rows: group,series,n,min,q1,median,q3,max,mean,outliers.
+    pub fn csv(&self) -> String {
+        let mut out =
+            String::from("group,series,n,min,q1,median,q3,max,mean,n_outliers\n");
+        for c in &self.cells {
+            let s = BoxStats::from(&c.values);
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{},{},{},{},{}",
+                c.group, c.series, s.n, s.min, s.q1, s.median, s.q3, s.max,
+                s.mean, s.outliers.len()
+            );
+        }
+        out
+    }
+
+    /// Raw per-value CSV (for external plotting).
+    pub fn csv_raw(&self) -> String {
+        let mut out = String::from("group,series,value\n");
+        for c in &self.cells {
+            for &v in &c.values {
+                let _ = writeln!(out, "{},{},{}", c.group, c.series, v);
+            }
+        }
+        out
+    }
+
+    pub fn save(&self, dir: &Path, stem: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.csv())?;
+        std::fs::write(dir.join(format!("{stem}_raw.csv")), self.csv_raw())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn panel() -> Panel {
+        let mut p = Panel::new("makespan, 2 jobs", "s", false);
+        p.push("eigen-100", "SLURM", vec![30.0, 35.0, 33.0, 60.0]);
+        p.push("eigen-100", "HQ", vec![10.0, 11.0, 12.0, 11.5]);
+        p
+    }
+
+    #[test]
+    fn renders_all_cells() {
+        let r = panel().render();
+        assert!(r.contains("SLURM"));
+        assert!(r.contains("HQ"));
+        assert!(r.contains("makespan"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let c = panel().csv();
+        let lines: Vec<&str> = c.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("group,series"));
+        assert!(lines[1].starts_with("eigen-100,SLURM,4,"));
+    }
+
+    #[test]
+    fn csv_raw_one_row_per_value() {
+        let c = panel().csv_raw();
+        assert_eq!(c.trim().lines().count(), 1 + 8);
+    }
+
+    #[test]
+    fn log_axis_handles_wide_range() {
+        let mut p = Panel::new("overhead", "s", true);
+        p.push("gs2", "SLURM", vec![100.0, 200.0, 150.0]);
+        p.push("gs2", "HQ", vec![0.001, 0.002, 0.0015]);
+        let r = p.render();
+        assert!(r.contains("(log)"));
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join("uqsched_test_report");
+        let _ = std::fs::remove_dir_all(&dir);
+        panel().save(&dir, "fig_test").unwrap();
+        assert!(dir.join("fig_test.csv").exists());
+        assert!(dir.join("fig_test_raw.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

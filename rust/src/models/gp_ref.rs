@@ -1,0 +1,264 @@
+//! Dependency-free Gaussian process in pure Rust.
+//!
+//! Two jobs:
+//! 1. regenerate the paper's Fig 2 (prior/posterior illustration on toy
+//!    1-D data) without any Python at bench time;
+//! 2. act as a second, independent oracle for the PJRT GP path in
+//!    integration tests (Rust math vs Pallas kernel numerics).
+
+use crate::util::Rng;
+
+/// Dense column-major symmetric solve via Cholesky (small n).
+pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let mut l = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L y = b (lower triangular).
+pub fn solve_lower(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    y
+}
+
+/// Solve L^T x = y (upper triangular from lower factor).
+pub fn solve_upper_t(l: &[f64], n: usize, y: &[f64]) -> Vec<f64> {
+    let mut x = vec![0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+/// 1-D RBF kernel.
+pub fn k1(a: f64, b: f64, ls: f64, sf2: f64) -> f64 {
+    let d = (a - b) / ls;
+    sf2 * (-0.5 * d * d).exp()
+}
+
+/// A 1-D GP conditioned on observations, for the Fig 2 illustration.
+pub struct Gp1d {
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+    pub ls: f64,
+    pub sf2: f64,
+    pub sn2: f64,
+    chol: Vec<f64>,
+    alpha: Vec<f64>,
+}
+
+impl Gp1d {
+    pub fn fit(xs: Vec<f64>, ys: Vec<f64>, ls: f64, sf2: f64, sn2: f64) -> Gp1d {
+        let n = xs.len();
+        let mut k = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i * n + j] = k1(xs[i], xs[j], ls, sf2);
+            }
+            k[i * n + i] += sn2;
+        }
+        let chol = cholesky(&k, n).expect("PD kernel");
+        let y0 = solve_lower(&chol, n, &ys);
+        let alpha = solve_upper_t(&chol, n, &y0);
+        Gp1d { xs, ys, ls, sf2, sn2, chol, alpha }
+    }
+
+    /// Posterior mean and variance at query points.
+    pub fn predict(&self, xq: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let n = self.xs.len();
+        let mut mean = Vec::with_capacity(xq.len());
+        let mut var = Vec::with_capacity(xq.len());
+        for &x in xq {
+            let ks: Vec<f64> = self
+                .xs
+                .iter()
+                .map(|&xi| k1(x, xi, self.ls, self.sf2))
+                .collect();
+            let m: f64 = ks.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+            let v = solve_lower(&self.chol, n, &ks);
+            let q: f64 = v.iter().map(|z| z * z).sum();
+            mean.push(m);
+            var.push((self.sf2 - q).max(0.0));
+        }
+        (mean, var)
+    }
+
+    /// Posterior covariance matrix at query points (for sample draws).
+    pub fn posterior_cov(&self, xq: &[f64]) -> Vec<f64> {
+        let n = self.xs.len();
+        let m = xq.len();
+        // V[i][j] column of solve_lower per query point.
+        let mut vcols: Vec<Vec<f64>> = Vec::with_capacity(m);
+        for &x in xq {
+            let ks: Vec<f64> = self
+                .xs
+                .iter()
+                .map(|&xi| k1(x, xi, self.ls, self.sf2))
+                .collect();
+            vcols.push(solve_lower(&self.chol, n, &ks));
+        }
+        let mut cov = vec![0f64; m * m];
+        for i in 0..m {
+            for j in 0..m {
+                let kxx = k1(xq[i], xq[j], self.ls, self.sf2);
+                let dot: f64 =
+                    vcols[i].iter().zip(&vcols[j]).map(|(a, b)| a * b).sum();
+                cov[i * m + j] = kxx - dot;
+            }
+        }
+        cov
+    }
+
+    /// Draw `count` functions from the posterior at `xq` (seeded).
+    pub fn sample_posterior(&self, xq: &[f64], count: usize, seed: u64)
+                            -> Vec<Vec<f64>> {
+        let m = xq.len();
+        let (mean, _) = self.predict(xq);
+        let mut cov = self.posterior_cov(xq);
+        // Jitter for PD.
+        for i in 0..m {
+            cov[i * m + i] += 1e-9;
+        }
+        let l = cholesky(&cov, m).expect("posterior cov PD");
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|_| {
+                let z: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+                (0..m)
+                    .map(|i| {
+                        mean[i]
+                            + (0..=i.min(m - 1))
+                                .map(|k| l[i * m + k] * z[k])
+                                .sum::<f64>()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// The Fig 2 dataset from the paper's illustration: 4 training points on
+/// a smooth function, queries on a dense grid.
+pub fn fig2_data() -> (Gp1d, Vec<f64>) {
+    let xs = vec![-4.0, -1.5, 1.0, 3.5];
+    let ys: Vec<f64> = xs.iter().map(|&x: &f64| (0.7 * x).sin()).collect();
+    let gp = Gp1d::fit(xs, ys, 1.6, 1.0, 1e-6);
+    let grid: Vec<f64> = (0..121).map(|i| -6.0 + 12.0 * i as f64 / 120.0).collect();
+    (gp, grid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_roundtrip() {
+        // A = M M^T for random M is PD.
+        let n = 5;
+        let mut rng = Rng::new(3);
+        let m: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] =
+                    (0..n).map(|k| m[i * n + k] * m[j * n + k]).sum::<f64>()
+                        + if i == j { 0.5 } else { 0.0 };
+            }
+        }
+        let l = cholesky(&a, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let v: f64 =
+                    (0..n).map(|k| l[i * n + k] * l[j * n + k]).sum();
+                assert!((v - a[i * n + j]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let n = 4;
+        let a: Vec<f64> = vec![
+            4.0, 1.0, 0.5, 0.2,
+            1.0, 3.0, 0.3, 0.1,
+            0.5, 0.3, 2.0, 0.4,
+            0.2, 0.1, 0.4, 1.5,
+        ];
+        let l = cholesky(&a, n).unwrap();
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let y = solve_lower(&l, n, &b);
+        let x = solve_upper_t(&l, n, &y);
+        // Check A x = b.
+        for i in 0..n {
+            let s: f64 = (0..n).map(|j| a[i * n + j] * x[j]).sum();
+            assert!((s - b[i]).abs() < 1e-9, "row {i}: {s} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn gp_interpolates_noiseless_data() {
+        let (gp, _) = fig2_data();
+        let (mean, var) = gp.predict(&gp.xs.clone());
+        for (m, (y, v)) in mean.iter().zip(gp.ys.iter().zip(&var)) {
+            assert!((m - y).abs() < 1e-3, "{m} vs {y}");
+            assert!(*v < 1e-3);
+        }
+    }
+
+    #[test]
+    fn variance_grows_away_from_data() {
+        let (gp, _) = fig2_data();
+        let (_, v_far) = gp.predict(&[10.0]);
+        let (_, v_near) = gp.predict(&[1.0]);
+        assert!(v_far[0] > v_near[0]);
+        assert!(v_far[0] <= gp.sf2 + 1e-9);
+    }
+
+    #[test]
+    fn posterior_draws_hit_training_points() {
+        let (gp, _) = fig2_data();
+        let draws = gp.sample_posterior(&gp.xs.clone(), 3, 42);
+        assert_eq!(draws.len(), 3);
+        for d in &draws {
+            for (a, b) in d.iter().zip(&gp.ys) {
+                assert!((a - b).abs() < 0.05, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn draws_are_seeded() {
+        let (gp, grid) = fig2_data();
+        let a = gp.sample_posterior(&grid, 2, 7);
+        let b = gp.sample_posterior(&grid, 2, 7);
+        assert_eq!(a, b);
+        let c = gp.sample_posterior(&grid, 2, 8);
+        assert_ne!(a, c);
+    }
+}

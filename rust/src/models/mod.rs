@@ -1,0 +1,294 @@
+//! Model servers: the paper's four benchmark applications as UM-Bridge
+//! models over the PJRT runtime (DESIGN.md section 2).
+//!
+//! * [`GpModel`]    — GP surrogate of gs2lite (7 in -> mean/var out)
+//! * [`Gs2Model`]   — gs2lite dispersion solver (chunked power iteration,
+//!                    input-dependent runtime)
+//! * [`EigenModel`] — eigen-100 / eigen-5000 dense eigenproblems
+//! * [`QoiModel`]   — the quasilinear QoI integral over the GP surrogate
+//!
+//! `gp_ref` is a dependency-free Rust GP used for Fig 2 and as a second
+//! oracle against the PJRT path.
+
+pub mod gp_ref;
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::json::Value;
+use crate::runtime::Engine;
+use crate::umbridge::Model;
+use crate::util::Rng;
+
+/// Names used on the wire (match the paper's benchmark names).
+pub const GP_NAME: &str = "gp";
+pub const GS2_NAME: &str = "gs2";
+pub const EIGEN_SMALL_NAME: &str = "eigen-100";
+pub const EIGEN_LARGE_NAME: &str = "eigen-5000";
+pub const QOI_NAME: &str = "qoi";
+
+/// Build a model by wire name.
+pub fn by_name(engine: Arc<Engine>, name: &str) -> Result<Arc<dyn Model>> {
+    Ok(match name {
+        GP_NAME => Arc::new(GpModel::new(engine)),
+        GS2_NAME => Arc::new(Gs2Model::new(engine)),
+        EIGEN_SMALL_NAME => Arc::new(EigenModel::small(engine)),
+        EIGEN_LARGE_NAME => Arc::new(EigenModel::large(engine)),
+        QOI_NAME => Arc::new(QoiModel::new(engine)),
+        other => bail!("unknown model '{other}'"),
+    })
+}
+
+pub fn all_names() -> Vec<&'static str> {
+    vec![GP_NAME, GS2_NAME, EIGEN_SMALL_NAME, EIGEN_LARGE_NAME, QOI_NAME]
+}
+
+// ---------------------------------------------------------------------------
+
+/// GP surrogate: input (7) -> outputs (mean[2], var[2]).
+pub struct GpModel {
+    engine: Arc<Engine>,
+    batch: usize,
+}
+
+impl GpModel {
+    pub fn new(engine: Arc<Engine>) -> Self {
+        let batch = engine
+            .manifest()
+            .entries
+            .get("gp_predict_b16")
+            .and_then(|e| e.input_shapes.first())
+            .and_then(|s| s.first().copied())
+            .unwrap_or(16);
+        GpModel { engine, batch }
+    }
+
+    /// Batched prediction (the hot path the balancer perf bench drives):
+    /// rows of 7 inputs -> (means, vars) rows of 2.
+    pub fn predict_batch(&self, rows: &[Vec<f64>])
+                         -> Result<(Vec<[f64; 2]>, Vec<[f64; 2]>)> {
+        let mut means = Vec::with_capacity(rows.len());
+        let mut vars = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(self.batch) {
+            let mut flat = vec![0f32; self.batch * 7];
+            for (i, r) in chunk.iter().enumerate() {
+                if r.len() != 7 {
+                    bail!("gp input must have 7 parameters, got {}", r.len());
+                }
+                for (j, &v) in r.iter().enumerate() {
+                    flat[i * 7 + j] = v as f32;
+                }
+            }
+            // Pad rows repeat the last real row (harmless).
+            for i in chunk.len()..self.batch {
+                for j in 0..7 {
+                    flat[i * 7 + j] = flat[(chunk.len().max(1) - 1) * 7 + j];
+                }
+            }
+            let out = self.engine.execute("gp_predict_b16", &[flat])?;
+            let (mean, var) = (&out[0], &out[1]);
+            for i in 0..chunk.len() {
+                means.push([mean[i * 2] as f64, mean[i * 2 + 1] as f64]);
+                vars.push([var[i * 2] as f64, var[i * 2 + 1] as f64]);
+            }
+        }
+        Ok((means, vars))
+    }
+}
+
+impl Model for GpModel {
+    fn name(&self) -> &str {
+        GP_NAME
+    }
+    fn input_sizes(&self) -> Vec<usize> {
+        vec![7]
+    }
+    fn output_sizes(&self) -> Vec<usize> {
+        vec![2, 2]
+    }
+    fn evaluate(&self, inputs: &[Vec<f64>], _config: &Value)
+                -> Result<Vec<Vec<f64>>> {
+        let (means, vars) = self.predict_batch(&inputs[..1])?;
+        Ok(vec![means[0].to_vec(), vars[0].to_vec()])
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// gs2lite: input (7) -> outputs (gamma/omega [2], residual [1],
+/// chunks-used [1]).  The server loops fixed-shape PJRT chunk calls until
+/// the residual converges — runtime is input-dependent and a-priori
+/// unknown, the paper's scheduling challenge.
+pub struct Gs2Model {
+    engine: Arc<Engine>,
+}
+
+impl Gs2Model {
+    pub fn new(engine: Arc<Engine>) -> Self {
+        Gs2Model { engine }
+    }
+
+    /// Deterministic initial state (matches
+    /// `python/compile/gs2lite.py::initial_state`).
+    pub fn initial_state(&self) -> Vec<f32> {
+        let m = &self.engine.manifest().gs2;
+        let n = m.ngrid;
+        let tm = m.theta_max as f32;
+        let mut zr = vec![0f32; n];
+        let mut zi = vec![0f32; n];
+        for i in 0..n {
+            let th = -tm + 2.0 * tm * (i as f32) / ((n - 1) as f32);
+            zr[i] = (-0.5 * th * th).exp();
+            zi[i] = 0.1 * th.sin() * zr[i];
+        }
+        let nrm = (zr.iter().map(|v| v * v).sum::<f32>()
+            + zi.iter().map(|v| v * v).sum::<f32>())
+        .sqrt();
+        let mut state = vec![0f32; n * 2];
+        for i in 0..n {
+            state[i * 2] = zr[i] / nrm;
+            state[i * 2 + 1] = zi[i] / nrm;
+        }
+        state
+    }
+
+    /// Run to convergence; returns (gamma, omega, residual, chunks).
+    pub fn solve(&self, theta: &[f64], max_chunks_override: Option<usize>)
+                 -> Result<(f64, f64, f64, usize)> {
+        if theta.len() != 7 {
+            bail!("gs2 input must have 7 parameters, got {}", theta.len());
+        }
+        let meta = self.engine.manifest().gs2.clone();
+        let tol = meta.residual_tol;
+        let max_chunks = max_chunks_override.unwrap_or(meta.max_chunks);
+        let th: Vec<f32> = theta.iter().map(|&v| v as f32).collect();
+        let mut state = self.initial_state();
+        let mut eig = [0f64; 2];
+        let mut res = f64::INFINITY;
+        let mut chunks = 0;
+        while chunks < max_chunks {
+            let out = self
+                .engine
+                .execute("gs2_chunk", &[th.clone(), state.clone()])?;
+            state = out[0].clone();
+            eig = [out[1][0] as f64, out[1][1] as f64];
+            res = out[2][0] as f64;
+            chunks += 1;
+            if res < tol {
+                break;
+            }
+        }
+        Ok((eig[0], eig[1], res, chunks))
+    }
+}
+
+impl Model for Gs2Model {
+    fn name(&self) -> &str {
+        GS2_NAME
+    }
+    fn input_sizes(&self) -> Vec<usize> {
+        vec![7]
+    }
+    fn output_sizes(&self) -> Vec<usize> {
+        vec![2, 1, 1]
+    }
+    fn evaluate(&self, inputs: &[Vec<f64>], config: &Value)
+                -> Result<Vec<Vec<f64>>> {
+        let max_chunks = config
+            .get("max_chunks")
+            .and_then(|v| v.as_usize());
+        let (g, w, res, chunks) = self.solve(&inputs[0], max_chunks)?;
+        Ok(vec![vec![g, w], vec![res], vec![chunks as f64]])
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Dense symmetric eigenproblem (paper's eigen-100/eigen-5000, LAPACK
+/// `_geev` stand-in).  Input: (1) seed; the benchmark matrix is generated
+/// from the shared SplitMix64 stream so Rust and Python agree bit-for-bit.
+pub struct EigenModel {
+    engine: Arc<Engine>,
+    entry: &'static str,
+    wire: &'static str,
+    n: usize,
+}
+
+impl EigenModel {
+    pub fn small(engine: Arc<Engine>) -> Self {
+        let n = engine.manifest().eigen.n_small;
+        EigenModel { engine, entry: "eigen_small", wire: EIGEN_SMALL_NAME, n }
+    }
+
+    pub fn large(engine: Arc<Engine>) -> Self {
+        let n = engine.manifest().eigen.n_large;
+        EigenModel { engine, entry: "eigen_large", wire: EIGEN_LARGE_NAME, n }
+    }
+
+    pub fn solve_seed(&self, seed: u64) -> Result<(Vec<f64>, f64)> {
+        let a = Rng::symmetric_matrix(seed, self.n);
+        let out = self.engine.execute(self.entry, &[a])?;
+        let w = out[0].iter().map(|&v| v as f64).collect();
+        Ok((w, out[1][0] as f64))
+    }
+}
+
+impl Model for EigenModel {
+    fn name(&self) -> &str {
+        self.wire
+    }
+    fn input_sizes(&self) -> Vec<usize> {
+        vec![1]
+    }
+    fn output_sizes(&self) -> Vec<usize> {
+        vec![self.n, 1]
+    }
+    fn evaluate(&self, inputs: &[Vec<f64>], _config: &Value)
+                -> Result<Vec<Vec<f64>>> {
+        let seed = inputs[0]
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("eigen input: seed required"))? as u64;
+        let (w, off) = self.solve_seed(seed)?;
+        Ok(vec![w, vec![off]])
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Quasilinear QoI integral over the GP surrogate (paper eq. (5) proxy).
+pub struct QoiModel {
+    engine: Arc<Engine>,
+    field_len: usize,
+}
+
+impl QoiModel {
+    pub fn new(engine: Arc<Engine>) -> Self {
+        QoiModel { engine, field_len: 24 * 16 }
+    }
+}
+
+impl Model for QoiModel {
+    fn name(&self) -> &str {
+        QOI_NAME
+    }
+    fn input_sizes(&self) -> Vec<usize> {
+        vec![7]
+    }
+    fn output_sizes(&self) -> Vec<usize> {
+        vec![1, self.field_len]
+    }
+    fn evaluate(&self, inputs: &[Vec<f64>], _config: &Value)
+                -> Result<Vec<Vec<f64>>> {
+        let th: Vec<f32> = inputs[0].iter().map(|&v| v as f32).collect();
+        if th.len() != 7 {
+            bail!("qoi input must have 7 parameters");
+        }
+        let out = self.engine.execute("qoi_integral", &[th])?;
+        Ok(vec![
+            vec![out[0][0] as f64],
+            out[1].iter().map(|&v| v as f64).collect(),
+        ])
+    }
+}

@@ -1,0 +1,325 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! The interchange format is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax >= 0.5 emits protos with 64-bit ids
+//! the pinned xla_extension rejects; the text parser reassigns them.
+//!
+//! One [`Engine`] per process wraps the PJRT CPU client plus a cache of
+//! compiled executables keyed by entry name; [`Engine::execute`] is the
+//! entire request-path compute surface — Python never runs at serve time.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::{self, Value};
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: HashMap<String, EntryMeta>,
+    pub gs2: Gs2Meta,
+    pub eigen: EigenMeta,
+    pub params_lo: Vec<f64>,
+    pub params_hi: Vec<f64>,
+    pub param_names: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct EntryMeta {
+    pub file: String,
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Gs2Meta {
+    pub ngrid: usize,
+    pub chunk_iters: usize,
+    pub theta_max: f64,
+    pub residual_tol: f64,
+    pub max_chunks: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct EigenMeta {
+    pub n_small: usize,
+    pub n_large: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!("reading {}/manifest.json — run `make artifacts`",
+                        dir.display())
+            })?;
+        let v = json::parse(&text)?;
+        let mut entries = HashMap::new();
+        for (name, e) in v
+            .get("entries")
+            .and_then(|x| x.as_obj())
+            .ok_or_else(|| anyhow!("manifest: missing entries"))?
+        {
+            let file = e
+                .get("file")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("manifest: entry {name} missing file"))?
+                .to_string();
+            let input_shapes = e
+                .get("inputs")
+                .and_then(|x| x.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|i| {
+                            i.get("shape").and_then(|s| s.as_arr()).map(|dims| {
+                                dims.iter()
+                                    .filter_map(|d| d.as_usize())
+                                    .collect::<Vec<_>>()
+                            })
+                        })
+                        .collect::<Vec<_>>()
+                })
+                .unwrap_or_default();
+            entries.insert(name.clone(), EntryMeta { file, input_shapes });
+        }
+        let g = v.get("gs2").ok_or_else(|| anyhow!("manifest: gs2"))?;
+        let gs2 = Gs2Meta {
+            ngrid: g.get("ngrid").and_then(|x| x.as_usize()).unwrap_or(256),
+            chunk_iters: g.get("chunk_iters").and_then(|x| x.as_usize())
+                .unwrap_or(64),
+            theta_max: g.get("theta_max").and_then(|x| x.as_f64())
+                .unwrap_or(4.0 * std::f64::consts::PI),
+            residual_tol: g.get("residual_tol").and_then(|x| x.as_f64())
+                .unwrap_or(1e-4),
+            max_chunks: g.get("max_chunks").and_then(|x| x.as_usize())
+                .unwrap_or(400),
+        };
+        let e = v.get("eigen").ok_or_else(|| anyhow!("manifest: eigen"))?;
+        let eigen = EigenMeta {
+            n_small: e.get("n_small").and_then(|x| x.as_usize()).unwrap_or(100),
+            n_large: e.get("n_large").and_then(|x| x.as_usize()).unwrap_or(256),
+        };
+        let p = v.get("params").ok_or_else(|| anyhow!("manifest: params"))?;
+        let params_lo = p.get("lo").and_then(|x| x.as_f64_vec())
+            .ok_or_else(|| anyhow!("manifest: params.lo"))?;
+        let params_hi = p.get("hi").and_then(|x| x.as_f64_vec())
+            .ok_or_else(|| anyhow!("manifest: params.hi"))?;
+        let param_names = p
+            .get("names")
+            .and_then(|x| x.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|s| s.as_str().map(String::from))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+            gs2,
+            eigen,
+            params_lo,
+            params_hi,
+            param_names,
+        })
+    }
+
+    /// Default artifact location: `$UQSCHED_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("UQSCHED_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    input_shapes: Vec<Vec<usize>>,
+}
+
+/// The PJRT execution engine.
+///
+/// Executables compile lazily on first use and live for the process
+/// lifetime.  The `xla` wrapper types hold raw pointers; the PJRT CPU
+/// client is thread-safe at the C API level, so the engine is marked
+/// Send+Sync with compile-time mutation gated behind the cache mutex.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, &'static Compiled>>,
+    /// Executions performed (metrics).
+    pub executions: std::sync::atomic::AtomicU64,
+}
+
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create an engine over an artifact directory.
+    pub fn new(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            executions: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Engine over the default artifact dir.
+    pub fn from_default_dir() -> Result<Engine> {
+        Engine::new(&Manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn entry_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    fn compiled(&self, name: &str) -> Result<&'static Compiled> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(c) = cache.get(name) {
+            return Ok(c);
+        }
+        let meta = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact entry '{name}'"))?;
+        let path = self.manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        // Executables live for the process lifetime; leaking gives a
+        // stable borrow without self-referential structs.
+        let leaked: &'static Compiled = Box::leak(Box::new(Compiled {
+            exe,
+            input_shapes: meta.input_shapes.clone(),
+        }));
+        cache.insert(name.to_string(), leaked);
+        Ok(leaked)
+    }
+
+    /// Pre-compile entries (server start pays the compile, not request 1).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an entry with flat f32 inputs (shapes from the manifest).
+    /// Returns the flattened outputs in declaration order.
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let c = self.compiled(name)?;
+        if inputs.len() != c.input_shapes.len() {
+            bail!(
+                "entry '{name}' wants {} inputs, got {}",
+                c.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().zip(&c.input_shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                bail!(
+                    "entry '{name}' input {i}: {} values for shape {shape:?}",
+                    data.len()
+                );
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            let v = p
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output {i} of {name}: {e:?}"))?;
+            out.push(v);
+        }
+        self.executions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(out)
+    }
+}
+
+/// Golden-vector check: compare engine outputs against
+/// `artifacts/testvec.json` for one entry.  Returns max relative |err|.
+pub fn check_testvec(engine: &Engine, name: &str) -> Result<f64> {
+    let path = engine.manifest().dir.join("testvec.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let v = json::parse(&text)?;
+    let tv = v
+        .get(name)
+        .ok_or_else(|| anyhow!("testvec: no entry {name}"))?;
+    let inputs: Vec<Vec<f32>> = tv
+        .get("inputs")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow!("testvec inputs"))?
+        .iter()
+        .map(|a| {
+            a.as_f64_vec()
+                .map(|xs| xs.iter().map(|&f| f as f32).collect())
+                .ok_or_else(|| anyhow!("testvec input row"))
+        })
+        .collect::<Result<_>>()?;
+    let expected: Vec<Vec<f64>> = tv
+        .get("outputs")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow!("testvec outputs"))?
+        .iter()
+        .map(|a| a.as_f64_vec().ok_or_else(|| anyhow!("testvec output row")))
+        .collect::<Result<_>>()?;
+    let got = engine.execute(name, &inputs)?;
+    if got.len() != expected.len() {
+        bail!("{name}: {} outputs, expected {}", got.len(), expected.len());
+    }
+    let mut max_err = 0f64;
+    for (g, e) in got.iter().zip(&expected) {
+        if g.len() != e.len() {
+            bail!("{name}: output length {} vs {}", g.len(), e.len());
+        }
+        for (a, b) in g.iter().zip(e) {
+            let scale = 1.0 + b.abs();
+            max_err = max_err.max(((*a as f64) - b).abs() / scale);
+        }
+    }
+    Ok(max_err)
+}
+
+/// Helper used across models: a `Value` config lookup with default.
+pub fn config_f64(config: &Value, key: &str, default: f64) -> f64 {
+    config.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+}

@@ -1,0 +1,589 @@
+//! The slurmlite scheduling state machine.
+//!
+//! Pure logic: every method takes the current time `t` and returns
+//! actions for the driver (DES or real-time daemon) to interpret.  The
+//! driver owns workload durations — slurmlite only learns a job is done
+//! when the driver calls [`SlurmCore::on_finish`].
+
+use std::collections::HashMap;
+
+use crate::cluster::{ClusterSpec, Inventory, JobRequest, OverheadModel};
+use crate::clock::Micros;
+use crate::metrics::JobRecord;
+use crate::util::Rng;
+
+pub type JobId = u64;
+
+/// User id 0 is the experiment user; background load uses user 1.
+pub const USER_EXPERIMENT: u32 = 0;
+pub const USER_BACKGROUND: u32 = 1;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum JobState {
+    /// Submitted, not yet eligible (sbatch RPC in flight).
+    Submitting,
+    /// In the pending queue.
+    Pending,
+    /// Allocated; prolog running on the node.
+    Starting,
+    /// Running the user workload.
+    Running,
+    /// Finished (kept for record queries).
+    Done,
+    Cancelled,
+}
+
+/// What the driver must do in response to a core transition.
+#[derive(Clone, Debug)]
+pub enum Action {
+    /// Re-invoke the core at this absolute time (timer).
+    Timer(Micros, Timer),
+    /// The job finished its prolog and is now running the workload: the
+    /// driver starts the real workload (live) or schedules `on_finish`
+    /// after the sampled duration (sim).  `contention` is the CPU-time
+    /// inflation factor from co-located jobs.
+    Launched { job: JobId, node: usize, contention: f64 },
+    /// Job hit its time limit; driver must stop the workload.
+    TimedOut { job: JobId },
+    /// Terminal record for a completed/cancelled job.
+    Completed { job: JobId, record: JobRecord },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Timer {
+    /// Scheduler pass.
+    Cycle,
+    /// Submission RPC done; job becomes pending.
+    Eligible(JobId),
+    /// Prolog done; job starts running.
+    Start(JobId),
+    /// Time-limit enforcement.
+    Limit(JobId),
+    /// Background-load arrival.
+    BgArrival,
+    /// Background job completion.
+    BgFinish(JobId),
+}
+
+#[derive(Clone, Debug)]
+struct Job {
+    id: JobId,
+    user: u32,
+    tag: u64,
+    req: JobRequest,
+    state: JobState,
+    submit_t: Micros,
+    eligible_t: Micros,
+    alloc_t: Micros,
+    run_t: Micros,
+    node: usize,
+    contention: f64,
+    /// Background jobs carry their own duration (self-finishing).
+    bg_duration: Option<Micros>,
+}
+
+/// The scheduler core.
+pub struct SlurmCore {
+    inv: Inventory,
+    model: OverheadModel,
+    jobs: HashMap<JobId, Job>,
+    pending: Vec<JobId>,
+    next_id: JobId,
+    user_submits: HashMap<u32, u32>,
+    rng: Rng,
+    bg_started: bool,
+    /// Statistics: scheduler passes run.
+    pub cycles: u64,
+}
+
+impl SlurmCore {
+    pub fn new(spec: ClusterSpec, model: OverheadModel, seed: u64) -> Self {
+        SlurmCore {
+            inv: Inventory::new(spec),
+            model,
+            jobs: HashMap::new(),
+            pending: Vec::new(),
+            next_id: 1,
+            user_submits: HashMap::new(),
+            rng: Rng::new(seed),
+            bg_started: false,
+            cycles: 0,
+        }
+    }
+
+    pub fn model(&self) -> &OverheadModel {
+        &self.model
+    }
+
+    /// Kick off periodic timers (first cycle + background load).  Call
+    /// once after construction.
+    pub fn bootstrap(&mut self, t: Micros) -> Vec<Action> {
+        let mut acts = vec![Action::Timer(t + self.model.sched_cycle, Timer::Cycle)];
+        if self.model.bg_interarrival != Micros::MAX && !self.bg_started {
+            self.bg_started = true;
+            let dt = self.rng.exponential(self.model.bg_interarrival as f64);
+            acts.push(Action::Timer(t + dt as Micros, Timer::BgArrival));
+        }
+        acts
+    }
+
+    /// sbatch: submit a job.  Returns the id plus actions.
+    pub fn submit(
+        &mut self,
+        t: Micros,
+        user: u32,
+        tag: u64,
+        req: JobRequest,
+    ) -> (JobId, Vec<Action>) {
+        let id = self.next_id;
+        self.next_id += 1;
+        *self.user_submits.entry(user).or_insert(0) += 1;
+        // Backfill proxy: long requested walltimes queue longer (the
+        // scheduler cannot slot them into reservation gaps).
+        let bf = (self.model.backfill_delay_factor
+            * req.time_limit.min(self.model.backfill_cap) as f64
+            * self.rng.range(0.5, 1.5)) as Micros;
+        let eligible_t = t + self.model.submit_latency + bf;
+        self.jobs.insert(
+            id,
+            Job {
+                id,
+                user,
+                tag,
+                req,
+                state: JobState::Submitting,
+                submit_t: t,
+                eligible_t,
+                alloc_t: 0,
+                run_t: 0,
+                node: usize::MAX,
+                contention: 1.0,
+                bg_duration: None,
+            },
+        );
+        (id, vec![Action::Timer(eligible_t, Timer::Eligible(id))])
+    }
+
+    /// scancel.
+    pub fn cancel(&mut self, t: Micros, id: JobId) -> Vec<Action> {
+        let Some(job) = self.jobs.get_mut(&id) else { return vec![] };
+        match job.state {
+            JobState::Pending | JobState::Submitting => {
+                job.state = JobState::Cancelled;
+                self.pending.retain(|&p| p != id);
+                let job = &self.jobs[&id];
+                vec![Action::Completed {
+                    job: id,
+                    record: JobRecord {
+                        tag: job.tag,
+                        submit: job.submit_t,
+                        start: t,
+                        end: t,
+                        cpu: 0,
+                        truncated: true,
+                    },
+                }]
+            }
+            JobState::Starting | JobState::Running => self.finish_inner(t, id, true),
+            _ => vec![],
+        }
+    }
+
+    /// Driver signals the workload completed.
+    pub fn on_finish(&mut self, t: Micros, id: JobId) -> Vec<Action> {
+        self.finish_inner(t, id, false)
+    }
+
+    /// Timer dispatch.
+    pub fn on_timer(&mut self, t: Micros, timer: Timer) -> Vec<Action> {
+        match timer {
+            Timer::Cycle => self.on_cycle(t),
+            Timer::Eligible(id) => {
+                if let Some(j) = self.jobs.get_mut(&id) {
+                    if j.state == JobState::Submitting {
+                        j.state = JobState::Pending;
+                        self.pending.push(id);
+                    }
+                }
+                vec![]
+            }
+            Timer::Start(id) => self.on_prolog_done(t, id),
+            Timer::Limit(id) => {
+                let timed_out = matches!(
+                    self.jobs.get(&id).map(|j| j.state),
+                    Some(JobState::Running) | Some(JobState::Starting)
+                );
+                if timed_out {
+                    let mut acts = vec![Action::TimedOut { job: id }];
+                    acts.extend(self.finish_inner(t, id, true));
+                    acts
+                } else {
+                    vec![]
+                }
+            }
+            Timer::BgArrival => self.on_bg_arrival(t),
+            Timer::BgFinish(id) => self.on_finish(t, id),
+        }
+    }
+
+    /// One scheduler pass: place pending jobs in priority order.
+    fn on_cycle(&mut self, t: Micros) -> Vec<Action> {
+        self.cycles += 1;
+        let mut acts = Vec::new();
+
+        // Priority: older eligible time first, with per-user quota decay
+        // (a user past the quota ages `quota_penalty` slower per excess
+        // submission — the Hamilton8 behaviour in section IV).
+        let mut order: Vec<JobId> = self.pending.clone();
+        let prio = |core: &Self, id: JobId| -> i64 {
+            let j = &core.jobs[&id];
+            let submits = *core.user_submits.get(&j.user).unwrap_or(&0);
+            let excess = submits.saturating_sub(core.model.user_quota) as i64;
+            // Lower is better (effective queue entry time).
+            j.eligible_t as i64
+                + excess * core.model.quota_penalty as i64
+                    * if j.user == USER_BACKGROUND { 0 } else { 1 }
+        };
+        order.sort_by_key(|&id| prio(self, id));
+
+        // First-fit with implicit backfill: any job that fits may start
+        // this cycle even if an earlier job does not fit.
+        for id in order {
+            let job = &self.jobs[&id];
+            if job.state != JobState::Pending {
+                continue;
+            }
+            if let Some(node) = self.inv.find_fit(&job.req) {
+                self.inv.allocate(node, &job.req);
+                let job = self.jobs.get_mut(&id).unwrap();
+                job.state = JobState::Starting;
+                job.alloc_t = t;
+                job.node = node;
+                self.pending.retain(|&p| p != id);
+                acts.push(Action::Timer(t + self.model.prolog, Timer::Start(id)));
+                acts.push(Action::Timer(
+                    t + self.model.prolog + job.req.time_limit,
+                    Timer::Limit(id),
+                ));
+            }
+        }
+
+        acts.push(Action::Timer(t + self.model.sched_cycle, Timer::Cycle));
+        acts
+    }
+
+    fn on_prolog_done(&mut self, t: Micros, id: JobId) -> Vec<Action> {
+        let Some(job) = self.jobs.get_mut(&id) else { return vec![] };
+        if job.state != JobState::Starting {
+            return vec![];
+        }
+        job.state = JobState::Running;
+        job.run_t = t;
+        let node = job.node;
+        let bg = job.bg_duration;
+        let neighbors = self.inv.neighbors(node);
+        let contention =
+            1.0 + self.model.contention_per_neighbor * neighbors as f64;
+        self.jobs.get_mut(&id).unwrap().contention = contention;
+        let mut acts = vec![Action::Launched { job: id, node, contention }];
+        if let Some(dur) = bg {
+            // Background jobs finish themselves relative to launch.
+            acts.push(Action::Timer(t + dur, Timer::BgFinish(id)));
+        }
+        acts
+    }
+
+    fn finish_inner(&mut self, t: Micros, id: JobId, truncated: bool) -> Vec<Action> {
+        let Some(job) = self.jobs.get_mut(&id) else { return vec![] };
+        if !matches!(job.state, JobState::Running | JobState::Starting) {
+            return vec![];
+        }
+        job.state = if truncated { JobState::Cancelled } else { JobState::Done };
+        let node = job.node;
+        let req = job.req.clone();
+        // CPU time starts when the job starts on the node (paper section
+        // IV.A: "the timer begins when the job starts") — it therefore
+        // *includes* the prolog/environment setup, which is exactly why
+        // the paper sees higher SLURM CPU time on long jobs.
+        let cpu = t.saturating_sub(job.alloc_t);
+        let record = JobRecord {
+            tag: job.tag,
+            submit: job.submit_t,
+            start: job.alloc_t,
+            end: t,
+            cpu,
+            truncated,
+        };
+        self.inv.release(node, &req);
+        vec![Action::Completed { job: id, record }]
+    }
+
+    fn on_bg_arrival(&mut self, t: Micros) -> Vec<Action> {
+        // Keep the background queue bounded (production schedulers cap
+        // per-user queued jobs); beyond the cap, arrivals balk.
+        if self.pending.len() > 512 {
+            let dt = self.rng.exponential(self.model.bg_interarrival as f64);
+            return vec![Action::Timer(t + dt as Micros, Timer::BgArrival)];
+        }
+        // Sample a background job and submit it as user 1.
+        let (lo, hi) = self.model.bg_cores;
+        let cores = lo + (self.rng.below((hi - lo + 1) as u64) as u32);
+        let dur = self.rng.exponential(self.model.bg_duration as f64) as Micros;
+        let req = JobRequest::new(cores, (cores / 2).max(4), dur * 4 + 1);
+        let (id, mut acts) = self.submit(t, USER_BACKGROUND, u64::MAX, req);
+        // Background jobs finish themselves `dur` after launch (see
+        // on_prolog_done).
+        self.jobs.get_mut(&id).unwrap().bg_duration = Some(dur);
+        let dt = self.rng.exponential(self.model.bg_interarrival as f64);
+        acts.push(Action::Timer(t + dt as Micros, Timer::BgArrival));
+        acts
+    }
+
+    // ---- Introspection (squeue-like) ------------------------------------
+
+    pub fn state_of(&self, id: JobId) -> Option<JobState> {
+        self.jobs.get(&id).map(|j| j.state)
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.jobs
+            .values()
+            .filter(|j| matches!(j.state, JobState::Running | JobState::Starting))
+            .count()
+    }
+
+    pub fn used_cores(&self) -> u64 {
+        self.inv.used_cores()
+    }
+
+    pub fn node_of(&self, id: JobId) -> Option<usize> {
+        self.jobs.get(&id).and_then(|j| {
+            (j.node != usize::MAX).then_some(j.node)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::{Des, MS, SEC};
+
+    /// Drive a core to completion in a DES, with fixed workload durations
+    /// per tag, returning completed records.
+    pub fn drive(
+        core: &mut SlurmCore,
+        submissions: Vec<(Micros, JobRequest, Micros)>, // (t, req, duration)
+    ) -> Vec<JobRecord> {
+        #[derive(Debug)]
+        enum Ev {
+            Timer(Timer),
+            Submit(JobRequest, Micros),
+            Finish(JobId),
+        }
+        let mut des: Des<Ev> = Des::new();
+        let mut durations: HashMap<JobId, Micros> = HashMap::new();
+        let mut records = Vec::new();
+        let expected = submissions.len();
+        for a in core.bootstrap(0) {
+            if let Action::Timer(t, tm) = a {
+                des.schedule(t, Ev::Timer(tm));
+            }
+        }
+        for (t, req, dur) in submissions {
+            des.schedule(t, Ev::Submit(req, dur));
+        }
+        let mut guard = 0u64;
+        while let Some((t, ev)) = des.pop() {
+            guard += 1;
+            assert!(guard < 3_000_000, "runaway simulation");
+            let acts = match ev {
+                Ev::Timer(tm) => core.on_timer(t, tm),
+                Ev::Submit(req, dur) => {
+                    let (id, acts) = core.submit(t, USER_EXPERIMENT, dur, req);
+                    durations.insert(id, dur);
+                    acts
+                }
+                Ev::Finish(id) => core.on_finish(t, id),
+            };
+            for a in acts {
+                match a {
+                    Action::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                    Action::Launched { job, contention, .. } => {
+                        if let Some(d) = durations.get(&job) {
+                            let dd = (*d as f64 * contention) as Micros;
+                            des.schedule(t + dd, Ev::Finish(job));
+                        }
+                    }
+                    Action::Completed { record, .. } => {
+                        if record.tag != u64::MAX {
+                            records.push(record);
+                        }
+                    }
+                    Action::TimedOut { .. } => {}
+                }
+            }
+            // Stop once every experiment job has a record (background
+            // load would keep the event stream alive forever).
+            if records.len() >= expected {
+                break;
+            }
+        }
+        records
+    }
+
+    fn quiet_core() -> SlurmCore {
+        SlurmCore::new(ClusterSpec::small(4), OverheadModel::quiet(), 1)
+    }
+
+    #[test]
+    fn single_job_lifecycle() {
+        let mut core = quiet_core();
+        let recs = drive(&mut core,
+                         vec![(0, JobRequest::new(4, 8, 100 * SEC), 5 * SEC)]);
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        let m = OverheadModel::quiet();
+        // start >= submit + submit_latency (one cycle boundary), cpu
+        // includes prolog + workload.
+        assert!(r.start >= r.submit + m.submit_latency);
+        assert!(r.cpu >= m.prolog + 5 * SEC);
+        assert!(r.end > r.start);
+        assert!(!r.truncated);
+    }
+
+    #[test]
+    fn cpu_time_includes_prolog() {
+        let mut core = quiet_core();
+        let recs = drive(&mut core,
+                         vec![(0, JobRequest::new(1, 4, 100 * SEC), 1 * SEC)]);
+        let m = OverheadModel::quiet();
+        assert!(recs[0].cpu >= m.prolog + SEC);
+        assert!(recs[0].cpu < m.prolog + SEC + 100 * MS);
+    }
+
+    #[test]
+    fn overhead_is_submit_plus_queue() {
+        let mut core = quiet_core();
+        let recs = drive(&mut core,
+                         vec![(0, JobRequest::new(1, 4, 100 * SEC), SEC)]);
+        let r = &recs[0];
+        let overhead = (r.end - r.submit) - r.cpu;
+        // On an empty cluster: submit latency + up-to-one cycle.
+        let m = OverheadModel::quiet();
+        assert!(overhead >= m.submit_latency);
+        assert!(overhead <= m.submit_latency + m.sched_cycle + MS);
+    }
+
+    #[test]
+    fn jobs_queue_when_cluster_full() {
+        // 4 nodes x 16 cores; five 16-core jobs: the fifth must wait.
+        let mut core = quiet_core();
+        let subs: Vec<_> = (0..5)
+            .map(|_| (0, JobRequest::new(16, 8, 1000 * SEC), 10 * SEC))
+            .collect();
+        let recs = drive(&mut core, subs);
+        assert_eq!(recs.len(), 5);
+        let mut starts: Vec<_> = recs.iter().map(|r| r.start).collect();
+        starts.sort();
+        // Four start together in the first cycle; the fifth a cycle after
+        // a slot frees.
+        assert!(starts[4] >= starts[3] + 9 * SEC);
+    }
+
+    #[test]
+    fn time_limit_enforced() {
+        let mut core = quiet_core();
+        // 2 s limit, 60 s workload -> truncated near the limit.
+        let recs = drive(&mut core,
+                         vec![(0, JobRequest::new(1, 4, 2 * SEC), 60 * SEC)]);
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].truncated);
+        let m = OverheadModel::quiet();
+        assert!(recs[0].cpu <= m.prolog + 2 * SEC + MS);
+    }
+
+    #[test]
+    fn cancel_pending_job() {
+        let mut core = quiet_core();
+        let (id, _) = core.submit(0, USER_EXPERIMENT, 7,
+                                  JobRequest::new(1, 4, SEC));
+        // Make it pending.
+        core.on_timer(core.model().submit_latency, Timer::Eligible(id));
+        assert_eq!(core.state_of(id), Some(JobState::Pending));
+        let acts = core.cancel(core.model().submit_latency + 1, id);
+        assert_eq!(core.state_of(id), Some(JobState::Cancelled));
+        assert!(matches!(acts[0], Action::Completed { .. }));
+        assert_eq!(core.pending_count(), 0);
+    }
+
+    #[test]
+    fn contention_inflates_neighbors() {
+        // Two 1-core jobs on a 1-node cluster share the node.
+        let mut core = SlurmCore::new(ClusterSpec::small(1),
+                                      OverheadModel::quiet(), 1);
+        let recs = drive(&mut core, vec![
+            (0, JobRequest::new(1, 4, 1000 * SEC), 10 * SEC),
+            (0, JobRequest::new(1, 4, 1000 * SEC), 10 * SEC),
+        ]);
+        assert_eq!(recs.len(), 2);
+        // At least one of them started with a neighbor -> cpu inflated
+        // beyond prolog + 10 s.
+        let m = OverheadModel::quiet();
+        let max_cpu = recs.iter().map(|r| r.cpu).max().unwrap();
+        assert!(max_cpu > m.prolog + 10 * SEC);
+    }
+
+    #[test]
+    fn background_load_delays_queue() {
+        // Heavy background stream on a tiny cluster: our job waits longer
+        // than on a quiet one.
+        let mut busy = OverheadModel::paper();
+        busy.bg_interarrival = 2 * SEC;
+        busy.bg_duration = 600 * SEC;
+        busy.bg_cores = (16, 16);
+        let mut core = SlurmCore::new(ClusterSpec::small(2), busy, 3);
+        // Give background a head start by submitting at t = 60 s.
+        let recs = drive(&mut core,
+                         vec![(60 * SEC, JobRequest::new(16, 8, 3600 * SEC),
+                               SEC)]);
+        let wait_busy = recs[0].start - recs[0].submit;
+
+        let mut core_q = quiet_core();
+        let recs_q = drive(&mut core_q,
+                           vec![(60 * SEC, JobRequest::new(16, 8, 3600 * SEC),
+                                 SEC)]);
+        let wait_quiet = recs_q[0].start - recs_q[0].submit;
+        assert!(wait_busy > wait_quiet, "{wait_busy} vs {wait_quiet}");
+    }
+
+    #[test]
+    fn user_quota_decays_priority() {
+        // Many submissions from the experiment user: later jobs should
+        // still complete, but the core tracks the quota.
+        let mut m = OverheadModel::quiet();
+        m.user_quota = 2;
+        m.quota_penalty = 10 * SEC;
+        let mut core = SlurmCore::new(ClusterSpec::small(4), m, 1);
+        let subs: Vec<_> = (0..6)
+            .map(|i| (i * SEC, JobRequest::new(1, 4, 100 * SEC), SEC))
+            .collect();
+        let recs = drive(&mut core, subs);
+        assert_eq!(recs.len(), 6);
+    }
+
+    #[test]
+    fn no_core_oversubscription_during_runs() {
+        let mut core = quiet_core();
+        let subs: Vec<_> = (0..20)
+            .map(|i| (i * 100 * MS, JobRequest::new(8, 8, 1000 * SEC),
+                      3 * SEC))
+            .collect();
+        let recs = drive(&mut core, subs);
+        assert_eq!(recs.len(), 20);
+        assert_eq!(core.used_cores(), 0); // everything released
+    }
+}

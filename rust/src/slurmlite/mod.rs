@@ -1,0 +1,16 @@
+//! slurmlite — a from-scratch SLURM-like batch scheduler.
+//!
+//! This is the substrate substitution for the paper's native scheduler
+//! (DESIGN.md section 2): FIFO queue with priority aging and per-user
+//! quota decay, first-fit node placement, per-job submission latency,
+//! prolog/epilog costs, node-sharing contention, and a stochastic
+//! background-load stream standing in for Hamilton8's ~700 competing
+//! jobs.  The core is a pure state machine driven by explicit times, so
+//! the same logic runs under the discrete-event engine (benches) and a
+//! real-time daemon (live examples).
+
+pub mod core;
+pub mod daemon;
+
+pub use core::{Action, JobId, JobState, SlurmCore};
+pub use daemon::SlurmDaemon;

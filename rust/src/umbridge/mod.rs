@@ -1,0 +1,344 @@
+//! The UM-Bridge protocol (Seelinger et al., JOSS 2023) in Rust.
+//!
+//! UM-Bridge treats UQ algorithm and numerical model as separate
+//! applications linked by an HTTP+JSON protocol.  This module implements
+//! both sides:
+//!
+//! * [`Model`] + [`serve_models`] — the model-server side (the paper's
+//!   Python `umbridge.serve_models` equivalent);
+//! * [`HttpModel`] — the client side (`umbridge.HTTPModel`).
+//!
+//! Endpoints (protocol 1.0): `GET /Info`, `POST /InputSizes`,
+//! `POST /OutputSizes`, `POST /ModelInfo`, `POST /Evaluate`.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::httpd::{Handler, HttpClient, Request, Response, Server};
+use crate::json::{self, Value};
+
+/// Protocol version advertised on /Info.
+pub const PROTOCOL_VERSION: f64 = 1.0;
+
+/// A numerical model exposed over UM-Bridge.
+pub trait Model: Send + Sync {
+    fn name(&self) -> &str;
+    /// Sizes of each input vector.
+    fn input_sizes(&self) -> Vec<usize>;
+    /// Sizes of each output vector.
+    fn output_sizes(&self) -> Vec<usize>;
+    /// Evaluate the map F(theta); `config` carries model-specific options.
+    fn evaluate(&self, inputs: &[Vec<f64>], config: &Value) -> Result<Vec<Vec<f64>>>;
+    /// Capability flags (ModelInfo).
+    fn supports_gradient(&self) -> bool {
+        false
+    }
+}
+
+/// Serve models over HTTP; port 0 picks a free port.
+pub fn serve_models(models: Vec<Arc<dyn Model>>, port: u16) -> Result<Server> {
+    let models = Arc::new(models);
+    let handler: Handler = Arc::new(move |req: &Request| {
+        match route(&models, req) {
+            Ok(resp) => resp,
+            Err(e) => Response::error(&format!("{e:#}")),
+        }
+    });
+    Server::serve(port, handler)
+}
+
+fn find<'a>(models: &'a [Arc<dyn Model>], name: &str) -> Result<&'a Arc<dyn Model>> {
+    models
+        .iter()
+        .find(|m| m.name() == name)
+        .ok_or_else(|| anyhow!("unknown model '{name}'"))
+}
+
+fn parse_body(req: &Request) -> Result<Value> {
+    Ok(json::parse(req.body_str()?)?)
+}
+
+fn route(models: &[Arc<dyn Model>], req: &Request) -> Result<Response> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/Info") => {
+            let names: Vec<Value> =
+                models.iter().map(|m| Value::str(m.name())).collect();
+            Ok(Response::ok_json(json::write(&Value::obj(vec![
+                ("protocolVersion", Value::num(PROTOCOL_VERSION)),
+                ("models", Value::arr(names)),
+            ]))))
+        }
+        ("POST", "/InputSizes") => {
+            let body = parse_body(req)?;
+            let m = find(models, model_name(&body)?)?;
+            let sizes: Vec<Value> = m
+                .input_sizes()
+                .iter()
+                .map(|&s| Value::num(s as f64))
+                .collect();
+            Ok(Response::ok_json(json::write(&Value::obj(vec![(
+                "inputSizes",
+                Value::arr(sizes),
+            )]))))
+        }
+        ("POST", "/OutputSizes") => {
+            let body = parse_body(req)?;
+            let m = find(models, model_name(&body)?)?;
+            let sizes: Vec<Value> = m
+                .output_sizes()
+                .iter()
+                .map(|&s| Value::num(s as f64))
+                .collect();
+            Ok(Response::ok_json(json::write(&Value::obj(vec![(
+                "outputSizes",
+                Value::arr(sizes),
+            )]))))
+        }
+        ("POST", "/ModelInfo") => {
+            let body = parse_body(req)?;
+            let m = find(models, model_name(&body)?)?;
+            Ok(Response::ok_json(json::write(&Value::obj(vec![(
+                "support",
+                Value::obj(vec![
+                    ("Evaluate", Value::Bool(true)),
+                    ("Gradient", Value::Bool(m.supports_gradient())),
+                    ("ApplyJacobian", Value::Bool(false)),
+                    ("ApplyHessian", Value::Bool(false)),
+                ]),
+            )]))))
+        }
+        ("POST", "/Evaluate") => {
+            let body = parse_body(req)?;
+            let m = find(models, model_name(&body)?)?;
+            let input = body
+                .get("input")
+                .and_then(|v| v.as_f64_vec2())
+                .ok_or_else(|| anyhow!("missing/invalid 'input'"))?;
+            // Validate sizes against the contract.
+            let want = m.input_sizes();
+            if input.len() != want.len()
+                || input.iter().zip(&want).any(|(v, &w)| v.len() != w)
+            {
+                bail!(
+                    "input sizes {:?} do not match model contract {:?}",
+                    input.iter().map(|v| v.len()).collect::<Vec<_>>(),
+                    want
+                );
+            }
+            let default_cfg = Value::Obj(Default::default());
+            let config = body.get("config").unwrap_or(&default_cfg);
+            let output = m.evaluate(&input, config)?;
+            Ok(Response::ok_json(json::write(&Value::obj(vec![(
+                "output",
+                Value::from_f64s2(&output),
+            )]))))
+        }
+        _ => Ok(Response::not_found()),
+    }
+}
+
+fn model_name(body: &Value) -> Result<&str> {
+    body.get("name")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("missing 'name'"))
+}
+
+/// Client-side handle to a remote UM-Bridge model.
+pub struct HttpModel {
+    client: HttpClient,
+    pub model_name: String,
+}
+
+impl HttpModel {
+    pub fn connect(url: &str, model_name: &str) -> Result<HttpModel> {
+        Ok(HttpModel {
+            client: HttpClient::connect(url)?,
+            model_name: model_name.to_string(),
+        })
+    }
+
+    /// GET /Info: (protocolVersion, model names).
+    pub fn info(&mut self) -> Result<(f64, Vec<String>)> {
+        let resp = self.client.request(&Request::get("/Info"))?;
+        let v = json::parse(resp.body_str()?)?;
+        let ver = v
+            .get("protocolVersion")
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| anyhow!("bad /Info"))?;
+        let names = v
+            .get("models")
+            .and_then(|x| x.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|s| s.as_str().map(String::from))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok((ver, names))
+    }
+
+    fn named_post(&mut self, path: &str) -> Result<Value> {
+        let body = json::write(&Value::obj(vec![(
+            "name",
+            Value::str(&self.model_name),
+        )]));
+        let resp = self.client.request(&Request::post(path, &body))?;
+        if resp.status != 200 {
+            bail!("{path} -> {}: {}", resp.status,
+                  resp.body_str().unwrap_or(""));
+        }
+        Ok(json::parse(resp.body_str()?)?)
+    }
+
+    pub fn input_sizes(&mut self) -> Result<Vec<usize>> {
+        let v = self.named_post("/InputSizes")?;
+        v.get("inputSizes")
+            .and_then(|x| x.as_f64_vec())
+            .map(|xs| xs.iter().map(|&f| f as usize).collect())
+            .ok_or_else(|| anyhow!("bad /InputSizes"))
+    }
+
+    pub fn output_sizes(&mut self) -> Result<Vec<usize>> {
+        let v = self.named_post("/OutputSizes")?;
+        v.get("outputSizes")
+            .and_then(|x| x.as_f64_vec())
+            .map(|xs| xs.iter().map(|&f| f as usize).collect())
+            .ok_or_else(|| anyhow!("bad /OutputSizes"))
+    }
+
+    pub fn model_info(&mut self) -> Result<Value> {
+        self.named_post("/ModelInfo")
+    }
+
+    pub fn evaluate(
+        &mut self,
+        inputs: &[Vec<f64>],
+        config: &Value,
+    ) -> Result<Vec<Vec<f64>>> {
+        let body = json::write(&Value::obj(vec![
+            ("name", Value::str(&self.model_name)),
+            ("input", Value::from_f64s2(inputs)),
+            ("config", config.clone()),
+        ]));
+        let resp = self.client.request(&Request::post("/Evaluate", &body))?;
+        if resp.status != 200 {
+            bail!("/Evaluate -> {}: {}", resp.status,
+                  resp.body_str().unwrap_or(""));
+        }
+        let v = json::parse(resp.body_str()?)?;
+        v.get("output")
+            .and_then(|x| x.as_f64_vec2())
+            .ok_or_else(|| anyhow!("bad /Evaluate response"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// F(x) = (sum(x), 2*x) — two outputs exercising both directions.
+    struct TestModel;
+
+    impl Model for TestModel {
+        fn name(&self) -> &str {
+            "testmodel"
+        }
+        fn input_sizes(&self) -> Vec<usize> {
+            vec![3]
+        }
+        fn output_sizes(&self) -> Vec<usize> {
+            vec![1, 3]
+        }
+        fn evaluate(&self, inputs: &[Vec<f64>], _config: &Value)
+                    -> Result<Vec<Vec<f64>>> {
+            let x = &inputs[0];
+            Ok(vec![vec![x.iter().sum()],
+                    x.iter().map(|v| v * 2.0).collect()])
+        }
+    }
+
+    fn serve() -> Server {
+        serve_models(vec![Arc::new(TestModel)], 0).unwrap()
+    }
+
+    #[test]
+    fn info_lists_models() {
+        let srv = serve();
+        let mut m = HttpModel::connect(&srv.url(), "testmodel").unwrap();
+        let (ver, names) = m.info().unwrap();
+        assert_eq!(ver, PROTOCOL_VERSION);
+        assert_eq!(names, vec!["testmodel"]);
+    }
+
+    #[test]
+    fn sizes_roundtrip() {
+        let srv = serve();
+        let mut m = HttpModel::connect(&srv.url(), "testmodel").unwrap();
+        assert_eq!(m.input_sizes().unwrap(), vec![3]);
+        assert_eq!(m.output_sizes().unwrap(), vec![1, 3]);
+    }
+
+    #[test]
+    fn evaluate_roundtrip() {
+        let srv = serve();
+        let mut m = HttpModel::connect(&srv.url(), "testmodel").unwrap();
+        let out = m
+            .evaluate(&[vec![1.0, 2.0, 3.0]], &Value::Obj(Default::default()))
+            .unwrap();
+        assert_eq!(out, vec![vec![6.0], vec![2.0, 4.0, 6.0]]);
+    }
+
+    #[test]
+    fn wrong_input_size_rejected() {
+        let srv = serve();
+        let mut m = HttpModel::connect(&srv.url(), "testmodel").unwrap();
+        let err = m
+            .evaluate(&[vec![1.0]], &Value::Obj(Default::default()))
+            .unwrap_err();
+        assert!(format!("{err}").contains("500"));
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let srv = serve();
+        let mut m = HttpModel::connect(&srv.url(), "nope").unwrap();
+        assert!(m.input_sizes().is_err());
+    }
+
+    #[test]
+    fn model_info_flags() {
+        let srv = serve();
+        let mut m = HttpModel::connect(&srv.url(), "testmodel").unwrap();
+        let v = m.model_info().unwrap();
+        assert_eq!(v.get("support").unwrap().get("Evaluate").unwrap(),
+                   &Value::Bool(true));
+        assert_eq!(v.get("support").unwrap().get("Gradient").unwrap(),
+                   &Value::Bool(false));
+    }
+
+    #[test]
+    fn concurrent_evaluations() {
+        let srv = serve();
+        let url = srv.url();
+        let threads: Vec<_> = (0..6)
+            .map(|t| {
+                let url = url.clone();
+                std::thread::spawn(move || {
+                    let mut m = HttpModel::connect(&url, "testmodel").unwrap();
+                    for i in 0..20 {
+                        let x = vec![t as f64, i as f64, 1.0];
+                        let out = m
+                            .evaluate(&[x.clone()],
+                                      &Value::Obj(Default::default()))
+                            .unwrap();
+                        assert_eq!(out[0][0], x.iter().sum::<f64>());
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+}

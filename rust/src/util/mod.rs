@@ -1,0 +1,9 @@
+//! Small in-crate substrates: seeded RNG and a property-test harness.
+//!
+//! The offline build environment provides no `rand`/`proptest` crates, so
+//! the deterministic pieces the schedulers and tests rely on live here.
+
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng;

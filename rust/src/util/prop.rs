@@ -1,0 +1,54 @@
+//! Minimal property-test harness (no proptest crate in the offline env).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` seeded RNG streams and
+//! reports the failing seed on panic, so failures are reproducible with
+//! `check_seed`.  Used by the scheduler-invariant property tests.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` deterministic seeds; panic with the failing seed.
+pub fn check<F: Fn(&mut Rng)>(name: &str, cases: u64, f: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000_0000 + case;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut rng),
+        ));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with util::prop::check_seed(\"{name}\", {seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn check_seed<F: Fn(&mut Rng)>(_name: &str, seed: u64, f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("uniform-bounded", 32, |rng| {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failing_seed() {
+        check("always-fails", 4, |_rng| panic!("boom"));
+    }
+}

@@ -1,0 +1,171 @@
+//! SplitMix64 RNG — deterministic, seedable, dependency-free.
+//!
+//! The same generator (same constants, same 24-bit float mapping) is
+//! implemented in `python/compile/eigen.py::random_symmetric`, so Rust and
+//! Python produce bit-identical benchmark matrices from the same seed —
+//! the paper's "same random seed for repeatability" requirement
+//! (section IV.B) enforced across the language boundary.
+
+/// SplitMix64 stream.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Next raw 64-bit draw.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1) using the top 24 bits (matches the Python side).
+    pub fn uniform24(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) / ((1u64 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution (general use).
+    pub fn uniform(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) / ((1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.uniform() * (hi - lo)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Modulo bias is irrelevant for our n << 2^64 uses.
+        self.next_u64() % n.max(1)
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-300);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with the given mean.
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        -mean * self.uniform().max(1e-300).ln()
+    }
+
+    /// Log-normal with the given location/scale of the underlying normal.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent child stream (for per-entity generators).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0xA076_1D64_78BD_642F)
+    }
+
+    /// The paper-matching symmetric benchmark matrix (row-major, n*n),
+    /// bit-identical to `python/compile/eigen.py::random_symmetric`.
+    pub fn symmetric_matrix(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        let mut a = vec![0f32; n * n];
+        for v in a.iter_mut() {
+            *v = r.uniform24() * 2.0 - 1.0;
+        }
+        let mut s = vec![0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                s[i * n + j] = 0.5 * (a[i * n + j] + a[j * n + i]);
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn matches_python_pin() {
+        // Pinned in python/tests/test_eigen.py::test_known_first_value.
+        let m = Rng::symmetric_matrix(42, 2);
+        assert!((m[0] - 0.48312974).abs() < 1e-6);
+    }
+
+    #[test]
+    fn symmetric_matrix_is_symmetric() {
+        let n = 16;
+        let m = Rng::symmetric_matrix(5, n);
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(m[i * n + j], m[j * n + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn normal_has_reasonable_moments() {
+        let mut r = Rng::new(11);
+        let xs: Vec<f64> = (0..20000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / xs.len() as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(13);
+        let xs: Vec<f64> = (0..20000).map(|_| r.exponential(3.0)).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 3.0).abs() < 0.15, "mean {mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(17);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,257 @@
+//! Workloads: the paper's four benchmark applications, their Table-III
+//! resource requests, the seeded LHS input sampler, and the calibrated
+//! runtime models that drive the sim plane.
+
+use crate::clock::{Micros, MIN, SEC};
+use crate::cluster::JobRequest;
+use crate::util::Rng;
+
+/// The four benchmark applications (paper section IV.B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum App {
+    Eigen100,
+    Eigen5000,
+    Gs2,
+    Gp,
+}
+
+impl App {
+    pub fn all() -> [App; 4] {
+        [App::Eigen100, App::Eigen5000, App::Gs2, App::Gp]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            App::Eigen100 => "eigen-100",
+            App::Eigen5000 => "eigen-5000",
+            App::Gs2 => "gs2",
+            App::Gp => "GP",
+        }
+    }
+
+    /// Wire name of the serving model (live plane).
+    pub fn model_name(&self) -> &'static str {
+        match self {
+            App::Eigen100 => crate::models::EIGEN_SMALL_NAME,
+            App::Eigen5000 => crate::models::EIGEN_LARGE_NAME,
+            App::Gs2 => crate::models::GS2_NAME,
+            App::Gp => crate::models::GP_NAME,
+        }
+    }
+}
+
+/// One row of the paper's Table III (all values paper-scale).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub app: App,
+    /// SLURM job time limit (naive path).
+    pub slurm_time: Micros,
+    /// HQ allocation time limit.
+    pub hq_alloc_time: Micros,
+    /// HQ job time request (scheduling hint).
+    pub hq_time_request: Micros,
+    /// HQ job time limit.
+    pub hq_time_limit: Micros,
+    pub cpus: u32,
+    pub ram_gb: u32,
+    /// Paper's "expected time to solution" (min..max).
+    pub expected: (Micros, Micros),
+}
+
+/// Table III verbatim.
+pub fn scenario(app: App) -> Scenario {
+    match app {
+        App::Eigen100 => Scenario {
+            app,
+            slurm_time: 1 * MIN,
+            hq_alloc_time: 10 * MIN,
+            hq_time_request: 1 * MIN,
+            hq_time_limit: 5 * MIN,
+            cpus: 1,
+            ram_gb: 4,
+            expected: ((6 * SEC) / 10, (6 * SEC) / 10), // 0.01 min
+        },
+        App::Eigen5000 => Scenario {
+            app,
+            slurm_time: 5 * MIN,
+            hq_alloc_time: 60 * MIN,
+            hq_time_request: 5 * MIN,
+            hq_time_limit: 10 * MIN,
+            cpus: 1,
+            ram_gb: 4,
+            expected: (2 * MIN, 2 * MIN),
+        },
+        App::Gs2 => Scenario {
+            app,
+            slurm_time: 240 * MIN,
+            hq_alloc_time: 36000 * MIN,
+            hq_time_request: 15 * MIN,
+            hq_time_limit: 240 * MIN,
+            cpus: 8,
+            ram_gb: 32,
+            expected: (1 * MIN, 180 * MIN),
+        },
+        App::Gp => Scenario {
+            app,
+            slurm_time: 1 * MIN,
+            hq_alloc_time: 10 * MIN,
+            hq_time_request: 1 * MIN,
+            hq_time_limit: 5 * MIN,
+            cpus: 1,
+            ram_gb: 4,
+            expected: (6 * SEC, 6 * SEC), // 0.1 min
+        },
+    }
+}
+
+impl Scenario {
+    pub fn slurm_request(&self) -> JobRequest {
+        JobRequest::new(self.cpus, self.ram_gb, self.slurm_time)
+    }
+
+    pub fn hq_alloc_request(&self) -> JobRequest {
+        JobRequest::new(self.cpus, self.ram_gb, self.hq_alloc_time)
+    }
+}
+
+/// Seeded Latin hypercube over the GS2 parameter space (Table II), the
+/// Rust-side equivalent of `python/compile/gp.py::lhs_sample`.
+pub fn lhs(n: usize, seed: u64) -> Vec<[f64; 7]> {
+    let lo = [2.0, 0.0, 0.0, 0.5, 0.0, 0.0, 0.0];
+    let hi = [9.0, 5.0, 10.0, 6.0, 0.3, 0.1, 1.0];
+    let mut rng = Rng::new(seed);
+    let mut out = vec![[0f64; 7]; n];
+    for d in 0..7 {
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        for (i, &stratum) in perm.iter().enumerate() {
+            let u = (stratum as f64 + rng.uniform()) / n as f64;
+            out[i][d] = lo[d] + u * (hi[d] - lo[d]);
+        }
+    }
+    out
+}
+
+/// Calibrated per-evaluation compute times (paper scale).
+///
+/// The same seeded sample stream feeds both schedulers, implementing the
+/// paper's "series of evaluation in each benchmark were generated with
+/// the same random seed ... runtime variations do not originate from the
+/// benchmark problem".
+///
+/// gs2 calibration: convergence-chunk distribution measured from the
+/// gs2lite artifact (median ~12 chunks, lognormal body, ~9% hitting the
+/// 400-chunk cap), mapped onto the paper's stated [1, 180]-minute range
+/// at 27 s per chunk (180 min / 400 chunks).
+pub struct RuntimeModel {
+    seed: u64,
+}
+
+impl RuntimeModel {
+    pub fn new(seed: u64) -> Self {
+        RuntimeModel { seed }
+    }
+
+    /// Compute time C_i for evaluation `index` of `app` (paper scale).
+    pub fn duration(&self, app: App, index: u64) -> Micros {
+        let mut rng = Rng::new(
+            self.seed ^ (index + 1).wrapping_mul(0x9E37_79B9)
+                ^ (app as u64) << 56,
+        );
+        let jitter = rng.lognormal(0.0, 0.05);
+        match app {
+            // eigen-100: 0.01 min = 0.6 s
+            App::Eigen100 => ((0.6 * SEC as f64) * jitter) as Micros,
+            // eigen-5000: ~2 min
+            App::Eigen5000 => ((120.0 * SEC as f64) * jitter) as Micros,
+            // GP: ~0.1 min, dominated by fixed cost
+            App::Gp => ((6.0 * SEC as f64) * jitter) as Micros,
+            App::Gs2 => {
+                // Chunk-count mixture calibrated from gs2lite.
+                let chunks = if rng.uniform() < 0.09 {
+                    400.0
+                } else {
+                    rng.lognormal(12f64.ln(), 0.8).clamp(3.0, 350.0)
+                };
+                let secs = 27.0 * chunks * jitter;
+                (secs * SEC as f64) as Micros
+            }
+        }
+    }
+
+    /// All `n` durations (convenience).
+    pub fn durations(&self, app: App, n: u64) -> Vec<Micros> {
+        (0..n).map(|i| self.duration(app, i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lhs_is_stratified_and_seeded() {
+        let n = 32;
+        let a = lhs(n, 5);
+        let b = lhs(n, 5);
+        assert_eq!(a, b);
+        let c = lhs(n, 6);
+        assert_ne!(a, c);
+        // Stratification: one sample per 1/n stratum per dim.
+        let lo = [2.0, 0.0, 0.0, 0.5, 0.0, 0.0, 0.0];
+        let hi = [9.0, 5.0, 10.0, 6.0, 0.3, 0.1, 1.0];
+        for d in 0..7 {
+            let mut bins: Vec<usize> = a
+                .iter()
+                .map(|p| {
+                    (((p[d] - lo[d]) / (hi[d] - lo[d]) * n as f64) as usize)
+                        .min(n - 1)
+                })
+                .collect();
+            bins.sort();
+            assert_eq!(bins, (0..n).collect::<Vec<_>>(), "dim {d}");
+        }
+    }
+
+    #[test]
+    fn scenarios_match_table3() {
+        let s = scenario(App::Gs2);
+        assert_eq!(s.slurm_time, 240 * MIN);
+        assert_eq!(s.hq_time_request, 15 * MIN);
+        assert_eq!(s.cpus, 8);
+        assert_eq!(s.ram_gb, 32);
+        let e = scenario(App::Eigen100);
+        assert_eq!(e.hq_alloc_time, 10 * MIN);
+        assert_eq!(e.cpus, 1);
+    }
+
+    #[test]
+    fn durations_seeded_and_app_dependent() {
+        let m = RuntimeModel::new(42);
+        assert_eq!(m.duration(App::Gs2, 3), m.duration(App::Gs2, 3));
+        assert_ne!(m.duration(App::Gs2, 3), m.duration(App::Gs2, 4));
+        assert_ne!(m.duration(App::Gs2, 3), m.duration(App::Gp, 3));
+    }
+
+    #[test]
+    fn gs2_has_heavy_tail_within_expected_range() {
+        let m = RuntimeModel::new(7);
+        let ds = m.durations(App::Gs2, 200);
+        let lo = *ds.iter().min().unwrap();
+        let hi = *ds.iter().max().unwrap();
+        assert!(lo >= 60 * SEC, "min {lo}");
+        assert!(hi >= 100 * MIN, "tail missing, max {hi}");
+        assert!(hi <= 200 * MIN, "max {hi}");
+        // Spread of at least ~20x across the LHS space.
+        assert!(hi as f64 / lo as f64 > 20.0);
+    }
+
+    #[test]
+    fn cheap_apps_are_cheap() {
+        let m = RuntimeModel::new(7);
+        assert!(m.duration(App::Eigen100, 0) < 2 * SEC);
+        assert!(m.duration(App::Gp, 0) < 15 * SEC);
+        let e5 = m.duration(App::Eigen5000, 0);
+        assert!(e5 > 90 * SEC && e5 < 200 * SEC);
+    }
+}

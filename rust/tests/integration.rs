@@ -1,0 +1,196 @@
+//! Integration tests across the whole stack.
+//!
+//! `runtime_*` tests need `make artifacts` to have run (they are skipped
+//! with a clear message otherwise).  The balancer tests run the real live
+//! stack: slurmlite daemon + backend + balancer + model-server threads +
+//! PJRT evaluation over HTTP.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use uqsched::coordinator::start_live;
+use uqsched::json::Value;
+use uqsched::models;
+use uqsched::runtime::{check_testvec, Engine};
+use uqsched::umbridge::HttpModel;
+use uqsched::workload::{lhs, scenario, App};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    for cand in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = artifacts_dir()?;
+    Some(Arc::new(Engine::new(&dir).expect("engine")))
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match engine() {
+            Some(e) => e,
+            None => {
+                eprintln!("SKIP: artifacts missing; run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+// ---- runtime vs golden vectors (the AOT boundary) -------------------------
+
+#[test]
+fn runtime_matches_python_golden_vectors() {
+    let eng = need_artifacts!();
+    for name in eng.entry_names() {
+        let err = check_testvec(&eng, &name).expect(&name);
+        assert!(err < 1e-4, "{name}: max rel err {err}");
+    }
+}
+
+#[test]
+fn runtime_eigen_matches_rust_generator() {
+    // The seeded benchmark matrix crosses the language boundary
+    // bit-identically; eigenvalues must therefore be reproducible.
+    let eng = need_artifacts!();
+    let model = models::EigenModel::small(eng);
+    let (w1, off1) = model.solve_seed(42).unwrap();
+    let (w2, _) = model.solve_seed(42).unwrap();
+    assert_eq!(w1, w2);
+    assert!(off1 < 1e-2, "not converged: {off1}");
+    // Eigenvalues ascending.
+    assert!(w1.windows(2).all(|p| p[0] <= p[1] + 1e-9));
+    // Trace check vs the generator.
+    let n = 100;
+    let a = uqsched::util::Rng::symmetric_matrix(42, n);
+    let trace: f64 = (0..n).map(|i| a[i * n + i] as f64).sum();
+    let sum: f64 = w1.iter().sum();
+    assert!((trace - sum).abs() < 1e-2, "{trace} vs {sum}");
+}
+
+#[test]
+fn runtime_gs2_converges_and_varies() {
+    let eng = need_artifacts!();
+    let gs2 = models::Gs2Model::new(eng);
+    let pts = lhs(6, 99);
+    let mut chunk_counts = Vec::new();
+    for p in &pts {
+        let (_g, _w, res, chunks) = gs2.solve(&p.to_vec(), Some(150)).unwrap();
+        assert!(res.is_finite());
+        chunk_counts.push(chunks);
+    }
+    // Input-dependent runtimes: the counts must not all be equal.
+    let min = chunk_counts.iter().min().unwrap();
+    let max = chunk_counts.iter().max().unwrap();
+    assert!(max > min, "no runtime variation: {chunk_counts:?}");
+}
+
+#[test]
+fn runtime_gp_agrees_with_gs2_direction() {
+    // The surrogate was trained on gs2lite: at a strongly-driven point
+    // the predicted growth rate must exceed a strongly-damped point's.
+    let eng = need_artifacts!();
+    let gp = models::GpModel::new(eng);
+    let hot = vec![3.0, 0.5, 9.0, 5.5, 0.25, 0.0, 0.4];
+    let cold = vec![8.0, 4.5, 0.5, 0.6, 0.0, 0.1, 0.9];
+    let (means, _) = gp.predict_batch(&[hot, cold]).unwrap();
+    assert!(means[0][0] > means[1][0],
+            "gp ordering wrong: {means:?}");
+}
+
+// ---- live stack ------------------------------------------------------------
+
+#[test]
+fn balancer_hq_end_to_end() {
+    let eng = need_artifacts!();
+    let stack = start_live(eng, models::GP_NAME, "hq", 2,
+                           &scenario(App::Gp), 5000.0, true)
+        .expect("live stack");
+    let mut client = HttpModel::connect(&stack.balancer.url(),
+                                        models::GP_NAME)
+        .expect("client");
+    let cfg = Value::Obj(Default::default());
+    let pts = lhs(6, 3);
+    for p in &pts {
+        let out = client.evaluate(&[p.to_vec()], &cfg).expect("evaluate");
+        assert_eq!(out[0].len(), 2);
+        assert_eq!(out[1].len(), 2);
+        assert!(out[1][0] >= 0.0, "variance must be nonnegative");
+    }
+    // The preliminary registration queries happened (>=5 per server).
+    assert!(stack.balancer.registration_queries
+                .load(std::sync::atomic::Ordering::Relaxed) >= 5);
+    assert!(stack.balancer.requests_served
+                .load(std::sync::atomic::Ordering::Relaxed) >= 6);
+}
+
+#[test]
+fn balancer_slurm_backend_end_to_end() {
+    let eng = need_artifacts!();
+    let stack = start_live(eng, models::GP_NAME, "slurm", 2,
+                           &scenario(App::Gp), 5000.0, true)
+        .expect("live stack");
+    let mut client = HttpModel::connect(&stack.balancer.url(),
+                                        models::GP_NAME)
+        .expect("client");
+    let cfg = Value::Obj(Default::default());
+    let out = client
+        .evaluate(&[lhs(1, 4)[0].to_vec()], &cfg)
+        .expect("evaluate");
+    assert_eq!(out[0].len(), 2);
+}
+
+#[test]
+fn balancer_per_job_servers_retire() {
+    // The paper's measured configuration: one evaluation per server.
+    let eng = need_artifacts!();
+    let stack = start_live(eng, models::GP_NAME, "hq", 2,
+                           &scenario(App::Gp), 5000.0, false)
+        .expect("live stack");
+    let mut client = HttpModel::connect(&stack.balancer.url(),
+                                        models::GP_NAME)
+        .expect("client");
+    let cfg = Value::Obj(Default::default());
+    for p in lhs(4, 5) {
+        let out = client.evaluate(&[p.to_vec()], &cfg).expect("evaluate");
+        assert_eq!(out[0].len(), 2);
+    }
+    // Servers were spawned repeatedly (retired after each evaluation).
+    assert!(stack.balancer.registry().registered_total() >= 3,
+            "expected several registrations, got {}",
+            stack.balancer.registry().registered_total());
+}
+
+#[test]
+fn balancer_concurrent_clients_fcfs() {
+    let eng = need_artifacts!();
+    let stack = start_live(eng, models::GP_NAME, "hq", 3,
+                           &scenario(App::Gp), 5000.0, true)
+        .expect("live stack");
+    let url = stack.balancer.url();
+    let threads: Vec<_> = (0..4)
+        .map(|t| {
+            let url = url.clone();
+            std::thread::spawn(move || {
+                let mut c = HttpModel::connect(&url, models::GP_NAME)
+                    .expect("client");
+                let cfg = Value::Obj(Default::default());
+                for (i, p) in lhs(5, t).iter().enumerate() {
+                    let out = c.evaluate(&[p.to_vec()], &cfg)
+                        .unwrap_or_else(|e| panic!("t{t} i{i}: {e:#}"));
+                    assert_eq!(out[0].len(), 2);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert!(stack.balancer.requests_served
+                .load(std::sync::atomic::Ordering::Relaxed) >= 20);
+}

@@ -1,0 +1,124 @@
+//! Property tests on scheduler invariants (util::prop harness): random
+//! workloads through the sim-plane experiment runners must satisfy the
+//! structural properties of correct scheduling regardless of seed.
+
+use uqsched::cluster::ClusterSpec;
+use uqsched::clock::{Micros, SEC};
+use uqsched::experiments::{run_naive_slurm, run_umbridge_hq,
+                           run_umbridge_slurm, Config};
+use uqsched::util::prop;
+use uqsched::workload::App;
+
+fn random_cfg(rng: &mut uqsched::util::Rng) -> Config {
+    let apps = App::all();
+    let app = apps[rng.below(4) as usize];
+    let qd = [1usize, 2, 3, 10][rng.below(4) as usize];
+    let mut cfg = Config::paper(app, qd, rng.next_u64());
+    cfg.n_evals = 5 + rng.below(15);
+    cfg.cluster = ClusterSpec::small(4 + rng.below(8) as usize);
+    // Mixed quiet/busy clusters.
+    if rng.uniform() < 0.5 {
+        cfg.overheads.bg_interarrival = Micros::MAX;
+    } else {
+        cfg.overheads.bg_interarrival = 100 * SEC;
+    }
+    cfg
+}
+
+#[test]
+fn prop_all_evaluations_complete_exactly_once() {
+    prop::check("complete-once", 12, |rng| {
+        let cfg = random_cfg(rng);
+        for exp in [run_naive_slurm(&cfg), run_umbridge_hq(&cfg)] {
+            assert_eq!(exp.records.len() as u64, cfg.n_evals,
+                       "{}: wrong record count", exp.label);
+            let mut tags: Vec<u64> =
+                exp.records.iter().map(|r| r.tag).collect();
+            tags.sort();
+            tags.dedup();
+            assert_eq!(tags.len() as u64, cfg.n_evals,
+                       "{}: duplicated/lost tags", exp.label);
+        }
+    });
+}
+
+#[test]
+fn prop_time_ordering_per_job() {
+    prop::check("time-ordering", 12, |rng| {
+        let cfg = random_cfg(rng);
+        for exp in [run_naive_slurm(&cfg), run_umbridge_hq(&cfg),
+                    run_umbridge_slurm(&cfg)] {
+            for r in &exp.records {
+                assert!(r.submit <= r.start, "{}: submit > start",
+                        exp.label);
+                assert!(r.start <= r.end, "{}: start > end", exp.label);
+                assert!(r.cpu <= r.makespan() + 1,
+                        "{}: cpu {} > makespan {}", exp.label, r.cpu,
+                        r.makespan());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_slr_at_least_one() {
+    prop::check("slr>=1", 10, |rng| {
+        let cfg = random_cfg(rng);
+        for exp in [run_naive_slurm(&cfg), run_umbridge_hq(&cfg)] {
+            for r in &exp.records {
+                assert!(r.slr() >= 1.0 - 1e-9, "{}: SLR {}", exp.label,
+                        r.slr());
+            }
+            assert!(exp.slr() >= 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_makespan_at_least_critical_path() {
+    // The experiment makespan can never beat total work / parallelism.
+    prop::check("critical-path", 8, |rng| {
+        let mut cfg = random_cfg(rng);
+        cfg.overheads.bg_interarrival = Micros::MAX; // isolate the bound
+        let exp = run_naive_slurm(&cfg);
+        let total_cpu: u64 = exp.records.iter().map(|r| r.cpu).sum();
+        let lower = total_cpu / (cfg.queue_depth as u64).max(1);
+        assert!(exp.makespan() + SEC >= lower,
+                "makespan {} < critical path {}", exp.makespan(), lower);
+    });
+}
+
+#[test]
+fn prop_same_seed_same_records() {
+    prop::check("determinism", 6, |rng| {
+        let cfg = random_cfg(rng);
+        let a = run_umbridge_hq(&cfg);
+        let b = run_umbridge_hq(&cfg);
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x, y);
+        }
+    });
+}
+
+#[test]
+fn prop_hq_total_makespan_not_worse_for_slow_apps() {
+    // For the compute-heavy apps the paper's claim must hold across
+    // seeds on a quiet cluster ("outperforms or is comparable"): HQ's
+    // experiment-level makespan <= SLURM's, with 10% comparability slack.
+    prop::check("hq-wins-slow", 6, |rng| {
+        let mut cfg = random_cfg(rng);
+        cfg.app = if rng.uniform() < 0.5 { App::Gs2 } else {
+            App::Eigen5000
+        };
+        cfg.queue_depth = 2;
+        cfg.n_evals = 8;
+        cfg.overheads.bg_interarrival = Micros::MAX;
+        let s = run_naive_slurm(&cfg);
+        let h = run_umbridge_hq(&cfg);
+        assert!(
+            (h.makespan() as f64) <= (s.makespan() as f64) * 1.10,
+            "HQ {} vs SLURM {}", h.makespan(), s.makespan()
+        );
+    });
+}
