@@ -1,0 +1,484 @@
+//! Million-task scale benchmark for both scheduler cores.
+//!
+//! Drives the indexed `SlurmCore`/`HqCore` and their seed-semantics
+//! reference twins through synthetic task streams at several queue
+//! depths, printing tasks/s and peak resident map sizes and emitting
+//! `BENCH_scale.json` so the perf trajectory is tracked across PRs.
+//!
+//! Run with:
+//!
+//! ```text
+//! cargo bench --bench scale
+//! ```
+//!
+//! Environment knobs:
+//!   SCALE_TASKS        max task count for the indexed cores  (default 1_000_000)
+//!   SCALE_NAIVE_TASKS  max task count for the naive baseline (default 100_000)
+//!   SCALE_OUT          output path                           (default BENCH_scale.json)
+//!
+//! The workload is deliberately UQ-shaped: a stream of identical small
+//! tasks (the paper's "thousands or even millions of similar tasks"),
+//! with a bounded number kept in flight ("queue depth") — depth 0 means
+//! submit everything up front, the worst case for the pending queue.
+//!
+//! Both implementations of a core run through the SAME generic driver
+//! (statically dispatched trait shims), so the indexed-vs-naive speedup
+//! can never be skewed by divergent driver loops.
+
+use std::time::Instant;
+
+use uqsched::clock::{Des, Micros, MS, SEC};
+use uqsched::cluster::{ClusterSpec, JobRequest, OverheadModel};
+use uqsched::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer,
+                      ReferenceHqCore, TaskSpec};
+use uqsched::json::Value;
+use uqsched::slurmlite::core::{Action, SlurmCore, Timer, USER_EXPERIMENT};
+use uqsched::slurmlite::ReferenceSlurmCore;
+
+/// One measurement row.
+struct Row {
+    core: &'static str,
+    imp: &'static str,
+    tasks: u64,
+    depth: usize,
+    wall_s: f64,
+    tasks_per_s: f64,
+    peak_resident: usize,
+    des_events: u64,
+}
+
+impl Row {
+    fn print(&self) {
+        println!(
+            "  {:<6} {:<8} {:>9} tasks  depth {:>8}  {:>8.3} s  {:>12.0} tasks/s  peak resident {:>8}  {:>9} events",
+            self.core, self.imp, self.tasks,
+            if self.depth == 0 { "all".to_string() } else { self.depth.to_string() },
+            self.wall_s, self.tasks_per_s, self.peak_resident, self.des_events,
+        );
+    }
+
+    fn json(&self) -> Value {
+        Value::obj(vec![
+            ("core", Value::str(self.core)),
+            ("impl", Value::str(self.imp)),
+            ("tasks", Value::num(self.tasks as f64)),
+            ("depth", Value::num(self.depth as f64)),
+            ("wall_s", Value::num(self.wall_s)),
+            ("tasks_per_s", Value::num(self.tasks_per_s)),
+            ("peak_resident", Value::num(self.peak_resident as f64)),
+            ("des_events", Value::num(self.des_events as f64)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// slurmlite: one generic driver over both implementations
+// ---------------------------------------------------------------------------
+
+const SLURM_DUR: Micros = 10 * SEC;
+const SLURM_REQ_TIME: Micros = 3600 * SEC;
+
+#[derive(Debug)]
+enum SEv {
+    Timer(Timer),
+    Submit,
+    Finish(u64),
+}
+
+fn slurm_req() -> JobRequest {
+    JobRequest::new(1, 2, SLURM_REQ_TIME)
+}
+
+/// Driver shim: the indexed core appends via its `*_into` sink API, the
+/// reference extends from its allocating API (that allocation cost is
+/// part of what the baseline measures).
+trait SlurmDriver {
+    fn drv_boot(&mut self, out: &mut Vec<Action>);
+    fn drv_timer(&mut self, t: Micros, tm: Timer, out: &mut Vec<Action>);
+    fn drv_submit(&mut self, t: Micros, tag: u64, out: &mut Vec<Action>);
+    fn drv_finish(&mut self, t: Micros, id: u64, out: &mut Vec<Action>);
+    fn drv_resident(&self) -> usize;
+}
+
+impl SlurmDriver for SlurmCore {
+    fn drv_boot(&mut self, out: &mut Vec<Action>) {
+        out.extend(self.bootstrap(0));
+    }
+    fn drv_timer(&mut self, t: Micros, tm: Timer, out: &mut Vec<Action>) {
+        self.on_timer_into(t, tm, out);
+    }
+    fn drv_submit(&mut self, t: Micros, tag: u64, out: &mut Vec<Action>) {
+        self.submit_into(t, USER_EXPERIMENT, tag, slurm_req(), out);
+    }
+    fn drv_finish(&mut self, t: Micros, id: u64, out: &mut Vec<Action>) {
+        self.on_finish_into(t, id, out);
+    }
+    fn drv_resident(&self) -> usize {
+        self.resident_jobs()
+    }
+}
+
+impl SlurmDriver for ReferenceSlurmCore {
+    fn drv_boot(&mut self, out: &mut Vec<Action>) {
+        out.extend(self.bootstrap(0));
+    }
+    fn drv_timer(&mut self, t: Micros, tm: Timer, out: &mut Vec<Action>) {
+        out.extend(self.on_timer(t, tm));
+    }
+    fn drv_submit(&mut self, t: Micros, tag: u64, out: &mut Vec<Action>) {
+        let (_, acts) = self.submit(t, USER_EXPERIMENT, tag, slurm_req());
+        out.extend(acts);
+    }
+    fn drv_finish(&mut self, t: Micros, id: u64, out: &mut Vec<Action>) {
+        out.extend(self.on_finish(t, id));
+    }
+    fn drv_resident(&self) -> usize {
+        self.resident_jobs()
+    }
+}
+
+/// `depth == 0`: everything submitted up front.
+fn run_slurm<C: SlurmDriver>(
+    core: &mut C,
+    imp: &'static str,
+    n: u64,
+    depth: usize,
+) -> Row {
+    let mut des: Des<SEv> = Des::new();
+    let t0 = Instant::now();
+    let mut acts: Vec<Action> = Vec::new();
+    core.drv_boot(&mut acts);
+    for a in acts.drain(..) {
+        if let Action::Timer(t, tm) = a {
+            des.schedule(t, SEv::Timer(tm));
+        }
+    }
+    let window = if depth == 0 { n } else { depth.min(n as usize) as u64 };
+    for _ in 0..window {
+        des.schedule(0, SEv::Submit);
+    }
+    let mut submitted: u64 = 0;
+    let mut completed: u64 = 0;
+    let mut peak_resident = 0usize;
+    while let Some((t, ev)) = des.pop() {
+        acts.clear();
+        match ev {
+            SEv::Timer(tm) => core.drv_timer(t, tm, &mut acts),
+            SEv::Submit => {
+                if submitted < n {
+                    let tag = submitted;
+                    submitted += 1;
+                    core.drv_submit(t, tag, &mut acts);
+                }
+            }
+            SEv::Finish(id) => core.drv_finish(t, id, &mut acts),
+        }
+        for a in acts.drain(..) {
+            match a {
+                Action::Timer(tt, tm) => des.schedule(tt, SEv::Timer(tm)),
+                Action::Launched { job, contention, .. } => {
+                    let dur = (SLURM_DUR as f64 * contention) as Micros;
+                    des.schedule(t + dur, SEv::Finish(job));
+                }
+                Action::Completed { .. } => {
+                    completed += 1;
+                    des.schedule(t, SEv::Submit);
+                }
+                Action::TimedOut { .. } => {}
+            }
+        }
+        peak_resident = peak_resident.max(core.drv_resident());
+        if completed >= n {
+            break;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(completed, n, "{imp} slurm run incomplete");
+    Row {
+        core: "slurm",
+        imp,
+        tasks: n,
+        depth,
+        wall_s: wall,
+        tasks_per_s: n as f64 / wall,
+        peak_resident,
+        des_events: des.processed(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hqlite: one generic driver over both implementations
+// ---------------------------------------------------------------------------
+
+const HQ_DUR: Micros = SEC;
+const HQ_ALLOC_DELAY: Micros = 5 * SEC;
+const HQ_ALLOC_LIFE: Micros = 100_000 * SEC;
+
+#[derive(Debug)]
+enum HEv {
+    Timer(HqTimer),
+    Submit,
+    AllocUp,
+    TaskDone(u64),
+}
+
+// 8 workers x 16 cores = 128 concurrent tasks; queue depths above that
+// keep the dispatch queue deep, which is exactly what separates the
+// indexed core (frontier early-exit) from the naive full rescan.
+fn hq_cfg() -> AutoAllocConfig {
+    AutoAllocConfig {
+        backlog: 4,
+        workers_per_alloc: 1,
+        max_worker_count: 8,
+        alloc_request: JobRequest::new(16, 16, HQ_ALLOC_LIFE),
+        dispatch_latency: 1 * MS,
+    }
+}
+
+fn hq_spec(tag: u64) -> TaskSpec {
+    TaskSpec { tag, cores: 1, time_request: SEC, time_limit: 100 * SEC }
+}
+
+trait HqDriver {
+    fn drv_submit(&mut self, t: Micros, tag: u64, out: &mut Vec<HqAction>);
+    fn drv_alloc_up(&mut self, t: Micros, out: &mut Vec<HqAction>);
+    fn drv_timer(&mut self, t: Micros, tm: HqTimer, out: &mut Vec<HqAction>);
+    fn drv_task_done(&mut self, t: Micros, id: u64, out: &mut Vec<HqAction>);
+    fn drv_resident(&self) -> usize;
+}
+
+impl HqDriver for HqCore {
+    fn drv_submit(&mut self, t: Micros, tag: u64, out: &mut Vec<HqAction>) {
+        self.submit_task_into(t, hq_spec(tag), out);
+    }
+    fn drv_alloc_up(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        self.on_alloc_up_into(t, HQ_ALLOC_LIFE, 16, out);
+    }
+    fn drv_timer(&mut self, t: Micros, tm: HqTimer, out: &mut Vec<HqAction>) {
+        self.on_timer_into(t, tm, out);
+    }
+    fn drv_task_done(&mut self, t: Micros, id: u64, out: &mut Vec<HqAction>) {
+        self.on_task_done_into(t, id, out);
+    }
+    fn drv_resident(&self) -> usize {
+        self.resident_tasks()
+    }
+}
+
+impl HqDriver for ReferenceHqCore {
+    fn drv_submit(&mut self, t: Micros, tag: u64, out: &mut Vec<HqAction>) {
+        let (_, acts) = self.submit_task(t, hq_spec(tag));
+        out.extend(acts);
+    }
+    fn drv_alloc_up(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        out.extend(self.on_alloc_up(t, HQ_ALLOC_LIFE, 16));
+    }
+    fn drv_timer(&mut self, t: Micros, tm: HqTimer, out: &mut Vec<HqAction>) {
+        out.extend(self.on_timer(t, tm));
+    }
+    fn drv_task_done(&mut self, t: Micros, id: u64, out: &mut Vec<HqAction>) {
+        out.extend(self.on_task_done(t, id));
+    }
+    fn drv_resident(&self) -> usize {
+        self.resident_tasks()
+    }
+}
+
+fn run_hq<C: HqDriver>(
+    core: &mut C,
+    imp: &'static str,
+    n: u64,
+    depth: usize,
+) -> Row {
+    let mut des: Des<HEv> = Des::new();
+    let t0 = Instant::now();
+    let window = if depth == 0 { n } else { depth.min(n as usize) as u64 };
+    for _ in 0..window {
+        des.schedule(0, HEv::Submit);
+    }
+    let mut submitted: u64 = 0;
+    let mut completed: u64 = 0;
+    let mut peak_resident = 0usize;
+    let mut acts: Vec<HqAction> = Vec::new();
+    while let Some((t, ev)) = des.pop() {
+        acts.clear();
+        match ev {
+            HEv::Timer(tm) => core.drv_timer(t, tm, &mut acts),
+            HEv::Submit => {
+                if submitted < n {
+                    let tag = submitted;
+                    submitted += 1;
+                    core.drv_submit(t, tag, &mut acts);
+                }
+            }
+            HEv::AllocUp => core.drv_alloc_up(t, &mut acts),
+            HEv::TaskDone(id) => core.drv_task_done(t, id, &mut acts),
+        }
+        for a in acts.drain(..) {
+            match a {
+                HqAction::SubmitAllocation { .. } => {
+                    des.schedule(t + HQ_ALLOC_DELAY, HEv::AllocUp)
+                }
+                HqAction::StartTask { task, .. } => {
+                    des.schedule(t + HQ_DUR, HEv::TaskDone(task))
+                }
+                HqAction::Timer(tt, tm) => des.schedule(tt, HEv::Timer(tm)),
+                HqAction::TaskCompleted { .. } => {
+                    completed += 1;
+                    des.schedule(t, HEv::Submit);
+                }
+                HqAction::KillTask { .. } => {}
+            }
+        }
+        peak_resident = peak_resident.max(core.drv_resident());
+        if completed >= n {
+            break;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(completed, n, "{imp} hq run incomplete");
+    Row {
+        core: "hq",
+        imp,
+        tasks: n,
+        depth,
+        wall_s: wall,
+        tasks_per_s: n as f64 / wall,
+        peak_resident,
+        des_events: des.processed(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn find_row<'a>(rows: &'a [Row], core: &str, imp: &str, tasks: u64) -> Option<&'a Row> {
+    rows.iter()
+        .find(|r| r.core == core && r.imp == imp && r.tasks == tasks)
+}
+
+fn slurm_indexed(n: u64, depth: usize) -> Row {
+    let mut core = SlurmCore::new(ClusterSpec::hamilton8(),
+                                  OverheadModel::quiet(), 42);
+    run_slurm(&mut core, "indexed", n, depth)
+}
+
+fn slurm_naive(n: u64, depth: usize) -> Row {
+    let mut core = ReferenceSlurmCore::new(ClusterSpec::hamilton8(),
+                                           OverheadModel::quiet(), 42);
+    run_slurm(&mut core, "naive", n, depth)
+}
+
+fn hq_indexed(n: u64, depth: usize) -> Row {
+    run_hq(&mut HqCore::new(hq_cfg()), "indexed", n, depth)
+}
+
+fn hq_naive(n: u64, depth: usize) -> Row {
+    run_hq(&mut ReferenceHqCore::new(hq_cfg()), "naive", n, depth)
+}
+
+fn main() {
+    let max_tasks = env_u64("SCALE_TASKS", 1_000_000);
+    let naive_max = env_u64("SCALE_NAIVE_TASKS", 100_000);
+
+    println!("=== scale benchmark (indexed vs naive scheduler cores) ===");
+    let mut rows: Vec<Row> = Vec::new();
+
+    // Head-to-head at matched configurations.  The naive cores go
+    // quadratic with queue depth, so their depths are capped to keep the
+    // baseline runnable; the indexed cores run the same configs for a
+    // like-for-like speedup, then scale out to max_tasks.
+    let h2h: &[(u64, usize, usize)] = &[
+        // (tasks, slurm depth, hq depth)
+        (10_000, 65_536, 2_048),
+        (100_000, 65_536, 2_048),
+    ];
+    println!("-- head-to-head (same workload, both implementations) --");
+    for &(n, sd, hd) in h2h {
+        if n > naive_max {
+            continue;
+        }
+        for r in [
+            slurm_naive(n, sd),
+            slurm_indexed(n, sd),
+            hq_naive(n, hd),
+            hq_indexed(n, hd),
+        ] {
+            r.print();
+            rows.push(r);
+        }
+    }
+
+    // Scale-out: indexed cores only, up to the million-task target, at
+    // several queue depths (0 = everything submitted up front).
+    println!("-- scale-out (indexed cores) --");
+    let sizes: Vec<u64> = [250_000u64, 500_000, 1_000_000]
+        .into_iter()
+        .filter(|&s| s <= max_tasks)
+        .collect();
+    for &n in &sizes {
+        for depth in [8_192usize, 0] {
+            for r in [slurm_indexed(n, depth), hq_indexed(n, depth)] {
+                r.print();
+                rows.push(r);
+            }
+        }
+    }
+
+    // Headline derived numbers.
+    let mut summary: Vec<(&str, Value)> = Vec::new();
+    for core in ["slurm", "hq"] {
+        if let (Some(naive), Some(indexed)) = (
+            find_row(&rows, core, "naive", 100_000),
+            find_row(&rows, core, "indexed", 100_000),
+        ) {
+            let speedup = naive.wall_s / indexed.wall_s;
+            println!("{core}: 100k-task speedup indexed/naive = {speedup:.1}x");
+            summary.push(match core {
+                "slurm" => ("slurm_speedup_100k", Value::num(speedup)),
+                _ => ("hq_speedup_100k", Value::num(speedup)),
+            });
+        }
+        // Sub-quadratic check: doubling tasks must less than quadruple
+        // wall time (500k -> 1M at the same depth).
+        let a = rows.iter().find(|r| {
+            r.core == core && r.imp == "indexed" && r.tasks == 500_000
+                && r.depth == 8_192
+        });
+        let b = rows.iter().find(|r| {
+            r.core == core && r.imp == "indexed" && r.tasks == 1_000_000
+                && r.depth == 8_192
+        });
+        if let (Some(a), Some(b)) = (a, b) {
+            let ratio = b.wall_s / a.wall_s.max(1e-9);
+            println!(
+                "{core}: 500k -> 1M wall-time ratio = {ratio:.2} (sub-quadratic iff < 4)"
+            );
+            summary.push(match core {
+                "slurm" => ("slurm_1m_over_500k", Value::num(ratio)),
+                _ => ("hq_1m_over_500k", Value::num(ratio)),
+            });
+        }
+    }
+
+    let out_path = std::env::var("SCALE_OUT")
+        .unwrap_or_else(|_| "BENCH_scale.json".to_string());
+    let doc = Value::obj(vec![
+        ("bench", Value::str("scale")),
+        ("max_tasks", Value::num(max_tasks as f64)),
+        ("naive_max_tasks", Value::num(naive_max as f64)),
+        ("results", Value::arr(rows.iter().map(Row::json).collect())),
+        ("summary", Value::Obj(
+            summary.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        )),
+    ]);
+    std::fs::write(&out_path, uqsched::json::write(&doc))
+        .expect("write BENCH_scale.json");
+    println!("wrote {out_path}");
+}

@@ -35,7 +35,10 @@ impl ClusterSpec {
 }
 
 /// Resources requested for one batch job / allocation.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// `Copy`: four scalar fields, passed around constantly on the scheduler
+/// hot paths (autoalloc used to clone one per submission).
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct JobRequest {
     pub cores: u32,
     pub ram_gb: u32,

@@ -168,7 +168,7 @@ impl Backend for SlurmBackend {
             return;
         }
         self.in_flight.fetch_add(1, Ordering::SeqCst);
-        self.daemon.submit(0, 0, self.request.clone());
+        self.daemon.submit(0, 0, self.request);
     }
 
     fn poll_new_servers(&self) -> Vec<String> {
@@ -322,7 +322,7 @@ impl Backend for HqBackend {
         };
         if need_alloc {
             let id = self.daemon.submit(0, u64::MAX - 1,
-                                        self.alloc_request.clone());
+                                        self.alloc_request);
             self.state.lock().unwrap().allocs.push(id);
         }
         self.drain();

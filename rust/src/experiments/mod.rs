@@ -9,7 +9,7 @@
 
 use std::collections::HashMap;
 
-use crate::cluster::{ClusterSpec, JobRequest, OverheadModel};
+use crate::cluster::{ClusterSpec, OverheadModel};
 use crate::clock::{Des, Micros, MS, SEC};
 use crate::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer, TaskSpec};
 use crate::metrics::{Experiment, JobRecord};
@@ -97,31 +97,33 @@ fn run_slurm_like(
 
     let mut completed: u64 = 0;
     let mut guard: u64 = 0;
+    // One reusable action buffer for the whole run: the cores append into
+    // it instead of allocating a fresh Vec per transition.
+    let mut acts: Vec<Action> = Vec::new();
     while let Some((t, ev)) = des.pop() {
         guard += 1;
         assert!(guard < 50_000_000, "runaway experiment");
-        let acts = match ev {
-            Ev::Timer(tm) => core.on_timer(t, tm),
+        acts.clear();
+        match ev {
+            Ev::Timer(tm) => core.on_timer_into(t, tm, &mut acts),
             Ev::SubmitNext => {
-                if next_eval >= cfg.n_evals {
-                    vec![]
-                } else {
+                if next_eval < cfg.n_evals {
                     let tag = next_eval;
                     next_eval += 1;
                     let dur = rtm.duration(cfg.app, tag) + per_job_extra;
-                    let (id, acts) = core.submit(
+                    let id = core.submit_into(
                         t + submit_extra,
                         USER_EXPERIMENT,
                         tag,
                         scen.slurm_request(),
+                        &mut acts,
                     );
                     durations.insert(id, dur);
-                    acts
                 }
             }
-            Ev::Finish(id) => core.on_finish(t, id),
-        };
-        for a in acts {
+            Ev::Finish(id) => core.on_finish_into(t, id, &mut acts),
+        }
+        for a in acts.drain(..) {
             match a {
                 Action::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
                 Action::Launched { job, contention, .. } => {
@@ -197,15 +199,20 @@ pub fn run_umbridge_hq(cfg: &Config) -> Experiment {
 
     let mut eval_records: u64 = 0;
     let mut guard: u64 = 0;
+    // Reusable action buffers: the cores append into `*_acts`; the
+    // routing loop swaps each into a batch buffer before interpreting,
+    // so interpretation can append follow-up actions without allocating.
+    let mut slurm_acts: Vec<Action> = Vec::new();
+    let mut hq_acts: Vec<HqAction> = Vec::new();
+    let mut slurm_batch: Vec<Action> = Vec::new();
+    let mut hq_batch: Vec<HqAction> = Vec::new();
     while let Some((t, ev)) = des.pop() {
         guard += 1;
         assert!(guard < 50_000_000, "runaway experiment");
         // Collect actions from whichever core fired.
-        let mut slurm_acts: Vec<Action> = Vec::new();
-        let mut hq_acts: Vec<HqAction> = Vec::new();
         match ev {
-            Ev::Slurm(tm) => slurm_acts = slurm.on_timer(t, tm),
-            Ev::Hq(tm) => hq_acts = hq.on_timer(t, tm),
+            Ev::Slurm(tm) => slurm.on_timer_into(t, tm, &mut slurm_acts),
+            Ev::Hq(tm) => hq.on_timer_into(t, tm, &mut hq_acts),
             Ev::SubmitNext => {
                 if next_task < total_tasks {
                     let tag = next_task;
@@ -218,24 +225,23 @@ pub fn run_umbridge_hq(cfg: &Config) -> Experiment {
                         rtm.duration(cfg.app, tag - cfg.registration_jobs)
                             + cfg.overheads.server_init
                     };
-                    let (tid, acts) = hq.submit_task(t, TaskSpec {
+                    let tid = hq.submit_task_into(t, TaskSpec {
                         tag,
                         cores: scen.cpus,
                         time_request: scen.hq_time_request,
                         time_limit: scen.hq_time_limit
                             + cfg.overheads.server_init,
-                    });
+                    }, &mut hq_acts);
                     task_durations.insert(tid, dur);
-                    hq_acts = acts;
                 }
             }
-            Ev::TaskDone(tid) => hq_acts = hq.on_task_done(t, tid),
+            Ev::TaskDone(tid) => hq.on_task_done_into(t, tid, &mut hq_acts),
             Ev::SlurmFinish(id) => {
-                slurm_acts = slurm.on_finish(t, id);
+                slurm.on_finish_into(t, id, &mut slurm_acts);
                 if alloc_jobs.contains_key(&id) {
                     // Allocation ended: expire its worker so hqlite
                     // requeues tasks and requests replacement capacity.
-                    hq_acts.extend(hq.expire_workers(t));
+                    hq.expire_workers_into(t, &mut hq_acts);
                 }
             }
         }
@@ -243,19 +249,21 @@ pub fn run_umbridge_hq(cfg: &Config) -> Experiment {
         // Route until both action queues drain (they feed each other).
         loop {
             let mut progressed = false;
-            for a in std::mem::take(&mut slurm_acts) {
+            std::mem::swap(&mut slurm_acts, &mut slurm_batch);
+            for a in slurm_batch.drain(..) {
                 progressed = true;
                 match a {
                     Action::Timer(tt, tm) => des.schedule(tt, Ev::Slurm(tm)),
                     Action::Launched { job, .. } => {
-                        if let Some(_tag) = alloc_jobs.get(&job) {
+                        if alloc_jobs.contains_key(&job) {
                             // Allocation is up: a worker registers for the
                             // remaining allocation lifetime.
-                            hq_acts.extend(hq.on_alloc_up(
+                            hq.on_alloc_up_into(
                                 t,
                                 scen.hq_alloc_time,
                                 scen.cpus,
-                            ));
+                                &mut hq_acts,
+                            );
                             // The allocation job ends at its time limit.
                             des.schedule(
                                 t + scen.hq_alloc_time,
@@ -266,18 +274,19 @@ pub fn run_umbridge_hq(cfg: &Config) -> Experiment {
                     Action::Completed { .. } | Action::TimedOut { .. } => {}
                 }
             }
-            for a in std::mem::take(&mut hq_acts) {
+            std::mem::swap(&mut hq_acts, &mut hq_batch);
+            for a in hq_batch.drain(..) {
                 progressed = true;
                 match a {
                     HqAction::SubmitAllocation { alloc_tag, req } => {
-                        let (id, acts) = slurm.submit(
+                        let id = slurm.submit_into(
                             t,
                             USER_EXPERIMENT,
                             u64::MAX - 1,
-                            JobRequest { ..req },
+                            req,
+                            &mut slurm_acts,
                         );
                         alloc_jobs.insert(id, alloc_tag);
-                        slurm_acts.extend(acts);
                     }
                     HqAction::StartTask { task, .. } => {
                         let dur = task_durations[&task];

@@ -1,6 +1,34 @@
 //! The hqlite server state machine (pure logic, both planes).
+//!
+//! # Scale architecture (see PERF.md)
+//!
+//! HyperQueue's value proposition is absorbing 10⁵–10⁶ tiny tasks, so
+//! the server must not do per-task work proportional to the total number
+//! of tasks or workers ever seen:
+//!
+//! * The task queue is a `VecDeque` scanned FCFS with a per-pass failure
+//!   frontier: once a `(cores, time_request)` shape finds no worker, any
+//!   shape needing at least as much is skipped, and the pass stops
+//!   entirely when the frontier covers the queue-wide minimum request —
+//!   O(dispatched + 1) per pass for homogeneous UQ streams (the seed
+//!   cloned and rescanned the whole queue on every submission).
+//! * Workers with free cores sit in an ordered `avail` set; dispatch
+//!   probes candidates in worker-id order and stops at the first fit
+//!   instead of scanning every worker ever registered.
+//! * Each worker carries its running-task set, so losing a worker
+//!   requeues exactly its own tasks (the seed scanned every task ever
+//!   submitted).  Requeue order is ascending task id — deterministic,
+//!   where the seed inherited HashMap iteration order.
+//! * Worker expiries live in a min-heap; `expire_workers` pops due
+//!   entries instead of iterating all workers.
+//! * Finished tasks are evicted from the hot map (the driver owns the
+//!   emitted `JobRecord`), so steady-state memory is bounded by in-flight
+//!   work.  Dead workers leave the worker map entirely.
+//! * Every transition appends into a caller-supplied action buffer
+//!   (`*_into` methods); allocating wrappers remain for low-rate callers.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap, HashMap, VecDeque};
 
 use crate::cluster::JobRequest;
 use crate::clock::Micros;
@@ -41,7 +69,6 @@ enum TaskState {
     Pending,
     Dispatched,
     Running,
-    Done,
 }
 
 #[derive(Clone, Debug)]
@@ -55,14 +82,11 @@ struct Task {
 
 #[derive(Clone, Debug)]
 struct Worker {
-    /// Cores available on the worker.
-    cores: u32,
     cores_free: u32,
     /// Virtual time at which the surrounding allocation expires.
     expires_t: Micros,
-    alive: bool,
-    /// Running task count (for idle tests).
-    running: u32,
+    /// Tasks currently dispatched to / running on this worker.
+    running: BTreeSet<TaskId>,
 }
 
 /// Actions the driver must interpret.
@@ -93,9 +117,25 @@ pub enum HqTimer {
 /// The HQ server.
 pub struct HqCore {
     cfg: AutoAllocConfig,
+    /// In-flight tasks only; finished tasks are evicted.
     tasks: HashMap<TaskId, Task>,
-    queue: Vec<TaskId>,
+    /// FCFS dispatch queue.  May lazily contain ids of tasks that
+    /// finished while requeued (`stale_in_queue` counts them); they are
+    /// dropped when next encountered.
+    queue: VecDeque<TaskId>,
+    stale_in_queue: usize,
+    /// Live workers only; a lost/expired worker leaves the map.
     workers: HashMap<WorkerId, Worker>,
+    /// Live workers with at least one free core, ordered by id (HQ picks
+    /// the lowest-id qualifying worker).
+    avail: BTreeSet<WorkerId>,
+    /// (expires_t, worker) min-heap; entries for already-lost workers are
+    /// skipped lazily.
+    expiry: BinaryHeap<Reverse<(Micros, WorkerId)>>,
+    /// Conservative minimums over every queued request (monotone).
+    min_cores_floor: u32,
+    min_treq_floor: Micros,
+    retired: u64,
     next_task: TaskId,
     next_worker: WorkerId,
     next_alloc_tag: u64,
@@ -111,8 +151,14 @@ impl HqCore {
         HqCore {
             cfg,
             tasks: HashMap::new(),
-            queue: Vec::new(),
+            queue: VecDeque::new(),
+            stale_in_queue: 0,
             workers: HashMap::new(),
+            avail: BTreeSet::new(),
+            expiry: BinaryHeap::new(),
+            min_cores_floor: u32::MAX,
+            min_treq_floor: Micros::MAX,
+            retired: 0,
             next_task: 1,
             next_worker: 1,
             next_alloc_tag: 1,
@@ -122,10 +168,29 @@ impl HqCore {
         }
     }
 
+    /// Pending tasks excluding lazily-dropped stale queue entries.
+    fn queued(&self) -> usize {
+        self.queue.len().saturating_sub(self.stale_in_queue)
+    }
+
     /// Submit a task; may trigger autoalloc and immediate dispatch.
     pub fn submit_task(&mut self, t: Micros, spec: TaskSpec) -> (TaskId, Vec<HqAction>) {
+        let mut out = Vec::new();
+        let id = self.submit_task_into(t, spec, &mut out);
+        (id, out)
+    }
+
+    /// Submit a task, appending actions into a reusable buffer.
+    pub fn submit_task_into(
+        &mut self,
+        t: Micros,
+        spec: TaskSpec,
+        out: &mut Vec<HqAction>,
+    ) -> TaskId {
         let id = self.next_task;
         self.next_task += 1;
+        self.min_cores_floor = self.min_cores_floor.min(spec.cores);
+        self.min_treq_floor = self.min_treq_floor.min(spec.time_request);
         self.tasks.insert(
             id,
             Task {
@@ -136,10 +201,10 @@ impl HqCore {
                 worker: 0,
             },
         );
-        self.queue.push(id);
-        let mut acts = self.autoalloc();
-        acts.extend(self.dispatch(t));
-        (id, acts)
+        self.queue.push_back(id);
+        self.autoalloc_into(out);
+        self.dispatch_into(t, out);
+        id
     }
 
     /// A native allocation came up: start `workers_per_alloc` workers,
@@ -150,9 +215,22 @@ impl HqCore {
         time_limit: Micros,
         cores_per_worker: u32,
     ) -> Vec<HqAction> {
+        let mut out = Vec::new();
+        self.on_alloc_up_into(t, time_limit, cores_per_worker, &mut out);
+        out
+    }
+
+    /// Allocation arrival, appending actions into a reusable buffer.
+    pub fn on_alloc_up_into(
+        &mut self,
+        t: Micros,
+        time_limit: Micros,
+        cores_per_worker: u32,
+        out: &mut Vec<HqAction>,
+    ) {
         self.allocs_in_queue = self.allocs_in_queue.saturating_sub(1);
         for _ in 0..self.cfg.workers_per_alloc {
-            if self.live_workers() as u32 >= self.cfg.max_worker_count {
+            if self.workers.len() as u32 >= self.cfg.max_worker_count {
                 break;
             }
             let wid = self.next_worker;
@@ -160,58 +238,86 @@ impl HqCore {
             self.workers.insert(
                 wid,
                 Worker {
-                    cores: cores_per_worker,
                     cores_free: cores_per_worker,
                     expires_t: t + time_limit,
-                    alive: true,
-                    running: 0,
+                    running: BTreeSet::new(),
                 },
             );
+            if cores_per_worker > 0 {
+                self.avail.insert(wid);
+            }
+            self.expiry.push(Reverse((t + time_limit, wid)));
             self.workers_started += 1;
         }
-        self.dispatch(t)
+        self.dispatch_into(t, out);
     }
 
     /// A worker disappeared (allocation ended); requeue its tasks.
     pub fn on_worker_lost(&mut self, t: Micros, wid: WorkerId) -> Vec<HqAction> {
-        if let Some(w) = self.workers.get_mut(&wid) {
-            w.alive = false;
-        }
-        let mut requeued = Vec::new();
-        for (id, task) in self.tasks.iter_mut() {
-            if task.worker == wid
-                && matches!(task.state, TaskState::Running | TaskState::Dispatched)
-            {
-                task.state = TaskState::Pending;
-                requeued.push(*id);
+        let mut out = Vec::new();
+        self.on_worker_lost_into(t, wid, &mut out);
+        out
+    }
+
+    /// Worker loss, appending actions into a reusable buffer.
+    pub fn on_worker_lost_into(
+        &mut self,
+        t: Micros,
+        wid: WorkerId,
+        out: &mut Vec<HqAction>,
+    ) {
+        if let Some(worker) = self.workers.remove(&wid) {
+            self.avail.remove(&wid);
+            // Requeue in ascending task-id order (deterministic; the
+            // worker's set holds exactly its Dispatched/Running tasks).
+            for id in worker.running {
+                if let Some(task) = self.tasks.get_mut(&id) {
+                    if matches!(
+                        task.state,
+                        TaskState::Running | TaskState::Dispatched
+                    ) {
+                        task.state = TaskState::Pending;
+                        self.queue.push_back(id);
+                    }
+                }
             }
         }
-        self.queue.extend(requeued);
-        let mut acts = self.autoalloc();
-        acts.extend(self.dispatch(t));
-        acts
+        self.autoalloc_into(out);
+        self.dispatch_into(t, out);
     }
 
     /// Driver reports a task's workload finished.
     pub fn on_task_done(&mut self, t: Micros, id: TaskId) -> Vec<HqAction> {
-        self.complete(t, id, false)
+        let mut out = Vec::new();
+        self.on_task_done_into(t, id, &mut out);
+        out
+    }
+
+    /// Task completion, appending actions into a reusable buffer.
+    pub fn on_task_done_into(&mut self, t: Micros, id: TaskId, out: &mut Vec<HqAction>) {
+        self.complete(t, id, false, out)
     }
 
     pub fn on_timer(&mut self, t: Micros, timer: HqTimer) -> Vec<HqAction> {
+        let mut out = Vec::new();
+        self.on_timer_into(t, timer, &mut out);
+        out
+    }
+
+    /// Timer dispatch, appending actions into a reusable buffer.
+    pub fn on_timer_into(&mut self, t: Micros, timer: HqTimer, out: &mut Vec<HqAction>) {
         match timer {
             HqTimer::Dispatched(id) => {
-                let Some(task) = self.tasks.get_mut(&id) else { return vec![] };
+                let Some(task) = self.tasks.get_mut(&id) else { return };
                 if task.state != TaskState::Dispatched {
-                    return vec![];
+                    return;
                 }
                 task.state = TaskState::Running;
                 task.start_t = t;
                 let worker = task.worker;
                 let limit = task.spec.time_limit;
-                vec![
-                    HqAction::StartTask { task: id, worker },
-                    HqAction::Timer(t + limit, HqTimer::Limit(id)),
-                ]
+                out.push(HqAction::StartTask { task: id, worker });
+                out.push(HqAction::Timer(t + limit, HqTimer::Limit(id)));
             }
             HqTimer::Limit(id) => {
                 let running = matches!(
@@ -219,22 +325,23 @@ impl HqCore {
                     Some(TaskState::Running)
                 );
                 if running {
-                    let mut acts = vec![HqAction::KillTask { task: id }];
-                    acts.extend(self.complete(t, id, true));
-                    acts
-                } else {
-                    vec![]
+                    out.push(HqAction::KillTask { task: id });
+                    self.complete(t, id, true, out);
                 }
             }
         }
     }
 
-    fn complete(&mut self, t: Micros, id: TaskId, truncated: bool) -> Vec<HqAction> {
-        let Some(task) = self.tasks.get_mut(&id) else { return vec![] };
-        if task.state == TaskState::Done {
-            return vec![];
+    fn complete(&mut self, t: Micros, id: TaskId, truncated: bool, out: &mut Vec<HqAction>) {
+        // Finished tasks are evicted, so a stale duplicate completion
+        // (e.g. the driver's original done-timer firing after a requeue)
+        // simply misses the map, like the seed's Done-state check.
+        let Some(task) = self.tasks.remove(&id) else { return };
+        if task.state == TaskState::Pending {
+            // Completed while requeued: its queue entry is now stale.
+            self.stale_in_queue += 1;
         }
-        task.state = TaskState::Done;
+        self.retired += 1;
         let record = JobRecord {
             tag: task.spec.tag,
             submit: task.submit_t,
@@ -246,111 +353,194 @@ impl HqCore {
             truncated,
         };
         let wid = task.worker;
-        let cores = task.spec.cores;
         if let Some(w) = self.workers.get_mut(&wid) {
-            w.cores_free += cores;
-            w.running = w.running.saturating_sub(1);
+            if w.running.remove(&id) {
+                w.cores_free += task.spec.cores;
+                if w.cores_free > 0 {
+                    self.avail.insert(wid);
+                }
+            }
         }
-        let mut acts = vec![HqAction::TaskCompleted { task: id, record }];
-        acts.extend(self.dispatch(t));
-        acts
+        out.push(HqAction::TaskCompleted { task: id, record });
+        self.dispatch_into(t, out);
     }
 
     /// Submit allocations while there are pending tasks, the backlog
     /// allows it, and the worker cap is not reached.
-    fn autoalloc(&mut self) -> Vec<HqAction> {
-        let mut acts = Vec::new();
-        while !self.queue.is_empty()
+    fn autoalloc_into(&mut self, out: &mut Vec<HqAction>) {
+        while self.queued() > 0
             && self.allocs_in_queue < self.cfg.backlog
-            && self.live_workers() as u32
+            && self.workers.len() as u32
                 + self.allocs_in_queue * self.cfg.workers_per_alloc
                 < self.cfg.max_worker_count
         {
             self.allocs_in_queue += 1;
             let tag = self.next_alloc_tag;
             self.next_alloc_tag += 1;
-            acts.push(HqAction::SubmitAllocation {
+            out.push(HqAction::SubmitAllocation {
                 alloc_tag: tag,
-                req: self.cfg.alloc_request.clone(),
+                req: self.cfg.alloc_request,
             });
         }
-        acts
     }
 
     /// FCFS dispatch honouring cores and the time-request semantics.
-    fn dispatch(&mut self, t: Micros) -> Vec<HqAction> {
-        let mut acts = Vec::new();
-        let mut remaining: Vec<TaskId> = Vec::new();
-        let queue = std::mem::take(&mut self.queue);
-        for id in queue {
-            let task = &self.tasks[&id];
-            if task.state != TaskState::Pending {
+    ///
+    /// One pass over the queue; a failed `(cores, time_request)` shape is
+    /// cached (worker capacity only shrinks within a pass) and the pass
+    /// aborts once failures cover the queue-wide minimum request, so
+    /// homogeneous queues cost O(dispatched + 1).
+    fn dispatch_into(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        // Fast path: no tasks, or no worker could accept anything.  A
+        // worker with zero free cores can still take a degenerate
+        // zero-core task (`min_cores_floor == 0` records that one was
+        // ever queued — scan conservatively from then on).  Stale queue
+        // entries stay for a later pass (the effective count already
+        // excludes them).
+        let nothing_fits = self.avail.is_empty()
+            && (self.min_cores_floor > 0 || self.workers.is_empty());
+        if self.queue.is_empty() || nothing_fits {
+            self.autoalloc_into(out);
+            return;
+        }
+        let mut failed: Vec<(u32, Micros)> = Vec::new();
+        let n0 = self.queue.len();
+        let mut pushed_back = 0usize;
+        let mut aborted = false;
+        for _ in 0..n0 {
+            let Some(id) = self.queue.pop_front() else { break };
+            // Drop stale entries (task finished while requeued).
+            if self.tasks.get(&id).map(|x| x.state) != Some(TaskState::Pending) {
+                self.stale_in_queue = self.stale_in_queue.saturating_sub(1);
                 continue;
             }
-            // A worker qualifies if it is alive, has the cores free, and
-            // its allocation will outlive the task's *time request*.
-            let need = task.spec.cores;
-            let tr = task.spec.time_request;
-            let pick = self
-                .workers
-                .iter()
-                .filter(|(_, w)| {
-                    w.alive && w.cores_free >= need && w.expires_t >= t + tr
-                })
-                .min_by_key(|(wid, _)| **wid)
-                .map(|(wid, _)| *wid);
+            let (need, tr) = {
+                let task = &self.tasks[&id];
+                (task.spec.cores, task.spec.time_request)
+            };
+            if failed.iter().any(|&(c, r)| c <= need && r <= tr) {
+                self.queue.push_back(id);
+                pushed_back += 1;
+                continue;
+            }
+            // A worker qualifies if it has the cores free and its
+            // allocation will outlive the task's *time request*; HQ picks
+            // the lowest-id qualifying worker.
+            let mut pick: Option<WorkerId> = None;
+            if need == 0 {
+                // Degenerate zero-core task: every live worker with
+                // enough allocation left qualifies, including fully-busy
+                // ones the `avail` set excludes (seed semantics).
+                pick = self
+                    .workers
+                    .iter()
+                    .filter(|(_, w)| w.expires_t >= t + tr)
+                    .map(|(wid, _)| *wid)
+                    .min();
+            } else {
+                for &wid in self.avail.iter() {
+                    let w = &self.workers[&wid];
+                    if w.cores_free >= need && w.expires_t >= t + tr {
+                        pick = Some(wid);
+                        break;
+                    }
+                }
+            }
             match pick {
                 Some(wid) => {
                     let w = self.workers.get_mut(&wid).unwrap();
                     w.cores_free -= need;
-                    w.running += 1;
+                    w.running.insert(id);
+                    if w.cores_free == 0 {
+                        self.avail.remove(&wid);
+                    }
                     let task = self.tasks.get_mut(&id).unwrap();
                     task.state = TaskState::Dispatched;
                     task.worker = wid;
                     self.dispatches += 1;
-                    acts.push(HqAction::Timer(
+                    out.push(HqAction::Timer(
                         t + self.cfg.dispatch_latency,
                         HqTimer::Dispatched(id),
                     ));
                 }
-                None => remaining.push(id),
+                None => {
+                    // Minimal-antichain failure frontier.
+                    failed.retain(|&(c, r)| !(need <= c && tr <= r));
+                    failed.push((need, tr));
+                    self.queue.push_back(id);
+                    pushed_back += 1;
+                    // Frontier covers the queue-wide minimum request:
+                    // nothing further down can dispatch either.  Abort
+                    // WITHOUT rotating through the rest of the queue —
+                    // that rotation is itself O(n) and would make every
+                    // pass linear again.
+                    if need <= self.min_cores_floor && tr <= self.min_treq_floor {
+                        aborted = true;
+                        break;
+                    }
+                }
             }
         }
-        self.queue = remaining;
+        if aborted && pushed_back > 0 {
+            // Restore FCFS order: the re-pushed (older) entries must
+            // precede the untouched remainder.  O(pushed_back), which the
+            // frontier keeps small.
+            self.queue.rotate_right(pushed_back);
+        }
         // Unschedulable tasks may need more allocations.
-        acts.extend(self.autoalloc());
-        acts
+        self.autoalloc_into(out);
     }
 
     /// Expire workers whose allocation has ended (driver calls this when
     /// the native allocation job finishes); requeues their tasks and
-    /// replaces capacity via autoalloc.
+    /// replaces capacity via autoalloc.  Cost: O(expired log workers) —
+    /// due entries pop off the expiry heap instead of scanning everyone.
     pub fn expire_workers(&mut self, t: Micros) -> Vec<HqAction> {
-        let expired: Vec<WorkerId> = self
-            .workers
-            .iter()
-            .filter(|(_, w)| w.alive && w.expires_t <= t)
-            .map(|(id, _)| *id)
-            .collect();
-        let mut acts = Vec::new();
-        for wid in expired {
-            acts.extend(self.on_worker_lost(t, wid));
+        let mut out = Vec::new();
+        self.expire_workers_into(t, &mut out);
+        out
+    }
+
+    /// Worker expiry, appending actions into a reusable buffer.
+    pub fn expire_workers_into(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        let mut expired: Vec<WorkerId> = Vec::new();
+        while let Some(&Reverse((et, wid))) = self.expiry.peek() {
+            if et > t {
+                break;
+            }
+            self.expiry.pop();
+            // Lazy deletion: the worker may already be gone.
+            if self.workers.contains_key(&wid) {
+                expired.push(wid);
+            }
         }
-        acts
+        for wid in expired {
+            self.on_worker_lost_into(t, wid, out);
+        }
     }
 
     // ---- introspection ---------------------------------------------------
 
     pub fn pending_tasks(&self) -> usize {
-        self.queue.len()
+        self.queued()
     }
 
     pub fn live_workers(&self) -> usize {
-        self.workers.values().filter(|w| w.alive).count()
+        self.workers.len()
     }
 
     pub fn allocs_waiting(&self) -> u32 {
         self.allocs_in_queue
+    }
+
+    /// Tasks resident in the hot map (bounded by in-flight work).
+    pub fn resident_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Tasks completed and evicted.
+    pub fn retired_count(&self) -> u64 {
+        self.retired
     }
 }
 
@@ -568,5 +758,47 @@ mod tests {
         let starts: Vec<_> = recs.iter().map(|r| r.start).collect();
         assert!((starts[0] as i64 - starts[1] as i64).abs() < MS as i64 * 10,
                 "both start together: {starts:?}");
+    }
+
+    #[test]
+    fn done_tasks_evicted_from_hot_map() {
+        let mut core = HqCore::new(cfg());
+        let subs: Vec<_> = (0..12)
+            .map(|i| (i as Micros, TaskSpec {
+                tag: i, cores: 1, time_request: SEC, time_limit: 100 * SEC,
+            }))
+            .collect();
+        let recs = drive(&mut core, subs, SEC, |_| SEC);
+        assert_eq!(recs.len(), 12);
+        assert_eq!(core.resident_tasks(), 0, "hot map bounded by in-flight");
+        assert_eq!(core.retired_count(), 12);
+        assert_eq!(core.pending_tasks(), 0);
+    }
+
+    #[test]
+    fn expiry_heap_matches_worker_lifetimes() {
+        let mut core = HqCore::new(AutoAllocConfig {
+            backlog: 4, max_worker_count: 4, ..cfg()
+        });
+        for i in 0..4 {
+            core.submit_task(i, TaskSpec {
+                tag: i, cores: 16, time_request: SEC, time_limit: 100 * SEC,
+            });
+        }
+        // Two allocations with different lifetimes.
+        core.on_alloc_up(0, 10 * SEC, 16);
+        core.on_alloc_up(0, 50 * SEC, 16);
+        assert_eq!(core.live_workers(), 2);
+        // Nothing due yet.
+        core.expire_workers(5 * SEC);
+        assert_eq!(core.live_workers(), 2);
+        // First allocation lapses.
+        core.expire_workers(20 * SEC);
+        assert_eq!(core.live_workers(), 1);
+        // Second one too; repeated calls are no-ops.
+        core.expire_workers(60 * SEC);
+        assert_eq!(core.live_workers(), 0);
+        core.expire_workers(61 * SEC);
+        assert_eq!(core.live_workers(), 0);
     }
 }

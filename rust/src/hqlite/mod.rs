@@ -16,6 +16,8 @@
 //!   behind the paper's three-orders-of-magnitude overhead reduction.
 
 pub mod core;
+pub mod reference;
 
-pub use core::{AutoAllocConfig, HqAction, HqCore, HqTimer, TaskId, TaskSpec,
-               WorkerId};
+pub use self::core::{AutoAllocConfig, HqAction, HqCore, HqTimer, TaskId,
+                     TaskSpec, WorkerId};
+pub use self::reference::ReferenceHqCore;

@@ -1,0 +1,308 @@
+//! Reference hqlite core: the pre-index seed semantics, kept verbatim.
+//!
+//! The O(n)-everything implementation the indexed
+//! [`HqCore`](super::core::HqCore) replaced: every dispatch clones and
+//! rescans the whole task queue, every candidate task scans every worker
+//! ever registered, worker loss scans every task ever submitted, and
+//! worker expiry iterates all workers.  Kept for:
+//!
+//! 1. **Equivalence testing** — `tests/scheduler_props.rs` asserts the
+//!    indexed core produces identical record streams on random traces.
+//! 2. **Baseline benchmarking** — `benches/scale.rs` measures speedup
+//!    against this core.
+//!
+//! One deliberate difference from the raw seed: requeue order on worker
+//! loss and multi-worker expiry order were HashMap-iteration dependent
+//! (nondeterministic across processes); here both are sorted — ascending
+//! task id, (expires, worker id) — matching the indexed core.  The seed
+//! never relied on a particular order.
+
+use std::collections::HashMap;
+
+use crate::clock::Micros;
+use crate::metrics::JobRecord;
+
+use super::core::{AutoAllocConfig, HqAction, HqTimer, TaskId, TaskSpec, WorkerId};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum TaskState {
+    Pending,
+    Dispatched,
+    Running,
+    Done,
+}
+
+#[derive(Clone, Debug)]
+struct Task {
+    spec: TaskSpec,
+    state: TaskState,
+    submit_t: Micros,
+    start_t: Micros,
+    worker: WorkerId,
+}
+
+#[derive(Clone, Debug)]
+struct Worker {
+    cores_free: u32,
+    expires_t: Micros,
+    alive: bool,
+}
+
+/// Seed-semantics HQ server (naive queue and worker scans).
+pub struct ReferenceHqCore {
+    cfg: AutoAllocConfig,
+    tasks: HashMap<TaskId, Task>,
+    queue: Vec<TaskId>,
+    workers: HashMap<WorkerId, Worker>,
+    next_task: TaskId,
+    next_worker: WorkerId,
+    next_alloc_tag: u64,
+    allocs_in_queue: u32,
+    workers_started: u32,
+    pub dispatches: u64,
+}
+
+impl ReferenceHqCore {
+    pub fn new(cfg: AutoAllocConfig) -> Self {
+        ReferenceHqCore {
+            cfg,
+            tasks: HashMap::new(),
+            queue: Vec::new(),
+            workers: HashMap::new(),
+            next_task: 1,
+            next_worker: 1,
+            next_alloc_tag: 1,
+            allocs_in_queue: 0,
+            workers_started: 0,
+            dispatches: 0,
+        }
+    }
+
+    pub fn submit_task(&mut self, t: Micros, spec: TaskSpec) -> (TaskId, Vec<HqAction>) {
+        let id = self.next_task;
+        self.next_task += 1;
+        self.tasks.insert(
+            id,
+            Task {
+                spec,
+                state: TaskState::Pending,
+                submit_t: t,
+                start_t: 0,
+                worker: 0,
+            },
+        );
+        self.queue.push(id);
+        let mut acts = self.autoalloc();
+        acts.extend(self.dispatch(t));
+        (id, acts)
+    }
+
+    pub fn on_alloc_up(
+        &mut self,
+        t: Micros,
+        time_limit: Micros,
+        cores_per_worker: u32,
+    ) -> Vec<HqAction> {
+        self.allocs_in_queue = self.allocs_in_queue.saturating_sub(1);
+        for _ in 0..self.cfg.workers_per_alloc {
+            if self.live_workers() as u32 >= self.cfg.max_worker_count {
+                break;
+            }
+            let wid = self.next_worker;
+            self.next_worker += 1;
+            self.workers.insert(
+                wid,
+                Worker {
+                    cores_free: cores_per_worker,
+                    expires_t: t + time_limit,
+                    alive: true,
+                },
+            );
+            self.workers_started += 1;
+        }
+        self.dispatch(t)
+    }
+
+    pub fn on_worker_lost(&mut self, t: Micros, wid: WorkerId) -> Vec<HqAction> {
+        if let Some(w) = self.workers.get_mut(&wid) {
+            w.alive = false;
+        }
+        // Full task-table scan, as in the seed; sorted for determinism.
+        let mut requeued = Vec::new();
+        for (id, task) in self.tasks.iter_mut() {
+            if task.worker == wid
+                && matches!(task.state, TaskState::Running | TaskState::Dispatched)
+            {
+                task.state = TaskState::Pending;
+                requeued.push(*id);
+            }
+        }
+        requeued.sort_unstable();
+        self.queue.extend(requeued);
+        let mut acts = self.autoalloc();
+        acts.extend(self.dispatch(t));
+        acts
+    }
+
+    pub fn on_task_done(&mut self, t: Micros, id: TaskId) -> Vec<HqAction> {
+        self.complete(t, id, false)
+    }
+
+    pub fn on_timer(&mut self, t: Micros, timer: HqTimer) -> Vec<HqAction> {
+        match timer {
+            HqTimer::Dispatched(id) => {
+                let Some(task) = self.tasks.get_mut(&id) else { return vec![] };
+                if task.state != TaskState::Dispatched {
+                    return vec![];
+                }
+                task.state = TaskState::Running;
+                task.start_t = t;
+                let worker = task.worker;
+                let limit = task.spec.time_limit;
+                vec![
+                    HqAction::StartTask { task: id, worker },
+                    HqAction::Timer(t + limit, HqTimer::Limit(id)),
+                ]
+            }
+            HqTimer::Limit(id) => {
+                let running = matches!(
+                    self.tasks.get(&id).map(|x| x.state),
+                    Some(TaskState::Running)
+                );
+                if running {
+                    let mut acts = vec![HqAction::KillTask { task: id }];
+                    acts.extend(self.complete(t, id, true));
+                    acts
+                } else {
+                    vec![]
+                }
+            }
+        }
+    }
+
+    fn complete(&mut self, t: Micros, id: TaskId, truncated: bool) -> Vec<HqAction> {
+        let Some(task) = self.tasks.get_mut(&id) else { return vec![] };
+        if task.state == TaskState::Done {
+            return vec![];
+        }
+        let was_running =
+            matches!(task.state, TaskState::Running | TaskState::Dispatched);
+        task.state = TaskState::Done;
+        let record = JobRecord {
+            tag: task.spec.tag,
+            submit: task.submit_t,
+            start: task.start_t,
+            end: t,
+            cpu: t.saturating_sub(task.start_t),
+            truncated,
+        };
+        let wid = task.worker;
+        let cores = task.spec.cores;
+        if was_running {
+            if let Some(w) = self.workers.get_mut(&wid) {
+                w.cores_free += cores;
+            }
+        }
+        let mut acts = vec![HqAction::TaskCompleted { task: id, record }];
+        acts.extend(self.dispatch(t));
+        acts
+    }
+
+    fn autoalloc(&mut self) -> Vec<HqAction> {
+        let mut acts = Vec::new();
+        while !self.queue.is_empty()
+            && self.allocs_in_queue < self.cfg.backlog
+            && self.live_workers() as u32
+                + self.allocs_in_queue * self.cfg.workers_per_alloc
+                < self.cfg.max_worker_count
+        {
+            self.allocs_in_queue += 1;
+            let tag = self.next_alloc_tag;
+            self.next_alloc_tag += 1;
+            acts.push(HqAction::SubmitAllocation {
+                alloc_tag: tag,
+                req: self.cfg.alloc_request,
+            });
+        }
+        acts
+    }
+
+    /// FCFS dispatch: clone-and-rebuild queue scan, full worker scan per
+    /// candidate (the seed behaviour the indexed core is measured
+    /// against).
+    fn dispatch(&mut self, t: Micros) -> Vec<HqAction> {
+        let mut acts = Vec::new();
+        let mut remaining: Vec<TaskId> = Vec::new();
+        let queue = std::mem::take(&mut self.queue);
+        for id in queue {
+            let task = &self.tasks[&id];
+            if task.state != TaskState::Pending {
+                continue;
+            }
+            let need = task.spec.cores;
+            let tr = task.spec.time_request;
+            let pick = self
+                .workers
+                .iter()
+                .filter(|(_, w)| {
+                    w.alive && w.cores_free >= need && w.expires_t >= t + tr
+                })
+                .min_by_key(|(wid, _)| **wid)
+                .map(|(wid, _)| *wid);
+            match pick {
+                Some(wid) => {
+                    let w = self.workers.get_mut(&wid).unwrap();
+                    w.cores_free -= need;
+                    let task = self.tasks.get_mut(&id).unwrap();
+                    task.state = TaskState::Dispatched;
+                    task.worker = wid;
+                    self.dispatches += 1;
+                    acts.push(HqAction::Timer(
+                        t + self.cfg.dispatch_latency,
+                        HqTimer::Dispatched(id),
+                    ));
+                }
+                None => remaining.push(id),
+            }
+        }
+        self.queue = remaining;
+        acts.extend(self.autoalloc());
+        acts
+    }
+
+    /// Expire workers: full worker-table scan, as in the seed; sorted for
+    /// determinism.
+    pub fn expire_workers(&mut self, t: Micros) -> Vec<HqAction> {
+        let mut expired: Vec<(Micros, WorkerId)> = self
+            .workers
+            .iter()
+            .filter(|(_, w)| w.alive && w.expires_t <= t)
+            .map(|(id, w)| (w.expires_t, *id))
+            .collect();
+        expired.sort_unstable();
+        let mut acts = Vec::new();
+        for (_, wid) in expired {
+            acts.extend(self.on_worker_lost(t, wid));
+        }
+        acts
+    }
+
+    // ---- introspection ---------------------------------------------------
+
+    pub fn pending_tasks(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn live_workers(&self) -> usize {
+        self.workers.values().filter(|w| w.alive).count()
+    }
+
+    pub fn allocs_waiting(&self) -> u32 {
+        self.allocs_in_queue
+    }
+
+    /// Tasks resident in the (never-evicting) map.
+    pub fn resident_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+}

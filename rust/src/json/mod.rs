@@ -8,6 +8,7 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::fmt::Write as _;
 
 /// A JSON value.  Object keys are ordered (BTreeMap) so serialisation is
 /// deterministic — useful for golden tests and reproducible logs.
@@ -366,9 +367,13 @@ fn write_into(v: &Value, out: &mut String) {
         Value::Bool(false) => out.push_str("false"),
         Value::Num(n) => {
             if n.fract() == 0.0 && n.abs() < 1e15 {
-                out.push_str(&format!("{}", *n as i64));
+                // Integral fast path: digits straight into the output
+                // buffer, no intermediate String allocation (this is the
+                // UM-Bridge serve hot path measured by benches/hotpath.rs).
+                write_i64(*n as i64, out);
             } else {
-                out.push_str(&format!("{n}"));
+                // fmt::Write appends in place (format! would allocate).
+                let _ = write!(out, "{n}");
             }
         }
         Value::Str(s) => write_str(s, out),
@@ -397,6 +402,27 @@ fn write_into(v: &Value, out: &mut String) {
     }
 }
 
+/// itoa-style integer serialisation: digits composed in a stack buffer,
+/// appended to `out` in one call.
+fn write_i64(v: i64, out: &mut String) {
+    if v < 0 {
+        out.push('-');
+    }
+    let mut m = v.unsigned_abs();
+    let mut buf = [0u8; 20];
+    let mut i = buf.len();
+    loop {
+        i -= 1;
+        buf[i] = b'0' + (m % 10) as u8;
+        m /= 10;
+        if m == 0 {
+            break;
+        }
+    }
+    // Safety by construction: ASCII digits only.
+    out.push_str(std::str::from_utf8(&buf[i..]).unwrap());
+}
+
 fn write_str(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
@@ -407,7 +433,7 @@ fn write_str(s: &str, out: &mut String) {
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
             c if (c as u32) < 0x20 => {
-                out.push_str(&format!("\\u{:04x}", c as u32))
+                let _ = write!(out, "\\u{:04x}", c as u32);
             }
             c => out.push(c),
         }

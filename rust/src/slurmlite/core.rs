@@ -4,8 +4,31 @@
 //! actions for the driver (DES or real-time daemon) to interpret.  The
 //! driver owns workload durations — slurmlite only learns a job is done
 //! when the driver calls [`SlurmCore::on_finish`].
+//!
+//! # Scale architecture (see PERF.md)
+//!
+//! UQ workflows submit 10⁵–10⁶ similar jobs, so every per-event cost
+//! must stay (amortised) logarithmic in the pending-queue depth:
+//!
+//! * The pending queue is a set of per-user `BTreeSet<(eligible_t, seq,
+//!   id)>` lanes.  Within one user every job carries the same quota
+//!   offset, so lane order *is* priority order; a scheduler pass merges
+//!   the lane heads instead of re-sorting the whole queue.
+//! * Placement failures are cached per pass in a dominance frontier: once
+//!   a `(cores, ram)` shape fails, any shape requesting at least as much
+//!   is skipped without touching the inventory, and the pass terminates
+//!   outright when the frontier covers the queue-wide minimum request —
+//!   O(started + 1) per cycle for the homogeneous queues UQ produces.
+//! * `cancel` removes the tree entry directly: O(log n), replacing the
+//!   seed's O(n) `Vec::retain`.
+//! * Terminal jobs are evicted from the hot `jobs` map into a dense
+//!   append-only final-state archive (1 byte/job), so the map is bounded
+//!   by in-flight work no matter how many jobs have retired.
+//! * Every transition appends into a caller-supplied action buffer
+//!   (`*_into` methods); the allocating wrappers survive for call sites
+//!   where a fresh `Vec` per event is fine (live daemon, tests).
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 use crate::cluster::{ClusterSpec, Inventory, JobRequest, OverheadModel};
 use crate::clock::Micros;
@@ -17,6 +40,11 @@ pub type JobId = u64;
 /// User id 0 is the experiment user; background load uses user 1.
 pub const USER_EXPERIMENT: u32 = 0;
 pub const USER_BACKGROUND: u32 = 1;
+
+/// Pending-lane key: (eligible time, admission sequence, job id).  The
+/// sequence is assigned when the job becomes Pending and reproduces the
+/// seed's stable-sort tie-breaking (queue entry order).
+type PendKey = (Micros, u64, JobId);
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum JobState {
@@ -67,6 +95,7 @@ pub enum Timer {
 
 #[derive(Clone, Debug)]
 struct Job {
+    #[allow(dead_code)] // diagnostic mirror of the map key
     id: JobId,
     user: u32,
     tag: u64,
@@ -75,19 +104,42 @@ struct Job {
     submit_t: Micros,
     eligible_t: Micros,
     alloc_t: Micros,
+    #[allow(dead_code)] // kept for squeue-style debugging
     run_t: Micros,
     node: usize,
+    #[allow(dead_code)] // kept for squeue-style debugging
     contention: f64,
+    /// Pending-lane sequence (admission order; valid while Pending).
+    pend_seq: u64,
     /// Background jobs carry their own duration (self-finishing).
     bg_duration: Option<Micros>,
 }
+
+/// Terminal states in the retired-job archive (1 byte per job ever
+/// submitted; the hot map holds in-flight jobs only).
+const FINAL_NONE: u8 = 0;
+const FINAL_DONE: u8 = 1;
+const FINAL_CANCELLED: u8 = 2;
 
 /// The scheduler core.
 pub struct SlurmCore {
     inv: Inventory,
     model: OverheadModel,
+    /// In-flight jobs only (Submitting/Pending/Starting/Running).
     jobs: HashMap<JobId, Job>,
-    pending: Vec<JobId>,
+    /// Priority-indexed pending queue, one ordered lane per user.
+    pending: HashMap<u32, BTreeSet<PendKey>>,
+    pending_len: usize,
+    pend_seq: u64,
+    /// Conservative lower bounds over every request that ever entered the
+    /// pending queue (monotone; never raised).  Used to terminate a
+    /// scheduler pass early once the failure frontier covers them.
+    min_cores_floor: u32,
+    min_ram_floor: u32,
+    /// Append-only archive of terminal states, indexed by `JobId` (ids
+    /// are dense and sequential, so this is a flat byte array).
+    final_states: Vec<u8>,
+    retired: u64,
     next_id: JobId,
     user_submits: HashMap<u32, u32>,
     rng: Rng,
@@ -102,7 +154,13 @@ impl SlurmCore {
             inv: Inventory::new(spec),
             model,
             jobs: HashMap::new(),
-            pending: Vec::new(),
+            pending: HashMap::new(),
+            pending_len: 0,
+            pend_seq: 0,
+            min_cores_floor: u32::MAX,
+            min_ram_floor: u32::MAX,
+            final_states: Vec::new(),
+            retired: 0,
             next_id: 1,
             user_submits: HashMap::new(),
             rng: Rng::new(seed),
@@ -135,6 +193,20 @@ impl SlurmCore {
         tag: u64,
         req: JobRequest,
     ) -> (JobId, Vec<Action>) {
+        let mut out = Vec::new();
+        let id = self.submit_into(t, user, tag, req, &mut out);
+        (id, out)
+    }
+
+    /// sbatch, appending actions into a reusable buffer.
+    pub fn submit_into(
+        &mut self,
+        t: Micros,
+        user: u32,
+        tag: u64,
+        req: JobRequest,
+        out: &mut Vec<Action>,
+    ) -> JobId {
         let id = self.next_id;
         self.next_id += 1;
         *self.user_submits.entry(user).or_insert(0) += 1;
@@ -158,21 +230,37 @@ impl SlurmCore {
                 run_t: 0,
                 node: usize::MAX,
                 contention: 1.0,
+                pend_seq: 0,
                 bg_duration: None,
             },
         );
-        (id, vec![Action::Timer(eligible_t, Timer::Eligible(id))])
+        out.push(Action::Timer(eligible_t, Timer::Eligible(id)));
+        id
     }
 
     /// scancel.
     pub fn cancel(&mut self, t: Micros, id: JobId) -> Vec<Action> {
-        let Some(job) = self.jobs.get_mut(&id) else { return vec![] };
+        let mut out = Vec::new();
+        self.cancel_into(t, id, &mut out);
+        out
+    }
+
+    /// scancel, appending actions into a reusable buffer.
+    pub fn cancel_into(&mut self, t: Micros, id: JobId, out: &mut Vec<Action>) {
+        let Some(job) = self.jobs.get(&id) else { return };
         match job.state {
             JobState::Pending | JobState::Submitting => {
-                job.state = JobState::Cancelled;
-                self.pending.retain(|&p| p != id);
-                let job = &self.jobs[&id];
-                vec![Action::Completed {
+                if job.state == JobState::Pending {
+                    let key = (job.eligible_t, job.pend_seq, id);
+                    let user = job.user;
+                    if let Some(lane) = self.pending.get_mut(&user) {
+                        if lane.remove(&key) {
+                            self.pending_len -= 1;
+                        }
+                    }
+                }
+                let job = self.retire(id, FINAL_CANCELLED);
+                out.push(Action::Completed {
                     job: id,
                     record: JobRecord {
                         tag: job.tag,
@@ -182,100 +270,178 @@ impl SlurmCore {
                         cpu: 0,
                         truncated: true,
                     },
-                }]
+                });
             }
-            JobState::Starting | JobState::Running => self.finish_inner(t, id, true),
-            _ => vec![],
+            JobState::Starting | JobState::Running => {
+                self.finish_inner(t, id, true, out)
+            }
+            _ => {}
         }
     }
 
     /// Driver signals the workload completed.
     pub fn on_finish(&mut self, t: Micros, id: JobId) -> Vec<Action> {
-        self.finish_inner(t, id, false)
+        let mut out = Vec::new();
+        self.on_finish_into(t, id, &mut out);
+        out
+    }
+
+    /// Workload-completion signal, appending into a reusable buffer.
+    pub fn on_finish_into(&mut self, t: Micros, id: JobId, out: &mut Vec<Action>) {
+        self.finish_inner(t, id, false, out)
     }
 
     /// Timer dispatch.
     pub fn on_timer(&mut self, t: Micros, timer: Timer) -> Vec<Action> {
+        let mut out = Vec::new();
+        self.on_timer_into(t, timer, &mut out);
+        out
+    }
+
+    /// Timer dispatch, appending into a reusable buffer.
+    pub fn on_timer_into(&mut self, t: Micros, timer: Timer, out: &mut Vec<Action>) {
         match timer {
-            Timer::Cycle => self.on_cycle(t),
+            Timer::Cycle => self.on_cycle(t, out),
             Timer::Eligible(id) => {
                 if let Some(j) = self.jobs.get_mut(&id) {
                     if j.state == JobState::Submitting {
                         j.state = JobState::Pending;
-                        self.pending.push(id);
+                        j.pend_seq = self.pend_seq;
+                        self.pend_seq += 1;
+                        let key = (j.eligible_t, j.pend_seq, id);
+                        let user = j.user;
+                        self.min_cores_floor = self.min_cores_floor.min(j.req.cores);
+                        self.min_ram_floor = self.min_ram_floor.min(j.req.ram_gb);
+                        self.pending.entry(user).or_default().insert(key);
+                        self.pending_len += 1;
                     }
                 }
-                vec![]
             }
-            Timer::Start(id) => self.on_prolog_done(t, id),
+            Timer::Start(id) => self.on_prolog_done(t, id, out),
             Timer::Limit(id) => {
                 let timed_out = matches!(
                     self.jobs.get(&id).map(|j| j.state),
                     Some(JobState::Running) | Some(JobState::Starting)
                 );
                 if timed_out {
-                    let mut acts = vec![Action::TimedOut { job: id }];
-                    acts.extend(self.finish_inner(t, id, true));
-                    acts
-                } else {
-                    vec![]
+                    out.push(Action::TimedOut { job: id });
+                    self.finish_inner(t, id, true, out);
                 }
             }
-            Timer::BgArrival => self.on_bg_arrival(t),
-            Timer::BgFinish(id) => self.on_finish(t, id),
+            Timer::BgArrival => self.on_bg_arrival(t, out),
+            Timer::BgFinish(id) => self.on_finish_into(t, id, out),
         }
     }
 
     /// One scheduler pass: place pending jobs in priority order.
-    fn on_cycle(&mut self, t: Micros) -> Vec<Action> {
+    ///
+    /// Priority: older eligible time first, with per-user quota decay
+    /// (a user past the quota ages `quota_penalty` slower per excess
+    /// submission — the Hamilton8 behaviour in section IV).  The offset
+    /// is uniform within a user, so each user lane is already sorted;
+    /// this pass k-way-merges the lane heads (k = number of users) and
+    /// first-fits each candidate, caching placement failures in a
+    /// dominance frontier so homogeneous queues cost O(started + 1)
+    /// instead of O(pending · nodes).
+    fn on_cycle(&mut self, t: Micros, out: &mut Vec<Action>) {
         self.cycles += 1;
-        let mut acts = Vec::new();
 
-        // Priority: older eligible time first, with per-user quota decay
-        // (a user past the quota ages `quota_penalty` slower per excess
-        // submission — the Hamilton8 behaviour in section IV).
-        let mut order: Vec<JobId> = self.pending.clone();
-        let prio = |core: &Self, id: JobId| -> i64 {
-            let j = &core.jobs[&id];
-            let submits = *core.user_submits.get(&j.user).unwrap_or(&0);
-            let excess = submits.saturating_sub(core.model.user_quota) as i64;
-            // Lower is better (effective queue entry time).
-            j.eligible_t as i64
-                + excess * core.model.quota_penalty as i64
-                    * if j.user == USER_BACKGROUND { 0 } else { 1 }
-        };
-        order.sort_by_key(|&id| prio(self, id));
+        // Lane construction: per-user priority offset, computed once (the
+        // submit counters cannot change mid-pass).
+        let pending = &self.pending;
+        let mut lanes: Vec<(i64, u32, std::iter::Peekable<std::collections::btree_set::Iter<'_, PendKey>>)> =
+            Vec::with_capacity(pending.len());
+        for (&user, lane) in pending.iter() {
+            if lane.is_empty() {
+                continue;
+            }
+            let submits = *self.user_submits.get(&user).unwrap_or(&0);
+            let excess = submits.saturating_sub(self.model.user_quota) as i64;
+            let off = if user == USER_BACKGROUND {
+                0
+            } else {
+                excess * self.model.quota_penalty as i64
+            };
+            lanes.push((off, user, lane.iter().peekable()));
+        }
 
         // First-fit with implicit backfill: any job that fits may start
         // this cycle even if an earlier job does not fit.
-        for id in order {
-            let job = &self.jobs[&id];
-            if job.state != JobState::Pending {
+        let mut started: Vec<(u32, PendKey)> = Vec::new();
+        // Request shapes that failed placement this pass.  Free resources
+        // only shrink within a pass, so a failed shape stays failed and
+        // dominates every request at least as large.
+        let mut failed: Vec<(u32, u32)> = Vec::new();
+        loop {
+            // Pick the lane whose head has the lowest (priority, seq).
+            // Sequence numbers are globally unique, so the choice is
+            // deterministic regardless of lane enumeration order.
+            let mut best: Option<(i64, u64, usize)> = None;
+            for (i, lane) in lanes.iter_mut().enumerate() {
+                if let Some(&&(elig, seq, _)) = lane.2.peek() {
+                    let prio = elig as i64 + lane.0;
+                    if best.map_or(true, |(bp, bs, _)| (prio, seq) < (bp, bs)) {
+                        best = Some((prio, seq, i));
+                    }
+                }
+            }
+            let Some((_, _, li)) = best else { break };
+            let &(elig, seq, id) = lanes[li].2.next().unwrap();
+            let user = lanes[li].1;
+
+            let Some(job) = self.jobs.get(&id) else {
+                debug_assert!(false, "pending lane entry without job");
+                continue;
+            };
+            debug_assert_eq!(job.state, JobState::Pending);
+            let req = job.req;
+            if failed.iter().any(|&(c, r)| c <= req.cores && r <= req.ram_gb) {
                 continue;
             }
-            if let Some(node) = self.inv.find_fit(&job.req) {
-                self.inv.allocate(node, &job.req);
-                let job = self.jobs.get_mut(&id).unwrap();
-                job.state = JobState::Starting;
-                job.alloc_t = t;
-                job.node = node;
-                self.pending.retain(|&p| p != id);
-                acts.push(Action::Timer(t + self.model.prolog, Timer::Start(id)));
-                acts.push(Action::Timer(
-                    t + self.model.prolog + job.req.time_limit,
-                    Timer::Limit(id),
-                ));
+            match self.inv.find_fit(&req) {
+                Some(node) => {
+                    self.inv.allocate(node, &req);
+                    let job = self.jobs.get_mut(&id).unwrap();
+                    job.state = JobState::Starting;
+                    job.alloc_t = t;
+                    job.node = node;
+                    started.push((user, (elig, seq, id)));
+                    out.push(Action::Timer(t + self.model.prolog, Timer::Start(id)));
+                    out.push(Action::Timer(
+                        t + self.model.prolog + req.time_limit,
+                        Timer::Limit(id),
+                    ));
+                }
+                None => {
+                    // Keep the frontier a minimal antichain.
+                    failed.retain(|&(c, r)| !(req.cores <= c && req.ram_gb <= r));
+                    failed.push((req.cores, req.ram_gb));
+                    // Frontier covers the smallest request the queue has
+                    // ever seen: nothing further down can fit either.
+                    if req.cores <= self.min_cores_floor
+                        && req.ram_gb <= self.min_ram_floor
+                    {
+                        break;
+                    }
+                }
             }
         }
+        drop(lanes);
 
-        acts.push(Action::Timer(t + self.model.sched_cycle, Timer::Cycle));
-        acts
+        for (user, key) in started {
+            if let Some(lane) = self.pending.get_mut(&user) {
+                lane.remove(&key);
+            }
+            self.pending_len -= 1;
+        }
+
+        out.push(Action::Timer(t + self.model.sched_cycle, Timer::Cycle));
     }
 
-    fn on_prolog_done(&mut self, t: Micros, id: JobId) -> Vec<Action> {
-        let Some(job) = self.jobs.get_mut(&id) else { return vec![] };
+    fn on_prolog_done(&mut self, t: Micros, id: JobId, out: &mut Vec<Action>) {
+        let Some(job) = self.jobs.get_mut(&id) else { return };
         if job.state != JobState::Starting {
-            return vec![];
+            return;
         }
         job.state = JobState::Running;
         job.run_t = t;
@@ -285,22 +451,22 @@ impl SlurmCore {
         let contention =
             1.0 + self.model.contention_per_neighbor * neighbors as f64;
         self.jobs.get_mut(&id).unwrap().contention = contention;
-        let mut acts = vec![Action::Launched { job: id, node, contention }];
+        out.push(Action::Launched { job: id, node, contention });
         if let Some(dur) = bg {
             // Background jobs finish themselves relative to launch.
-            acts.push(Action::Timer(t + dur, Timer::BgFinish(id)));
+            out.push(Action::Timer(t + dur, Timer::BgFinish(id)));
         }
-        acts
     }
 
-    fn finish_inner(&mut self, t: Micros, id: JobId, truncated: bool) -> Vec<Action> {
-        let Some(job) = self.jobs.get_mut(&id) else { return vec![] };
+    fn finish_inner(&mut self, t: Micros, id: JobId, truncated: bool, out: &mut Vec<Action>) {
+        let Some(job) = self.jobs.get(&id) else { return };
         if !matches!(job.state, JobState::Running | JobState::Starting) {
-            return vec![];
+            return;
         }
-        job.state = if truncated { JobState::Cancelled } else { JobState::Done };
-        let node = job.node;
-        let req = job.req.clone();
+        let job = self.retire(
+            id,
+            if truncated { FINAL_CANCELLED } else { FINAL_DONE },
+        );
         // CPU time starts when the job starts on the node (paper section
         // IV.A: "the timer begins when the job starts") — it therefore
         // *includes* the prolog/environment setup, which is exactly why
@@ -314,39 +480,58 @@ impl SlurmCore {
             cpu,
             truncated,
         };
-        self.inv.release(node, &req);
-        vec![Action::Completed { job: id, record }]
+        self.inv.release(job.node, &job.req);
+        out.push(Action::Completed { job: id, record });
     }
 
-    fn on_bg_arrival(&mut self, t: Micros) -> Vec<Action> {
+    /// Evict a job from the hot map into the terminal-state archive.
+    fn retire(&mut self, id: JobId, final_state: u8) -> Job {
+        let job = self.jobs.remove(&id).expect("retire of unknown job");
+        let idx = id as usize;
+        if self.final_states.len() <= idx {
+            self.final_states.resize(idx + 1, FINAL_NONE);
+        }
+        self.final_states[idx] = final_state;
+        self.retired += 1;
+        job
+    }
+
+    fn on_bg_arrival(&mut self, t: Micros, out: &mut Vec<Action>) {
         // Keep the background queue bounded (production schedulers cap
         // per-user queued jobs); beyond the cap, arrivals balk.
-        if self.pending.len() > 512 {
+        if self.pending_len > 512 {
             let dt = self.rng.exponential(self.model.bg_interarrival as f64);
-            return vec![Action::Timer(t + dt as Micros, Timer::BgArrival)];
+            out.push(Action::Timer(t + dt as Micros, Timer::BgArrival));
+            return;
         }
         // Sample a background job and submit it as user 1.
         let (lo, hi) = self.model.bg_cores;
         let cores = lo + (self.rng.below((hi - lo + 1) as u64) as u32);
         let dur = self.rng.exponential(self.model.bg_duration as f64) as Micros;
         let req = JobRequest::new(cores, (cores / 2).max(4), dur * 4 + 1);
-        let (id, mut acts) = self.submit(t, USER_BACKGROUND, u64::MAX, req);
+        let id = self.submit_into(t, USER_BACKGROUND, u64::MAX, req, out);
         // Background jobs finish themselves `dur` after launch (see
         // on_prolog_done).
         self.jobs.get_mut(&id).unwrap().bg_duration = Some(dur);
         let dt = self.rng.exponential(self.model.bg_interarrival as f64);
-        acts.push(Action::Timer(t + dt as Micros, Timer::BgArrival));
-        acts
+        out.push(Action::Timer(t + dt as Micros, Timer::BgArrival));
     }
 
     // ---- Introspection (squeue-like) ------------------------------------
 
     pub fn state_of(&self, id: JobId) -> Option<JobState> {
-        self.jobs.get(&id).map(|j| j.state)
+        if let Some(j) = self.jobs.get(&id) {
+            return Some(j.state);
+        }
+        match self.final_states.get(id as usize) {
+            Some(&FINAL_DONE) => Some(JobState::Done),
+            Some(&FINAL_CANCELLED) => Some(JobState::Cancelled),
+            _ => None,
+        }
     }
 
     pub fn pending_count(&self) -> usize {
-        self.pending.len()
+        self.pending_len
     }
 
     pub fn running_count(&self) -> usize {
@@ -360,10 +545,22 @@ impl SlurmCore {
         self.inv.used_cores()
     }
 
+    /// Node of an in-flight job (terminal jobs are archived without
+    /// placement detail).
     pub fn node_of(&self, id: JobId) -> Option<usize> {
         self.jobs.get(&id).and_then(|j| {
             (j.node != usize::MAX).then_some(j.node)
         })
+    }
+
+    /// Jobs resident in the hot map (bounded by in-flight work).
+    pub fn resident_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Jobs evicted to the terminal-state archive.
+    pub fn retired_count(&self) -> u64 {
+        self.retired
     }
 }
 
@@ -585,5 +782,44 @@ mod tests {
         let recs = drive(&mut core, subs);
         assert_eq!(recs.len(), 20);
         assert_eq!(core.used_cores(), 0); // everything released
+    }
+
+    #[test]
+    fn terminal_jobs_evicted_from_hot_map() {
+        let mut core = quiet_core();
+        let subs: Vec<_> = (0..10)
+            .map(|_| (0, JobRequest::new(1, 4, 100 * SEC), SEC))
+            .collect();
+        let recs = drive(&mut core, subs);
+        assert_eq!(recs.len(), 10);
+        // Every experiment job retired out of the hot map; states remain
+        // queryable through the archive.
+        assert_eq!(core.resident_jobs(), 0);
+        assert_eq!(core.retired_count(), 10);
+        for id in 1..=10u64 {
+            assert_eq!(core.state_of(id), Some(JobState::Done));
+        }
+        assert_eq!(core.state_of(999), None);
+    }
+
+    #[test]
+    fn cancel_submitting_job_never_becomes_pending() {
+        let mut core = quiet_core();
+        let (id, acts) = core.submit(0, USER_EXPERIMENT, 3,
+                                     JobRequest::new(1, 4, SEC));
+        let &Action::Timer(te, Timer::Eligible(eid)) = &acts[0] else {
+            panic!("expected eligible timer");
+        };
+        assert_eq!(eid, id);
+        // Cancel while the sbatch RPC is still in flight…
+        let acts = core.cancel(te / 2, id);
+        assert!(matches!(acts[0], Action::Completed { ref record, .. }
+                         if record.truncated));
+        assert_eq!(core.state_of(id), Some(JobState::Cancelled));
+        // …then the eligible timer fires late: must stay cancelled and
+        // never enter the pending index.
+        core.on_timer(te, Timer::Eligible(id));
+        assert_eq!(core.pending_count(), 0);
+        assert_eq!(core.state_of(id), Some(JobState::Cancelled));
     }
 }

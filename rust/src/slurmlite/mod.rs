@@ -11,6 +11,8 @@
 
 pub mod core;
 pub mod daemon;
+pub mod reference;
 
-pub use core::{Action, JobId, JobState, SlurmCore};
-pub use daemon::SlurmDaemon;
+pub use self::core::{Action, JobId, JobState, SlurmCore};
+pub use self::daemon::SlurmDaemon;
+pub use self::reference::ReferenceSlurmCore;

@@ -1,0 +1,303 @@
+//! Reference slurmlite core: the pre-index seed semantics, kept verbatim.
+//!
+//! This is the O(n)-everything implementation the indexed
+//! [`SlurmCore`](super::core::SlurmCore) replaced: a flat pending `Vec`
+//! re-sorted every scheduler pass, `Vec::retain` cancellation, and a
+//! jobs map that grows forever.  It exists for two reasons:
+//!
+//! 1. **Equivalence testing** — `tests/scheduler_props.rs` drives random
+//!    traces through both cores and asserts identical action/record
+//!    streams; the reference pins the seed semantics.
+//! 2. **Baseline benchmarking** — `benches/scale.rs` measures the
+//!    speedup of the indexed core against this one.
+//!
+//! Behaviour matches the seed exactly; both cores consume the RNG in the
+//! same order, so identical seeds produce identical background load.
+
+use std::collections::HashMap;
+
+use crate::cluster::{ClusterSpec, Inventory, JobRequest, OverheadModel};
+use crate::clock::Micros;
+use crate::metrics::JobRecord;
+use crate::util::Rng;
+
+use super::core::{Action, JobId, JobState, Timer, USER_BACKGROUND};
+
+// `id`/`run_t`/`contention` mirror the seed's bookkeeping; they are
+// write-only here but kept so the struct layout matches the original.
+#[allow(dead_code)]
+#[derive(Clone, Debug)]
+struct Job {
+    id: JobId,
+    user: u32,
+    tag: u64,
+    req: JobRequest,
+    state: JobState,
+    submit_t: Micros,
+    eligible_t: Micros,
+    alloc_t: Micros,
+    run_t: Micros,
+    node: usize,
+    contention: f64,
+    bg_duration: Option<Micros>,
+}
+
+/// Seed-semantics scheduler core (naive pending queue).
+pub struct ReferenceSlurmCore {
+    inv: Inventory,
+    model: OverheadModel,
+    jobs: HashMap<JobId, Job>,
+    pending: Vec<JobId>,
+    next_id: JobId,
+    user_submits: HashMap<u32, u32>,
+    rng: Rng,
+    bg_started: bool,
+    pub cycles: u64,
+}
+
+impl ReferenceSlurmCore {
+    pub fn new(spec: ClusterSpec, model: OverheadModel, seed: u64) -> Self {
+        ReferenceSlurmCore {
+            inv: Inventory::new(spec),
+            model,
+            jobs: HashMap::new(),
+            pending: Vec::new(),
+            next_id: 1,
+            user_submits: HashMap::new(),
+            rng: Rng::new(seed),
+            bg_started: false,
+            cycles: 0,
+        }
+    }
+
+    pub fn model(&self) -> &OverheadModel {
+        &self.model
+    }
+
+    pub fn bootstrap(&mut self, t: Micros) -> Vec<Action> {
+        let mut acts = vec![Action::Timer(t + self.model.sched_cycle, Timer::Cycle)];
+        if self.model.bg_interarrival != Micros::MAX && !self.bg_started {
+            self.bg_started = true;
+            let dt = self.rng.exponential(self.model.bg_interarrival as f64);
+            acts.push(Action::Timer(t + dt as Micros, Timer::BgArrival));
+        }
+        acts
+    }
+
+    pub fn submit(
+        &mut self,
+        t: Micros,
+        user: u32,
+        tag: u64,
+        req: JobRequest,
+    ) -> (JobId, Vec<Action>) {
+        let id = self.next_id;
+        self.next_id += 1;
+        *self.user_submits.entry(user).or_insert(0) += 1;
+        let bf = (self.model.backfill_delay_factor
+            * req.time_limit.min(self.model.backfill_cap) as f64
+            * self.rng.range(0.5, 1.5)) as Micros;
+        let eligible_t = t + self.model.submit_latency + bf;
+        self.jobs.insert(
+            id,
+            Job {
+                id,
+                user,
+                tag,
+                req,
+                state: JobState::Submitting,
+                submit_t: t,
+                eligible_t,
+                alloc_t: 0,
+                run_t: 0,
+                node: usize::MAX,
+                contention: 1.0,
+                bg_duration: None,
+            },
+        );
+        (id, vec![Action::Timer(eligible_t, Timer::Eligible(id))])
+    }
+
+    pub fn cancel(&mut self, t: Micros, id: JobId) -> Vec<Action> {
+        let Some(job) = self.jobs.get_mut(&id) else { return vec![] };
+        match job.state {
+            JobState::Pending | JobState::Submitting => {
+                job.state = JobState::Cancelled;
+                self.pending.retain(|&p| p != id);
+                let job = &self.jobs[&id];
+                vec![Action::Completed {
+                    job: id,
+                    record: JobRecord {
+                        tag: job.tag,
+                        submit: job.submit_t,
+                        start: t,
+                        end: t,
+                        cpu: 0,
+                        truncated: true,
+                    },
+                }]
+            }
+            JobState::Starting | JobState::Running => self.finish_inner(t, id, true),
+            _ => vec![],
+        }
+    }
+
+    pub fn on_finish(&mut self, t: Micros, id: JobId) -> Vec<Action> {
+        self.finish_inner(t, id, false)
+    }
+
+    pub fn on_timer(&mut self, t: Micros, timer: Timer) -> Vec<Action> {
+        match timer {
+            Timer::Cycle => self.on_cycle(t),
+            Timer::Eligible(id) => {
+                if let Some(j) = self.jobs.get_mut(&id) {
+                    if j.state == JobState::Submitting {
+                        j.state = JobState::Pending;
+                        self.pending.push(id);
+                    }
+                }
+                vec![]
+            }
+            Timer::Start(id) => self.on_prolog_done(t, id),
+            Timer::Limit(id) => {
+                let timed_out = matches!(
+                    self.jobs.get(&id).map(|j| j.state),
+                    Some(JobState::Running) | Some(JobState::Starting)
+                );
+                if timed_out {
+                    let mut acts = vec![Action::TimedOut { job: id }];
+                    acts.extend(self.finish_inner(t, id, true));
+                    acts
+                } else {
+                    vec![]
+                }
+            }
+            Timer::BgArrival => self.on_bg_arrival(t),
+            Timer::BgFinish(id) => self.on_finish(t, id),
+        }
+    }
+
+    /// One scheduler pass: full clone + sort of the pending queue (the
+    /// seed behaviour the indexed core is benchmarked against).
+    fn on_cycle(&mut self, t: Micros) -> Vec<Action> {
+        self.cycles += 1;
+        let mut acts = Vec::new();
+
+        let mut order: Vec<JobId> = self.pending.clone();
+        let prio = |core: &Self, id: JobId| -> i64 {
+            let j = &core.jobs[&id];
+            let submits = *core.user_submits.get(&j.user).unwrap_or(&0);
+            let excess = submits.saturating_sub(core.model.user_quota) as i64;
+            j.eligible_t as i64
+                + excess * core.model.quota_penalty as i64
+                    * if j.user == USER_BACKGROUND { 0 } else { 1 }
+        };
+        order.sort_by_key(|&id| prio(self, id));
+
+        for id in order {
+            let job = &self.jobs[&id];
+            if job.state != JobState::Pending {
+                continue;
+            }
+            if let Some(node) = self.inv.find_fit(&job.req) {
+                self.inv.allocate(node, &job.req);
+                let job = self.jobs.get_mut(&id).unwrap();
+                job.state = JobState::Starting;
+                job.alloc_t = t;
+                job.node = node;
+                self.pending.retain(|&p| p != id);
+                acts.push(Action::Timer(t + self.model.prolog, Timer::Start(id)));
+                acts.push(Action::Timer(
+                    t + self.model.prolog + job.req.time_limit,
+                    Timer::Limit(id),
+                ));
+            }
+        }
+
+        acts.push(Action::Timer(t + self.model.sched_cycle, Timer::Cycle));
+        acts
+    }
+
+    fn on_prolog_done(&mut self, t: Micros, id: JobId) -> Vec<Action> {
+        let Some(job) = self.jobs.get_mut(&id) else { return vec![] };
+        if job.state != JobState::Starting {
+            return vec![];
+        }
+        job.state = JobState::Running;
+        job.run_t = t;
+        let node = job.node;
+        let bg = job.bg_duration;
+        let neighbors = self.inv.neighbors(node);
+        let contention =
+            1.0 + self.model.contention_per_neighbor * neighbors as f64;
+        self.jobs.get_mut(&id).unwrap().contention = contention;
+        let mut acts = vec![Action::Launched { job: id, node, contention }];
+        if let Some(dur) = bg {
+            acts.push(Action::Timer(t + dur, Timer::BgFinish(id)));
+        }
+        acts
+    }
+
+    fn finish_inner(&mut self, t: Micros, id: JobId, truncated: bool) -> Vec<Action> {
+        let Some(job) = self.jobs.get_mut(&id) else { return vec![] };
+        if !matches!(job.state, JobState::Running | JobState::Starting) {
+            return vec![];
+        }
+        job.state = if truncated { JobState::Cancelled } else { JobState::Done };
+        let node = job.node;
+        let req = job.req;
+        let cpu = t.saturating_sub(job.alloc_t);
+        let record = JobRecord {
+            tag: job.tag,
+            submit: job.submit_t,
+            start: job.alloc_t,
+            end: t,
+            cpu,
+            truncated,
+        };
+        self.inv.release(node, &req);
+        vec![Action::Completed { job: id, record }]
+    }
+
+    fn on_bg_arrival(&mut self, t: Micros) -> Vec<Action> {
+        if self.pending.len() > 512 {
+            let dt = self.rng.exponential(self.model.bg_interarrival as f64);
+            return vec![Action::Timer(t + dt as Micros, Timer::BgArrival)];
+        }
+        let (lo, hi) = self.model.bg_cores;
+        let cores = lo + (self.rng.below((hi - lo + 1) as u64) as u32);
+        let dur = self.rng.exponential(self.model.bg_duration as f64) as Micros;
+        let req = JobRequest::new(cores, (cores / 2).max(4), dur * 4 + 1);
+        let (id, mut acts) = self.submit(t, USER_BACKGROUND, u64::MAX, req);
+        self.jobs.get_mut(&id).unwrap().bg_duration = Some(dur);
+        let dt = self.rng.exponential(self.model.bg_interarrival as f64);
+        acts.push(Action::Timer(t + dt as Micros, Timer::BgArrival));
+        acts
+    }
+
+    // ---- Introspection ---------------------------------------------------
+
+    pub fn state_of(&self, id: JobId) -> Option<JobState> {
+        self.jobs.get(&id).map(|j| j.state)
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.jobs
+            .values()
+            .filter(|j| matches!(j.state, JobState::Running | JobState::Starting))
+            .count()
+    }
+
+    pub fn used_cores(&self) -> u64 {
+        self.inv.used_cores()
+    }
+
+    /// Jobs resident in the (never-evicting) map.
+    pub fn resident_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+}

@@ -1,12 +1,23 @@
 //! Property tests on scheduler invariants (util::prop harness): random
 //! workloads through the sim-plane experiment runners must satisfy the
-//! structural properties of correct scheduling regardless of seed.
+//! structural properties of correct scheduling regardless of seed —
+//! plus observational-equivalence tests pinning the indexed scheduler
+//! cores to the seed semantics preserved in the `reference` modules.
 
-use uqsched::cluster::ClusterSpec;
-use uqsched::clock::{Micros, SEC};
+use std::collections::HashMap;
+
+use uqsched::cluster::{ClusterSpec, JobRequest, OverheadModel};
+use uqsched::clock::{Des, Micros, MS, SEC};
 use uqsched::experiments::{run_naive_slurm, run_umbridge_hq,
                            run_umbridge_slurm, Config};
+use uqsched::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer,
+                      ReferenceHqCore, TaskId, TaskSpec};
+use uqsched::metrics::JobRecord;
+use uqsched::slurmlite::core::{Action, JobId, SlurmCore, Timer,
+                               USER_EXPERIMENT};
+use uqsched::slurmlite::ReferenceSlurmCore;
 use uqsched::util::prop;
+use uqsched::util::Rng;
 use uqsched::workload::App;
 
 fn random_cfg(rng: &mut uqsched::util::Rng) -> Config {
@@ -99,6 +110,441 @@ fn prop_same_seed_same_records() {
             assert_eq!(x, y);
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// Observational equivalence: indexed cores vs seed-semantics references.
+//
+// The indexed cores (BTree pending lanes, failure frontiers, eviction)
+// must be *behaviourally invisible*: on any trace, the exact same
+// launches, timeouts and terminal records in the exact same order.
+// ---------------------------------------------------------------------------
+
+/// Uniform driver surface over the indexed and reference slurm cores.
+trait SlurmLike {
+    fn bootstrap(&mut self, t: Micros) -> Vec<Action>;
+    fn submit(&mut self, t: Micros, user: u32, tag: u64, req: JobRequest)
+              -> (JobId, Vec<Action>);
+    fn cancel(&mut self, t: Micros, id: JobId) -> Vec<Action>;
+    fn on_timer(&mut self, t: Micros, tm: Timer) -> Vec<Action>;
+    fn on_finish(&mut self, t: Micros, id: JobId) -> Vec<Action>;
+}
+
+macro_rules! impl_slurm_like {
+    ($ty:ty) => {
+        impl SlurmLike for $ty {
+            fn bootstrap(&mut self, t: Micros) -> Vec<Action> {
+                <$ty>::bootstrap(self, t)
+            }
+            fn submit(&mut self, t: Micros, user: u32, tag: u64,
+                      req: JobRequest) -> (JobId, Vec<Action>) {
+                <$ty>::submit(self, t, user, tag, req)
+            }
+            fn cancel(&mut self, t: Micros, id: JobId) -> Vec<Action> {
+                <$ty>::cancel(self, t, id)
+            }
+            fn on_timer(&mut self, t: Micros, tm: Timer) -> Vec<Action> {
+                <$ty>::on_timer(self, t, tm)
+            }
+            fn on_finish(&mut self, t: Micros, id: JobId) -> Vec<Action> {
+                <$ty>::on_finish(self, t, id)
+            }
+        }
+    };
+}
+
+impl_slurm_like!(SlurmCore);
+impl_slurm_like!(ReferenceSlurmCore);
+
+/// One slurm trace operation at an absolute time.
+#[derive(Clone, Debug)]
+enum SlurmOp {
+    /// Submit (request, workload duration).
+    Submit(JobRequest, Micros),
+    /// Cancel the n-th trace submission (scheduled after its submit).
+    Cancel(usize),
+}
+
+/// Everything observable a slurm core emits while driving a trace.
+#[derive(Debug, PartialEq, Default)]
+struct SlurmObs {
+    launches: Vec<(JobId, usize, u64)>, // (job, node, contention bits)
+    timeouts: Vec<JobId>,
+    records: Vec<(JobId, JobRecord)>,
+}
+
+fn drive_slurm_trace<C: SlurmLike>(
+    core: &mut C,
+    trace: &[(Micros, SlurmOp)],
+) -> SlurmObs {
+    #[derive(Debug)]
+    enum Ev {
+        Timer(Timer),
+        Op(usize),
+        Finish(JobId),
+    }
+    let n_submissions = trace
+        .iter()
+        .filter(|(_, op)| matches!(op, SlurmOp::Submit(..)))
+        .count();
+    let mut des: Des<Ev> = Des::new();
+    for a in core.bootstrap(0) {
+        if let Action::Timer(t, tm) = a {
+            des.schedule(t, Ev::Timer(tm));
+        }
+    }
+    for (i, (t, _)) in trace.iter().enumerate() {
+        des.schedule(*t, Ev::Op(i));
+    }
+    let mut obs = SlurmObs::default();
+    let mut durations: HashMap<JobId, Micros> = HashMap::new();
+    let mut submission_ids: Vec<JobId> = Vec::new();
+    let mut experiment_records = 0usize;
+    let mut guard = 0u64;
+    while let Some((t, ev)) = des.pop() {
+        guard += 1;
+        assert!(guard < 2_000_000, "runaway equivalence trace");
+        let acts = match ev {
+            Ev::Timer(tm) => core.on_timer(t, tm),
+            Ev::Op(i) => match &trace[i].1 {
+                SlurmOp::Submit(req, dur) => {
+                    let (id, acts) =
+                        core.submit(t, USER_EXPERIMENT, 1 + *dur, *req);
+                    durations.insert(id, *dur);
+                    submission_ids.push(id);
+                    acts
+                }
+                SlurmOp::Cancel(nth) => {
+                    // Trace generation guarantees the submission fired.
+                    let id = submission_ids[*nth];
+                    core.cancel(t, id)
+                }
+            },
+            Ev::Finish(id) => core.on_finish(t, id),
+        };
+        for a in acts {
+            match a {
+                Action::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                Action::Launched { job, node, contention } => {
+                    obs.launches.push((job, node, contention.to_bits()));
+                    if let Some(d) = durations.get(&job) {
+                        let dd = (*d as f64 * contention) as Micros;
+                        des.schedule(t + dd, Ev::Finish(job));
+                    }
+                }
+                Action::TimedOut { job } => obs.timeouts.push(job),
+                Action::Completed { job, record } => {
+                    if record.tag != u64::MAX {
+                        experiment_records += 1;
+                    }
+                    obs.records.push((job, record));
+                }
+            }
+        }
+        if experiment_records >= n_submissions {
+            break;
+        }
+    }
+    assert_eq!(experiment_records, n_submissions, "trace did not complete");
+    obs
+}
+
+/// Random trace: mixed shapes, staggered arrivals, some cancels, some
+/// tight time limits; cluster and background load vary per case.
+fn random_slurm_trace(
+    rng: &mut Rng,
+) -> (ClusterSpec, OverheadModel, Vec<(Micros, SlurmOp)>) {
+    let cluster = ClusterSpec::small(1 + rng.below(6) as usize);
+    let mut model = OverheadModel::quiet();
+    if rng.uniform() < 0.4 {
+        // Busy cluster: background stream exercises the bg paths (both
+        // cores consume the RNG identically, so the load is identical).
+        model.bg_interarrival = 20 * SEC;
+        model.bg_duration = 60 * SEC;
+        model.bg_cores = (1, 8);
+    }
+    if rng.uniform() < 0.3 {
+        model.user_quota = 1 + rng.below(4) as u32;
+        model.quota_penalty = (1 + rng.below(30)) * SEC;
+    }
+    if rng.uniform() < 0.3 {
+        model.backfill_delay_factor = 0.02;
+    }
+    // Generate submissions first and sort them; their index in sorted
+    // order is the index the driver's `submission_ids` will assign.
+    let n = 5 + rng.below(25) as usize;
+    let mut submits: Vec<(Micros, JobRequest, Micros)> = (0..n)
+        .map(|_| {
+            let t = rng.below(120) * SEC;
+            // Shapes that always fit a small() node eventually.
+            let cores = 1 + rng.below(16) as u32;
+            let ram = 1 + rng.below(16) as u32;
+            // Mostly generous limits, occasionally tight (timeout path).
+            let limit = if rng.uniform() < 0.15 {
+                (1 + rng.below(3)) * SEC
+            } else {
+                1000 * SEC
+            };
+            let dur = (1 + rng.below(20)) * SEC / 2;
+            (t, JobRequest::new(cores, ram, limit), dur)
+        })
+        .collect();
+    submits.sort_by_key(|(t, ..)| *t);
+    let mut trace: Vec<(Micros, SlurmOp)> = submits
+        .iter()
+        .map(|(t, req, dur)| (*t, SlurmOp::Submit(*req, *dur)))
+        .collect();
+    for (i, (t, ..)) in submits.iter().enumerate() {
+        if rng.uniform() < 0.25 {
+            // Cancel strictly after the submission fires; cancellation in
+            // any state (Submitting/Pending/Starting/Running/terminal) is
+            // a valid point in the trace.
+            let tc = t + 1 + rng.below(60 * SEC);
+            trace.push((tc, SlurmOp::Cancel(i)));
+        }
+    }
+    // Stable sort: a cancel tying with an unrelated submission keeps a
+    // deterministic order; its own submission is strictly earlier.
+    trace.sort_by_key(|(t, _)| *t);
+    (cluster, model, trace)
+}
+
+#[test]
+fn prop_indexed_slurm_core_equals_reference() {
+    prop::check("slurm-indexed-equivalence", 16, |rng| {
+        let (cluster, model, trace) = random_slurm_trace(rng);
+        let seed = rng.next_u64();
+        let mut indexed = SlurmCore::new(cluster.clone(), model.clone(), seed);
+        let mut reference =
+            ReferenceSlurmCore::new(cluster, model, seed);
+        let a = drive_slurm_trace(&mut indexed, &trace);
+        let b = drive_slurm_trace(&mut reference, &trace);
+        assert_eq!(a, b, "indexed slurm core diverged from seed semantics");
+    });
+}
+
+/// Uniform driver surface over the indexed and reference HQ cores.
+trait HqLike {
+    fn submit_task(&mut self, t: Micros, spec: TaskSpec) -> (TaskId, Vec<HqAction>);
+    fn on_alloc_up(&mut self, t: Micros, life: Micros, cores: u32) -> Vec<HqAction>;
+    fn on_timer(&mut self, t: Micros, tm: HqTimer) -> Vec<HqAction>;
+    fn on_task_done(&mut self, t: Micros, id: TaskId) -> Vec<HqAction>;
+    fn expire_workers(&mut self, t: Micros) -> Vec<HqAction>;
+}
+
+macro_rules! impl_hq_like {
+    ($ty:ty) => {
+        impl HqLike for $ty {
+            fn submit_task(&mut self, t: Micros, spec: TaskSpec)
+                           -> (TaskId, Vec<HqAction>) {
+                <$ty>::submit_task(self, t, spec)
+            }
+            fn on_alloc_up(&mut self, t: Micros, life: Micros, cores: u32)
+                           -> Vec<HqAction> {
+                <$ty>::on_alloc_up(self, t, life, cores)
+            }
+            fn on_timer(&mut self, t: Micros, tm: HqTimer) -> Vec<HqAction> {
+                <$ty>::on_timer(self, t, tm)
+            }
+            fn on_task_done(&mut self, t: Micros, id: TaskId) -> Vec<HqAction> {
+                <$ty>::on_task_done(self, t, id)
+            }
+            fn expire_workers(&mut self, t: Micros) -> Vec<HqAction> {
+                <$ty>::expire_workers(self, t)
+            }
+        }
+    };
+}
+
+impl_hq_like!(HqCore);
+impl_hq_like!(ReferenceHqCore);
+
+#[derive(Debug, PartialEq, Default)]
+struct HqObs {
+    starts: Vec<(TaskId, u64)>, // (task, worker)
+    kills: Vec<TaskId>,
+    allocs: Vec<u64>,           // alloc tags submitted
+    records: Vec<(TaskId, JobRecord)>,
+}
+
+/// Drive a task trace; allocations come up `alloc_delay` later with
+/// lifetime `alloc_life`; periodic `Expire` probes retire due workers.
+fn drive_hq_trace<C: HqLike>(
+    core: &mut C,
+    submissions: &[(Micros, TaskSpec)],
+    durations: &[Micros],
+    alloc_delay: Micros,
+    alloc_life: Micros,
+) -> HqObs {
+    #[derive(Debug)]
+    enum Ev {
+        Submit(usize),
+        AllocUp,
+        Timer(HqTimer),
+        TaskDone(TaskId),
+        Expire,
+    }
+    let mut des: Des<Ev> = Des::new();
+    for (i, (t, _)) in submissions.iter().enumerate() {
+        des.schedule(*t, Ev::Submit(i));
+    }
+    // Expiry probes throughout the plausible sim horizon (generously past
+    // any reachable completion time, so aged-out workers always retire).
+    for k in 1..150u64 {
+        des.schedule(k * alloc_life / 7 + k * SEC, Ev::Expire);
+    }
+    let mut obs = HqObs::default();
+    let mut records = 0usize;
+    let mut guard = 0u64;
+    while let Some((t, ev)) = des.pop() {
+        guard += 1;
+        assert!(guard < 2_000_000, "runaway hq equivalence trace");
+        let acts = match ev {
+            Ev::Submit(i) => core.submit_task(t, submissions[i].1.clone()).1,
+            Ev::AllocUp => core.on_alloc_up(t, alloc_life, 16),
+            Ev::Timer(tm) => core.on_timer(t, tm),
+            Ev::TaskDone(id) => core.on_task_done(t, id),
+            Ev::Expire => core.expire_workers(t),
+        };
+        for a in acts {
+            match a {
+                HqAction::SubmitAllocation { alloc_tag, .. } => {
+                    obs.allocs.push(alloc_tag);
+                    des.schedule(t + alloc_delay, Ev::AllocUp);
+                }
+                HqAction::StartTask { task, worker } => {
+                    obs.starts.push((task, worker));
+                    let dur = durations[(task - 1) as usize];
+                    des.schedule(t + dur, Ev::TaskDone(task));
+                }
+                HqAction::KillTask { task } => obs.kills.push(task),
+                HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                HqAction::TaskCompleted { task, record } => {
+                    records += 1;
+                    obs.records.push((task, record));
+                }
+            }
+        }
+        if records >= submissions.len() {
+            break;
+        }
+    }
+    assert_eq!(records, submissions.len(), "hq trace did not complete");
+    obs
+}
+
+#[test]
+fn prop_indexed_hq_core_equals_reference() {
+    prop::check("hq-indexed-equivalence", 16, |rng| {
+        let n = 4 + rng.below(28) as usize;
+        // Keep (time, spec, duration) together through the sort: task ids
+        // are assigned in submission-fire order, and the driver looks
+        // durations up by task id.
+        let mut subs: Vec<(Micros, TaskSpec, Micros)> = (0..n)
+            .map(|i| {
+                let t = rng.below(90) * SEC;
+                let spec = TaskSpec {
+                    tag: i as u64,
+                    // Occasionally zero cores: degenerate but seed-legal
+                    // (dispatches to any live worker regardless of load).
+                    cores: if rng.uniform() < 0.05 {
+                        0
+                    } else {
+                        1 + rng.below(16) as u32
+                    },
+                    time_request: (1 + rng.below(40)) * SEC,
+                    // Occasionally tight: exercises the kill path.
+                    time_limit: if rng.uniform() < 0.15 {
+                        (1 + rng.below(4)) * SEC
+                    } else {
+                        1000 * SEC
+                    },
+                };
+                let dur = (1 + rng.below(16)) * SEC / 2;
+                (t, spec, dur)
+            })
+            .collect();
+        subs.sort_by_key(|(t, ..)| *t);
+        let submissions: Vec<(Micros, TaskSpec)> =
+            subs.iter().map(|(t, s, _)| (*t, s.clone())).collect();
+        let durations: Vec<Micros> = subs.iter().map(|(.., d)| *d).collect();
+        let alloc_delay = (1 + rng.below(20)) * SEC;
+        // Long enough that every time_request (<= 41 s) can be served.
+        let alloc_life = (60 + rng.below(300)) * SEC;
+        let cfg = AutoAllocConfig {
+            backlog: 1 + rng.below(3) as u32,
+            workers_per_alloc: 1 + rng.below(2) as u32,
+            max_worker_count: 2 + rng.below(4) as u32,
+            alloc_request: JobRequest::new(16, 16, alloc_life),
+            dispatch_latency: 1 * MS,
+        };
+        let mut indexed = HqCore::new(cfg.clone());
+        let mut reference = ReferenceHqCore::new(cfg);
+        let a = drive_hq_trace(&mut indexed, &submissions, &durations,
+                               alloc_delay, alloc_life);
+        let b = drive_hq_trace(&mut reference, &submissions, &durations,
+                               alloc_delay, alloc_life);
+        assert_eq!(a, b, "indexed hq core diverged from seed semantics");
+    });
+}
+
+/// Regression: cancel-while-pending must remove the exact lane entry
+/// (the indexed core's O(log n) deletion) and leave every other pending
+/// job schedulable in the original priority order.
+#[test]
+fn cancel_while_pending_under_indexed_queue() {
+    let model = OverheadModel::quiet();
+    let mut core = SlurmCore::new(ClusterSpec::small(1), model.clone(), 7);
+    let mut reference =
+        ReferenceSlurmCore::new(ClusterSpec::small(1), model.clone(), 7);
+    let n = 20u64;
+    let mut ids = Vec::new();
+    for i in 0..n {
+        let req = JobRequest::new(1, 1, 1000 * SEC);
+        let (a, _) = core.submit(i, USER_EXPERIMENT, i, req);
+        let (b, _) = reference.submit(i, USER_EXPERIMENT, i, req);
+        assert_eq!(a, b);
+        ids.push(a);
+    }
+    // Make everything pending.
+    for &id in &ids {
+        let te = model.submit_latency + n;
+        core.on_timer(te, Timer::Eligible(id));
+        reference.on_timer(te, Timer::Eligible(id));
+    }
+    assert_eq!(core.pending_count(), n as usize);
+    // Cancel a mid-queue slice.
+    for &id in &ids[5..10] {
+        let acts_a = core.cancel(2 * SEC, id);
+        let acts_b = reference.cancel(2 * SEC, id);
+        assert_eq!(acts_a.len(), 1);
+        assert!(matches!(&acts_a[0],
+                         Action::Completed { record, .. } if record.truncated));
+        assert_eq!(format!("{acts_a:?}"), format!("{acts_b:?}"));
+    }
+    assert_eq!(core.pending_count(), 15);
+    assert_eq!(core.pending_count(), reference.pending_count());
+    // One cycle on the 16-core node: all 15 surviving jobs start, the
+    // cancelled ones never do, and both cores start the same set.
+    let acts_a = core.on_timer(30 * SEC, Timer::Cycle);
+    let acts_b = reference.on_timer(30 * SEC, Timer::Cycle);
+    let starts = |acts: &[Action]| -> Vec<JobId> {
+        acts.iter()
+            .filter_map(|a| match a {
+                Action::Timer(_, Timer::Start(id)) => Some(*id),
+                _ => None,
+            })
+            .collect()
+    };
+    let sa = starts(&acts_a);
+    let sb = starts(&acts_b);
+    assert_eq!(sa, sb);
+    assert_eq!(sa.len(), 15);
+    for &id in &ids[5..10] {
+        assert!(!sa.contains(&id), "cancelled job {id} started");
+        assert_eq!(core.state_of(id),
+                   Some(uqsched::slurmlite::JobState::Cancelled));
+    }
 }
 
 #[test]

@@ -1,0 +1,196 @@
+//! Offline shim of the `anyhow` crate: the subset of its API this
+//! workspace uses, with the same semantics.
+//!
+//! The build environment has no crates.io access, so the real `anyhow`
+//! cannot be fetched.  This shim provides:
+//!
+//!   * [`Error`] — a context chain over an optional source error, with
+//!     [`Error::downcast_ref`] reaching the original typed source.
+//!   * [`Result`] — `Result<T, Error>` with a defaulted error type.
+//!   * [`anyhow!`] / [`bail!`] — format-style error construction.
+//!   * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!     (both std-error and `anyhow::Error` variants) and `Option`.
+//!
+//! As in real anyhow, `Error` deliberately does NOT implement
+//! `std::error::Error`; that is what makes the blanket
+//! `From<E: std::error::Error>` conversion (the `?` operator) coherent.
+
+use std::fmt::{self, Debug, Display};
+
+/// Dynamic error: a stack of context messages over an optional source.
+pub struct Error {
+    /// Context messages, outermost (most recently attached) first.
+    msgs: Vec<String>,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a displayable message (the `anyhow!` entry point).
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { msgs: vec![message.to_string()], source: None }
+    }
+
+    /// Attach an outer context message.
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.msgs.insert(0, context.to_string());
+        self
+    }
+
+    /// Borrow the typed source error, if the chain bottoms out in one.
+    pub fn downcast_ref<E>(&self) -> Option<&E>
+    where
+        E: std::error::Error + 'static,
+    {
+        self.source.as_ref().and_then(|s| s.downcast_ref::<E>())
+    }
+
+    /// The outermost message (or the source's rendering).
+    fn outermost(&self) -> String {
+        match self.msgs.first() {
+            Some(m) => m.clone(),
+            None => match &self.source {
+                Some(s) => s.to_string(),
+                None => "unknown error".to_string(),
+            },
+        }
+    }
+
+    /// Full chain, outermost first, `": "`-joined (the `{:#}` rendering).
+    fn chain_string(&self) -> String {
+        let mut parts: Vec<String> = self.msgs.clone();
+        if let Some(s) = &self.source {
+            parts.push(s.to_string());
+        }
+        if parts.is_empty() {
+            parts.push("unknown error".to_string());
+        }
+        parts.join(": ")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain_string())
+        } else {
+            write!(f, "{}", self.outermost())
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain_string())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msgs: Vec::new(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Result<T>`: `Result` with the error defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Context attachment for fallible values.
+pub trait Context<T> {
+    fn context<C: Display>(self, context: C) -> Result<T>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "eof")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_chains_and_downcasts() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert!(format!("{e:#}").contains("eof"));
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad {} at {}", "thing", 7);
+        assert_eq!(e.to_string(), "bad thing at 7");
+        fn f() -> Result<()> {
+            bail!("nope {}", 1)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+}

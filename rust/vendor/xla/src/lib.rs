@@ -1,0 +1,113 @@
+//! Offline stub of the `xla` PJRT bindings used by `uqsched::runtime`.
+//!
+//! The build container has no XLA/PJRT shared library, so this crate
+//! provides the exact type/method surface the runtime layer compiles
+//! against while reporting "PJRT unavailable" at runtime.  Everything
+//! that needs real compute (the live serving plane, `runtime_*`
+//! integration tests, figure benches) already self-skips when the
+//! artifact directory is missing, so the scheduler simulation plane —
+//! the part of the reproduction under active development — builds and
+//! tests fully offline.
+//!
+//! Swapping in the real bindings is a one-line change in
+//! `rust/Cargo.toml` (point the `xla` dependency at the real crate);
+//! no call-site changes are required.
+
+/// Error type mirroring the binding crate's debug-printable errors.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(XlaError(
+        "PJRT runtime unavailable: uqsched was built against the offline \
+         xla stub (vendor/xla); install the real bindings to enable the \
+         compute plane"
+            .to_string(),
+    ))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
