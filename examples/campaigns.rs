@@ -1,0 +1,112 @@
+//! Campaign-plane tour: every shipped submission policy against both
+//! scheduler stacks, on the sim plane (virtual time — runs in seconds).
+//!
+//! Shows what the campaign plane adds on top of the paper's protocol:
+//!
+//! * the paper's fixed-depth protocol as one policy among many,
+//! * bursty open-loop arrivals where queue depth is an *output*,
+//! * a multi-user mix with per-user fairness (Jain index over SLRs),
+//! * runtime-heteroskedastic families defeating uniform time requests,
+//! * an adaptive Bayesian-inversion-style policy whose batch sizes
+//!   depend on the results observed so far.
+//!
+//! Run: `cargo run --release --example campaigns [-- --tasks 60]`
+
+use uqsched::campaign::{
+    self, AdaptiveBayes, CampaignConfig, CampaignResult, Family, FixedDepth,
+    HeteroFamilies, PoissonBurst, SlurmMode, Submitter, UserMix, UserStream,
+};
+use uqsched::cli::Args;
+use uqsched::clock::SEC;
+use uqsched::cluster::ClusterSpec;
+use uqsched::metrics::BoxStats;
+use uqsched::workload::App;
+
+fn report(r: &CampaignResult) {
+    let m = &r.metrics;
+    println!(
+        "  {:<16} {:<16} {:>6} evals  makespan {:>9.1} s  peak depth {:>6}  fairness {:.3}",
+        m.policy,
+        m.scheduler,
+        m.completed,
+        m.makespan as f64 / SEC as f64,
+        m.peak_in_flight,
+        m.fairness_jain,
+    );
+    if let Some(&(n, t)) = m.time_to.first() {
+        println!(
+            "  {:<33} first of {n} results after {:.1} s",
+            "",
+            t as f64 / SEC as f64
+        );
+    }
+    for u in &m.per_user {
+        println!(
+            "  {:<33} user {}: {} evals, mean SLR {:.2}",
+            "", u.user, u.completed, u.mean_slr
+        );
+    }
+    println!(
+        "  {:<33} overhead[s]: {}",
+        "",
+        BoxStats::from(&r.experiment.overheads_sec()).row()
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let tasks = args.u64_or("tasks", 60)?;
+    let seed = args.u64_or("seed", 1)?;
+
+    let mut cfg = CampaignConfig::paper(App::Gp, 4, seed);
+    cfg.cluster = ClusterSpec::small(16);
+    cfg.overheads.bg_interarrival = 120 * SEC;
+
+    println!("== fixed depth (the paper's protocol) ==");
+    for mode in [SlurmMode::Native, SlurmMode::UmBridge] {
+        let mut sub = FixedDepth::new(App::Gp, tasks, 4, seed);
+        report(&campaign::run_slurm(&cfg, &mut sub, mode));
+    }
+    let mut sub = FixedDepth::new(App::Gp, tasks, 4, seed);
+    report(&campaign::run_hq(&cfg, &mut sub));
+
+    println!("== bursty open-loop arrivals (Poisson bursts) ==");
+    let mut sub = PoissonBurst::new(App::Gp, tasks, 2 * SEC, (1, 8), seed);
+    report(&campaign::run_hq(&cfg, &mut sub));
+
+    println!("== multi-user mix (two tenants, shared cluster) ==");
+    let streams = vec![
+        UserStream { user: 0, app: App::Gp, n_evals: tasks / 2, queue_depth: 2 },
+        UserStream {
+            user: 1,
+            app: App::Eigen100,
+            n_evals: tasks / 2,
+            queue_depth: 2,
+        },
+    ];
+    let mut sub = UserMix::new(streams.clone(), seed);
+    report(&campaign::run_slurm(&cfg, &mut sub, SlurmMode::Native));
+    let mut sub = UserMix::new(streams, seed);
+    report(&campaign::run_hq(&cfg, &mut sub));
+
+    println!("== heteroskedastic task families ==");
+    let fams = vec![
+        Family { app: App::Gp, weight: 3.0, sigma: 0.0 },
+        Family { app: App::Gp, weight: 1.0, sigma: 1.0 },
+    ];
+    let mut sub = HeteroFamilies::new(fams, tasks, 4, seed);
+    report(&campaign::run_hq(&cfg, &mut sub));
+
+    println!("== adaptive batches (Bayesian-inversion style) ==");
+    let mut sub = AdaptiveBayes::new(App::Gp, tasks, seed).with_batches(8, 4, 16);
+    let r = campaign::run_hq(&cfg, &mut sub);
+    report(&r);
+    println!(
+        "  {:<33} converged after {} rounds, {} of {} budget spent",
+        "",
+        sub.rounds(),
+        r.metrics.completed,
+        tasks
+    );
+    Ok(())
+}

@@ -12,9 +12,10 @@
 //! ```
 //!
 //! Environment knobs:
-//!   SCALE_TASKS        max task count for the indexed cores  (default 1_000_000)
-//!   SCALE_NAIVE_TASKS  max task count for the naive baseline (default 100_000)
-//!   SCALE_OUT          output path                           (default BENCH_scale.json)
+//!   SCALE_TASKS           max task count for the indexed cores  (default 1_000_000)
+//!   SCALE_NAIVE_TASKS     max task count for the naive baseline (default 100_000)
+//!   SCALE_CAMPAIGN_TASKS  campaign-mode task count, 0 disables  (default 100_000)
+//!   SCALE_OUT             output path                           (default BENCH_scale.json)
 //!
 //! The workload is deliberately UQ-shaped: a stream of identical small
 //! tasks (the paper's "thousands or even millions of similar tasks"),
@@ -27,8 +28,10 @@
 
 use std::time::Instant;
 
+use uqsched::campaign::{self, AdaptiveBayes, CampaignConfig, PoissonBurst};
 use uqsched::clock::{Des, Micros, MS, SEC};
 use uqsched::cluster::{ClusterSpec, JobRequest, OverheadModel};
+use uqsched::workload::App;
 use uqsched::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer,
                       ReferenceHqCore, TaskSpec};
 use uqsched::json::Value;
@@ -350,6 +353,69 @@ fn run_hq<C: HqDriver>(
 }
 
 // ---------------------------------------------------------------------------
+// Campaign mode: the generalized workload plane at scale.  Both rows run
+// the UM-Bridge + HQ stack (indexed cores) through the campaign driver —
+// bursty open-loop arrivals that build a six-figure backlog, and the
+// adaptive feedback policy submitting in result-dependent batches.
+// ---------------------------------------------------------------------------
+
+/// eigen-100 shapes, a 256-worker pool, no background noise: the row
+/// measures campaign-driver + core throughput, not cluster weather.
+fn campaign_cfg() -> CampaignConfig {
+    CampaignConfig {
+        app: App::Eigen100,
+        seed: 42,
+        cluster: ClusterSpec::hamilton8(),
+        overheads: OverheadModel::quiet(),
+        registration_jobs: 0,
+        hq_backlog: 256,
+        hq_workers: 256,
+    }
+}
+
+fn campaign_row(
+    imp: &'static str,
+    n: u64,
+    res: campaign::CampaignResult,
+    wall: f64,
+) -> Row {
+    assert_eq!(res.metrics.completed, n, "{imp} campaign incomplete");
+    Row {
+        core: "campaign",
+        imp,
+        tasks: n,
+        depth: 0,
+        wall_s: wall,
+        tasks_per_s: n as f64 / wall,
+        peak_resident: res.metrics.peak_in_flight as usize,
+        des_events: res.metrics.des_events,
+    }
+}
+
+fn campaign_bursty(n: u64) -> Row {
+    let cfg = campaign_cfg();
+    // Mean arrival rate ~1.6k tasks/s of virtual time vs ~0.4k/s of
+    // service: the backlog grows to ~70% of the stream, stressing the
+    // frontier early-exit dispatch at depths no fixed protocol reaches.
+    let mut sub = PoissonBurst::new(App::Eigen100, n, 20 * MS, (1, 64), 42);
+    let t0 = Instant::now();
+    let res = campaign::run_hq(&cfg, &mut sub);
+    campaign_row("bursty", n, res, t0.elapsed().as_secs_f64())
+}
+
+fn campaign_adaptive(n: u64) -> Row {
+    let cfg = campaign_cfg();
+    // Zero tolerance: the policy never converges early and spends the
+    // whole budget in result-sized batches (barrier between rounds).
+    let mut sub = AdaptiveBayes::new(App::Eigen100, n, 42)
+        .with_batches(1024, 1024, 16384)
+        .with_tol(0.0);
+    let t0 = Instant::now();
+    let res = campaign::run_hq(&cfg, &mut sub);
+    campaign_row("adaptive", n, res, t0.elapsed().as_secs_f64())
+}
+
+// ---------------------------------------------------------------------------
 
 fn env_u64(name: &str, default: u64) -> u64 {
     std::env::var(name)
@@ -431,6 +497,19 @@ fn main() {
         }
     }
 
+    // Campaign mode: generalized workloads through the campaign plane.
+    let campaign_tasks = env_u64("SCALE_CAMPAIGN_TASKS", 100_000);
+    if campaign_tasks > 0 {
+        println!("-- campaign mode (bursty + adaptive, um-bridge/hq stack) --");
+        for r in [
+            campaign_bursty(campaign_tasks),
+            campaign_adaptive(campaign_tasks),
+        ] {
+            r.print();
+            rows.push(r);
+        }
+    }
+
     // Headline derived numbers.
     let mut summary: Vec<(&str, Value)> = Vec::new();
     for core in ["slurm", "hq"] {
@@ -473,6 +552,7 @@ fn main() {
         ("bench", Value::str("scale")),
         ("max_tasks", Value::num(max_tasks as f64)),
         ("naive_max_tasks", Value::num(naive_max as f64)),
+        ("campaign_tasks", Value::num(campaign_tasks as f64)),
         ("results", Value::arr(rows.iter().map(Row::json).collect())),
         ("summary", Value::Obj(
             summary.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),

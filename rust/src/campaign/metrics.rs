@@ -1,0 +1,328 @@
+//! Campaign-level metrics beyond the paper's per-job quantities:
+//! time-to-Nth-result milestones, the queue-depth trajectory, and
+//! per-user fairness, serialised into the JSON report.
+//!
+//! Per-job metrics (makespan / CPU / overhead / SLR) stay in
+//! [`crate::metrics`]; this module aggregates what only exists at the
+//! campaign level — how the *stream* behaved, not any one job.
+
+use std::collections::HashMap;
+
+use crate::clock::{Micros, SEC};
+use crate::json::Value;
+use crate::metrics::{Experiment, JobRecord};
+
+/// Cap on stored queue-depth samples; beyond it the trajectory is
+/// decimated (every other sample dropped, stride doubled) so memory
+/// stays bounded for million-task campaigns.
+const MAX_DEPTH_SAMPLES: usize = 8192;
+
+/// Tracks the number of in-flight campaign tasks (submitted, not yet
+/// completed) over virtual time, with bounded-memory decimation.
+#[derive(Debug)]
+pub struct DepthTrack {
+    cur: u32,
+    peak: u32,
+    stride: u64,
+    changes: u64,
+    samples: Vec<(Micros, u32)>,
+}
+
+impl Default for DepthTrack {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DepthTrack {
+    pub fn new() -> DepthTrack {
+        DepthTrack {
+            cur: 0,
+            peak: 0,
+            stride: 1,
+            changes: 0,
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn submit(&mut self, t: Micros) {
+        self.cur += 1;
+        self.peak = self.peak.max(self.cur);
+        self.record(t);
+    }
+
+    pub fn complete(&mut self, t: Micros) {
+        self.cur = self.cur.saturating_sub(1);
+        self.record(t);
+    }
+
+    fn record(&mut self, t: Micros) {
+        self.changes += 1;
+        if self.changes % self.stride != 0 {
+            return;
+        }
+        self.samples.push((t, self.cur));
+        if self.samples.len() >= MAX_DEPTH_SAMPLES {
+            let mut keep = Vec::with_capacity(MAX_DEPTH_SAMPLES / 2);
+            for (i, s) in self.samples.drain(..).enumerate() {
+                if i % 2 == 1 {
+                    keep.push(s);
+                }
+            }
+            self.samples = keep;
+            self.stride *= 2;
+        }
+    }
+
+    pub fn peak(&self) -> u32 {
+        self.peak
+    }
+
+    pub fn into_samples(self) -> Vec<(Micros, u32)> {
+        self.samples
+    }
+}
+
+/// Per-user accumulator (keyed by campaign user id).
+#[derive(Debug, Default, Clone)]
+struct UserAcc {
+    n: u64,
+    sum_makespan: f64,
+    sum_overhead: f64,
+    sum_slr: f64,
+}
+
+/// Aggregated per-user service statistics.
+#[derive(Debug, Clone)]
+pub struct UserStats {
+    pub user: u32,
+    pub completed: u64,
+    pub mean_makespan_s: f64,
+    pub mean_overhead_s: f64,
+    pub mean_slr: f64,
+}
+
+/// Accumulates per-user stats as records complete.
+#[derive(Debug, Default)]
+pub struct UserTrack {
+    accs: HashMap<u32, UserAcc>,
+}
+
+impl UserTrack {
+    pub fn new() -> UserTrack {
+        UserTrack::default()
+    }
+
+    pub fn complete(&mut self, user: u32, rec: &JobRecord) {
+        let a = self.accs.entry(user).or_default();
+        a.n += 1;
+        a.sum_makespan += rec.makespan() as f64 / SEC as f64;
+        a.sum_overhead += rec.overhead() as f64 / SEC as f64;
+        a.sum_slr += rec.slr();
+    }
+
+    /// Per-user means, sorted by user id.
+    pub fn stats(&self) -> Vec<UserStats> {
+        let mut out: Vec<UserStats> = self
+            .accs
+            .iter()
+            .map(|(&user, a)| UserStats {
+                user,
+                completed: a.n,
+                mean_makespan_s: a.sum_makespan / a.n.max(1) as f64,
+                mean_overhead_s: a.sum_overhead / a.n.max(1) as f64,
+                mean_slr: a.sum_slr / a.n.max(1) as f64,
+            })
+            .collect();
+        out.sort_by_key(|s| s.user);
+        out
+    }
+}
+
+/// Jain's fairness index over per-user mean SLRs:
+/// `J = (sum x)^2 / (n * sum x^2)`, 1.0 = perfectly even service.
+/// SLR is used because it is scale-free (>= 1 by construction) so users
+/// running different applications remain comparable.
+pub fn jain_fairness(stats: &[UserStats]) -> f64 {
+    if stats.len() <= 1 {
+        return 1.0;
+    }
+    let xs: Vec<f64> = stats.iter().map(|s| s.mean_slr).collect();
+    let sum: f64 = xs.iter().sum();
+    let sumsq: f64 = xs.iter().map(|x| x * x).sum();
+    if sumsq <= 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sumsq)
+}
+
+/// Everything a campaign run produced beyond the per-job records.
+#[derive(Debug)]
+pub struct CampaignMetrics {
+    /// Submitter policy label.
+    pub policy: &'static str,
+    /// Scheduler label ("SLURM", "UM-Bridge SLURM", "HQ").
+    pub scheduler: String,
+    pub submitted: u64,
+    pub completed: u64,
+    /// Campaign makespan (first submit to last end, virtual time).
+    pub makespan: Micros,
+    /// Time-to-Nth-result milestones `(n, t_end_of_nth)`.
+    pub time_to: Vec<(u64, Micros)>,
+    /// Decimated in-flight trajectory `(t, depth)`.
+    pub depth_trajectory: Vec<(Micros, u32)>,
+    pub peak_in_flight: u32,
+    pub per_user: Vec<UserStats>,
+    /// Jain index over per-user mean SLRs (1.0 when <= 1 user).
+    pub fairness_jain: f64,
+    /// DES events the run processed (cost proxy for the sim plane).
+    pub des_events: u64,
+}
+
+impl CampaignMetrics {
+    /// Standard milestones: first result, then 10/25/50/75/90/100 % of
+    /// the completed count (deduplicated, ascending).  Sorts the end
+    /// times once via [`Experiment::ends_sorted`] instead of calling
+    /// `time_to_nth_result` per milestone (O(n log n) each).
+    pub fn milestones(exp: &Experiment) -> Vec<(u64, Micros)> {
+        let n = exp.records.len() as u64;
+        if n == 0 {
+            return Vec::new();
+        }
+        let ends = exp.ends_sorted();
+        let mut ns: Vec<u64> = vec![1];
+        for pct in [10u64, 25, 50, 75, 90, 100] {
+            ns.push(((n * pct) / 100).max(1));
+        }
+        ns.sort_unstable();
+        ns.dedup();
+        ns.iter().map(|&k| (k, ends[(k - 1) as usize])).collect()
+    }
+
+    pub fn json(&self) -> Value {
+        Value::obj(vec![
+            ("policy", Value::str(self.policy)),
+            ("scheduler", Value::str(&self.scheduler)),
+            ("submitted", Value::num(self.submitted as f64)),
+            ("completed", Value::num(self.completed as f64)),
+            ("makespan_s", Value::num(self.makespan as f64 / SEC as f64)),
+            (
+                "time_to",
+                Value::arr(
+                    self.time_to
+                        .iter()
+                        .map(|&(n, t)| {
+                            Value::obj(vec![
+                                ("n", Value::num(n as f64)),
+                                ("t_s", Value::num(t as f64 / SEC as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "depth_trajectory",
+                Value::arr(
+                    self.depth_trajectory
+                        .iter()
+                        .map(|&(t, d)| {
+                            Value::arr(vec![
+                                Value::num(t as f64 / SEC as f64),
+                                Value::num(d as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("peak_in_flight", Value::num(self.peak_in_flight as f64)),
+            (
+                "per_user",
+                Value::arr(
+                    self.per_user
+                        .iter()
+                        .map(|u| {
+                            Value::obj(vec![
+                                ("user", Value::num(u.user as f64)),
+                                ("completed", Value::num(u.completed as f64)),
+                                (
+                                    "mean_makespan_s",
+                                    Value::num(u.mean_makespan_s),
+                                ),
+                                (
+                                    "mean_overhead_s",
+                                    Value::num(u.mean_overhead_s),
+                                ),
+                                ("mean_slr", Value::num(u.mean_slr)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("fairness_jain", Value::num(self.fairness_jain)),
+            ("des_events", Value::num(self.des_events as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_track_peak_and_decimation() {
+        let mut d = DepthTrack::new();
+        for i in 0..(MAX_DEPTH_SAMPLES as u64 * 3) {
+            d.submit(i);
+            if i % 2 == 0 {
+                d.complete(i);
+            }
+        }
+        assert!(d.peak() >= 2);
+        let samples = d.into_samples();
+        assert!(samples.len() < MAX_DEPTH_SAMPLES);
+        assert!(!samples.is_empty());
+        // Monotone times.
+        for w in samples.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+    }
+
+    #[test]
+    fn jain_even_service_is_one() {
+        let mk = |user, slr| UserStats {
+            user,
+            completed: 10,
+            mean_makespan_s: 1.0,
+            mean_overhead_s: 0.0,
+            mean_slr: slr,
+        };
+        let even = vec![mk(0, 2.0), mk(1, 2.0), mk(2, 2.0)];
+        assert!((jain_fairness(&even) - 1.0).abs() < 1e-12);
+        let skew = vec![mk(0, 1.0), mk(1, 10.0)];
+        let j = jain_fairness(&skew);
+        assert!(j < 0.7, "skewed service must drop the index, got {j}");
+        assert_eq!(jain_fairness(&[]), 1.0);
+    }
+
+    #[test]
+    fn user_track_means() {
+        let mut ut = UserTrack::new();
+        let rec = |submit, end, cpu| JobRecord {
+            tag: 0,
+            submit,
+            start: submit,
+            end,
+            cpu,
+            truncated: false,
+        };
+        ut.complete(1, &rec(0, 10 * SEC, 5 * SEC));
+        ut.complete(1, &rec(0, 20 * SEC, 10 * SEC));
+        ut.complete(2, &rec(0, 4 * SEC, 4 * SEC));
+        let stats = ut.stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].user, 1);
+        assert_eq!(stats[0].completed, 2);
+        assert!((stats[0].mean_makespan_s - 15.0).abs() < 1e-9);
+        assert!((stats[1].mean_slr - 1.0).abs() < 1e-9);
+    }
+}

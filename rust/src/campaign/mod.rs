@@ -1,0 +1,49 @@
+//! The campaign plane: generalized workload generation and adaptive
+//! submission policies, decoupled from the scheduler cores.
+//!
+//! The paper's evaluation fixes one protocol — 100 evaluations with a
+//! constant queue depth — but its premise is that UQ workloads submit
+//! *unpredictable* task streams whose total count is not known a priori.
+//! This module opens that space while keeping the paper's protocol as
+//! one instance:
+//!
+//! * [`Submitter`] — a composable workload-stream policy.  Shipped
+//!   policies: [`FixedDepth`] (the paper's protocol, action-for-action),
+//!   [`PoissonBurst`] (bursty open-loop arrivals), [`UserMix`]
+//!   (multi-tenant closed-loop streams), [`HeteroFamilies`]
+//!   (runtime-heteroskedastic task families), and [`AdaptiveBayes`]
+//!   (Bayesian-inversion-style feedback batches whose size depends on
+//!   completed results).
+//! * [`run_slurm`] / [`run_hq`] — generic discrete-event drivers running
+//!   any submitter against the SLURM core (native or UM-Bridge mode) or
+//!   the UM-Bridge + HQ stack.  `experiments::run_naive_slurm`,
+//!   `run_umbridge_slurm` and `run_umbridge_hq` are thin wrappers over
+//!   these.
+//! * [`CampaignMetrics`] — what only exists at the stream level:
+//!   time-to-Nth-result milestones, the queue-depth trajectory, per-user
+//!   fairness (Jain index over mean SLRs), serialised into the JSON
+//!   report alongside the per-job records.
+//!
+//! ```text
+//!   Submitter (what / when)          Driver (how)            Core (where)
+//!   ┌───────────────┐  Submission  ┌──────────────┐ submit ┌───────────┐
+//!   │ fixed-depth   │ ───────────> │  run_slurm / │ ─────> │ SlurmCore │
+//!   │ poisson-burst │  wake_at     │  run_hq      │ <───── │  / HqCore │
+//!   │ user-mix ...  │ <─────────── │  (DES loop)  │ action └───────────┘
+//!   └───────────────┘  completed   └──────────────┘
+//! ```
+//!
+//! See `docs/ARCHITECTURE.md` for the driver loop diagram and PERF.md
+//! for per-event complexity; `benches/scale.rs` runs bursty and adaptive
+//! campaigns at 100k+ tasks.
+
+pub mod driver;
+pub mod metrics;
+pub mod submitter;
+
+pub use driver::{run_hq, run_slurm, CampaignConfig, CampaignResult, SlurmMode};
+pub use metrics::{jain_fairness, CampaignMetrics, UserStats};
+pub use submitter::{
+    AdaptiveBayes, Family, FixedDepth, HeteroFamilies, PoissonBurst, Sink,
+    Submission, Submitter, UserMix, UserStream,
+};

@@ -1,0 +1,783 @@
+//! Workload-stream generators: the [`Submitter`] trait and its policies.
+//!
+//! A submitter decides *what* enters the system and *when*, in terms of
+//! three callbacks driven by the campaign event loop
+//! ([`crate::campaign::driver`]):
+//!
+//! * [`Submitter::start`] seeds the campaign at `t = 0`;
+//! * [`Submitter::wake`] fires when a self-scheduled wake timer elapses;
+//! * [`Submitter::completed`] delivers each finished evaluation record.
+//!
+//! All three communicate back through a [`Sink`]: immediate
+//! [`Submission`]s and future wake timers.  The driver turns submissions
+//! into scheduler submissions (SLURM jobs or HQ tasks) and owns every
+//! scheduler-specific overhead (server init, proxy latency, registration
+//! pre-jobs), so one submitter runs unchanged against every scheduler.
+//!
+//! Determinism contract: a submitter must derive all randomness from its
+//! seed via [`crate::util::Rng`], so a campaign is a pure function of
+//! `(config, policy, seed)` — the paper's "same random seed for
+//! repeatability" requirement extended to open-ended streams.
+
+use std::collections::HashMap;
+
+use crate::clock::{Micros, SEC};
+use crate::metrics::JobRecord;
+use crate::util::Rng;
+use crate::workload::{App, RuntimeModel};
+
+/// One evaluation the campaign plane hands to the scheduler plane.
+#[derive(Clone, Copy, Debug)]
+pub struct Submission {
+    /// Campaign-unique evaluation index (becomes `JobRecord::tag`).
+    pub tag: u64,
+    /// Campaign user (0 = primary).  Multi-user policies label streams so
+    /// the driver can compute per-user fairness.
+    pub user: u32,
+    /// Application: resource shape (Table III) and runtime family.
+    pub app: App,
+    /// Sampled compute time C_i (scheduler overheads are added by the
+    /// driver: prolog/server-init on SLURM, server-init on HQ).
+    pub duration: Micros,
+}
+
+/// Collector the driver passes to every submitter callback.
+#[derive(Debug, Default)]
+pub struct Sink {
+    pub(crate) submissions: Vec<Submission>,
+    pub(crate) wakes: Vec<(Micros, u64)>,
+}
+
+impl Sink {
+    pub fn new() -> Sink {
+        Sink::default()
+    }
+
+    /// Submit an evaluation at the current event time.
+    pub fn submit(&mut self, s: Submission) {
+        self.submissions.push(s);
+    }
+
+    /// Request a [`Submitter::wake`] callback at absolute time `t` with an
+    /// opaque `token` (policies use it to route the wake internally).
+    pub fn wake_at(&mut self, t: Micros, token: u64) {
+        self.wakes.push((t, token));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.submissions.is_empty() && self.wakes.is_empty()
+    }
+}
+
+/// A composable workload-stream policy.
+///
+/// Object-safe: the drivers take `&mut dyn Submitter` so policies can be
+/// selected at runtime (CLI, benches).
+pub trait Submitter {
+    /// Short policy name for reports.
+    fn label(&self) -> &'static str;
+
+    /// Called once at `t = 0` before the event loop starts.
+    fn start(&mut self, sink: &mut Sink);
+
+    /// A wake timer requested via [`Sink::wake_at`] elapsed.
+    fn wake(&mut self, t: Micros, token: u64, sink: &mut Sink);
+
+    /// An evaluation finished.  `rec.tag` is the submission's tag; times
+    /// are already quantised to the scheduler's log granularity.
+    fn completed(&mut self, t: Micros, rec: &JobRecord, sink: &mut Sink);
+
+    /// A registration pre-job finished (HQ/UM-Bridge path only; the
+    /// paper's readiness checks).  Most policies ignore these.
+    fn registration_completed(&mut self, t: Micros, sink: &mut Sink) {
+        let _ = (t, sink);
+    }
+
+    /// True once the campaign is over, given the number of completed
+    /// evaluations.  Checked by the driver after every event.
+    fn finished(&self, completed: u64) -> bool;
+}
+
+// ---------------------------------------------------------------------------
+// Fixed depth: the paper's protocol.
+// ---------------------------------------------------------------------------
+
+/// The paper's submission protocol (section IV.B): keep exactly
+/// `queue_depth` evaluations in flight; a new one is issued the moment
+/// one finishes.  With the same `(app, n_evals, queue_depth, seed)` this
+/// reproduces the PR 1 experiment drivers action-for-action (pinned by
+/// `tests/campaign_equiv.rs`).
+pub struct FixedDepth {
+    app: App,
+    n_evals: u64,
+    queue_depth: usize,
+    rtm: RuntimeModel,
+    next: u64,
+}
+
+impl FixedDepth {
+    pub fn new(app: App, n_evals: u64, queue_depth: usize, seed: u64) -> Self {
+        FixedDepth {
+            app,
+            n_evals,
+            queue_depth,
+            rtm: RuntimeModel::new(seed),
+            next: 0,
+        }
+    }
+}
+
+impl Submitter for FixedDepth {
+    fn label(&self) -> &'static str {
+        "fixed-depth"
+    }
+
+    fn start(&mut self, sink: &mut Sink) {
+        for _ in 0..self.queue_depth.min(self.n_evals as usize) {
+            sink.wake_at(0, 0);
+        }
+    }
+
+    fn wake(&mut self, _t: Micros, _token: u64, sink: &mut Sink) {
+        if self.next < self.n_evals {
+            let tag = self.next;
+            self.next += 1;
+            sink.submit(Submission {
+                tag,
+                user: 0,
+                app: self.app,
+                duration: self.rtm.duration(self.app, tag),
+            });
+        }
+    }
+
+    fn completed(&mut self, t: Micros, _rec: &JobRecord, sink: &mut Sink) {
+        sink.wake_at(t, 0);
+    }
+
+    fn finished(&self, completed: u64) -> bool {
+        completed >= self.n_evals
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Poisson bursts: open-loop, time-driven arrivals.
+// ---------------------------------------------------------------------------
+
+/// Bursty open-loop arrivals: bursts of `burst.0..=burst.1` evaluations
+/// (uniform) arrive with exponential inter-arrival times, independent of
+/// completions — the unpredictable task streams the paper's premise
+/// describes, and the regime where queue depth is an *output* of the
+/// system instead of a protocol constant.
+pub struct PoissonBurst {
+    app: App,
+    total: u64,
+    mean_interarrival: Micros,
+    burst: (u64, u64),
+    rtm: RuntimeModel,
+    rng: Rng,
+    next: u64,
+}
+
+impl PoissonBurst {
+    pub fn new(
+        app: App,
+        total: u64,
+        mean_interarrival: Micros,
+        burst: (u64, u64),
+        seed: u64,
+    ) -> Self {
+        assert!(burst.0 >= 1 && burst.1 >= burst.0, "bad burst range");
+        PoissonBurst {
+            app,
+            total,
+            mean_interarrival,
+            burst,
+            rtm: RuntimeModel::new(seed),
+            rng: Rng::new(seed ^ 0xB0B5),
+            next: 0,
+        }
+    }
+
+    fn next_gap(&mut self) -> Micros {
+        self.rng.exponential(self.mean_interarrival as f64).max(1.0) as Micros
+    }
+}
+
+impl Submitter for PoissonBurst {
+    fn label(&self) -> &'static str {
+        "poisson-burst"
+    }
+
+    fn start(&mut self, sink: &mut Sink) {
+        let t0 = self.next_gap();
+        sink.wake_at(t0, 0);
+    }
+
+    fn wake(&mut self, t: Micros, _token: u64, sink: &mut Sink) {
+        let span = self.burst.1 - self.burst.0 + 1;
+        let k = self.burst.0 + self.rng.below(span);
+        for _ in 0..k {
+            if self.next >= self.total {
+                break;
+            }
+            let tag = self.next;
+            self.next += 1;
+            sink.submit(Submission {
+                tag,
+                user: 0,
+                app: self.app,
+                duration: self.rtm.duration(self.app, tag),
+            });
+        }
+        if self.next < self.total {
+            let gap = self.next_gap();
+            sink.wake_at(t + gap, 0);
+        }
+    }
+
+    fn completed(&mut self, _t: Micros, _rec: &JobRecord, _sink: &mut Sink) {}
+
+    fn finished(&self, completed: u64) -> bool {
+        completed >= self.total
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-user mix: several closed-loop streams sharing the scheduler.
+// ---------------------------------------------------------------------------
+
+/// One user's stream inside a [`UserMix`].
+#[derive(Clone, Debug)]
+pub struct UserStream {
+    pub user: u32,
+    pub app: App,
+    pub n_evals: u64,
+    pub queue_depth: usize,
+}
+
+/// Several users, each running the paper's fixed-depth protocol over
+/// their own application, sharing the same scheduler — the multi-tenant
+/// contention scenario.  Per-user fairness becomes measurable on both
+/// paths; the *mechanisms* differ: on the SLURM path the driver maps
+/// each campaign user to a distinct scheduler user, so per-user quota
+/// decay applies per stream, while on the HQ path all tasks share one
+/// allocation pool (HQ has no user concept) and fairness emerges from
+/// FCFS dispatch alone.
+pub struct UserMix {
+    streams: Vec<UserStream>,
+    models: Vec<RuntimeModel>,
+    next: Vec<u64>,
+    /// Global tag -> stream index (removed on completion).
+    owner: HashMap<u64, usize>,
+    next_tag: u64,
+    total: u64,
+}
+
+impl UserMix {
+    pub fn new(streams: Vec<UserStream>, seed: u64) -> Self {
+        assert!(!streams.is_empty(), "UserMix needs at least one stream");
+        let total = streams.iter().map(|s| s.n_evals).sum();
+        let models = streams
+            .iter()
+            .map(|s| RuntimeModel::new(seed ^ (s.user as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03)))
+            .collect();
+        let next = vec![0u64; streams.len()];
+        UserMix {
+            streams,
+            models,
+            next,
+            owner: HashMap::new(),
+            next_tag: 0,
+            total,
+        }
+    }
+
+    fn emit(&mut self, i: usize, sink: &mut Sink) {
+        let s = &self.streams[i];
+        if self.next[i] >= s.n_evals {
+            return;
+        }
+        let idx = self.next[i];
+        self.next[i] += 1;
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        self.owner.insert(tag, i);
+        sink.submit(Submission {
+            tag,
+            user: s.user,
+            app: s.app,
+            duration: self.models[i].duration(s.app, idx),
+        });
+    }
+}
+
+impl Submitter for UserMix {
+    fn label(&self) -> &'static str {
+        "user-mix"
+    }
+
+    fn start(&mut self, sink: &mut Sink) {
+        for (i, s) in self.streams.iter().enumerate() {
+            for _ in 0..s.queue_depth.min(s.n_evals as usize) {
+                sink.wake_at(0, i as u64);
+            }
+        }
+    }
+
+    fn wake(&mut self, _t: Micros, token: u64, sink: &mut Sink) {
+        self.emit(token as usize, sink);
+    }
+
+    fn completed(&mut self, t: Micros, rec: &JobRecord, sink: &mut Sink) {
+        if let Some(i) = self.owner.remove(&rec.tag) {
+            sink.wake_at(t, i as u64);
+        }
+    }
+
+    fn finished(&self, completed: u64) -> bool {
+        completed >= self.total
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Heteroskedastic task families.
+// ---------------------------------------------------------------------------
+
+/// One runtime family inside [`HeteroFamilies`].
+#[derive(Clone, Debug)]
+pub struct Family {
+    pub app: App,
+    /// Selection weight (relative).
+    pub weight: f64,
+    /// Extra lognormal runtime spread on top of the app's calibrated
+    /// model (sigma of the underlying normal; 0 = calibrated model).
+    pub sigma: f64,
+}
+
+/// Closed-loop fixed-depth stream whose tasks are drawn from a mixture
+/// of runtime families with different variances — the
+/// runtime-heteroskedastic workloads (e.g. chained forward solves of
+/// varying resolution) that defeat uniform time-request hints.
+pub struct HeteroFamilies {
+    families: Vec<Family>,
+    total: u64,
+    queue_depth: usize,
+    rtm: RuntimeModel,
+    rng: Rng,
+    next: u64,
+}
+
+impl HeteroFamilies {
+    pub fn new(
+        families: Vec<Family>,
+        total: u64,
+        queue_depth: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(!families.is_empty(), "need at least one family");
+        HeteroFamilies {
+            families,
+            total,
+            queue_depth,
+            rtm: RuntimeModel::new(seed),
+            rng: Rng::new(seed ^ 0x4E7E),
+            next: 0,
+        }
+    }
+}
+
+impl Submitter for HeteroFamilies {
+    fn label(&self) -> &'static str {
+        "hetero-families"
+    }
+
+    fn start(&mut self, sink: &mut Sink) {
+        for _ in 0..self.queue_depth.min(self.total as usize) {
+            sink.wake_at(0, 0);
+        }
+    }
+
+    fn wake(&mut self, _t: Micros, _token: u64, sink: &mut Sink) {
+        if self.next >= self.total {
+            return;
+        }
+        let tag = self.next;
+        self.next += 1;
+        let wsum: f64 = self.families.iter().map(|f| f.weight).sum();
+        let mut pick = self.rng.uniform() * wsum;
+        let mut fi = 0;
+        for (i, f) in self.families.iter().enumerate() {
+            if pick < f.weight {
+                fi = i;
+                break;
+            }
+            pick -= f.weight;
+            fi = i;
+        }
+        let fam = &self.families[fi];
+        let base = self.rtm.duration(fam.app, tag);
+        let spread = if fam.sigma > 0.0 {
+            self.rng.lognormal(0.0, fam.sigma)
+        } else {
+            1.0
+        };
+        sink.submit(Submission {
+            tag,
+            user: 0,
+            app: fam.app,
+            duration: ((base as f64) * spread).max(1.0) as Micros,
+        });
+    }
+
+    fn completed(&mut self, t: Micros, _rec: &JobRecord, sink: &mut Sink) {
+        sink.wake_at(t, 0);
+    }
+
+    fn finished(&self, completed: u64) -> bool {
+        completed >= self.total
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive batches: Bayesian-inversion-style feedback policy.
+// ---------------------------------------------------------------------------
+
+/// Adaptive batch policy in the style of dynamic Bayesian inversion
+/// loops (Loi, Wille & Reinarz): evaluations arrive in rounds, and the
+/// size of the next round is chosen from the statistics of the results
+/// observed so far — the total evaluation count is *not* known a priori.
+///
+/// The observable is a pseudo-QoI derived from each record (log CPU
+/// seconds plus seeded observation noise), so the feedback genuinely
+/// flows results -> policy while staying deterministic under the seed.
+/// The next batch is sized so the standard error of the QoI mean would
+/// reach `tol`: `n_target = (sd / tol)^2`, clamped to
+/// `[min_batch, max_batch]` and to the remaining budget.  `tol <= 0`
+/// disables convergence and spends the whole budget (bench mode).
+pub struct AdaptiveBayes {
+    app: App,
+    budget: u64,
+    init_batch: u64,
+    min_batch: u64,
+    max_batch: u64,
+    tol: f64,
+    rtm: RuntimeModel,
+    noise_seed: u64,
+    next: u64,
+    outstanding: u64,
+    results: Vec<f64>,
+    rounds: u64,
+    done: bool,
+}
+
+impl AdaptiveBayes {
+    pub fn new(app: App, budget: u64, seed: u64) -> Self {
+        AdaptiveBayes {
+            app,
+            budget,
+            init_batch: 16,
+            min_batch: 4,
+            max_batch: 4096,
+            tol: 0.02,
+            rtm: RuntimeModel::new(seed),
+            noise_seed: seed ^ 0xADA7,
+            next: 0,
+            outstanding: 0,
+            results: Vec::new(),
+            rounds: 0,
+            done: false,
+        }
+    }
+
+    /// Override the batch clamps (initial, minimum, maximum).
+    pub fn with_batches(mut self, init: u64, min: u64, max: u64) -> Self {
+        assert!(init >= 1 && min >= 1 && max >= min);
+        self.init_batch = init;
+        self.min_batch = min;
+        self.max_batch = max;
+        self
+    }
+
+    /// Override the convergence tolerance (`<= 0` spends the budget).
+    pub fn with_tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Batch rounds issued so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    fn emit_batch(&mut self, k: u64, sink: &mut Sink) {
+        let mut emitted = 0;
+        for _ in 0..k {
+            if self.next >= self.budget {
+                break;
+            }
+            let tag = self.next;
+            self.next += 1;
+            sink.submit(Submission {
+                tag,
+                user: 0,
+                app: self.app,
+                duration: self.rtm.duration(self.app, tag),
+            });
+            emitted += 1;
+        }
+        if emitted > 0 {
+            self.rounds += 1;
+            self.outstanding += emitted;
+        } else {
+            self.done = true;
+        }
+    }
+
+    fn pseudo_qoi(&self, rec: &JobRecord) -> f64 {
+        let mut r = Rng::new(
+            self.noise_seed ^ (rec.tag + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let cpu_s = (rec.cpu.max(1) as f64) / SEC as f64;
+        cpu_s.ln() + 0.05 * r.normal()
+    }
+
+    fn next_batch(&self) -> Option<u64> {
+        let n = self.results.len() as f64;
+        let mean = self.results.iter().sum::<f64>() / n;
+        let var = self
+            .results
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / n.max(1.0);
+        let sd = var.sqrt();
+        if self.tol > 0.0 {
+            let sem = sd / n.sqrt();
+            if sem <= self.tol {
+                return None; // converged
+            }
+            let n_target = (sd / self.tol) * (sd / self.tol);
+            let want = (n_target - n).ceil().max(0.0) as u64;
+            Some(want.clamp(self.min_batch, self.max_batch))
+        } else {
+            Some(self.max_batch)
+        }
+    }
+}
+
+impl Submitter for AdaptiveBayes {
+    fn label(&self) -> &'static str {
+        "adaptive-bayes"
+    }
+
+    fn start(&mut self, sink: &mut Sink) {
+        let k = self.init_batch;
+        self.emit_batch(k, sink);
+    }
+
+    fn wake(&mut self, _t: Micros, _token: u64, _sink: &mut Sink) {}
+
+    fn completed(&mut self, _t: Micros, rec: &JobRecord, sink: &mut Sink) {
+        self.outstanding = self.outstanding.saturating_sub(1);
+        let q = self.pseudo_qoi(rec);
+        self.results.push(q);
+        if self.outstanding == 0 && !self.done {
+            if self.next >= self.budget {
+                self.done = true;
+            } else {
+                match self.next_batch() {
+                    None => self.done = true,
+                    Some(k) => self.emit_batch(k, sink),
+                }
+            }
+        }
+    }
+
+    fn finished(&self, _completed: u64) -> bool {
+        self.done && self.outstanding == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(sink: &mut Sink) -> (Vec<Submission>, Vec<(Micros, u64)>) {
+        (
+            std::mem::take(&mut sink.submissions),
+            std::mem::take(&mut sink.wakes),
+        )
+    }
+
+    #[test]
+    fn fixed_depth_fills_then_tracks_completions() {
+        let mut s = FixedDepth::new(App::Gp, 5, 2, 7);
+        let mut sink = Sink::new();
+        s.start(&mut sink);
+        let (subs, wakes) = drain(&mut sink);
+        assert!(subs.is_empty());
+        assert_eq!(wakes.len(), 2);
+        // Each wake emits exactly one submission with sequential tags.
+        for want in 0..5u64 {
+            s.wake(0, 0, &mut sink);
+            let (subs, _) = drain(&mut sink);
+            assert_eq!(subs.len(), 1);
+            assert_eq!(subs[0].tag, want);
+        }
+        // Exhausted: further wakes are no-ops.
+        s.wake(0, 0, &mut sink);
+        assert!(sink.is_empty());
+        assert!(!s.finished(4));
+        assert!(s.finished(5));
+    }
+
+    #[test]
+    fn poisson_burst_is_open_loop_and_bounded() {
+        let mut s = PoissonBurst::new(App::Gp, 10, SEC, (2, 4), 3);
+        let mut sink = Sink::new();
+        s.start(&mut sink);
+        let (subs, wakes) = drain(&mut sink);
+        assert!(subs.is_empty());
+        assert_eq!(wakes.len(), 1);
+        let mut t = wakes[0].0;
+        let mut total = 0;
+        let mut guard = 0;
+        while total < 10 {
+            guard += 1;
+            assert!(guard < 100);
+            s.wake(t, 0, &mut sink);
+            let (subs, wakes) = drain(&mut sink);
+            assert!(subs.len() <= 4);
+            total += subs.len();
+            match wakes.first() {
+                Some(&(tw, _)) => {
+                    assert!(tw > t);
+                    t = tw;
+                }
+                None => break,
+            }
+        }
+        assert_eq!(total, 10);
+        // Completions do not trigger anything (open loop).
+        let rec = JobRecord {
+            tag: 0,
+            submit: 0,
+            start: 0,
+            end: SEC,
+            cpu: SEC,
+            truncated: false,
+        };
+        s.completed(2 * SEC, &rec, &mut sink);
+        assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn user_mix_routes_completions_to_owner() {
+        let streams = vec![
+            UserStream { user: 0, app: App::Gp, n_evals: 2, queue_depth: 1 },
+            UserStream { user: 3, app: App::Eigen100, n_evals: 2, queue_depth: 1 },
+        ];
+        let mut s = UserMix::new(streams, 9);
+        let mut sink = Sink::new();
+        s.start(&mut sink);
+        let (_, wakes) = drain(&mut sink);
+        assert_eq!(wakes.len(), 2);
+        s.wake(0, 0, &mut sink); // user 0 stream
+        s.wake(0, 1, &mut sink); // user 3 stream
+        let (subs, _) = drain(&mut sink);
+        assert_eq!(subs.len(), 2);
+        assert_eq!(subs[0].user, 0);
+        assert_eq!(subs[1].user, 3);
+        // Completing user-3's task wakes stream 1 only.
+        let rec = JobRecord {
+            tag: subs[1].tag,
+            submit: 0,
+            start: 0,
+            end: SEC,
+            cpu: SEC,
+            truncated: false,
+        };
+        s.completed(SEC, &rec, &mut sink);
+        let (_, wakes) = drain(&mut sink);
+        assert_eq!(wakes, vec![(SEC, 1)]);
+        assert!(s.finished(4));
+    }
+
+    #[test]
+    fn hetero_families_spread_exceeds_base_model() {
+        let fams = vec![
+            Family { app: App::Gp, weight: 1.0, sigma: 0.0 },
+            Family { app: App::Gp, weight: 1.0, sigma: 1.2 },
+        ];
+        let mut s = HeteroFamilies::new(fams, 200, 200, 11);
+        let mut sink = Sink::new();
+        s.start(&mut sink);
+        for _ in 0..200 {
+            s.wake(0, 0, &mut sink);
+        }
+        let (subs, _) = drain(&mut sink);
+        assert_eq!(subs.len(), 200);
+        let lo = subs.iter().map(|x| x.duration).min().unwrap();
+        let hi = subs.iter().map(|x| x.duration).max().unwrap();
+        // The calibrated GP model alone jitters a few percent; the 1.2-
+        // sigma family must widen the spread by an order of magnitude.
+        assert!(hi as f64 / lo as f64 > 5.0, "spread {lo}..{hi}");
+    }
+
+    #[test]
+    fn adaptive_batches_react_to_results() {
+        let mut s = AdaptiveBayes::new(App::Gs2, 1000, 5).with_batches(8, 4, 64);
+        let mut sink = Sink::new();
+        s.start(&mut sink);
+        let (subs, _) = drain(&mut sink);
+        assert_eq!(subs.len(), 8);
+        // Feed completions with wildly varying CPU times: the next batch
+        // must be larger than the minimum (high variance -> more samples).
+        for (i, sub) in subs.iter().enumerate() {
+            let cpu = SEC * (1 + (i as u64 % 7) * 37);
+            let rec = JobRecord {
+                tag: sub.tag,
+                submit: 0,
+                start: 0,
+                end: cpu,
+                cpu,
+                truncated: false,
+            };
+            s.completed(cpu, &rec, &mut sink);
+        }
+        let (batch2, _) = drain(&mut sink);
+        assert!(batch2.len() >= 4, "second round size {}", batch2.len());
+        assert_eq!(s.rounds(), 2);
+        assert!(!s.finished(8));
+    }
+
+    #[test]
+    fn adaptive_zero_tol_spends_budget_in_max_batches() {
+        let mut s = AdaptiveBayes::new(App::Gp, 40, 5)
+            .with_batches(10, 10, 10)
+            .with_tol(0.0);
+        let mut sink = Sink::new();
+        s.start(&mut sink);
+        let mut completed = 0u64;
+        let mut guard = 0;
+        while !s.finished(completed) {
+            guard += 1;
+            assert!(guard < 100, "adaptive policy did not terminate");
+            let (subs, _) = drain(&mut sink);
+            for sub in subs {
+                let rec = JobRecord {
+                    tag: sub.tag,
+                    submit: 0,
+                    start: 0,
+                    end: SEC,
+                    cpu: SEC,
+                    truncated: false,
+                };
+                completed += 1;
+                s.completed(SEC, &rec, &mut sink);
+            }
+        }
+        assert_eq!(completed, 40);
+    }
+}

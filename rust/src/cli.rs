@@ -1,11 +1,39 @@
 //! Tiny CLI argument parser (no clap in the offline environment).
 //!
 //! Supports `--key value`, `--key=value`, `--flag`, and positionals, with
-//! typed accessors and an auto-generated usage line.
+//! typed accessors, human-duration parsing (`500ms`, `2s`, `5m`, `1h`),
+//! and an auto-generated usage line.
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::clock::{Micros, MIN, MS, SEC};
+
+/// Parse a human duration into [`Micros`]: `500ms`, `2s`, `5m`, `1h`,
+/// or a bare number (seconds).  Fractions are allowed (`1.5s`).
+pub fn parse_micros(s: &str) -> Result<Micros> {
+    let s = s.trim();
+    let (num, unit): (&str, f64) = if let Some(v) = s.strip_suffix("ms") {
+        (v, MS as f64)
+    } else if let Some(v) = s.strip_suffix('h') {
+        (v, 60.0 * MIN as f64)
+    } else if let Some(v) = s.strip_suffix('m') {
+        (v, MIN as f64)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, SEC as f64)
+    } else {
+        (s, SEC as f64)
+    };
+    let x: f64 = num
+        .trim()
+        .parse()
+        .with_context(|| format!("bad duration '{s}'"))?;
+    if !x.is_finite() || x < 0.0 {
+        bail!("duration '{s}' must be finite and non-negative");
+    }
+    Ok((x * unit) as Micros)
+}
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -73,6 +101,17 @@ impl Args {
         }
     }
 
+    /// Duration option (`--every 500ms`, `--window 2m`); bare numbers
+    /// are seconds.
+    pub fn micros_or(&self, name: &str, default: Micros) -> Result<Micros> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => {
+                parse_micros(v).with_context(|| format!("--{name}"))
+            }
+        }
+    }
+
     pub fn required(&self, name: &str) -> Result<&str> {
         self.opt(name).ok_or_else(|| anyhow!("missing required --{name}"))
     }
@@ -121,5 +160,28 @@ mod tests {
         let a = parse(&["--model", "gp", "--quiet"]);
         assert!(a.flag("quiet"));
         assert_eq!(a.opt("model"), Some("gp"));
+    }
+
+    #[test]
+    fn durations_parse_units() {
+        assert_eq!(parse_micros("500ms").unwrap(), 500 * MS);
+        assert_eq!(parse_micros("2s").unwrap(), 2 * SEC);
+        assert_eq!(parse_micros("5m").unwrap(), 5 * MIN);
+        assert_eq!(parse_micros("1h").unwrap(), 60 * MIN);
+        assert_eq!(parse_micros("3").unwrap(), 3 * SEC);
+        assert_eq!(parse_micros("1.5s").unwrap(), 1_500 * MS);
+        assert!(parse_micros("abc").is_err());
+        assert!(parse_micros("-4s").is_err());
+        assert!(parse_micros("nan").is_err());
+        assert!(parse_micros("inf").is_err());
+    }
+
+    #[test]
+    fn micros_or_reads_option() {
+        let a = parse(&["--every", "250ms"]);
+        assert_eq!(a.micros_or("every", SEC).unwrap(), 250 * MS);
+        assert_eq!(a.micros_or("window", 2 * SEC).unwrap(), 2 * SEC);
+        let bad = parse(&["--every", "xyz"]);
+        assert!(bad.micros_or("every", SEC).is_err());
     }
 }

@@ -17,6 +17,17 @@
 //! * client requests are queued **first-come first-served** and forwarded
 //!   to idle servers; servers are per-job (paper's measured config) or
 //!   **persistent** (the paper's proposed optimisation, our extension).
+//!
+//! # Lifecycle
+//!
+//! [`start_live`] assembles the whole live stack (scheduler daemon,
+//! backend, balancer front door) and returns a [`LiveStack`] whose
+//! `shutdown` tears it down in dependency order: the balancer front
+//! door first (it holds an `httpd::Server`, see that module's shutdown
+//! contract), then the backend's model-server pool, then the scheduler
+//! daemon.  Every `httpd::Server` spawned by a backend is bound in its
+//! `ServerPool` and shut down explicitly when its job retires — handles
+//! are never left to implicit drop order.
 
 pub mod backend;
 pub mod live;

@@ -4,6 +4,17 @@
 //! framing, keep-alive connections).  Scope is deliberately what the
 //! system needs — GET/POST, persistent connections, a bounded worker
 //! pool — implemented carefully rather than generally.
+//!
+//! # Lifecycle
+//!
+//! [`Server`] is an owning, `#[must_use]` handle: one accept thread per
+//! server, one thread per live connection, all signalled through a
+//! shared stop flag.  Dropping the handle (or calling
+//! [`Server::shutdown`]) stops the accept loop and joins it; connection
+//! threads observe the flag within their 250 ms read-timeout poll and
+//! drain on their own.  See the `Server` docs for the full shutdown
+//! contract.  [`HttpClient`] is a plain blocking keep-alive connection
+//! and needs no teardown beyond drop.
 
 mod client;
 mod server;

@@ -13,8 +13,22 @@ use super::types::{read_message, Request, Response};
 /// Request handler: must be cheap to clone across worker threads.
 pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
 
-/// A running HTTP server.  Dropping the handle does NOT stop the server;
-/// call [`Server::shutdown`].
+/// A running HTTP server.
+///
+/// # Shutdown contract
+///
+/// The handle *owns* the server: dropping it stops the accept loop and
+/// joins the accept thread (in-flight connection threads drain on their
+/// own within their 250 ms stop-flag poll).  Two consequences:
+///
+/// * **Keep the handle alive** for as long as the server must serve —
+///   an unbound `serve(..)?;` expression shuts down immediately, which
+///   is why the type is `#[must_use]`.
+/// * **Prefer an explicit [`Server::shutdown`]** at end of scope (tests
+///   especially): it makes teardown visible and joins deterministically
+///   instead of relying on drop order.
+#[must_use = "dropping a Server shuts it down immediately; bind it and \
+              call shutdown() when done"]
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
@@ -57,6 +71,8 @@ impl Server {
 
     /// Stop accepting and join the accept loop.  In-flight connection
     /// threads drain on their own (they observe the stop flag).
+    /// Idempotent; also invoked by `Drop`, so an explicit call followed
+    /// by the handle going out of scope is fine.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(t) = self.accept_thread.take() {
@@ -182,18 +198,19 @@ mod tests {
 
     #[test]
     fn get_and_post() {
-        let srv = echo_server();
+        let mut srv = echo_server();
         let mut c = HttpClient::connect(&srv.url()).unwrap();
         let r = c.request(&Request::get("/hello")).unwrap();
         assert_eq!(r.status, 200);
         assert_eq!(r.body_str().unwrap(), "world");
         let r = c.request(&Request::post("/echo", "{\"x\":3}")).unwrap();
         assert_eq!(r.body_str().unwrap(), "{\"x\":3}");
+        srv.shutdown();
     }
 
     #[test]
     fn keep_alive_reuses_connection() {
-        let srv = echo_server();
+        let mut srv = echo_server();
         let mut c = HttpClient::connect(&srv.url()).unwrap();
         for i in 0..20 {
             let body = format!("{{\"i\":{i}}}");
@@ -202,19 +219,21 @@ mod tests {
         }
         // 20 requests over one connection.
         assert!(srv.live_connections() <= 1);
+        srv.shutdown();
     }
 
     #[test]
     fn not_found() {
-        let srv = echo_server();
+        let mut srv = echo_server();
         let mut c = HttpClient::connect(&srv.url()).unwrap();
         let r = c.request(&Request::get("/nope")).unwrap();
         assert_eq!(r.status, 404);
+        srv.shutdown();
     }
 
     #[test]
     fn concurrent_clients() {
-        let srv = echo_server();
+        let mut srv = echo_server();
         let url = srv.url();
         let mut threads = Vec::new();
         for t in 0..8 {
@@ -231,15 +250,31 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
+        srv.shutdown();
     }
 
     #[test]
     fn large_body_roundtrip() {
-        let srv = echo_server();
+        let mut srv = echo_server();
         let mut c = HttpClient::connect(&srv.url()).unwrap();
         let big = "x".repeat(2 * 1024 * 1024);
         let r = c.request(&Request::post("/echo", &big)).unwrap();
         assert_eq!(r.body.len(), big.len());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn drop_shuts_down() {
+        // The ownership contract: the handle going out of scope stops
+        // the server (no leaked accept thread, no stolen port).
+        let url = {
+            let srv = echo_server();
+            srv.url()
+        };
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(HttpClient::connect(&url)
+            .and_then(|mut c| c.request(&Request::get("/hello")))
+            .is_err());
     }
 
     #[test]

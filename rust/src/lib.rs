@@ -6,10 +6,15 @@
 //! scheduler (`slurmlite`), a HyperQueue-like meta-scheduler (`hqlite`),
 //! a PJRT runtime executing AOT-compiled JAX/Pallas artifacts, the
 //! GS2-surrogate workloads, and the metrics/benchmark harness that
-//! regenerates every table and figure in the paper's evaluation.
+//! regenerates every table and figure in the paper's evaluation.  On top
+//! of the paper's fixed protocol, the [`campaign`] plane generalizes
+//! *what gets submitted* — bursty, multi-user, heteroskedastic and
+//! adaptive workload streams against any scheduler core.
 //!
-//! See DESIGN.md for the architecture and the experiment index.
+//! See README.md, docs/ARCHITECTURE.md and DESIGN.md for the
+//! architecture and the experiment index.
 
+pub mod campaign;
 pub mod cli;
 pub mod clock;
 pub mod cluster;

@@ -7,13 +7,20 @@
 //!   balancer   — run the load balancer live (slurm | hq backend)
 //!   selftest   — artifact round-trip: PJRT vs golden test vectors
 //!   experiment — run one sim-plane benchmark cell and print its stats
+//!   campaign   — run a campaign-plane workload policy against a
+//!                scheduler and print/export the campaign metrics
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use uqsched::campaign::{
+    self, AdaptiveBayes, CampaignConfig, Family, FixedDepth, HeteroFamilies,
+    PoissonBurst, SlurmMode, Submitter, UserMix, UserStream,
+};
 use uqsched::cli::Args;
+use uqsched::clock::SEC;
 use uqsched::coordinator::start_live;
 use uqsched::experiments::{run_naive_slurm, run_umbridge_hq, Config};
 use uqsched::json::Value;
@@ -33,16 +40,23 @@ fn main() -> Result<()> {
         Some("balancer") => balancer(&args),
         Some("selftest") => selftest(&args),
         Some("experiment") => experiment(&args),
+        Some("campaign") => campaign_cmd(&args),
         _ => {
             eprintln!(
-                "usage: uqsched <serve|client|balancer|selftest|experiment>\n\
+                "usage: uqsched <serve|client|balancer|selftest|experiment|campaign>\n\
                  \n\
                  serve      --model gp|gs2|eigen-100|eigen-5000|qoi [--port N]\n\
                  client     --url http://h:p --model NAME --params 1,2,...\n\
                  balancer   --model NAME --backend slurm|hq [--servers N]\n\
                  selftest   [--artifacts DIR]\n\
                  experiment --app gs2|GP|eigen-100|eigen-5000 [--queue 2]\n\
-                            [--evals 100] [--seed 1]"
+                            [--evals 100] [--seed 1]\n\
+                 campaign   --policy fixed|bursty|mix|hetero|adaptive\n\
+                            --sched slurm|umbridge-slurm|hq\n\
+                            [--app gs2] [--tasks 100] [--depth 2] [--seed 1]\n\
+                            [--interarrival 2s] [--burst-min 1] [--burst-max 8]\n\
+                            [--users gp:50:2,eigen-100:50:2] [--sigmas 0,0.8]\n\
+                            [--tol 0.02] [--workers N] [--out FILE.json]"
             );
             Ok(())
         }
@@ -127,13 +141,8 @@ fn selftest(args: &Args) -> Result<()> {
 }
 
 fn experiment(args: &Args) -> Result<()> {
-    let app = match args.str_or("app", "gs2").as_str() {
-        "gs2" => App::Gs2,
-        "GP" | "gp" => App::Gp,
-        "eigen-100" => App::Eigen100,
-        "eigen-5000" => App::Eigen5000,
-        other => bail!("unknown app '{other}'"),
-    };
+    let name = args.str_or("app", "gs2");
+    let app = App::parse(&name).ok_or_else(|| anyhow!("unknown app '{name}'"))?;
     let mut cfg = Config::paper(app, args.usize_or("queue", 2)?,
                                 args.u64_or("seed", 1)?);
     cfg.n_evals = args.u64_or("evals", 100)?;
@@ -147,6 +156,138 @@ fn experiment(args: &Args) -> Result<()> {
         println!("       {} overhead[s]: {}", app.label(),
                  BoxStats::from(&e.overheads_sec()).row());
         println!("       experiment SLR {:.3}", e.slr());
+    }
+    Ok(())
+}
+
+fn box_json(vals: &[f64]) -> Value {
+    let s = BoxStats::from(vals);
+    Value::obj(vec![
+        ("n", Value::num(s.n as f64)),
+        ("min", Value::num(s.min)),
+        ("q1", Value::num(s.q1)),
+        ("median", Value::num(s.median)),
+        ("q3", Value::num(s.q3)),
+        ("max", Value::num(s.max)),
+        ("mean", Value::num(s.mean)),
+    ])
+}
+
+fn campaign_cmd(args: &Args) -> Result<()> {
+    let app = App::parse(&args.str_or("app", "gs2"))
+        .ok_or_else(|| anyhow!("unknown --app"))?;
+    let policy = args.str_or("policy", "fixed");
+    let sched = args.str_or("sched", "hq");
+    let tasks = args.u64_or("tasks", 100)?;
+    let depth = args.usize_or("depth", 2)?;
+    let seed = args.u64_or("seed", 1)?;
+    let mut cfg = CampaignConfig::paper(app, depth, seed);
+    if let Some(w) = args.opt("workers") {
+        let w: u32 = w.parse().context("--workers")?;
+        cfg.hq_backlog = w;
+        cfg.hq_workers = w;
+    }
+
+    let mut sub: Box<dyn Submitter> = match policy.as_str() {
+        "fixed" => Box::new(FixedDepth::new(app, tasks, depth, seed)),
+        "bursty" => {
+            let ia = args.micros_or("interarrival", 2 * SEC)?;
+            let bmin = args.u64_or("burst-min", 1)?;
+            let bmax = args.u64_or("burst-max", 8)?;
+            Box::new(PoissonBurst::new(app, tasks, ia, (bmin, bmax), seed))
+        }
+        "mix" => {
+            let spec = args.str_or("users", "gp:50:2,eigen-100:50:2");
+            let mut streams = Vec::new();
+            for (i, part) in spec.split(',').enumerate() {
+                let fields: Vec<&str> = part.trim().split(':').collect();
+                if fields.len() != 3 {
+                    bail!("bad --users entry '{part}' (want app:n:depth)");
+                }
+                let sapp = App::parse(fields[0])
+                    .ok_or_else(|| anyhow!("unknown app '{}'", fields[0]))?;
+                streams.push(UserStream {
+                    user: i as u32,
+                    app: sapp,
+                    n_evals: fields[1]
+                        .parse()
+                        .with_context(|| format!("bad count in '{part}'"))?,
+                    queue_depth: fields[2]
+                        .parse()
+                        .with_context(|| format!("bad depth in '{part}'"))?,
+                });
+            }
+            Box::new(UserMix::new(streams, seed))
+        }
+        "hetero" => {
+            let sigmas = args.str_or("sigmas", "0,0.8");
+            let mut fams = Vec::new();
+            for s in sigmas.split(',') {
+                let sigma: f64 = s
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("bad sigma '{s}'"))?;
+                fams.push(Family { app, weight: 1.0, sigma });
+            }
+            Box::new(HeteroFamilies::new(fams, tasks, depth, seed))
+        }
+        "adaptive" => {
+            let tol = args.f64_or("tol", 0.02)?;
+            Box::new(AdaptiveBayes::new(app, tasks, seed).with_tol(tol))
+        }
+        other => bail!("unknown policy '{other}'"),
+    };
+
+    let result = match sched.as_str() {
+        "slurm" => campaign::run_slurm(&cfg, sub.as_mut(), SlurmMode::Native),
+        "umbridge-slurm" => {
+            campaign::run_slurm(&cfg, sub.as_mut(), SlurmMode::UmBridge)
+        }
+        "hq" => campaign::run_hq(&cfg, sub.as_mut()),
+        other => bail!("unknown scheduler '{other}'"),
+    };
+
+    let m = &result.metrics;
+    println!(
+        "campaign '{}' on {}: {} completed / {} submitted",
+        m.policy, m.scheduler, m.completed, m.submitted
+    );
+    println!(
+        "  makespan {:.1} s | peak in-flight {} | fairness (Jain) {:.3} | {} DES events",
+        m.makespan as f64 / SEC as f64,
+        m.peak_in_flight,
+        m.fairness_jain,
+        m.des_events
+    );
+    for (n, t) in &m.time_to {
+        println!("  time to {n:>7} results: {:>12.1} s", *t as f64 / SEC as f64);
+    }
+    for u in &m.per_user {
+        println!(
+            "  user {}: {} evals, mean makespan {:.1} s, mean SLR {:.2}",
+            u.user, u.completed, u.mean_makespan_s, u.mean_slr
+        );
+    }
+    let e = &result.experiment;
+    println!("  makespan[s]: {}", BoxStats::from(&e.makespans_sec()).row());
+    println!("  overhead[s]: {}", BoxStats::from(&e.overheads_sec()).row());
+
+    if let Some(path) = args.opt("out") {
+        let doc = Value::obj(vec![
+            ("campaign", m.json()),
+            (
+                "boxstats",
+                Value::obj(vec![
+                    ("makespan_s", box_json(&e.makespans_sec())),
+                    ("cpu_s", box_json(&e.cpus_sec())),
+                    ("overhead_s", box_json(&e.overheads_sec())),
+                    ("slr", box_json(&e.slrs())),
+                ]),
+            ),
+        ]);
+        std::fs::write(path, uqsched::json::write(&doc))
+            .with_context(|| format!("write {path}"))?;
+        println!("wrote {path}");
     }
     Ok(())
 }

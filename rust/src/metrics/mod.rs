@@ -119,6 +119,28 @@ impl Experiment {
     pub fn slrs(&self) -> Vec<f64> {
         self.records.iter().map(|r| r.slr()).collect()
     }
+
+    /// All record end times, ascending — the completion curve.  The
+    /// campaign plane derives its time-to-Nth milestones from one call
+    /// (sorting once instead of per milestone).
+    pub fn ends_sorted(&self) -> Vec<Micros> {
+        let mut ends: Vec<Micros> =
+            self.records.iter().map(|r| r.end).collect();
+        ends.sort_unstable();
+        ends
+    }
+
+    /// Virtual time from campaign start (t = 0) to the `n`th completed
+    /// record (1-indexed, in completion order).  `None` when fewer than
+    /// `n` records exist or `n == 0`.  Campaign-plane metric: how fast
+    /// results accumulate, independent of per-job overheads.  For many
+    /// milestones at once, use [`Experiment::ends_sorted`].
+    pub fn time_to_nth_result(&self, n: usize) -> Option<Micros> {
+        if n == 0 || n > self.records.len() {
+            return None;
+        }
+        Some(self.ends_sorted()[n - 1])
+    }
 }
 
 #[cfg(test)]
@@ -171,6 +193,19 @@ mod tests {
         assert_eq!(e.makespan(), 20 * SEC);
         assert_eq!(e.total_cpu(), 18 * SEC);
         assert!((e.slr() - 20.0 / 18.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_to_nth_is_sorted_ends() {
+        let mut e = Experiment::new("x");
+        e.records.push(rec(0, SEC, 30 * SEC, 10 * SEC));
+        e.records.push(rec(0, SEC, 10 * SEC, 8 * SEC));
+        e.records.push(rec(0, SEC, 20 * SEC, 8 * SEC));
+        assert_eq!(e.time_to_nth_result(1), Some(10 * SEC));
+        assert_eq!(e.time_to_nth_result(2), Some(20 * SEC));
+        assert_eq!(e.time_to_nth_result(3), Some(30 * SEC));
+        assert_eq!(e.time_to_nth_result(4), None);
+        assert_eq!(e.time_to_nth_result(0), None);
     }
 
     #[test]

@@ -37,6 +37,11 @@ pub trait Model: Send + Sync {
 }
 
 /// Serve models over HTTP; port 0 picks a free port.
+///
+/// The returned [`Server`] handle owns the listener: keep it alive for
+/// as long as the models must be reachable, and call
+/// [`Server::shutdown`] when done (dropping the handle also shuts the
+/// server down — see the `Server` shutdown contract).
 pub fn serve_models(models: Vec<Arc<dyn Model>>, port: u16) -> Result<Server> {
     let models = Arc::new(models);
     let handler: Handler = Arc::new(move |req: &Request| {
@@ -264,62 +269,68 @@ mod tests {
 
     #[test]
     fn info_lists_models() {
-        let srv = serve();
+        let mut srv = serve();
         let mut m = HttpModel::connect(&srv.url(), "testmodel").unwrap();
         let (ver, names) = m.info().unwrap();
         assert_eq!(ver, PROTOCOL_VERSION);
         assert_eq!(names, vec!["testmodel"]);
+        srv.shutdown();
     }
 
     #[test]
     fn sizes_roundtrip() {
-        let srv = serve();
+        let mut srv = serve();
         let mut m = HttpModel::connect(&srv.url(), "testmodel").unwrap();
         assert_eq!(m.input_sizes().unwrap(), vec![3]);
         assert_eq!(m.output_sizes().unwrap(), vec![1, 3]);
+        srv.shutdown();
     }
 
     #[test]
     fn evaluate_roundtrip() {
-        let srv = serve();
+        let mut srv = serve();
         let mut m = HttpModel::connect(&srv.url(), "testmodel").unwrap();
         let out = m
             .evaluate(&[vec![1.0, 2.0, 3.0]], &Value::Obj(Default::default()))
             .unwrap();
         assert_eq!(out, vec![vec![6.0], vec![2.0, 4.0, 6.0]]);
+        srv.shutdown();
     }
 
     #[test]
     fn wrong_input_size_rejected() {
-        let srv = serve();
+        let mut srv = serve();
         let mut m = HttpModel::connect(&srv.url(), "testmodel").unwrap();
         let err = m
             .evaluate(&[vec![1.0]], &Value::Obj(Default::default()))
             .unwrap_err();
         assert!(format!("{err}").contains("500"));
+        srv.shutdown();
     }
 
     #[test]
     fn unknown_model_rejected() {
-        let srv = serve();
+        let mut srv = serve();
         let mut m = HttpModel::connect(&srv.url(), "nope").unwrap();
         assert!(m.input_sizes().is_err());
+        srv.shutdown();
     }
 
     #[test]
     fn model_info_flags() {
-        let srv = serve();
+        let mut srv = serve();
         let mut m = HttpModel::connect(&srv.url(), "testmodel").unwrap();
         let v = m.model_info().unwrap();
         assert_eq!(v.get("support").unwrap().get("Evaluate").unwrap(),
                    &Value::Bool(true));
         assert_eq!(v.get("support").unwrap().get("Gradient").unwrap(),
                    &Value::Bool(false));
+        srv.shutdown();
     }
 
     #[test]
     fn concurrent_evaluations() {
-        let srv = serve();
+        let mut srv = serve();
         let url = srv.url();
         let threads: Vec<_> = (0..6)
             .map(|t| {
@@ -340,5 +351,6 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
+        srv.shutdown();
     }
 }

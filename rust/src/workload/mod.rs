@@ -29,6 +29,17 @@ impl App {
         }
     }
 
+    /// Parse a CLI/report name back into an application.
+    pub fn parse(s: &str) -> Option<App> {
+        match s {
+            "eigen-100" | "eigen100" => Some(App::Eigen100),
+            "eigen-5000" | "eigen5000" => Some(App::Eigen5000),
+            "gs2" => Some(App::Gs2),
+            "GP" | "gp" => Some(App::Gp),
+            _ => None,
+        }
+    }
+
     /// Wire name of the serving model (live plane).
     pub fn model_name(&self) -> &'static str {
         match self {
@@ -211,6 +222,15 @@ mod tests {
             bins.sort();
             assert_eq!(bins, (0..n).collect::<Vec<_>>(), "dim {d}");
         }
+    }
+
+    #[test]
+    fn parse_roundtrips_labels() {
+        for app in App::all() {
+            assert_eq!(App::parse(app.label()), Some(app));
+        }
+        assert_eq!(App::parse("gp"), Some(App::Gp));
+        assert_eq!(App::parse("nope"), None);
     }
 
     #[test]

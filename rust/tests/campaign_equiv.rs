@@ -1,0 +1,208 @@
+//! Campaign-plane equivalence and determinism.
+//!
+//! 1. The generic campaign drivers with the `FixedDepth` submitter must
+//!    reproduce the PR 1 experiment drivers (`experiments::reference`)
+//!    **record-for-record** — same `Experiment` records, same seed — for
+//!    all four apps on every scheduler path.  This pins the refactor:
+//!    the paper's protocol is now *one instance* of the campaign plane,
+//!    not a separate code path.
+//! 2. Open-ended policies (bursty, adaptive) must be pure functions of
+//!    their seed: same seed, same records; different seed, different
+//!    stream.
+
+use uqsched::campaign::{
+    self, AdaptiveBayes, CampaignConfig, PoissonBurst, SlurmMode, UserMix,
+    UserStream,
+};
+use uqsched::clock::SEC;
+use uqsched::cluster::ClusterSpec;
+use uqsched::experiments::{
+    reference, run_naive_slurm, run_umbridge_hq, run_umbridge_slurm, Config,
+};
+use uqsched::metrics::JobRecord;
+use uqsched::workload::App;
+
+fn small_cfg(app: App, queue_depth: usize, n_evals: u64, seed: u64) -> Config {
+    let mut c = Config::paper(app, queue_depth, seed);
+    c.n_evals = n_evals;
+    c.cluster = ClusterSpec::small(8);
+    // Light background load: cheap, but keeps the stochastic arrival
+    // path exercised so the equivalence covers the rng interleaving.
+    c.overheads.bg_interarrival = 300 * SEC;
+    c
+}
+
+fn assert_records_equal(label: &str, a: &[JobRecord], b: &[JobRecord]) {
+    assert_eq!(
+        a.len(),
+        b.len(),
+        "{label}: record count {} vs {}",
+        a.len(),
+        b.len()
+    );
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x, y, "{label}: record {i} diverged");
+    }
+}
+
+#[test]
+fn fixed_depth_matches_reference_all_apps_naive_slurm() {
+    for app in App::all() {
+        let n = if app == App::Gs2 { 8 } else { 12 };
+        let cfg = small_cfg(app, 2, n, 11);
+        let new = run_naive_slurm(&cfg);
+        let old = reference::run_naive_slurm(&cfg);
+        assert_records_equal(&format!("naive-slurm/{}", app.label()),
+                             &new.records, &old.records);
+    }
+}
+
+#[test]
+fn fixed_depth_matches_reference_all_apps_umbridge_slurm() {
+    for app in App::all() {
+        let n = if app == App::Gs2 { 8 } else { 12 };
+        let cfg = small_cfg(app, 2, n, 11);
+        let new = run_umbridge_slurm(&cfg);
+        let old = reference::run_umbridge_slurm(&cfg);
+        assert_records_equal(&format!("umbridge-slurm/{}", app.label()),
+                             &new.records, &old.records);
+    }
+}
+
+#[test]
+fn fixed_depth_matches_reference_all_apps_hq() {
+    for app in App::all() {
+        let n = if app == App::Gs2 { 8 } else { 12 };
+        let cfg = small_cfg(app, 2, n, 11);
+        let new = run_umbridge_hq(&cfg);
+        let old = reference::run_umbridge_hq(&cfg);
+        assert_records_equal(&format!("hq/{}", app.label()),
+                             &new.records, &old.records);
+    }
+}
+
+#[test]
+fn fixed_depth_matches_reference_deeper_queue_and_other_seeds() {
+    // The paper's second configuration (10 jobs in the queue) plus a
+    // couple of seeds, on the cheapest app to keep the suite fast.
+    for seed in [1u64, 7, 42] {
+        let cfg = small_cfg(App::Eigen100, 10, 20, seed);
+        assert_records_equal(
+            &format!("naive-slurm/depth10/seed{seed}"),
+            &run_naive_slurm(&cfg).records,
+            &reference::run_naive_slurm(&cfg).records,
+        );
+        assert_records_equal(
+            &format!("hq/depth10/seed{seed}"),
+            &run_umbridge_hq(&cfg).records,
+            &reference::run_umbridge_hq(&cfg).records,
+        );
+    }
+}
+
+#[test]
+fn fixed_depth_matches_reference_on_paper_cluster() {
+    // One cell on the full Hamilton8 cluster with paper background load
+    // — the heaviest rng interleaving the reference driver supports.
+    let mut cfg = Config::paper(App::Eigen5000, 2, 3);
+    cfg.n_evals = 8;
+    assert_records_equal(
+        "naive-slurm/hamilton8",
+        &run_naive_slurm(&cfg).records,
+        &reference::run_naive_slurm(&cfg).records,
+    );
+    assert_records_equal(
+        "hq/hamilton8",
+        &run_umbridge_hq(&cfg).records,
+        &reference::run_umbridge_hq(&cfg).records,
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Determinism under seed for the open-ended policies.
+// ---------------------------------------------------------------------------
+
+fn bursty_records(seed: u64) -> Vec<JobRecord> {
+    let mut cfg = CampaignConfig::paper(App::Gp, 4, seed);
+    cfg.cluster = ClusterSpec::small(8);
+    cfg.overheads.bg_interarrival = 300 * SEC;
+    cfg.registration_jobs = 0;
+    let mut sub = PoissonBurst::new(App::Gp, 40, 2 * SEC, (1, 4), seed);
+    campaign::run_hq(&cfg, &mut sub).experiment.records
+}
+
+#[test]
+fn bursty_stream_is_deterministic_under_seed() {
+    let a = bursty_records(5);
+    let b = bursty_records(5);
+    assert_records_equal("bursty/seed5", &a, &b);
+    assert_eq!(a.len(), 40);
+    let c = bursty_records(6);
+    assert_ne!(a, c, "different seed must change the stream");
+}
+
+fn adaptive_records(seed: u64) -> Vec<JobRecord> {
+    let mut cfg = CampaignConfig::paper(App::Gs2, 4, seed);
+    cfg.cluster = ClusterSpec::small(8);
+    cfg.overheads.bg_interarrival = 300 * SEC;
+    let mut sub =
+        AdaptiveBayes::new(App::Gs2, 48, seed).with_batches(8, 4, 16);
+    campaign::run_hq(&cfg, &mut sub).experiment.records
+}
+
+#[test]
+fn adaptive_stream_is_deterministic_under_seed() {
+    let a = adaptive_records(9);
+    let b = adaptive_records(9);
+    assert_records_equal("adaptive/seed9", &a, &b);
+    assert!(!a.is_empty() && a.len() <= 48);
+    let c = adaptive_records(10);
+    assert_ne!(a, c, "different seed must change the stream");
+}
+
+#[test]
+fn adaptive_batch_sizes_depend_on_results() {
+    // Same seed but different budgets/batch clamps produce different
+    // round structure; and against a heteroskedastic app (gs2) the
+    // policy must issue more than one round before converging.
+    let mut cfg = CampaignConfig::paper(App::Gs2, 4, 3);
+    cfg.cluster = ClusterSpec::small(8);
+    cfg.overheads.bg_interarrival = 300 * SEC;
+    let mut sub = AdaptiveBayes::new(App::Gs2, 64, 3).with_batches(6, 4, 16);
+    let r = campaign::run_hq(&cfg, &mut sub);
+    assert!(sub.rounds() > 1, "gs2 variance must force extra rounds");
+    assert_eq!(r.metrics.completed, r.experiment.records.len() as u64);
+}
+
+#[test]
+fn user_mix_is_deterministic_and_complete() {
+    let run = |seed: u64| {
+        let mut cfg = CampaignConfig::paper(App::Gp, 4, seed);
+        cfg.cluster = ClusterSpec::small(8);
+        cfg.overheads.bg_interarrival = 300 * SEC;
+        let mut sub = UserMix::new(
+            vec![
+                UserStream {
+                    user: 0,
+                    app: App::Gp,
+                    n_evals: 10,
+                    queue_depth: 2,
+                },
+                UserStream {
+                    user: 1,
+                    app: App::Eigen100,
+                    n_evals: 10,
+                    queue_depth: 2,
+                },
+            ],
+            seed,
+        );
+        campaign::run_slurm(&cfg, &mut sub, SlurmMode::Native)
+    };
+    let a = run(4);
+    let b = run(4);
+    assert_records_equal("usermix/seed4", &a.experiment.records,
+                         &b.experiment.records);
+    assert_eq!(a.experiment.records.len(), 20);
+    assert_eq!(a.metrics.per_user.len(), 2);
+}
