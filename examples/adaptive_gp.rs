@@ -21,7 +21,7 @@ use uqsched::json::Value;
 use uqsched::models;
 use uqsched::runtime::Engine;
 use uqsched::umbridge::HttpModel;
-use uqsched::workload::{lhs, scenario, App};
+use uqsched::workload::lhs;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -38,10 +38,9 @@ fn main() -> anyhow::Result<()> {
     let gp = models::GpModel::new(engine.clone());
     let stack = start_live(
         engine.clone(),
-        models::GS2_NAME,
+        &[models::GS2_NAME],
         "hq",
         2,
-        &scenario(App::Gs2),
         2000.0,
         true,
     )?;

@@ -15,16 +15,14 @@ use uqsched::metrics::BoxStats;
 use uqsched::models;
 use uqsched::runtime::Engine;
 use uqsched::umbridge::HttpModel;
-use uqsched::workload::{scenario, App};
 
 fn run_backend(engine: Arc<Engine>, backend: &str, evals: usize,
                time_scale: f64) -> anyhow::Result<Vec<f64>> {
     let stack = start_live(
         engine,
-        models::EIGEN_SMALL_NAME,
+        &[models::EIGEN_SMALL_NAME],
         backend,
         2,
-        &scenario(App::Eigen100),
         time_scale,
         // Per-job servers: the configuration the paper measured.
         false,

@@ -22,7 +22,7 @@ use uqsched::metrics::BoxStats;
 use uqsched::models;
 use uqsched::runtime::Engine;
 use uqsched::umbridge::HttpModel;
-use uqsched::workload::{lhs, scenario, App};
+use uqsched::workload::lhs;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -39,10 +39,9 @@ fn main() -> anyhow::Result<()> {
 
     let stack = start_live(
         engine.clone(),
-        models::GS2_NAME,
+        &[models::GS2_NAME],
         "hq",
         queue_depth,
-        &scenario(App::Gs2),
         time_scale,
         true,
     )?;

@@ -14,11 +14,11 @@ use uqsched::metrics::BoxStats;
 use uqsched::models;
 use uqsched::runtime::Engine;
 use uqsched::umbridge::HttpModel;
-use uqsched::workload::{lhs, scenario, App};
+use uqsched::workload::lhs;
 
 fn run(eng: Arc<Engine>, persistent: bool, evals: usize) -> Vec<f64> {
-    let stack = start_live(eng, models::GP_NAME, "hq", 2,
-                           &scenario(App::Gp), 2000.0, persistent)
+    let stack = start_live(eng, &[models::GP_NAME], "hq", 2,
+                           2000.0, persistent)
         .expect("live stack");
     let mut client = HttpModel::connect(&stack.balancer.url(),
                                         models::GP_NAME)

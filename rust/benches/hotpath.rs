@@ -5,20 +5,28 @@
 //!   * JSON parse/serialise of evaluate bodies
 //!   * HTTP+UM-Bridge round-trip latency and throughput
 //!   * end-to-end balancer throughput (queue -> registry -> forward)
+//!   * multi-model balancer throughput: N models through one front
+//!     door, fixed forwarder pool, zero per-evaluation thread spawns
 //!
-//! Used by the performance pass (EXPERIMENTS.md section Perf); each
-//! measurement prints ops/s and per-op latency.
+//! The PJRT sections need `make artifacts` and self-skip without them;
+//! the multi-model section runs anywhere (synthetic models over the
+//! in-process LocalBackend) and writes `BENCH_hotpath.json` with the
+//! balancer's /Stats document (queue-wait + forward histograms).
+//!
+//! Knobs: `UQSCHED_HOTPATH_ITERS` (default 300 evals per client),
+//! `UQSCHED_HOTPATH_MODELS` (default 4).
 
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
-use uqsched::coordinator::start_live;
+use uqsched::coordinator::{start_live, BalancerConfig, LoadBalancer,
+                           LocalBackend};
 use uqsched::json::{self, Value};
 use uqsched::models::{self, GP_NAME};
 use uqsched::runtime::Engine;
-use uqsched::umbridge::{serve_models, HttpModel};
-use uqsched::workload::{lhs, scenario, App};
+use uqsched::umbridge::{serve_models, HttpModel, Model};
+use uqsched::workload::lhs;
 
 fn bench<F: FnMut() -> ()>(name: &str, iters: u64, mut f: F) -> f64 {
     // Warmup.
@@ -36,11 +44,24 @@ fn bench<F: FnMut() -> ()>(name: &str, iters: u64, mut f: F) -> f64 {
     per
 }
 
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
 fn main() {
     println!("=== hotpath microbenchmarks ===");
     let dir = std::env::var("UQSCHED_ARTIFACTS")
         .unwrap_or_else(|_| "artifacts".into());
-    let eng = Arc::new(Engine::new(Path::new(&dir)).expect("engine"));
+    match Engine::new(Path::new(&dir)) {
+        Ok(eng) => pjrt_sections(Arc::new(eng)),
+        Err(e) => println!("  SKIP PJRT sections (no artifacts: {e:#})"),
+    }
+    multi_model_section();
+    println!("hotpath done");
+    std::process::exit(0); // skip slow teardown of live threads
+}
+
+fn pjrt_sections(eng: Arc<Engine>) {
     eng.warmup(&["gp_predict_b16", "gp_predict_b256", "gs2_chunk"])
         .expect("warmup");
 
@@ -95,18 +116,13 @@ fn main() {
     });
 
     // End-to-end through the balancer (persistent servers, hq backend).
-    let stack = start_live(eng.clone(), GP_NAME, "hq", 2,
-                           &scenario(App::Gp), 2000.0, true)
+    let stack = start_live(eng.clone(), &[GP_NAME], "hq", 2, 2000.0, true)
         .expect("live stack");
-    // Wait for a server to register.
+    // Wait for a server to register (warm start spawns it).
     let t0 = Instant::now();
     while stack.balancer.registry().total() == 0 {
         if t0.elapsed().as_secs() > 30 {
             panic!("no server registered");
-        }
-        // Post one request to trigger scale-up.
-        if let Ok(mut c) = HttpModel::connect(&stack.balancer.url(), GP_NAME) {
-            let _ = c.evaluate(&[points[3].to_vec()], &cfgv);
         }
         std::thread::sleep(std::time::Duration::from_millis(20));
     }
@@ -115,7 +131,86 @@ fn main() {
     bench("balancer end-to-end evaluate (hq backend)", 300, || {
         lb_client.evaluate(&[points[4].to_vec()], &cfgv).unwrap();
     });
+}
 
-    println!("hotpath done");
-    std::process::exit(0); // skip slow teardown of live threads
+/// N models through one balancer front door: per-model queues, the
+/// fixed forwarder pool and registry leases on the hot path — no
+/// per-evaluation thread spawn anywhere.  Artifact-free (synthetic
+/// models, LocalBackend).
+fn multi_model_section() {
+    let n_models = env_usize("UQSCHED_HOTPATH_MODELS", 4).max(1);
+    let iters = env_usize("UQSCHED_HOTPATH_ITERS", 300).max(1);
+    let clients_per_model = 2usize;
+
+    let names: Vec<String> =
+        (0..n_models).map(|i| format!("syn-{i}")).collect();
+    let backend = LocalBackend::new(Arc::new(|name: &str| {
+        Ok(Arc::new(models::SyntheticModel::new(name, &[4], &[2]))
+            as Arc<dyn Model>)
+    }));
+    let cfg = BalancerConfig {
+        models: names.clone(),
+        max_servers: 2,
+        forwarders: 8,
+        ..Default::default()
+    };
+    let mut lb = LoadBalancer::start(cfg, backend).expect("balancer");
+    let url = lb.url();
+    let t0 = Instant::now();
+    while lb.registry().total() < n_models {
+        if t0.elapsed().as_secs() > 30 {
+            panic!("servers failed to register");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+
+    let t0 = Instant::now();
+    let threads: Vec<_> = names
+        .iter()
+        .flat_map(|name| {
+            (0..clients_per_model).map(|c| {
+                let url = url.clone();
+                let name = name.clone();
+                std::thread::spawn(move || {
+                    let mut m = HttpModel::connect(&url, &name).unwrap();
+                    let cfgv = Value::Obj(Default::default());
+                    for i in 0..iters {
+                        let x = vec![c as f64, i as f64, 1.0, 2.0];
+                        let sum: f64 = x.iter().sum();
+                        let out = m.evaluate(&[x], &cfgv).unwrap();
+                        assert_eq!(out[0][0], sum);
+                    }
+                })
+            }).collect::<Vec<_>>()
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let total = (n_models * clients_per_model * iters) as f64;
+    println!(
+        "  multi-model balancer ({n_models} models, {} clients)    \
+         {:>10.1} evals/s   {:>10.3} ms/eval",
+        n_models * clients_per_model,
+        total / dt,
+        dt / total * 1e3
+    );
+
+    let stats = lb.stats_json();
+    let doc = Value::obj(vec![
+        ("multi_model", Value::obj(vec![
+            ("models", Value::num(n_models as f64)),
+            ("clients", Value::num((n_models * clients_per_model) as f64)),
+            ("evals", Value::num(total)),
+            ("wall_s", Value::num(dt)),
+            ("evals_per_s", Value::num(total / dt)),
+        ])),
+        ("stats", stats),
+    ]);
+    std::fs::write("BENCH_hotpath.json", json::write(&doc))
+        .expect("write BENCH_hotpath.json");
+    println!("  wrote BENCH_hotpath.json (per-model queue-wait/forward \
+              histograms)");
+    lb.shutdown();
 }

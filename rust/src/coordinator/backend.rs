@@ -1,12 +1,20 @@
 //! Live scheduling backends for the balancer: per-job SLURM submission
 //! vs HyperQueue-style tasks on a bulk allocation — the paper's two
 //! deployment modes, running against the live `slurmlite` daemon with
-//! real model-server threads (HTTP + PJRT).
+//! real model-server threads (HTTP + PJRT) — plus an in-process
+//! [`LocalBackend`] that serves models directly (no scheduler), used by
+//! the balancer-plane tests, the `selftest` smoke and the multi-model
+//! `hotpath` bench.
+//!
+//! All backends are **multi-model**: [`Backend::spawn_server`] takes
+//! the wire name of the model the new server must serve, and spawn
+//! accounting is kept per model so the balancer can scale each pool
+//! independently.
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -15,18 +23,19 @@ use crate::clock::MS;
 use crate::models;
 use crate::runtime::Engine;
 use crate::slurmlite::daemon::{DaemonEvent, SlurmDaemon};
-use crate::umbridge;
+use crate::umbridge::{self, Model};
 
 use super::portfile;
 
 /// A scheduling backend the balancer spawns servers through.
 pub trait Backend: Send + Sync {
-    /// Request one more model-server instance (async).
-    fn spawn_server(&self);
+    /// Request one more server for `model` (async).
+    fn spawn_server(&self, model: &str);
     /// Endpoints of servers that came up since the last poll.
     fn poll_new_servers(&self) -> Vec<String>;
-    /// Spawns requested but not yet registered.
-    fn spawns_in_flight(&self) -> usize;
+    /// Spawns requested for `model` but not yet surfaced by
+    /// [`Backend::poll_new_servers`].
+    fn spawns_in_flight(&self, model: &str) -> usize;
     /// Per-job mode: the server served its evaluation; stop it.
     fn retire_server(&self, endpoint: &str);
     /// Health check failed; reclaim resources.
@@ -41,42 +50,98 @@ pub trait Backend: Send + Sync {
 /// PJRT engine) plus its scheduler bookkeeping.
 struct Instance {
     server: crate::httpd::Server,
+    model: String,
     slurm_job: Option<u64>,
 }
 
 struct ServerPool {
     engine: Arc<Engine>,
-    model: &'static str,
     run_dir: PathBuf,
     /// endpoint -> instance
     live: Mutex<HashMap<String, Instance>>,
+    /// (model, slurm job) of instances that never came up — drained by
+    /// the backend's poll so spawn accounting does not leak.
+    failed: Mutex<Vec<(String, Option<u64>)>>,
     sync_workaround: bool,
 }
 
 impl ServerPool {
-    /// Start a model server now; returns its endpoint after writing the
-    /// port file (the registration path the balancer watches).
-    fn start_instance(&self, job_tag: u64, slurm_job: Option<u64>) {
-        let model = match models::by_name(self.engine.clone(), self.model) {
+    fn new(engine: Arc<Engine>, run_dir: PathBuf, sync_workaround: bool)
+           -> Arc<ServerPool> {
+        Arc::new(ServerPool {
+            engine,
+            run_dir,
+            live: Mutex::new(HashMap::new()),
+            failed: Mutex::new(Vec::new()),
+            sync_workaround,
+        })
+    }
+
+    /// Start a server for `model` now; the port file is written last so
+    /// the watcher can already resolve the endpoint's model when it
+    /// polls it up.  Failures are recorded so the backend can release
+    /// the spawn slot (and the scheduler job) instead of leaking it.
+    fn start_instance(&self, job_tag: u64, model: &str,
+                      slurm_job: Option<u64>) {
+        let built = match models::by_name(self.engine.clone(), model) {
             Ok(m) => m,
             Err(e) => {
                 crate::log_error!("backend", "model build failed: {e:#}");
+                self.failed
+                    .lock()
+                    .unwrap()
+                    .push((model.to_string(), slurm_job));
                 return;
             }
         };
-        match umbridge::serve_models(vec![model], 0) {
+        match umbridge::serve_models(vec![built], 0) {
             Ok(server) => {
                 let url = server.url();
-                let _ = portfile::write_portfile(
-                    &self.run_dir, job_tag, &url, self.sync_workaround,
-                );
                 self.live.lock().unwrap().insert(
-                    url,
-                    Instance { server, slurm_job },
+                    url.clone(),
+                    Instance {
+                        server,
+                        model: model.to_string(),
+                        slurm_job,
+                    },
                 );
+                if let Err(e) = portfile::write_portfile(
+                    &self.run_dir, job_tag, &url, self.sync_workaround,
+                ) {
+                    // The watcher can never discover this server: roll
+                    // it back and release the spawn slot.
+                    crate::log_error!("backend",
+                                      "portfile write failed for {url}: {e:#}");
+                    let inst = self.live.lock().unwrap().remove(&url);
+                    if let Some(mut inst) = inst {
+                        inst.server.shutdown();
+                    }
+                    self.failed
+                        .lock()
+                        .unwrap()
+                        .push((model.to_string(), slurm_job));
+                }
             }
-            Err(e) => crate::log_error!("backend", "server start failed: {e:#}"),
+            Err(e) => {
+                crate::log_error!("backend", "server start failed: {e:#}");
+                self.failed
+                    .lock()
+                    .unwrap()
+                    .push((model.to_string(), slurm_job));
+            }
         }
+    }
+
+    fn take_failed(&self) -> Vec<(String, Option<u64>)> {
+        std::mem::take(&mut self.failed.lock().unwrap())
+    }
+
+    fn model_of(&self, endpoint: &str) -> Option<String> {
+        self.live
+            .lock()
+            .unwrap()
+            .get(endpoint)
+            .map(|i| i.model.clone())
     }
 
     fn stop_instance(&self, endpoint: &str) -> Option<u64> {
@@ -102,14 +167,39 @@ impl ServerPool {
     }
 }
 
+/// model -> outstanding spawn count, shared helper for all backends.
+#[derive(Default)]
+struct InFlight(Mutex<HashMap<String, usize>>);
+
+impl InFlight {
+    fn inc(&self, model: &str) {
+        *self.0.lock().unwrap().entry(model.to_string()).or_default() += 1;
+    }
+
+    fn dec(&self, model: &str) {
+        if let Some(n) = self.0.lock().unwrap().get_mut(model) {
+            *n = n.saturating_sub(1);
+        }
+    }
+
+    fn get(&self, model: &str) -> usize {
+        self.0.lock().unwrap().get(model).copied().unwrap_or(0)
+    }
+}
+
 // ---------------------------------------------------------------------------
 
-/// Per-job SLURM backend: one slurmlite job per model server.
+/// Per-job SLURM backend: one slurmlite job per model server, sized by
+/// the model's Table-III resource request.
 pub struct SlurmBackend {
     daemon: Arc<SlurmDaemon>,
     pool: Arc<ServerPool>,
-    request: JobRequest,
-    in_flight: Arc<AtomicUsize>,
+    /// model -> job shape (every servable model must have an entry;
+    /// `start_live` validates the model list at startup).
+    requests: HashMap<String, JobRequest>,
+    /// slurm job id -> model it will serve (bridged to the sink).
+    pending_jobs: Arc<Mutex<HashMap<u64, String>>>,
+    in_flight: InFlight,
     stopped: Arc<AtomicBool>,
 }
 
@@ -117,72 +207,102 @@ impl SlurmBackend {
     pub fn new(
         daemon: Arc<SlurmDaemon>,
         engine: Arc<Engine>,
-        model: &'static str,
-        request: JobRequest,
+        requests: HashMap<String, JobRequest>,
         _overheads: OverheadModel,
         run_dir: PathBuf,
         sync_workaround: bool,
     ) -> Arc<SlurmBackend> {
-        let pool = Arc::new(ServerPool {
-            engine,
-            model,
-            run_dir,
-            live: Mutex::new(HashMap::new()),
-            sync_workaround,
-        });
-        let backend = Arc::new(SlurmBackend {
-            daemon: daemon.clone(),
+        let pool = ServerPool::new(engine, run_dir, sync_workaround);
+        Arc::new(SlurmBackend {
+            daemon,
             pool,
-            request,
-            in_flight: Arc::new(AtomicUsize::new(0)),
+            requests,
+            pending_jobs: Arc::new(Mutex::new(HashMap::new())),
+            in_flight: InFlight::default(),
             stopped: Arc::new(AtomicBool::new(false)),
-        });
-        backend
+        })
     }
 
     /// Event sink to install on the SlurmDaemon: launches model servers
     /// when their job starts (after queue + prolog), modelling the
-    /// server-init cost before the port file appears.
+    /// server-init cost before the port file appears.  A job that dies
+    /// before launching (time limit in Starting, cancellation) releases
+    /// its spawn slot instead of leaking it.
     pub fn sink(self: &Arc<Self>, server_init: Duration)
                 -> crate::slurmlite::daemon::EventSink {
         let me = self.clone();
-        Arc::new(move |ev: DaemonEvent| {
-            if let DaemonEvent::Launched { job, .. } = ev {
+        Arc::new(move |ev: DaemonEvent| match ev {
+            DaemonEvent::Launched { job, .. } => {
                 if me.stopped.load(Ordering::SeqCst) {
                     return;
                 }
+                let Some(model) = me.pending_jobs.lock().unwrap().remove(&job)
+                else {
+                    return; // not one of ours
+                };
                 let me2 = me.clone();
                 std::thread::spawn(move || {
                     // Model-server start-up (~1 s paper scale).
                     std::thread::sleep(server_init);
-                    me2.pool.start_instance(job, Some(job));
+                    me2.pool.start_instance(job, &model, Some(job));
                 });
+            }
+            DaemonEvent::TimedOut { job }
+            | DaemonEvent::Completed { job, .. } => {
+                // Still pending here means the job never launched:
+                // free the spawn slot so the model can respawn.
+                let gone =
+                    me.pending_jobs.lock().unwrap().remove(&job);
+                if let Some(model) = gone {
+                    crate::log_warn!(
+                        "backend",
+                        "server job {job} for '{model}' died before launch");
+                    me.in_flight.dec(&model);
+                }
             }
         })
     }
 }
 
 impl Backend for SlurmBackend {
-    fn spawn_server(&self) {
+    fn spawn_server(&self, model: &str) {
         if self.stopped.load(Ordering::SeqCst) {
             return;
         }
-        self.in_flight.fetch_add(1, Ordering::SeqCst);
-        self.daemon.submit(0, 0, self.request);
+        let Some(req) = self.requests.get(model).copied() else {
+            crate::log_error!("backend",
+                              "no job shape for model '{model}'; not spawning");
+            return;
+        };
+        self.in_flight.inc(model);
+        // Hold the pending map across submit: the daemon thread must not
+        // observe the Launched event before the job->model entry exists.
+        let mut pending = self.pending_jobs.lock().unwrap();
+        let id = self.daemon.submit(0, 0, req);
+        pending.insert(id, model.to_string());
     }
 
     fn poll_new_servers(&self) -> Vec<String> {
-        let found = portfile::poll_portfiles(&self.pool.run_dir);
-        if !found.is_empty() {
-            self.in_flight
-                .fetch_sub(found.len().min(self.in_flight.load(Ordering::SeqCst)),
-                           Ordering::SeqCst);
+        // Failed spawns release their slot (and scheduler job).
+        for (model, job) in self.pool.take_failed() {
+            self.in_flight.dec(&model);
+            if let Some(j) = job {
+                self.daemon.finish(j);
+            }
         }
-        found.into_iter().map(|(_, ep)| ep).collect()
+        let found = portfile::poll_portfiles(&self.pool.run_dir);
+        let mut endpoints = Vec::with_capacity(found.len());
+        for (_, ep) in found {
+            if let Some(model) = self.pool.model_of(&ep) {
+                self.in_flight.dec(&model);
+            }
+            endpoints.push(ep);
+        }
+        endpoints
     }
 
-    fn spawns_in_flight(&self) -> usize {
-        self.in_flight.load(Ordering::SeqCst)
+    fn spawns_in_flight(&self, model: &str) -> usize {
+        self.in_flight.get(model)
     }
 
     fn retire_server(&self, endpoint: &str) {
@@ -212,6 +332,7 @@ pub struct HqBackend {
     dispatch_latency: Duration,
     server_init: Duration,
     state: Arc<Mutex<HqState>>,
+    in_flight: InFlight,
     stopped: Arc<AtomicBool>,
 }
 
@@ -222,8 +343,7 @@ struct HqState {
     /// Allocation up (workers available).
     workers_up: usize,
     /// Queued spawn requests waiting for a worker slot.
-    backlog: VecDeque<u64>,
-    in_flight: usize,
+    backlog: VecDeque<(u64, String)>,
     next_tag: u64,
     busy_workers: usize,
 }
@@ -232,19 +352,12 @@ impl HqBackend {
     pub fn new(
         daemon: Arc<SlurmDaemon>,
         engine: Arc<Engine>,
-        model: &'static str,
         alloc_request: JobRequest,
         max_workers: usize,
         overheads: &OverheadModel,
         run_dir: PathBuf,
     ) -> Arc<HqBackend> {
-        let pool = Arc::new(ServerPool {
-            engine,
-            model,
-            run_dir,
-            live: Mutex::new(HashMap::new()),
-            sync_workaround: false,
-        });
+        let pool = ServerPool::new(engine, run_dir, false);
         Arc::new(HqBackend {
             daemon,
             pool,
@@ -253,6 +366,7 @@ impl HqBackend {
             dispatch_latency: Duration::from_micros(overheads.hq_dispatch),
             server_init: Duration::from_micros(overheads.server_init.max(MS)),
             state: Arc::new(Mutex::new(HqState::default())),
+            in_flight: InFlight::default(),
             stopped: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -282,7 +396,7 @@ impl HqBackend {
             return;
         }
         loop {
-            let tag = {
+            let (tag, model) = {
                 let mut st = self.state.lock().unwrap();
                 if st.workers_up == 0
                     || st.busy_workers >= st.workers_up
@@ -299,23 +413,23 @@ impl HqBackend {
             std::thread::spawn(move || {
                 std::thread::sleep(dispatch); // HQ task dispatch (~1 ms)
                 std::thread::sleep(init);     // model-server start-up
-                me_pool.start_instance(tag, None);
+                me_pool.start_instance(tag, &model, None);
             });
         }
     }
 }
 
 impl Backend for HqBackend {
-    fn spawn_server(&self) {
+    fn spawn_server(&self, model: &str) {
         if self.stopped.load(Ordering::SeqCst) {
             return;
         }
+        self.in_flight.inc(model);
         let need_alloc = {
             let mut st = self.state.lock().unwrap();
             let tag = st.next_tag;
             st.next_tag += 1;
-            st.backlog.push_back(tag);
-            st.in_flight += 1;
+            st.backlog.push_back((tag, model.to_string()));
             // One allocation per worker slot, up to max_workers — the
             // "--workers-per-alloc 1" configuration.
             st.allocs.len() < self.max_workers
@@ -329,16 +443,32 @@ impl Backend for HqBackend {
     }
 
     fn poll_new_servers(&self) -> Vec<String> {
-        let found = portfile::poll_portfiles(&self.pool.run_dir);
-        if !found.is_empty() {
-            let mut st = self.state.lock().unwrap();
-            st.in_flight = st.in_flight.saturating_sub(found.len());
+        // Failed spawns release their spawn slot and worker slot.
+        let failed = self.pool.take_failed();
+        if !failed.is_empty() {
+            for (model, _) in &failed {
+                self.in_flight.dec(model);
+            }
+            {
+                let mut st = self.state.lock().unwrap();
+                st.busy_workers =
+                    st.busy_workers.saturating_sub(failed.len());
+            }
+            self.drain();
         }
-        found.into_iter().map(|(_, ep)| ep).collect()
+        let found = portfile::poll_portfiles(&self.pool.run_dir);
+        let mut endpoints = Vec::with_capacity(found.len());
+        for (_, ep) in found {
+            if let Some(model) = self.pool.model_of(&ep) {
+                self.in_flight.dec(&model);
+            }
+            endpoints.push(ep);
+        }
+        endpoints
     }
 
-    fn spawns_in_flight(&self) -> usize {
-        self.state.lock().unwrap().in_flight
+    fn spawns_in_flight(&self, model: &str) -> usize {
+        self.in_flight.get(model)
     }
 
     fn retire_server(&self, endpoint: &str) {
@@ -356,6 +486,100 @@ impl Backend for HqBackend {
         let allocs = std::mem::take(&mut self.state.lock().unwrap().allocs);
         for a in allocs {
             self.daemon.cancel(a);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Builds a model-server [`Model`] by wire name (engine-free backends).
+pub type ModelFactory =
+    Arc<dyn Fn(&str) -> anyhow::Result<Arc<dyn Model>> + Send + Sync>;
+
+/// In-process backend: spawns model-server threads directly, with no
+/// scheduler, no port files and no PJRT engine.  This is the balancer
+/// plane's test/bench substrate — routing, leasing, backpressure and
+/// the forwarder pool all run exactly as in production, only server
+/// placement is immediate.
+pub struct LocalBackend {
+    factory: ModelFactory,
+    /// Endpoints started but not yet polled up by the watcher.
+    fresh: Mutex<Vec<String>>,
+    /// endpoint -> (server handle, model).
+    live: Mutex<HashMap<String, (crate::httpd::Server, String)>>,
+    in_flight: InFlight,
+    stopped: AtomicBool,
+}
+
+impl LocalBackend {
+    pub fn new(factory: ModelFactory) -> Arc<LocalBackend> {
+        Arc::new(LocalBackend {
+            factory,
+            fresh: Mutex::new(Vec::new()),
+            live: Mutex::new(HashMap::new()),
+            in_flight: InFlight::default(),
+            stopped: AtomicBool::new(false),
+        })
+    }
+}
+
+impl Backend for LocalBackend {
+    fn spawn_server(&self, model: &str) {
+        if self.stopped.load(Ordering::SeqCst) {
+            return;
+        }
+        let built = match (self.factory)(model) {
+            Ok(m) => m,
+            Err(e) => {
+                crate::log_error!("backend", "model build failed: {e:#}");
+                return;
+            }
+        };
+        match umbridge::serve_models(vec![built], 0) {
+            Ok(server) => {
+                let url = server.url();
+                self.in_flight.inc(model);
+                self.live
+                    .lock()
+                    .unwrap()
+                    .insert(url.clone(), (server, model.to_string()));
+                self.fresh.lock().unwrap().push(url);
+            }
+            Err(e) => crate::log_error!("backend", "server start failed: {e:#}"),
+        }
+    }
+
+    fn poll_new_servers(&self) -> Vec<String> {
+        let endpoints = std::mem::take(&mut *self.fresh.lock().unwrap());
+        for ep in &endpoints {
+            if let Some((_, model)) = self.live.lock().unwrap().get(ep) {
+                let model = model.clone();
+                self.in_flight.dec(&model);
+            }
+        }
+        endpoints
+    }
+
+    fn spawns_in_flight(&self, model: &str) -> usize {
+        self.in_flight.get(model)
+    }
+
+    fn retire_server(&self, endpoint: &str) {
+        if let Some((mut server, _)) =
+            self.live.lock().unwrap().remove(endpoint)
+        {
+            server.shutdown();
+        }
+    }
+
+    fn teardown(&self) {
+        self.stopped.store(true, Ordering::SeqCst);
+        let drained: Vec<(crate::httpd::Server, String)> = {
+            let mut live = self.live.lock().unwrap();
+            live.drain().map(|(_, v)| v).collect()
+        };
+        for (mut server, _) in drained {
+            server.shutdown();
         }
     }
 }

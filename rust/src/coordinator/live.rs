@@ -1,15 +1,15 @@
 //! Live-plane bring-up helpers shared by the CLI, the examples and the
 //! integration tests: one call starts slurmlite + backend + balancer.
 
-use std::path::PathBuf;
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
-use crate::cluster::{ClusterSpec, OverheadModel};
+use crate::cluster::{ClusterSpec, JobRequest, OverheadModel};
 use crate::runtime::Engine;
 use crate::slurmlite::daemon::{EventSink, SlurmDaemon};
-use crate::workload::Scenario;
+use crate::workload::{app_for_model, scenario};
 
 use super::{Backend, BalancerConfig, HqBackend, LoadBalancer, SlurmBackend};
 
@@ -20,19 +20,32 @@ pub struct LiveStack {
     pub backend: Arc<dyn Backend>,
 }
 
-/// Start slurmlite + the chosen backend + the balancer.
+/// Start slurmlite + the chosen backend + the balancer, serving every
+/// model in `models` through one front door.
 ///
-/// `time_scale` compresses paper-scale scheduler overheads (60.0 maps one
+/// Each model's servers are sized by its Table-III scenario (the QoI
+/// integral maps to the GP row).  Unknown model names are rejected
+/// here, at startup — a typo must not produce a balancer whose spawns
+/// can never succeed.  `servers` is the per-model cap.  `time_scale`
+/// compresses paper-scale scheduler overheads (60.0 maps one
 /// paper-minute onto one live second; see DESIGN.md section 7).
 pub fn start_live(
     eng: Arc<Engine>,
-    model: &'static str,
+    models: &[&str],
     backend_kind: &str,
     servers: usize,
-    scen: &Scenario,
     time_scale: f64,
     persistent_servers: bool,
 ) -> Result<LiveStack> {
+    if models.is_empty() {
+        bail!("start_live needs at least one model");
+    }
+    for m in models {
+        if app_for_model(m).is_none() {
+            bail!("no live scenario for model '{m}' (known: {:?})",
+                  crate::models::all_names());
+        }
+    }
     let overheads = OverheadModel::quiet().scaled(time_scale);
     let run_dir = std::env::temp_dir().join(format!(
         "uqsched-lb-{}-{}",
@@ -44,11 +57,35 @@ pub fn start_live(
         .next_u64()
     ));
     let cfg = BalancerConfig {
-        model_name: model,
+        models: models.iter().map(|m| m.to_string()).collect(),
         max_servers: servers,
         persistent_servers,
         ..Default::default()
     };
+
+    // Per-model job shapes from the paper's Table III.
+    let scen_of = |m: &str| {
+        scenario(app_for_model(m).expect("models validated above"))
+    };
+    let slurm_requests: HashMap<String, JobRequest> = cfg
+        .models
+        .iter()
+        .map(|m| (m.clone(), scen_of(m).slurm_request()))
+        .collect();
+    // The bulk allocation must fit the largest model in the mix on
+    // every axis (component-wise max, not one model's whole row).
+    let hq_alloc = cfg
+        .models
+        .iter()
+        .map(|m| scen_of(m).hq_alloc_request())
+        .reduce(|a, b| {
+            JobRequest::new(
+                a.cores.max(b.cores),
+                a.ram_gb.max(b.ram_gb),
+                a.time_limit.max(b.time_limit),
+            )
+        })
+        .expect("at least one model");
 
     // The daemon needs a sink, but the backend that provides it needs the
     // daemon: a late-bound slot breaks the cycle.
@@ -70,8 +107,7 @@ pub fn start_live(
             let b = SlurmBackend::new(
                 daemon.clone(),
                 eng,
-                model,
-                scen.slurm_request(),
+                slurm_requests,
                 overheads.clone(),
                 run_dir,
                 true, // the paper's sync workaround, on by default
@@ -85,9 +121,8 @@ pub fn start_live(
             let b = HqBackend::new(
                 daemon.clone(),
                 eng,
-                model,
-                scen.hq_alloc_request(),
-                servers,
+                hq_alloc,
+                servers * cfg.models.len(),
                 &overheads,
                 run_dir,
             );

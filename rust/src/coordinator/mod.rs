@@ -1,10 +1,13 @@
 //! The paper's contribution: the UM-Bridge load balancer for classical
-//! HPC systems (section II.C).
+//! HPC systems (section II.C), rearchitected as a multi-model,
+//! high-concurrency serving plane.
 //!
 //! The balancer is an intermediate proxy between parallel UQ clients and
-//! a pool of model-server instances it spawns on demand through one of
-//! two backends — per-job SLURM submission or HyperQueue-style tasks on a
-//! bulk allocation — exactly the paper's architecture (Fig 1, bottom):
+//! per-model pools of model-server instances it spawns on demand through
+//! a scheduling backend — per-job SLURM submission or HyperQueue-style
+//! tasks on a bulk allocation, exactly the paper's architecture (Fig 1,
+//! bottom) — or through the in-process [`LocalBackend`] for tests and
+//! benches:
 //!
 //! * servers register by **port file** (the server writes `host:port` to
 //!   a run directory; the balancer polls it, with an optional fsync-style
@@ -13,10 +16,18 @@
 //! * on registration, the balancer issues the **preliminary jobs** the
 //!   paper describes (Info, InputSizes, OutputSizes, ModelInfo, health) —
 //!   "at least five additional jobs ... verifying the readiness of the
-//!   model server";
-//! * client requests are queued **first-come first-served** and forwarded
-//!   to idle servers; servers are per-job (paper's measured config) or
-//!   **persistent** (the paper's proposed optimisation, our extension).
+//!   model server" — and **learns the model's contract** from them;
+//!   there is no static contract table;
+//! * client requests are routed by the UM-Bridge `name` field into
+//!   **per-model bounded FCFS queues**; a full queue answers
+//!   `503 Service Unavailable` + `Retry-After` instead of growing
+//!   without bound;
+//! * a **fixed pool of forwarder workers** drains the queues via condvar
+//!   handoff (no polling, no per-evaluation thread spawn), leasing
+//!   servers from the registry ([`registry::ServerLease`]: release on
+//!   drop, retire on failure/per-job mode);
+//! * queue-wait and forward-latency histograms plus per-model counters
+//!   are exposed on `GET /Stats` (and via [`LoadBalancer::stats_json`]).
 //!
 //! # Lifecycle
 //!
@@ -24,39 +35,40 @@
 //! backend, balancer front door) and returns a [`LiveStack`] whose
 //! `shutdown` tears it down in dependency order: the balancer front
 //! door first (it holds an `httpd::Server`, see that module's shutdown
-//! contract), then the backend's model-server pool, then the scheduler
-//! daemon.  Every `httpd::Server` spawned by a backend is bound in its
-//! `ServerPool` and shut down explicitly when its job retires — handles
-//! are never left to implicit drop order.
+//! contract), then the forwarder pool and watcher, then the backend's
+//! model-server pool, then the scheduler daemon.  Every `httpd::Server`
+//! spawned by a backend is bound in its pool and shut down explicitly
+//! when its job retires — handles are never left to implicit drop order.
 
 pub mod backend;
 pub mod live;
 pub mod portfile;
 pub mod registry;
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use std::collections::HashMap;
-
 use crate::httpd::{Handler, HttpClient, Request, Response, Server};
 use crate::json::{self, Value};
-use crate::umbridge::HttpModel;
+use crate::metrics::Histogram;
+use crate::umbridge::{HttpModel, ModelContract};
 
-pub use backend::{Backend, HqBackend, SlurmBackend};
+pub use backend::{Backend, HqBackend, LocalBackend, ModelFactory,
+                  SlurmBackend};
 pub use live::{start_live, LiveStack};
-pub use registry::{Registry, ServerState};
+pub use registry::{Registry, ServerLease, ServerState};
 
 /// Balancer configuration.
 #[derive(Clone)]
 pub struct BalancerConfig {
-    /// Model served (wire name).
-    pub model_name: &'static str,
-    /// Max simultaneous model servers.
+    /// Models served through this front door (wire names).  Contracts
+    /// are learned per model at server registration.
+    pub models: Vec<String>,
+    /// Max simultaneous servers **per model**.
     pub max_servers: usize,
     /// Reuse servers across evaluations (paper section VI future work);
     /// when false each server handles one evaluation then retires —
@@ -64,108 +76,257 @@ pub struct BalancerConfig {
     pub persistent_servers: bool,
     /// Poll interval for the port-file watcher.
     pub poll_interval: Duration,
+    /// Bound on each per-model queue; beyond it /Evaluate answers
+    /// 503 + Retry-After (backpressure instead of unbounded growth).
+    pub queue_capacity: usize,
+    /// Minimum forwarder worker-pool size.  The pool is sized to at
+    /// least `models.len() * max_servers` — the lease capacity bounds
+    /// concurrent forwards, so at that size one slow model can never
+    /// starve another model's dispatch.
+    pub forwarders: usize,
+    /// How long a client may wait end-to-end before its request is
+    /// cancelled (it is also skipped at dispatch if still queued).
+    pub request_timeout: Duration,
+    /// Spawn one server per model at startup so contracts are learned
+    /// before the first evaluation arrives.
+    pub warm_start: bool,
 }
 
 impl Default for BalancerConfig {
     fn default() -> Self {
         BalancerConfig {
-            model_name: crate::models::GP_NAME,
+            models: vec![crate::models::GP_NAME.to_string()],
             max_servers: 2,
             persistent_servers: true,
             poll_interval: Duration::from_millis(5),
+            queue_capacity: 256,
+            forwarders: 4,
+            request_timeout: Duration::from_secs(600),
+            warm_start: true,
         }
     }
 }
 
+/// Per-model serving counters + latency histograms.
+pub struct ModelStats {
+    pub served: AtomicU64,
+    pub errors: AtomicU64,
+    pub rejected: AtomicU64,
+    pub cancelled: AtomicU64,
+    pub timed_out: AtomicU64,
+    pub queue_wait: Histogram,
+    pub forward: Histogram,
+}
+
+impl ModelStats {
+    fn new() -> ModelStats {
+        ModelStats {
+            served: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            timed_out: AtomicU64::new(0),
+            queue_wait: Histogram::new(),
+            forward: Histogram::new(),
+        }
+    }
+}
+
+/// All per-model stats, keyed by configured model (fixed at start, so
+/// the hot path reads are lock-free).
+pub struct BalancerStats {
+    per_model: HashMap<String, ModelStats>,
+}
+
+impl BalancerStats {
+    fn new(models: &[String]) -> BalancerStats {
+        BalancerStats {
+            per_model: models
+                .iter()
+                .map(|m| (m.clone(), ModelStats::new()))
+                .collect(),
+        }
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelStats> {
+        self.per_model.get(name)
+    }
+}
+
+/// One queued /Evaluate awaiting dispatch.
 struct Queued {
+    model: String,
     body: String,
+    enqueued: Instant,
+    /// Set when the waiting client gave up; dispatch skips it instead
+    /// of burning a server on a result nobody reads.
+    cancelled: AtomicBool,
     done: Mutex<Option<Result<String, String>>>,
     cv: Condvar,
 }
 
+/// State shared by the front door, the forwarder pool and the watcher.
+struct Shared {
+    cfg: BalancerConfig,
+    /// model -> bounded FCFS queue (keys fixed to cfg.models).
+    queues: Mutex<HashMap<String, VecDeque<Arc<Queued>>>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    stats: BalancerStats,
+    registry: Arc<Registry>,
+    /// Persistent connections to model servers, pooled per endpoint.
+    conn_pool: Mutex<HashMap<String, Vec<HttpClient>>>,
+    requests_served: Arc<AtomicU64>,
+}
+
+impl Shared {
+    /// Wake the forwarder pool.  The lock round-trip closes the race
+    /// with a forwarder that checked the queues and is about to wait.
+    fn wake(&self) {
+        drop(self.queues.lock().unwrap());
+        self.cv.notify_all();
+    }
+
+    fn stats_json(&self) -> Value {
+        let q = self.queues.lock().unwrap();
+        let models: Vec<Value> = self
+            .cfg
+            .models
+            .iter()
+            .map(|m| {
+                let st = self.stats.model(m).expect("configured model stats");
+                let load = |c: &AtomicU64| {
+                    Value::num(c.load(Ordering::Relaxed) as f64)
+                };
+                Value::obj(vec![
+                    ("name", Value::str(m)),
+                    ("queued",
+                     Value::num(q.get(m).map(|d| d.len()).unwrap_or(0) as f64)),
+                    ("servers", Value::num(self.registry.count_for(m) as f64)),
+                    ("idle", Value::num(self.registry.idle_for(m) as f64)),
+                    ("served", load(&st.served)),
+                    ("errors", load(&st.errors)),
+                    ("rejected", load(&st.rejected)),
+                    ("cancelled", load(&st.cancelled)),
+                    ("timed_out", load(&st.timed_out)),
+                    ("queue_wait", st.queue_wait.json()),
+                    ("forward", st.forward.json()),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("models", Value::arr(models)),
+            ("servers_total", Value::num(self.registry.total() as f64)),
+            ("servers_registered_lifetime",
+             Value::num(self.registry.registered_total() as f64)),
+            ("requests_served",
+             Value::num(self.requests_served.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
 /// The load balancer.
 pub struct LoadBalancer {
-    cfg: BalancerConfig,
+    shared: Arc<Shared>,
     backend: Arc<dyn Backend>,
     registry: Arc<Registry>,
-    queue: Arc<Mutex<VecDeque<Arc<Queued>>>>,
-    queue_cv: Arc<Condvar>,
-    stop: Arc<AtomicBool>,
     /// Stats.
     pub requests_served: Arc<AtomicU64>,
     pub registration_queries: Arc<AtomicU64>,
     front: Option<Server>,
-    dispatcher: Option<std::thread::JoinHandle<()>>,
+    forwarders: Vec<std::thread::JoinHandle<()>>,
     watcher: Option<std::thread::JoinHandle<()>>,
 }
 
 impl LoadBalancer {
-    /// Start the balancer: front-door HTTP server + dispatcher + port-file
-    /// watcher.  `backend` owns server spawning.
+    /// Start the balancer: front-door HTTP server + forwarder pool +
+    /// port-file watcher.  `backend` owns server spawning.
     pub fn start(
         cfg: BalancerConfig,
         backend: Arc<dyn Backend>,
     ) -> Result<LoadBalancer> {
+        if cfg.models.is_empty() {
+            return Err(anyhow!("balancer needs at least one model"));
+        }
         let registry = Arc::new(Registry::new());
-        let queue: Arc<Mutex<VecDeque<Arc<Queued>>>> =
-            Arc::new(Mutex::new(VecDeque::new()));
-        let queue_cv = Arc::new(Condvar::new());
-        let stop = Arc::new(AtomicBool::new(false));
         let requests_served = Arc::new(AtomicU64::new(0));
         let registration_queries = Arc::new(AtomicU64::new(0));
 
-        // Front door: an UM-Bridge-compatible HTTP surface.
-        let q2 = queue.clone();
-        let cv2 = queue_cv.clone();
-        let model_name: &'static str = cfg.model_name;
-        let handler: Handler = Arc::new(move |req: &Request| {
-            front_handler(req, model_name, &q2, &cv2)
+        let queues: HashMap<String, VecDeque<Arc<Queued>>> = cfg
+            .models
+            .iter()
+            .map(|m| (m.clone(), VecDeque::new()))
+            .collect();
+        let shared = Arc::new(Shared {
+            stats: BalancerStats::new(&cfg.models),
+            cfg: cfg.clone(),
+            queues: Mutex::new(queues),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            registry: registry.clone(),
+            conn_pool: Mutex::new(HashMap::new()),
+            requests_served: requests_served.clone(),
         });
+
+        // Registry transitions (register/release/retire/remove) wake the
+        // forwarder pool — dispatch is event-driven end to end.
+        let weak = Arc::downgrade(&shared);
+        registry.set_waker(Arc::new(move || {
+            if let Some(s) = weak.upgrade() {
+                s.wake();
+            }
+        }));
+
+        // Front door: an UM-Bridge-compatible HTTP surface.
+        let s2 = shared.clone();
+        let handler: Handler =
+            Arc::new(move |req: &Request| front_handler(req, &s2));
         let front = Server::serve(0, handler)?;
+
+        // Warm start: learn contracts before the first client arrives.
+        if cfg.warm_start {
+            for m in &cfg.models {
+                backend.spawn_server(m);
+            }
+        }
 
         // Port-file watcher: registers servers as they come up.
         let watcher = {
-            let registry = registry.clone();
+            let shared = shared.clone();
             let backend = backend.clone();
-            let stop = stop.clone();
-            let poll = cfg.poll_interval;
             let regq = registration_queries.clone();
-            let model: &'static str = cfg.model_name;
             std::thread::Builder::new()
                 .name("lb-watch".into())
-                .spawn(move || {
-                    watcher_loop(registry, backend, stop, poll, regq, model)
-                })?
+                .spawn(move || watcher_loop(shared, backend, regq))?
         };
 
-        // Dispatcher: FCFS queue -> idle servers.
-        let dispatcher = {
-            let registry = registry.clone();
+        // Fixed forwarder pool: per-model queues -> leased servers.
+        // Sized to the total lease capacity so every model's full
+        // server pool can forward concurrently (no cross-model
+        // starvation by slow evaluations).
+        let pool_size = cfg
+            .forwarders
+            .max(cfg.models.len() * cfg.max_servers)
+            .max(1);
+        let mut forwarders = Vec::with_capacity(pool_size);
+        for i in 0..pool_size {
+            let shared = shared.clone();
             let backend = backend.clone();
-            let queue = queue.clone();
-            let queue_cv = queue_cv.clone();
-            let stop = stop.clone();
-            let served = requests_served.clone();
-            let cfg2 = cfg.clone();
-            std::thread::Builder::new()
-                .name("lb-dispatch".into())
-                .spawn(move || {
-                    dispatch_loop(cfg2, registry, backend, queue, queue_cv,
-                                  stop, served)
-                })?
-        };
+            forwarders.push(
+                std::thread::Builder::new()
+                    .name(format!("lb-fwd-{i}"))
+                    .spawn(move || forwarder_loop(shared, backend))?,
+            );
+        }
 
         Ok(LoadBalancer {
-            cfg,
+            shared,
             backend,
             registry,
-            queue,
-            queue_cv,
-            stop,
             requests_served,
             registration_queries,
             front: Some(front),
-            dispatcher: Some(dispatcher),
+            forwarders,
             watcher: Some(watcher),
         })
     }
@@ -179,23 +340,59 @@ impl LoadBalancer {
         &self.registry
     }
 
+    /// Total queued requests across all models.
     pub fn queue_len(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        self.shared
+            .queues
+            .lock()
+            .unwrap()
+            .values()
+            .map(|d| d.len())
+            .sum()
     }
 
+    /// Per-model serving counters and latency histograms.
+    pub fn stats(&self) -> &BalancerStats {
+        &self.shared.stats
+    }
+
+    /// The `/Stats` document (for bench/experiment JSON reports).
+    pub fn stats_json(&self) -> Value {
+        self.shared.stats_json()
+    }
+
+    /// Stop the balancer.  Blocks until the forwarder pool drains; the
+    /// backend is torn down first so no new work starts, but a forward
+    /// already inside a model evaluation completes (the model servers
+    /// cannot abort mid-compute), so shutdown latency is bounded by the
+    /// longest in-flight evaluation.
     pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        self.queue_cv.notify_all();
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.wake();
         if let Some(mut f) = self.front.take() {
             f.shutdown();
         }
-        if let Some(t) = self.dispatcher.take() {
+        // Tear the server pool down before joining the forwarders:
+        // anything blocked at the connection level unblocks, and all
+        // backend entry points are safe to call from draining workers
+        // after teardown (idempotent).
+        self.backend.teardown();
+        for t in self.forwarders.drain(..) {
             let _ = t.join();
         }
         if let Some(t) = self.watcher.take() {
             let _ = t.join();
         }
-        self.backend.teardown();
+        // Fail anything still queued so blocked clients return promptly.
+        let drained: Vec<Arc<Queued>> = {
+            let mut q = self.shared.queues.lock().unwrap();
+            q.values_mut().flat_map(|dq| dq.drain(..)).collect()
+        };
+        for item in drained {
+            *item.done.lock().unwrap() =
+                Some(Err("balancer shutting down".to_string()));
+            item.cv.notify_all();
+        }
     }
 }
 
@@ -205,119 +402,297 @@ impl Drop for LoadBalancer {
     }
 }
 
-/// Front door: /Evaluate enqueues; metadata endpoints answer from the
-/// model contract (resolved via the registry's first healthy server or
-/// statically from the models module).
-fn front_handler(
-    req: &Request,
-    model_name: &str,
-    queue: &Mutex<VecDeque<Arc<Queued>>>,
-    cv: &Condvar,
-) -> Response {
+// ---------------------------------------------------------------------------
+// Front door
+// ---------------------------------------------------------------------------
+
+/// Routes by the UM-Bridge `name` field; metadata endpoints answer from
+/// the contracts learned at registration.
+fn front_handler(req: &Request, shared: &Arc<Shared>) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/Info") => Response::ok_json(json::write(&Value::obj(vec![
-            ("protocolVersion", Value::num(1.0)),
-            ("models", Value::arr(vec![Value::str(model_name)])),
-        ]))),
-        ("POST", "/Evaluate") => {
-            let body = match req.body_str() {
-                Ok(b) => b.to_string(),
-                Err(e) => return Response::error(&format!("{e:#}")),
-            };
-            let item = Arc::new(Queued {
-                body,
-                done: Mutex::new(None),
-                cv: Condvar::new(),
-            });
-            queue.lock().unwrap().push_back(item.clone());
-            cv.notify_all();
-            // Block until the dispatcher resolves it (proxy semantics).
-            let mut done = item.done.lock().unwrap();
-            while done.is_none() {
-                let (d, _timeout) = item
-                    .cv
-                    .wait_timeout(done, Duration::from_secs(600))
-                    .unwrap();
-                done = d;
-                if done.is_none() {
-                    return Response::error("evaluation timed out");
-                }
-            }
-            match done.take().unwrap() {
-                Ok(body) => Response::ok_json(body),
-                Err(e) => Response::error(&e),
-            }
+        ("GET", "/Info") => {
+            // All models behind this front door.  (Registration only
+            // admits configured models, so the registry can never know
+            // more names than the config.)
+            let mut names: Vec<String> = shared.cfg.models.clone();
+            names.sort();
+            Response::ok_json(json::write(&Value::obj(vec![
+                ("protocolVersion", Value::num(1.0)),
+                ("models",
+                 Value::arr(names.iter().map(|n| Value::str(n)).collect())),
+            ])))
         }
-        // Metadata endpoints are proxied statically: the balancer knows
-        // the model contract after registration; for simplicity answer
-        // from the well-known contracts.
+        ("GET", "/Stats") => Response::ok_json(json::write(&shared.stats_json())),
+        ("POST", "/Evaluate") => evaluate_handler(req, shared),
         ("POST", "/InputSizes") => {
-            Response::ok_json(json::write(&Value::obj(vec![(
-                "inputSizes",
-                Value::arr(
-                    contract(model_name).0
-                        .into_iter()
-                        .map(|s| Value::num(s as f64))
-                        .collect(),
-                ),
-            )])))
+            match resolve_contract(req, shared) {
+                Ok(c) => Response::ok_json(json::write(&Value::obj(vec![(
+                    "inputSizes",
+                    Value::arr(
+                        c.input_sizes
+                            .into_iter()
+                            .map(|s| Value::num(s as f64))
+                            .collect(),
+                    ),
+                )]))),
+                Err(resp) => resp,
+            }
         }
         ("POST", "/OutputSizes") => {
-            Response::ok_json(json::write(&Value::obj(vec![(
-                "outputSizes",
-                Value::arr(
-                    contract(model_name).1
-                        .into_iter()
-                        .map(|s| Value::num(s as f64))
-                        .collect(),
-                ),
-            )])))
+            match resolve_contract(req, shared) {
+                Ok(c) => Response::ok_json(json::write(&Value::obj(vec![(
+                    "outputSizes",
+                    Value::arr(
+                        c.output_sizes
+                            .into_iter()
+                            .map(|s| Value::num(s as f64))
+                            .collect(),
+                    ),
+                )]))),
+                Err(resp) => resp,
+            }
         }
         ("POST", "/ModelInfo") => {
-            Response::ok_json(json::write(&Value::obj(vec![(
-                "support",
-                Value::obj(vec![("Evaluate", Value::Bool(true))]),
-            )])))
+            match request_model(req, shared) {
+                Ok(_) => Response::ok_json(json::write(&Value::obj(vec![(
+                    "support",
+                    Value::obj(vec![("Evaluate", Value::Bool(true))]),
+                )]))),
+                Err(resp) => resp,
+            }
         }
         _ => Response::not_found(),
     }
 }
 
-/// Static model contracts (sizes) for the front door.
-fn contract(name: &str) -> (Vec<usize>, Vec<usize>) {
-    match name {
-        crate::models::GP_NAME => (vec![7], vec![2, 2]),
-        crate::models::GS2_NAME => (vec![7], vec![2, 1, 1]),
-        crate::models::QOI_NAME => (vec![7], vec![1, 384]),
-        crate::models::EIGEN_SMALL_NAME => (vec![1], vec![100, 1]),
-        crate::models::EIGEN_LARGE_NAME => (vec![1], vec![256, 1]),
-        _ => (vec![], vec![]),
+/// Extract and validate the request's model name (UM-Bridge `name`
+/// field; a single-model balancer accepts requests without one).
+///
+/// This parses the body — the unavoidable cost of routing by a body
+/// field (the model server parses its own copy again on the far side
+/// of the HTTP hop).
+fn request_model(req: &Request, shared: &Shared) -> Result<String, Response> {
+    let name = req
+        .body_str()
+        .ok()
+        .and_then(|b| json::parse(b).ok())
+        .and_then(|v| v.get("name").and_then(|n| n.as_str()).map(String::from));
+    let name = match name {
+        Some(n) => n,
+        None if shared.cfg.models.len() == 1 => shared.cfg.models[0].clone(),
+        None => return Err(Response::error("missing 'name'")),
+    };
+    if !shared.cfg.models.iter().any(|m| *m == name) {
+        return Err(Response::error(&format!("unknown model '{name}'")));
     }
+    Ok(name)
+}
+
+/// Look up the learned contract; before any server of that model has
+/// registered the front door cannot know the sizes yet and says so with
+/// a retryable 503.
+fn resolve_contract(
+    req: &Request,
+    shared: &Shared,
+) -> Result<ModelContract, Response> {
+    let name = request_model(req, shared)?;
+    shared.registry.contract(&name).ok_or_else(|| {
+        Response::unavailable(
+            &format!("model '{name}' has no registered server yet"),
+            1,
+        )
+    })
+}
+
+/// Enqueue an /Evaluate into its model's bounded queue and block until
+/// a forwarder resolves it (proxy semantics) or the deadline passes.
+fn evaluate_handler(req: &Request, shared: &Arc<Shared>) -> Response {
+    let body = match req.body_str() {
+        Ok(b) => b.to_string(),
+        Err(e) => return Response::error(&format!("{e:#}")),
+    };
+    let name = match request_model(req, shared) {
+        Ok(n) => n,
+        Err(resp) => return resp,
+    };
+
+    let item = Arc::new(Queued {
+        model: name.clone(),
+        body,
+        enqueued: Instant::now(),
+        cancelled: AtomicBool::new(false),
+        done: Mutex::new(None),
+        cv: Condvar::new(),
+    });
+    {
+        let mut q = shared.queues.lock().unwrap();
+        if shared.stop.load(Ordering::SeqCst) {
+            return Response::error("balancer shutting down");
+        }
+        let dq = q.get_mut(&name).expect("configured model queue");
+        if dq.len() >= shared.cfg.queue_capacity {
+            if let Some(st) = shared.stats.model(&name) {
+                st.rejected.fetch_add(1, Ordering::Relaxed);
+            }
+            return Response::unavailable(
+                &format!("queue full for model '{name}'"),
+                1,
+            );
+        }
+        dq.push_back(item.clone());
+        shared.cv.notify_all();
+    }
+
+    // Block until resolved, looping on the condition (spurious wakeups
+    // must not be reported as timeouts) and honoring the real deadline.
+    let deadline = item.enqueued + shared.cfg.request_timeout;
+    let mut done = item.done.lock().unwrap();
+    loop {
+        if let Some(result) = done.take() {
+            return match result {
+                Ok(body) => Response::ok_json(body),
+                Err(e) => Response::error(&e),
+            };
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let (g, _timeout) = item.cv.wait_timeout(done, deadline - now).unwrap();
+        done = g;
+    }
+    // Deadline passed: cancel so a forwarder doesn't burn a server on a
+    // result nobody reads.
+    item.cancelled.store(true, Ordering::SeqCst);
+    if let Some(st) = shared.stats.model(&name) {
+        st.timed_out.fetch_add(1, Ordering::Relaxed);
+    }
+    Response::text(504, "evaluation timed out")
+}
+
+// ---------------------------------------------------------------------------
+// Watcher
+// ---------------------------------------------------------------------------
+
+/// Per-model spawn-governor state (watcher-local): observed in-flight
+/// spawn count and lifetime registrations, plus the failure backoff.
+struct GovState {
+    fails: u32,
+    until: Instant,
+    last_pending: usize,
+    last_reg: u64,
 }
 
 fn watcher_loop(
-    registry: Arc<Registry>,
+    shared: Arc<Shared>,
     backend: Arc<dyn Backend>,
-    stop: Arc<AtomicBool>,
-    poll: Duration,
     regq: Arc<AtomicU64>,
-    model: &'static str,
 ) {
-    let mut last_health = std::time::Instant::now();
-    while !stop.load(Ordering::SeqCst) {
+    let mut last_health = Instant::now();
+    // Spawn governor: per-model exponential backoff while spawn
+    // attempts keep failing, so a broken model retries at a bounded
+    // rate instead of every poll tick.  A failure is *observed*, not
+    // assumed: in-flight spawn count dropped without a registration.
+    // Healthy scale-up (even bursty) is never delayed.
+    let mut governor: HashMap<String, GovState> = HashMap::new();
+    while !shared.stop.load(Ordering::SeqCst) {
         for endpoint in backend.poll_new_servers() {
-            // The paper's preliminary jobs: verify readiness and the
-            // input/output contract before routing work (>=5 queries).
-            match preliminary_checks(&endpoint, model) {
+            // The paper's preliminary jobs: verify readiness and learn
+            // the input/output contract before routing work (>=5
+            // queries per server).  Registration wakes the forwarders
+            // through the registry waker.
+            match preliminary_checks(&endpoint, &shared) {
                 Ok(queries) => {
                     regq.fetch_add(queries, Ordering::Relaxed);
-                    registry.register(&endpoint);
                     crate::log_info!("balancer",
                                      "registered server {endpoint}");
                 }
                 Err(e) => {
                     crate::log_warn!("balancer",
                                      "server {endpoint} failed checks: {e:#}");
+                    backend.server_lost(&endpoint);
+                }
+            }
+        }
+        // Backstop drain of lease-retired endpoints (the forwarders
+        // drain their own; this covers the last one before idle).
+        drain_retired(&shared, &backend);
+        // Capacity management: spawn while demand outstrips supply.
+        // Single-threaded here (no double-spawn race) and outside the
+        // queues lock, so a slow backend never stalls the front door
+        // or the forwarders.
+        let backlogs: Vec<(String, usize)> = {
+            let q = shared.queues.lock().unwrap();
+            shared
+                .cfg
+                .models
+                .iter()
+                .map(|m| (m.clone(), q.get(m).map(|d| d.len()).unwrap_or(0)))
+                .collect()
+        };
+        for (model, mut backlog) in backlogs {
+            let pending = backend.spawns_in_flight(&model);
+            // A warm-start model with no server, no spawn in flight and
+            // no learned contract needs a server even with an empty
+            // queue — metadata-first clients only ever retry /InputSizes
+            // against its 503, so Evaluate backlog alone would never
+            // re-arm a failed warm spawn.
+            if backlog == 0
+                && shared.cfg.warm_start
+                && pending == 0
+                && shared.registry.count_for(&model) == 0
+                && shared.registry.contract(&model).is_none()
+            {
+                backlog = 1;
+            }
+            if backlog == 0 {
+                continue;
+            }
+            let now = Instant::now();
+            let reg_now = shared.registry.registered_for(&model);
+            let st = governor.entry(model.clone()).or_insert(GovState {
+                fails: 0,
+                until: now,
+                last_pending: 0,
+                last_reg: 0,
+            });
+            if reg_now > st.last_reg {
+                // A spawn succeeded since last tick: clear the backoff.
+                st.fails = 0;
+                st.until = now;
+            } else if pending < st.last_pending {
+                // Spawn slots released without a registration: those
+                // spawns failed.  Widen the retry window (50 ms → ~13 s).
+                st.fails = (st.fails + 1).min(8);
+                st.until = now + Duration::from_millis(50)
+                    * (1u32 << st.fails);
+            }
+            st.last_reg = reg_now;
+            st.last_pending = pending;
+            if now < st.until {
+                continue;
+            }
+            let supply = shared.registry.count_for(&model) + pending;
+            if supply < shared.cfg.max_servers {
+                // Demand not already covered by idle servers or spawns
+                // still in flight.
+                let covered = pending + shared.registry.idle_for(&model);
+                let want = backlog
+                    .saturating_sub(covered)
+                    .min(shared.cfg.max_servers - supply);
+                for _ in 0..want {
+                    backend.spawn_server(&model);
+                }
+                if want > 0 {
+                    let after = backend.spawns_in_flight(&model);
+                    if after <= pending {
+                        // Nothing went in flight: the spawns failed
+                        // synchronously (e.g. model build error).
+                        st.fails = (st.fails + 1).min(8);
+                        st.until = now + Duration::from_millis(50)
+                            * (1u32 << st.fails);
+                    }
+                    st.last_pending = after;
                 }
             }
         }
@@ -325,39 +700,68 @@ fn watcher_loop(
         // the port-file poll so idle servers are not hammered — perf
         // pass, EXPERIMENTS.md section Perf).
         if last_health.elapsed() >= Duration::from_millis(500) {
-            last_health = std::time::Instant::now();
-            for ep in registry.endpoints() {
-                if registry.state(&ep) == Some(ServerState::Idle)
+            last_health = Instant::now();
+            for ep in shared.registry.endpoints() {
+                if shared.registry.state(&ep) == Some(ServerState::Idle)
                     && !health_check(&ep)
                 {
                     crate::log_warn!("balancer",
                                      "server {ep} unhealthy, dropping");
-                    registry.remove(&ep);
+                    shared.registry.remove(&ep);
+                    shared.conn_pool.lock().unwrap().remove(&ep);
                     backend.server_lost(&ep);
                 }
             }
         }
-        std::thread::sleep(poll);
+        std::thread::sleep(shared.cfg.poll_interval);
     }
 }
 
-fn preliminary_checks(endpoint: &str, model: &str) -> Result<u64> {
-    let mut m = HttpModel::connect(endpoint, model)?;
-    let (_ver, names) = m.info()?; // 1
-    if !names.iter().any(|n| n == model) {
-        return Err(anyhow!("model '{model}' not served at {endpoint}"));
+/// Hand lease-retired endpoints to the backend and drop their pooled
+/// connections.
+fn drain_retired(shared: &Shared, backend: &Arc<dyn Backend>) {
+    for ep in shared.registry.take_retired() {
+        shared.conn_pool.lock().unwrap().remove(&ep);
+        backend.retire_server(&ep);
     }
-    let ins = m.input_sizes()?; // 2
-    let outs = m.output_sizes()?; // 3
-    let _info = m.model_info()?; // 4
-    let (want_in, want_out) = contract(model);
-    if !want_in.is_empty() && (ins != want_in || outs != want_out) {
+}
+
+/// The paper's five preliminary queries, now also the contract-learning
+/// step: /Info names the model(s) the server hosts; sizes and ModelInfo
+/// are fetched for the first configured one (each server hosts one
+/// model), verified against any already-registered contract, and stored
+/// in the registry.
+fn preliminary_checks(endpoint: &str, shared: &Shared) -> Result<u64> {
+    let mut m = HttpModel::connect(endpoint, "")?;
+    let (_ver, names) = m.info()?; // 1
+    let mut queries = 1u64;
+    let Some(name) = names
+        .iter()
+        .find(|n| shared.cfg.models.iter().any(|c| c == *n))
+        .cloned()
+    else {
         return Err(anyhow!(
-            "contract mismatch at {endpoint}: {ins:?}/{outs:?}"
+            "{endpoint} serves none of the configured models ({names:?})"
         ));
+    };
+    m.model_name = name.clone();
+    let contract = m.fetch_contract()?; // 2, 3
+    let _info = m.model_info()?; // 4
+    queries += 3;
+    if let Some(existing) = shared.registry.contract(&name) {
+        if existing != contract {
+            return Err(anyhow!(
+                "contract mismatch for '{name}' at {endpoint}: \
+                 {:?}/{:?} vs registered {:?}/{:?}",
+                contract.input_sizes, contract.output_sizes,
+                existing.input_sizes, existing.output_sizes
+            ));
+        }
     }
     let (_ver2, _names2) = m.info()?; // 5 — final readiness probe
-    Ok(5)
+    queries += 1;
+    shared.registry.register(endpoint, &name, &contract);
+    Ok(queries)
 }
 
 fn health_check(endpoint: &str) -> bool {
@@ -366,91 +770,96 @@ fn health_check(endpoint: &str) -> bool {
         .is_ok()
 }
 
-type ConnPool = Arc<Mutex<HashMap<String, Vec<HttpClient>>>>;
+// ---------------------------------------------------------------------------
+// Forwarder pool
+// ---------------------------------------------------------------------------
 
-fn dispatch_loop(
-    cfg: BalancerConfig,
-    registry: Arc<Registry>,
-    backend: Arc<dyn Backend>,
-    queue: Arc<Mutex<VecDeque<Arc<Queued>>>>,
-    queue_cv: Arc<Condvar>,
-    stop: Arc<AtomicBool>,
-    served: Arc<AtomicU64>,
-) {
-    // Persistent connections to model servers (perf pass: the forwarder
-    // previously opened a fresh TCP connection per evaluation).
-    let pool: ConnPool = Arc::new(Mutex::new(HashMap::new()));
-    while !stop.load(Ordering::SeqCst) {
-        // Ensure capacity: spawn servers while demand outstrips supply.
-        let backlog = queue.lock().unwrap().len();
-        let total = registry.total() + backend.spawns_in_flight();
-        if backlog > 0 && total < cfg.max_servers {
-            let want = (backlog - 0).min(cfg.max_servers - total);
-            for _ in 0..want {
-                backend.spawn_server();
+/// One worker of the fixed forwarder pool: waits for (queued item,
+/// idle server) pairs via condvar handoff, forwards over a pooled
+/// connection, and resolves the waiting client.  (Capacity scale-up
+/// lives in the watcher, single-threaded and lock-free with respect to
+/// the queues.)
+fn forwarder_loop(shared: Arc<Shared>, backend: Arc<dyn Backend>) {
+    loop {
+        // (queued item, server lease) picked under the queues lock.
+        let mut job = None;
+        {
+            let mut q = shared.queues.lock().unwrap();
+            if shared.stop.load(Ordering::SeqCst) {
+                return;
             }
-        }
-
-        // Pop one request if a server is idle.
-        let item = {
-            let mut q = queue.lock().unwrap();
-            if q.is_empty() {
-                let (q2, _t) = queue_cv
-                    .wait_timeout(q, Duration::from_millis(20))
-                    .unwrap();
-                drop(q2);
-                continue;
-            }
-            match registry.acquire_idle() {
-                Some(_ep) => q.pop_front(),
-                None => {
-                    // Wait for a release/registration to wake us rather
-                    // than burning a fixed 1 ms poll (perf pass: cut
-                    // balancer-added latency ~8x, see EXPERIMENTS.md).
-                    let (q2, _t) = queue_cv
-                        .wait_timeout(q, Duration::from_micros(200))
-                        .unwrap();
-                    drop(q2);
+            for model in &shared.cfg.models {
+                let Some(dq) = q.get_mut(model) else { continue };
+                // Skip work whose client already gave up.
+                while dq
+                    .front()
+                    .map_or(false, |it| it.cancelled.load(Ordering::SeqCst))
+                {
+                    let it = dq.pop_front().unwrap();
+                    if let Some(st) = shared.stats.model(&it.model) {
+                        st.cancelled.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                if dq.is_empty() {
                     continue;
                 }
-            }
-        };
-        let Some(item) = item else { continue };
-        // We acquired an endpoint above; fetch it again from the registry
-        // bookkeeping (acquire_idle marked it Busy and returned it).
-        let ep = registry.last_acquired().expect("acquired endpoint");
-
-        let registry2 = registry.clone();
-        let backend2 = backend.clone();
-        let served2 = served.clone();
-        let wake = queue_cv.clone();
-        let pool2 = pool.clone();
-        let persistent = cfg.persistent_servers;
-        std::thread::Builder::new()
-            .name("lb-fwd".into())
-            .spawn(move || {
-                let result = forward(&pool2, &ep, &item.body);
-                let ok = result.is_ok();
-                *item.done.lock().unwrap() = Some(result);
-                item.cv.notify_all();
-                served2.fetch_add(1, Ordering::Relaxed);
-                if persistent && ok {
-                    registry2.release(&ep);
-                    wake.notify_all();
-                } else {
-                    // Per-job servers retire after one evaluation (the
-                    // paper's measured configuration), and failed servers
-                    // are dropped either way.
-                    registry2.remove(&ep);
-                    backend2.retire_server(&ep);
+                if let Some(lease) = shared.registry.acquire(model) {
+                    job = Some((dq.pop_front().unwrap(), lease));
+                    break;
                 }
-            })
-            .expect("spawn forwarder");
+            }
+            if job.is_none() {
+                // Condvar handoff; the timeout is only a liveness
+                // backstop (stop flag, slow backends), not a poll loop.
+                let (_q, _t) = shared
+                    .cv
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap();
+                continue;
+            }
+        }
+        let (item, mut lease) = job.expect("checked above");
+        if item.cancelled.load(Ordering::SeqCst) {
+            // Cancelled between selection and here; lease releases.
+            if let Some(st) = shared.stats.model(&item.model) {
+                st.cancelled.fetch_add(1, Ordering::Relaxed);
+            }
+            drop(lease);
+            continue;
+        }
+        let st = shared.stats.model(&item.model);
+        if let Some(st) = st {
+            st.queue_wait.record(item.enqueued.elapsed());
+        }
+        let t0 = Instant::now();
+        let result = forward(&shared.conn_pool, lease.endpoint(), &item.body);
+        let ok = result.is_ok();
+        if let Some(st) = st {
+            st.forward.record(t0.elapsed());
+            if ok {
+                st.served.fetch_add(1, Ordering::Relaxed);
+            } else {
+                st.errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        shared.requests_served.fetch_add(1, Ordering::Relaxed);
+        *item.done.lock().unwrap() = Some(result);
+        item.cv.notify_all();
+        // Per-job servers retire after one evaluation (the paper's
+        // measured configuration); failed forwards retire either way.
+        if !shared.cfg.persistent_servers || !ok {
+            lease.mark_retire();
+        }
+        drop(lease); // release or retire; wakes the pool via the waker
+        drain_retired(&shared, &backend);
     }
 }
 
-fn forward(pool: &ConnPool, endpoint: &str, body: &str)
-           -> Result<String, String> {
+fn forward(
+    pool: &Mutex<HashMap<String, Vec<HttpClient>>>,
+    endpoint: &str,
+    body: &str,
+) -> Result<String, String> {
     let mut do_it = || -> Result<String> {
         let mut c = pool
             .lock()

@@ -1,7 +1,27 @@
-//! Server registry: endpoint pool with Idle/Busy state, FCFS acquisition.
+//! Server registry: multi-model endpoint pool with per-model idle
+//! indexes, learned contracts, and RAII leases.
+//!
+//! * Each endpoint serves one model; idle endpoints live in a per-model
+//!   ordered set, so acquiring a server is O(log n) instead of the old
+//!   full-table scan (and the racy `last_acquired` side-channel is
+//!   gone: [`Registry::acquire`] hands back a [`ServerLease`] that
+//!   *is* the acquisition).
+//! * The model's wire contract ([`ModelContract`]) is learned at
+//!   registration from the preliminary checks and kept per model, so
+//!   the front door answers metadata queries locally.
+//! * Dropping a lease releases the server back to the idle index; a
+//!   lease marked for retirement instead removes the server and parks
+//!   its endpoint in a retirement queue the balancer drains into
+//!   `Backend::retire_server` — the forwarder never talks to the
+//!   backend while holding registry state.
+//! * Every state change invokes the optional waker, which the balancer
+//!   points at the dispatcher condvar: registration, release and
+//!   removal are event-driven, not poll-detected.
 
-use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::umbridge::ModelContract;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ServerState {
@@ -9,10 +29,28 @@ pub enum ServerState {
     Busy,
 }
 
+struct ServerInfo {
+    model: String,
+    state: ServerState,
+}
+
+type Waker = Arc<dyn Fn() + Send + Sync>;
+
 #[derive(Default)]
 struct Inner {
-    servers: BTreeMap<String, ServerState>,
-    last_acquired: Option<String>,
+    /// endpoint -> info (ordered for deterministic iteration).
+    servers: BTreeMap<String, ServerInfo>,
+    /// model -> idle endpoints (ordered: FCFS by endpoint, O(log n) pop).
+    idle: HashMap<String, BTreeSet<String>>,
+    /// model -> live server count (idle + busy).
+    totals: HashMap<String, usize>,
+    /// model -> learned wire contract (survives server churn).
+    contracts: HashMap<String, ModelContract>,
+    /// model -> lifetime registration count (the balancer's spawn
+    /// governor resets its failure backoff when this advances).
+    registered_by_model: HashMap<String, u64>,
+    /// Endpoints retired by lease drop, awaiting backend teardown.
+    retired: Vec<String>,
     /// Lifetime counters.
     registered_total: u64,
     removed_total: u64,
@@ -21,57 +59,151 @@ struct Inner {
 /// Thread-safe registry of model-server endpoints.
 pub struct Registry {
     inner: Mutex<Inner>,
+    waker: Mutex<Option<Waker>>,
 }
 
 impl Registry {
     pub fn new() -> Registry {
-        Registry { inner: Mutex::new(Inner::default()) }
+        Registry {
+            inner: Mutex::new(Inner::default()),
+            waker: Mutex::new(None),
+        }
     }
 
-    pub fn register(&self, endpoint: &str) {
-        let mut g = self.inner.lock().unwrap();
-        if g.servers
-            .insert(endpoint.to_string(), ServerState::Idle)
-            .is_none()
+    /// Install the dispatcher wake-up hook (called after every
+    /// registration, release, retirement or removal).
+    pub fn set_waker(&self, w: Waker) {
+        *self.waker.lock().unwrap() = Some(w);
+    }
+
+    fn wake(&self) {
+        let w = self.waker.lock().unwrap().clone();
+        if let Some(w) = w {
+            w();
+        }
+    }
+
+    /// Register an endpoint serving `model`, learning the contract on
+    /// first sight.  Idempotent: re-registering a known endpoint does
+    /// not reset its state.
+    pub fn register(&self, endpoint: &str, model: &str,
+                    contract: &ModelContract) {
         {
+            let mut g = self.inner.lock().unwrap();
+            if g.servers.contains_key(endpoint) {
+                return;
+            }
+            g.servers.insert(
+                endpoint.to_string(),
+                ServerInfo { model: model.to_string(), state: ServerState::Idle },
+            );
+            g.idle
+                .entry(model.to_string())
+                .or_default()
+                .insert(endpoint.to_string());
+            *g.totals.entry(model.to_string()).or_default() += 1;
+            g.contracts
+                .entry(model.to_string())
+                .or_insert_with(|| contract.clone());
+            *g.registered_by_model.entry(model.to_string()).or_default() += 1;
             g.registered_total += 1;
         }
+        self.wake();
     }
 
+    /// Learned contract for a model (from its first registered server).
+    pub fn contract(&self, model: &str) -> Option<ModelContract> {
+        self.inner.lock().unwrap().contracts.get(model).cloned()
+    }
+
+    /// Remove an endpoint entirely (health-check failure path).
     pub fn remove(&self, endpoint: &str) {
-        let mut g = self.inner.lock().unwrap();
-        if g.servers.remove(endpoint).is_some() {
-            g.removed_total += 1;
+        {
+            let mut g = self.inner.lock().unwrap();
+            if !Self::purge(&mut g, endpoint) {
+                return;
+            }
         }
+        self.wake();
     }
 
-    /// Mark the first idle server busy and return it.
-    pub fn acquire_idle(&self) -> Option<String> {
-        let mut g = self.inner.lock().unwrap();
-        let ep = g
-            .servers
-            .iter()
-            .find(|(_, s)| **s == ServerState::Idle)
-            .map(|(e, _)| e.clone())?;
-        g.servers.insert(ep.clone(), ServerState::Busy);
-        g.last_acquired = Some(ep.clone());
-        Some(ep)
-    }
-
-    /// Endpoint returned by the most recent successful `acquire_idle`.
-    pub fn last_acquired(&self) -> Option<String> {
-        self.inner.lock().unwrap().last_acquired.clone()
-    }
-
-    pub fn release(&self, endpoint: &str) {
-        let mut g = self.inner.lock().unwrap();
-        if let Some(s) = g.servers.get_mut(endpoint) {
-            *s = ServerState::Idle;
+    /// Drop `endpoint` from all maps; true if it was present.
+    fn purge(g: &mut Inner, endpoint: &str) -> bool {
+        let Some(info) = g.servers.remove(endpoint) else {
+            return false;
+        };
+        if let Some(set) = g.idle.get_mut(&info.model) {
+            set.remove(endpoint);
         }
+        if let Some(n) = g.totals.get_mut(&info.model) {
+            *n = n.saturating_sub(1);
+        }
+        g.removed_total += 1;
+        true
+    }
+
+    /// Lease the first idle server for `model` (O(log n)).  The lease
+    /// releases the server on drop unless marked for retirement.
+    pub fn acquire(&self, model: &str) -> Option<ServerLease<'_>> {
+        let endpoint = {
+            let mut g = self.inner.lock().unwrap();
+            let set = g.idle.get_mut(model)?;
+            let ep = set.iter().next().cloned()?;
+            set.remove(&ep);
+            g.servers
+                .get_mut(&ep)
+                .expect("idle index entry without server")
+                .state = ServerState::Busy;
+            ep
+        };
+        Some(ServerLease {
+            registry: self,
+            endpoint,
+            model: model.to_string(),
+            retire: false,
+        })
+    }
+
+    fn release_endpoint(&self, endpoint: &str) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            let Some(info) = g.servers.get_mut(endpoint) else {
+                return; // removed while leased; nothing to release
+            };
+            info.state = ServerState::Idle;
+            let model = info.model.clone();
+            g.idle
+                .entry(model)
+                .or_default()
+                .insert(endpoint.to_string());
+        }
+        self.wake();
+    }
+
+    fn retire_endpoint(&self, endpoint: &str) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if !Self::purge(&mut g, endpoint) {
+                return;
+            }
+            g.retired.push(endpoint.to_string());
+        }
+        self.wake();
+    }
+
+    /// Endpoints retired by lease drop since the last call; the
+    /// balancer hands them to `Backend::retire_server`.
+    pub fn take_retired(&self) -> Vec<String> {
+        std::mem::take(&mut self.inner.lock().unwrap().retired)
     }
 
     pub fn state(&self, endpoint: &str) -> Option<ServerState> {
-        self.inner.lock().unwrap().servers.get(endpoint).copied()
+        self.inner
+            .lock()
+            .unwrap()
+            .servers
+            .get(endpoint)
+            .map(|i| i.state)
     }
 
     pub fn endpoints(&self) -> Vec<String> {
@@ -82,18 +214,55 @@ impl Registry {
         self.inner.lock().unwrap().servers.len()
     }
 
+    /// Live servers (idle + busy) for one model — O(1).
+    pub fn count_for(&self, model: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .totals
+            .get(model)
+            .copied()
+            .unwrap_or(0)
+    }
+
     pub fn idle_count(&self) -> usize {
         self.inner
             .lock()
             .unwrap()
-            .servers
+            .idle
             .values()
-            .filter(|s| **s == ServerState::Idle)
-            .count()
+            .map(|s| s.len())
+            .sum()
+    }
+
+    /// Idle servers for one model — O(1).
+    pub fn idle_for(&self, model: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .idle
+            .get(model)
+            .map(|s| s.len())
+            .unwrap_or(0)
     }
 
     pub fn registered_total(&self) -> u64 {
         self.inner.lock().unwrap().registered_total
+    }
+
+    /// Lifetime registrations for one model.
+    pub fn registered_for(&self, model: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .registered_by_model
+            .get(model)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn removed_total(&self) -> u64 {
+        self.inner.lock().unwrap().removed_total
     }
 }
 
@@ -103,48 +272,169 @@ impl Default for Registry {
     }
 }
 
+/// RAII acquisition of one model server.
+///
+/// Dropping the lease returns the server to the idle pool; after
+/// [`ServerLease::mark_retire`] (failed forward, per-job mode, or a
+/// panic unwinding past a poisoned evaluation path when the caller
+/// pre-marks), dropping removes the server and queues its endpoint for
+/// backend teardown instead.
+pub struct ServerLease<'a> {
+    registry: &'a Registry,
+    endpoint: String,
+    model: String,
+    retire: bool,
+}
+
+impl ServerLease<'_> {
+    pub fn endpoint(&self) -> &str {
+        &self.endpoint
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Retire instead of release on drop.
+    pub fn mark_retire(&mut self) {
+        self.retire = true;
+    }
+
+    pub fn will_retire(&self) -> bool {
+        self.retire
+    }
+}
+
+impl Drop for ServerLease<'_> {
+    fn drop(&mut self) {
+        if self.retire {
+            self.registry.retire_endpoint(&self.endpoint);
+        } else {
+            self.registry.release_endpoint(&self.endpoint);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn contract() -> ModelContract {
+        ModelContract { input_sizes: vec![7], output_sizes: vec![2, 2] }
+    }
+
+    fn reg() -> Arc<Registry> {
+        Arc::new(Registry::new())
+    }
+
     #[test]
     fn register_acquire_release() {
-        let r = Registry::new();
-        r.register("http://h:1");
-        r.register("http://h:2");
+        let r = reg();
+        r.register("http://h:1", "gp", &contract());
+        r.register("http://h:2", "gp", &contract());
         assert_eq!(r.total(), 2);
-        assert_eq!(r.idle_count(), 2);
-        let a = r.acquire_idle().unwrap();
-        assert_eq!(r.idle_count(), 1);
-        assert_eq!(r.state(&a), Some(ServerState::Busy));
-        r.release(&a);
-        assert_eq!(r.idle_count(), 2);
+        assert_eq!(r.idle_for("gp"), 2);
+        let lease = r.acquire("gp").unwrap();
+        assert_eq!(r.idle_for("gp"), 1);
+        assert_eq!(r.state(lease.endpoint()), Some(ServerState::Busy));
+        let ep = lease.endpoint().to_string();
+        drop(lease); // release on drop
+        assert_eq!(r.idle_for("gp"), 2);
+        assert_eq!(r.state(&ep), Some(ServerState::Idle));
+        assert!(r.take_retired().is_empty());
     }
 
     #[test]
-    fn acquire_exhausts() {
-        let r = Registry::new();
-        r.register("http://h:1");
-        assert!(r.acquire_idle().is_some());
-        assert!(r.acquire_idle().is_none());
+    fn acquire_is_fcfs_and_exhausts() {
+        let r = reg();
+        r.register("http://h:2", "gp", &contract());
+        r.register("http://h:1", "gp", &contract());
+        let a = r.acquire("gp").unwrap();
+        assert_eq!(a.endpoint(), "http://h:1"); // ordered index
+        let b = r.acquire("gp").unwrap();
+        assert_eq!(b.endpoint(), "http://h:2");
+        assert!(r.acquire("gp").is_none());
+        drop(a);
+        assert!(r.acquire("gp").is_some());
+        drop(b);
     }
 
     #[test]
-    fn remove_busy_server() {
-        let r = Registry::new();
-        r.register("http://h:1");
-        let a = r.acquire_idle().unwrap();
-        r.remove(&a);
+    fn retire_on_drop_removes_and_queues() {
+        let r = reg();
+        r.register("http://h:1", "gp", &contract());
+        let mut lease = r.acquire("gp").unwrap();
+        lease.mark_retire(); // poisoned forward / per-job mode
+        assert!(lease.will_retire());
+        drop(lease);
         assert_eq!(r.total(), 0);
+        assert_eq!(r.take_retired(), vec!["http://h:1".to_string()]);
+        assert!(r.take_retired().is_empty()); // drained
         assert_eq!(r.registered_total(), 1);
+        assert_eq!(r.removed_total(), 1);
     }
 
     #[test]
-    fn duplicate_register_is_idempotent() {
-        let r = Registry::new();
-        r.register("http://h:1");
-        r.register("http://h:1");
+    fn models_are_isolated() {
+        let r = reg();
+        r.register("http://h:1", "gp", &contract());
+        let beta = ModelContract { input_sizes: vec![1],
+                                   output_sizes: vec![100, 1] };
+        r.register("http://h:2", "eigen-100", &beta);
+        let lease = r.acquire("gp").unwrap();
+        // gp exhausted; eigen-100 unaffected.
+        assert!(r.acquire("gp").is_none());
+        assert_eq!(r.idle_for("eigen-100"), 1);
+        assert_eq!(r.count_for("gp"), 1);
+        let e = r.acquire("eigen-100").unwrap();
+        assert_eq!(e.endpoint(), "http://h:2");
+        drop(e);
+        drop(lease);
+        assert_eq!(r.contract("gp"), Some(contract()));
+        assert_eq!(r.contract("eigen-100"), Some(beta));
+    }
+
+    #[test]
+    fn remove_while_leased_does_not_resurrect() {
+        let r = reg();
+        r.register("http://h:1", "gp", &contract());
+        let lease = r.acquire("gp").unwrap();
+        r.remove("http://h:1"); // health check dropped it meanwhile
+        assert_eq!(r.total(), 0);
+        drop(lease); // release of a removed endpoint is a no-op
+        assert_eq!(r.total(), 0);
+        assert_eq!(r.idle_for("gp"), 0);
+        assert!(r.take_retired().is_empty());
+    }
+
+    #[test]
+    fn duplicate_register_is_idempotent_and_keeps_state() {
+        let r = reg();
+        r.register("http://h:1", "gp", &contract());
+        let lease = r.acquire("gp").unwrap();
+        r.register("http://h:1", "gp", &contract());
+        // Still busy: re-registration must not reset the lease.
+        assert_eq!(r.state("http://h:1"), Some(ServerState::Busy));
         assert_eq!(r.total(), 1);
         assert_eq!(r.registered_total(), 1);
+        drop(lease);
+    }
+
+    #[test]
+    fn waker_fires_on_transitions() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let r = reg();
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = hits.clone();
+        r.set_waker(Arc::new(move || {
+            h2.fetch_add(1, Ordering::SeqCst);
+        }));
+        r.register("http://h:1", "gp", &contract()); // wake 1
+        let lease = r.acquire("gp").unwrap();
+        drop(lease); // wake 2 (release)
+        let mut lease = r.acquire("gp").unwrap();
+        lease.mark_retire();
+        drop(lease); // wake 3 (retire)
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
     }
 }

@@ -82,6 +82,19 @@ impl Response {
         Response::text(500, msg)
     }
 
+    /// 503 with a `Retry-After` hint — the balancer's backpressure
+    /// signal when a per-model queue is full.
+    pub fn unavailable(msg: &str, retry_after_secs: u32) -> Response {
+        Response::text(503, msg)
+            .with_header("retry-after", &retry_after_secs.to_string())
+    }
+
+    /// Builder-style header attachment.
+    pub fn with_header(mut self, key: &str, value: &str) -> Response {
+        self.headers.insert(key.to_ascii_lowercase(), value.to_string());
+        self
+    }
+
     pub fn body_str(&self) -> Result<&str> {
         std::str::from_utf8(&self.body).context("response body not utf-8")
     }
@@ -92,8 +105,10 @@ impl Response {
             400 => "Bad Request",
             404 => "Not Found",
             405 => "Method Not Allowed",
+            429 => "Too Many Requests",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
+            504 => "Gateway Timeout",
             _ => "Unknown",
         }
     }
@@ -194,5 +209,18 @@ mod tests {
     fn status_reasons() {
         assert_eq!(Response::not_found().status, 404);
         assert_eq!(Response::error("x").status, 500);
+    }
+
+    #[test]
+    fn unavailable_carries_retry_after() {
+        let r = Response::unavailable("queue full", 2);
+        assert_eq!(r.status, 503);
+        assert_eq!(r.headers.get("retry-after").map(|s| s.as_str()),
+                   Some("2"));
+        let mut buf = Vec::new();
+        r.write_to(true, &mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(s.contains("retry-after: 2\r\n"));
     }
 }

@@ -4,8 +4,10 @@
 //!   serve      — run an UM-Bridge model server (gp | gs2 | eigen-100 |
 //!                eigen-5000 | qoi) on a port
 //!   client     — evaluate a model through any UM-Bridge endpoint
-//!   balancer   — run the load balancer live (slurm | hq backend)
-//!   selftest   — artifact round-trip: PJRT vs golden test vectors
+//!   balancer   — run the load balancer live (slurm | hq backend),
+//!                serving one or many models through one front door
+//!   selftest   — artifact round-trip (PJRT vs golden vectors, when
+//!                artifacts exist) plus a live-plane balancer smoke
 //!   experiment — run one sim-plane benchmark cell and print its stats
 //!   campaign   — run a campaign-plane workload policy against a
 //!                scheduler and print/export the campaign metrics
@@ -28,7 +30,7 @@ use uqsched::metrics::BoxStats;
 use uqsched::models;
 use uqsched::runtime::{check_testvec, Engine, Manifest};
 use uqsched::umbridge::{self, HttpModel};
-use uqsched::workload::{scenario, App};
+use uqsched::workload::App;
 use uqsched::{log_info, logging};
 
 fn main() -> Result<()> {
@@ -47,8 +49,10 @@ fn main() -> Result<()> {
                  \n\
                  serve      --model gp|gs2|eigen-100|eigen-5000|qoi [--port N]\n\
                  client     --url http://h:p --model NAME --params 1,2,...\n\
-                 balancer   --model NAME --backend slurm|hq [--servers N]\n\
-                 selftest   [--artifacts DIR]\n\
+                 balancer   --models NAME[,NAME...] --backend slurm|hq\n\
+                            [--servers N] [--per-job-servers]\n\
+                 selftest   [--artifacts DIR]  (artifact check + live-plane\n\
+                            smoke; artifacts optional)\n\
                  experiment --app gs2|GP|eigen-100|eigen-5000 [--queue 2]\n\
                             [--evals 100] [--seed 1]\n\
                  campaign   --policy fixed|bursty|mix|hetero|adaptive\n\
@@ -98,46 +102,100 @@ fn client(args: &Args) -> Result<()> {
 }
 
 fn balancer(args: &Args) -> Result<()> {
-    let model = leak(&args.str_or("model", "gp"));
+    // One front door, many models: --models gp,gs2 (--model also works).
+    let spec = args
+        .opt("models")
+        .or_else(|| args.opt("model"))
+        .unwrap_or("gp")
+        .to_string();
+    let model_names: Vec<&str> =
+        spec.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect();
     let backend_kind = args.str_or("backend", "hq");
     let servers = args.usize_or("servers", 2)?;
     let scale = args.f64_or("time-scale", 60.0)?;
     let eng = engine(args)?;
-    let app = app_for_model(model)?;
-    let scen = scenario(app);
-    let stack = start_live(eng, model, &backend_kind, servers, &scen,
+    let stack = start_live(eng, &model_names, &backend_kind, servers,
                            scale, !args.flag("per-job-servers"))?;
-    log_info!("balancer", "front door at {}", stack.balancer.url());
+    log_info!("balancer", "front door at {} serving {:?} (stats at {}/Stats)",
+              stack.balancer.url(), model_names, stack.balancer.url());
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
 }
 
-fn app_for_model(model: &str) -> Result<App> {
-    Ok(match model {
-        models::GP_NAME | models::QOI_NAME => App::Gp,
-        models::GS2_NAME => App::Gs2,
-        models::EIGEN_SMALL_NAME => App::Eigen100,
-        models::EIGEN_LARGE_NAME => App::Eigen5000,
-        other => bail!("no scenario for model '{other}'"),
-    })
+fn selftest(args: &Args) -> Result<()> {
+    // Part 1: artifact round-trip (skipped cleanly when the PJRT
+    // artifacts are absent, e.g. in CI — the live-plane smoke below
+    // runs regardless).
+    match engine(args) {
+        Ok(eng) => {
+            println!("artifact self-test ({} entries):",
+                     eng.entry_names().len());
+            let mut worst: f64 = 0.0;
+            for name in eng.entry_names() {
+                let err = check_testvec(&eng, &name)?;
+                println!("  {name:<18} max rel err {err:.3e}");
+                worst = worst.max(err);
+            }
+            if worst >= 1e-4 {
+                bail!("selftest FAILED (worst {worst:.3e})");
+            }
+            println!("selftest artifacts OK (worst {worst:.3e})");
+        }
+        Err(e) => {
+            println!("SKIP artifact self-test (no artifacts: {e:#})");
+        }
+    }
+    balancer_smoke()
 }
 
-fn selftest(args: &Args) -> Result<()> {
-    let eng = engine(args)?;
-    println!("artifact self-test ({} entries):", eng.entry_names().len());
-    let mut worst: f64 = 0.0;
-    for name in eng.entry_names() {
-        let err = check_testvec(&eng, &name)?;
-        println!("  {name:<18} max rel err {err:.3e}");
-        worst = worst.max(err);
+/// Live-plane smoke: two synthetic models through one balancer front
+/// door (LocalBackend — no scheduler, no artifacts), verifying routing,
+/// learned contracts and the stats surface.
+fn balancer_smoke() -> Result<()> {
+    use std::sync::atomic::Ordering;
+    use uqsched::coordinator::{BalancerConfig, LoadBalancer, LocalBackend};
+    use uqsched::models::SyntheticModel;
+
+    let backend = LocalBackend::new(Arc::new(|name: &str| {
+        Ok(match name {
+            "syn-a" => Arc::new(SyntheticModel::new("syn-a", &[2], &[1]))
+                as Arc<dyn uqsched::umbridge::Model>,
+            "syn-b" => Arc::new(SyntheticModel::new("syn-b", &[3], &[2, 1])),
+            other => bail!("unknown smoke model '{other}'"),
+        })
+    }));
+    let cfg = BalancerConfig {
+        models: vec!["syn-a".into(), "syn-b".into()],
+        max_servers: 2,
+        ..Default::default()
+    };
+    let mut lb = LoadBalancer::start(cfg, backend)?;
+    let url = lb.url();
+    let cfgv = Value::Obj(Default::default());
+    let mut a = HttpModel::connect(&url, "syn-a")?;
+    let mut b = HttpModel::connect(&url, "syn-b")?;
+    for i in 0..5 {
+        let x = i as f64;
+        let out = a.evaluate(&[vec![x, 1.0]], &cfgv)?;
+        if out != vec![vec![x + 1.0]] {
+            bail!("syn-a routed wrong: {out:?}");
+        }
+        let out = b.evaluate(&[vec![x, 1.0, 2.0]], &cfgv)?;
+        if out != vec![vec![x + 3.0, x + 3.0], vec![x + 4.0]] {
+            bail!("syn-b routed wrong: {out:?}");
+        }
     }
-    if worst < 1e-4 {
-        println!("selftest OK (worst {worst:.3e})");
-        Ok(())
-    } else {
-        bail!("selftest FAILED (worst {worst:.3e})")
+    // Contracts were learned at registration, not hardcoded.
+    if a.input_sizes()? != vec![2] || b.output_sizes()? != vec![2, 1] {
+        bail!("learned contracts wrong");
     }
+    let served = lb.requests_served.load(Ordering::Relaxed);
+    println!("selftest live-plane OK (10 evaluations across 2 models, \
+              {served} served)");
+    println!("{}", uqsched::json::write(&lb.stats_json()));
+    lb.shutdown();
+    Ok(())
 }
 
 fn experiment(args: &Args) -> Result<()> {
@@ -292,6 +350,3 @@ fn campaign_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn leak(s: &str) -> &'static str {
-    Box::leak(s.to_string().into_boxed_str())
-}

@@ -1,0 +1,187 @@
+//! Lock-free latency histogram for the live balancer plane.
+//!
+//! Power-of-two microsecond buckets (bucket `i` covers
+//! `[2^i, 2^(i+1))` µs), recorded with relaxed atomics so the forwarder
+//! hot path pays two `fetch_add`s and one `fetch_max` per sample — no
+//! mutex, no allocation.  Quantiles are reconstructed from the bucket
+//! counts at snapshot time (upper-bound estimate, i.e. a quantile is
+//! reported as the top edge of the bucket it falls in).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::json::Value;
+
+/// Number of log2 buckets: covers up to 2^39 µs ≈ 6.4 days.
+const BUCKETS: usize = 40;
+
+/// Lock-free log2 latency histogram (microsecond domain).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(us: u64) -> usize {
+        // floor(log2(us)) for us >= 1; 0 µs lands in bucket 0.
+        let i = 63 - (us | 1).leading_zeros() as usize;
+        i.min(BUCKETS - 1)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        self.buckets[Self::bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let count: u64 = counts.iter().sum();
+        let sum_us = self.sum_us.load(Ordering::Relaxed);
+        let max_us = self.max_us.load(Ordering::Relaxed);
+        let quantile = |q: f64| -> u64 {
+            if count == 0 {
+                return 0;
+            }
+            let rank = ((count as f64) * q).ceil().max(1.0) as u64;
+            let mut seen = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                seen += c;
+                if seen >= rank {
+                    // Upper edge of the bucket, capped by the true max.
+                    return (1u64 << (i + 1)).min(max_us.max(1));
+                }
+            }
+            max_us
+        };
+        HistogramSnapshot {
+            count,
+            mean_us: if count == 0 { 0.0 } else { sum_us as f64 / count as f64 },
+            p50_us: quantile(0.50),
+            p90_us: quantile(0.90),
+            p99_us: quantile(0.99),
+            max_us,
+        }
+    }
+
+    /// JSON for the `/Stats` endpoint and the bench reports.
+    pub fn json(&self) -> Value {
+        self.snapshot().json()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Point-in-time view of a [`Histogram`].
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub mean_us: f64,
+    /// Quantiles are bucket upper bounds (log2 µs buckets).
+    pub p50_us: u64,
+    pub p90_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn json(&self) -> Value {
+        Value::obj(vec![
+            ("count", Value::num(self.count as f64)),
+            ("mean_us", Value::num(self.mean_us)),
+            ("p50_us", Value::num(self.p50_us as f64)),
+            ("p90_us", Value::num(self.p90_us as f64)),
+            ("p99_us", Value::num(self.p99_us as f64)),
+            ("max_us", Value::num(self.max_us as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99_us, 0);
+        assert_eq!(s.mean_us, 0.0);
+    }
+
+    #[test]
+    fn bucket_index_is_log2() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 1);
+        assert_eq!(Histogram::bucket_index(1024), 10);
+        assert_eq!(Histogram::bucket_index(u64::MAX), 39);
+    }
+
+    #[test]
+    fn records_and_quantiles() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record(Duration::from_micros(100)); // bucket 6 [64,128)
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_micros(10_000)); // bucket 13
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.max_us, 10_000);
+        // p50 falls in the 100 µs bucket: upper edge 128.
+        assert_eq!(s.p50_us, 128);
+        assert_eq!(s.p90_us, 128);
+        // p99 falls in the 10 ms bucket; capped by the true max.
+        assert_eq!(s.p99_us, 10_000);
+        let mean = (90.0 * 100.0 + 10.0 * 10_000.0) / 100.0;
+        assert!((s.mean_us - mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_is_exact() {
+        let h = Histogram::new();
+        h.record(Duration::from_micros(7));
+        h.record(Duration::from_micros(777));
+        h.record(Duration::from_micros(77));
+        assert_eq!(h.snapshot().max_us, 777);
+    }
+
+    #[test]
+    fn json_has_all_fields() {
+        let h = Histogram::new();
+        h.record(Duration::from_micros(50));
+        let v = h.json();
+        for k in ["count", "mean_us", "p50_us", "p90_us", "p99_us", "max_us"] {
+            assert!(v.get(k).is_some(), "missing {k}");
+        }
+    }
+}

@@ -9,9 +9,11 @@
 use crate::clock::{Micros, SEC};
 
 pub mod boxplot;
+pub mod histogram;
 pub mod report;
 
 pub use boxplot::BoxStats;
+pub use histogram::{Histogram, HistogramSnapshot};
 
 /// Per-job timing record (native-log equivalent).
 #[derive(Clone, Debug, PartialEq)]

@@ -46,6 +46,63 @@ pub fn all_names() -> Vec<&'static str> {
 
 // ---------------------------------------------------------------------------
 
+/// Engine-free stand-in model with a configurable contract and service
+/// time.  The balancer plane (tests, `selftest` smoke, `hotpath`
+/// multi-model bench) uses it to exercise routing, leasing and
+/// backpressure without PJRT artifacts: output vector `j` is filled
+/// with `sum(inputs) + j`, so clients can verify end-to-end routing.
+pub struct SyntheticModel {
+    name: String,
+    inputs: Vec<usize>,
+    outputs: Vec<usize>,
+    delay: std::time::Duration,
+}
+
+impl SyntheticModel {
+    pub fn new(name: &str, inputs: &[usize], outputs: &[usize])
+               -> SyntheticModel {
+        SyntheticModel {
+            name: name.to_string(),
+            inputs: inputs.to_vec(),
+            outputs: outputs.to_vec(),
+            delay: std::time::Duration::ZERO,
+        }
+    }
+
+    /// Simulated service time per evaluation.
+    pub fn with_delay(mut self, delay: std::time::Duration) -> SyntheticModel {
+        self.delay = delay;
+        self
+    }
+}
+
+impl Model for SyntheticModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn input_sizes(&self) -> Vec<usize> {
+        self.inputs.clone()
+    }
+    fn output_sizes(&self) -> Vec<usize> {
+        self.outputs.clone()
+    }
+    fn evaluate(&self, inputs: &[Vec<f64>], _config: &Value)
+                -> Result<Vec<Vec<f64>>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let sum: f64 = inputs.iter().flatten().sum();
+        Ok(self
+            .outputs
+            .iter()
+            .enumerate()
+            .map(|(j, &len)| vec![sum + j as f64; len])
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
 /// GP surrogate: input (7) -> outputs (mean[2], var[2]).
 pub struct GpModel {
     engine: Arc<Engine>,

@@ -21,6 +21,17 @@ use crate::json::{self, Value};
 /// Protocol version advertised on /Info.
 pub const PROTOCOL_VERSION: f64 = 1.0;
 
+/// A model's wire contract: the input/output vector sizes it advertises
+/// on `/InputSizes` and `/OutputSizes`.  The balancer learns one per
+/// model at server registration and uses it to answer metadata queries
+/// without a round trip (and to reject servers whose contract diverges
+/// from an already-registered sibling).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelContract {
+    pub input_sizes: Vec<usize>,
+    pub output_sizes: Vec<usize>,
+}
+
 /// A numerical model exposed over UM-Bridge.
 pub trait Model: Send + Sync {
     fn name(&self) -> &str;
@@ -216,6 +227,14 @@ impl HttpModel {
         self.named_post("/ModelInfo")
     }
 
+    /// Fetch the model's full wire contract (two round trips).
+    pub fn fetch_contract(&mut self) -> Result<ModelContract> {
+        Ok(ModelContract {
+            input_sizes: self.input_sizes()?,
+            output_sizes: self.output_sizes()?,
+        })
+    }
+
     pub fn evaluate(
         &mut self,
         inputs: &[Vec<f64>],
@@ -313,6 +332,18 @@ mod tests {
         let mut srv = serve();
         let mut m = HttpModel::connect(&srv.url(), "nope").unwrap();
         assert!(m.input_sizes().is_err());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn contract_fetch_roundtrip() {
+        let mut srv = serve();
+        let mut m = HttpModel::connect(&srv.url(), "testmodel").unwrap();
+        let c = m.fetch_contract().unwrap();
+        assert_eq!(c, ModelContract {
+            input_sizes: vec![3],
+            output_sizes: vec![1, 3],
+        });
         srv.shutdown();
     }
 

@@ -51,6 +51,21 @@ impl App {
     }
 }
 
+/// Scheduling scenario backing a live model (wire name -> Table III
+/// row).  The QoI integral runs on GP-class resources.  `None` for
+/// models with no paper scenario (e.g. synthetic test models):
+/// `start_live` rejects those at startup — they are served through
+/// `LocalBackend`, which needs no scenario.
+pub fn app_for_model(model: &str) -> Option<App> {
+    match model {
+        crate::models::GP_NAME | crate::models::QOI_NAME => Some(App::Gp),
+        crate::models::GS2_NAME => Some(App::Gs2),
+        crate::models::EIGEN_SMALL_NAME => Some(App::Eigen100),
+        crate::models::EIGEN_LARGE_NAME => Some(App::Eigen5000),
+        _ => None,
+    }
+}
+
 /// One row of the paper's Table III (all values paper-scale).
 #[derive(Clone, Debug)]
 pub struct Scenario {

@@ -13,7 +13,7 @@ use uqsched::json::Value;
 use uqsched::models;
 use uqsched::runtime::{check_testvec, Engine};
 use uqsched::umbridge::HttpModel;
-use uqsched::workload::{lhs, scenario, App};
+use uqsched::workload::lhs;
 
 fn artifacts_dir() -> Option<PathBuf> {
     for cand in ["artifacts", "../artifacts"] {
@@ -108,8 +108,7 @@ fn runtime_gp_agrees_with_gs2_direction() {
 #[test]
 fn balancer_hq_end_to_end() {
     let eng = need_artifacts!();
-    let stack = start_live(eng, models::GP_NAME, "hq", 2,
-                           &scenario(App::Gp), 5000.0, true)
+    let stack = start_live(eng, &[models::GP_NAME], "hq", 2, 5000.0, true)
         .expect("live stack");
     let mut client = HttpModel::connect(&stack.balancer.url(),
                                         models::GP_NAME)
@@ -132,8 +131,7 @@ fn balancer_hq_end_to_end() {
 #[test]
 fn balancer_slurm_backend_end_to_end() {
     let eng = need_artifacts!();
-    let stack = start_live(eng, models::GP_NAME, "slurm", 2,
-                           &scenario(App::Gp), 5000.0, true)
+    let stack = start_live(eng, &[models::GP_NAME], "slurm", 2, 5000.0, true)
         .expect("live stack");
     let mut client = HttpModel::connect(&stack.balancer.url(),
                                         models::GP_NAME)
@@ -149,8 +147,7 @@ fn balancer_slurm_backend_end_to_end() {
 fn balancer_per_job_servers_retire() {
     // The paper's measured configuration: one evaluation per server.
     let eng = need_artifacts!();
-    let stack = start_live(eng, models::GP_NAME, "hq", 2,
-                           &scenario(App::Gp), 5000.0, false)
+    let stack = start_live(eng, &[models::GP_NAME], "hq", 2, 5000.0, false)
         .expect("live stack");
     let mut client = HttpModel::connect(&stack.balancer.url(),
                                         models::GP_NAME)
@@ -167,10 +164,39 @@ fn balancer_per_job_servers_retire() {
 }
 
 #[test]
+fn balancer_multi_model_real_models() {
+    // Two heterogeneous PJRT models behind one front door: contracts
+    // learned at registration, /Evaluate routed by name.
+    let eng = need_artifacts!();
+    let stack = start_live(eng, &[models::GP_NAME, models::EIGEN_SMALL_NAME],
+                           "hq", 2, 5000.0, true)
+        .expect("live stack");
+    let url = stack.balancer.url();
+    let cfg = Value::Obj(Default::default());
+
+    let mut gp = HttpModel::connect(&url, models::GP_NAME).expect("gp client");
+    let mut eig = HttpModel::connect(&url, models::EIGEN_SMALL_NAME)
+        .expect("eigen client");
+    for p in &lhs(3, 11) {
+        let out = gp.evaluate(&[p.to_vec()], &cfg).expect("gp evaluate");
+        assert_eq!(out[0].len(), 2);
+        assert_eq!(out[1].len(), 2);
+    }
+    let out = eig.evaluate(&[vec![42.0]], &cfg).expect("eigen evaluate");
+    assert_eq!(out[0].len(), 100);
+    // Contracts were learned per model, not from a static table.
+    assert_eq!(gp.input_sizes().expect("gp sizes"), vec![7]);
+    assert_eq!(eig.output_sizes().expect("eigen sizes"), vec![100, 1]);
+    // /Info aggregates both models.
+    let (_ver, names) = gp.info().expect("info");
+    assert!(names.contains(&models::GP_NAME.to_string()));
+    assert!(names.contains(&models::EIGEN_SMALL_NAME.to_string()));
+}
+
+#[test]
 fn balancer_concurrent_clients_fcfs() {
     let eng = need_artifacts!();
-    let stack = start_live(eng, models::GP_NAME, "hq", 3,
-                           &scenario(App::Gp), 5000.0, true)
+    let stack = start_live(eng, &[models::GP_NAME], "hq", 3, 5000.0, true)
         .expect("live stack");
     let url = stack.balancer.url();
     let threads: Vec<_> = (0..4)
