@@ -8,9 +8,16 @@
 //! * a multi-user mix with per-user fairness (Jain index over SLRs),
 //! * runtime-heteroskedastic families defeating uniform time requests,
 //! * an adaptive Bayesian-inversion-style policy whose batch sizes
-//!   depend on the results observed so far.
+//!   depend on the results observed so far,
 //!
-//! Run: `cargo run --release --example campaigns [-- --tasks 60]`
+//! and — via the `SchedulerCore` seam — that every policy runs
+//! unchanged against a *third* scheduler (`worksteal`, the partitioned
+//! work-stealing dispatcher) next to the paper's two.
+//!
+//! Illustrative companion to `uqsched campaign` (this examples/ tree
+//! sits outside the cargo package and is not built by it; run the same
+//! scenarios with e.g. `cargo run --release -- campaign --policy bursty
+//! --scheduler worksteal --tasks 60`).
 
 use uqsched::campaign::{
     self, AdaptiveBayes, CampaignConfig, CampaignResult, Family, FixedDepth,
@@ -69,10 +76,14 @@ fn main() -> anyhow::Result<()> {
     }
     let mut sub = FixedDepth::new(App::Gp, tasks, 4, seed);
     report(&campaign::run_hq(&cfg, &mut sub));
+    let mut sub = FixedDepth::new(App::Gp, tasks, 4, seed);
+    report(&campaign::run_worksteal(&cfg, &mut sub));
 
     println!("== bursty open-loop arrivals (Poisson bursts) ==");
     let mut sub = PoissonBurst::new(App::Gp, tasks, 2 * SEC, (1, 8), seed);
     report(&campaign::run_hq(&cfg, &mut sub));
+    let mut sub = PoissonBurst::new(App::Gp, tasks, 2 * SEC, (1, 8), seed);
+    report(&campaign::run_worksteal(&cfg, &mut sub));
 
     println!("== multi-user mix (two tenants, shared cluster) ==");
     let streams = vec![

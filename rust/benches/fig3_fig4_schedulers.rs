@@ -1,17 +1,22 @@
 //! Regenerates paper Figures 3 and 4: SLURM vs HQ boxplots of makespan /
 //! CPU time / scheduler overhead (Fig 3) and SLR (Fig 4) for the four
 //! applications at queue depths 2 and 10 — 100 evaluations per cell on
-//! the Hamilton8-profile sim plane.
+//! the Hamilton8-profile sim plane — plus a third `steal` series (the
+//! work-stealing scheduler behind the same `SchedulerCore` seam), the
+//! kind of policy ablation the pluggable scheduler API makes one-line.
 //!
 //! Also prints the paper's headline checks: overhead reduction factor
 //! (up to three orders of magnitude), GS2 mean-makespan reduction
 //! (paper: ~38%), and the eigen-100@2 speed-up (paper: ~3x).
 //!
-//! Output: ASCII panels + CSV under results/.
+//! Output: ASCII panels + CSV under results/.  Set
+//! `UQSCHED_FIG3_WORKSTEAL=0` to drop the extra series and regenerate
+//! the two-scheduler paper figures exactly.
 
 use std::path::Path;
 
-use uqsched::experiments::{run_naive_slurm, run_umbridge_hq, Config};
+use uqsched::experiments::{run_naive_slurm, run_umbridge_hq,
+                           run_umbridge_worksteal, Config};
 use uqsched::metrics::report::Panel;
 use uqsched::metrics::{BoxStats, Experiment};
 use uqsched::workload::App;
@@ -31,9 +36,13 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(100);
+    let with_worksteal = std::env::var("UQSCHED_FIG3_WORKSTEAL")
+        .map(|v| v != "0")
+        .unwrap_or(true);
 
     println!("=== Fig 3 + Fig 4 harness: 4 apps x {{2,10}} jobs x \
-              {{SLURM, HQ}} x {n_evals} evaluations ===\n");
+              {{SLURM, HQ{}}} x {n_evals} evaluations ===\n",
+             if with_worksteal { ", steal" } else { "" });
 
     let mut headline: Vec<String> = Vec::new();
 
@@ -63,6 +72,13 @@ fn main() {
             p_over.push(app.label(), "HQ", h.overheads_sec());
             p_slr.push(app.label(), "SLURM", s.slrs());
             p_slr.push(app.label(), "HQ", h.slrs());
+            if with_worksteal {
+                let w = run_umbridge_worksteal(&cfg);
+                p_makespan.push(app.label(), "steal", w.makespans_sec());
+                p_cpu.push(app.label(), "steal", w.cpus_sec());
+                p_over.push(app.label(), "steal", w.overheads_sec());
+                p_slr.push(app.label(), "steal", w.slrs());
+            }
 
             headline_checks(&mut headline, app, queue_depth, &s, &h);
         }

@@ -1,9 +1,10 @@
-//! Million-task scale benchmark for both scheduler cores.
+//! Million-task scale benchmark for all three scheduler cores.
 //!
-//! Drives the indexed `SlurmCore`/`HqCore` and their seed-semantics
-//! reference twins through synthetic task streams at several queue
-//! depths, printing tasks/s and peak resident map sizes and emitting
-//! `BENCH_scale.json` so the perf trajectory is tracked across PRs.
+//! Drives the indexed `SlurmCore`/`HqCore` (and their seed-semantics
+//! reference twins) plus the partitioned `WorkStealCore` through
+//! synthetic task streams at several queue depths, printing tasks/s and
+//! peak resident map sizes and emitting `BENCH_scale.json` so the perf
+//! trajectory is tracked across PRs.
 //!
 //! Run with:
 //!
@@ -33,9 +34,11 @@ use uqsched::clock::{Des, Micros, MS, SEC};
 use uqsched::cluster::{ClusterSpec, JobRequest, OverheadModel};
 use uqsched::workload::App;
 use uqsched::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer,
-                      ReferenceHqCore, TaskSpec};
+                      ReferenceHqCore, TaskCore, TaskSpec};
 use uqsched::json::Value;
-use uqsched::slurmlite::core::{Action, SlurmCore, Timer, USER_EXPERIMENT};
+use uqsched::sched::WorkStealCore;
+use uqsched::slurmlite::core::{Action, BatchCore, SlurmCore, Timer,
+                               USER_EXPERIMENT};
 use uqsched::slurmlite::ReferenceSlurmCore;
 
 /// One measurement row.
@@ -268,6 +271,24 @@ impl HqDriver for HqCore {
     }
 }
 
+impl HqDriver for WorkStealCore {
+    fn drv_submit(&mut self, t: Micros, tag: u64, out: &mut Vec<HqAction>) {
+        self.submit_task_into(t, hq_spec(tag), out);
+    }
+    fn drv_alloc_up(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        self.on_alloc_up_into(t, HQ_ALLOC_LIFE, 16, out);
+    }
+    fn drv_timer(&mut self, t: Micros, tm: HqTimer, out: &mut Vec<HqAction>) {
+        self.on_timer_into(t, tm, out);
+    }
+    fn drv_task_done(&mut self, t: Micros, id: u64, out: &mut Vec<HqAction>) {
+        self.on_task_done_into(t, id, out);
+    }
+    fn drv_resident(&self) -> usize {
+        self.resident_tasks()
+    }
+}
+
 impl HqDriver for ReferenceHqCore {
     fn drv_submit(&mut self, t: Micros, tag: u64, out: &mut Vec<HqAction>) {
         let (_, acts) = self.submit_task(t, hq_spec(tag));
@@ -289,6 +310,7 @@ impl HqDriver for ReferenceHqCore {
 
 fn run_hq<C: HqDriver>(
     core: &mut C,
+    core_label: &'static str,
     imp: &'static str,
     n: u64,
     depth: usize,
@@ -339,9 +361,9 @@ fn run_hq<C: HqDriver>(
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    assert_eq!(completed, n, "{imp} hq run incomplete");
+    assert_eq!(completed, n, "{imp} {core_label} run incomplete");
     Row {
-        core: "hq",
+        core: core_label,
         imp,
         tasks: n,
         depth,
@@ -415,6 +437,16 @@ fn campaign_adaptive(n: u64) -> Row {
     campaign_row("adaptive", n, res, t0.elapsed().as_secs_f64())
 }
 
+/// The bursty campaign again, end-to-end through the work-stealing
+/// stack: same arrival process, same 256-worker pool, third scheduler.
+fn campaign_worksteal(n: u64) -> Row {
+    let cfg = campaign_cfg();
+    let mut sub = PoissonBurst::new(App::Eigen100, n, 20 * MS, (1, 64), 42);
+    let t0 = Instant::now();
+    let res = campaign::run_worksteal(&cfg, &mut sub);
+    campaign_row("worksteal-bursty", n, res, t0.elapsed().as_secs_f64())
+}
+
 // ---------------------------------------------------------------------------
 
 fn env_u64(name: &str, default: u64) -> u64 {
@@ -442,11 +474,19 @@ fn slurm_naive(n: u64, depth: usize) -> Row {
 }
 
 fn hq_indexed(n: u64, depth: usize) -> Row {
-    run_hq(&mut HqCore::new(hq_cfg()), "indexed", n, depth)
+    run_hq(&mut HqCore::new(hq_cfg()), "hq", "indexed", n, depth)
 }
 
 fn hq_naive(n: u64, depth: usize) -> Row {
-    run_hq(&mut ReferenceHqCore::new(hq_cfg()), "naive", n, depth)
+    run_hq(&mut ReferenceHqCore::new(hq_cfg()), "hq", "naive", n, depth)
+}
+
+/// The third scheduler through the *same* generic driver: partitioned
+/// work stealing at the same workload and worker geometry as the HQ
+/// rows, so the two dispatch disciplines are directly comparable.
+fn worksteal_indexed(n: u64, depth: usize) -> Row {
+    run_hq(&mut WorkStealCore::new(hq_cfg()), "worksteal", "indexed", n,
+           depth)
 }
 
 fn main() {
@@ -482,15 +522,25 @@ fn main() {
     }
 
     // Scale-out: indexed cores only, up to the million-task target, at
-    // several queue depths (0 = everything submitted up front).
-    println!("-- scale-out (indexed cores) --");
-    let sizes: Vec<u64> = [250_000u64, 500_000, 1_000_000]
+    // several queue depths (0 = everything submitted up front).  The
+    // worksteal rows run the third scheduler through the same driver and
+    // workload as the hq rows.
+    println!("-- scale-out (indexed cores, all three schedulers) --");
+    let mut sizes: Vec<u64> = [250_000u64, 500_000, 1_000_000]
         .into_iter()
         .filter(|&s| s <= max_tasks)
         .collect();
+    if sizes.is_empty() {
+        // Smoke runs with a small SCALE_TASKS still cover every core.
+        sizes.push(max_tasks);
+    }
     for &n in &sizes {
         for depth in [8_192usize, 0] {
-            for r in [slurm_indexed(n, depth), hq_indexed(n, depth)] {
+            for r in [
+                slurm_indexed(n, depth),
+                hq_indexed(n, depth),
+                worksteal_indexed(n, depth),
+            ] {
                 r.print();
                 rows.push(r);
             }
@@ -500,10 +550,12 @@ fn main() {
     // Campaign mode: generalized workloads through the campaign plane.
     let campaign_tasks = env_u64("SCALE_CAMPAIGN_TASKS", 100_000);
     if campaign_tasks > 0 {
-        println!("-- campaign mode (bursty + adaptive, um-bridge/hq stack) --");
+        println!("-- campaign mode (bursty + adaptive on hq, bursty on \
+                  worksteal) --");
         for r in [
             campaign_bursty(campaign_tasks),
             campaign_adaptive(campaign_tasks),
+            campaign_worksteal(campaign_tasks),
         ] {
             r.print();
             rows.push(r);
@@ -544,6 +596,23 @@ fn main() {
                 _ => ("hq_1m_over_500k", Value::num(ratio)),
             });
         }
+    }
+
+    // Third-scheduler comparison: same workload, worker pool and driver
+    // as the hq rows, different dispatch discipline.
+    let hq_row = rows.iter().find(|r| {
+        r.core == "hq" && r.imp == "indexed" && r.depth == 8_192
+    });
+    let ws_row = rows.iter().find(|r| {
+        r.core == "worksteal" && r.imp == "indexed" && r.depth == 8_192
+    });
+    if let (Some(hq), Some(ws)) = (hq_row, ws_row) {
+        let ratio = ws.tasks_per_s / hq.tasks_per_s.max(1e-9);
+        println!(
+            "worksteal vs hq throughput at depth 8192 ({} tasks): {ratio:.2}x",
+            ws.tasks
+        );
+        summary.push(("worksteal_over_hq_depth8192", Value::num(ratio)));
     }
 
     let out_path = std::env::var("SCALE_OUT")

@@ -1,41 +1,42 @@
-//! The campaign drivers: one generic discrete-event loop per scheduler
-//! core, running any [`Submitter`] against `SlurmCore` (native or
-//! UM-Bridge flavoured) or `HqCore`.
+//! Campaign entry points: thin configuration adapters over the generic
+//! scheduler kernel.
 //!
-//! The drivers own every scheduler-specific mechanism so submitters stay
-//! scheduler-agnostic:
+//! Since the `sched` redesign there is **one** event loop —
+//! [`crate::sched::kernel::run`] — and this module only decides *which*
+//! [`SchedulerCore`](crate::sched::SchedulerCore) implementation a
+//! campaign runs against:
 //!
-//! * **SLURM path** — per-evaluation `sbatch` submission; the UM-Bridge
-//!   flavour adds the model-server start-up to each job and the
-//!   balancer's proxy latency to each submission (Appendix A).
-//! * **HQ path** — the UM-Bridge + HyperQueue stack: registration
-//!   pre-jobs, automatic allocation against the SLURM core, worker
-//!   expiry, and per-task dispatch.
+//! * [`run_slurm`] — [`SlurmSched`](crate::sched::SlurmSched): one plain
+//!   `sbatch` job per evaluation (native), or the UM-Bridge SLURM
+//!   backend (Appendix A: model-server start-up per job + balancer
+//!   proxy latency per submission).
+//! * [`run_hq`] — [`MetaStack`](crate::sched::MetaStack)`<HqCore>`: the
+//!   paper's UM-Bridge + HyperQueue stack (registration pre-jobs,
+//!   automatic allocation against the SLURM core, worker expiry,
+//!   per-task dispatch).
+//! * [`run_worksteal`] — `MetaStack<WorkStealCore>`: the same UM-Bridge
+//!   stack over the partitioned work-stealing dispatcher.
 //!
-//! With the [`FixedDepth`](super::submitter::FixedDepth) policy these
-//! loops reproduce the PR 1 experiment drivers *action-for-action* — the
-//! originals are preserved verbatim in `experiments::reference` and
-//! `tests/campaign_equiv.rs` pins the equivalence.
+//! With the [`FixedDepth`](super::submitter::FixedDepth) policy the
+//! SLURM and HQ paths reproduce the PR 1 experiment drivers
+//! *record-for-record* — the originals are preserved verbatim in
+//! `experiments::reference` and `tests/campaign_equiv.rs` pins the
+//! equivalence through the kernel.
 //!
-//! Event cost: every event is O(core transition) — the loops add O(1)
+//! Event cost: every event is O(core transition) — the kernel adds O(1)
 //! bookkeeping (two `HashMap` ops and a depth-trajectory update) per
 //! submission/completion, so campaign mode inherits the indexed cores'
 //! million-task scaling (see PERF.md).
 
-use std::collections::HashMap;
-
-use crate::clock::{Des, Micros, MS, SEC};
 use crate::cluster::{ClusterSpec, OverheadModel};
-use crate::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer, TaskSpec};
+use crate::hqlite::{AutoAllocConfig, HqCore};
 use crate::metrics::Experiment;
-use crate::slurmlite::core::{Action, SlurmCore, Timer, USER_EXPERIMENT};
+use crate::sched::{kernel, HqSched, MetaStack, SlurmSched, WorkStealCore,
+                   WorkStealSched};
 use crate::workload::{scenario, App};
 
-use super::metrics::{jain_fairness, CampaignMetrics, DepthTrack, UserTrack};
-use super::submitter::{Sink, Submission, Submitter};
-
-/// SLURM native log granularity (whole seconds; paper section V).
-const SLURM_LOG_GRAIN: Micros = SEC;
+use super::metrics::CampaignMetrics;
+use super::submitter::Submitter;
 
 /// Campaign-plane configuration: the cluster and scheduler geometry a
 /// campaign runs against (what the *system* looks like), as opposed to
@@ -73,6 +74,20 @@ impl CampaignConfig {
             hq_workers: queue_depth as u32,
         }
     }
+
+    /// The automatic-allocation settings this campaign implies for an
+    /// HQ-style meta-scheduler (allocation geometry from the primary
+    /// app's Table III row).
+    pub fn autoalloc(&self) -> AutoAllocConfig {
+        let scen = scenario(self.app);
+        AutoAllocConfig {
+            backlog: self.hq_backlog,
+            workers_per_alloc: 1,
+            max_worker_count: self.hq_workers,
+            alloc_request: scen.hq_alloc_request(),
+            dispatch_latency: self.overheads.hq_dispatch,
+        }
+    }
 }
 
 /// Which SLURM submission path a campaign uses.
@@ -92,45 +107,6 @@ pub struct CampaignResult {
     pub metrics: CampaignMetrics,
 }
 
-/// Campaign user -> scheduler user.  User 0 is the experiment user; the
-/// scheduler reserves user 1 for background load, so other campaign
-/// users shift past it (each stream gets its own submission quota).
-fn slurm_user(user: u32) -> u32 {
-    if user == 0 {
-        USER_EXPERIMENT
-    } else {
-        user + 1
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn submit_slurm(
-    t: Micros,
-    s: &Submission,
-    per_job_extra: Micros,
-    submit_extra: Micros,
-    core: &mut SlurmCore,
-    acts: &mut Vec<Action>,
-    durations: &mut HashMap<u64, Micros>,
-    users: &mut HashMap<u64, u32>,
-    depth: &mut DepthTrack,
-    submitted: &mut u64,
-) {
-    debug_assert!(s.tag != u64::MAX, "tag u64::MAX is reserved");
-    let dur = s.duration + per_job_extra;
-    let id = core.submit_into(
-        t + submit_extra,
-        slurm_user(s.user),
-        s.tag,
-        scenario(s.app).slurm_request(),
-        acts,
-    );
-    durations.insert(id, dur);
-    users.insert(id, s.user);
-    depth.submit(t);
-    *submitted += 1;
-}
-
 /// Run a campaign against the SLURM core.
 ///
 /// Returns once the submitter reports the campaign finished (or the
@@ -140,392 +116,29 @@ pub fn run_slurm(
     sub: &mut dyn Submitter,
     mode: SlurmMode,
 ) -> CampaignResult {
-    #[derive(Debug)]
-    enum Ev {
-        Timer(Timer),
-        Wake(u64),
-        Submit(Submission),
-        Finish(u64),
-    }
-
-    let (per_job_extra, submit_extra, label): (Micros, Micros, &str) =
-        match mode {
-            SlurmMode::Native => (0, 0, "SLURM"),
-            SlurmMode::UmBridge => {
-                (cfg.overheads.server_init, 50 * MS, "UM-Bridge SLURM")
-            }
-        };
-    let mut core =
-        SlurmCore::new(cfg.cluster.clone(), cfg.overheads.clone(), cfg.seed);
-    let mut des: Des<Ev> = Des::new();
-    let mut exp = Experiment::new(label);
-    let mut durations: HashMap<u64, Micros> = HashMap::new();
-    let mut users: HashMap<u64, u32> = HashMap::new();
-    let mut depth = DepthTrack::new();
-    let mut per_user = UserTrack::new();
-    let mut submitted: u64 = 0;
-    let mut completed: u64 = 0;
-
-    for a in core.bootstrap(0) {
-        if let Action::Timer(t, tm) = a {
-            des.schedule(t, Ev::Timer(tm));
-        }
-    }
-    let mut sink = Sink::new();
-    sub.start(&mut sink);
-    for s in sink.submissions.drain(..) {
-        des.schedule(0, Ev::Submit(s));
-    }
-    for (tw, tok) in sink.wakes.drain(..) {
-        des.schedule(tw, Ev::Wake(tok));
-    }
-
-    let mut guard: u64 = 0;
-    // One reusable action buffer for the whole run (see PERF.md).
-    let mut acts: Vec<Action> = Vec::new();
-    while let Some((t, ev)) = des.pop() {
-        guard += 1;
-        assert!(guard < 50_000_000, "runaway campaign");
-        acts.clear();
-        match ev {
-            Ev::Timer(tm) => core.on_timer_into(t, tm, &mut acts),
-            Ev::Wake(token) => {
-                sub.wake(t, token, &mut sink);
-                for s in sink.submissions.drain(..) {
-                    submit_slurm(
-                        t, &s, per_job_extra, submit_extra, &mut core,
-                        &mut acts, &mut durations, &mut users, &mut depth,
-                        &mut submitted,
-                    );
-                }
-                for (tw, tok) in sink.wakes.drain(..) {
-                    des.schedule(tw, Ev::Wake(tok));
-                }
-            }
-            Ev::Submit(s) => submit_slurm(
-                t, &s, per_job_extra, submit_extra, &mut core, &mut acts,
-                &mut durations, &mut users, &mut depth, &mut submitted,
-            ),
-            Ev::Finish(id) => core.on_finish_into(t, id, &mut acts),
-        }
-        for a in acts.drain(..) {
-            match a {
-                Action::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
-                Action::Launched { job, contention, .. } => {
-                    // Background jobs self-finish and are not in the map.
-                    if let Some(d) = durations.remove(&job) {
-                        let dd = (d as f64 * contention) as Micros;
-                        des.schedule(t + dd, Ev::Finish(job));
-                    }
-                }
-                Action::Completed { job, record } => {
-                    if record.tag != u64::MAX {
-                        completed += 1;
-                        let rec = record.quantised(SLURM_LOG_GRAIN);
-                        let user = users.remove(&job).unwrap_or(0);
-                        per_user.complete(user, &rec);
-                        depth.complete(t);
-                        exp.records.push(rec.clone());
-                        sub.completed(t, &rec, &mut sink);
-                        for s in sink.submissions.drain(..) {
-                            des.schedule(t, Ev::Submit(s));
-                        }
-                        for (tw, tok) in sink.wakes.drain(..) {
-                            des.schedule(tw, Ev::Wake(tok));
-                        }
-                    }
-                }
-                Action::TimedOut { .. } => {}
-            }
-        }
-        if sub.finished(completed) {
-            break;
-        }
-    }
-    exp.records.sort_by_key(|r| r.tag);
-    finish(exp, sub, label, submitted, completed, depth, per_user,
-           des.processed())
-}
-
-#[allow(clippy::too_many_arguments)]
-fn submit_hq(
-    t: Micros,
-    s: &Submission,
-    alloc_app: App,
-    server_init: Micros,
-    hq: &mut HqCore,
-    hq_acts: &mut Vec<HqAction>,
-    task_durations: &mut HashMap<u64, Micros>,
-    task_users: &mut HashMap<u64, u32>,
-    depth: &mut DepthTrack,
-    submitted: &mut u64,
-) {
-    debug_assert!(s.tag != u64::MAX, "tag u64::MAX is reserved");
-    let scen = scenario(s.app);
-    // Worker geometry follows the campaign's primary app: a task whose
-    // shape exceeds it would sit in the HQ queue forever (autoalloc
-    // cycling until the runaway guard).  Fail fast and explain instead.
-    let alloc = scenario(alloc_app);
-    assert!(
-        scen.cpus <= alloc.cpus && scen.hq_time_request <= alloc.hq_alloc_time,
-        "campaign submission '{}' (cores {}, time request {}) cannot fit \
-         the '{}' allocation geometry (cores {}, walltime {}); pick a \
-         CampaignConfig.app whose Table III row covers every submitted app",
-        s.app.label(),
-        scen.cpus,
-        scen.hq_time_request,
-        alloc_app.label(),
-        alloc.cpus,
-        alloc.hq_alloc_time,
-    );
-    let tid = hq.submit_task_into(
-        t,
-        TaskSpec {
-            tag: s.tag,
-            cores: scen.cpus,
-            time_request: scen.hq_time_request,
-            time_limit: scen.hq_time_limit + server_init,
-        },
-        hq_acts,
-    );
-    task_durations.insert(tid, s.duration + server_init);
-    task_users.insert(tid, s.user);
-    depth.submit(t);
-    *submitted += 1;
+    let mut core = SlurmSched::new(cfg, mode);
+    kernel::run(&mut core, sub)
 }
 
 /// Run a campaign against the UM-Bridge + HQ stack (tasks dispatched by
 /// the HQ core onto workers inside bulk allocations obtained from the
 /// SLURM core).
 pub fn run_hq(cfg: &CampaignConfig, sub: &mut dyn Submitter) -> CampaignResult {
-    #[derive(Debug)]
-    enum Ev {
-        Slurm(Timer),
-        Hq(HqTimer),
-        Wake(u64),
-        Submit(Submission),
-        RegSubmit,
-        TaskDone(u64),
-        SlurmFinish(u64),
-    }
-
-    let scen = scenario(cfg.app);
-    let mut slurm =
-        SlurmCore::new(cfg.cluster.clone(), cfg.overheads.clone(), cfg.seed);
-    let mut hq = HqCore::new(AutoAllocConfig {
-        backlog: cfg.hq_backlog,
-        workers_per_alloc: 1,
-        max_worker_count: cfg.hq_workers,
-        alloc_request: scen.hq_alloc_request(),
-        dispatch_latency: cfg.overheads.hq_dispatch,
-    });
-    let mut des: Des<Ev> = Des::new();
-    let mut exp = Experiment::new("HQ");
-
-    // alloc slurm-job id -> hq alloc tag
-    let mut alloc_jobs: HashMap<u64, u64> = HashMap::new();
-    let mut task_durations: HashMap<u64, Micros> = HashMap::new();
-    let mut task_users: HashMap<u64, u32> = HashMap::new();
-    let mut depth = DepthTrack::new();
-    let mut per_user = UserTrack::new();
-    let mut submitted: u64 = 0;
-    let mut completed: u64 = 0;
-
-    for a in slurm.bootstrap(0) {
-        if let Action::Timer(t, tm) = a {
-            des.schedule(t, Ev::Slurm(tm));
-        }
-    }
-    // Registration pre-jobs go first (the balancer's readiness checks),
-    // then the submitter seeds the campaign.
-    for _ in 0..cfg.registration_jobs {
-        des.schedule(0, Ev::RegSubmit);
-    }
-    let mut sink = Sink::new();
-    sub.start(&mut sink);
-    for s in sink.submissions.drain(..) {
-        des.schedule(0, Ev::Submit(s));
-    }
-    for (tw, tok) in sink.wakes.drain(..) {
-        des.schedule(tw, Ev::Wake(tok));
-    }
-
-    let mut guard: u64 = 0;
-    // Reusable action buffers: the cores append into `*_acts`; the
-    // routing loop swaps each into a batch buffer before interpreting,
-    // so interpretation can append follow-up actions without allocating.
-    let mut slurm_acts: Vec<Action> = Vec::new();
-    let mut hq_acts: Vec<HqAction> = Vec::new();
-    let mut slurm_batch: Vec<Action> = Vec::new();
-    let mut hq_batch: Vec<HqAction> = Vec::new();
-    while let Some((t, ev)) = des.pop() {
-        guard += 1;
-        assert!(guard < 50_000_000, "runaway campaign");
-        match ev {
-            Ev::Slurm(tm) => slurm.on_timer_into(t, tm, &mut slurm_acts),
-            Ev::Hq(tm) => hq.on_timer_into(t, tm, &mut hq_acts),
-            Ev::Wake(token) => {
-                sub.wake(t, token, &mut sink);
-                for s in sink.submissions.drain(..) {
-                    submit_hq(
-                        t, &s, cfg.app, cfg.overheads.server_init, &mut hq,
-                        &mut hq_acts, &mut task_durations, &mut task_users,
-                        &mut depth, &mut submitted,
-                    );
-                }
-                for (tw, tok) in sink.wakes.drain(..) {
-                    des.schedule(tw, Ev::Wake(tok));
-                }
-            }
-            Ev::Submit(s) => submit_hq(
-                t, &s, cfg.app, cfg.overheads.server_init, &mut hq,
-                &mut hq_acts, &mut task_durations, &mut task_users,
-                &mut depth, &mut submitted,
-            ),
-            Ev::RegSubmit => {
-                // Registration jobs: ~1 s of server init only; tagged
-                // with the reserved marker so completions route back
-                // here instead of into the records.
-                let tid = hq.submit_task_into(
-                    t,
-                    TaskSpec {
-                        tag: u64::MAX,
-                        cores: scen.cpus,
-                        time_request: scen.hq_time_request,
-                        time_limit: scen.hq_time_limit
-                            + cfg.overheads.server_init,
-                    },
-                    &mut hq_acts,
-                );
-                task_durations.insert(tid, cfg.overheads.server_init);
-                depth.submit(t);
-            }
-            Ev::TaskDone(tid) => hq.on_task_done_into(t, tid, &mut hq_acts),
-            Ev::SlurmFinish(id) => {
-                slurm.on_finish_into(t, id, &mut slurm_acts);
-                if alloc_jobs.remove(&id).is_some() {
-                    // Allocation ended: expire its worker so hqlite
-                    // requeues tasks and requests replacement capacity.
-                    hq.expire_workers_into(t, &mut hq_acts);
-                }
-            }
-        }
-
-        // Route until both action queues drain (they feed each other).
-        loop {
-            let mut progressed = false;
-            std::mem::swap(&mut slurm_acts, &mut slurm_batch);
-            for a in slurm_batch.drain(..) {
-                progressed = true;
-                match a {
-                    Action::Timer(tt, tm) => des.schedule(tt, Ev::Slurm(tm)),
-                    Action::Launched { job, .. } => {
-                        if alloc_jobs.contains_key(&job) {
-                            // Allocation is up: a worker registers for the
-                            // remaining allocation lifetime.
-                            hq.on_alloc_up_into(
-                                t,
-                                scen.hq_alloc_time,
-                                scen.cpus,
-                                &mut hq_acts,
-                            );
-                            // The allocation job ends at its time limit.
-                            des.schedule(
-                                t + scen.hq_alloc_time,
-                                Ev::SlurmFinish(job),
-                            );
-                        }
-                    }
-                    Action::Completed { .. } | Action::TimedOut { .. } => {}
-                }
-            }
-            std::mem::swap(&mut hq_acts, &mut hq_batch);
-            for a in hq_batch.drain(..) {
-                progressed = true;
-                match a {
-                    HqAction::SubmitAllocation { alloc_tag, req } => {
-                        let id = slurm.submit_into(
-                            t,
-                            USER_EXPERIMENT,
-                            u64::MAX - 1,
-                            req,
-                            &mut slurm_acts,
-                        );
-                        alloc_jobs.insert(id, alloc_tag);
-                    }
-                    HqAction::StartTask { task, .. } => {
-                        let dur = task_durations[&task];
-                        des.schedule(t + dur, Ev::TaskDone(task));
-                    }
-                    HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Hq(tm)),
-                    HqAction::TaskCompleted { task, record } => {
-                        // HQ logs at millisecond accuracy.
-                        let rec = record.quantised(MS);
-                        task_durations.remove(&task);
-                        depth.complete(t);
-                        if rec.tag == u64::MAX {
-                            // Registration pre-job: readiness check only,
-                            // excluded from the records.
-                            sub.registration_completed(t, &mut sink);
-                        } else {
-                            completed += 1;
-                            let user =
-                                task_users.remove(&task).unwrap_or(0);
-                            per_user.complete(user, &rec);
-                            exp.records.push(rec.clone());
-                            sub.completed(t, &rec, &mut sink);
-                        }
-                        for s in sink.submissions.drain(..) {
-                            des.schedule(t, Ev::Submit(s));
-                        }
-                        for (tw, tok) in sink.wakes.drain(..) {
-                            des.schedule(tw, Ev::Wake(tok));
-                        }
-                    }
-                    HqAction::KillTask { .. } => {}
-                }
-            }
-            if !progressed {
-                break;
-            }
-        }
-        if sub.finished(completed) {
-            break;
-        }
-    }
-    exp.records.sort_by_key(|r| r.tag);
-    finish(exp, sub, "HQ", submitted, completed, depth, per_user,
-           des.processed())
+    let mut core: HqSched =
+        MetaStack::new(cfg, HqCore::new(cfg.autoalloc()), "HQ");
+    kernel::run(&mut core, sub)
 }
 
-#[allow(clippy::too_many_arguments)]
-fn finish(
-    exp: Experiment,
+/// Run a campaign against the UM-Bridge + work-stealing stack (same
+/// allocation mechanics as [`run_hq`], dispatch via partitioned
+/// per-worker deques with stealing).
+pub fn run_worksteal(
+    cfg: &CampaignConfig,
     sub: &mut dyn Submitter,
-    scheduler: &str,
-    submitted: u64,
-    completed: u64,
-    depth: DepthTrack,
-    per_user: UserTrack,
-    des_events: u64,
 ) -> CampaignResult {
-    let per_user_stats = per_user.stats();
-    let fairness = jain_fairness(&per_user_stats);
-    let peak = depth.peak();
-    let metrics = CampaignMetrics {
-        policy: sub.label(),
-        scheduler: scheduler.to_string(),
-        submitted,
-        completed,
-        makespan: exp.makespan(),
-        time_to: CampaignMetrics::milestones(&exp),
-        depth_trajectory: depth.into_samples(),
-        peak_in_flight: peak,
-        per_user: per_user_stats,
-        fairness_jain: fairness,
-        des_events,
-    };
-    CampaignResult { experiment: exp, metrics }
+    let mut core: WorkStealSched =
+        MetaStack::new(cfg, WorkStealCore::new(cfg.autoalloc()), "worksteal");
+    kernel::run(&mut core, sub)
 }
 
 #[cfg(test)]
@@ -534,6 +147,7 @@ mod tests {
     use crate::campaign::submitter::{
         AdaptiveBayes, FixedDepth, PoissonBurst, UserMix, UserStream,
     };
+    use crate::clock::SEC;
 
     fn small_cfg(app: App, qd: usize) -> CampaignConfig {
         let mut c = CampaignConfig::paper(app, qd, 11);
@@ -544,7 +158,7 @@ mod tests {
     }
 
     #[test]
-    fn fixed_depth_campaign_completes_on_both_schedulers() {
+    fn fixed_depth_campaign_completes_on_all_schedulers() {
         let cfg = small_cfg(App::Eigen100, 2);
         let mut s1 = FixedDepth::new(App::Eigen100, 12, 2, cfg.seed);
         let r1 = run_slurm(&cfg, &mut s1, SlurmMode::Native);
@@ -560,6 +174,13 @@ mod tests {
         // Registration pre-jobs ride along in the trajectory peak.
         assert!(r2.metrics.peak_in_flight as u64 <= 2 + cfg.registration_jobs);
         assert_eq!(r2.metrics.scheduler, "HQ");
+
+        let mut s3 = FixedDepth::new(App::Eigen100, 12, 2, cfg.seed);
+        let r3 = run_worksteal(&cfg, &mut s3);
+        assert_eq!(r3.experiment.records.len(), 12);
+        assert_eq!(r3.metrics.completed, 12);
+        assert!(r3.metrics.peak_in_flight as u64 <= 2 + cfg.registration_jobs);
+        assert_eq!(r3.metrics.scheduler, "worksteal");
     }
 
     #[test]
@@ -637,5 +258,27 @@ mod tests {
         assert!(r.metrics.completed >= 8);
         assert_eq!(r.metrics.completed, r.metrics.submitted);
         assert!(s.rounds() >= 1);
+    }
+
+    #[test]
+    fn worksteal_matches_protocol_invariants() {
+        // The work-stealing stack honours the same campaign contract:
+        // every submission completes exactly once, times are ordered,
+        // and a bursty stream still drains.
+        let mut cfg = small_cfg(App::Gp, 2);
+        cfg.hq_backlog = 2;
+        cfg.hq_workers = 2;
+        cfg.registration_jobs = 0;
+        let mut s = PoissonBurst::new(App::Gp, 40, SEC, (2, 6), 7);
+        let r = run_worksteal(&cfg, &mut s);
+        assert_eq!(r.experiment.records.len(), 40);
+        let mut tags: Vec<u64> =
+            r.experiment.records.iter().map(|x| x.tag).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), 40, "no duplicated/lost evaluations");
+        for rec in &r.experiment.records {
+            assert!(rec.submit <= rec.start && rec.start <= rec.end);
+        }
     }
 }

@@ -14,23 +14,25 @@
 //!   (runtime-heteroskedastic task families), and [`AdaptiveBayes`]
 //!   (Bayesian-inversion-style feedback batches whose size depends on
 //!   completed results).
-//! * [`run_slurm`] / [`run_hq`] — generic discrete-event drivers running
-//!   any submitter against the SLURM core (native or UM-Bridge mode) or
-//!   the UM-Bridge + HQ stack.  `experiments::run_naive_slurm`,
-//!   `run_umbridge_slurm` and `run_umbridge_hq` are thin wrappers over
-//!   these.
+//! * [`run_slurm`] / [`run_hq`] / [`run_worksteal`] — thin config
+//!   adapters selecting a [`SchedulerCore`](crate::sched::SchedulerCore)
+//!   implementation (SLURM native/UM-Bridge, UM-Bridge + HQ, UM-Bridge +
+//!   work stealing) and handing it to the one generic event kernel in
+//!   [`crate::sched::kernel`].  `experiments::run_naive_slurm`,
+//!   `run_umbridge_slurm`, `run_umbridge_hq` and
+//!   `run_umbridge_worksteal` are thin wrappers over these.
 //! * [`CampaignMetrics`] — what only exists at the stream level:
 //!   time-to-Nth-result milestones, the queue-depth trajectory, per-user
 //!   fairness (Jain index over mean SLRs), serialised into the JSON
 //!   report alongside the per-job records.
 //!
 //! ```text
-//!   Submitter (what / when)          Driver (how)            Core (where)
-//!   ┌───────────────┐  Submission  ┌──────────────┐ submit ┌───────────┐
-//!   │ fixed-depth   │ ───────────> │  run_slurm / │ ─────> │ SlurmCore │
-//!   │ poisson-burst │  wake_at     │  run_hq      │ <───── │  / HqCore │
-//!   │ user-mix ...  │ <─────────── │  (DES loop)  │ action └───────────┘
-//!   └───────────────┘  completed   └──────────────┘
+//!   Submitter (what / when)          Kernel (how)            Core (where)
+//!   ┌───────────────┐  Submission  ┌──────────────┐ Event  ┌────────────┐
+//!   │ fixed-depth   │ ───────────> │ sched::      │ ─────> │ SlurmSched │
+//!   │ poisson-burst │  wake_at     │ kernel::run  │ <───── │ MetaStack< │
+//!   │ user-mix ...  │ <─────────── │  (DES loop)  │ Effect │ Hq|Steal > │
+//!   └───────────────┘  completed   └──────────────┘        └────────────┘
 //! ```
 //!
 //! See `docs/ARCHITECTURE.md` for the driver loop diagram and PERF.md
@@ -41,7 +43,8 @@ pub mod driver;
 pub mod metrics;
 pub mod submitter;
 
-pub use driver::{run_hq, run_slurm, CampaignConfig, CampaignResult, SlurmMode};
+pub use driver::{run_hq, run_slurm, run_worksteal, CampaignConfig,
+                 CampaignResult, SlurmMode};
 pub use metrics::{jain_fairness, CampaignMetrics, UserStats};
 pub use submitter::{
     AdaptiveBayes, Family, FixedDepth, HeteroFamilies, PoissonBurst, Sink,

@@ -7,11 +7,14 @@
 //! is issued whenever a job finishes.  The same seeded duration stream
 //! feeds every scheduler.
 //!
-//! Since PR 2 the entry points are thin wrappers over the generic
-//! campaign drivers ([`crate::campaign`]) with the
-//! [`FixedDepth`](crate::campaign::FixedDepth) submitter; the original
-//! hand-written loops are preserved in [`reference`] and
-//! `tests/campaign_equiv.rs` pins record-for-record equivalence.
+//! The entry points are thin wrappers over the campaign adapters
+//! ([`crate::campaign`]) with the
+//! [`FixedDepth`](crate::campaign::FixedDepth) submitter, which all
+//! route through the one generic scheduler kernel
+//! ([`crate::sched::kernel`]); the original hand-written loops are
+//! preserved in [`reference`] and `tests/campaign_equiv.rs` pins
+//! record-for-record equivalence.  [`run_umbridge_worksteal`] runs the
+//! same protocol against the third (work-stealing) scheduler.
 
 pub mod reference;
 
@@ -90,7 +93,16 @@ pub fn run_umbridge_hq(cfg: &Config) -> Experiment {
     campaign::run_hq(&cfg.campaign(), &mut sub).experiment
 }
 
-/// All three schedulers on one configuration.
+/// UM-Bridge + work stealing: the same bulk-allocation stack as
+/// [`run_umbridge_hq`], with tasks dispatched by the partitioned
+/// work-stealing core ([`crate::sched::WorkStealCore`]) instead of the
+/// central FCFS queue.
+pub fn run_umbridge_worksteal(cfg: &Config) -> Experiment {
+    let mut sub = cfg.fixed_depth();
+    campaign::run_worksteal(&cfg.campaign(), &mut sub).experiment
+}
+
+/// All three paper schedulers on one configuration.
 pub fn run_all(cfg: &Config) -> (Experiment, Experiment, Experiment) {
     (run_naive_slurm(cfg), run_umbridge_hq(cfg), run_umbridge_slurm(cfg))
 }
@@ -123,6 +135,27 @@ mod tests {
     fn hq_completes_all_evals() {
         let e = run_umbridge_hq(&small_cfg(App::Eigen100, 2));
         assert_eq!(e.records.len(), 12);
+    }
+
+    #[test]
+    fn worksteal_completes_all_evals_with_hq_class_overhead() {
+        // The work-stealing stack shares HQ's bulk-allocation mechanics,
+        // so once workers are up its per-task overhead must stay in HQ's
+        // class (dispatch-latency scale), far below SLURM's.
+        let cfg = small_cfg(App::Eigen5000, 2);
+        let w = run_umbridge_worksteal(&cfg);
+        assert_eq!(w.records.len(), 12);
+        let s = run_naive_slurm(&cfg);
+        let med = |mut v: Vec<f64>| {
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[v.len() / 2]
+        };
+        let s_over = med(s.overheads_sec());
+        let w_over = med(w.overheads_sec());
+        assert!(
+            s_over > w_over * 50.0,
+            "SLURM {s_over} vs worksteal {w_over} (want >=50x)"
+        );
     }
 
     #[test]

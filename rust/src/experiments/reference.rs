@@ -13,9 +13,11 @@
 use std::collections::HashMap;
 
 use crate::clock::{Des, Micros, MS, SEC};
-use crate::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer, TaskSpec};
+use crate::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer, TaskCore,
+                    TaskSpec};
 use crate::metrics::{Experiment, JobRecord};
-use crate::slurmlite::core::{Action, SlurmCore, Timer, USER_EXPERIMENT};
+use crate::slurmlite::core::{Action, BatchCore, SlurmCore, Timer,
+                             USER_EXPERIMENT};
 use crate::workload::{scenario, RuntimeModel};
 
 use super::Config;

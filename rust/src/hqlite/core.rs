@@ -24,8 +24,9 @@
 //! * Finished tasks are evicted from the hot map (the driver owns the
 //!   emitted `JobRecord`), so steady-state memory is bounded by in-flight
 //!   work.  Dead workers leave the worker map entirely.
-//! * Every transition appends into a caller-supplied action buffer
-//!   (`*_into` methods); allocating wrappers remain for low-rate callers.
+//! * Every transition appends into a caller-supplied action buffer (the
+//!   [`TaskCore`] trait's `*_into` methods); the allocating wrappers are
+//!   provided (default) trait methods for low-rate callers.
 
 use std::cmp::Reverse;
 use std::collections::{BTreeSet, BinaryHeap, HashMap, VecDeque};
@@ -96,7 +97,7 @@ pub enum HqAction {
     /// can route the eventual worker registration back).
     SubmitAllocation { alloc_tag: u64, req: JobRequest },
     /// Begin task execution on a worker: the driver runs the workload and
-    /// calls [`HqCore::on_task_done`] (sim: after the sampled duration).
+    /// calls [`TaskCore::on_task_done`] (sim: after the sampled duration).
     StartTask { task: TaskId, worker: WorkerId },
     /// Kill the task (exceeded its time limit).
     KillTask { task: TaskId },
@@ -112,6 +113,148 @@ pub enum HqTimer {
     Dispatched(TaskId),
     /// Task time-limit enforcement.
     Limit(TaskId),
+}
+
+/// The HyperQueue-style task-scheduler event surface: the pluggable seam
+/// between a meta-scheduler implementation and its driver.
+///
+/// [`HqCore`] (FCFS + failure frontier) and
+/// [`WorkStealCore`](crate::sched::WorkStealCore) (partitioned per-worker
+/// deques with stealing) both implement it, so the campaign stack
+/// ([`crate::sched::MetaStack`]) and the property/bench harnesses run
+/// generically over any implementation.
+///
+/// The `*_into` sink methods are the primary API (append into a
+/// caller-supplied buffer); the Vec-returning wrappers are provided
+/// methods, so the `let mut out = Vec::new()` boilerplate lives here
+/// exactly once.
+pub trait TaskCore {
+    /// Submit a task, appending actions into a reusable buffer.  May
+    /// trigger autoalloc and immediate dispatch.
+    fn submit_task_into(
+        &mut self,
+        t: Micros,
+        spec: TaskSpec,
+        out: &mut Vec<HqAction>,
+    ) -> TaskId;
+
+    /// Allocation arrival, appending actions into a reusable buffer.
+    fn on_alloc_up_into(
+        &mut self,
+        t: Micros,
+        time_limit: Micros,
+        cores_per_worker: u32,
+        out: &mut Vec<HqAction>,
+    );
+
+    /// Worker loss, appending actions into a reusable buffer.  Must not
+    /// lose tasks: everything Dispatched/Running on the worker requeues.
+    fn on_worker_lost_into(
+        &mut self,
+        t: Micros,
+        wid: WorkerId,
+        out: &mut Vec<HqAction>,
+    );
+
+    /// Task completion, appending actions into a reusable buffer.
+    fn on_task_done_into(&mut self, t: Micros, id: TaskId, out: &mut Vec<HqAction>);
+
+    /// Timer dispatch, appending actions into a reusable buffer.
+    fn on_timer_into(&mut self, t: Micros, timer: HqTimer, out: &mut Vec<HqAction>);
+
+    /// Worker expiry, appending actions into a reusable buffer.
+    fn expire_workers_into(&mut self, t: Micros, out: &mut Vec<HqAction>);
+
+    // ---- introspection ---------------------------------------------------
+
+    /// Tasks waiting for dispatch (excluding lazily-dropped stale entries).
+    fn pending_tasks(&self) -> usize;
+
+    /// Live workers.
+    fn live_workers(&self) -> usize;
+
+    /// Allocations submitted to the native scheduler, not yet up.
+    fn allocs_waiting(&self) -> u32;
+
+    /// Tasks resident in the hot map (bounded by in-flight work).
+    fn resident_tasks(&self) -> usize;
+
+    /// Tasks completed and evicted.
+    fn retired_count(&self) -> u64;
+
+    // ---- provided allocating wrappers -------------------------------------
+
+    /// Submit a task; may trigger autoalloc and immediate dispatch.
+    fn submit_task(&mut self, t: Micros, spec: TaskSpec) -> (TaskId, Vec<HqAction>) {
+        let mut out = Vec::new();
+        let id = self.submit_task_into(t, spec, &mut out);
+        (id, out)
+    }
+
+    /// A native allocation came up: start workers living until the
+    /// allocation's time limit.
+    fn on_alloc_up(
+        &mut self,
+        t: Micros,
+        time_limit: Micros,
+        cores_per_worker: u32,
+    ) -> Vec<HqAction> {
+        let mut out = Vec::new();
+        self.on_alloc_up_into(t, time_limit, cores_per_worker, &mut out);
+        out
+    }
+
+    /// A worker disappeared (allocation ended); requeue its tasks.
+    fn on_worker_lost(&mut self, t: Micros, wid: WorkerId) -> Vec<HqAction> {
+        let mut out = Vec::new();
+        self.on_worker_lost_into(t, wid, &mut out);
+        out
+    }
+
+    /// Driver reports a task's workload finished.
+    fn on_task_done(&mut self, t: Micros, id: TaskId) -> Vec<HqAction> {
+        let mut out = Vec::new();
+        self.on_task_done_into(t, id, &mut out);
+        out
+    }
+
+    /// Timer dispatch.
+    fn on_timer(&mut self, t: Micros, timer: HqTimer) -> Vec<HqAction> {
+        let mut out = Vec::new();
+        self.on_timer_into(t, timer, &mut out);
+        out
+    }
+
+    /// Expire workers whose allocation has ended (driver calls this when
+    /// the native allocation job finishes); requeues their tasks and
+    /// replaces capacity via autoalloc.
+    fn expire_workers(&mut self, t: Micros) -> Vec<HqAction> {
+        let mut out = Vec::new();
+        self.expire_workers_into(t, &mut out);
+        out
+    }
+}
+
+/// Pop every worker due at or before `t` off an expiry min-heap,
+/// skipping lazily-deleted entries (`alive` returns false for workers
+/// already gone).  Shared by the HQ and work-stealing cores — both keep
+/// `(expires_t, worker)` min-heaps with lazy deletion.
+pub(crate) fn drain_due_workers(
+    expiry: &mut BinaryHeap<Reverse<(Micros, WorkerId)>>,
+    t: Micros,
+    alive: impl Fn(WorkerId) -> bool,
+) -> Vec<WorkerId> {
+    let mut expired = Vec::new();
+    while let Some(&Reverse((et, wid))) = expiry.peek() {
+        if et > t {
+            break;
+        }
+        expiry.pop();
+        if alive(wid) {
+            expired.push(wid);
+        }
+    }
+    expired
 }
 
 /// The HQ server.
@@ -172,16 +315,10 @@ impl HqCore {
     fn queued(&self) -> usize {
         self.queue.len().saturating_sub(self.stale_in_queue)
     }
+}
 
-    /// Submit a task; may trigger autoalloc and immediate dispatch.
-    pub fn submit_task(&mut self, t: Micros, spec: TaskSpec) -> (TaskId, Vec<HqAction>) {
-        let mut out = Vec::new();
-        let id = self.submit_task_into(t, spec, &mut out);
-        (id, out)
-    }
-
-    /// Submit a task, appending actions into a reusable buffer.
-    pub fn submit_task_into(
+impl TaskCore for HqCore {
+    fn submit_task_into(
         &mut self,
         t: Micros,
         spec: TaskSpec,
@@ -209,19 +346,7 @@ impl HqCore {
 
     /// A native allocation came up: start `workers_per_alloc` workers,
     /// each living until the allocation's time limit.
-    pub fn on_alloc_up(
-        &mut self,
-        t: Micros,
-        time_limit: Micros,
-        cores_per_worker: u32,
-    ) -> Vec<HqAction> {
-        let mut out = Vec::new();
-        self.on_alloc_up_into(t, time_limit, cores_per_worker, &mut out);
-        out
-    }
-
-    /// Allocation arrival, appending actions into a reusable buffer.
-    pub fn on_alloc_up_into(
+    fn on_alloc_up_into(
         &mut self,
         t: Micros,
         time_limit: Micros,
@@ -252,15 +377,9 @@ impl HqCore {
         self.dispatch_into(t, out);
     }
 
-    /// A worker disappeared (allocation ended); requeue its tasks.
-    pub fn on_worker_lost(&mut self, t: Micros, wid: WorkerId) -> Vec<HqAction> {
-        let mut out = Vec::new();
-        self.on_worker_lost_into(t, wid, &mut out);
-        out
-    }
-
-    /// Worker loss, appending actions into a reusable buffer.
-    pub fn on_worker_lost_into(
+    /// A worker disappeared (allocation ended); requeue its tasks in
+    /// ascending task-id order (deterministic).
+    fn on_worker_lost_into(
         &mut self,
         t: Micros,
         wid: WorkerId,
@@ -286,26 +405,11 @@ impl HqCore {
         self.dispatch_into(t, out);
     }
 
-    /// Driver reports a task's workload finished.
-    pub fn on_task_done(&mut self, t: Micros, id: TaskId) -> Vec<HqAction> {
-        let mut out = Vec::new();
-        self.on_task_done_into(t, id, &mut out);
-        out
-    }
-
-    /// Task completion, appending actions into a reusable buffer.
-    pub fn on_task_done_into(&mut self, t: Micros, id: TaskId, out: &mut Vec<HqAction>) {
+    fn on_task_done_into(&mut self, t: Micros, id: TaskId, out: &mut Vec<HqAction>) {
         self.complete(t, id, false, out)
     }
 
-    pub fn on_timer(&mut self, t: Micros, timer: HqTimer) -> Vec<HqAction> {
-        let mut out = Vec::new();
-        self.on_timer_into(t, timer, &mut out);
-        out
-    }
-
-    /// Timer dispatch, appending actions into a reusable buffer.
-    pub fn on_timer_into(&mut self, t: Micros, timer: HqTimer, out: &mut Vec<HqAction>) {
+    fn on_timer_into(&mut self, t: Micros, timer: HqTimer, out: &mut Vec<HqAction>) {
         match timer {
             HqTimer::Dispatched(id) => {
                 let Some(task) = self.tasks.get_mut(&id) else { return };
@@ -332,6 +436,40 @@ impl HqCore {
         }
     }
 
+    /// Cost: O(expired log workers) — due entries pop off the expiry
+    /// heap instead of scanning everyone.
+    fn expire_workers_into(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        let expired = drain_due_workers(&mut self.expiry, t, |wid| {
+            self.workers.contains_key(&wid)
+        });
+        for wid in expired {
+            self.on_worker_lost_into(t, wid, out);
+        }
+    }
+
+    fn pending_tasks(&self) -> usize {
+        self.queued()
+    }
+
+    fn live_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn allocs_waiting(&self) -> u32 {
+        self.allocs_in_queue
+    }
+
+    fn resident_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    fn retired_count(&self) -> u64 {
+        self.retired
+    }
+}
+
+// Private transition helpers (shared by the trait impl above).
+impl HqCore {
     fn complete(&mut self, t: Micros, id: TaskId, truncated: bool, out: &mut Vec<HqAction>) {
         // Finished tasks are evicted, so a stale duplicate completion
         // (e.g. the driver's original done-timer firing after a requeue)
@@ -489,58 +627,6 @@ impl HqCore {
         }
         // Unschedulable tasks may need more allocations.
         self.autoalloc_into(out);
-    }
-
-    /// Expire workers whose allocation has ended (driver calls this when
-    /// the native allocation job finishes); requeues their tasks and
-    /// replaces capacity via autoalloc.  Cost: O(expired log workers) —
-    /// due entries pop off the expiry heap instead of scanning everyone.
-    pub fn expire_workers(&mut self, t: Micros) -> Vec<HqAction> {
-        let mut out = Vec::new();
-        self.expire_workers_into(t, &mut out);
-        out
-    }
-
-    /// Worker expiry, appending actions into a reusable buffer.
-    pub fn expire_workers_into(&mut self, t: Micros, out: &mut Vec<HqAction>) {
-        let mut expired: Vec<WorkerId> = Vec::new();
-        while let Some(&Reverse((et, wid))) = self.expiry.peek() {
-            if et > t {
-                break;
-            }
-            self.expiry.pop();
-            // Lazy deletion: the worker may already be gone.
-            if self.workers.contains_key(&wid) {
-                expired.push(wid);
-            }
-        }
-        for wid in expired {
-            self.on_worker_lost_into(t, wid, out);
-        }
-    }
-
-    // ---- introspection ---------------------------------------------------
-
-    pub fn pending_tasks(&self) -> usize {
-        self.queued()
-    }
-
-    pub fn live_workers(&self) -> usize {
-        self.workers.len()
-    }
-
-    pub fn allocs_waiting(&self) -> u32 {
-        self.allocs_in_queue
-    }
-
-    /// Tasks resident in the hot map (bounded by in-flight work).
-    pub fn resident_tasks(&self) -> usize {
-        self.tasks.len()
-    }
-
-    /// Tasks completed and evicted.
-    pub fn retired_count(&self) -> u64 {
-        self.retired
     }
 }
 

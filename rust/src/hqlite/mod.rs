@@ -18,6 +18,6 @@
 pub mod core;
 pub mod reference;
 
-pub use self::core::{AutoAllocConfig, HqAction, HqCore, HqTimer, TaskId,
-                     TaskSpec, WorkerId};
+pub use self::core::{AutoAllocConfig, HqAction, HqCore, HqTimer, TaskCore,
+                     TaskId, TaskSpec, WorkerId};
 pub use self::reference::ReferenceHqCore;

@@ -9,7 +9,11 @@
 //! regenerates every table and figure in the paper's evaluation.  On top
 //! of the paper's fixed protocol, the [`campaign`] plane generalizes
 //! *what gets submitted* — bursty, multi-user, heteroskedastic and
-//! adaptive workload streams against any scheduler core.
+//! adaptive workload streams — and the [`sched`] plane generalizes
+//! *what schedules them*: one [`SchedulerCore`](sched::SchedulerCore)
+//! trait, one generic event kernel, and pluggable scheduler
+//! implementations (SLURM, UM-Bridge + HyperQueue, and a partitioned
+//! work-stealing variant).
 //!
 //! See README.md, docs/ARCHITECTURE.md and DESIGN.md for the
 //! architecture and the experiment index.
@@ -27,6 +31,7 @@ pub mod logging;
 pub mod metrics;
 pub mod models;
 pub mod runtime;
+pub mod sched;
 pub mod slurmlite;
 pub mod umbridge;
 pub mod util;

@@ -56,7 +56,7 @@ fn main() -> Result<()> {
                  experiment --app gs2|GP|eigen-100|eigen-5000 [--queue 2]\n\
                             [--evals 100] [--seed 1]\n\
                  campaign   --policy fixed|bursty|mix|hetero|adaptive\n\
-                            --sched slurm|umbridge-slurm|hq\n\
+                            --scheduler slurm|umbridge-slurm|hq|worksteal\n\
                             [--app gs2] [--tasks 100] [--depth 2] [--seed 1]\n\
                             [--interarrival 2s] [--burst-min 1] [--burst-max 8]\n\
                             [--users gp:50:2,eigen-100:50:2] [--sigmas 0,0.8]\n\
@@ -235,7 +235,11 @@ fn campaign_cmd(args: &Args) -> Result<()> {
     let app = App::parse(&args.str_or("app", "gs2"))
         .ok_or_else(|| anyhow!("unknown --app"))?;
     let policy = args.str_or("policy", "fixed");
-    let sched = args.str_or("sched", "hq");
+    // `--scheduler` is the canonical spelling; `--sched` stays accepted.
+    let sched = args
+        .opt("scheduler")
+        .map(str::to_string)
+        .unwrap_or_else(|| args.str_or("sched", "hq"));
     let tasks = args.u64_or("tasks", 100)?;
     let depth = args.usize_or("depth", 2)?;
     let seed = args.u64_or("seed", 1)?;
@@ -302,6 +306,7 @@ fn campaign_cmd(args: &Args) -> Result<()> {
             campaign::run_slurm(&cfg, sub.as_mut(), SlurmMode::UmBridge)
         }
         "hq" => campaign::run_hq(&cfg, sub.as_mut()),
+        "worksteal" => campaign::run_worksteal(&cfg, sub.as_mut()),
         other => bail!("unknown scheduler '{other}'"),
     };
 

@@ -1,0 +1,202 @@
+//! The generic campaign event kernel: one event heap, one timer wheel,
+//! one drain loop for every [`SchedulerCore`].
+//!
+//! [`run`] replaces the two hand-duplicated PR 2 driver bodies
+//! (`campaign::run_slurm` / `run_hq`, themselves descendants of the
+//! PR 1 experiment loops): it owns the DES, the driver-side duration and
+//! user maps, the depth trajectory, the per-user accumulators, and the
+//! submitter callbacks — everything scheduler-agnostic — while each
+//! [`SchedulerCore`] impl owns everything scheduler-specific.
+//!
+//! # Event flow
+//!
+//! One iteration: pop the next `(t, event)`; feed it to the core (an
+//! allocation-lean `*_into` transition appending into one reusable
+//! effect buffer); interpret the effects in order — set-timer re-enters
+//! the heap, start schedules the work-done event after the driver-owned
+//! duration, finish classifies/quantises the record and notifies the
+//! submitter, whose sink drains back into the heap.  Stop when the
+//! submitter reports the campaign finished.
+//!
+//! # Cost
+//!
+//! Per event: O(core transition) + O(log heap) + O(1) kernel
+//! bookkeeping (two hash-map ops and a depth-trajectory update), so
+//! campaigns inherit the indexed cores' million-task scaling (PERF.md).
+//! The effect buffer and the per-core action scratch buffers are reused
+//! across the whole run.
+//!
+//! # Equivalence
+//!
+//! For single-submission events (the paper's `FixedDepth` protocol) the
+//! kernel's DES schedule order is *identical* to the PR 1/PR 2 loops —
+//! `tests/campaign_equiv.rs` pins the records bit-for-bit against
+//! `experiments::reference`.  The only divergence is tie-breaking when
+//! one wake emits several submissions (bursty/adaptive policies): the
+//! kernel routes each submission's follow-up work as it is submitted,
+//! where the old `run_hq` batched the routing — both are valid schedules
+//! of the same virtual-time events, and those policies are pinned by
+//! seed-determinism tests instead.
+
+use std::collections::HashMap;
+
+use crate::campaign::driver::CampaignResult;
+use crate::campaign::metrics::{jain_fairness, CampaignMetrics, DepthTrack,
+                               UserTrack};
+use crate::campaign::submitter::{Sink, Submission, Submitter};
+use crate::clock::{Des, Micros};
+use crate::metrics::Experiment;
+
+use super::{Completion, Effect, SchedulerCore};
+
+/// Kernel-level DES events: everything scheduler-agnostic.  Core timers
+/// ride along as the core's own associated timer type.
+#[derive(Debug)]
+enum Ev<I, T> {
+    /// A core timer elapsed.
+    Timer(T),
+    /// A submitter wake requested via `Sink::wake_at`.
+    Wake(u64),
+    /// A deferred submission (emitted from a completion callback).
+    Submit(Submission),
+    /// The sampled workload duration of `id` elapsed.
+    WorkDone(I),
+}
+
+/// Drain a submitter sink into the DES at time `t`: submissions become
+/// deferred `Submit` events, wakes schedule at their requested times.
+fn drain_sink<I, T>(sink: &mut Sink, des: &mut Des<Ev<I, T>>, t: Micros) {
+    for s in sink.submissions.drain(..) {
+        des.schedule(t, Ev::Submit(s));
+    }
+    for (tw, tok) in sink.wakes.drain(..) {
+        des.schedule(tw, Ev::Wake(tok));
+    }
+}
+
+/// Run a campaign: any [`Submitter`] against any [`SchedulerCore`].
+///
+/// Returns once the submitter reports the campaign finished (or the
+/// event queue drains, whichever comes first).
+pub fn run<S: SchedulerCore>(
+    core: &mut S,
+    sub: &mut dyn Submitter,
+) -> CampaignResult {
+    let mut des: Des<Ev<S::Id, S::Timer>> = Des::new();
+    let mut exp = Experiment::new(core.label());
+    let grain = core.log_grain();
+
+    // Driver-owned workload state: durations live from submission to
+    // completion (work can restart after a lost worker), user labels
+    // from submission to completion.  Both maps hold in-flight work only.
+    let mut durations: HashMap<S::Id, Micros> = HashMap::new();
+    let mut users: HashMap<S::Id, u32> = HashMap::new();
+    let mut depth = DepthTrack::new();
+    let mut per_user = UserTrack::new();
+    let mut submitted: u64 = 0;
+    let mut completed: u64 = 0;
+
+    // One reusable effect buffer for the whole run (see PERF.md).
+    let mut effects: Vec<Effect<S::Id, S::Timer>> = Vec::new();
+    core.bootstrap_into(0, &mut effects);
+    for e in effects.drain(..) {
+        match e {
+            Effect::SetTimer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+            Effect::Queued => depth.submit(0),
+            _ => {}
+        }
+    }
+
+    let mut sink = Sink::new();
+    sub.start(&mut sink);
+    drain_sink(&mut sink, &mut des, 0);
+
+    let mut guard: u64 = 0;
+    while let Some((t, ev)) = des.pop() {
+        guard += 1;
+        assert!(guard < 50_000_000, "runaway campaign");
+        effects.clear();
+        match ev {
+            Ev::Timer(tm) => core.on_timer_into(t, tm, &mut effects),
+            Ev::Wake(token) => {
+                sub.wake(t, token, &mut sink);
+                for s in sink.submissions.drain(..) {
+                    let (id, dur) = core.submit_into(t, &s, &mut effects);
+                    durations.insert(id, dur);
+                    users.insert(id, s.user);
+                    depth.submit(t);
+                    submitted += 1;
+                }
+                for (tw, tok) in sink.wakes.drain(..) {
+                    des.schedule(tw, Ev::Wake(tok));
+                }
+            }
+            Ev::Submit(s) => {
+                let (id, dur) = core.submit_into(t, &s, &mut effects);
+                durations.insert(id, dur);
+                users.insert(id, s.user);
+                depth.submit(t);
+                submitted += 1;
+            }
+            Ev::WorkDone(id) => core.on_work_done_into(t, id, &mut effects),
+        }
+        for e in effects.drain(..) {
+            match e {
+                Effect::SetTimer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                Effect::Start { id, contention } => {
+                    // Work the kernel never submitted (background jobs)
+                    // finishes itself inside the core.
+                    if let Some(&d) = durations.get(&id) {
+                        let dd = (d as f64 * contention) as Micros;
+                        des.schedule(t + dd, Ev::WorkDone(id));
+                    }
+                }
+                Effect::Queued => depth.submit(t),
+                Effect::Retire { .. } => {}
+                Effect::Finish { id, record } => {
+                    durations.remove(&id);
+                    match core.classify(&record) {
+                        Completion::Background => {}
+                        Completion::Registration => {
+                            depth.complete(t);
+                            sub.registration_completed(t, &mut sink);
+                            drain_sink(&mut sink, &mut des, t);
+                        }
+                        Completion::Evaluation => {
+                            completed += 1;
+                            let rec = record.quantised(grain);
+                            let user = users.remove(&id).unwrap_or(0);
+                            per_user.complete(user, &rec);
+                            depth.complete(t);
+                            exp.records.push(rec.clone());
+                            sub.completed(t, &rec, &mut sink);
+                            drain_sink(&mut sink, &mut des, t);
+                        }
+                    }
+                }
+            }
+        }
+        if sub.finished(completed) {
+            break;
+        }
+    }
+    exp.records.sort_by_key(|r| r.tag);
+
+    let per_user_stats = per_user.stats();
+    let fairness = jain_fairness(&per_user_stats);
+    let peak = depth.peak();
+    let metrics = CampaignMetrics {
+        policy: sub.label(),
+        scheduler: core.label().to_string(),
+        submitted,
+        completed,
+        makespan: exp.makespan(),
+        time_to: CampaignMetrics::milestones(&exp),
+        depth_trajectory: depth.into_samples(),
+        peak_in_flight: peak,
+        per_user: per_user_stats,
+        fairness_jain: fairness,
+        des_events: des.processed(),
+    };
+    CampaignResult { experiment: exp, metrics }
+}

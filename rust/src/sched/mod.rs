@@ -1,0 +1,186 @@
+//! One scheduler API: the [`SchedulerCore`] trait, its shared
+//! [`Effect`] vocabulary, and the single generic event kernel
+//! ([`kernel::run`]) every campaign runs through.
+//!
+//! The paper's central claim is scheduler-agnostic — the same UQ
+//! workload runs against naive SLURM or UM-Bridge + HyperQueue and only
+//! the scheduling layer changes.  Before this module the codebase
+//! hard-coded exactly two schedulers behind divergent APIs
+//! (`Action`/`HqAction`, `Timer`/`HqTimer`, `JobId`/`TaskId`) and two
+//! hand-duplicated event loops.  Now there is one seam:
+//!
+//! ```text
+//!   Submitter (what / when)      kernel::run<S>            SchedulerCore impls
+//!   ┌───────────────┐ Submission ┌─────────────┐ Event   ┌──────────────────────┐
+//!   │ fixed-depth   │ ─────────> │ one event   │ ──────> │ SlurmSched           │
+//!   │ poisson-burst │  wake_at   │ heap, one   │         │   (SlurmCore)        │
+//!   │ user-mix ...  │ <───────── │ drain loop  │ <────── │ MetaStack<HqCore>    │
+//!   └───────────────┘ completed  └─────────────┘ Effect  │ MetaStack<WorkSteal> │
+//!                                                        └──────────────────────┘
+//! ```
+//!
+//! * **Events** flow kernel → core as trait-method calls: `submit`,
+//!   `cancel`, `work-done`, `timer`, `capacity-change` — each an
+//!   allocation-lean `*_into` sink method.
+//! * **Effects** flow core → kernel in a caller-supplied buffer:
+//!   set-timer, start, finish, retire.  Per-core id and timer types are
+//!   zero-cost associated types, so `SlurmSched` keeps its `JobId`s and
+//!   the HQ-style stacks keep their `TaskId`s with no tagging overhead.
+//! * A **new scheduler costs one `impl`**, not a third copy of the
+//!   driver: [`WorkStealCore`] (partitioned per-worker deques with
+//!   stealing) plugs in behind [`hqlite::TaskCore`](crate::hqlite::TaskCore)
+//!   and is reachable end-to-end from `uqsched campaign --scheduler
+//!   worksteal`, the metrics pipeline and the scale bench.
+//!
+//! Equivalence: `tests/campaign_equiv.rs` pins the kernel + adapters
+//! record-for-record to the hand-written PR 1 loops preserved in
+//! `experiments::reference`, for every app and both paper schedulers.
+
+pub mod kernel;
+pub mod slurm;
+pub mod stack;
+pub mod worksteal;
+
+use std::fmt::Debug;
+use std::hash::Hash;
+
+use crate::campaign::submitter::Submission;
+use crate::clock::Micros;
+use crate::metrics::JobRecord;
+
+pub use kernel::run;
+pub use slurm::SlurmSched;
+pub use stack::{HqSched, MetaStack, StackTimer, WorkStealSched};
+pub use worksteal::WorkStealCore;
+
+/// What the kernel must do in response to a core transition — the
+/// unified action vocabulary shared by every scheduler.
+#[derive(Clone, Debug)]
+pub enum Effect<I, T> {
+    /// Re-invoke the core's `on_timer_into` at this absolute time.
+    SetTimer(Micros, T),
+    /// The submitted work began executing: the kernel schedules
+    /// `on_work_done_into` after the driver-owned duration, inflated by
+    /// `contention` (1.0 where the scheduler models no co-location).
+    /// Work the kernel did not submit (background jobs) is ignored; work
+    /// may start more than once (requeue after a lost worker).
+    Start { id: I, contention: f64 },
+    /// Terminal record for a unit of work.  The kernel classifies it via
+    /// [`SchedulerCore::classify`] and quantises times to the core's
+    /// [`log_grain`](SchedulerCore::log_grain).
+    Finish { id: I, record: JobRecord },
+    /// The work was forcibly stopped (time limit).  Informational — the
+    /// matching [`Effect::Finish`] carries the truncated record.
+    Retire { id: I },
+    /// Internal (core-originated) work entered the stream — depth
+    /// tracking only.  Used by the HQ stack's registration pre-jobs.
+    Queued,
+}
+
+/// How the kernel should account a [`Effect::Finish`] record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Completion {
+    /// A campaign evaluation: counted, recorded, reported to the
+    /// submitter.
+    Evaluation,
+    /// A registration pre-job (UM-Bridge readiness check): leaves the
+    /// depth trajectory and pings `Submitter::registration_completed`,
+    /// but is excluded from the records.
+    Registration,
+    /// Scheduler-internal work (background load): ignored.
+    Background,
+}
+
+/// External capacity events a driver can inject (the campaign kernel
+/// never generates these itself — capacity churn on the paper paths is
+/// core-internal).  `tests/scheduler_props.rs` drives worker loss
+/// through this seam mid-campaign; a live elastic driver would route
+/// node failures the same way.
+#[derive(Clone, Copy, Debug)]
+pub enum CapacityChange {
+    /// A worker disappeared out from under the scheduler.
+    WorkerLost(u64),
+}
+
+/// A pluggable scheduler: everything the generic campaign kernel needs,
+/// with per-core id/timer types as zero-cost associated types.
+///
+/// Implementations: [`SlurmSched`] (native or UM-Bridge SLURM),
+/// [`MetaStack`] (UM-Bridge + a [`TaskCore`](crate::hqlite::TaskCore)
+/// meta-scheduler — [`HqCore`](crate::hqlite::HqCore) or
+/// [`WorkStealCore`]).
+pub trait SchedulerCore {
+    /// Unit-of-work id (SLURM `JobId`, HQ `TaskId`).
+    type Id: Copy + Eq + Hash + Debug;
+    /// Core timer payload delivered back through `on_timer_into`.
+    type Timer: Debug;
+
+    /// Scheduler label for reports ("SLURM", "HQ", "worksteal", ...).
+    fn label(&self) -> &'static str;
+
+    /// Log granularity applied to emitted records (paper section V:
+    /// SLURM logs whole seconds, HQ milliseconds).
+    fn log_grain(&self) -> Micros;
+
+    /// Kick off periodic timers (and any registration pre-work).  Called
+    /// once before the event loop starts.
+    fn bootstrap_into(
+        &mut self,
+        t: Micros,
+        out: &mut Vec<Effect<Self::Id, Self::Timer>>,
+    );
+
+    /// Submit one evaluation.  Returns the work id plus the
+    /// driver-owned workload duration (the submission's compute time
+    /// plus any per-job overhead this scheduler adds, e.g. model-server
+    /// init); the kernel schedules `on_work_done_into` that long after
+    /// the matching [`Effect::Start`].
+    fn submit_into(
+        &mut self,
+        t: Micros,
+        s: &Submission,
+        out: &mut Vec<Effect<Self::Id, Self::Timer>>,
+    ) -> (Self::Id, Micros);
+
+    /// Cancel a unit of work.  Default: unsupported, no-op (HyperQueue
+    /// exposes no per-task cancel on this path).
+    fn cancel_into(
+        &mut self,
+        _t: Micros,
+        _id: Self::Id,
+        _out: &mut Vec<Effect<Self::Id, Self::Timer>>,
+    ) {
+    }
+
+    /// A core timer elapsed.
+    fn on_timer_into(
+        &mut self,
+        t: Micros,
+        timer: Self::Timer,
+        out: &mut Vec<Effect<Self::Id, Self::Timer>>,
+    );
+
+    /// The workload of `id` finished (scheduled by the kernel after
+    /// [`Effect::Start`]).
+    fn on_work_done_into(
+        &mut self,
+        t: Micros,
+        id: Self::Id,
+        out: &mut Vec<Effect<Self::Id, Self::Timer>>,
+    );
+
+    /// External capacity change.  Default: no-op (cores without an
+    /// elastic worker pool).
+    fn on_capacity_change_into(
+        &mut self,
+        _t: Micros,
+        _change: CapacityChange,
+        _out: &mut Vec<Effect<Self::Id, Self::Timer>>,
+    ) {
+    }
+
+    /// Classify a terminal record (per-core: tag `u64::MAX` means
+    /// background load under SLURM but a registration pre-job on the HQ
+    /// stack).
+    fn classify(&self, record: &JobRecord) -> Completion;
+}

@@ -1,0 +1,167 @@
+//! [`SlurmSched`]: the paper's SLURM paths (native and UM-Bridge)
+//! behind the unified [`SchedulerCore`] seam.
+//!
+//! A thin translation layer over [`SlurmCore`]: slurmlite `Action`s map
+//! 1:1 onto [`Effect`]s (`Timer` → set-timer, `Launched` → start,
+//! `Completed` → finish, `TimedOut` → retire), so the adapter adds one
+//! reusable scratch buffer and zero per-event allocation.  The
+//! UM-Bridge flavour folds the model-server start-up into each job's
+//! duration and the balancer's proxy latency into each submission
+//! (Appendix A) — exactly what the old `run_slurm` driver hard-coded.
+
+use crate::campaign::driver::{CampaignConfig, SlurmMode};
+use crate::campaign::submitter::Submission;
+use crate::clock::{Micros, MS, SEC};
+use crate::metrics::JobRecord;
+use crate::slurmlite::core::{Action, BatchCore, JobId, SlurmCore, Timer,
+                             USER_EXPERIMENT};
+use crate::workload::scenario;
+
+use super::{Completion, Effect, SchedulerCore};
+
+/// SLURM native log granularity (whole seconds; paper section V).
+const SLURM_LOG_GRAIN: Micros = SEC;
+
+/// Campaign user -> scheduler user.  User 0 is the experiment user; the
+/// scheduler reserves user 1 for background load, so other campaign
+/// users shift past it (each stream gets its own submission quota).
+pub(crate) fn slurm_user(user: u32) -> u32 {
+    if user == 0 {
+        USER_EXPERIMENT
+    } else {
+        user + 1
+    }
+}
+
+/// The SLURM scheduler (native `sbatch`-per-evaluation, or the
+/// UM-Bridge SLURM backend) as a [`SchedulerCore`].
+pub struct SlurmSched {
+    core: SlurmCore,
+    label: &'static str,
+    /// Extra workload duration per job (model-server init, UM-Bridge).
+    per_job_extra: Micros,
+    /// Extra submission latency (balancer proxy, UM-Bridge).
+    submit_extra: Micros,
+    /// Reusable action scratch, translated into effects per call.
+    acts: Vec<Action>,
+}
+
+impl SlurmSched {
+    pub fn new(cfg: &CampaignConfig, mode: SlurmMode) -> SlurmSched {
+        let (per_job_extra, submit_extra, label): (Micros, Micros, &str) =
+            match mode {
+                SlurmMode::Native => (0, 0, "SLURM"),
+                SlurmMode::UmBridge => {
+                    (cfg.overheads.server_init, 50 * MS, "UM-Bridge SLURM")
+                }
+            };
+        SlurmSched {
+            core: SlurmCore::new(
+                cfg.cluster.clone(),
+                cfg.overheads.clone(),
+                cfg.seed,
+            ),
+            label,
+            per_job_extra,
+            submit_extra,
+            acts: Vec::new(),
+        }
+    }
+
+    /// Translate the scratch actions into effects, in order (the kernel
+    /// interprets effects sequentially, so DES schedule order is
+    /// preserved exactly).
+    fn flush(&mut self, out: &mut Vec<Effect<JobId, Timer>>) {
+        for a in self.acts.drain(..) {
+            out.push(match a {
+                Action::Timer(tt, tm) => Effect::SetTimer(tt, tm),
+                Action::Launched { job, contention, .. } => {
+                    Effect::Start { id: job, contention }
+                }
+                Action::TimedOut { job } => Effect::Retire { id: job },
+                Action::Completed { job, record } => {
+                    Effect::Finish { id: job, record }
+                }
+            });
+        }
+    }
+}
+
+impl SchedulerCore for SlurmSched {
+    type Id = JobId;
+    type Timer = Timer;
+
+    fn label(&self) -> &'static str {
+        self.label
+    }
+
+    fn log_grain(&self) -> Micros {
+        SLURM_LOG_GRAIN
+    }
+
+    fn bootstrap_into(
+        &mut self,
+        t: Micros,
+        out: &mut Vec<Effect<JobId, Timer>>,
+    ) {
+        self.acts = self.core.bootstrap(t);
+        self.flush(out);
+    }
+
+    fn submit_into(
+        &mut self,
+        t: Micros,
+        s: &Submission,
+        out: &mut Vec<Effect<JobId, Timer>>,
+    ) -> (JobId, Micros) {
+        debug_assert!(s.tag != u64::MAX, "tag u64::MAX is reserved");
+        let id = self.core.submit_into(
+            t + self.submit_extra,
+            slurm_user(s.user),
+            s.tag,
+            scenario(s.app).slurm_request(),
+            &mut self.acts,
+        );
+        self.flush(out);
+        (id, s.duration + self.per_job_extra)
+    }
+
+    fn cancel_into(
+        &mut self,
+        t: Micros,
+        id: JobId,
+        out: &mut Vec<Effect<JobId, Timer>>,
+    ) {
+        self.core.cancel_into(t, id, &mut self.acts);
+        self.flush(out);
+    }
+
+    fn on_timer_into(
+        &mut self,
+        t: Micros,
+        timer: Timer,
+        out: &mut Vec<Effect<JobId, Timer>>,
+    ) {
+        self.core.on_timer_into(t, timer, &mut self.acts);
+        self.flush(out);
+    }
+
+    fn on_work_done_into(
+        &mut self,
+        t: Micros,
+        id: JobId,
+        out: &mut Vec<Effect<JobId, Timer>>,
+    ) {
+        self.core.on_finish_into(t, id, &mut self.acts);
+        self.flush(out);
+    }
+
+    fn classify(&self, record: &JobRecord) -> Completion {
+        // Tag u64::MAX marks the core's own background load.
+        if record.tag == u64::MAX {
+            Completion::Background
+        } else {
+            Completion::Evaluation
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! [`MetaStack`]: the UM-Bridge + meta-scheduler stack (tasks dispatched
+//! by a [`TaskCore`] onto workers inside bulk allocations obtained from
+//! the SLURM core) behind the unified [`SchedulerCore`] seam.
+//!
+//! The stack owns everything the old `run_hq` driver hard-coded:
+//! registration pre-jobs (reserved tag, excluded from records),
+//! allocation submission to the SLURM core, worker registration when an
+//! allocation launches, worker expiry when the allocation job ends, and
+//! the two cores' action queues feeding each other until both drain.
+//! The routing loop is reproduced **verbatim** from the PR 1/PR 2
+//! drivers (alternating slurm/meta batches, swap-drain buffers), with
+//! effects pushed in exactly the order the old loop issued its DES
+//! schedules — `tests/campaign_equiv.rs` pins the equivalence.
+//!
+//! Generic over the meta-scheduler: `MetaStack<HqCore>` is the paper's
+//! UM-Bridge + HyperQueue stack; `MetaStack<WorkStealCore>` swaps in the
+//! partitioned work-stealing dispatcher.  A future task scheduler costs
+//! one [`TaskCore`] impl.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::campaign::driver::CampaignConfig;
+use crate::campaign::submitter::Submission;
+use crate::clock::{Micros, MS};
+use crate::hqlite::{HqAction, HqCore, HqTimer, TaskCore, TaskId, TaskSpec};
+use crate::metrics::JobRecord;
+use crate::slurmlite::core::{Action, BatchCore, JobId, SlurmCore,
+                             Timer as SlurmTimer, USER_EXPERIMENT};
+use crate::workload::{scenario, App, Scenario};
+
+use super::worksteal::WorkStealCore;
+use super::{CapacityChange, Completion, Effect, SchedulerCore};
+
+/// The paper's UM-Bridge + HyperQueue stack.
+pub type HqSched = MetaStack<HqCore>;
+
+/// The UM-Bridge stack over the partitioned work-stealing dispatcher.
+pub type WorkStealSched = MetaStack<WorkStealCore>;
+
+/// Composite timers: both cores' timers plus the stack's own lifecycle
+/// events (registration pre-jobs, allocation expiry).
+#[derive(Debug)]
+pub enum StackTimer {
+    /// Native-scheduler timer.
+    Slurm(SlurmTimer),
+    /// Meta-scheduler timer.
+    Meta(HqTimer),
+    /// Submit one registration pre-job (t = 0, one per pre-job).
+    RegSubmit,
+    /// A registration pre-job's server init finished.
+    RegDone(TaskId),
+    /// The allocation job reached its time limit.
+    AllocEnd(JobId),
+}
+
+/// UM-Bridge + meta-scheduler stack as a single [`SchedulerCore`].
+pub struct MetaStack<M: TaskCore> {
+    label: &'static str,
+    slurm: SlurmCore,
+    meta: M,
+    /// Allocation geometry follows the campaign's primary app.
+    scen: Scenario,
+    alloc_app: App,
+    server_init: Micros,
+    registration_jobs: u64,
+    /// Native allocation job -> meta alloc tag.
+    alloc_jobs: HashMap<JobId, u64>,
+    /// Registration pre-job task ids (their work-done is stack-internal).
+    reg_tasks: HashSet<TaskId>,
+    // Reusable routing buffers: the cores append into `*_acts`; the
+    // routing loop swaps each into a batch buffer before interpreting,
+    // so interpretation can append follow-up actions without allocating.
+    slurm_acts: Vec<Action>,
+    meta_acts: Vec<HqAction>,
+    slurm_batch: Vec<Action>,
+    meta_batch: Vec<HqAction>,
+}
+
+impl<M: TaskCore> MetaStack<M> {
+    /// Build the stack from a campaign configuration and a
+    /// meta-scheduler (construct it with
+    /// [`CampaignConfig::autoalloc`]-derived settings).
+    pub fn new(cfg: &CampaignConfig, meta: M, label: &'static str) -> Self {
+        MetaStack {
+            label,
+            slurm: SlurmCore::new(
+                cfg.cluster.clone(),
+                cfg.overheads.clone(),
+                cfg.seed,
+            ),
+            meta,
+            scen: scenario(cfg.app),
+            alloc_app: cfg.app,
+            server_init: cfg.overheads.server_init,
+            registration_jobs: cfg.registration_jobs,
+            alloc_jobs: HashMap::new(),
+            reg_tasks: HashSet::new(),
+            slurm_acts: Vec::new(),
+            meta_acts: Vec::new(),
+            slurm_batch: Vec::new(),
+            meta_batch: Vec::new(),
+        }
+    }
+
+    /// The meta-scheduler (introspection; used by tests and benches).
+    pub fn meta(&self) -> &M {
+        &self.meta
+    }
+
+    /// Route until both action queues drain (they feed each other),
+    /// translating driver-facing actions into effects *in issue order*.
+    fn route(&mut self, t: Micros, out: &mut Vec<Effect<TaskId, StackTimer>>) {
+        loop {
+            let mut progressed = false;
+            std::mem::swap(&mut self.slurm_acts, &mut self.slurm_batch);
+            let mut batch = std::mem::take(&mut self.slurm_batch);
+            for a in batch.drain(..) {
+                progressed = true;
+                match a {
+                    Action::Timer(tt, tm) => {
+                        out.push(Effect::SetTimer(tt, StackTimer::Slurm(tm)));
+                    }
+                    Action::Launched { job, .. } => {
+                        if self.alloc_jobs.contains_key(&job) {
+                            // Allocation is up: a worker registers for
+                            // the remaining allocation lifetime; the
+                            // allocation job ends at its time limit.
+                            self.meta.on_alloc_up_into(
+                                t,
+                                self.scen.hq_alloc_time,
+                                self.scen.cpus,
+                                &mut self.meta_acts,
+                            );
+                            out.push(Effect::SetTimer(
+                                t + self.scen.hq_alloc_time,
+                                StackTimer::AllocEnd(job),
+                            ));
+                        }
+                        // Background jobs self-finish inside the core.
+                    }
+                    // Allocation/background completions carry no record
+                    // the campaign cares about.
+                    Action::Completed { .. } | Action::TimedOut { .. } => {}
+                }
+            }
+            self.slurm_batch = batch;
+            std::mem::swap(&mut self.meta_acts, &mut self.meta_batch);
+            let mut batch = std::mem::take(&mut self.meta_batch);
+            for a in batch.drain(..) {
+                progressed = true;
+                match a {
+                    HqAction::SubmitAllocation { alloc_tag, req } => {
+                        let id = self.slurm.submit_into(
+                            t,
+                            USER_EXPERIMENT,
+                            u64::MAX - 1,
+                            req,
+                            &mut self.slurm_acts,
+                        );
+                        self.alloc_jobs.insert(id, alloc_tag);
+                    }
+                    HqAction::StartTask { task, .. } => {
+                        if self.reg_tasks.contains(&task) {
+                            // Registration pre-jobs run ~1 s of server
+                            // init; their work-done is stack-internal.
+                            out.push(Effect::SetTimer(
+                                t + self.server_init,
+                                StackTimer::RegDone(task),
+                            ));
+                        } else {
+                            out.push(Effect::Start {
+                                id: task,
+                                contention: 1.0,
+                            });
+                        }
+                    }
+                    HqAction::Timer(tt, tm) => {
+                        out.push(Effect::SetTimer(tt, StackTimer::Meta(tm)));
+                    }
+                    HqAction::TaskCompleted { task, record } => {
+                        if record.tag == u64::MAX {
+                            self.reg_tasks.remove(&task);
+                        }
+                        out.push(Effect::Finish { id: task, record });
+                    }
+                    HqAction::KillTask { task } => {
+                        out.push(Effect::Retire { id: task });
+                    }
+                }
+            }
+            self.meta_batch = batch;
+            if !progressed {
+                break;
+            }
+        }
+    }
+}
+
+impl<M: TaskCore> SchedulerCore for MetaStack<M> {
+    type Id = TaskId;
+    type Timer = StackTimer;
+
+    fn label(&self) -> &'static str {
+        self.label
+    }
+
+    fn log_grain(&self) -> Micros {
+        // HQ-style stacks log at millisecond accuracy.
+        MS
+    }
+
+    fn bootstrap_into(
+        &mut self,
+        t: Micros,
+        out: &mut Vec<Effect<TaskId, StackTimer>>,
+    ) {
+        for a in self.slurm.bootstrap(t) {
+            if let Action::Timer(tt, tm) = a {
+                out.push(Effect::SetTimer(tt, StackTimer::Slurm(tm)));
+            }
+        }
+        // Registration pre-jobs go first (the balancer's readiness
+        // checks), before the submitter seeds the campaign.
+        for _ in 0..self.registration_jobs {
+            out.push(Effect::SetTimer(t, StackTimer::RegSubmit));
+        }
+    }
+
+    fn submit_into(
+        &mut self,
+        t: Micros,
+        s: &Submission,
+        out: &mut Vec<Effect<TaskId, StackTimer>>,
+    ) -> (TaskId, Micros) {
+        debug_assert!(s.tag != u64::MAX, "tag u64::MAX is reserved");
+        let scen = scenario(s.app);
+        // Worker geometry follows the campaign's primary app: a task
+        // whose shape exceeds it would sit in the queue forever
+        // (autoalloc cycling until the runaway guard).  Fail fast and
+        // explain instead.
+        assert!(
+            scen.cpus <= self.scen.cpus
+                && scen.hq_time_request <= self.scen.hq_alloc_time,
+            "campaign submission '{}' (cores {}, time request {}) cannot fit \
+             the '{}' allocation geometry (cores {}, walltime {}); pick a \
+             CampaignConfig.app whose Table III row covers every submitted \
+             app",
+            s.app.label(),
+            scen.cpus,
+            scen.hq_time_request,
+            self.alloc_app.label(),
+            self.scen.cpus,
+            self.scen.hq_alloc_time,
+        );
+        let tid = self.meta.submit_task_into(
+            t,
+            TaskSpec {
+                tag: s.tag,
+                cores: scen.cpus,
+                time_request: scen.hq_time_request,
+                time_limit: scen.hq_time_limit + self.server_init,
+            },
+            &mut self.meta_acts,
+        );
+        self.route(t, out);
+        (tid, s.duration + self.server_init)
+    }
+
+    fn on_timer_into(
+        &mut self,
+        t: Micros,
+        timer: StackTimer,
+        out: &mut Vec<Effect<TaskId, StackTimer>>,
+    ) {
+        match timer {
+            StackTimer::Slurm(tm) => {
+                self.slurm.on_timer_into(t, tm, &mut self.slurm_acts);
+            }
+            StackTimer::Meta(tm) => {
+                self.meta.on_timer_into(t, tm, &mut self.meta_acts);
+            }
+            StackTimer::RegSubmit => {
+                // Registration jobs: ~1 s of server init only; tagged
+                // with the reserved marker so completions are excluded
+                // from the records.
+                let tid = self.meta.submit_task_into(
+                    t,
+                    TaskSpec {
+                        tag: u64::MAX,
+                        cores: self.scen.cpus,
+                        time_request: self.scen.hq_time_request,
+                        time_limit: self.scen.hq_time_limit
+                            + self.server_init,
+                    },
+                    &mut self.meta_acts,
+                );
+                self.reg_tasks.insert(tid);
+                out.push(Effect::Queued);
+            }
+            StackTimer::RegDone(tid) => {
+                self.meta.on_task_done_into(t, tid, &mut self.meta_acts);
+            }
+            StackTimer::AllocEnd(job) => {
+                self.slurm.on_finish_into(t, job, &mut self.slurm_acts);
+                if self.alloc_jobs.remove(&job).is_some() {
+                    // Allocation ended: expire its worker so the meta
+                    // core requeues tasks and requests replacement
+                    // capacity.
+                    self.meta.expire_workers_into(t, &mut self.meta_acts);
+                }
+            }
+        }
+        self.route(t, out);
+    }
+
+    fn on_work_done_into(
+        &mut self,
+        t: Micros,
+        id: TaskId,
+        out: &mut Vec<Effect<TaskId, StackTimer>>,
+    ) {
+        self.meta.on_task_done_into(t, id, &mut self.meta_acts);
+        self.route(t, out);
+    }
+
+    fn on_capacity_change_into(
+        &mut self,
+        t: Micros,
+        change: CapacityChange,
+        out: &mut Vec<Effect<TaskId, StackTimer>>,
+    ) {
+        match change {
+            CapacityChange::WorkerLost(wid) => {
+                self.meta.on_worker_lost_into(t, wid, &mut self.meta_acts);
+            }
+        }
+        self.route(t, out);
+    }
+
+    fn classify(&self, record: &JobRecord) -> Completion {
+        // Tag u64::MAX marks a registration pre-job on this path.
+        if record.tag == u64::MAX {
+            Completion::Registration
+        } else {
+            Completion::Evaluation
+        }
+    }
+}

@@ -1,0 +1,843 @@
+//! [`WorkStealCore`]: a partitioned, work-stealing HyperQueue variant —
+//! the third pluggable scheduler, proving the [`TaskCore`] seam is real.
+//!
+//! Where [`HqCore`](crate::hqlite::HqCore) keeps one central FCFS queue
+//! the server scans on every dispatch, `WorkStealCore` partitions: every
+//! task is assigned at submission to the least-loaded worker's private
+//! deque (fewest queued tasks, ties to the lowest worker id), each
+//! worker executes its own deque strictly FIFO, and a worker that goes
+//! idle *steals* the newest task from the back of the longest deque —
+//! the classic owner-takes-head / thief-takes-tail discipline, which
+//! keeps the per-deque FIFO order of everything left behind intact.
+//!
+//! Everything around dispatch keeps hqlite's semantics so the stack
+//! drivers treat the two interchangeably: the same
+//! [`AutoAllocConfig`] automatic allocation (backlog, workers-per-alloc,
+//! worker cap), the same expiry min-heap, the same time-request gating
+//! (a task only starts on a worker whose allocation outlives its
+//! `time_request`), the same dispatch-latency and time-limit timers, and
+//! the same action vocabulary ([`HqAction`]/[`HqTimer`]).
+//!
+//! Determinism: workers live in a `BTreeMap` and every scan (placement,
+//! backlog drain, steal) runs in worker-id order with explicit
+//! tie-breaking, so a campaign remains a pure function of its seed.
+//!
+//! Invariants (pinned by `tests/scheduler_props.rs`):
+//! * no task is lost on [`on_worker_lost`](TaskCore::on_worker_lost) —
+//!   the dead worker's deque and running set requeue onto the backlog;
+//! * a steal never reorders the tasks remaining in the victim's deque.
+//!
+//! Cost (w = live workers, d = tasks started per pass): a pump pass is
+//! O(w + d); submission placement is O(w); completion is O(log w) map
+//! access + one pump.  See PERF.md for the full table.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap, VecDeque};
+
+use crate::clock::Micros;
+use crate::hqlite::core::drain_due_workers;
+use crate::hqlite::{AutoAllocConfig, HqAction, HqTimer, TaskCore, TaskId,
+                    TaskSpec, WorkerId};
+use crate::metrics::JobRecord;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum TaskState {
+    Pending,
+    Dispatched,
+    Running,
+}
+
+#[derive(Clone, Debug)]
+struct Task {
+    spec: TaskSpec,
+    state: TaskState,
+    submit_t: Micros,
+    start_t: Micros,
+    worker: WorkerId,
+}
+
+#[derive(Clone, Debug)]
+struct Worker {
+    cores_total: u32,
+    cores_free: u32,
+    /// Virtual time at which the surrounding allocation expires.
+    expires_t: Micros,
+    /// This worker's private FIFO dispatch deque (pending tasks).
+    deque: VecDeque<TaskId>,
+    /// Tasks currently dispatched to / running on this worker.
+    running: BTreeSet<TaskId>,
+}
+
+/// The partitioned work-stealing task scheduler.
+pub struct WorkStealCore {
+    cfg: AutoAllocConfig,
+    /// In-flight tasks only; finished tasks are evicted.
+    tasks: HashMap<TaskId, Task>,
+    /// Tasks no live worker could host at submission time (no worker up,
+    /// or none with enough total cores).  Drained oldest-first as
+    /// capacity appears.  May lazily contain ids of tasks that finished
+    /// while requeued; they are dropped when next encountered.
+    backlog: VecDeque<TaskId>,
+    /// Live workers, id-ordered for deterministic scans.
+    workers: BTreeMap<WorkerId, Worker>,
+    /// (expires_t, worker) min-heap; entries for already-lost workers
+    /// are skipped lazily.
+    expiry: BinaryHeap<Reverse<(Micros, WorkerId)>>,
+    /// Live tasks currently in the Pending state (deques + backlog,
+    /// minus stale entries) — drives autoalloc.
+    pending: usize,
+    retired: u64,
+    next_task: TaskId,
+    next_worker: WorkerId,
+    next_alloc_tag: u64,
+    allocs_in_queue: u32,
+    /// Reusable worker-id scratch for pump passes (allocation-lean on
+    /// the per-event hot path, like the kernel's effect buffer).
+    wid_scratch: Vec<WorkerId>,
+    /// Stats: dispatches performed.
+    pub dispatches: u64,
+    /// Stats: dispatches that went through a steal.
+    pub steals: u64,
+}
+
+impl WorkStealCore {
+    pub fn new(cfg: AutoAllocConfig) -> Self {
+        WorkStealCore {
+            cfg,
+            tasks: HashMap::new(),
+            backlog: VecDeque::new(),
+            workers: BTreeMap::new(),
+            expiry: BinaryHeap::new(),
+            pending: 0,
+            retired: 0,
+            next_task: 1,
+            next_worker: 1,
+            next_alloc_tag: 1,
+            allocs_in_queue: 0,
+            wid_scratch: Vec::new(),
+            dispatches: 0,
+            steals: 0,
+        }
+    }
+
+    /// Queued (not yet started) tasks on one worker's private deque.
+    pub fn deque_len(&self, wid: WorkerId) -> usize {
+        self.workers.get(&wid).map_or(0, |w| w.deque.len())
+    }
+
+    /// Steal/FIFO invariant probe: every worker's private deque holds
+    /// task ids in ascending (submission) order at all times — owners
+    /// pop the front, thieves the back, placement appends — so any
+    /// violation means an illegal mid-deque mutation.
+    pub fn deques_fifo(&self) -> bool {
+        self.workers.values().all(|w| {
+            w.deque
+                .iter()
+                .zip(w.deque.iter().skip(1))
+                .all(|(a, b)| a < b)
+        })
+    }
+
+    /// Is this task id still alive and waiting for dispatch?
+    fn is_pending(&self, id: TaskId) -> bool {
+        self.tasks.get(&id).map(|t| t.state) == Some(TaskState::Pending)
+    }
+
+    /// Assign a freshly submitted task to the least-loaded worker whose
+    /// total cores could ever host it (ties: lowest id), or the backlog.
+    fn place(&mut self, id: TaskId) {
+        let need = self.tasks[&id].spec.cores;
+        let mut best: Option<(usize, WorkerId)> = None;
+        for (&wid, w) in self.workers.iter() {
+            if w.cores_total < need {
+                continue;
+            }
+            let len = w.deque.len();
+            if best.map_or(true, |(bl, _)| len < bl) {
+                best = Some((len, wid));
+            }
+        }
+        match best {
+            Some((_, wid)) => {
+                self.workers.get_mut(&wid).unwrap().deque.push_back(id)
+            }
+            None => self.backlog.push_back(id),
+        }
+    }
+
+    /// Start `id` on `wid` now (capacity already checked).
+    fn start(&mut self, t: Micros, id: TaskId, wid: WorkerId,
+             out: &mut Vec<HqAction>) {
+        let need = self.tasks[&id].spec.cores;
+        let w = self.workers.get_mut(&wid).unwrap();
+        w.cores_free -= need;
+        w.running.insert(id);
+        let task = self.tasks.get_mut(&id).unwrap();
+        task.state = TaskState::Dispatched;
+        task.worker = wid;
+        self.pending -= 1;
+        self.dispatches += 1;
+        out.push(HqAction::Timer(
+            t + self.cfg.dispatch_latency,
+            HqTimer::Dispatched(id),
+        ));
+    }
+
+    /// Can `wid` start `id` right now?  Needs the cores free and an
+    /// allocation outliving the task's time request (HQ semantics).
+    fn can_start(&self, t: Micros, id: TaskId, wid: WorkerId) -> bool {
+        let w = &self.workers[&wid];
+        let spec = &self.tasks[&id].spec;
+        w.cores_free >= spec.cores && w.expires_t >= t + spec.time_request
+    }
+
+    /// One owner-dispatch sweep: every worker starts the front of its
+    /// own deque while it can (strict per-deque FIFO).  Returns whether
+    /// anything happened.
+    fn dispatch_local(&mut self, t: Micros, out: &mut Vec<HqAction>) -> bool {
+        let mut progressed = false;
+        let mut wids = std::mem::take(&mut self.wid_scratch);
+        wids.clear();
+        wids.extend(self.workers.keys().copied());
+        for &wid in &wids {
+            loop {
+                let Some(&front) = self.workers[&wid].deque.front() else {
+                    break;
+                };
+                // Deque entries are always live Pending tasks: a task
+                // only completes after it started, starting pops it, and
+                // requeues go to the backlog — only the backlog can hold
+                // stale ids.
+                debug_assert!(self.is_pending(front), "stale deque entry");
+                if !self.can_start(t, front, wid) {
+                    break;
+                }
+                self.workers.get_mut(&wid).unwrap().deque.pop_front();
+                self.start(t, front, wid, out);
+                progressed = true;
+            }
+        }
+        self.wid_scratch = wids;
+        progressed
+    }
+
+    /// Drain the backlog oldest-first onto the lowest-id worker that can
+    /// start each task immediately; head-of-line blocks (the backlog is
+    /// the FCFS lane for work that never fit a partition).
+    fn drain_backlog(&mut self, t: Micros, out: &mut Vec<HqAction>) -> bool {
+        let mut progressed = false;
+        while let Some(&front) = self.backlog.front() {
+            if !self.is_pending(front) {
+                self.backlog.pop_front();
+                progressed = true;
+                continue;
+            }
+            let pick = self
+                .workers
+                .keys()
+                .copied()
+                .find(|&wid| self.can_start(t, front, wid));
+            let Some(wid) = pick else { break };
+            self.backlog.pop_front();
+            self.start(t, front, wid, out);
+            progressed = true;
+        }
+        progressed
+    }
+
+    /// One steal attempt: the lowest-id idle worker (free cores, empty
+    /// deque) takes the task at the *back* of the longest deque, if it
+    /// can start it immediately.  Stealing from the tail leaves the
+    /// victim's remaining FIFO order untouched.  Returns whether a task
+    /// moved.
+    fn steal_once(&mut self, t: Micros, out: &mut Vec<HqAction>) -> bool {
+        let mut thieves = std::mem::take(&mut self.wid_scratch);
+        thieves.clear();
+        thieves.extend(
+            self.workers
+                .iter()
+                .filter(|(_, w)| w.cores_free > 0 && w.deque.is_empty())
+                .map(|(&wid, _)| wid),
+        );
+        let mut stole = false;
+        for &thief in &thieves {
+            // Victim: longest deque (ties: lowest id), excluding the
+            // thief (whose deque is empty anyway).
+            let mut victim: Option<(usize, WorkerId)> = None;
+            for (&wid, w) in self.workers.iter() {
+                if wid == thief || w.deque.is_empty() {
+                    continue;
+                }
+                let len = w.deque.len();
+                if victim.map_or(true, |(bl, _)| len > bl) {
+                    victim = Some((len, wid));
+                }
+            }
+            let Some((_, vid)) = victim else { continue };
+            let &tail = self.workers[&vid].deque.back().unwrap();
+            // Same invariant as dispatch_local: deque entries are live.
+            debug_assert!(self.is_pending(tail), "stale deque entry");
+            if self.can_start(t, tail, thief) {
+                self.workers.get_mut(&vid).unwrap().deque.pop_back();
+                self.start(t, tail, thief, out);
+                self.steals += 1;
+                stole = true;
+                break;
+            }
+            // This thief cannot host the steal candidate; try the next.
+        }
+        self.wid_scratch = thieves;
+        stole
+    }
+
+    /// Dispatch to a fixed point: owners drain their deques, the backlog
+    /// drains onto free capacity, idle workers steal — repeated until
+    /// nothing moves — then autoalloc tops up capacity for whatever is
+    /// still pending.
+    fn pump(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        loop {
+            let mut progressed = self.dispatch_local(t, out);
+            progressed |= self.drain_backlog(t, out);
+            while self.steal_once(t, out) {
+                progressed = true;
+            }
+            if !progressed {
+                break;
+            }
+        }
+        self.autoalloc_into(out);
+    }
+
+    /// Submit allocations while there are pending tasks, the backlog
+    /// allows it, and the worker cap is not reached (hqlite semantics).
+    fn autoalloc_into(&mut self, out: &mut Vec<HqAction>) {
+        while self.pending > 0
+            && self.allocs_in_queue < self.cfg.backlog
+            && self.workers.len() as u32
+                + self.allocs_in_queue * self.cfg.workers_per_alloc
+                < self.cfg.max_worker_count
+        {
+            self.allocs_in_queue += 1;
+            let tag = self.next_alloc_tag;
+            self.next_alloc_tag += 1;
+            out.push(HqAction::SubmitAllocation {
+                alloc_tag: tag,
+                req: self.cfg.alloc_request,
+            });
+        }
+    }
+
+    fn complete(&mut self, t: Micros, id: TaskId, truncated: bool,
+                out: &mut Vec<HqAction>) {
+        // Finished tasks are evicted, so a stale duplicate completion
+        // (the driver's original done-timer firing after a requeue)
+        // simply misses the map.
+        let Some(task) = self.tasks.remove(&id) else { return };
+        if task.state == TaskState::Pending {
+            // Completed while requeued: its deque/backlog entry is now
+            // stale and will be lazily dropped.
+            self.pending -= 1;
+        }
+        self.retired += 1;
+        let record = JobRecord {
+            tag: task.spec.tag,
+            submit: task.submit_t,
+            start: task.start_t,
+            end: t,
+            cpu: t.saturating_sub(task.start_t),
+            truncated,
+        };
+        if let Some(w) = self.workers.get_mut(&task.worker) {
+            if w.running.remove(&id) {
+                w.cores_free += task.spec.cores;
+            }
+        }
+        out.push(HqAction::TaskCompleted { task: id, record });
+        self.pump(t, out);
+    }
+}
+
+impl TaskCore for WorkStealCore {
+    fn submit_task_into(
+        &mut self,
+        t: Micros,
+        spec: TaskSpec,
+        out: &mut Vec<HqAction>,
+    ) -> TaskId {
+        let id = self.next_task;
+        self.next_task += 1;
+        self.tasks.insert(
+            id,
+            Task {
+                spec,
+                state: TaskState::Pending,
+                submit_t: t,
+                start_t: 0,
+                worker: 0,
+            },
+        );
+        self.pending += 1;
+        self.place(id);
+        self.pump(t, out);
+        id
+    }
+
+    fn on_alloc_up_into(
+        &mut self,
+        t: Micros,
+        time_limit: Micros,
+        cores_per_worker: u32,
+        out: &mut Vec<HqAction>,
+    ) {
+        self.allocs_in_queue = self.allocs_in_queue.saturating_sub(1);
+        for _ in 0..self.cfg.workers_per_alloc {
+            if self.workers.len() as u32 >= self.cfg.max_worker_count {
+                break;
+            }
+            let wid = self.next_worker;
+            self.next_worker += 1;
+            self.workers.insert(
+                wid,
+                Worker {
+                    cores_total: cores_per_worker,
+                    cores_free: cores_per_worker,
+                    expires_t: t + time_limit,
+                    deque: VecDeque::new(),
+                    running: BTreeSet::new(),
+                },
+            );
+            self.expiry.push(Reverse((t + time_limit, wid)));
+        }
+        self.pump(t, out);
+    }
+
+    fn on_worker_lost_into(
+        &mut self,
+        t: Micros,
+        wid: WorkerId,
+        out: &mut Vec<HqAction>,
+    ) {
+        if let Some(worker) = self.workers.remove(&wid) {
+            // No task lost: the private deque requeues in FIFO order,
+            // then the in-flight set in ascending task-id order
+            // (deterministic), all onto the shared backlog.
+            for id in worker.deque {
+                if self.is_pending(id) {
+                    self.backlog.push_back(id);
+                }
+            }
+            for id in worker.running {
+                if let Some(task) = self.tasks.get_mut(&id) {
+                    if matches!(
+                        task.state,
+                        TaskState::Running | TaskState::Dispatched
+                    ) {
+                        task.state = TaskState::Pending;
+                        self.pending += 1;
+                        self.backlog.push_back(id);
+                    }
+                }
+            }
+        }
+        self.pump(t, out);
+    }
+
+    fn on_task_done_into(&mut self, t: Micros, id: TaskId,
+                         out: &mut Vec<HqAction>) {
+        self.complete(t, id, false, out)
+    }
+
+    fn on_timer_into(&mut self, t: Micros, timer: HqTimer,
+                     out: &mut Vec<HqAction>) {
+        match timer {
+            HqTimer::Dispatched(id) => {
+                let Some(task) = self.tasks.get_mut(&id) else { return };
+                if task.state != TaskState::Dispatched {
+                    return;
+                }
+                task.state = TaskState::Running;
+                task.start_t = t;
+                let worker = task.worker;
+                let limit = task.spec.time_limit;
+                out.push(HqAction::StartTask { task: id, worker });
+                out.push(HqAction::Timer(t + limit, HqTimer::Limit(id)));
+            }
+            HqTimer::Limit(id) => {
+                let running = matches!(
+                    self.tasks.get(&id).map(|x| x.state),
+                    Some(TaskState::Running)
+                );
+                if running {
+                    out.push(HqAction::KillTask { task: id });
+                    self.complete(t, id, true, out);
+                }
+            }
+        }
+    }
+
+    fn expire_workers_into(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        let expired = drain_due_workers(&mut self.expiry, t, |wid| {
+            self.workers.contains_key(&wid)
+        });
+        for wid in expired {
+            self.on_worker_lost_into(t, wid, out);
+        }
+    }
+
+    fn pending_tasks(&self) -> usize {
+        self.pending
+    }
+
+    fn live_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn allocs_waiting(&self) -> u32 {
+        self.allocs_in_queue
+    }
+
+    fn resident_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    fn retired_count(&self) -> u64 {
+        self.retired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::{Des, MS, SEC};
+    use crate::cluster::JobRequest;
+
+    fn cfg() -> AutoAllocConfig {
+        AutoAllocConfig {
+            backlog: 1,
+            workers_per_alloc: 1,
+            max_worker_count: 4,
+            alloc_request: JobRequest::new(16, 16, 3600 * SEC),
+            dispatch_latency: 1 * MS,
+        }
+    }
+
+    fn spec(tag: u64, cores: u32) -> TaskSpec {
+        TaskSpec {
+            tag,
+            cores,
+            time_request: SEC,
+            time_limit: 100 * SEC,
+        }
+    }
+
+    /// Sim-drive: allocations come up `alloc_delay` after submission;
+    /// tasks run `dur(task_id)`.
+    fn drive(
+        core: &mut WorkStealCore,
+        submissions: Vec<(Micros, TaskSpec)>,
+        alloc_delay: Micros,
+        dur: impl Fn(TaskId) -> Micros,
+    ) -> Vec<JobRecord> {
+        #[derive(Debug)]
+        enum Ev {
+            Submit(TaskSpec),
+            AllocUp,
+            Timer(HqTimer),
+            TaskDone(TaskId),
+        }
+        let mut des: Des<Ev> = Des::new();
+        for (t, s) in submissions {
+            des.schedule(t, Ev::Submit(s));
+        }
+        let mut records = Vec::new();
+        let mut guard = 0;
+        while let Some((t, ev)) = des.pop() {
+            guard += 1;
+            assert!(guard < 1_000_000, "runaway");
+            let acts = match ev {
+                Ev::Submit(s) => core.submit_task(t, s).1,
+                Ev::AllocUp => core.on_alloc_up(t, 3600 * SEC, 16),
+                Ev::Timer(tm) => core.on_timer(t, tm),
+                Ev::TaskDone(id) => core.on_task_done(t, id),
+            };
+            for a in acts {
+                match a {
+                    HqAction::SubmitAllocation { .. } => {
+                        des.schedule(t + alloc_delay, Ev::AllocUp)
+                    }
+                    HqAction::StartTask { task, .. } => {
+                        des.schedule(t + dur(task), Ev::TaskDone(task));
+                    }
+                    HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                    HqAction::TaskCompleted { record, .. } => {
+                        records.push(record)
+                    }
+                    HqAction::KillTask { .. } => {}
+                }
+            }
+        }
+        records
+    }
+
+    #[test]
+    fn single_task_through_alloc() {
+        let mut core = WorkStealCore::new(cfg());
+        let recs = drive(
+            &mut core,
+            vec![(0, TaskSpec { tag: 1, cores: 1, time_request: SEC,
+                                time_limit: 10 * SEC })],
+            30 * SEC,
+            |_| 2 * SEC,
+        );
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        assert!(r.start >= 30 * SEC);
+        assert!(r.start <= 30 * SEC + 10 * MS);
+        assert_eq!(r.cpu, 2 * SEC);
+        assert_eq!(core.retired_count(), 1);
+        assert_eq!(core.resident_tasks(), 0);
+    }
+
+    #[test]
+    fn partitions_spread_tasks_across_workers() {
+        // Two 16-core workers, four 8-core tasks: least-loaded placement
+        // splits them 2/2 and all four run in parallel.
+        let mut core = WorkStealCore::new(AutoAllocConfig {
+            backlog: 2,
+            max_worker_count: 2,
+            ..cfg()
+        });
+        let subs: Vec<_> =
+            (0..4).map(|i| (0, spec(i, 8))).collect();
+        let recs = drive(&mut core, subs, SEC, |_| 10 * SEC);
+        assert_eq!(recs.len(), 4);
+        let starts: Vec<_> = recs.iter().map(|r| r.start).collect();
+        let lo = *starts.iter().min().unwrap();
+        let hi = *starts.iter().max().unwrap();
+        assert!(hi - lo < 10 * MS, "all four start together: {starts:?}");
+    }
+
+    #[test]
+    fn idle_worker_steals_from_longest_deque() {
+        let mut core = WorkStealCore::new(AutoAllocConfig {
+            backlog: 2,
+            max_worker_count: 2,
+            ..cfg()
+        });
+        // Worker 1 only, loaded with serial 16-core tasks…
+        let mut out = Vec::new();
+        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
+        for i in 0..6 {
+            core.submit_task_into(0, spec(i, 16), &mut out);
+        }
+        assert_eq!(core.live_workers(), 1);
+        assert!(core.deque_len(1) >= 5, "one runs, the rest queue");
+        // …then worker 2 appears idle: it must steal immediately.
+        out.clear();
+        core.on_alloc_up_into(1, 3600 * SEC, 16, &mut out);
+        assert_eq!(core.live_workers(), 2);
+        assert!(core.steals >= 1, "idle worker steals, {} steals", core.steals);
+        let started_on_2 = out.iter().any(|a| matches!(
+            a,
+            HqAction::Timer(_, HqTimer::Dispatched(_))
+        ));
+        assert!(started_on_2, "steal dispatches on the thief");
+    }
+
+    /// Run the core's outstanding actions to quiescence, each started
+    /// task taking `dur`, recording `(worker, task)` in start order.
+    /// `SubmitAllocation` actions are ignored (no new capacity appears).
+    fn settle(
+        core: &mut WorkStealCore,
+        mut acts: Vec<HqAction>,
+        dur: Micros,
+    ) -> Vec<(WorkerId, TaskId)> {
+        #[derive(Debug)]
+        enum Ev {
+            Timer(HqTimer),
+            Done(TaskId),
+        }
+        let mut des: Des<Ev> = Des::new();
+        let mut starts: Vec<(WorkerId, TaskId)> = Vec::new();
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            assert!(guard < 100_000, "runaway settle");
+            for a in std::mem::take(&mut acts) {
+                match a {
+                    HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                    HqAction::StartTask { task, worker } => {
+                        starts.push((worker, task));
+                        des.after(dur, Ev::Done(task));
+                    }
+                    _ => {}
+                }
+            }
+            let Some((t, ev)) = des.pop() else { break };
+            match ev {
+                Ev::Timer(tm) => core.on_timer_into(t, tm, &mut acts),
+                Ev::Done(id) => core.on_task_done_into(t, id, &mut acts),
+            }
+        }
+        starts
+    }
+
+    #[test]
+    fn steal_preserves_victim_fifo_order() {
+        // Worker 1 accumulates a deep deque of serial tasks; worker 2
+        // arrives idle and steals from the tail.  The victim must still
+        // run everything left in its deque in submission (FIFO) order.
+        let mut core = WorkStealCore::new(AutoAllocConfig {
+            backlog: 2,
+            max_worker_count: 2,
+            ..cfg()
+        });
+        let mut acts = Vec::new();
+        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
+        for i in 1..=6 {
+            core.submit_task_into(0, spec(i, 16), &mut acts);
+        }
+        assert!(core.deque_len(1) >= 5);
+        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
+        assert!(core.steals >= 1, "idle second worker must steal");
+        let starts = settle(&mut core, acts, 5 * SEC);
+        assert_eq!(starts.len(), 6, "every task starts exactly once");
+        // Owner-side FIFO: worker 1 replays its deque in ascending
+        // task-id (= submission) order, steals notwithstanding.
+        let w1: Vec<TaskId> = starts
+            .iter()
+            .filter(|&&(w, _)| w == 1)
+            .map(|&(_, id)| id)
+            .collect();
+        let mut sorted = w1.clone();
+        sorted.sort_unstable();
+        assert_eq!(w1, sorted, "victim deque replayed out of order");
+        // Nothing lost, nothing duplicated, and the thief did real work.
+        let mut all: Vec<TaskId> = starts.iter().map(|&(_, id)| id).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all, (1..=6).collect::<Vec<_>>());
+        assert!(starts.iter().any(|&(w, _)| w == 2));
+        assert_eq!(core.retired_count(), 6);
+    }
+
+    #[test]
+    fn no_task_lost_on_worker_loss() {
+        let mut core = WorkStealCore::new(AutoAllocConfig {
+            backlog: 2,
+            max_worker_count: 2,
+            ..cfg()
+        });
+        let mut out = Vec::new();
+        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
+        for i in 0..5 {
+            core.submit_task_into(0, spec(i, 16), &mut out);
+        }
+        // One dispatched + four queued on worker 1.
+        assert_eq!(core.resident_tasks(), 5);
+        out.clear();
+        core.on_worker_lost_into(SEC, 1, &mut out);
+        // Everything is pending again (in-flight work requeued too) and
+        // autoalloc asks for replacement capacity.
+        assert_eq!(core.pending_tasks(), 5);
+        assert_eq!(core.live_workers(), 0);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            HqAction::SubmitAllocation { .. }
+        )));
+        // Capacity returns: all five run to completion.
+        out.clear();
+        core.on_alloc_up_into(2 * SEC, 3600 * SEC, 16, &mut out);
+        let starts = settle(&mut core, out, SEC);
+        let mut ids: Vec<TaskId> = starts.iter().map(|&(_, id)| id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids, (1..=5).collect::<Vec<_>>(),
+                   "all five tasks restarted");
+        assert_eq!(core.retired_count(), 5);
+        assert_eq!(core.resident_tasks(), 0);
+    }
+
+    #[test]
+    fn time_request_gates_dispatch() {
+        let mut core = WorkStealCore::new(cfg());
+        let mut out = Vec::new();
+        // Allocation lives 10 s; task requests 3600 s: must NOT start.
+        core.on_alloc_up_into(0, 10 * SEC, 16, &mut out);
+        core.submit_task_into(0, TaskSpec {
+            tag: 1, cores: 1, time_request: 3600 * SEC,
+            time_limit: 2 * 3600 * SEC,
+        }, &mut out);
+        assert_eq!(core.pending_tasks(), 1,
+                   "task with long time request stays queued");
+        assert!(!out.iter().any(|a| matches!(
+            a,
+            HqAction::Timer(_, HqTimer::Dispatched(_))
+        )));
+    }
+
+    #[test]
+    fn time_limit_kills_runaway() {
+        let mut core = WorkStealCore::new(cfg());
+        let recs = drive(
+            &mut core,
+            vec![(0, TaskSpec { tag: 9, cores: 1, time_request: SEC,
+                                time_limit: 5 * SEC })],
+            SEC,
+            |_| 60 * SEC,
+        );
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].truncated);
+        assert!(recs[0].cpu <= 5 * SEC + MS);
+    }
+
+    #[test]
+    fn autoalloc_caps_respected() {
+        let mut core = WorkStealCore::new(AutoAllocConfig {
+            backlog: 2,
+            max_worker_count: 2,
+            ..cfg()
+        });
+        let mut allocs = 0;
+        let mut out = Vec::new();
+        for i in 0..8u64 {
+            out.clear();
+            core.submit_task_into(i, spec(i, 1), &mut out);
+            allocs += out.iter().filter(|a| matches!(
+                a,
+                HqAction::SubmitAllocation { .. }
+            )).count();
+        }
+        assert_eq!(allocs, 2, "backlog=2 caps queued allocs");
+        assert_eq!(core.allocs_waiting(), 2);
+        let mut out = Vec::new();
+        core.on_alloc_up_into(10, 3600 * SEC, 16, &mut out);
+        core.on_alloc_up_into(11, 3600 * SEC, 16, &mut out);
+        core.on_alloc_up_into(12, 3600 * SEC, 16, &mut out);
+        assert!(core.live_workers() <= 2);
+    }
+
+    #[test]
+    fn expiry_heap_matches_worker_lifetimes() {
+        let mut core = WorkStealCore::new(AutoAllocConfig {
+            backlog: 4,
+            max_worker_count: 4,
+            ..cfg()
+        });
+        let mut out = Vec::new();
+        for i in 0..4u64 {
+            core.submit_task_into(i, spec(i, 16), &mut out);
+        }
+        core.on_alloc_up_into(0, 10 * SEC, 16, &mut out);
+        core.on_alloc_up_into(0, 50 * SEC, 16, &mut out);
+        assert_eq!(core.live_workers(), 2);
+        core.expire_workers_into(5 * SEC, &mut out);
+        assert_eq!(core.live_workers(), 2);
+        core.expire_workers_into(20 * SEC, &mut out);
+        assert_eq!(core.live_workers(), 1);
+        core.expire_workers_into(60 * SEC, &mut out);
+        assert_eq!(core.live_workers(), 0);
+        core.expire_workers_into(61 * SEC, &mut out);
+        assert_eq!(core.live_workers(), 0);
+    }
+}

@@ -25,8 +25,9 @@
 //!   append-only final-state archive (1 byte/job), so the map is bounded
 //!   by in-flight work no matter how many jobs have retired.
 //! * Every transition appends into a caller-supplied action buffer
-//!   (`*_into` methods); the allocating wrappers survive for call sites
-//!   where a fresh `Vec` per event is fine (live daemon, tests).
+//!   (the [`BatchCore`] trait's `*_into` methods); the allocating
+//!   wrappers are provided (default) trait methods for call sites where
+//!   a fresh `Vec` per event is fine (live daemon, tests).
 
 use std::collections::{BTreeSet, HashMap};
 
@@ -91,6 +92,68 @@ pub enum Timer {
     BgArrival,
     /// Background job completion.
     BgFinish(JobId),
+}
+
+/// The SLURM-style batch-core event surface.
+///
+/// The `*_into` sink methods are the primary API (append actions into a
+/// caller-supplied buffer — allocation-lean on the million-task sim
+/// paths); the Vec-returning wrappers are provided methods for low-rate
+/// callers (live daemon, tests), so the `let mut out = Vec::new()`
+/// boilerplate lives here exactly once.
+pub trait BatchCore {
+    /// sbatch, appending actions into a reusable buffer.
+    fn submit_into(
+        &mut self,
+        t: Micros,
+        user: u32,
+        tag: u64,
+        req: JobRequest,
+        out: &mut Vec<Action>,
+    ) -> JobId;
+
+    /// scancel, appending actions into a reusable buffer.
+    fn cancel_into(&mut self, t: Micros, id: JobId, out: &mut Vec<Action>);
+
+    /// Workload-completion signal, appending into a reusable buffer.
+    fn on_finish_into(&mut self, t: Micros, id: JobId, out: &mut Vec<Action>);
+
+    /// Timer dispatch, appending into a reusable buffer.
+    fn on_timer_into(&mut self, t: Micros, timer: Timer, out: &mut Vec<Action>);
+
+    /// sbatch: submit a job.  Returns the id plus actions.
+    fn submit(
+        &mut self,
+        t: Micros,
+        user: u32,
+        tag: u64,
+        req: JobRequest,
+    ) -> (JobId, Vec<Action>) {
+        let mut out = Vec::new();
+        let id = self.submit_into(t, user, tag, req, &mut out);
+        (id, out)
+    }
+
+    /// scancel.
+    fn cancel(&mut self, t: Micros, id: JobId) -> Vec<Action> {
+        let mut out = Vec::new();
+        self.cancel_into(t, id, &mut out);
+        out
+    }
+
+    /// Driver signals the workload completed.
+    fn on_finish(&mut self, t: Micros, id: JobId) -> Vec<Action> {
+        let mut out = Vec::new();
+        self.on_finish_into(t, id, &mut out);
+        out
+    }
+
+    /// Timer dispatch.
+    fn on_timer(&mut self, t: Micros, timer: Timer) -> Vec<Action> {
+        let mut out = Vec::new();
+        self.on_timer_into(t, timer, &mut out);
+        out
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -185,21 +248,55 @@ impl SlurmCore {
         acts
     }
 
-    /// sbatch: submit a job.  Returns the id plus actions.
-    pub fn submit(
-        &mut self,
-        t: Micros,
-        user: u32,
-        tag: u64,
-        req: JobRequest,
-    ) -> (JobId, Vec<Action>) {
-        let mut out = Vec::new();
-        let id = self.submit_into(t, user, tag, req, &mut out);
-        (id, out)
+    // ---- Introspection (squeue-like) ------------------------------------
+
+    pub fn state_of(&self, id: JobId) -> Option<JobState> {
+        if let Some(j) = self.jobs.get(&id) {
+            return Some(j.state);
+        }
+        match self.final_states.get(id as usize) {
+            Some(&FINAL_DONE) => Some(JobState::Done),
+            Some(&FINAL_CANCELLED) => Some(JobState::Cancelled),
+            _ => None,
+        }
     }
 
-    /// sbatch, appending actions into a reusable buffer.
-    pub fn submit_into(
+    pub fn pending_count(&self) -> usize {
+        self.pending_len
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.jobs
+            .values()
+            .filter(|j| matches!(j.state, JobState::Running | JobState::Starting))
+            .count()
+    }
+
+    pub fn used_cores(&self) -> u64 {
+        self.inv.used_cores()
+    }
+
+    /// Node of an in-flight job (terminal jobs are archived without
+    /// placement detail).
+    pub fn node_of(&self, id: JobId) -> Option<usize> {
+        self.jobs.get(&id).and_then(|j| {
+            (j.node != usize::MAX).then_some(j.node)
+        })
+    }
+
+    /// Jobs resident in the hot map (bounded by in-flight work).
+    pub fn resident_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Jobs evicted to the terminal-state archive.
+    pub fn retired_count(&self) -> u64 {
+        self.retired
+    }
+}
+
+impl BatchCore for SlurmCore {
+    fn submit_into(
         &mut self,
         t: Micros,
         user: u32,
@@ -238,15 +335,7 @@ impl SlurmCore {
         id
     }
 
-    /// scancel.
-    pub fn cancel(&mut self, t: Micros, id: JobId) -> Vec<Action> {
-        let mut out = Vec::new();
-        self.cancel_into(t, id, &mut out);
-        out
-    }
-
-    /// scancel, appending actions into a reusable buffer.
-    pub fn cancel_into(&mut self, t: Micros, id: JobId, out: &mut Vec<Action>) {
+    fn cancel_into(&mut self, t: Micros, id: JobId, out: &mut Vec<Action>) {
         let Some(job) = self.jobs.get(&id) else { return };
         match job.state {
             JobState::Pending | JobState::Submitting => {
@@ -279,27 +368,11 @@ impl SlurmCore {
         }
     }
 
-    /// Driver signals the workload completed.
-    pub fn on_finish(&mut self, t: Micros, id: JobId) -> Vec<Action> {
-        let mut out = Vec::new();
-        self.on_finish_into(t, id, &mut out);
-        out
-    }
-
-    /// Workload-completion signal, appending into a reusable buffer.
-    pub fn on_finish_into(&mut self, t: Micros, id: JobId, out: &mut Vec<Action>) {
+    fn on_finish_into(&mut self, t: Micros, id: JobId, out: &mut Vec<Action>) {
         self.finish_inner(t, id, false, out)
     }
 
-    /// Timer dispatch.
-    pub fn on_timer(&mut self, t: Micros, timer: Timer) -> Vec<Action> {
-        let mut out = Vec::new();
-        self.on_timer_into(t, timer, &mut out);
-        out
-    }
-
-    /// Timer dispatch, appending into a reusable buffer.
-    pub fn on_timer_into(&mut self, t: Micros, timer: Timer, out: &mut Vec<Action>) {
+    fn on_timer_into(&mut self, t: Micros, timer: Timer, out: &mut Vec<Action>) {
         match timer {
             Timer::Cycle => self.on_cycle(t, out),
             Timer::Eligible(id) => {
@@ -332,7 +405,10 @@ impl SlurmCore {
             Timer::BgFinish(id) => self.on_finish_into(t, id, out),
         }
     }
+}
 
+// Private transition helpers (shared by the trait impl above).
+impl SlurmCore {
     /// One scheduler pass: place pending jobs in priority order.
     ///
     /// Priority: older eligible time first, with per-user quota decay
@@ -515,52 +591,6 @@ impl SlurmCore {
         self.jobs.get_mut(&id).unwrap().bg_duration = Some(dur);
         let dt = self.rng.exponential(self.model.bg_interarrival as f64);
         out.push(Action::Timer(t + dt as Micros, Timer::BgArrival));
-    }
-
-    // ---- Introspection (squeue-like) ------------------------------------
-
-    pub fn state_of(&self, id: JobId) -> Option<JobState> {
-        if let Some(j) = self.jobs.get(&id) {
-            return Some(j.state);
-        }
-        match self.final_states.get(id as usize) {
-            Some(&FINAL_DONE) => Some(JobState::Done),
-            Some(&FINAL_CANCELLED) => Some(JobState::Cancelled),
-            _ => None,
-        }
-    }
-
-    pub fn pending_count(&self) -> usize {
-        self.pending_len
-    }
-
-    pub fn running_count(&self) -> usize {
-        self.jobs
-            .values()
-            .filter(|j| matches!(j.state, JobState::Running | JobState::Starting))
-            .count()
-    }
-
-    pub fn used_cores(&self) -> u64 {
-        self.inv.used_cores()
-    }
-
-    /// Node of an in-flight job (terminal jobs are archived without
-    /// placement detail).
-    pub fn node_of(&self, id: JobId) -> Option<usize> {
-        self.jobs.get(&id).and_then(|j| {
-            (j.node != usize::MAX).then_some(j.node)
-        })
-    }
-
-    /// Jobs resident in the hot map (bounded by in-flight work).
-    pub fn resident_jobs(&self) -> usize {
-        self.jobs.len()
-    }
-
-    /// Jobs evicted to the terminal-state archive.
-    pub fn retired_count(&self) -> u64 {
-        self.retired
     }
 }
 

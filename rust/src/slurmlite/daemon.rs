@@ -12,7 +12,7 @@ use crate::cluster::{ClusterSpec, JobRequest, OverheadModel};
 use crate::clock::{Des, Micros, RealClock};
 use crate::metrics::JobRecord;
 
-use super::core::{Action, JobId, SlurmCore, Timer};
+use super::core::{Action, BatchCore, JobId, SlurmCore, Timer};
 
 /// Events delivered to the daemon's sink.
 #[derive(Clone, Debug)]

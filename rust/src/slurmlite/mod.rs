@@ -13,6 +13,6 @@ pub mod core;
 pub mod daemon;
 pub mod reference;
 
-pub use self::core::{Action, JobId, JobState, SlurmCore};
+pub use self::core::{Action, BatchCore, JobId, JobState, SlurmCore};
 pub use self::daemon::SlurmDaemon;
 pub use self::reference::ReferenceSlurmCore;

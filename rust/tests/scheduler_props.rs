@@ -2,18 +2,25 @@
 //! workloads through the sim-plane experiment runners must satisfy the
 //! structural properties of correct scheduling regardless of seed —
 //! plus observational-equivalence tests pinning the indexed scheduler
-//! cores to the seed semantics preserved in the `reference` modules.
+//! cores to the seed semantics preserved in the `reference` modules,
+//! plus pluggability tests running all three schedulers generically
+//! through one `SchedulerCore` harness and pinning the work-stealing
+//! core's no-task-lost / FIFO-deque invariants under worker churn.
 
 use std::collections::HashMap;
 
+use uqsched::campaign::{CampaignConfig, CampaignResult, FixedDepth,
+                        SlurmMode, Submission};
 use uqsched::cluster::{ClusterSpec, JobRequest, OverheadModel};
 use uqsched::clock::{Des, Micros, MS, SEC};
 use uqsched::experiments::{run_naive_slurm, run_umbridge_hq,
                            run_umbridge_slurm, Config};
 use uqsched::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer,
-                      ReferenceHqCore, TaskId, TaskSpec};
+                      ReferenceHqCore, TaskCore, TaskId, TaskSpec};
 use uqsched::metrics::JobRecord;
-use uqsched::slurmlite::core::{Action, JobId, SlurmCore, Timer,
+use uqsched::sched::{kernel, CapacityChange, Effect, MetaStack,
+                     SchedulerCore, SlurmSched, StackTimer, WorkStealCore};
+use uqsched::slurmlite::core::{Action, BatchCore, JobId, SlurmCore, Timer,
                                USER_EXPERIMENT};
 use uqsched::slurmlite::ReferenceSlurmCore;
 use uqsched::util::prop;
@@ -545,6 +552,285 @@ fn cancel_while_pending_under_indexed_queue() {
         assert_eq!(core.state_of(id),
                    Some(uqsched::slurmlite::JobState::Cancelled));
     }
+}
+
+// ---------------------------------------------------------------------------
+// Pluggability: all three schedulers through ONE generic harness.
+//
+// The `SchedulerCore` seam promises that a campaign is scheduler-
+// agnostic: the same protocol, driven by the same generic kernel, must
+// satisfy the same structural properties on every implementation —
+// SLURM, the HQ stack, and the work-stealing stack.
+// ---------------------------------------------------------------------------
+
+/// The paper's fixed-depth protocol through the generic kernel, against
+/// any scheduler — the whole point of the trait.
+fn run_generic<S: SchedulerCore>(core: &mut S, cfg: &Config) -> CampaignResult {
+    let mut sub =
+        FixedDepth::new(cfg.app, cfg.n_evals, cfg.queue_depth, cfg.seed);
+    kernel::run(core, &mut sub)
+}
+
+#[test]
+fn prop_all_three_cores_through_one_scheduler_core_harness() {
+    prop::check("sched-core-generic", 8, |rng| {
+        let cfg = random_cfg(rng);
+        let ccfg = cfg.campaign();
+        let mut results: Vec<CampaignResult> = Vec::new();
+        {
+            let mut core = SlurmSched::new(&ccfg, SlurmMode::Native);
+            results.push(run_generic(&mut core, &cfg));
+        }
+        {
+            let mut core =
+                MetaStack::new(&ccfg, HqCore::new(ccfg.autoalloc()), "HQ");
+            results.push(run_generic(&mut core, &cfg));
+        }
+        {
+            let mut core = MetaStack::new(
+                &ccfg,
+                WorkStealCore::new(ccfg.autoalloc()),
+                "worksteal",
+            );
+            results.push(run_generic(&mut core, &cfg));
+        }
+        for r in &results {
+            let label = &r.metrics.scheduler;
+            assert_eq!(r.experiment.records.len() as u64, cfg.n_evals,
+                       "{label}: wrong record count");
+            assert_eq!(r.metrics.completed, cfg.n_evals,
+                       "{label}: wrong completion count");
+            assert_eq!(r.metrics.submitted, cfg.n_evals,
+                       "{label}: fixed-depth submits exactly n");
+            let mut tags: Vec<u64> =
+                r.experiment.records.iter().map(|x| x.tag).collect();
+            tags.sort_unstable();
+            tags.dedup();
+            assert_eq!(tags.len() as u64, cfg.n_evals,
+                       "{label}: duplicated/lost tags");
+            for rec in &r.experiment.records {
+                assert!(rec.submit <= rec.start && rec.start <= rec.end,
+                        "{label}: time ordering violated");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_worksteal_campaign_deterministic_under_seed() {
+    prop::check("worksteal-determinism", 4, |rng| {
+        let cfg = random_cfg(rng);
+        let run = || {
+            let ccfg = cfg.campaign();
+            let mut core = MetaStack::new(
+                &ccfg,
+                WorkStealCore::new(ccfg.autoalloc()),
+                "worksteal",
+            );
+            run_generic(&mut core, &cfg)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.experiment.records.len(), b.experiment.records.len());
+        for (x, y) in a.experiment.records.iter().zip(&b.experiment.records) {
+            assert_eq!(x, y, "worksteal campaign not seed-deterministic");
+        }
+    });
+}
+
+/// Worker loss injected through the `SchedulerCore` capacity-change
+/// seam itself (`MetaStack::on_capacity_change_into`): the full
+/// UM-Bridge + worksteal stack must requeue and finish every
+/// evaluation.  Drives the stack through its trait surface with a
+/// miniature kernel so a capacity event can be injected mid-flight
+/// (the production kernel never emits one on the paper paths).
+#[test]
+fn stack_capacity_change_requeues_without_loss() {
+    let mut ccfg = CampaignConfig::paper(App::Gp, 2, 9);
+    ccfg.cluster = ClusterSpec::small(8);
+    ccfg.overheads.bg_interarrival = Micros::MAX;
+    ccfg.registration_jobs = 0;
+    let mut core = MetaStack::new(
+        &ccfg,
+        WorkStealCore::new(ccfg.autoalloc()),
+        "worksteal",
+    );
+
+    #[derive(Debug)]
+    enum Ev {
+        Timer(StackTimer),
+        WorkDone(TaskId),
+        Lose(u64),
+    }
+    let n = 6u64;
+    let mut des: Des<Ev> = Des::new();
+    let mut effects = Vec::new();
+    let mut durs: HashMap<TaskId, uqsched::clock::Micros> = HashMap::new();
+    core.bootstrap_into(0, &mut effects);
+    for tag in 0..n {
+        let s = Submission { tag, user: 0, app: App::Gp, duration: 2 * SEC };
+        let (tid, dur) = core.submit_into(0, &s, &mut effects);
+        durs.insert(tid, dur);
+    }
+
+    let mut now: Micros = 0;
+    let mut lost_injected = false;
+    let mut tags: Vec<u64> = Vec::new();
+    let mut guard = 0u64;
+    loop {
+        guard += 1;
+        assert!(guard < 100_000, "runaway capacity-change trace");
+        for e in effects.drain(..) {
+            match e {
+                Effect::SetTimer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                Effect::Start { id, contention } => {
+                    if !lost_injected {
+                        // Yank the first worker the moment it takes work.
+                        lost_injected = true;
+                        des.schedule(now, Ev::Lose(1));
+                    }
+                    let dd = (durs[&id] as f64 * contention) as Micros;
+                    des.schedule(now + dd, Ev::WorkDone(id));
+                }
+                Effect::Finish { record, .. } => {
+                    assert_ne!(record.tag, u64::MAX);
+                    tags.push(record.tag);
+                }
+                Effect::Retire { .. } | Effect::Queued => {}
+            }
+        }
+        if tags.len() as u64 >= n {
+            break;
+        }
+        let Some((t, ev)) = des.pop() else { break };
+        now = t;
+        match ev {
+            Ev::Timer(tm) => core.on_timer_into(t, tm, &mut effects),
+            Ev::WorkDone(id) => core.on_work_done_into(t, id, &mut effects),
+            Ev::Lose(wid) => core.on_capacity_change_into(
+                t,
+                CapacityChange::WorkerLost(wid),
+                &mut effects,
+            ),
+        }
+    }
+    assert!(lost_injected, "a worker must have taken work");
+    tags.sort_unstable();
+    tags.dedup();
+    assert_eq!(tags.len() as u64, n,
+               "capacity change through the seam lost evaluations");
+    assert_eq!(core.meta().retired_count(), n);
+    assert_eq!(core.meta().resident_tasks(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Work-stealing invariants under worker churn: random task streams with
+// workers yanked away mid-flight.  No task may be lost (every
+// submission produces exactly one terminal record) and every private
+// deque stays FIFO (ascending task id) at all times — owners pop the
+// front, thieves the back.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_worksteal_no_task_lost_and_deques_fifo_under_churn() {
+    prop::check("worksteal-churn", 10, |rng| {
+        let n = 5 + rng.below(20) as usize;
+        let cfg = AutoAllocConfig {
+            backlog: 1 + rng.below(3) as u32,
+            workers_per_alloc: 1 + rng.below(2) as u32,
+            max_worker_count: 2 + rng.below(4) as u32,
+            alloc_request: JobRequest::new(16, 16, 1000 * SEC),
+            dispatch_latency: 1 * MS,
+        };
+        let specs: Vec<(Micros, TaskSpec, Micros)> = (0..n)
+            .map(|i| {
+                let t = rng.below(60) * SEC;
+                let spec = TaskSpec {
+                    tag: i as u64,
+                    cores: 1 + rng.below(16) as u32,
+                    time_request: (1 + rng.below(20)) * SEC,
+                    time_limit: 1000 * SEC,
+                };
+                let dur = (1 + rng.below(12)) * SEC / 2;
+                (t, spec, dur)
+            })
+            .collect();
+
+        #[derive(Debug)]
+        enum Ev {
+            Submit(usize),
+            AllocUp,
+            Timer(HqTimer),
+            Done(TaskId),
+            Lose(u64),
+        }
+        let mut des: Des<Ev> = Des::new();
+        for (i, (t, ..)) in specs.iter().enumerate() {
+            des.schedule(*t, Ev::Submit(i));
+        }
+        // Worker churn: a few losses at random times against random
+        // (possibly never-existing) worker ids — misses must be no-ops.
+        for _ in 0..(1 + rng.below(4)) {
+            des.schedule((5 + rng.below(120)) * SEC,
+                         Ev::Lose(1 + rng.below(8)));
+        }
+        let alloc_delay = (1 + rng.below(10)) * SEC;
+
+        let mut core = WorkStealCore::new(cfg);
+        // Durations by task id (ids are assigned in submission-fire
+        // order, which matches the DES pop order of the Submit events).
+        let mut durs: Vec<Micros> = Vec::new();
+        let mut records: Vec<JobRecord> = Vec::new();
+        let mut acts: Vec<HqAction> = Vec::new();
+        let mut guard = 0u64;
+        while let Some((t, ev)) = des.pop() {
+            guard += 1;
+            assert!(guard < 500_000, "runaway churn trace");
+            acts.clear();
+            match ev {
+                Ev::Submit(i) => {
+                    let (_, spec, dur) = &specs[i];
+                    durs.push(*dur);
+                    core.submit_task_into(t, spec.clone(), &mut acts);
+                }
+                Ev::AllocUp => {
+                    core.on_alloc_up_into(t, 1000 * SEC, 16, &mut acts)
+                }
+                Ev::Timer(tm) => core.on_timer_into(t, tm, &mut acts),
+                Ev::Done(id) => core.on_task_done_into(t, id, &mut acts),
+                Ev::Lose(wid) => core.on_worker_lost_into(t, wid, &mut acts),
+            }
+            assert!(core.deques_fifo(),
+                    "a steal or requeue broke per-deque FIFO order");
+            for a in acts.drain(..) {
+                match a {
+                    HqAction::SubmitAllocation { .. } => {
+                        des.schedule(t + alloc_delay, Ev::AllocUp);
+                    }
+                    HqAction::StartTask { task, .. } => {
+                        let dur = durs[(task - 1) as usize];
+                        des.schedule(t + dur, Ev::Done(task));
+                    }
+                    HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                    HqAction::TaskCompleted { record, .. } => {
+                        records.push(record);
+                    }
+                    HqAction::KillTask { .. } => {}
+                }
+            }
+            if records.len() >= n {
+                break;
+            }
+        }
+        assert_eq!(records.len(), n,
+                   "worker churn lost tasks: {} of {n} completed",
+                   records.len());
+        let mut tags: Vec<u64> = records.iter().map(|r| r.tag).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), n, "duplicate/lost completions under churn");
+        assert_eq!(core.resident_tasks(), 0, "hot map drained");
+    });
 }
 
 #[test]
