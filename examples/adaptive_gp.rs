@@ -17,6 +17,7 @@ use std::sync::Arc;
 
 use uqsched::cli::Args;
 use uqsched::coordinator::start_live;
+use uqsched::sched::LivePolicy;
 use uqsched::json::Value;
 use uqsched::models;
 use uqsched::runtime::Engine;
@@ -43,6 +44,7 @@ fn main() -> anyhow::Result<()> {
         2,
         2000.0,
         true,
+        LivePolicy::Fcfs,
     )?;
     let mut sim = HttpModel::connect(&stack.balancer.url(),
                                      models::GS2_NAME)?;

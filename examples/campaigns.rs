@@ -11,8 +11,9 @@
 //!   depend on the results observed so far,
 //!
 //! and — via the `SchedulerCore` seam — that every policy runs
-//! unchanged against a *third* scheduler (`worksteal`, the partitioned
-//! work-stealing dispatcher) next to the paper's two.
+//! unchanged against a *third* and *fourth* scheduler (`worksteal`, the
+//! partitioned work-stealing dispatcher, and `edf`, deadline-EDF) next
+//! to the paper's two.
 //!
 //! Illustrative companion to `uqsched campaign` (this examples/ tree
 //! sits outside the cargo package and is not built by it; run the same
@@ -78,12 +79,16 @@ fn main() -> anyhow::Result<()> {
     report(&campaign::run_hq(&cfg, &mut sub));
     let mut sub = FixedDepth::new(App::Gp, tasks, 4, seed);
     report(&campaign::run_worksteal(&cfg, &mut sub));
+    let mut sub = FixedDepth::new(App::Gp, tasks, 4, seed);
+    report(&campaign::run_edf(&cfg, &mut sub));
 
     println!("== bursty open-loop arrivals (Poisson bursts) ==");
     let mut sub = PoissonBurst::new(App::Gp, tasks, 2 * SEC, (1, 8), seed);
     report(&campaign::run_hq(&cfg, &mut sub));
     let mut sub = PoissonBurst::new(App::Gp, tasks, 2 * SEC, (1, 8), seed);
     report(&campaign::run_worksteal(&cfg, &mut sub));
+    let mut sub = PoissonBurst::new(App::Gp, tasks, 2 * SEC, (1, 8), seed);
+    report(&campaign::run_edf(&cfg, &mut sub));
 
     println!("== multi-user mix (two tenants, shared cluster) ==");
     let streams = vec![

@@ -10,6 +10,7 @@ use std::time::Instant;
 
 use uqsched::cli::Args;
 use uqsched::coordinator::start_live;
+use uqsched::sched::LivePolicy;
 use uqsched::json::Value;
 use uqsched::metrics::BoxStats;
 use uqsched::models;
@@ -26,6 +27,7 @@ fn run_backend(engine: Arc<Engine>, backend: &str, evals: usize,
         time_scale,
         // Per-job servers: the configuration the paper measured.
         false,
+        LivePolicy::Fcfs,
     )?;
     let mut client = HttpModel::connect(&stack.balancer.url(),
                                         models::EIGEN_SMALL_NAME)?;

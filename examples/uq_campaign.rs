@@ -17,6 +17,7 @@ use std::time::Instant;
 
 use uqsched::cli::Args;
 use uqsched::coordinator::start_live;
+use uqsched::sched::LivePolicy;
 use uqsched::json::Value;
 use uqsched::metrics::BoxStats;
 use uqsched::models;
@@ -44,6 +45,7 @@ fn main() -> anyhow::Result<()> {
         queue_depth,
         time_scale,
         true,
+        LivePolicy::Fcfs,
     )?;
     println!("balancer at {}", stack.balancer.url());
 

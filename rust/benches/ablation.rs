@@ -18,7 +18,8 @@ use uqsched::workload::lhs;
 
 fn run(eng: Arc<Engine>, persistent: bool, evals: usize) -> Vec<f64> {
     let stack = start_live(eng, &[models::GP_NAME], "hq", 2,
-                           2000.0, persistent)
+                           2000.0, persistent,
+                           uqsched::sched::LivePolicy::Fcfs)
         .expect("live stack");
     let mut client = HttpModel::connect(&stack.balancer.url(),
                                         models::GP_NAME)

@@ -6,12 +6,16 @@
 //!   * HTTP+UM-Bridge round-trip latency and throughput
 //!   * end-to-end balancer throughput (queue -> registry -> forward)
 //!   * multi-model balancer throughput: N models through one front
-//!     door, fixed forwarder pool, zero per-evaluation thread spawns
+//!     door, fixed forwarder pool, zero per-evaluation thread spawns —
+//!     run once per live scheduler core (fcfs | worksteal | edf), so
+//!     the serving plane's scheduler ablation is measured under real
+//!     HTTP load
 //!
 //! The PJRT sections need `make artifacts` and self-skip without them;
-//! the multi-model section runs anywhere (synthetic models over the
-//! in-process LocalBackend) and writes `BENCH_hotpath.json` with the
-//! balancer's /Stats document (queue-wait + forward histograms).
+//! the multi-model sections run anywhere (synthetic models over the
+//! in-process LocalBackend) and write `BENCH_hotpath.json` with one row
+//! per scheduler (each carrying the balancer's /Stats document:
+//! queue-wait + forward histograms).
 //!
 //! Knobs: `UQSCHED_HOTPATH_ITERS` (default 300 evals per client),
 //! `UQSCHED_HOTPATH_MODELS` (default 4).
@@ -25,6 +29,7 @@ use uqsched::coordinator::{start_live, BalancerConfig, LoadBalancer,
 use uqsched::json::{self, Value};
 use uqsched::models::{self, GP_NAME};
 use uqsched::runtime::Engine;
+use uqsched::sched::LivePolicy;
 use uqsched::umbridge::{serve_models, HttpModel, Model};
 use uqsched::workload::lhs;
 
@@ -56,7 +61,18 @@ fn main() {
         Ok(eng) => pjrt_sections(Arc::new(eng)),
         Err(e) => println!("  SKIP PJRT sections (no artifacts: {e:#})"),
     }
-    multi_model_section();
+    // The serving-plane scheduler ablation: the same workload through
+    // every live core, one BENCH_hotpath.json row per scheduler.
+    let rows: Vec<Value> = [LivePolicy::Fcfs, LivePolicy::WorkSteal,
+                            LivePolicy::Edf]
+        .into_iter()
+        .map(multi_model_section)
+        .collect();
+    let doc = Value::obj(vec![("schedulers", Value::arr(rows))]);
+    std::fs::write("BENCH_hotpath.json", json::write(&doc))
+        .expect("write BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json (one row per balancer scheduler, \
+              per-model queue-wait/forward histograms)");
     println!("hotpath done");
     std::process::exit(0); // skip slow teardown of live threads
 }
@@ -116,7 +132,8 @@ fn pjrt_sections(eng: Arc<Engine>) {
     });
 
     // End-to-end through the balancer (persistent servers, hq backend).
-    let stack = start_live(eng.clone(), &[GP_NAME], "hq", 2, 2000.0, true)
+    let stack = start_live(eng.clone(), &[GP_NAME], "hq", 2, 2000.0, true,
+                           LivePolicy::Fcfs)
         .expect("live stack");
     // Wait for a server to register (warm start spawns it).
     let t0 = Instant::now();
@@ -133,11 +150,12 @@ fn pjrt_sections(eng: Arc<Engine>) {
     });
 }
 
-/// N models through one balancer front door: per-model queues, the
-/// fixed forwarder pool and registry leases on the hot path — no
-/// per-evaluation thread spawn anywhere.  Artifact-free (synthetic
-/// models, LocalBackend).
-fn multi_model_section() {
+/// N models through one balancer front door: per-model scheduler
+/// cores, the fixed forwarder pool and registry leases on the hot path
+/// — no per-evaluation thread spawn anywhere.  Artifact-free
+/// (synthetic models, LocalBackend).  Returns the scheduler's
+/// BENCH_hotpath.json row.
+fn multi_model_section(scheduler: LivePolicy) -> Value {
     let n_models = env_usize("UQSCHED_HOTPATH_MODELS", 4).max(1);
     let iters = env_usize("UQSCHED_HOTPATH_ITERS", 300).max(1);
     let clients_per_model = 2usize;
@@ -152,6 +170,7 @@ fn multi_model_section() {
         models: names.clone(),
         max_servers: 2,
         forwarders: 8,
+        scheduler,
         ..Default::default()
     };
     let mut lb = LoadBalancer::start(cfg, backend).expect("balancer");
@@ -190,15 +209,17 @@ fn multi_model_section() {
     let dt = t0.elapsed().as_secs_f64();
     let total = (n_models * clients_per_model * iters) as f64;
     println!(
-        "  multi-model balancer ({n_models} models, {} clients)    \
+        "  multi-model balancer [{}] ({n_models} models, {} clients)    \
          {:>10.1} evals/s   {:>10.3} ms/eval",
+        scheduler.label(),
         n_models * clients_per_model,
         total / dt,
         dt / total * 1e3
     );
 
     let stats = lb.stats_json();
-    let doc = Value::obj(vec![
+    let row = Value::obj(vec![
+        ("scheduler", Value::str(scheduler.label())),
         ("multi_model", Value::obj(vec![
             ("models", Value::num(n_models as f64)),
             ("clients", Value::num((n_models * clients_per_model) as f64)),
@@ -208,9 +229,6 @@ fn multi_model_section() {
         ])),
         ("stats", stats),
     ]);
-    std::fs::write("BENCH_hotpath.json", json::write(&doc))
-        .expect("write BENCH_hotpath.json");
-    println!("  wrote BENCH_hotpath.json (per-model queue-wait/forward \
-              histograms)");
     lb.shutdown();
+    row
 }

@@ -1,10 +1,11 @@
-//! Million-task scale benchmark for all three scheduler cores.
+//! Million-task scale benchmark for all four scheduler cores.
 //!
 //! Drives the indexed `SlurmCore`/`HqCore` (and their seed-semantics
-//! reference twins) plus the partitioned `WorkStealCore` through
-//! synthetic task streams at several queue depths, printing tasks/s and
-//! peak resident map sizes and emitting `BENCH_scale.json` so the perf
-//! trajectory is tracked across PRs.
+//! reference twins) plus the partitioned `WorkStealCore` and the
+//! deadline-EDF `EdfCore` through synthetic task streams at several
+//! queue depths, printing tasks/s and peak resident map sizes and
+//! emitting `BENCH_scale.json` so the perf trajectory is tracked across
+//! PRs.
 //!
 //! Run with:
 //!
@@ -36,7 +37,7 @@ use uqsched::workload::App;
 use uqsched::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer,
                       ReferenceHqCore, TaskCore, TaskSpec};
 use uqsched::json::Value;
-use uqsched::sched::WorkStealCore;
+use uqsched::sched::{EdfCore, WorkStealCore};
 use uqsched::slurmlite::core::{Action, BatchCore, SlurmCore, Timer,
                                USER_EXPERIMENT};
 use uqsched::slurmlite::ReferenceSlurmCore;
@@ -289,6 +290,24 @@ impl HqDriver for WorkStealCore {
     }
 }
 
+impl HqDriver for EdfCore {
+    fn drv_submit(&mut self, t: Micros, tag: u64, out: &mut Vec<HqAction>) {
+        self.submit_task_into(t, hq_spec(tag), out);
+    }
+    fn drv_alloc_up(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        self.on_alloc_up_into(t, HQ_ALLOC_LIFE, 16, out);
+    }
+    fn drv_timer(&mut self, t: Micros, tm: HqTimer, out: &mut Vec<HqAction>) {
+        self.on_timer_into(t, tm, out);
+    }
+    fn drv_task_done(&mut self, t: Micros, id: u64, out: &mut Vec<HqAction>) {
+        self.on_task_done_into(t, id, out);
+    }
+    fn drv_resident(&self) -> usize {
+        self.resident_tasks()
+    }
+}
+
 impl HqDriver for ReferenceHqCore {
     fn drv_submit(&mut self, t: Micros, tag: u64, out: &mut Vec<HqAction>) {
         let (_, acts) = self.submit_task(t, hq_spec(tag));
@@ -447,6 +466,16 @@ fn campaign_worksteal(n: u64) -> Row {
     campaign_row("worksteal-bursty", n, res, t0.elapsed().as_secs_f64())
 }
 
+/// And through the deadline-EDF stack: same arrival process, same
+/// 256-worker pool, fourth scheduler.
+fn campaign_edf(n: u64) -> Row {
+    let cfg = campaign_cfg();
+    let mut sub = PoissonBurst::new(App::Eigen100, n, 20 * MS, (1, 64), 42);
+    let t0 = Instant::now();
+    let res = campaign::run_edf(&cfg, &mut sub);
+    campaign_row("edf-bursty", n, res, t0.elapsed().as_secs_f64())
+}
+
 // ---------------------------------------------------------------------------
 
 fn env_u64(name: &str, default: u64) -> u64 {
@@ -489,6 +518,13 @@ fn worksteal_indexed(n: u64, depth: usize) -> Row {
            depth)
 }
 
+/// The fourth scheduler through the same driver: deadline-EDF (one
+/// deadline heap, laxity tie-break) at the same workload and worker
+/// geometry, so the heap-ordered dispatch is directly comparable too.
+fn edf_indexed(n: u64, depth: usize) -> Row {
+    run_hq(&mut EdfCore::new(hq_cfg()), "edf", "indexed", n, depth)
+}
+
 fn main() {
     let max_tasks = env_u64("SCALE_TASKS", 1_000_000);
     let naive_max = env_u64("SCALE_NAIVE_TASKS", 100_000);
@@ -523,9 +559,9 @@ fn main() {
 
     // Scale-out: indexed cores only, up to the million-task target, at
     // several queue depths (0 = everything submitted up front).  The
-    // worksteal rows run the third scheduler through the same driver and
-    // workload as the hq rows.
-    println!("-- scale-out (indexed cores, all three schedulers) --");
+    // worksteal and edf rows run the third and fourth schedulers
+    // through the same driver and workload as the hq rows.
+    println!("-- scale-out (indexed cores, all four schedulers) --");
     let mut sizes: Vec<u64> = [250_000u64, 500_000, 1_000_000]
         .into_iter()
         .filter(|&s| s <= max_tasks)
@@ -540,6 +576,7 @@ fn main() {
                 slurm_indexed(n, depth),
                 hq_indexed(n, depth),
                 worksteal_indexed(n, depth),
+                edf_indexed(n, depth),
             ] {
                 r.print();
                 rows.push(r);
@@ -551,11 +588,12 @@ fn main() {
     let campaign_tasks = env_u64("SCALE_CAMPAIGN_TASKS", 100_000);
     if campaign_tasks > 0 {
         println!("-- campaign mode (bursty + adaptive on hq, bursty on \
-                  worksteal) --");
+                  worksteal + edf) --");
         for r in [
             campaign_bursty(campaign_tasks),
             campaign_adaptive(campaign_tasks),
             campaign_worksteal(campaign_tasks),
+            campaign_edf(campaign_tasks),
         ] {
             r.print();
             rows.push(r);
@@ -613,6 +651,17 @@ fn main() {
             ws.tasks
         );
         summary.push(("worksteal_over_hq_depth8192", Value::num(ratio)));
+    }
+    let edf_row = rows.iter().find(|r| {
+        r.core == "edf" && r.imp == "indexed" && r.depth == 8_192
+    });
+    if let (Some(hq), Some(edf)) = (hq_row, edf_row) {
+        let ratio = edf.tasks_per_s / hq.tasks_per_s.max(1e-9);
+        println!(
+            "edf vs hq throughput at depth 8192 ({} tasks): {ratio:.2}x",
+            edf.tasks
+        );
+        summary.push(("edf_over_hq_depth8192", Value::num(ratio)));
     }
 
     let out_path = std::env::var("SCALE_OUT")

@@ -16,6 +16,9 @@
 //!   per-task dispatch).
 //! * [`run_worksteal`] — `MetaStack<WorkStealCore>`: the same UM-Bridge
 //!   stack over the partitioned work-stealing dispatcher.
+//! * [`run_edf`] — `MetaStack<EdfCore>`: the same UM-Bridge stack over
+//!   the deadline-EDF dispatcher (earliest deadline first, laxity
+//!   tie-break).
 //!
 //! With the [`FixedDepth`](super::submitter::FixedDepth) policy the
 //! SLURM and HQ paths reproduce the PR 1 experiment drivers
@@ -31,8 +34,8 @@
 use crate::cluster::{ClusterSpec, OverheadModel};
 use crate::hqlite::{AutoAllocConfig, HqCore};
 use crate::metrics::Experiment;
-use crate::sched::{kernel, HqSched, MetaStack, SlurmSched, WorkStealCore,
-                   WorkStealSched};
+use crate::sched::{kernel, EdfCore, EdfSched, HqSched, MetaStack,
+                   SlurmSched, WorkStealCore, WorkStealSched};
 use crate::workload::{scenario, App};
 
 use super::metrics::CampaignMetrics;
@@ -141,6 +144,17 @@ pub fn run_worksteal(
     kernel::run(&mut core, sub)
 }
 
+/// Run a campaign against the UM-Bridge + deadline-EDF stack (same
+/// allocation mechanics as [`run_hq`], dispatch strictly earliest
+/// deadline first with laxity tie-break — each task's deadline is its
+/// submission time plus its kill limit).
+pub fn run_edf(cfg: &CampaignConfig, sub: &mut dyn Submitter)
+               -> CampaignResult {
+    let mut core: EdfSched =
+        MetaStack::new(cfg, EdfCore::new(cfg.autoalloc()), "edf");
+    kernel::run(&mut core, sub)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,6 +195,13 @@ mod tests {
         assert_eq!(r3.metrics.completed, 12);
         assert!(r3.metrics.peak_in_flight as u64 <= 2 + cfg.registration_jobs);
         assert_eq!(r3.metrics.scheduler, "worksteal");
+
+        let mut s4 = FixedDepth::new(App::Eigen100, 12, 2, cfg.seed);
+        let r4 = run_edf(&cfg, &mut s4);
+        assert_eq!(r4.experiment.records.len(), 12);
+        assert_eq!(r4.metrics.completed, 12);
+        assert!(r4.metrics.peak_in_flight as u64 <= 2 + cfg.registration_jobs);
+        assert_eq!(r4.metrics.scheduler, "edf");
     }
 
     #[test]

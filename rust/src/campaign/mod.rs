@@ -14,13 +14,15 @@
 //!   (runtime-heteroskedastic task families), and [`AdaptiveBayes`]
 //!   (Bayesian-inversion-style feedback batches whose size depends on
 //!   completed results).
-//! * [`run_slurm`] / [`run_hq`] / [`run_worksteal`] — thin config
-//!   adapters selecting a [`SchedulerCore`](crate::sched::SchedulerCore)
-//!   implementation (SLURM native/UM-Bridge, UM-Bridge + HQ, UM-Bridge +
-//!   work stealing) and handing it to the one generic event kernel in
-//!   [`crate::sched::kernel`].  `experiments::run_naive_slurm`,
-//!   `run_umbridge_slurm`, `run_umbridge_hq` and
-//!   `run_umbridge_worksteal` are thin wrappers over these.
+//! * [`run_slurm`] / [`run_hq`] / [`run_worksteal`] / [`run_edf`] —
+//!   thin config adapters selecting a
+//!   [`SchedulerCore`](crate::sched::SchedulerCore) implementation
+//!   (SLURM native/UM-Bridge, UM-Bridge + HQ, UM-Bridge + work
+//!   stealing, UM-Bridge + deadline-EDF) and handing it to the one
+//!   generic event kernel in [`crate::sched::kernel`].
+//!   `experiments::run_naive_slurm`, `run_umbridge_slurm`,
+//!   `run_umbridge_hq`, `run_umbridge_worksteal` and
+//!   `run_umbridge_edf` are thin wrappers over these.
 //! * [`CampaignMetrics`] — what only exists at the stream level:
 //!   time-to-Nth-result milestones, the queue-depth trajectory, per-user
 //!   fairness (Jain index over mean SLRs), serialised into the JSON
@@ -43,7 +45,7 @@ pub mod driver;
 pub mod metrics;
 pub mod submitter;
 
-pub use driver::{run_hq, run_slurm, run_worksteal, CampaignConfig,
+pub use driver::{run_edf, run_hq, run_slurm, run_worksteal, CampaignConfig,
                  CampaignResult, SlurmMode};
 pub use metrics::{jain_fairness, CampaignMetrics, UserStats};
 pub use submitter::{

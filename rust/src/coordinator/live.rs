@@ -8,6 +8,7 @@ use anyhow::{bail, Result};
 
 use crate::cluster::{ClusterSpec, JobRequest, OverheadModel};
 use crate::runtime::Engine;
+use crate::sched::LivePolicy;
 use crate::slurmlite::daemon::{EventSink, SlurmDaemon};
 use crate::workload::{app_for_model, scenario};
 
@@ -29,6 +30,8 @@ pub struct LiveStack {
 /// can never succeed.  `servers` is the per-model cap.  `time_scale`
 /// compresses paper-scale scheduler overheads (60.0 maps one
 /// paper-minute onto one live second; see DESIGN.md section 7).
+/// `scheduler` picks the live dispatch policy (`fcfs` | `worksteal` |
+/// `edf` — the same cores the campaign plane ablates).
 pub fn start_live(
     eng: Arc<Engine>,
     models: &[&str],
@@ -36,6 +39,7 @@ pub fn start_live(
     servers: usize,
     time_scale: f64,
     persistent_servers: bool,
+    scheduler: LivePolicy,
 ) -> Result<LiveStack> {
     if models.is_empty() {
         bail!("start_live needs at least one model");
@@ -60,6 +64,7 @@ pub fn start_live(
         models: models.iter().map(|m| m.to_string()).collect(),
         max_servers: servers,
         persistent_servers,
+        scheduler,
         ..Default::default()
     };
 

@@ -1,6 +1,8 @@
 //! The paper's contribution: the UM-Bridge load balancer for classical
 //! HPC systems (section II.C), rearchitected as a multi-model,
-//! high-concurrency serving plane.
+//! high-concurrency serving plane **dispatching through the same
+//! [`SchedulerCore`](crate::sched::SchedulerCore) seam the campaigns
+//! use**.
 //!
 //! The balancer is an intermediate proxy between parallel UQ clients and
 //! per-model pools of model-server instances it spawns on demand through
@@ -18,14 +20,21 @@
 //!   "at least five additional jobs ... verifying the readiness of the
 //!   model server" — and **learns the model's contract** from them;
 //!   there is no static contract table;
-//! * client requests are routed by the UM-Bridge `name` field into
-//!   **per-model bounded FCFS queues**; a full queue answers
-//!   `503 Service Unavailable` + `Retry-After` instead of growing
-//!   without bound;
-//! * a **fixed pool of forwarder workers** drains the queues via condvar
-//!   handoff (no polling, no per-evaluation thread spawn), leasing
-//!   servers from the registry ([`registry::ServerLease`]: release on
-//!   drop, retire on failure/per-job mode);
+//! * client requests are routed by the UM-Bridge `name` field into a
+//!   per-model **real-time scheduler core**
+//!   ([`sched::realtime`](crate::sched::realtime)): an `/Evaluate`
+//!   becomes a `Submit` event, a server registration a worker
+//!   `CapacityChange`, a finished forward a `WorkDone` — the dispatch
+//!   *policy* is pluggable ([`LivePolicy`]: `fcfs` | `worksteal` |
+//!   `edf`) and identical to the cores the campaign plane ablates;
+//! * a full queue answers `503 Service Unavailable` with a `Retry-After`
+//!   derived from the live queue-wait histogram's p50 (clamped to
+//!   [1, 30] s) instead of growing without bound;
+//! * a **fixed pool of forwarder workers** consumes the cores' `Start`
+//!   effects via condvar handoff (the wait deadline follows the cores'
+//!   `SetTimer` effects), leasing exactly the server the policy placed
+//!   the work on ([`registry::ServerLease`]: release on drop, retire on
+//!   failure/per-job mode);
 //! * queue-wait and forward-latency histograms plus per-model counters
 //!   are exposed on `GET /Stats` (and via [`LoadBalancer::stats_json`]).
 //!
@@ -45,16 +54,19 @@ pub mod live;
 pub mod portfile;
 pub mod registry;
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::hqlite::TaskId;
 use crate::httpd::{Handler, HttpClient, Request, Response, Server};
 use crate::json::{self, Value};
 use crate::metrics::Histogram;
+use crate::sched::realtime::RtDriver;
+use crate::sched::LivePolicy;
 use crate::umbridge::{HttpModel, ModelContract};
 
 pub use backend::{Backend, HqBackend, LocalBackend, ModelFactory,
@@ -76,8 +88,9 @@ pub struct BalancerConfig {
     pub persistent_servers: bool,
     /// Poll interval for the port-file watcher.
     pub poll_interval: Duration,
-    /// Bound on each per-model queue; beyond it /Evaluate answers
-    /// 503 + Retry-After (backpressure instead of unbounded growth).
+    /// Bound on each model's undispatched queue; beyond it /Evaluate
+    /// answers 503 + Retry-After (backpressure instead of unbounded
+    /// growth).
     pub queue_capacity: usize,
     /// Minimum forwarder worker-pool size.  The pool is sized to at
     /// least `models.len() * max_servers` — the lease capacity bounds
@@ -85,11 +98,16 @@ pub struct BalancerConfig {
     /// starve another model's dispatch.
     pub forwarders: usize,
     /// How long a client may wait end-to-end before its request is
-    /// cancelled (it is also skipped at dispatch if still queued).
+    /// cancelled (it is also skipped at dispatch if still queued).  On
+    /// the EDF core this budget is the request's deadline.
     pub request_timeout: Duration,
     /// Spawn one server per model at startup so contracts are learned
     /// before the first evaluation arrives.
     pub warm_start: bool,
+    /// Which scheduler core dispatches each model's queue
+    /// (`fcfs` | `worksteal` | `edf`; default `fcfs` — the balancer's
+    /// classic per-model FCFS discipline).
+    pub scheduler: LivePolicy,
 }
 
 impl Default for BalancerConfig {
@@ -103,6 +121,7 @@ impl Default for BalancerConfig {
             forwarders: 4,
             request_timeout: Duration::from_secs(600),
             warm_start: true,
+            scheduler: LivePolicy::Fcfs,
         }
     }
 }
@@ -165,11 +184,70 @@ struct Queued {
     cv: Condvar,
 }
 
+/// One model's slice of the dispatch plane: a real-time driver over its
+/// scheduler core, the queued items keyed by the core's task ids, and
+/// the endpoint ↔ worker-id binding announced to the core.
+struct RtModel {
+    driver: RtDriver,
+    /// Submitted evaluations a forwarder has not yet taken.
+    items: HashMap<TaskId, Arc<Queued>>,
+    /// endpoint -> live worker id announced via `CapacityChange`.
+    wid_of: HashMap<String, u64>,
+    /// live worker id -> endpoint (resolves `Start::worker` to a lease).
+    ep_of: HashMap<u64, String>,
+    next_wid: u64,
+    /// `timed_out` counter value at the last cancellation sweep: the
+    /// O(items) sweep only runs when a client has actually timed out
+    /// since, keeping the no-timeout hot path O(1).
+    timeouts_seen: u64,
+}
+
+impl RtModel {
+    fn new(policy: LivePolicy) -> RtModel {
+        RtModel {
+            driver: RtDriver::for_policy(policy),
+            items: HashMap::new(),
+            wid_of: HashMap::new(),
+            ep_of: HashMap::new(),
+            next_wid: 1,
+            timeouts_seen: 0,
+        }
+    }
+
+    /// A server registered: announce one single-core worker to the
+    /// core.  Idempotent — a re-surfaced endpoint (port-file re-read)
+    /// must not become a phantom second worker.
+    fn server_up(&mut self, endpoint: &str) {
+        if self.wid_of.contains_key(endpoint) {
+            return;
+        }
+        let wid = self.next_wid;
+        self.next_wid += 1;
+        self.wid_of.insert(endpoint.to_string(), wid);
+        self.ep_of.insert(wid, endpoint.to_string());
+        self.driver.worker_up(wid, 1);
+    }
+
+    /// A server retired or died: withdraw its worker (the core requeues
+    /// and re-places anything bound to it).  Idempotent.
+    fn server_lost(&mut self, endpoint: &str) {
+        if let Some(wid) = self.wid_of.remove(endpoint) {
+            self.ep_of.remove(&wid);
+            self.driver.worker_lost(wid);
+        }
+    }
+}
+
+/// All per-model dispatch state, behind one mutex (the live analogue of
+/// the DES kernel's single event loop).
+struct Dispatch {
+    models: HashMap<String, RtModel>,
+}
+
 /// State shared by the front door, the forwarder pool and the watcher.
 struct Shared {
     cfg: BalancerConfig,
-    /// model -> bounded FCFS queue (keys fixed to cfg.models).
-    queues: Mutex<HashMap<String, VecDeque<Arc<Queued>>>>,
+    dispatch: Mutex<Dispatch>,
     cv: Condvar,
     stop: AtomicBool,
     stats: BalancerStats,
@@ -181,14 +259,27 @@ struct Shared {
 
 impl Shared {
     /// Wake the forwarder pool.  The lock round-trip closes the race
-    /// with a forwarder that checked the queues and is about to wait.
+    /// with a forwarder that checked the dispatch state and is about to
+    /// wait.
     fn wake(&self) {
-        drop(self.queues.lock().unwrap());
+        drop(self.dispatch.lock().unwrap());
         self.cv.notify_all();
     }
 
+    /// Backpressure hint: how long a client should wait before
+    /// retrying, from the model's live queue-wait p50 (the observed
+    /// drain rate), clamped to [1, 30] s.
+    fn retry_after_secs(&self, model: &str) -> u32 {
+        let p50_us = self
+            .stats
+            .model(model)
+            .map(|st| st.queue_wait.snapshot().p50_us)
+            .unwrap_or(0);
+        ((p50_us + 999_999) / 1_000_000).clamp(1, 30) as u32
+    }
+
     fn stats_json(&self) -> Value {
-        let q = self.queues.lock().unwrap();
+        let d = self.dispatch.lock().unwrap();
         let models: Vec<Value> = self
             .cfg
             .models
@@ -198,10 +289,14 @@ impl Shared {
                 let load = |c: &AtomicU64| {
                     Value::num(c.load(Ordering::Relaxed) as f64)
                 };
+                let queued = d
+                    .models
+                    .get(m)
+                    .map(|rt| rt.items.len())
+                    .unwrap_or(0);
                 Value::obj(vec![
                     ("name", Value::str(m)),
-                    ("queued",
-                     Value::num(q.get(m).map(|d| d.len()).unwrap_or(0) as f64)),
+                    ("queued", Value::num(queued as f64)),
                     ("servers", Value::num(self.registry.count_for(m) as f64)),
                     ("idle", Value::num(self.registry.idle_for(m) as f64)),
                     ("served", load(&st.served)),
@@ -215,6 +310,7 @@ impl Shared {
             })
             .collect();
         Value::obj(vec![
+            ("scheduler", Value::str(self.cfg.scheduler.label())),
             ("models", Value::arr(models)),
             ("servers_total", Value::num(self.registry.total() as f64)),
             ("servers_registered_lifetime",
@@ -252,15 +348,17 @@ impl LoadBalancer {
         let requests_served = Arc::new(AtomicU64::new(0));
         let registration_queries = Arc::new(AtomicU64::new(0));
 
-        let queues: HashMap<String, VecDeque<Arc<Queued>>> = cfg
-            .models
-            .iter()
-            .map(|m| (m.clone(), VecDeque::new()))
-            .collect();
+        let dispatch = Dispatch {
+            models: cfg
+                .models
+                .iter()
+                .map(|m| (m.clone(), RtModel::new(cfg.scheduler)))
+                .collect(),
+        };
         let shared = Arc::new(Shared {
             stats: BalancerStats::new(&cfg.models),
             cfg: cfg.clone(),
-            queues: Mutex::new(queues),
+            dispatch: Mutex::new(dispatch),
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
             registry: registry.clone(),
@@ -300,9 +398,9 @@ impl LoadBalancer {
                 .spawn(move || watcher_loop(shared, backend, regq))?
         };
 
-        // Fixed forwarder pool: per-model queues -> leased servers.
-        // Sized to the total lease capacity so every model's full
-        // server pool can forward concurrently (no cross-model
+        // Fixed forwarder pool: the cores' Start effects -> leased
+        // servers.  Sized to the total lease capacity so every model's
+        // full server pool can forward concurrently (no cross-model
         // starvation by slow evaluations).
         let pool_size = cfg
             .forwarders
@@ -343,12 +441,18 @@ impl LoadBalancer {
     /// Total queued requests across all models.
     pub fn queue_len(&self) -> usize {
         self.shared
-            .queues
+            .dispatch
             .lock()
             .unwrap()
+            .models
             .values()
-            .map(|d| d.len())
+            .map(|m| m.items.len())
             .sum()
+    }
+
+    /// The live dispatch policy this balancer runs.
+    pub fn scheduler(&self) -> LivePolicy {
+        self.shared.cfg.scheduler
     }
 
     /// Per-model serving counters and latency histograms.
@@ -385,8 +489,11 @@ impl LoadBalancer {
         }
         // Fail anything still queued so blocked clients return promptly.
         let drained: Vec<Arc<Queued>> = {
-            let mut q = self.shared.queues.lock().unwrap();
-            q.values_mut().flat_map(|dq| dq.drain(..)).collect()
+            let mut d = self.shared.dispatch.lock().unwrap();
+            d.models
+                .values_mut()
+                .flat_map(|m| m.items.drain().map(|(_, item)| item))
+                .collect()
         };
         for item in drained {
             *item.done.lock().unwrap() =
@@ -499,13 +606,13 @@ fn resolve_contract(
     shared.registry.contract(&name).ok_or_else(|| {
         Response::unavailable(
             &format!("model '{name}' has no registered server yet"),
-            1,
+            shared.retry_after_secs(&name),
         )
     })
 }
 
-/// Enqueue an /Evaluate into its model's bounded queue and block until
-/// a forwarder resolves it (proxy semantics) or the deadline passes.
+/// Submit an /Evaluate to its model's scheduler core and block until a
+/// forwarder resolves it (proxy semantics) or the deadline passes.
 fn evaluate_handler(req: &Request, shared: &Arc<Shared>) -> Response {
     let body = match req.body_str() {
         Ok(b) => b.to_string(),
@@ -525,21 +632,31 @@ fn evaluate_handler(req: &Request, shared: &Arc<Shared>) -> Response {
         cv: Condvar::new(),
     });
     {
-        let mut q = shared.queues.lock().unwrap();
+        let mut d = shared.dispatch.lock().unwrap();
         if shared.stop.load(Ordering::SeqCst) {
             return Response::error("balancer shutting down");
         }
-        let dq = q.get_mut(&name).expect("configured model queue");
-        if dq.len() >= shared.cfg.queue_capacity {
+        let rt = d.models.get_mut(&name).expect("configured model");
+        if rt.items.len() >= shared.cfg.queue_capacity {
             if let Some(st) = shared.stats.model(&name) {
                 st.rejected.fetch_add(1, Ordering::Relaxed);
             }
             return Response::unavailable(
                 &format!("queue full for model '{name}'"),
-                1,
+                shared.retry_after_secs(&name),
             );
         }
-        dq.push_back(item.clone());
+        // The evaluation becomes a Submit event; the request timeout is
+        // its deadline budget (EDF orders by it, every core kills past
+        // it as a backstop).
+        rt.driver.advance();
+        let budget = shared
+            .cfg
+            .request_timeout
+            .as_micros()
+            .min(u64::MAX as u128) as u64;
+        let id = rt.driver.submit(budget);
+        rt.items.insert(id, item.clone());
         shared.cv.notify_all();
     }
 
@@ -562,10 +679,12 @@ fn evaluate_handler(req: &Request, shared: &Arc<Shared>) -> Response {
         done = g;
     }
     // Deadline passed: cancel so a forwarder doesn't burn a server on a
-    // result nobody reads.
+    // result nobody reads.  The flag is stored before the counter
+    // advances (both SeqCst) so a forwarder sweep that observes the new
+    // count is guaranteed to observe the flag too.
     item.cancelled.store(true, Ordering::SeqCst);
     if let Some(st) = shared.stats.model(&name) {
-        st.timed_out.fetch_add(1, Ordering::Relaxed);
+        st.timed_out.fetch_add(1, Ordering::SeqCst);
     }
     Response::text(504, "evaluation timed out")
 }
@@ -599,11 +718,18 @@ fn watcher_loop(
         for endpoint in backend.poll_new_servers() {
             // The paper's preliminary jobs: verify readiness and learn
             // the input/output contract before routing work (>=5
-            // queries per server).  Registration wakes the forwarders
-            // through the registry waker.
+            // queries per server).  Registration announces a worker to
+            // the model's scheduler core and wakes the forwarders.
             match preliminary_checks(&endpoint, &shared) {
-                Ok(queries) => {
+                Ok((queries, model)) => {
                     regq.fetch_add(queries, Ordering::Relaxed);
+                    {
+                        let mut d = shared.dispatch.lock().unwrap();
+                        if let Some(rt) = d.models.get_mut(&model) {
+                            rt.server_up(&endpoint);
+                        }
+                    }
+                    shared.cv.notify_all();
                     crate::log_info!("balancer",
                                      "registered server {endpoint}");
                 }
@@ -619,15 +745,18 @@ fn watcher_loop(
         drain_retired(&shared, &backend);
         // Capacity management: spawn while demand outstrips supply.
         // Single-threaded here (no double-spawn race) and outside the
-        // queues lock, so a slow backend never stalls the front door
+        // dispatch lock, so a slow backend never stalls the front door
         // or the forwarders.
         let backlogs: Vec<(String, usize)> = {
-            let q = shared.queues.lock().unwrap();
+            let d = shared.dispatch.lock().unwrap();
             shared
                 .cfg
                 .models
                 .iter()
-                .map(|m| (m.clone(), q.get(m).map(|d| d.len()).unwrap_or(0)))
+                .map(|m| {
+                    (m.clone(),
+                     d.models.get(m).map(|rt| rt.items.len()).unwrap_or(0))
+                })
                 .collect()
         };
         for (model, mut backlog) in backlogs {
@@ -709,6 +838,14 @@ fn watcher_loop(
                                      "server {ep} unhealthy, dropping");
                     shared.registry.remove(&ep);
                     shared.conn_pool.lock().unwrap().remove(&ep);
+                    // Withdraw the worker from whichever model owned it
+                    // (the core re-places anything bound to it).
+                    {
+                        let mut d = shared.dispatch.lock().unwrap();
+                        for rt in d.models.values_mut() {
+                            rt.server_lost(&ep);
+                        }
+                    }
                     backend.server_lost(&ep);
                 }
             }
@@ -730,8 +867,9 @@ fn drain_retired(shared: &Shared, backend: &Arc<dyn Backend>) {
 /// step: /Info names the model(s) the server hosts; sizes and ModelInfo
 /// are fetched for the first configured one (each server hosts one
 /// model), verified against any already-registered contract, and stored
-/// in the registry.
-fn preliminary_checks(endpoint: &str, shared: &Shared) -> Result<u64> {
+/// in the registry.  Returns (query count, model name).
+fn preliminary_checks(endpoint: &str, shared: &Shared)
+                      -> Result<(u64, String)> {
     let mut m = HttpModel::connect(endpoint, "")?;
     let (_ver, names) = m.info()?; // 1
     let mut queries = 1u64;
@@ -761,7 +899,7 @@ fn preliminary_checks(endpoint: &str, shared: &Shared) -> Result<u64> {
     let (_ver2, _names2) = m.info()?; // 5 — final readiness probe
     queries += 1;
     shared.registry.register(endpoint, &name, &contract);
-    Ok(queries)
+    Ok((queries, name))
 }
 
 fn health_check(endpoint: &str) -> bool {
@@ -774,63 +912,134 @@ fn health_check(endpoint: &str) -> bool {
 // Forwarder pool
 // ---------------------------------------------------------------------------
 
-/// One worker of the fixed forwarder pool: waits for (queued item,
-/// idle server) pairs via condvar handoff, forwards over a pooled
-/// connection, and resolves the waiting client.  (Capacity scale-up
-/// lives in the watcher, single-threaded and lock-free with respect to
-/// the queues.)
+/// One worker of the fixed forwarder pool: consumes the scheduler
+/// cores' `Start` effects via condvar handoff (the wait deadline tracks
+/// the cores' `SetTimer` effects), leases exactly the server the policy
+/// placed the work on, forwards over a pooled connection, and resolves
+/// the waiting client.  Completion feeds `WorkDone` back into the core;
+/// a retiring lease feeds a worker `CapacityChange`.  (Capacity
+/// scale-up lives in the watcher, single-threaded and outside the
+/// dispatch lock.)
 fn forwarder_loop(shared: Arc<Shared>, backend: Arc<dyn Backend>) {
     loop {
-        // (queued item, server lease) picked under the queues lock.
-        let mut job = None;
+        // (queued item, task id, server lease) picked under the
+        // dispatch lock by consuming ready Start effects.
+        let mut job: Option<(Arc<Queued>, TaskId, ServerLease<'_>)> = None;
         {
-            let mut q = shared.queues.lock().unwrap();
+            let mut d = shared.dispatch.lock().unwrap();
             if shared.stop.load(Ordering::SeqCst) {
                 return;
             }
-            for model in &shared.cfg.models {
-                let Some(dq) = q.get_mut(model) else { continue };
-                // Skip work whose client already gave up.
-                while dq
-                    .front()
-                    .map_or(false, |it| it.cancelled.load(Ordering::SeqCst))
-                {
-                    let it = dq.pop_front().unwrap();
-                    if let Some(st) = shared.stats.model(&it.model) {
-                        st.cancelled.fetch_add(1, Ordering::Relaxed);
+            'models: for model in &shared.cfg.models {
+                let Some(rt) = d.models.get_mut(model) else { continue };
+                rt.driver.advance();
+                // Purge items whose client gave up while still
+                // undispatched: they must not hold queue capacity (or
+                // core state) waiting for a worker that may never come
+                // (zero-server model).  `work_done` evicts the task
+                // from the core whatever its state; a stale ready
+                // entry, if one was already emitted, lands in the
+                // missing-item path below as a no-op.  Gated on the
+                // timed-out counter (SeqCst on both sides) so the
+                // no-timeout hot path never scans the items map.
+                let timed_out = shared
+                    .stats
+                    .model(model)
+                    .map(|st| st.timed_out.load(Ordering::SeqCst))
+                    .unwrap_or(0);
+                if timed_out != rt.timeouts_seen {
+                    rt.timeouts_seen = timed_out;
+                    let given_up: Vec<TaskId> = rt
+                        .items
+                        .iter()
+                        .filter(|(_, it)| {
+                            it.cancelled.load(Ordering::SeqCst)
+                        })
+                        .map(|(&id, _)| id)
+                        .collect();
+                    for id in given_up {
+                        rt.items.remove(&id);
+                        if let Some(st) = shared.stats.model(model) {
+                            st.cancelled.fetch_add(1, Ordering::Relaxed);
+                        }
+                        rt.driver.work_done(id);
                     }
                 }
-                if dq.is_empty() {
-                    continue;
-                }
-                if let Some(lease) = shared.registry.acquire(model) {
-                    job = Some((dq.pop_front().unwrap(), lease));
-                    break;
+                while let Some((id, worker)) = rt.driver.next_ready() {
+                    let Some(item) = rt.items.get(&id).cloned() else {
+                        // Item already resolved (shutdown drain raced a
+                        // late Start): free the synthetic capacity.
+                        rt.driver.work_done(id);
+                        continue;
+                    };
+                    // Skip work whose client already gave up.
+                    if item.cancelled.load(Ordering::SeqCst) {
+                        rt.items.remove(&id);
+                        if let Some(st) = shared.stats.model(model) {
+                            st.cancelled.fetch_add(1, Ordering::Relaxed);
+                        }
+                        rt.driver.work_done(id);
+                        continue;
+                    }
+                    let bound = worker
+                        .and_then(|w| rt.ep_of.get(&w).cloned());
+                    let lease = match bound {
+                        Some(ep) => {
+                            match shared.registry.acquire_endpoint(&ep) {
+                                Some(l) => Some(l),
+                                None if shared.registry.state(&ep)
+                                    .is_none() =>
+                                {
+                                    // Endpoint vanished (health check):
+                                    // withdraw the worker; the core
+                                    // re-places this task.
+                                    rt.server_lost(&ep);
+                                    continue;
+                                }
+                                None => {
+                                    // Momentarily busy (its lease drop
+                                    // has not landed): retry on the next
+                                    // wake.
+                                    rt.driver.requeue_ready((id, worker));
+                                    continue 'models;
+                                }
+                            }
+                        }
+                        // Core placed without a binding: any idle server.
+                        None => shared.registry.acquire(model),
+                    };
+                    let Some(lease) = lease else {
+                        rt.driver.requeue_ready((id, worker));
+                        continue 'models;
+                    };
+                    rt.items.remove(&id);
+                    if let Some(st) = shared.stats.model(model) {
+                        st.queue_wait.record(item.enqueued.elapsed());
+                    }
+                    job = Some((item, id, lease));
+                    break 'models;
                 }
             }
             if job.is_none() {
-                // Condvar handoff; the timeout is only a liveness
-                // backstop (stop flag, slow backends), not a poll loop.
-                let (_q, _t) = shared
-                    .cv
-                    .wait_timeout(q, Duration::from_millis(50))
-                    .unwrap();
+                // Condvar handoff; the deadline follows the earliest
+                // core timer (SetTimer effects), with a 50 ms liveness
+                // backstop (stop flag, slow backends).
+                let mut wait = Duration::from_millis(50);
+                for rt in d.models.values() {
+                    if let Some(due) = rt.driver.next_timer_due() {
+                        let dt = due.saturating_sub(rt.driver.now());
+                        wait = wait
+                            .min(Duration::from_micros(dt))
+                            .max(Duration::from_millis(1));
+                    }
+                }
+                let (_d, _t) =
+                    shared.cv.wait_timeout(d, wait).unwrap();
                 continue;
             }
         }
-        let (item, mut lease) = job.expect("checked above");
-        if item.cancelled.load(Ordering::SeqCst) {
-            // Cancelled between selection and here; lease releases.
-            if let Some(st) = shared.stats.model(&item.model) {
-                st.cancelled.fetch_add(1, Ordering::Relaxed);
-            }
-            drop(lease);
-            continue;
-        }
+        let (item, id, mut lease) = job.expect("checked above");
         let st = shared.stats.model(&item.model);
-        if let Some(st) = st {
-            st.queue_wait.record(item.enqueued.elapsed());
-        }
         let t0 = Instant::now();
         let result = forward(&shared.conn_pool, lease.endpoint(), &item.body);
         let ok = result.is_ok();
@@ -847,10 +1056,25 @@ fn forwarder_loop(shared: Arc<Shared>, backend: Arc<dyn Backend>) {
         item.cv.notify_all();
         // Per-job servers retire after one evaluation (the paper's
         // measured configuration); failed forwards retire either way.
-        if !shared.cfg.persistent_servers || !ok {
+        let retire = !shared.cfg.persistent_servers || !ok;
+        if retire {
             lease.mark_retire();
         }
+        let endpoint = lease.endpoint().to_string();
         drop(lease); // release or retire; wakes the pool via the waker
+        {
+            // Feed the completion back through the seam: WorkDone frees
+            // the synthetic worker (and may surface the next Start); a
+            // retiring server is a capacity loss.
+            let mut d = shared.dispatch.lock().unwrap();
+            if let Some(rt) = d.models.get_mut(&item.model) {
+                rt.driver.work_done(id);
+                if retire {
+                    rt.server_lost(&endpoint);
+                }
+            }
+        }
+        shared.cv.notify_all();
         drain_retired(&shared, &backend);
     }
 }

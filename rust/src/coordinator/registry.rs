@@ -164,6 +164,33 @@ impl Registry {
         })
     }
 
+    /// Lease one *specific* idle endpoint — the acquisition path for the
+    /// real-time scheduler core, whose `Start` effects bind work to the
+    /// worker (server) the scheduling policy placed it on.  `None` if
+    /// the endpoint is unknown or not idle (disambiguate with
+    /// [`Registry::state`]).
+    pub fn acquire_endpoint(&self, endpoint: &str) -> Option<ServerLease<'_>> {
+        let model = {
+            let mut g = self.inner.lock().unwrap();
+            let info = g.servers.get_mut(endpoint)?;
+            if info.state != ServerState::Idle {
+                return None;
+            }
+            info.state = ServerState::Busy;
+            let model = info.model.clone();
+            if let Some(set) = g.idle.get_mut(&model) {
+                set.remove(endpoint);
+            }
+            model
+        };
+        Some(ServerLease {
+            registry: self,
+            endpoint: endpoint.to_string(),
+            model,
+            retire: false,
+        })
+    }
+
     fn release_endpoint(&self, endpoint: &str) {
         {
             let mut g = self.inner.lock().unwrap();
@@ -418,6 +445,24 @@ mod tests {
         assert_eq!(r.total(), 1);
         assert_eq!(r.registered_total(), 1);
         drop(lease);
+    }
+
+    #[test]
+    fn acquire_endpoint_leases_exactly_that_server() {
+        let r = reg();
+        r.register("http://h:1", "gp", &contract());
+        r.register("http://h:2", "gp", &contract());
+        let lease = r.acquire_endpoint("http://h:2").unwrap();
+        assert_eq!(lease.endpoint(), "http://h:2");
+        assert_eq!(lease.model(), "gp");
+        assert_eq!(r.state("http://h:2"), Some(ServerState::Busy));
+        assert_eq!(r.idle_for("gp"), 1);
+        // Busy and unknown endpoints refuse.
+        assert!(r.acquire_endpoint("http://h:2").is_none());
+        assert!(r.acquire_endpoint("http://nope:9").is_none());
+        drop(lease);
+        assert_eq!(r.idle_for("gp"), 2);
+        assert!(r.acquire_endpoint("http://h:2").is_some());
     }
 
     #[test]

@@ -13,8 +13,9 @@
 //! route through the one generic scheduler kernel
 //! ([`crate::sched::kernel`]); the original hand-written loops are
 //! preserved in [`reference`] and `tests/campaign_equiv.rs` pins
-//! record-for-record equivalence.  [`run_umbridge_worksteal`] runs the
-//! same protocol against the third (work-stealing) scheduler.
+//! record-for-record equivalence.  [`run_umbridge_worksteal`] and
+//! [`run_umbridge_edf`] run the same protocol against the third
+//! (work-stealing) and fourth (deadline-EDF) schedulers.
 
 pub mod reference;
 
@@ -102,6 +103,14 @@ pub fn run_umbridge_worksteal(cfg: &Config) -> Experiment {
     campaign::run_worksteal(&cfg.campaign(), &mut sub).experiment
 }
 
+/// UM-Bridge + deadline-EDF: the same bulk-allocation stack as
+/// [`run_umbridge_hq`], with tasks dispatched strictly earliest deadline
+/// first ([`crate::sched::EdfCore`]).
+pub fn run_umbridge_edf(cfg: &Config) -> Experiment {
+    let mut sub = cfg.fixed_depth();
+    campaign::run_edf(&cfg.campaign(), &mut sub).experiment
+}
+
 /// All three paper schedulers on one configuration.
 pub fn run_all(cfg: &Config) -> (Experiment, Experiment, Experiment) {
     (run_naive_slurm(cfg), run_umbridge_hq(cfg), run_umbridge_slurm(cfg))
@@ -135,6 +144,15 @@ mod tests {
     fn hq_completes_all_evals() {
         let e = run_umbridge_hq(&small_cfg(App::Eigen100, 2));
         assert_eq!(e.records.len(), 12);
+    }
+
+    #[test]
+    fn edf_completes_all_evals() {
+        let e = run_umbridge_edf(&small_cfg(App::Eigen100, 2));
+        assert_eq!(e.records.len(), 12);
+        for r in &e.records {
+            assert!(r.submit <= r.start && r.start <= r.end);
+        }
     }
 
     #[test]

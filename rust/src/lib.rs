@@ -11,9 +11,10 @@
 //! *what gets submitted* — bursty, multi-user, heteroskedastic and
 //! adaptive workload streams — and the [`sched`] plane generalizes
 //! *what schedules them*: one [`SchedulerCore`](sched::SchedulerCore)
-//! trait, one generic event kernel, and pluggable scheduler
-//! implementations (SLURM, UM-Bridge + HyperQueue, and a partitioned
-//! work-stealing variant).
+//! trait, two kernels (virtual-time for campaigns, wall-clock for the
+//! live balancer), and pluggable scheduler implementations (SLURM,
+//! UM-Bridge + HyperQueue, a partitioned work-stealing variant, and a
+//! deadline-EDF core that serves in both planes).
 //!
 //! See README.md, docs/ARCHITECTURE.md and DESIGN.md for the
 //! architecture and the experiment index.

@@ -29,6 +29,7 @@ use uqsched::json::Value;
 use uqsched::metrics::BoxStats;
 use uqsched::models;
 use uqsched::runtime::{check_testvec, Engine, Manifest};
+use uqsched::sched::LivePolicy;
 use uqsched::umbridge::{self, HttpModel};
 use uqsched::workload::App;
 use uqsched::{log_info, logging};
@@ -50,13 +51,14 @@ fn main() -> Result<()> {
                  serve      --model gp|gs2|eigen-100|eigen-5000|qoi [--port N]\n\
                  client     --url http://h:p --model NAME --params 1,2,...\n\
                  balancer   --models NAME[,NAME...] --backend slurm|hq\n\
-                            [--servers N] [--per-job-servers]\n\
+                            [--scheduler fcfs|worksteal|edf] [--servers N]\n\
+                            [--per-job-servers]\n\
                  selftest   [--artifacts DIR]  (artifact check + live-plane\n\
                             smoke; artifacts optional)\n\
                  experiment --app gs2|GP|eigen-100|eigen-5000 [--queue 2]\n\
                             [--evals 100] [--seed 1]\n\
                  campaign   --policy fixed|bursty|mix|hetero|adaptive\n\
-                            --scheduler slurm|umbridge-slurm|hq|worksteal\n\
+                            --scheduler slurm|umbridge-slurm|hq|worksteal|edf\n\
                             [--app gs2] [--tasks 100] [--depth 2] [--seed 1]\n\
                             [--interarrival 2s] [--burst-min 1] [--burst-max 8]\n\
                             [--users gp:50:2,eigen-100:50:2] [--sigmas 0,0.8]\n\
@@ -113,11 +115,23 @@ fn balancer(args: &Args) -> Result<()> {
     let backend_kind = args.str_or("backend", "hq");
     let servers = args.usize_or("servers", 2)?;
     let scale = args.f64_or("time-scale", 60.0)?;
+    // `--scheduler` is the canonical spelling; `--sched` is accepted as
+    // an alias, matching the campaign subcommand's flag handling.
+    let sched_name = args
+        .opt("scheduler")
+        .or_else(|| args.opt("sched"))
+        .unwrap_or("fcfs");
+    let scheduler = LivePolicy::parse(sched_name).ok_or_else(|| {
+        anyhow!("unknown live scheduler '{sched_name}' \
+                 (want fcfs|worksteal|edf)")
+    })?;
     let eng = engine(args)?;
     let stack = start_live(eng, &model_names, &backend_kind, servers,
-                           scale, !args.flag("per-job-servers"))?;
-    log_info!("balancer", "front door at {} serving {:?} (stats at {}/Stats)",
-              stack.balancer.url(), model_names, stack.balancer.url());
+                           scale, !args.flag("per-job-servers"), scheduler)?;
+    log_info!("balancer",
+              "front door at {} serving {:?} via {} (stats at {}/Stats)",
+              stack.balancer.url(), model_names, scheduler.label(),
+              stack.balancer.url());
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -307,6 +321,7 @@ fn campaign_cmd(args: &Args) -> Result<()> {
         }
         "hq" => campaign::run_hq(&cfg, sub.as_mut()),
         "worksteal" => campaign::run_worksteal(&cfg, sub.as_mut()),
+        "edf" => campaign::run_edf(&cfg, sub.as_mut()),
         other => bail!("unknown scheduler '{other}'"),
     };
 

@@ -1,0 +1,676 @@
+//! [`EdfCore`]: a deadline-EDF task scheduler — the fourth pluggable
+//! core, and the first to run in **both** planes (campaign and live).
+//!
+//! Every task gets an absolute deadline at submission, `submit_t +
+//! time_limit` (the kill limit is the natural hard deadline: past it the
+//! result is discarded anyway).  The ready structure is one deadline
+//! min-heap; dispatch always pops the earliest deadline, breaking ties
+//! by **static laxity** (`time_limit - time_request`: the task with the
+//! least slack between its expected runtime and its kill limit goes
+//! first) and finally by task id, so a campaign remains a pure function
+//! of its seed.
+//!
+//! EDF here is *strict*: if the earliest-deadline task cannot start on
+//! any live worker (no free cores, or no allocation outliving its time
+//! request), dispatch stops rather than backfilling a later-deadline
+//! task around it — the discipline the classic uniprocessor optimality
+//! result is about, and the property `tests/scheduler_props.rs` pins.
+//! Starvation-freedom falls out of absolute deadlines: a waiting task's
+//! deadline is fixed while every newcomer's is `now + limit`, so
+//! sustained short-deadline load overtakes it only for a bounded window.
+//!
+//! Everything around dispatch keeps hqlite's semantics so the stack and
+//! the live balancer treat all [`TaskCore`] implementations
+//! interchangeably: the same [`AutoAllocConfig`] automatic allocation,
+//! the same expiry min-heap, the same dispatch-latency and time-limit
+//! timers, the same action vocabulary ([`HqAction`]/[`HqTimer`]).  In
+//! the campaign plane it rides `MetaStack<EdfCore>` (`uqsched campaign
+//! --scheduler edf`); in the live plane it rides
+//! [`LiveSched`](crate::sched::LiveSched) (`uqsched balancer
+//! --scheduler edf`), where each model's front-door queue is its own
+//! `EdfCore` — the per-model deadline heap.
+//!
+//! Cost (w = live workers, p = ready tasks): submission is O(log p) +
+//! one pump; a pump pass pops each startable task at O(log p + w); a
+//! blocked head costs O(w) once per pump.  See PERF.md.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
+
+use crate::clock::Micros;
+use crate::hqlite::core::drain_due_workers;
+use crate::hqlite::{AutoAllocConfig, HqAction, HqTimer, TaskCore, TaskId,
+                    TaskSpec, WorkerId};
+use crate::metrics::JobRecord;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum TaskState {
+    Pending,
+    Dispatched,
+    Running,
+}
+
+#[derive(Clone, Debug)]
+struct Task {
+    spec: TaskSpec,
+    state: TaskState,
+    submit_t: Micros,
+    start_t: Micros,
+    worker: WorkerId,
+    /// Absolute deadline: `submit_t + spec.time_limit`, fixed at
+    /// submission (a requeue after worker loss keeps it — deadlines do
+    /// not reset, which is what makes EDF starvation-free).
+    deadline: Micros,
+}
+
+#[derive(Clone, Debug)]
+struct Worker {
+    cores_free: u32,
+    /// Virtual time at which the surrounding allocation expires.
+    expires_t: Micros,
+    /// Tasks currently dispatched to / running on this worker.
+    running: BTreeSet<TaskId>,
+}
+
+/// Heap key: earliest deadline first, then least static laxity, then
+/// lowest task id (total order ⇒ deterministic pops).
+type EdfKey = (Micros, Micros, TaskId);
+
+/// The deadline-EDF task scheduler.
+pub struct EdfCore {
+    cfg: AutoAllocConfig,
+    /// In-flight tasks only; finished tasks are evicted.
+    tasks: HashMap<TaskId, Task>,
+    /// Deadline min-heap over Pending tasks.  May lazily contain ids of
+    /// tasks that completed while requeued; dropped when popped.
+    ready: BinaryHeap<Reverse<EdfKey>>,
+    /// Live workers, id-ordered for deterministic host scans.
+    workers: BTreeMap<WorkerId, Worker>,
+    /// (expires_t, worker) min-heap; entries for already-lost workers
+    /// are skipped lazily.
+    expiry: BinaryHeap<Reverse<(Micros, WorkerId)>>,
+    /// Live tasks currently Pending (ready heap minus stale entries).
+    pending: usize,
+    retired: u64,
+    next_task: TaskId,
+    next_worker: WorkerId,
+    next_alloc_tag: u64,
+    allocs_in_queue: u32,
+    /// Stats: dispatches performed.
+    pub dispatches: u64,
+}
+
+impl EdfCore {
+    pub fn new(cfg: AutoAllocConfig) -> Self {
+        EdfCore {
+            cfg,
+            tasks: HashMap::new(),
+            ready: BinaryHeap::new(),
+            workers: BTreeMap::new(),
+            expiry: BinaryHeap::new(),
+            pending: 0,
+            retired: 0,
+            next_task: 1,
+            next_worker: 1,
+            next_alloc_tag: 1,
+            allocs_in_queue: 0,
+            dispatches: 0,
+        }
+    }
+
+    fn is_pending(&self, id: TaskId) -> bool {
+        self.tasks.get(&id).map(|t| t.state) == Some(TaskState::Pending)
+    }
+
+    /// A task's heap key: (deadline, static laxity, id).
+    fn key_of(task: &Task, id: TaskId) -> EdfKey {
+        let laxity = task.spec.time_limit
+            .saturating_sub(task.spec.time_request);
+        (task.deadline, laxity, id)
+    }
+
+    /// Start `id` on `wid` now (capacity already checked).
+    fn start(&mut self, t: Micros, id: TaskId, wid: WorkerId,
+             out: &mut Vec<HqAction>) {
+        let need = self.tasks[&id].spec.cores;
+        let w = self.workers.get_mut(&wid).unwrap();
+        w.cores_free -= need;
+        w.running.insert(id);
+        let task = self.tasks.get_mut(&id).unwrap();
+        task.state = TaskState::Dispatched;
+        task.worker = wid;
+        self.pending -= 1;
+        self.dispatches += 1;
+        out.push(HqAction::Timer(
+            t + self.cfg.dispatch_latency,
+            HqTimer::Dispatched(id),
+        ));
+    }
+
+    /// Can `wid` start `id` right now?  Needs the cores free and an
+    /// allocation outliving the task's time request (HQ semantics).
+    fn can_start(&self, t: Micros, id: TaskId, wid: WorkerId) -> bool {
+        let w = &self.workers[&wid];
+        let spec = &self.tasks[&id].spec;
+        w.cores_free >= spec.cores && w.expires_t >= t + spec.time_request
+    }
+
+    /// Dispatch strictly earliest-deadline-first: pop the heap while the
+    /// head can start on some worker (lowest-id host wins); a blocked
+    /// head stops dispatch — no backfilling around it.  Then autoalloc
+    /// tops up capacity for whatever is still pending.
+    fn pump(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        while let Some(&Reverse((_, _, id))) = self.ready.peek() {
+            if !self.is_pending(id) {
+                // Stale entry (completed while requeued, or re-pushed by
+                // a worker loss after an earlier pop): drop lazily.
+                self.ready.pop();
+                continue;
+            }
+            let host = self
+                .workers
+                .keys()
+                .copied()
+                .find(|&wid| self.can_start(t, id, wid));
+            let Some(wid) = host else { break };
+            self.ready.pop();
+            self.start(t, id, wid, out);
+        }
+        self.autoalloc_into(out);
+    }
+
+    /// Submit allocations while there are pending tasks, the backlog
+    /// allows it, and the worker cap is not reached (hqlite semantics).
+    fn autoalloc_into(&mut self, out: &mut Vec<HqAction>) {
+        while self.pending > 0
+            && self.allocs_in_queue < self.cfg.backlog
+            && self.workers.len() as u32
+                + self.allocs_in_queue * self.cfg.workers_per_alloc
+                < self.cfg.max_worker_count
+        {
+            self.allocs_in_queue += 1;
+            let tag = self.next_alloc_tag;
+            self.next_alloc_tag += 1;
+            out.push(HqAction::SubmitAllocation {
+                alloc_tag: tag,
+                req: self.cfg.alloc_request,
+            });
+        }
+    }
+
+    fn complete(&mut self, t: Micros, id: TaskId, truncated: bool,
+                out: &mut Vec<HqAction>) {
+        // Finished tasks are evicted, so a stale duplicate completion
+        // (the driver's original done-timer firing after a requeue)
+        // simply misses the map.
+        let Some(task) = self.tasks.remove(&id) else { return };
+        if task.state == TaskState::Pending {
+            // Completed while requeued: its heap entry is now stale and
+            // will be lazily dropped.
+            self.pending -= 1;
+        }
+        self.retired += 1;
+        let record = JobRecord {
+            tag: task.spec.tag,
+            submit: task.submit_t,
+            start: task.start_t,
+            end: t,
+            cpu: t.saturating_sub(task.start_t),
+            truncated,
+        };
+        if let Some(w) = self.workers.get_mut(&task.worker) {
+            if w.running.remove(&id) {
+                w.cores_free += task.spec.cores;
+            }
+        }
+        out.push(HqAction::TaskCompleted { task: id, record });
+        self.pump(t, out);
+    }
+}
+
+impl TaskCore for EdfCore {
+    fn submit_task_into(
+        &mut self,
+        t: Micros,
+        spec: TaskSpec,
+        out: &mut Vec<HqAction>,
+    ) -> TaskId {
+        let id = self.next_task;
+        self.next_task += 1;
+        let task = Task {
+            deadline: t.saturating_add(spec.time_limit),
+            spec,
+            state: TaskState::Pending,
+            submit_t: t,
+            start_t: 0,
+            worker: 0,
+        };
+        self.ready.push(Reverse(Self::key_of(&task, id)));
+        self.tasks.insert(id, task);
+        self.pending += 1;
+        self.pump(t, out);
+        id
+    }
+
+    fn on_alloc_up_into(
+        &mut self,
+        t: Micros,
+        time_limit: Micros,
+        cores_per_worker: u32,
+        out: &mut Vec<HqAction>,
+    ) {
+        self.allocs_in_queue = self.allocs_in_queue.saturating_sub(1);
+        for _ in 0..self.cfg.workers_per_alloc {
+            if self.workers.len() as u32 >= self.cfg.max_worker_count {
+                break;
+            }
+            let wid = self.next_worker;
+            self.next_worker += 1;
+            self.workers.insert(
+                wid,
+                Worker {
+                    cores_free: cores_per_worker,
+                    expires_t: t.saturating_add(time_limit),
+                    running: BTreeSet::new(),
+                },
+            );
+            self.expiry.push(Reverse((t.saturating_add(time_limit), wid)));
+        }
+        self.pump(t, out);
+    }
+
+    fn on_worker_lost_into(
+        &mut self,
+        t: Micros,
+        wid: WorkerId,
+        out: &mut Vec<HqAction>,
+    ) {
+        if let Some(worker) = self.workers.remove(&wid) {
+            // No task lost: the in-flight set requeues with its original
+            // deadlines (ascending task-id order, deterministic).
+            for id in worker.running {
+                if let Some(task) = self.tasks.get_mut(&id) {
+                    if matches!(
+                        task.state,
+                        TaskState::Running | TaskState::Dispatched
+                    ) {
+                        task.state = TaskState::Pending;
+                        self.pending += 1;
+                        let key = Self::key_of(task, id);
+                        self.ready.push(Reverse(key));
+                    }
+                }
+            }
+        }
+        self.pump(t, out);
+    }
+
+    fn on_task_done_into(&mut self, t: Micros, id: TaskId,
+                         out: &mut Vec<HqAction>) {
+        self.complete(t, id, false, out)
+    }
+
+    fn on_timer_into(&mut self, t: Micros, timer: HqTimer,
+                     out: &mut Vec<HqAction>) {
+        match timer {
+            HqTimer::Dispatched(id) => {
+                let Some(task) = self.tasks.get_mut(&id) else { return };
+                if task.state != TaskState::Dispatched {
+                    return;
+                }
+                task.state = TaskState::Running;
+                task.start_t = t;
+                let worker = task.worker;
+                let limit = task.spec.time_limit;
+                out.push(HqAction::StartTask { task: id, worker });
+                out.push(HqAction::Timer(t.saturating_add(limit),
+                                         HqTimer::Limit(id)));
+            }
+            HqTimer::Limit(id) => {
+                // Only the timer armed for *this* run kills (it fires
+                // exactly at start_t + time_limit).  A stale limit from
+                // a pre-requeue run fires at the old start and must not
+                // truncate the rerun — requeued tasks keep their full
+                // limit, just as they keep their original deadline.
+                let due = self
+                    .tasks
+                    .get(&id)
+                    .filter(|task| task.state == TaskState::Running)
+                    .map(|task| {
+                        task.start_t.saturating_add(task.spec.time_limit)
+                    });
+                if due == Some(t) {
+                    out.push(HqAction::KillTask { task: id });
+                    self.complete(t, id, true, out);
+                }
+            }
+        }
+    }
+
+    fn expire_workers_into(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        let expired = drain_due_workers(&mut self.expiry, t, |wid| {
+            self.workers.contains_key(&wid)
+        });
+        for wid in expired {
+            self.on_worker_lost_into(t, wid, out);
+        }
+    }
+
+    fn pending_tasks(&self) -> usize {
+        self.pending
+    }
+
+    fn live_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn allocs_waiting(&self) -> u32 {
+        self.allocs_in_queue
+    }
+
+    fn resident_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    fn retired_count(&self) -> u64 {
+        self.retired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::{MS, SEC};
+    use crate::cluster::JobRequest;
+
+    fn cfg() -> AutoAllocConfig {
+        AutoAllocConfig {
+            backlog: 1,
+            workers_per_alloc: 1,
+            max_worker_count: 4,
+            alloc_request: JobRequest::new(16, 16, 3600 * SEC),
+            dispatch_latency: 1 * MS,
+        }
+    }
+
+    fn spec(tag: u64, limit: Micros) -> TaskSpec {
+        TaskSpec { tag, cores: 16, time_request: SEC, time_limit: limit }
+    }
+
+    /// Run the core's outstanding actions to quiescence, each started
+    /// task taking `dur`; records task ids in start order.
+    fn settle(core: &mut EdfCore, mut acts: Vec<HqAction>, dur: Micros)
+              -> Vec<TaskId> {
+        use crate::clock::Des;
+        #[derive(Debug)]
+        enum Ev {
+            Timer(HqTimer),
+            Done(TaskId),
+        }
+        let mut des: Des<Ev> = Des::new();
+        let mut starts = Vec::new();
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            assert!(guard < 100_000, "runaway settle");
+            for a in std::mem::take(&mut acts) {
+                match a {
+                    HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                    HqAction::StartTask { task, .. } => {
+                        starts.push(task);
+                        des.after(dur, Ev::Done(task));
+                    }
+                    _ => {}
+                }
+            }
+            let Some((t, ev)) = des.pop() else { break };
+            match ev {
+                Ev::Timer(tm) => core.on_timer_into(t, tm, &mut acts),
+                Ev::Done(id) => core.on_task_done_into(t, id, &mut acts),
+            }
+        }
+        starts
+    }
+
+    #[test]
+    fn pops_earliest_deadline_first() {
+        // Serial 16-core tasks all queued *before* capacity appears,
+        // with shuffled limits: start order must be ascending deadline.
+        let mut core = EdfCore::new(cfg());
+        let mut acts = Vec::new();
+        let limits = [500 * SEC, 40 * SEC, 900 * SEC, 100 * SEC, 700 * SEC];
+        for (i, &l) in limits.iter().enumerate() {
+            core.submit_task_into(0, spec(i as u64, l), &mut acts);
+        }
+        acts.clear();
+        core.on_alloc_up_into(SEC, 3600 * SEC, 16, &mut acts);
+        let starts = settle(&mut core, acts, 2 * SEC);
+        assert_eq!(starts.len(), 5);
+        // All submitted at t=0 ⇒ deadline order == limit order.  Task
+        // ids are 1-based in submission order.
+        assert_eq!(starts, vec![2, 4, 1, 5, 3],
+                   "EDF must pop in ascending deadline order");
+        assert_eq!(core.retired_count(), 5);
+        assert_eq!(core.resident_tasks(), 0);
+    }
+
+    #[test]
+    fn equal_deadlines_break_ties_by_laxity_then_id() {
+        let mut core = EdfCore::new(cfg());
+        let mut acts = Vec::new();
+        // All queued before capacity.  Same limit (deadline); task 2
+        // has the larger time_request ⇒ less laxity ⇒ must go first
+        // despite the higher id.
+        core.submit_task_into(0, TaskSpec {
+            tag: 1, cores: 16, time_request: SEC, time_limit: 100 * SEC,
+        }, &mut acts);
+        core.submit_task_into(0, TaskSpec {
+            tag: 2, cores: 16, time_request: 50 * SEC,
+            time_limit: 100 * SEC,
+        }, &mut acts);
+        core.submit_task_into(0, TaskSpec {
+            tag: 3, cores: 16, time_request: SEC, time_limit: 100 * SEC,
+        }, &mut acts);
+        acts.clear();
+        core.on_alloc_up_into(SEC, 3600 * SEC, 16, &mut acts);
+        let starts = settle(&mut core, acts, SEC);
+        assert_eq!(starts, vec![2, 1, 3],
+                   "ties: least laxity first, then lowest id");
+    }
+
+    #[test]
+    fn strict_edf_blocks_rather_than_backfills() {
+        // Head needs 16 cores (deadline soonest); a later-deadline
+        // 1-core task must NOT start around it while the head waits.
+        let mut core = EdfCore::new(cfg());
+        let mut acts = Vec::new();
+        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
+        // Occupy 8 cores.
+        core.submit_task_into(0, TaskSpec {
+            tag: 0, cores: 8, time_request: SEC, time_limit: 10 * SEC,
+        }, &mut acts);
+        acts.clear();
+        // Head: needs all 16, earliest deadline among the waiters.
+        core.submit_task_into(1, TaskSpec {
+            tag: 1, cores: 16, time_request: SEC, time_limit: 20 * SEC,
+        }, &mut acts);
+        // Backfill candidate: 1 core, later deadline.
+        core.submit_task_into(2, TaskSpec {
+            tag: 2, cores: 1, time_request: SEC, time_limit: 500 * SEC,
+        }, &mut acts);
+        assert!(!acts.iter().any(|a| matches!(
+            a,
+            HqAction::Timer(_, HqTimer::Dispatched(_))
+        )), "strict EDF must not backfill around a blocked head");
+        assert_eq!(core.pending_tasks(), 2);
+    }
+
+    #[test]
+    fn no_task_lost_on_worker_loss_and_deadline_preserved() {
+        let mut core = EdfCore::new(AutoAllocConfig {
+            backlog: 2,
+            max_worker_count: 2,
+            ..cfg()
+        });
+        let mut acts = Vec::new();
+        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
+        for i in 0..4 {
+            core.submit_task_into(0, spec(i, (100 + i) * SEC), &mut acts);
+        }
+        assert_eq!(core.resident_tasks(), 4);
+        acts.clear();
+        core.on_worker_lost_into(SEC, 1, &mut acts);
+        assert_eq!(core.pending_tasks(), 4, "in-flight work requeued");
+        assert!(acts.iter().any(|a| matches!(
+            a,
+            HqAction::SubmitAllocation { .. }
+        )));
+        acts.clear();
+        core.on_alloc_up_into(2 * SEC, 3600 * SEC, 16, &mut acts);
+        let starts = settle(&mut core, acts, SEC);
+        // Original deadlines survive the requeue: EDF order unchanged.
+        assert_eq!(starts, vec![1, 2, 3, 4]);
+        assert_eq!(core.retired_count(), 4);
+        assert_eq!(core.resident_tasks(), 0);
+    }
+
+    #[test]
+    fn stale_limit_from_first_run_does_not_truncate_requeued_run() {
+        let mut core = EdfCore::new(AutoAllocConfig {
+            backlog: 2,
+            max_worker_count: 2,
+            ..cfg()
+        });
+        let mut acts = Vec::new();
+        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
+        core.submit_task_into(0, spec(1, 100 * SEC), &mut acts);
+        // First dispatch: Running at 1 ms, Limit armed for ~100 s.
+        acts.clear();
+        core.on_timer_into(1 * MS, HqTimer::Dispatched(1), &mut acts);
+        assert!(acts.iter().any(|a| matches!(
+            a,
+            HqAction::StartTask { task: 1, .. }
+        )));
+        // Worker dies mid-run; the task requeues and re-dispatches.
+        acts.clear();
+        core.on_worker_lost_into(10 * SEC, 1, &mut acts);
+        core.on_alloc_up_into(20 * SEC, 3600 * SEC, 16, &mut acts);
+        acts.clear();
+        core.on_timer_into(20 * SEC + MS, HqTimer::Dispatched(1),
+                           &mut acts);
+        assert!(acts.iter().any(|a| matches!(
+            a,
+            HqAction::StartTask { task: 1, .. }
+        )));
+        // The FIRST run's limit timer fires: it must not kill the rerun
+        // (which has its own limit armed for start2 + 100 s).
+        acts.clear();
+        core.on_timer_into(100 * SEC + MS, HqTimer::Limit(1), &mut acts);
+        assert!(acts.is_empty(), "stale limit must be ignored: {acts:?}");
+        // The rerun completes normally, untruncated.
+        acts.clear();
+        core.on_task_done_into(110 * SEC, 1, &mut acts);
+        let rec = acts
+            .iter()
+            .find_map(|a| match a {
+                HqAction::TaskCompleted { record, .. } => {
+                    Some(record.clone())
+                }
+                _ => None,
+            })
+            .expect("completion record");
+        assert!(!rec.truncated, "requeued run was wrongly truncated");
+    }
+
+    #[test]
+    fn time_limit_kills_runaway() {
+        let mut core = EdfCore::new(cfg());
+        let mut acts = Vec::new();
+        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
+        core.submit_task_into(0, spec(9, 5 * SEC), &mut acts);
+        // Run the dispatch timer, then let the limit fire (no Done).
+        use crate::clock::Des;
+        let mut des: Des<HqTimer> = Des::new();
+        let mut records = Vec::new();
+        loop {
+            for a in std::mem::take(&mut acts) {
+                match a {
+                    HqAction::Timer(tt, tm) => des.schedule(tt, tm),
+                    HqAction::TaskCompleted { record, .. } => {
+                        records.push(record)
+                    }
+                    _ => {}
+                }
+            }
+            let Some((t, tm)) = des.pop() else { break };
+            core.on_timer_into(t, tm, &mut acts);
+        }
+        assert_eq!(records.len(), 1);
+        assert!(records[0].truncated);
+    }
+
+    #[test]
+    fn autoalloc_caps_respected() {
+        let mut core = EdfCore::new(AutoAllocConfig {
+            backlog: 2,
+            max_worker_count: 2,
+            ..cfg()
+        });
+        let mut allocs = 0;
+        let mut out = Vec::new();
+        for i in 0..8u64 {
+            out.clear();
+            core.submit_task_into(i, spec(i, 100 * SEC), &mut out);
+            allocs += out.iter().filter(|a| matches!(
+                a,
+                HqAction::SubmitAllocation { .. }
+            )).count();
+        }
+        assert_eq!(allocs, 2, "backlog=2 caps queued allocs");
+        assert_eq!(core.allocs_waiting(), 2);
+        let mut out = Vec::new();
+        core.on_alloc_up_into(10, 3600 * SEC, 16, &mut out);
+        core.on_alloc_up_into(11, 3600 * SEC, 16, &mut out);
+        core.on_alloc_up_into(12, 3600 * SEC, 16, &mut out);
+        assert!(core.live_workers() <= 2);
+    }
+
+    #[test]
+    fn expiry_heap_matches_worker_lifetimes() {
+        let mut core = EdfCore::new(AutoAllocConfig {
+            backlog: 4,
+            max_worker_count: 4,
+            ..cfg()
+        });
+        let mut out = Vec::new();
+        for i in 0..4u64 {
+            core.submit_task_into(i, spec(i, 100 * SEC), &mut out);
+        }
+        core.on_alloc_up_into(0, 10 * SEC, 16, &mut out);
+        core.on_alloc_up_into(0, 50 * SEC, 16, &mut out);
+        assert_eq!(core.live_workers(), 2);
+        core.expire_workers_into(5 * SEC, &mut out);
+        assert_eq!(core.live_workers(), 2);
+        core.expire_workers_into(20 * SEC, &mut out);
+        assert_eq!(core.live_workers(), 1);
+        core.expire_workers_into(60 * SEC, &mut out);
+        assert_eq!(core.live_workers(), 0);
+    }
+
+    #[test]
+    fn time_request_gates_dispatch() {
+        let mut core = EdfCore::new(cfg());
+        let mut out = Vec::new();
+        core.on_alloc_up_into(0, 10 * SEC, 16, &mut out);
+        core.submit_task_into(0, TaskSpec {
+            tag: 1, cores: 1, time_request: 3600 * SEC,
+            time_limit: 2 * 3600 * SEC,
+        }, &mut out);
+        assert_eq!(core.pending_tasks(), 1,
+                   "task with long time request stays queued");
+        assert!(!out.iter().any(|a| matches!(
+            a,
+            HqAction::Timer(_, HqTimer::Dispatched(_))
+        )));
+    }
+}

@@ -143,7 +143,7 @@ pub fn run<S: SchedulerCore>(
         for e in effects.drain(..) {
             match e {
                 Effect::SetTimer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
-                Effect::Start { id, contention } => {
+                Effect::Start { id, contention, .. } => {
                     // Work the kernel never submitted (background jobs)
                     // finishes itself inside the core.
                     if let Some(&d) = durations.get(&id) {

@@ -16,6 +16,10 @@
 //!   │ poisson-burst │  wake_at   │ heap, one   │         │   (SlurmCore)        │
 //!   │ user-mix ...  │ <───────── │ drain loop  │ <────── │ MetaStack<HqCore>    │
 //!   └───────────────┘ completed  └─────────────┘ Effect  │ MetaStack<WorkSteal> │
+//!                                                        │ MetaStack<EdfCore>   │
+//!   /Evaluate ───┐   realtime::RtDriver (wall clock)     │ LiveSched<HqCore>    │
+//!   server up ───┼─> │ timer heap · ready queue │ ─────> │ LiveSched<WorkSteal> │
+//!   forward done ┘   (balancer forwarder pool)   Effect  │ LiveSched<EdfCore>   │
 //!                                                        └──────────────────────┘
 //! ```
 //!
@@ -28,15 +32,24 @@
 //!   the HQ-style stacks keep their `TaskId`s with no tagging overhead.
 //! * A **new scheduler costs one `impl`**, not a third copy of the
 //!   driver: [`WorkStealCore`] (partitioned per-worker deques with
-//!   stealing) plugs in behind [`hqlite::TaskCore`](crate::hqlite::TaskCore)
-//!   and is reachable end-to-end from `uqsched campaign --scheduler
-//!   worksteal`, the metrics pipeline and the scale bench.
+//!   stealing) and [`EdfCore`] (deadline-EDF, laxity tie-break) plug in
+//!   behind [`hqlite::TaskCore`](crate::hqlite::TaskCore) and are
+//!   reachable end-to-end from `uqsched campaign --scheduler
+//!   worksteal|edf`, the metrics pipeline and the scale bench.
+//! * The seam has **two drivers**: [`kernel::run`] owns virtual time
+//!   (campaigns), and [`realtime::RtDriver`] owns the wall clock — the
+//!   live balancer's dispatch plane, where `/Evaluate`s are `Submit`
+//!   events, server registrations are worker capacity changes, and
+//!   `uqsched balancer --scheduler fcfs|worksteal|edf` ablates the
+//!   same cores under real HTTP load.
 //!
 //! Equivalence: `tests/campaign_equiv.rs` pins the kernel + adapters
 //! record-for-record to the hand-written PR 1 loops preserved in
 //! `experiments::reference`, for every app and both paper schedulers.
 
+pub mod edf;
 pub mod kernel;
+pub mod realtime;
 pub mod slurm;
 pub mod stack;
 pub mod worksteal;
@@ -48,9 +61,11 @@ use crate::campaign::submitter::Submission;
 use crate::clock::Micros;
 use crate::metrics::JobRecord;
 
+pub use edf::EdfCore;
 pub use kernel::run;
+pub use realtime::{LivePolicy, LiveSched, RtDriver};
 pub use slurm::SlurmSched;
-pub use stack::{HqSched, MetaStack, StackTimer, WorkStealSched};
+pub use stack::{EdfSched, HqSched, MetaStack, StackTimer, WorkStealSched};
 pub use worksteal::WorkStealCore;
 
 /// What the kernel must do in response to a core transition — the
@@ -64,7 +79,11 @@ pub enum Effect<I, T> {
     /// `contention` (1.0 where the scheduler models no co-location).
     /// Work the kernel did not submit (background jobs) is ignored; work
     /// may start more than once (requeue after a lost worker).
-    Start { id: I, contention: f64 },
+    /// `worker` names where the core placed the work, in the id space
+    /// the driver used for [`CapacityChange::WorkerUp`] (cores that
+    /// place by node/worker set it; the virtual kernel ignores it, the
+    /// real-time driver leases exactly that server).
+    Start { id: I, contention: f64, worker: Option<u64> },
     /// Terminal record for a unit of work.  The kernel classifies it via
     /// [`SchedulerCore::classify`] and quantises times to the core's
     /// [`log_grain`](SchedulerCore::log_grain).
@@ -94,11 +113,19 @@ pub enum Completion {
 /// External capacity events a driver can inject (the campaign kernel
 /// never generates these itself — capacity churn on the paper paths is
 /// core-internal).  `tests/scheduler_props.rs` drives worker loss
-/// through this seam mid-campaign; a live elastic driver would route
-/// node failures the same way.
+/// through this seam mid-campaign; the live balancer's real-time driver
+/// ([`realtime::RtDriver`]) routes model-server registrations and
+/// retirements through exactly this seam.
 #[derive(Clone, Copy, Debug)]
 pub enum CapacityChange {
-    /// A worker disappeared out from under the scheduler.
+    /// A worker appeared: `id` is caller-chosen and names the worker in
+    /// every later [`CapacityChange::WorkerLost`] and in
+    /// [`Effect::Start`]`::worker`.  Cores whose capacity is internal
+    /// (allocation-driven stacks) ignore it (default no-op).
+    WorkerUp { id: u64, cores: u32 },
+    /// A worker disappeared out from under the scheduler.  For
+    /// allocation-driven stacks the id is the core-internal worker id;
+    /// for live cores it is the id announced by `WorkerUp`.
     WorkerLost(u64),
 }
 

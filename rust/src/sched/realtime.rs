@@ -1,0 +1,633 @@
+//! The real-time (wall-clock) scheduler kernel: the live balancer's
+//! dispatch plane, driven through the same [`SchedulerCore`] seam the
+//! campaigns use.
+//!
+//! Where [`kernel::run`](super::kernel::run) owns a *virtual*-time DES
+//! (one event heap, simulated clock), [`RtDriver`] owns the *wall*-clock
+//! equivalent: incoming `/Evaluate` requests become `Submit` events,
+//! model-server registrations and retirements become worker
+//! [`CapacityChange`] events, forwarder completions become `WorkDone`,
+//! and [`Effect::SetTimer`] requests land in a monotonic timer heap
+//! whose head deadline the balancer's forwarder condvar waits on.
+//! [`Effect::Start`] effects queue up as ready work the forwarder pool
+//! consumes — the scheduler core decides *order and placement*, the
+//! forwarders execute.
+//!
+//! ```text
+//!   /Evaluate ──────────► submit ─┐                ┌─► ready (id, worker)
+//!   server registered ──► worker_up│   RtDriver    │        │ consumed by
+//!   lease retired ──────► worker_lost  ┌────────┐  │        ▼ forwarder pool
+//!   forward finished ───► work_done └─►│LiveCore│──┘  SetTimer ─► timer heap
+//!                                      └────────┘      (condvar deadline)
+//! ```
+//!
+//! [`LiveSched`] adapts any [`TaskCore`] (the HyperQueue-style
+//! dispatcher seam) to this driver: each registered model server is one
+//! single-core worker announced via [`CapacityChange::WorkerUp`], each
+//! evaluation a one-core task whose time limit is the client's deadline
+//! budget.  That makes every task dispatcher a live scheduling policy
+//! for free — [`HqCore`] is the balancer's classic per-model FCFS
+//! (`--scheduler fcfs`), [`WorkStealCore`] partitions the queue across
+//! servers with stealing (`--scheduler worksteal`), and
+//! [`EdfCore`](super::EdfCore) serves earliest-deadline-first
+//! (`--scheduler edf`, one deadline heap per model).
+//!
+//! The balancer holds one `RtDriver` per model, all behind its dispatch
+//! mutex — the driver itself is single-threaded by construction and
+//! allocation-lean (one reusable effect buffer, like the virtual
+//! kernel).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
+use std::time::Instant;
+
+use crate::campaign::submitter::Submission;
+use crate::clock::{Micros, MS, SEC};
+use crate::cluster::JobRequest;
+use crate::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer, TaskCore,
+                    TaskId, WorkerId, TaskSpec};
+use crate::metrics::JobRecord;
+use crate::workload::App;
+
+use super::edf::EdfCore;
+use super::worksteal::WorkStealCore;
+use super::{CapacityChange, Completion, Effect, SchedulerCore};
+
+/// Lifetime of a live worker in the core's virtual clock: effectively
+/// forever (a model server has no allocation walltime; it lives until
+/// retired).  Far below `Micros::MAX` so `t + time_request` arithmetic
+/// can never overflow.
+const LIVE_WORKER_LIFE: Micros = Micros::MAX / 4;
+
+/// Slack added to a task's deadline budget before it becomes the core's
+/// kill limit, so the core-side limit timer never races the client's own
+/// timeout (the front door answers 504 first; the core limit is the
+/// backstop that frees the synthetic worker).
+const LIVE_LIMIT_PAD: Micros = 5 * SEC;
+
+/// The object-safe live scheduler core: every [`TaskCore`]-backed policy
+/// shares `TaskId` ids and `HqTimer` timers, so the balancer can pick
+/// its policy at runtime behind one box.
+pub type LiveCore = Box<dyn SchedulerCore<Id = TaskId, Timer = HqTimer>
+                        + Send>;
+
+/// Which scheduling policy the live balancer dispatches with.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LivePolicy {
+    /// Per-model FCFS ([`HqCore`]'s central queue) — the balancer's
+    /// classic discipline and the default.
+    #[default]
+    Fcfs,
+    /// Partitioned per-server queues with work stealing
+    /// ([`WorkStealCore`]).
+    WorkSteal,
+    /// Earliest-deadline-first with laxity tie-break
+    /// ([`EdfCore`](super::EdfCore)); the deadline is the client's
+    /// request-timeout budget.
+    Edf,
+}
+
+impl LivePolicy {
+    pub fn parse(s: &str) -> Option<LivePolicy> {
+        match s {
+            "fcfs" | "hq" => Some(LivePolicy::Fcfs),
+            "worksteal" => Some(LivePolicy::WorkSteal),
+            "edf" => Some(LivePolicy::Edf),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LivePolicy::Fcfs => "fcfs",
+            LivePolicy::WorkSteal => "worksteal",
+            LivePolicy::Edf => "edf",
+        }
+    }
+}
+
+/// The autoalloc geometry live cores run with: capacity is announced
+/// externally (`WorkerUp`), never self-allocated (`backlog: 0`), one
+/// worker per announcement (the [`LiveSched`] id-mirror contract), no
+/// cap, and zero dispatch latency so `Start` effects come out of the
+/// same pass that freed the capacity.
+pub fn live_autoalloc() -> AutoAllocConfig {
+    AutoAllocConfig {
+        backlog: 0,
+        workers_per_alloc: 1,
+        max_worker_count: u32::MAX,
+        alloc_request: JobRequest::new(1, 1, LIVE_WORKER_LIFE),
+        dispatch_latency: 0,
+    }
+}
+
+/// Build the boxed live core for a policy.
+pub fn live_core(policy: LivePolicy) -> LiveCore {
+    match policy {
+        LivePolicy::Fcfs => {
+            Box::new(LiveSched::new(HqCore::new(live_autoalloc()), "fcfs"))
+        }
+        LivePolicy::WorkSteal => Box::new(LiveSched::new(
+            WorkStealCore::new(live_autoalloc()),
+            "worksteal",
+        )),
+        LivePolicy::Edf => {
+            Box::new(LiveSched::new(EdfCore::new(live_autoalloc()), "edf"))
+        }
+    }
+}
+
+/// Any [`TaskCore`] as a live [`SchedulerCore`]: one registered server =
+/// one single-core worker, one evaluation = one single-core task.
+///
+/// Contract: the meta core must be built with [`live_autoalloc`]
+/// geometry — `workers_per_alloc == 1` and an unreachable worker cap —
+/// because the adapter mirrors the core's sequential internal worker ids
+/// (1, 2, 3, …) to translate the caller's `WorkerUp`/`WorkerLost` ids
+/// and the worker named in each `Start` effect.
+pub struct LiveSched<M: TaskCore> {
+    meta: M,
+    label: &'static str,
+    acts: Vec<HqAction>,
+    /// Caller (external) worker id -> core-internal worker id.
+    ext2int: HashMap<u64, WorkerId>,
+    /// Core-internal worker id -> caller id (for `Start::worker`).
+    int2ext: HashMap<WorkerId, u64>,
+    /// Mirror of the core's sequential worker-id counter.
+    next_int: WorkerId,
+}
+
+impl<M: TaskCore> LiveSched<M> {
+    pub fn new(meta: M, label: &'static str) -> Self {
+        LiveSched {
+            meta,
+            label,
+            acts: Vec::new(),
+            ext2int: HashMap::new(),
+            int2ext: HashMap::new(),
+            next_int: 1,
+        }
+    }
+
+    /// The wrapped dispatcher (introspection; tests and /Stats).
+    pub fn meta(&self) -> &M {
+        &self.meta
+    }
+
+    /// Translate the scratch actions into effects, in issue order.
+    fn flush(&mut self, out: &mut Vec<Effect<TaskId, HqTimer>>) {
+        for a in self.acts.drain(..) {
+            match a {
+                // Live capacity is externally announced; a core built on
+                // the live_autoalloc geometry never emits these.
+                HqAction::SubmitAllocation { .. } => {}
+                HqAction::StartTask { task, worker } => {
+                    out.push(Effect::Start {
+                        id: task,
+                        contention: 1.0,
+                        worker: self.int2ext.get(&worker).copied(),
+                    });
+                }
+                HqAction::Timer(tt, tm) => {
+                    out.push(Effect::SetTimer(tt, tm));
+                }
+                HqAction::TaskCompleted { task, record } => {
+                    out.push(Effect::Finish { id: task, record });
+                }
+                HqAction::KillTask { task } => {
+                    out.push(Effect::Retire { id: task });
+                }
+            }
+        }
+    }
+}
+
+impl<M: TaskCore> SchedulerCore for LiveSched<M> {
+    type Id = TaskId;
+    type Timer = HqTimer;
+
+    fn label(&self) -> &'static str {
+        self.label
+    }
+
+    fn log_grain(&self) -> Micros {
+        MS
+    }
+
+    fn bootstrap_into(
+        &mut self,
+        _t: Micros,
+        _out: &mut Vec<Effect<TaskId, HqTimer>>,
+    ) {
+    }
+
+    fn submit_into(
+        &mut self,
+        t: Micros,
+        s: &Submission,
+        out: &mut Vec<Effect<TaskId, HqTimer>>,
+    ) -> (TaskId, Micros) {
+        // `duration` carries the client's deadline budget: it becomes
+        // the task's kill limit (plus pad) and, on the EDF core, its
+        // absolute deadline.
+        let id = self.meta.submit_task_into(
+            t,
+            TaskSpec {
+                tag: s.tag,
+                cores: 1,
+                time_request: 0,
+                time_limit: s.duration.saturating_add(LIVE_LIMIT_PAD),
+            },
+            &mut self.acts,
+        );
+        self.flush(out);
+        (id, s.duration)
+    }
+
+    fn on_timer_into(
+        &mut self,
+        t: Micros,
+        timer: HqTimer,
+        out: &mut Vec<Effect<TaskId, HqTimer>>,
+    ) {
+        self.meta.on_timer_into(t, timer, &mut self.acts);
+        self.flush(out);
+    }
+
+    fn on_work_done_into(
+        &mut self,
+        t: Micros,
+        id: TaskId,
+        out: &mut Vec<Effect<TaskId, HqTimer>>,
+    ) {
+        self.meta.on_task_done_into(t, id, &mut self.acts);
+        self.flush(out);
+    }
+
+    fn on_capacity_change_into(
+        &mut self,
+        t: Micros,
+        change: CapacityChange,
+        out: &mut Vec<Effect<TaskId, HqTimer>>,
+    ) {
+        match change {
+            CapacityChange::WorkerUp { id, cores } => {
+                // Map BEFORE pumping the core: the new worker may take
+                // work in this very pass, and those `Start` effects must
+                // already carry the caller's id.
+                let int = self.next_int;
+                self.next_int += 1;
+                self.ext2int.insert(id, int);
+                self.int2ext.insert(int, id);
+                let before = self.meta.live_workers();
+                self.meta.on_alloc_up_into(
+                    t,
+                    LIVE_WORKER_LIFE,
+                    cores,
+                    &mut self.acts,
+                );
+                debug_assert_eq!(
+                    self.meta.live_workers(),
+                    before + 1,
+                    "live core must admit exactly one worker per WorkerUp"
+                );
+            }
+            CapacityChange::WorkerLost(id) => {
+                if let Some(int) = self.ext2int.remove(&id) {
+                    self.int2ext.remove(&int);
+                    self.meta.on_worker_lost_into(t, int, &mut self.acts);
+                }
+            }
+        }
+        self.flush(out);
+    }
+
+    fn classify(&self, record: &JobRecord) -> Completion {
+        if record.tag == u64::MAX {
+            Completion::Background
+        } else {
+            Completion::Evaluation
+        }
+    }
+}
+
+/// One pending core timer; ordered by (due, sequence) so the heap pops
+/// deterministically and the payload rides along uncompared.
+struct TimerEntry(Micros, u64, HqTimer);
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, o: &Self) -> bool {
+        self.0 == o.0 && self.1 == o.1
+    }
+}
+impl Eq for TimerEntry {}
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for TimerEntry {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        (self.0, self.1).cmp(&(o.0, o.1))
+    }
+}
+
+/// The wall-clock driver around one live core (the balancer holds one
+/// per model).  Owns the monotonic clock origin, the timer heap fed by
+/// `SetTimer` effects, and the ready queue fed by `Start` effects; every
+/// entry point runs core transitions to quiescence (zero dispatch
+/// latency means a capacity change or submission surfaces its `Start`s
+/// before the call returns).
+pub struct RtDriver {
+    core: LiveCore,
+    epoch: Instant,
+    timers: BinaryHeap<Reverse<TimerEntry>>,
+    timer_seq: u64,
+    /// Dispatched work awaiting a forwarder: (task, bound worker).
+    ready: VecDeque<(TaskId, Option<u64>)>,
+    /// Reusable effect buffer (allocation-lean, like the DES kernel).
+    effects: Vec<Effect<TaskId, HqTimer>>,
+    /// Tasks submitted but not yet finished: a `Limit` timer whose task
+    /// has left this set is stale and is pruned instead of lingering
+    /// for the full deadline budget — the heap tracks in-flight work,
+    /// not lifetime throughput.
+    live: HashSet<TaskId>,
+    next_tag: u64,
+}
+
+impl RtDriver {
+    pub fn new(core: LiveCore) -> RtDriver {
+        RtDriver {
+            core,
+            epoch: Instant::now(),
+            timers: BinaryHeap::new(),
+            timer_seq: 0,
+            ready: VecDeque::new(),
+            effects: Vec::new(),
+            live: HashSet::new(),
+            next_tag: 0,
+        }
+    }
+
+    /// Shorthand: driver over the boxed core for `policy`.
+    pub fn for_policy(policy: LivePolicy) -> RtDriver {
+        RtDriver::new(live_core(policy))
+    }
+
+    /// Scheduler label ("fcfs" | "worksteal" | "edf").
+    pub fn label(&self) -> &'static str {
+        self.core.label()
+    }
+
+    /// Wall-clock micros since this driver started.
+    pub fn now(&self) -> Micros {
+        self.epoch.elapsed().as_micros().min(u64::MAX as u128) as Micros
+    }
+
+    /// Interpret buffered effects: timers enter the heap, starts enter
+    /// the ready queue; terminal records are the forwarder's business
+    /// (resolved from the real HTTP result), so `Finish`/`Retire` are
+    /// informational here.
+    fn absorb(&mut self) {
+        for e in self.effects.drain(..) {
+            match e {
+                Effect::SetTimer(tt, tm) => {
+                    self.timers.push(Reverse(TimerEntry(
+                        tt,
+                        self.timer_seq,
+                        tm,
+                    )));
+                    self.timer_seq += 1;
+                }
+                Effect::Start { id, worker, .. } => {
+                    self.ready.push_back((id, worker));
+                }
+                Effect::Finish { id, .. } => {
+                    self.live.remove(&id);
+                }
+                Effect::Retire { .. } | Effect::Queued => {}
+            }
+        }
+    }
+
+    /// Is a timer entry for a task that already finished?
+    fn is_stale(live: &HashSet<TaskId>, tm: &HqTimer) -> bool {
+        match tm {
+            HqTimer::Limit(id) => !live.contains(id),
+            HqTimer::Dispatched(_) => false,
+        }
+    }
+
+    /// Drop finished tasks' timers: stale heads are popped eagerly (so
+    /// `next_timer_due` never keys a condvar deadline to a dead task),
+    /// and when stale entries dominate the heap is rebuilt — memory
+    /// stays O(in-flight), not O(throughput × deadline budget).
+    fn prune_timers(&mut self) {
+        while let Some(Reverse(TimerEntry(_, _, tm))) = self.timers.peek() {
+            if Self::is_stale(&self.live, tm) {
+                self.timers.pop();
+            } else {
+                break;
+            }
+        }
+        if self.timers.len() > 64
+            && self.timers.len() / 4 > self.live.len().max(1)
+        {
+            let live = std::mem::take(&mut self.live);
+            let timers = std::mem::take(&mut self.timers);
+            self.timers = timers
+                .into_iter()
+                .filter(|Reverse(TimerEntry(_, _, tm))| {
+                    !Self::is_stale(&live, tm)
+                })
+                .collect();
+            self.live = live;
+        }
+    }
+
+    /// Fire every timer due by now (the live analogue of the DES pop
+    /// loop), then prune timers of finished tasks.  Cheap when nothing
+    /// is due: one heap peek each.
+    pub fn advance(&mut self) {
+        loop {
+            let now = self.now();
+            match self.timers.peek() {
+                Some(Reverse(TimerEntry(due, _, _))) if *due <= now => {}
+                _ => break,
+            }
+            let Reverse(TimerEntry(due, _, tm)) = self.timers.pop().unwrap();
+            // Fire at the *scheduled* time, not the (possibly later)
+            // observation time — the DES contract.  Cores that compare
+            // the fire time against an armed deadline (EDF's
+            // stale-limit guard) rely on it being exact.
+            self.core.on_timer_into(due, tm, &mut self.effects);
+            self.absorb();
+        }
+        self.prune_timers();
+    }
+
+    /// Submit one evaluation with a deadline budget (the client's
+    /// request timeout).  Returns the core's task id.
+    pub fn submit(&mut self, budget: Micros) -> TaskId {
+        let t = self.now();
+        let s = Submission {
+            tag: self.next_tag,
+            user: 0,
+            app: App::Gp, // shape is irrelevant live; LiveSched ignores it
+            duration: budget,
+        };
+        self.next_tag += 1;
+        let (id, _) = self.core.submit_into(t, &s, &mut self.effects);
+        self.live.insert(id);
+        self.absorb();
+        self.advance();
+        id
+    }
+
+    /// A forward finished (or was skipped): free the capacity.
+    pub fn work_done(&mut self, id: TaskId) {
+        let t = self.now();
+        self.core.on_work_done_into(t, id, &mut self.effects);
+        self.absorb();
+        self.advance();
+    }
+
+    /// A model server registered: announce one worker under `ext` id.
+    pub fn worker_up(&mut self, ext: u64, cores: u32) {
+        let t = self.now();
+        self.core.on_capacity_change_into(
+            t,
+            CapacityChange::WorkerUp { id: ext, cores },
+            &mut self.effects,
+        );
+        self.absorb();
+        self.advance();
+    }
+
+    /// A server retired or died: ready entries bound to it are stale
+    /// (the core requeues and re-places their tasks), then the core
+    /// processes the loss.
+    pub fn worker_lost(&mut self, ext: u64) {
+        self.ready.retain(|&(_, w)| w != Some(ext));
+        let t = self.now();
+        self.core.on_capacity_change_into(
+            t,
+            CapacityChange::WorkerLost(ext),
+            &mut self.effects,
+        );
+        self.absorb();
+        self.advance();
+    }
+
+    /// Next dispatched task for a forwarder to execute.
+    pub fn next_ready(&mut self) -> Option<(TaskId, Option<u64>)> {
+        self.ready.pop_front()
+    }
+
+    /// Put a ready entry back (its server was momentarily unavailable).
+    pub fn requeue_ready(&mut self, entry: (TaskId, Option<u64>)) {
+        self.ready.push_back(entry);
+    }
+
+    pub fn ready_len(&self) -> usize {
+        self.ready.len()
+    }
+
+    /// Absolute due time (driver clock) of the next core timer — the
+    /// forwarder condvar's wait deadline.
+    pub fn next_timer_due(&self) -> Option<Micros> {
+        self.timers.peek().map(|Reverse(TimerEntry(due, _, _))| *due)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_and_labels() {
+        assert_eq!(LivePolicy::parse("fcfs"), Some(LivePolicy::Fcfs));
+        assert_eq!(LivePolicy::parse("hq"), Some(LivePolicy::Fcfs));
+        assert_eq!(LivePolicy::parse("worksteal"),
+                   Some(LivePolicy::WorkSteal));
+        assert_eq!(LivePolicy::parse("edf"), Some(LivePolicy::Edf));
+        assert_eq!(LivePolicy::parse("nope"), None);
+        assert_eq!(LivePolicy::default(), LivePolicy::Fcfs);
+        for p in [LivePolicy::Fcfs, LivePolicy::WorkSteal, LivePolicy::Edf] {
+            assert_eq!(LivePolicy::parse(p.label()), Some(p));
+        }
+    }
+
+    #[test]
+    fn submit_then_capacity_dispatches_in_order() {
+        for policy in [LivePolicy::Fcfs, LivePolicy::WorkSteal,
+                       LivePolicy::Edf] {
+            let mut d = RtDriver::for_policy(policy);
+            let a = d.submit(60 * SEC);
+            let b = d.submit(60 * SEC);
+            assert_eq!(d.ready_len(), 0, "{}: no capacity yet",
+                       d.label());
+            d.worker_up(7, 1);
+            // One single-core worker: exactly one task dispatches, bound
+            // to the announced id.
+            let (first, worker) = d.next_ready().expect("dispatch");
+            assert_eq!(first, a, "{}: equal deadlines serve FCFS",
+                       d.label());
+            assert_eq!(worker, Some(7));
+            assert!(d.next_ready().is_none());
+            d.work_done(first);
+            let (second, worker) = d.next_ready().expect("second dispatch");
+            assert_eq!(second, b);
+            assert_eq!(worker, Some(7));
+        }
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_budget() {
+        let mut d = RtDriver::for_policy(LivePolicy::Edf);
+        let slow = d.submit(600 * SEC); // generous budget, late deadline
+        let urgent = d.submit(5 * SEC); // tight budget, early deadline
+        d.worker_up(1, 1);
+        let (first, _) = d.next_ready().expect("dispatch");
+        assert_eq!(first, urgent, "EDF serves the tighter deadline first");
+        d.work_done(first);
+        let (second, _) = d.next_ready().expect("dispatch");
+        assert_eq!(second, slow);
+    }
+
+    #[test]
+    fn worker_lost_purges_and_redispatches() {
+        let mut d = RtDriver::for_policy(LivePolicy::Fcfs);
+        d.worker_up(1, 1);
+        d.worker_up(2, 1);
+        let a = d.submit(60 * SEC);
+        let b = d.submit(60 * SEC);
+        assert_eq!(d.ready_len(), 2, "two workers, both dispatch");
+        // Worker 1 dies before any forward starts: its entry is purged,
+        // its task re-placed on worker 2 (busy) or left pending.
+        d.worker_lost(1);
+        let mut seen = Vec::new();
+        while let Some((id, w)) = d.next_ready() {
+            assert_ne!(w, Some(1), "stale binding to the lost worker");
+            seen.push(id);
+        }
+        // Whichever task was bound to worker 2 is still dispatched;
+        // completing it must re-dispatch the other.
+        assert_eq!(seen.len(), 1);
+        d.work_done(seen[0]);
+        let (next, w) = d.next_ready().expect("requeued task re-placed");
+        assert_eq!(w, Some(2));
+        assert!(next == a || next == b);
+    }
+
+    #[test]
+    fn deadline_timer_surfaces_for_condvar_waits() {
+        let mut d = RtDriver::for_policy(LivePolicy::Fcfs);
+        d.worker_up(1, 1);
+        let _ = d.submit(60 * SEC);
+        // The dispatched task armed its kill-limit timer: the condvar
+        // deadline must be visible and in the future.
+        let due = d.next_timer_due().expect("limit timer armed");
+        assert!(due > d.now());
+    }
+}

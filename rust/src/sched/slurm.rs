@@ -75,8 +75,12 @@ impl SlurmSched {
         for a in self.acts.drain(..) {
             out.push(match a {
                 Action::Timer(tt, tm) => Effect::SetTimer(tt, tm),
-                Action::Launched { job, contention, .. } => {
-                    Effect::Start { id: job, contention }
+                Action::Launched { job, contention, node } => {
+                    Effect::Start {
+                        id: job,
+                        contention,
+                        worker: Some(node as u64),
+                    }
                 }
                 Action::TimedOut { job } => Effect::Retire { id: job },
                 Action::Completed { job, record } => {

@@ -28,6 +28,7 @@ use crate::slurmlite::core::{Action, BatchCore, JobId, SlurmCore,
                              Timer as SlurmTimer, USER_EXPERIMENT};
 use crate::workload::{scenario, App, Scenario};
 
+use super::edf::EdfCore;
 use super::worksteal::WorkStealCore;
 use super::{CapacityChange, Completion, Effect, SchedulerCore};
 
@@ -36,6 +37,9 @@ pub type HqSched = MetaStack<HqCore>;
 
 /// The UM-Bridge stack over the partitioned work-stealing dispatcher.
 pub type WorkStealSched = MetaStack<WorkStealCore>;
+
+/// The UM-Bridge stack over the deadline-EDF dispatcher.
+pub type EdfSched = MetaStack<EdfCore>;
 
 /// Composite timers: both cores' timers plus the stack's own lifecycle
 /// events (registration pre-jobs, allocation expiry).
@@ -159,7 +163,7 @@ impl<M: TaskCore> MetaStack<M> {
                         );
                         self.alloc_jobs.insert(id, alloc_tag);
                     }
-                    HqAction::StartTask { task, .. } => {
+                    HqAction::StartTask { task, worker } => {
                         if self.reg_tasks.contains(&task) {
                             // Registration pre-jobs run ~1 s of server
                             // init; their work-done is stack-internal.
@@ -171,6 +175,7 @@ impl<M: TaskCore> MetaStack<M> {
                             out.push(Effect::Start {
                                 id: task,
                                 contention: 1.0,
+                                worker: Some(worker),
                             });
                         }
                     }
@@ -333,6 +338,9 @@ impl<M: TaskCore> SchedulerCore for MetaStack<M> {
             CapacityChange::WorkerLost(wid) => {
                 self.meta.on_worker_lost_into(t, wid, &mut self.meta_acts);
             }
+            // Capacity on this stack comes from allocations obtained
+            // through the SLURM core, never from external announcements.
+            CapacityChange::WorkerUp { .. } => {}
         }
         self.route(t, out);
     }

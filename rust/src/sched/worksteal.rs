@@ -62,7 +62,9 @@ struct Worker {
     cores_free: u32,
     /// Virtual time at which the surrounding allocation expires.
     expires_t: Micros,
-    /// This worker's private FIFO dispatch deque (pending tasks).
+    /// This worker's private FIFO dispatch deque (pending tasks; may
+    /// lazily hold ids of tasks evicted while queued — dropped when
+    /// next encountered, like the backlog).
     deque: VecDeque<TaskId>,
     /// Tasks currently dispatched to / running on this worker.
     running: BTreeSet<TaskId>,
@@ -204,11 +206,15 @@ impl WorkStealCore {
                 let Some(&front) = self.workers[&wid].deque.front() else {
                     break;
                 };
-                // Deque entries are always live Pending tasks: a task
-                // only completes after it started, starting pops it, and
-                // requeues go to the backlog — only the backlog can hold
-                // stale ids.
-                debug_assert!(self.is_pending(front), "stale deque entry");
+                if !self.is_pending(front) {
+                    // Stale entry: the task completed while still
+                    // queued (the live plane evicts cancelled Pending
+                    // tasks via `on_task_done`).  Drop lazily, same
+                    // discipline as the backlog.
+                    self.workers.get_mut(&wid).unwrap().deque.pop_front();
+                    progressed = true;
+                    continue;
+                }
                 if !self.can_start(t, front, wid) {
                     break;
                 }
@@ -275,8 +281,13 @@ impl WorkStealCore {
             }
             let Some((_, vid)) = victim else { continue };
             let &tail = self.workers[&vid].deque.back().unwrap();
-            // Same invariant as dispatch_local: deque entries are live.
-            debug_assert!(self.is_pending(tail), "stale deque entry");
+            if !self.is_pending(tail) {
+                // Stale tail (see dispatch_local): drop it and report
+                // progress so the pump rescans.
+                self.workers.get_mut(&vid).unwrap().deque.pop_back();
+                stole = true;
+                break;
+            }
             if self.can_start(t, tail, thief) {
                 self.workers.get_mut(&vid).unwrap().deque.pop_back();
                 self.start(t, tail, thief, out);
@@ -719,6 +730,38 @@ mod tests {
         assert_eq!(all, (1..=6).collect::<Vec<_>>());
         assert!(starts.iter().any(|&(w, _)| w == 2));
         assert_eq!(core.retired_count(), 6);
+    }
+
+    #[test]
+    fn eviction_of_queued_task_is_dropped_lazily_not_dispatched() {
+        // Live-plane cancellation path: a Pending task sitting in a
+        // worker's deque is completed (evicted) before it ever starts;
+        // the stale deque entry must be dropped lazily — never
+        // dispatched, never a panic.
+        let mut core = WorkStealCore::new(cfg());
+        let mut out = Vec::new();
+        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
+        let t1 = core.submit_task_into(0, spec(1, 16), &mut out);
+        let t2 = core.submit_task_into(0, spec(2, 16), &mut out);
+        let t3 = core.submit_task_into(0, spec(3, 16), &mut out);
+        // t1 dispatched; t2, t3 queued behind it.
+        assert_eq!(core.deque_len(1), 2);
+        out.clear();
+        core.on_task_done_into(SEC, t2, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            HqAction::TaskCompleted { task, .. } if *task == t2
+        )));
+        // The pump already skimmed the stale entry off the deque front.
+        assert_eq!(core.deque_len(1), 1);
+        // Finishing t1 starts t3 — t2 is gone, not resurrected.
+        out.clear();
+        core.on_task_done_into(2 * SEC, t1, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            HqAction::Timer(_, HqTimer::Dispatched(id)) if *id == t3
+        )));
+        assert_eq!(core.resident_tasks(), 1, "only t3 remains in flight");
     }
 
     #[test]

@@ -12,6 +12,7 @@ use uqsched::coordinator::{BalancerConfig, LoadBalancer, LocalBackend};
 use uqsched::httpd::{HttpClient, Request};
 use uqsched::json::{self, Value};
 use uqsched::models::SyntheticModel;
+use uqsched::sched::LivePolicy;
 use uqsched::umbridge::{HttpModel, Model};
 
 /// alpha: [2] -> [1]; beta: [3] -> [2,1]; slow-*: [1] -> [1] with the
@@ -118,6 +119,61 @@ fn multi_model_mixed_clients() {
     lb.shutdown();
 }
 
+/// The serving plane runs on the `SchedulerCore` seam: the same
+/// artifact-free workload must serve end-to-end under every live
+/// policy, not just the default FCFS core.
+#[test]
+fn alternate_schedulers_serve_end_to_end() {
+    for policy in [LivePolicy::WorkSteal, LivePolicy::Edf] {
+        let mut lb = start(BalancerConfig {
+            models: vec!["alpha".into(), "beta".into()],
+            max_servers: 2,
+            forwarders: 4,
+            scheduler: policy,
+            ..Default::default()
+        });
+        assert_eq!(lb.scheduler(), policy);
+        let url = lb.url();
+        wait_servers(&lb, 2);
+
+        let threads: Vec<_> = ["alpha", "beta"]
+            .iter()
+            .map(|name| {
+                let url = url.clone();
+                let name = name.to_string();
+                std::thread::spawn(move || {
+                    let mut m = HttpModel::connect(&url, &name).unwrap();
+                    let cfgv = Value::Obj(Default::default());
+                    for i in 0..5 {
+                        let x: Vec<f64> = if name == "alpha" {
+                            vec![i as f64, 1.0]
+                        } else {
+                            vec![i as f64, 1.0, 2.0]
+                        };
+                        let sum: f64 = x.iter().sum();
+                        let out = m.evaluate(&[x], &cfgv).unwrap_or_else(
+                            |e| panic!("{name} i{i} ({policy:?}): {e:#}"));
+                        assert_eq!(out[0][0], sum,
+                                   "{name} routed wrong under {policy:?}");
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(lb.stats().model("alpha").unwrap()
+                       .served.load(Ordering::Relaxed), 5);
+        assert_eq!(lb.stats().model("beta").unwrap()
+                       .served.load(Ordering::Relaxed), 5);
+        // /Stats names the policy serving this front door.
+        let doc = lb.stats_json();
+        assert_eq!(doc.get("scheduler").and_then(|v| v.as_str()),
+                   Some(policy.label()));
+        lb.shutdown();
+    }
+}
+
 #[test]
 fn per_job_servers_retire_and_respawn() {
     let mut lb = start(BalancerConfig {
@@ -182,8 +238,15 @@ fn backpressure_rejects_with_retry_after_then_drains() {
         .unwrap();
     assert_eq!(resp.status, 503, "expected backpressure, got {}",
                resp.status);
-    assert!(resp.headers.contains_key("retry-after"),
-            "503 must carry Retry-After");
+    let retry = resp
+        .headers
+        .get("retry-after")
+        .expect("503 must carry Retry-After");
+    // Derived from the live queue-wait p50, clamped to [1, 30] s —
+    // never a bare constant outside that window.
+    let secs: u32 = retry.parse().expect("Retry-After must be integral");
+    assert!((1..=30).contains(&secs),
+            "Retry-After {secs} outside the [1, 30] s clamp");
 
     // The queue drains: A and B complete, and a retry of C succeeds.
     assert_eq!(a.join().unwrap()[0][0], 1.0);

@@ -9,6 +9,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use uqsched::coordinator::start_live;
+use uqsched::sched::LivePolicy;
 use uqsched::json::Value;
 use uqsched::models;
 use uqsched::runtime::{check_testvec, Engine};
@@ -108,7 +109,8 @@ fn runtime_gp_agrees_with_gs2_direction() {
 #[test]
 fn balancer_hq_end_to_end() {
     let eng = need_artifacts!();
-    let stack = start_live(eng, &[models::GP_NAME], "hq", 2, 5000.0, true)
+    let stack = start_live(eng, &[models::GP_NAME], "hq", 2, 5000.0, true,
+                           LivePolicy::Fcfs)
         .expect("live stack");
     let mut client = HttpModel::connect(&stack.balancer.url(),
                                         models::GP_NAME)
@@ -131,7 +133,8 @@ fn balancer_hq_end_to_end() {
 #[test]
 fn balancer_slurm_backend_end_to_end() {
     let eng = need_artifacts!();
-    let stack = start_live(eng, &[models::GP_NAME], "slurm", 2, 5000.0, true)
+    let stack = start_live(eng, &[models::GP_NAME], "slurm", 2, 5000.0, true,
+                           LivePolicy::Fcfs)
         .expect("live stack");
     let mut client = HttpModel::connect(&stack.balancer.url(),
                                         models::GP_NAME)
@@ -147,7 +150,8 @@ fn balancer_slurm_backend_end_to_end() {
 fn balancer_per_job_servers_retire() {
     // The paper's measured configuration: one evaluation per server.
     let eng = need_artifacts!();
-    let stack = start_live(eng, &[models::GP_NAME], "hq", 2, 5000.0, false)
+    let stack = start_live(eng, &[models::GP_NAME], "hq", 2, 5000.0, false,
+                           LivePolicy::Fcfs)
         .expect("live stack");
     let mut client = HttpModel::connect(&stack.balancer.url(),
                                         models::GP_NAME)
@@ -169,7 +173,8 @@ fn balancer_multi_model_real_models() {
     // learned at registration, /Evaluate routed by name.
     let eng = need_artifacts!();
     let stack = start_live(eng, &[models::GP_NAME, models::EIGEN_SMALL_NAME],
-                           "hq", 2, 5000.0, true)
+                           "hq", 2, 5000.0, true,
+                           LivePolicy::Fcfs)
         .expect("live stack");
     let url = stack.balancer.url();
     let cfg = Value::Obj(Default::default());
@@ -196,7 +201,8 @@ fn balancer_multi_model_real_models() {
 #[test]
 fn balancer_concurrent_clients_fcfs() {
     let eng = need_artifacts!();
-    let stack = start_live(eng, &[models::GP_NAME], "hq", 3, 5000.0, true)
+    let stack = start_live(eng, &[models::GP_NAME], "hq", 3, 5000.0, true,
+                           LivePolicy::Fcfs)
         .expect("live stack");
     let url = stack.balancer.url();
     let threads: Vec<_> = (0..4)

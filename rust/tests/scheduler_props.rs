@@ -3,9 +3,10 @@
 //! structural properties of correct scheduling regardless of seed —
 //! plus observational-equivalence tests pinning the indexed scheduler
 //! cores to the seed semantics preserved in the `reference` modules,
-//! plus pluggability tests running all three schedulers generically
-//! through one `SchedulerCore` harness and pinning the work-stealing
-//! core's no-task-lost / FIFO-deque invariants under worker churn.
+//! plus pluggability tests running all four schedulers generically
+//! through one `SchedulerCore` harness, pinning the work-stealing
+//! core's no-task-lost / FIFO-deque invariants under worker churn and
+//! the EDF core's pop-order / no-starvation / determinism invariants.
 
 use std::collections::HashMap;
 
@@ -18,7 +19,7 @@ use uqsched::experiments::{run_naive_slurm, run_umbridge_hq,
 use uqsched::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer,
                       ReferenceHqCore, TaskCore, TaskId, TaskSpec};
 use uqsched::metrics::JobRecord;
-use uqsched::sched::{kernel, CapacityChange, Effect, MetaStack,
+use uqsched::sched::{kernel, CapacityChange, EdfCore, Effect, MetaStack,
                      SchedulerCore, SlurmSched, StackTimer, WorkStealCore};
 use uqsched::slurmlite::core::{Action, BatchCore, JobId, SlurmCore, Timer,
                                USER_EXPERIMENT};
@@ -555,12 +556,12 @@ fn cancel_while_pending_under_indexed_queue() {
 }
 
 // ---------------------------------------------------------------------------
-// Pluggability: all three schedulers through ONE generic harness.
+// Pluggability: all four schedulers through ONE generic harness.
 //
 // The `SchedulerCore` seam promises that a campaign is scheduler-
 // agnostic: the same protocol, driven by the same generic kernel, must
 // satisfy the same structural properties on every implementation —
-// SLURM, the HQ stack, and the work-stealing stack.
+// SLURM, the HQ stack, the work-stealing stack, and the EDF stack.
 // ---------------------------------------------------------------------------
 
 /// The paper's fixed-depth protocol through the generic kernel, against
@@ -572,7 +573,7 @@ fn run_generic<S: SchedulerCore>(core: &mut S, cfg: &Config) -> CampaignResult {
 }
 
 #[test]
-fn prop_all_three_cores_through_one_scheduler_core_harness() {
+fn prop_all_four_cores_through_one_scheduler_core_harness() {
     prop::check("sched-core-generic", 8, |rng| {
         let cfg = random_cfg(rng);
         let ccfg = cfg.campaign();
@@ -591,6 +592,14 @@ fn prop_all_three_cores_through_one_scheduler_core_harness() {
                 &ccfg,
                 WorkStealCore::new(ccfg.autoalloc()),
                 "worksteal",
+            );
+            results.push(run_generic(&mut core, &cfg));
+        }
+        {
+            let mut core = MetaStack::new(
+                &ccfg,
+                EdfCore::new(ccfg.autoalloc()),
+                "edf",
             );
             results.push(run_generic(&mut core, &cfg));
         }
@@ -683,7 +692,7 @@ fn stack_capacity_change_requeues_without_loss() {
         for e in effects.drain(..) {
             match e {
                 Effect::SetTimer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
-                Effect::Start { id, contention } => {
+                Effect::Start { id, contention, .. } => {
                     if !lost_injected {
                         // Yank the first worker the moment it takes work.
                         lost_injected = true;
@@ -830,6 +839,179 @@ fn prop_worksteal_no_task_lost_and_deques_fifo_under_churn() {
         tags.dedup();
         assert_eq!(tags.len(), n, "duplicate/lost completions under churn");
         assert_eq!(core.resident_tasks(), 0, "hot map drained");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Deadline-EDF invariants: strict earliest-deadline-first pop order,
+// no starvation under sustained short-deadline load, seed determinism.
+// ---------------------------------------------------------------------------
+
+/// Drive a bare `EdfCore` through a DES: submissions at given times,
+/// allocations come up `alloc_delay` after request, tasks run `dur`.
+/// Returns `(start_order, records)`.
+fn drive_edf(
+    core: &mut EdfCore,
+    submissions: &[(Micros, TaskSpec)],
+    alloc_delay: Micros,
+    dur: Micros,
+) -> (Vec<TaskId>, Vec<JobRecord>) {
+    #[derive(Debug)]
+    enum Ev {
+        Submit(usize),
+        AllocUp,
+        Timer(HqTimer),
+        Done(TaskId),
+    }
+    let mut des: Des<Ev> = Des::new();
+    for (i, (t, _)) in submissions.iter().enumerate() {
+        des.schedule(*t, Ev::Submit(i));
+    }
+    let mut starts = Vec::new();
+    let mut records = Vec::new();
+    let mut acts: Vec<HqAction> = Vec::new();
+    let mut guard = 0u64;
+    while let Some((t, ev)) = des.pop() {
+        guard += 1;
+        assert!(guard < 500_000, "runaway edf trace");
+        acts.clear();
+        match ev {
+            Ev::Submit(i) => {
+                core.submit_task_into(t, submissions[i].1.clone(), &mut acts);
+            }
+            Ev::AllocUp => {
+                core.on_alloc_up_into(t, 100_000 * SEC, 16, &mut acts)
+            }
+            Ev::Timer(tm) => core.on_timer_into(t, tm, &mut acts),
+            Ev::Done(id) => core.on_task_done_into(t, id, &mut acts),
+        }
+        for a in acts.drain(..) {
+            match a {
+                HqAction::SubmitAllocation { .. } => {
+                    des.schedule(t + alloc_delay, Ev::AllocUp);
+                }
+                HqAction::StartTask { task, .. } => {
+                    starts.push(task);
+                    des.schedule(t + dur, Ev::Done(task));
+                }
+                HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                HqAction::TaskCompleted { record, .. } => {
+                    records.push(record);
+                }
+                HqAction::KillTask { .. } => {}
+            }
+        }
+        if records.len() >= submissions.len() {
+            break;
+        }
+    }
+    assert_eq!(records.len(), submissions.len(), "edf trace incomplete");
+    (starts, records)
+}
+
+#[test]
+fn prop_edf_pops_in_deadline_laxity_id_order() {
+    prop::check("edf-pop-order", 10, |rng| {
+        // One serial worker (16-core tasks), everything submitted at
+        // t=0: the observed start order must equal the (deadline,
+        // laxity, id) sort — EDF's defining property.
+        let n = 4 + rng.below(12) as usize;
+        let specs: Vec<(Micros, TaskSpec)> = (0..n)
+            .map(|i| {
+                (0, TaskSpec {
+                    tag: i as u64,
+                    cores: 16,
+                    time_request: (1 + rng.below(10)) * SEC,
+                    time_limit: (30 + rng.below(500)) * SEC,
+                })
+            })
+            .collect();
+        let mut core = EdfCore::new(AutoAllocConfig {
+            backlog: 1,
+            workers_per_alloc: 1,
+            max_worker_count: 1,
+            alloc_request: JobRequest::new(16, 16, 100_000 * SEC),
+            dispatch_latency: 1 * MS,
+        });
+        let (starts, _) = drive_edf(&mut core, &specs, SEC, 2 * SEC);
+        assert_eq!(starts.len(), n);
+        let mut expect: Vec<TaskId> = (1..=n as u64).collect();
+        expect.sort_by_key(|&id| {
+            let s = &specs[(id - 1) as usize].1;
+            (s.time_limit, s.time_limit - s.time_request, id)
+        });
+        assert_eq!(starts, expect,
+                   "EDF start order must follow (deadline, laxity, id)");
+    });
+}
+
+#[test]
+fn edf_no_starvation_under_sustained_short_deadline_load() {
+    // A long-deadline task arrives first; short-deadline tasks arrive
+    // exactly as fast as the worker serves them, so while the long task
+    // waits there is *always* a fresher, earlier-deadline competitor.
+    // Absolute deadlines still guarantee it runs: once newcomers'
+    // `now + 30 s` passes its fixed `120 s` deadline (~t = 90 s) the old
+    // task is the earliest deadline in the queue.
+    let long_limit = 120 * SEC;
+    let mut specs: Vec<(Micros, TaskSpec)> = vec![(0, TaskSpec {
+        tag: 0,
+        cores: 16,
+        time_request: SEC,
+        time_limit: long_limit,
+    })];
+    // Shorts every 2 s for 400 s, each running 2 s: utilization 1 while
+    // the long task is pending (the worker never idles around it).
+    let n_short = 200u64;
+    for i in 0..n_short {
+        specs.push((2 * i * SEC, TaskSpec {
+            tag: 1 + i,
+            cores: 16,
+            time_request: SEC,
+            time_limit: 30 * SEC,
+        }));
+    }
+    let mut core = EdfCore::new(AutoAllocConfig {
+        backlog: 1,
+        workers_per_alloc: 1,
+        max_worker_count: 1,
+        alloc_request: JobRequest::new(16, 16, 100_000 * SEC),
+        dispatch_latency: 1 * MS,
+    });
+    let (_starts, records) = drive_edf(&mut core, &specs, SEC, 2 * SEC);
+    let long = records.iter().find(|r| r.tag == 0).expect("long task ran");
+    assert!(!long.truncated, "long task must complete, not be killed");
+    // Pressure was real: ~45 earlier-deadline shorts ran first…
+    assert!(long.start >= 80 * SEC,
+            "expected sustained contention before the long task, \
+             started at {}", long.start);
+    // …but it was never starved past its own deadline window.
+    assert!(long.start <= long_limit,
+            "starved: long task started at {} (deadline {})",
+            long.start, long_limit);
+    // Nothing else starved either: every submission completed.
+    assert_eq!(records.len() as u64, 1 + n_short);
+}
+
+#[test]
+fn prop_edf_campaign_deterministic_under_seed() {
+    prop::check("edf-determinism", 4, |rng| {
+        let cfg = random_cfg(rng);
+        let run = || {
+            let ccfg = cfg.campaign();
+            let mut core = MetaStack::new(
+                &ccfg,
+                EdfCore::new(ccfg.autoalloc()),
+                "edf",
+            );
+            run_generic(&mut core, &cfg)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.experiment.records.len(), b.experiment.records.len());
+        for (x, y) in a.experiment.records.iter().zip(&b.experiment.records) {
+            assert_eq!(x, y, "edf campaign not seed-deterministic");
+        }
     });
 }
 
