@@ -9,6 +9,9 @@
 //! * runtime-heteroskedastic families defeating uniform time requests,
 //! * an adaptive Bayesian-inversion-style policy whose batch sizes
 //!   depend on the results observed so far,
+//! * a flaky cluster: one seeded fault plan (worker crashes, failing
+//!   attempts, retry budgets) replayed identically against all four
+//!   cores, so the makespan deltas are pure recovery-policy cost,
 //!
 //! and — via the `SchedulerCore` seam — that every policy runs
 //! unchanged against a *third* and *fourth* scheduler (`worksteal`, the
@@ -28,6 +31,7 @@ use uqsched::cli::Args;
 use uqsched::clock::SEC;
 use uqsched::cluster::ClusterSpec;
 use uqsched::metrics::BoxStats;
+use uqsched::sched::FaultSpec;
 use uqsched::workload::App;
 
 fn report(r: &CampaignResult) {
@@ -58,6 +62,16 @@ fn report(r: &CampaignResult) {
         "  {:<33} overhead[s]: {}",
         "",
         BoxStats::from(&r.experiment.overheads_sec()).row()
+    );
+}
+
+/// `report` plus the recovery counters the fault plane adds.
+fn report_flaky(r: &CampaignResult) {
+    report(r);
+    let m = &r.metrics;
+    println!(
+        "  {:<33} {} retries, {} quarantined, {} worker crashes",
+        "", m.retries, m.quarantined, m.worker_crashes
     );
 }
 
@@ -124,5 +138,24 @@ fn main() -> anyhow::Result<()> {
         r.metrics.completed,
         tasks
     );
+
+    println!("== flaky cluster (one seeded fault plan, all four cores) ==");
+    // The same deterministic fault trace — a worker crash every ~2
+    // virtual minutes, 5% of attempts failing, three attempts before a
+    // task is quarantined — replayed against every core, so the
+    // makespan inflation below is pure recovery-policy difference, not
+    // luck.  `uqsched campaign --faults ...` exposes the same spec.
+    let spec = FaultSpec::parse("crash=120s,fail=0.05,attempts=3,backoff=1s:30s,seed=7")
+        .map_err(anyhow::Error::msg)?;
+    println!("  fault plan: {}", spec.describe());
+    cfg.faults = Some(spec);
+    let mut sub = FixedDepth::new(App::Gp, tasks, 4, seed);
+    report_flaky(&campaign::run_slurm(&cfg, &mut sub, SlurmMode::Native));
+    let mut sub = FixedDepth::new(App::Gp, tasks, 4, seed);
+    report_flaky(&campaign::run_hq(&cfg, &mut sub));
+    let mut sub = FixedDepth::new(App::Gp, tasks, 4, seed);
+    report_flaky(&campaign::run_worksteal(&cfg, &mut sub));
+    let mut sub = FixedDepth::new(App::Gp, tasks, 4, seed);
+    report_flaky(&campaign::run_edf(&cfg, &mut sub));
     Ok(())
 }

@@ -68,11 +68,16 @@ fn main() {
         .into_iter()
         .map(multi_model_section)
         .collect();
-    let doc = Value::obj(vec![("schedulers", Value::arr(rows))]);
+    let degraded = degraded_fleet_section();
+    let doc = Value::obj(vec![
+        ("schedulers", Value::arr(rows)),
+        ("degraded_fleet", degraded),
+    ]);
     std::fs::write("BENCH_hotpath.json", json::write(&doc))
         .expect("write BENCH_hotpath.json");
     println!("wrote BENCH_hotpath.json (one row per balancer scheduler, \
-              per-model queue-wait/forward histograms)");
+              per-model queue-wait/forward histograms, plus the \
+              degraded-fleet section)");
     println!("hotpath done");
     std::process::exit(0); // skip slow teardown of live threads
 }
@@ -227,6 +232,147 @@ fn multi_model_section(scheduler: LivePolicy) -> Value {
             ("wall_s", Value::num(dt)),
             ("evals_per_s", Value::num(total / dt)),
         ])),
+        ("stats", stats),
+    ]);
+    lb.shutdown();
+    row
+}
+
+/// Degraded-fleet section: the same balancer workload while an injector
+/// kills a server mid-evaluation every ~40th call — every death drops
+/// the forwarder's socket (a genuine transport failure), so the
+/// lease-failure retry path, worker-lost accounting and server respawn
+/// all run under real HTTP load.  Returns the `degraded_fleet` row of
+/// BENCH_hotpath.json (throughput under churn plus the balancer's
+/// /Stats document with the retry counters and backoff histogram).
+fn degraded_fleet_section() -> Value {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    let iters = env_usize("UQSCHED_HOTPATH_ITERS", 300).max(1);
+    let n_models = 2usize;
+    let clients_per_model = 2usize;
+    const KILL_EVERY: u64 = 40;
+
+    // The injected deaths are expected: keep their panic traces out of
+    // the bench output, delegate everything else to the default hook.
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let injected = info
+            .payload()
+            .downcast_ref::<&str>()
+            .is_some_and(|s| s.contains("injected server death"));
+        if !injected {
+            prev(info);
+        }
+    }));
+
+    struct FlakyModel {
+        inner: models::SyntheticModel,
+        calls: Arc<AtomicU64>,
+    }
+    impl Model for FlakyModel {
+        fn name(&self) -> &str {
+            self.inner.name()
+        }
+        fn input_sizes(&self) -> Vec<usize> {
+            self.inner.input_sizes()
+        }
+        fn output_sizes(&self) -> Vec<usize> {
+            self.inner.output_sizes()
+        }
+        fn evaluate(&self, inputs: &[Vec<f64>], config: &Value)
+                    -> anyhow::Result<Vec<Vec<f64>>> {
+            if self.calls.fetch_add(1, Ordering::Relaxed) % KILL_EVERY == 0 {
+                panic!("injected server death (bench)");
+            }
+            self.inner.evaluate(inputs, config)
+        }
+    }
+
+    let calls = Arc::new(AtomicU64::new(1)); // call 0 would die instantly
+    let calls2 = calls.clone();
+    let names: Vec<String> =
+        (0..n_models).map(|i| format!("syn-{i}")).collect();
+    let backend = LocalBackend::new(Arc::new(move |name: &str| {
+        Ok(Arc::new(FlakyModel {
+            inner: models::SyntheticModel::new(name, &[4], &[2]),
+            calls: calls2.clone(),
+        }) as Arc<dyn Model>)
+    }));
+    let cfg = BalancerConfig {
+        models: names.clone(),
+        max_servers: 2,
+        forwarders: 8,
+        ..Default::default()
+    };
+    let mut lb = LoadBalancer::start(cfg, backend).expect("balancer");
+    let url = lb.url();
+    let t0 = Instant::now();
+    while lb.registry().total() < n_models {
+        if t0.elapsed().as_secs() > 30 {
+            panic!("servers failed to register");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+
+    let ok = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let threads: Vec<_> = names
+        .iter()
+        .flat_map(|name| {
+            (0..clients_per_model).map(|c| {
+                let url = url.clone();
+                let name = name.clone();
+                let ok = ok.clone();
+                let failed = failed.clone();
+                std::thread::spawn(move || {
+                    let mut m = HttpModel::connect(&url, &name).unwrap();
+                    let cfgv = Value::Obj(Default::default());
+                    for i in 0..iters {
+                        let x = vec![c as f64, i as f64, 1.0, 2.0];
+                        let sum: f64 = x.iter().sum();
+                        match m.evaluate(&[x], &cfgv) {
+                            Ok(out) => {
+                                assert_eq!(out[0][0], sum);
+                                ok.fetch_add(1, Ordering::Relaxed);
+                            }
+                            // Budget-exhausted evaluations surface as
+                            // errors (counted, not fatal): a kill can
+                            // land on the retry attempt too.
+                            Err(_) => {
+                                failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                })
+            }).collect::<Vec<_>>()
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let total = (n_models * clients_per_model * iters) as u64;
+    let completed = ok.load(Ordering::Relaxed);
+    let errors = failed.load(Ordering::Relaxed);
+    assert_eq!(completed + errors, total, "degraded fleet lost requests");
+    println!(
+        "  degraded fleet ({n_models} models, kill every {KILL_EVERY})      \
+         {:>10.1} evals/s   {completed} ok, {errors} exhausted budget",
+        completed as f64 / dt
+    );
+
+    let stats = lb.stats_json();
+    let row = Value::obj(vec![
+        ("models", Value::num(n_models as f64)),
+        ("clients", Value::num((n_models * clients_per_model) as f64)),
+        ("kill_every", Value::num(KILL_EVERY as f64)),
+        ("evals", Value::num(total as f64)),
+        ("completed", Value::num(completed as f64)),
+        ("errors", Value::num(errors as f64)),
+        ("wall_s", Value::num(dt)),
+        ("evals_per_s", Value::num(completed as f64 / dt)),
         ("stats", stats),
     ]);
     lb.shutdown();

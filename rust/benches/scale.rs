@@ -30,14 +30,15 @@
 
 use std::time::Instant;
 
-use uqsched::campaign::{self, AdaptiveBayes, CampaignConfig, PoissonBurst};
+use uqsched::campaign::{self, AdaptiveBayes, CampaignConfig, PoissonBurst,
+                        SlurmMode};
 use uqsched::clock::{Des, Micros, MS, SEC};
 use uqsched::cluster::{ClusterSpec, JobRequest, OverheadModel};
 use uqsched::workload::App;
 use uqsched::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer,
                       ReferenceHqCore, TaskCore, TaskSpec};
 use uqsched::json::Value;
-use uqsched::sched::{EdfCore, WorkStealCore};
+use uqsched::sched::{EdfCore, FaultSpec, WorkStealCore};
 use uqsched::slurmlite::core::{Action, BatchCore, SlurmCore, Timer,
                                USER_EXPERIMENT};
 use uqsched::slurmlite::ReferenceSlurmCore;
@@ -411,6 +412,7 @@ fn campaign_cfg() -> CampaignConfig {
         registration_jobs: 0,
         hq_backlog: 256,
         hq_workers: 256,
+        faults: None,
     }
 }
 
@@ -474,6 +476,69 @@ fn campaign_edf(n: u64) -> Row {
     let t0 = Instant::now();
     let res = campaign::run_edf(&cfg, &mut sub);
     campaign_row("edf-bursty", n, res, t0.elapsed().as_secs_f64())
+}
+
+/// Flaky-cluster campaign: the same bursty stream under the seeded
+/// `FaultSpec::flaky` plan (node loss every ~5 virtual minutes, biased
+/// transient failures, 5% stragglers at 8x) on each of the four cores.
+/// Each core gets one row plus a `<core>_flaky_makespan_inflation`
+/// summary entry — the virtual-time cost of riding out the same seeded
+/// failure trace, relative to its own clean run.
+fn campaign_flaky_rows(
+    n: u64,
+    rows: &mut Vec<Row>,
+    summary: &mut Vec<(&'static str, Value)>,
+) {
+    let run = |faulty: bool, which: &str| -> (campaign::CampaignResult, f64) {
+        let mut cfg = campaign_cfg();
+        if faulty {
+            cfg.faults = Some(FaultSpec::flaky(42));
+        }
+        let mut sub = PoissonBurst::new(App::Eigen100, n, 20 * MS, (1, 64), 42);
+        let t0 = Instant::now();
+        let res = match which {
+            "slurm" => campaign::run_slurm(&cfg, &mut sub, SlurmMode::Native),
+            "hq" => campaign::run_hq(&cfg, &mut sub),
+            "worksteal" => campaign::run_worksteal(&cfg, &mut sub),
+            _ => campaign::run_edf(&cfg, &mut sub),
+        };
+        (res, t0.elapsed().as_secs_f64())
+    };
+    for (which, imp, key) in [
+        ("slurm", "flaky-slurm", "slurm_flaky_makespan_inflation"),
+        ("hq", "flaky-hq", "hq_flaky_makespan_inflation"),
+        ("worksteal", "flaky-worksteal",
+         "worksteal_flaky_makespan_inflation"),
+        ("edf", "flaky-edf", "edf_flaky_makespan_inflation"),
+    ] {
+        let (clean, _) = run(false, which);
+        let (flaky, wall) = run(true, which);
+        // Quarantined tasks still complete (as truncated records): a
+        // flaky cluster may degrade throughput, never lose work.
+        assert_eq!(flaky.metrics.completed, n,
+                   "{which} flaky campaign lost tasks");
+        let m = &flaky.metrics;
+        let inflation =
+            m.makespan as f64 / clean.metrics.makespan.max(1) as f64;
+        println!(
+            "  {which:<9} flaky: {} retries, {} quarantined, {} crashes, \
+             makespan inflation {inflation:.3}x",
+            m.retries, m.quarantined, m.worker_crashes
+        );
+        let r = Row {
+            core: "campaign",
+            imp,
+            tasks: n,
+            depth: 0,
+            wall_s: wall,
+            tasks_per_s: n as f64 / wall,
+            peak_resident: m.peak_in_flight as usize,
+            des_events: m.des_events,
+        };
+        r.print();
+        rows.push(r);
+        summary.push((key, Value::num(inflation)));
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -601,7 +666,15 @@ fn main() {
     }
 
     // Headline derived numbers.
-    let mut summary: Vec<(&str, Value)> = Vec::new();
+    let mut summary: Vec<(&'static str, Value)> = Vec::new();
+
+    // Flaky-cluster mode: the bursty campaign under the seeded fault
+    // plan, one row per core, inflation vs each core's clean run.
+    if campaign_tasks > 0 {
+        println!("-- flaky-cluster campaign (all four cores, seeded \
+                  fault plan) --");
+        campaign_flaky_rows(campaign_tasks, &mut rows, &mut summary);
+    }
     for core in ["slurm", "hq"] {
         if let (Some(naive), Some(indexed)) = (
             find_row(&rows, core, "naive", 100_000),

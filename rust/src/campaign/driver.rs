@@ -34,8 +34,8 @@
 use crate::cluster::{ClusterSpec, OverheadModel};
 use crate::hqlite::{AutoAllocConfig, HqCore};
 use crate::metrics::Experiment;
-use crate::sched::{kernel, EdfCore, EdfSched, HqSched, MetaStack,
-                   SlurmSched, WorkStealCore, WorkStealSched};
+use crate::sched::{kernel, EdfCore, EdfSched, FaultPlan, FaultSpec, HqSched,
+                   MetaStack, SlurmSched, WorkStealCore, WorkStealSched};
 use crate::workload::{scenario, App};
 
 use super::metrics::CampaignMetrics;
@@ -61,6 +61,9 @@ pub struct CampaignConfig {
     pub hq_backlog: u32,
     /// HQ autoalloc: upper bound on simultaneously existing workers.
     pub hq_workers: u32,
+    /// Optional fault-injection plan (worker crashes, transient task
+    /// failures, stragglers).  `None` = the paper's perfect cluster.
+    pub faults: Option<FaultSpec>,
 }
 
 impl CampaignConfig {
@@ -75,7 +78,13 @@ impl CampaignConfig {
             registration_jobs: 5,
             hq_backlog: queue_depth as u32,
             hq_workers: queue_depth as u32,
+            faults: None,
         }
+    }
+
+    /// Compiled fault plan for this campaign (None = clean cluster).
+    fn fault_plan(&self) -> Option<FaultPlan> {
+        self.faults.clone().map(FaultPlan::new)
     }
 
     /// The automatic-allocation settings this campaign implies for an
@@ -120,7 +129,8 @@ pub fn run_slurm(
     mode: SlurmMode,
 ) -> CampaignResult {
     let mut core = SlurmSched::new(cfg, mode);
-    kernel::run(&mut core, sub)
+    let plan = cfg.fault_plan();
+    kernel::run_with_faults(&mut core, sub, plan.as_ref())
 }
 
 /// Run a campaign against the UM-Bridge + HQ stack (tasks dispatched by
@@ -129,7 +139,8 @@ pub fn run_slurm(
 pub fn run_hq(cfg: &CampaignConfig, sub: &mut dyn Submitter) -> CampaignResult {
     let mut core: HqSched =
         MetaStack::new(cfg, HqCore::new(cfg.autoalloc()), "HQ");
-    kernel::run(&mut core, sub)
+    let plan = cfg.fault_plan();
+    kernel::run_with_faults(&mut core, sub, plan.as_ref())
 }
 
 /// Run a campaign against the UM-Bridge + work-stealing stack (same
@@ -141,7 +152,8 @@ pub fn run_worksteal(
 ) -> CampaignResult {
     let mut core: WorkStealSched =
         MetaStack::new(cfg, WorkStealCore::new(cfg.autoalloc()), "worksteal");
-    kernel::run(&mut core, sub)
+    let plan = cfg.fault_plan();
+    kernel::run_with_faults(&mut core, sub, plan.as_ref())
 }
 
 /// Run a campaign against the UM-Bridge + deadline-EDF stack (same
@@ -152,7 +164,8 @@ pub fn run_edf(cfg: &CampaignConfig, sub: &mut dyn Submitter)
                -> CampaignResult {
     let mut core: EdfSched =
         MetaStack::new(cfg, EdfCore::new(cfg.autoalloc()), "edf");
-    kernel::run(&mut core, sub)
+    let plan = cfg.fault_plan();
+    kernel::run_with_faults(&mut core, sub, plan.as_ref())
 }
 
 #[cfg(test)]

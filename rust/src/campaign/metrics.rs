@@ -177,6 +177,13 @@ pub struct CampaignMetrics {
     pub fairness_jain: f64,
     /// DES events the run processed (cost proxy for the sim plane).
     pub des_events: u64,
+    /// Retry attempts the fault plane scheduled (0 without a plan).
+    pub retries: u64,
+    /// Tasks quarantined after exhausting their retry budget; their
+    /// truncated records stay in the experiment, never silently dropped.
+    pub quarantined: u64,
+    /// Workers the fault plane crashed mid-campaign.
+    pub worker_crashes: u64,
 }
 
 impl CampaignMetrics {
@@ -260,6 +267,9 @@ impl CampaignMetrics {
             ),
             ("fairness_jain", Value::num(self.fairness_jain)),
             ("des_events", Value::num(self.des_events as f64)),
+            ("retries", Value::num(self.retries as f64)),
+            ("quarantined", Value::num(self.quarantined as f64)),
+            ("worker_crashes", Value::num(self.worker_crashes as f64)),
         ])
     }
 }

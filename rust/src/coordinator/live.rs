@@ -41,6 +41,25 @@ pub fn start_live(
     persistent_servers: bool,
     scheduler: LivePolicy,
 ) -> Result<LiveStack> {
+    start_live_tuned(eng, models, backend_kind, servers, time_scale,
+                     persistent_servers, scheduler, |_| {})
+}
+
+/// [`start_live`] with a last-chance hook over the balancer config.
+/// The CLI uses it to wire the robustness knobs (retry budget,
+/// probe-eviction threshold, circuit-breaker floor) without widening
+/// the common signature for every caller.
+#[allow(clippy::too_many_arguments)]
+pub fn start_live_tuned(
+    eng: Arc<Engine>,
+    models: &[&str],
+    backend_kind: &str,
+    servers: usize,
+    time_scale: f64,
+    persistent_servers: bool,
+    scheduler: LivePolicy,
+    tune: impl FnOnce(&mut BalancerConfig),
+) -> Result<LiveStack> {
     if models.is_empty() {
         bail!("start_live needs at least one model");
     }
@@ -60,13 +79,14 @@ pub fn start_live(
             .unwrap_or(1))
         .next_u64()
     ));
-    let cfg = BalancerConfig {
+    let mut cfg = BalancerConfig {
         models: models.iter().map(|m| m.to_string()).collect(),
         max_servers: servers,
         persistent_servers,
         scheduler,
         ..Default::default()
     };
+    tune(&mut cfg);
 
     // Per-model job shapes from the paper's Table III.
     let scen_of = |m: &str| {

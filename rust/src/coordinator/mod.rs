@@ -65,13 +65,13 @@ use crate::hqlite::TaskId;
 use crate::httpd::{Handler, HttpClient, Request, Response, Server};
 use crate::json::{self, Value};
 use crate::metrics::Histogram;
-use crate::sched::realtime::RtDriver;
+use crate::sched::realtime::{Recovery, RetryPolicy, RtDriver};
 use crate::sched::LivePolicy;
 use crate::umbridge::{HttpModel, ModelContract};
 
 pub use backend::{Backend, HqBackend, LocalBackend, ModelFactory,
                   SlurmBackend};
-pub use live::{start_live, LiveStack};
+pub use live::{start_live, start_live_tuned, LiveStack};
 pub use registry::{Registry, ServerLease, ServerState};
 
 /// Balancer configuration.
@@ -108,6 +108,20 @@ pub struct BalancerConfig {
     /// (`fcfs` | `worksteal` | `edf`; default `fcfs` — the balancer's
     /// classic per-model FCFS discipline).
     pub scheduler: LivePolicy,
+    /// Retry budget + backoff for evaluations whose forward dies with
+    /// its server.  The default (2 attempts) retries once on a
+    /// replacement server before the error surfaces to the client.
+    pub retry: RetryPolicy,
+    /// Consecutive health-probe failures before a registered server is
+    /// evicted.  A single failed probe (GC pause, dropped packet) must
+    /// not flap a healthy server out of the fleet.
+    pub probe_eviction_k: u32,
+    /// Circuit breaker: when a model's registered-server count falls
+    /// below this fraction of the highest count it has reached,
+    /// /Evaluate sheds load with 503 + Retry-After instead of queueing
+    /// work the collapsed fleet cannot drain.  `0.0` disables the
+    /// breaker (the default).
+    pub breaker_floor: f64,
 }
 
 impl Default for BalancerConfig {
@@ -122,6 +136,9 @@ impl Default for BalancerConfig {
             request_timeout: Duration::from_secs(600),
             warm_start: true,
             scheduler: LivePolicy::Fcfs,
+            retry: RetryPolicy::default(),
+            probe_eviction_k: 3,
+            breaker_floor: 0.0,
         }
     }
 }
@@ -133,8 +150,23 @@ pub struct ModelStats {
     pub rejected: AtomicU64,
     pub cancelled: AtomicU64,
     pub timed_out: AtomicU64,
+    /// Forwards that failed with their lease and were re-dispatched on
+    /// a replacement server.
+    pub retries: AtomicU64,
+    /// Workers withdrawn by a failure (probe eviction or a forward
+    /// dying with its server) — planned per-job retirement not counted.
+    pub worker_lost: AtomicU64,
+    /// Evaluations that exhausted their retry budget.
+    pub quarantined: AtomicU64,
+    /// Servers evicted by K consecutive failed health probes.
+    pub probe_evictions: AtomicU64,
+    /// Highest registered-server count this model has reached (the
+    /// circuit breaker's 100% mark).
+    pub peak_servers: AtomicU64,
     pub queue_wait: Histogram,
     pub forward: Histogram,
+    /// Backoff delays applied before retries.
+    pub retry_backoff: Histogram,
 }
 
 impl ModelStats {
@@ -145,8 +177,14 @@ impl ModelStats {
             rejected: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
             timed_out: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            worker_lost: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            probe_evictions: AtomicU64::new(0),
+            peak_servers: AtomicU64::new(0),
             queue_wait: Histogram::new(),
             forward: Histogram::new(),
+            retry_backoff: Histogram::new(),
         }
     }
 }
@@ -203,9 +241,9 @@ struct RtModel {
 }
 
 impl RtModel {
-    fn new(policy: LivePolicy) -> RtModel {
+    fn new(policy: LivePolicy, retry: RetryPolicy) -> RtModel {
         RtModel {
-            driver: RtDriver::for_policy(policy),
+            driver: RtDriver::for_policy(policy).with_retry(retry),
             items: HashMap::new(),
             wid_of: HashMap::new(),
             ep_of: HashMap::new(),
@@ -229,11 +267,16 @@ impl RtModel {
     }
 
     /// A server retired or died: withdraw its worker (the core requeues
-    /// and re-places anything bound to it).  Idempotent.
-    fn server_lost(&mut self, endpoint: &str) {
+    /// and re-places anything bound to it).  Idempotent; reports
+    /// whether a worker was actually withdrawn so failure paths can
+    /// count losses without double-counting.
+    fn server_lost(&mut self, endpoint: &str) -> bool {
         if let Some(wid) = self.wid_of.remove(endpoint) {
             self.ep_of.remove(&wid);
             self.driver.worker_lost(wid);
+            true
+        } else {
+            false
         }
     }
 }
@@ -304,8 +347,14 @@ impl Shared {
                     ("rejected", load(&st.rejected)),
                     ("cancelled", load(&st.cancelled)),
                     ("timed_out", load(&st.timed_out)),
+                    ("retries", load(&st.retries)),
+                    ("worker_lost", load(&st.worker_lost)),
+                    ("quarantined", load(&st.quarantined)),
+                    ("probe_evictions", load(&st.probe_evictions)),
+                    ("peak_servers", load(&st.peak_servers)),
                     ("queue_wait", st.queue_wait.json()),
                     ("forward", st.forward.json()),
+                    ("retry_backoff", st.retry_backoff.json()),
                 ])
             })
             .collect();
@@ -352,7 +401,7 @@ impl LoadBalancer {
             models: cfg
                 .models
                 .iter()
-                .map(|m| (m.clone(), RtModel::new(cfg.scheduler)))
+                .map(|m| (m.clone(), RtModel::new(cfg.scheduler, cfg.retry)))
                 .collect(),
         };
         let shared = Arc::new(Shared {
@@ -623,6 +672,29 @@ fn evaluate_handler(req: &Request, shared: &Arc<Shared>) -> Response {
         Err(resp) => return resp,
     };
 
+    // Circuit breaker: if the model's fleet has collapsed below the
+    // configured fraction of its peak, shed immediately — queueing onto
+    // a fleet that cannot drain only converts the 503 into a slower
+    // 504.  Admission resumes as replacement servers register.
+    if shared.cfg.breaker_floor > 0.0 {
+        if let Some(st) = shared.stats.model(&name) {
+            let peak = st.peak_servers.load(Ordering::Relaxed);
+            let healthy = shared.registry.count_for(&name) as f64;
+            if peak > 0
+                && healthy < shared.cfg.breaker_floor * peak as f64
+            {
+                st.rejected.fetch_add(1, Ordering::Relaxed);
+                return Response::unavailable(
+                    &format!(
+                        "model '{name}' degraded ({healthy} of peak \
+                         {peak} servers healthy)"
+                    ),
+                    shared.retry_after_secs(&name),
+                );
+            }
+        }
+    }
+
     let item = Arc::new(Queued {
         model: name.clone(),
         body,
@@ -714,6 +786,10 @@ fn watcher_loop(
     // assumed: in-flight spawn count dropped without a registration.
     // Healthy scale-up (even bursty) is never delayed.
     let mut governor: HashMap<String, GovState> = HashMap::new();
+    // Consecutive failed health probes per endpoint: eviction needs
+    // `probe_eviction_k` failures in a row, so one dropped probe (GC
+    // pause, transient connect error) never flaps a healthy server.
+    let mut probe_fails: HashMap<String, u32> = HashMap::new();
     while !shared.stop.load(Ordering::SeqCst) {
         for endpoint in backend.poll_new_servers() {
             // The paper's preliminary jobs: verify readiness and learn
@@ -728,6 +804,14 @@ fn watcher_loop(
                         if let Some(rt) = d.models.get_mut(&model) {
                             rt.server_up(&endpoint);
                         }
+                    }
+                    // The breaker's 100% mark: the largest fleet this
+                    // model has ever had.
+                    if let Some(st) = shared.stats.model(&model) {
+                        st.peak_servers.fetch_max(
+                            shared.registry.count_for(&model) as u64,
+                            Ordering::Relaxed,
+                        );
                     }
                     shared.cv.notify_all();
                     crate::log_info!("balancer",
@@ -830,24 +914,53 @@ fn watcher_loop(
         // pass, EXPERIMENTS.md section Perf).
         if last_health.elapsed() >= Duration::from_millis(500) {
             last_health = Instant::now();
-            for ep in shared.registry.endpoints() {
-                if shared.registry.state(&ep) == Some(ServerState::Idle)
-                    && !health_check(&ep)
+            let eps = shared.registry.endpoints();
+            // Drop counters for endpoints that already left the fleet
+            // (lease retirement, prior eviction).
+            probe_fails.retain(|ep, _| eps.iter().any(|e| e == ep));
+            let k = shared.cfg.probe_eviction_k.max(1);
+            for ep in eps {
+                if shared.registry.state(&ep) != Some(ServerState::Idle) {
+                    // A busy server is exercised by its own forward; a
+                    // probe would only race the evaluation.
+                    continue;
+                }
+                if health_check(&ep) {
+                    probe_fails.remove(&ep);
+                    continue;
+                }
+                let fails = probe_fails.entry(ep.clone()).or_insert(0);
+                *fails += 1;
+                if *fails < k {
+                    crate::log_warn!(
+                        "balancer",
+                        "server {ep} failed health probe ({fails}/{k})");
+                    continue;
+                }
+                let f = *fails;
+                probe_fails.remove(&ep);
+                crate::log_warn!(
+                    "balancer",
+                    "server {ep} unhealthy ({f} consecutive probes), \
+                     dropping");
+                shared.registry.remove(&ep);
+                shared.conn_pool.lock().unwrap().remove(&ep);
+                // Withdraw the worker from whichever model owned it
+                // (the core re-places anything bound to it).
                 {
-                    crate::log_warn!("balancer",
-                                     "server {ep} unhealthy, dropping");
-                    shared.registry.remove(&ep);
-                    shared.conn_pool.lock().unwrap().remove(&ep);
-                    // Withdraw the worker from whichever model owned it
-                    // (the core re-places anything bound to it).
-                    {
-                        let mut d = shared.dispatch.lock().unwrap();
-                        for rt in d.models.values_mut() {
-                            rt.server_lost(&ep);
+                    let mut d = shared.dispatch.lock().unwrap();
+                    for (m, rt) in d.models.iter_mut() {
+                        if rt.server_lost(&ep) {
+                            if let Some(st) = shared.stats.model(m) {
+                                st.probe_evictions
+                                    .fetch_add(1, Ordering::Relaxed);
+                                st.worker_lost
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
                         }
                     }
-                    backend.server_lost(&ep);
                 }
+                backend.server_lost(&ep);
             }
         }
         std::thread::sleep(shared.cfg.poll_interval);
@@ -1043,17 +1156,14 @@ fn forwarder_loop(shared: Arc<Shared>, backend: Arc<dyn Backend>) {
         let t0 = Instant::now();
         let result = forward(&shared.conn_pool, lease.endpoint(), &item.body);
         let ok = result.is_ok();
+        // A dead transport means the server likely died with the
+        // evaluation — worth retrying on a replacement.  An HTTP error
+        // *answer* came from a live server and is deterministic;
+        // retrying the same body cannot help.
+        let transport_fail = matches!(&result, Err(e) if e.transport);
         if let Some(st) = st {
             st.forward.record(t0.elapsed());
-            if ok {
-                st.served.fetch_add(1, Ordering::Relaxed);
-            } else {
-                st.errors.fetch_add(1, Ordering::Relaxed);
-            }
         }
-        shared.requests_served.fetch_add(1, Ordering::Relaxed);
-        *item.done.lock().unwrap() = Some(result);
-        item.cv.notify_all();
         // Per-job servers retire after one evaluation (the paper's
         // measured configuration); failed forwards retire either way.
         let retire = !shared.cfg.persistent_servers || !ok;
@@ -1062,7 +1172,62 @@ fn forwarder_loop(shared: Arc<Shared>, backend: Arc<dyn Backend>) {
         }
         let endpoint = lease.endpoint().to_string();
         drop(lease); // release or retire; wakes the pool via the waker
-        {
+        if transport_fail {
+            // The forward died with its server: withdraw the worker,
+            // then charge one attempt against the retry budget.  Within
+            // budget the core requeues the task behind its backoff and
+            // re-places it — on a replacement server once one is leased
+            // — while the client keeps waiting on its condvar; past
+            // budget the error surfaces.
+            let verdict = {
+                let mut d = shared.dispatch.lock().unwrap();
+                d.models.get_mut(&item.model).map(|rt| {
+                    if rt.server_lost(&endpoint) {
+                        if let Some(st) = st {
+                            st.worker_lost.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    let verdict = rt.driver.work_failed(id);
+                    if matches!(verdict, Recovery::Retrying { .. }) {
+                        // Back into the queue under the same task id:
+                        // the retry's Start finds the waiting client.
+                        rt.items.insert(id, item.clone());
+                    }
+                    verdict
+                })
+            };
+            if let Some(Recovery::Retrying { backoff, .. }) = verdict {
+                if let Some(st) = st {
+                    st.retries.fetch_add(1, Ordering::Relaxed);
+                    st.retry_backoff.record(Duration::from_micros(backoff));
+                }
+            } else {
+                // Quarantined (or the model vanished): surface the error.
+                if let Some(st) = st {
+                    st.errors.fetch_add(1, Ordering::Relaxed);
+                    if matches!(verdict,
+                                Some(Recovery::Quarantined { .. })) {
+                        st.quarantined.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                shared.requests_served.fetch_add(1, Ordering::Relaxed);
+                *item.done.lock().unwrap() =
+                    Some(result.map_err(|e| e.msg));
+                item.cv.notify_all();
+            }
+        } else {
+            // A completed attempt: success, or a definitive error
+            // answer from a live server.
+            if let Some(st) = st {
+                if ok {
+                    st.served.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    st.errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            shared.requests_served.fetch_add(1, Ordering::Relaxed);
+            *item.done.lock().unwrap() = Some(result.map_err(|e| e.msg));
+            item.cv.notify_all();
             // Feed the completion back through the seam: WorkDone frees
             // the synthetic worker (and may surface the next Start); a
             // retiring server is a capacity loss.
@@ -1079,32 +1244,44 @@ fn forwarder_loop(shared: Arc<Shared>, backend: Arc<dyn Backend>) {
     }
 }
 
+/// A failed forward.  `transport: true` means the connection itself
+/// died (connect/read/write failure — the server is likely gone, a
+/// retry on a replacement can succeed); `false` means a live server
+/// answered with an HTTP error (deterministic; not retried).
+struct ForwardError {
+    transport: bool,
+    msg: String,
+}
+
 fn forward(
     pool: &Mutex<HashMap<String, Vec<HttpClient>>>,
     endpoint: &str,
     body: &str,
-) -> Result<String, String> {
-    let mut do_it = || -> Result<String> {
-        let mut c = pool
-            .lock()
-            .unwrap()
-            .get_mut(endpoint)
-            .and_then(|v| v.pop())
-            .map(Ok)
-            .unwrap_or_else(|| HttpClient::connect(endpoint))?;
-        let resp = c.request(&Request::post("/Evaluate", body))?;
-        if resp.status != 200 {
-            return Err(anyhow!("{}: {}", resp.status,
-                               resp.body_str().unwrap_or("")));
-        }
-        let out = resp.body_str()?.to_string();
-        // Return the connection to the pool for reuse.
-        pool.lock()
-            .unwrap()
-            .entry(endpoint.to_string())
-            .or_default()
-            .push(c);
-        Ok(out)
+) -> Result<String, ForwardError> {
+    let died = |e: anyhow::Error| ForwardError {
+        transport: true,
+        msg: format!("{e:#}"),
     };
-    do_it().map_err(|e| format!("{e:#}"))
+    let mut c = match pool.lock().unwrap().get_mut(endpoint)
+        .and_then(|v| v.pop())
+    {
+        Some(c) => c,
+        None => HttpClient::connect(endpoint).map_err(died)?,
+    };
+    let resp = c.request(&Request::post("/Evaluate", body)).map_err(died)?;
+    if resp.status != 200 {
+        return Err(ForwardError {
+            transport: false,
+            msg: format!("{}: {}", resp.status,
+                         resp.body_str().unwrap_or("")),
+        });
+    }
+    let out = resp.body_str().map_err(died)?.to_string();
+    // Return the connection to the pool for reuse.
+    pool.lock()
+        .unwrap()
+        .entry(endpoint.to_string())
+        .or_default()
+        .push(c);
+    Ok(out)
 }

@@ -63,6 +63,7 @@ impl Config {
             registration_jobs: self.registration_jobs,
             hq_backlog: self.queue_depth as u32,
             hq_workers: self.queue_depth as u32,
+            faults: None,
         }
     }
 

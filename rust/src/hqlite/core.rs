@@ -70,6 +70,9 @@ enum TaskState {
     Pending,
     Dispatched,
     Running,
+    /// Failed transiently; off every worker, waiting out its retry
+    /// backoff (re-enters the queue when the `Retry` timer fires).
+    Cooling,
 }
 
 #[derive(Clone, Debug)]
@@ -103,6 +106,10 @@ pub enum HqAction {
     KillTask { task: TaskId },
     /// Terminal per-task record.
     TaskCompleted { task: TaskId, record: JobRecord },
+    /// The task left its worker without finishing (transient failure or
+    /// worker loss) and will run again later — the driver must
+    /// invalidate any completion it scheduled for the aborted attempt.
+    Requeued { task: TaskId },
     /// Re-invoke `on_timer` at this time.
     Timer(Micros, HqTimer),
 }
@@ -113,6 +120,8 @@ pub enum HqTimer {
     Dispatched(TaskId),
     /// Task time-limit enforcement.
     Limit(TaskId),
+    /// Retry backoff elapsed: a Cooling task re-enters the queue.
+    Retry(TaskId),
 }
 
 /// The HyperQueue-style task-scheduler event surface: the pluggable seam
@@ -158,6 +167,35 @@ pub trait TaskCore {
 
     /// Task completion, appending actions into a reusable buffer.
     fn on_task_done_into(&mut self, t: Micros, id: TaskId, out: &mut Vec<HqAction>);
+
+    /// The task's attempt failed mid-run.  `retry_in: Some(backoff)`
+    /// means the budget allows another attempt: free the worker, park
+    /// the task (Cooling), arm a `Retry` timer and emit
+    /// [`HqAction::Requeued`].  `None` means quarantine: kill the task
+    /// and emit a truncated [`HqAction::TaskCompleted`] so the poison
+    /// task is reported, never dropped.  Default: treat the failure as
+    /// a (poisoned) completion so no task is lost by cores predating
+    /// retry semantics.
+    fn on_task_failed_into(
+        &mut self,
+        t: Micros,
+        id: TaskId,
+        _retry_in: Option<Micros>,
+        out: &mut Vec<HqAction>,
+    ) {
+        self.on_task_done_into(t, id, out);
+    }
+
+    /// Is the task still resident (not yet completed)?  Drivers use
+    /// this to drop dead dispatch/limit/retry timers at pop instead of
+    /// replaying them into the core.  Default: conservatively live.
+    fn task_live(&self, _id: TaskId) -> bool {
+        true
+    }
+
+    /// Append the ids of live workers (crash-victim candidates for the
+    /// fault plane).  Default: none (core is crash-immune).
+    fn live_worker_ids_into(&self, _out: &mut Vec<u64>) {}
 
     /// Timer dispatch, appending actions into a reusable buffer.
     fn on_timer_into(&mut self, t: Micros, timer: HqTimer, out: &mut Vec<HqAction>);
@@ -397,6 +435,7 @@ impl TaskCore for HqCore {
                     ) {
                         task.state = TaskState::Pending;
                         self.queue.push_back(id);
+                        out.push(HqAction::Requeued { task: id });
                     }
                 }
             }
@@ -407,6 +446,51 @@ impl TaskCore for HqCore {
 
     fn on_task_done_into(&mut self, t: Micros, id: TaskId, out: &mut Vec<HqAction>) {
         self.complete(t, id, false, out)
+    }
+
+    fn on_task_failed_into(
+        &mut self,
+        t: Micros,
+        id: TaskId,
+        retry_in: Option<Micros>,
+        out: &mut Vec<HqAction>,
+    ) {
+        let Some(task) = self.tasks.get_mut(&id) else { return };
+        if !matches!(task.state, TaskState::Dispatched | TaskState::Running) {
+            return;
+        }
+        match retry_in {
+            // Quarantine: kill and report a truncated record (complete
+            // frees the worker's cores).
+            None => {
+                out.push(HqAction::KillTask { task: id });
+                self.complete(t, id, true, out);
+            }
+            // Transient: free the worker now, cool the task until the
+            // backoff elapses.
+            Some(backoff) => {
+                let wid = task.worker;
+                let cores = task.spec.cores;
+                task.state = TaskState::Cooling;
+                if let Some(w) = self.workers.get_mut(&wid) {
+                    if w.running.remove(&id) && cores > 0 {
+                        w.cores_free += cores;
+                        self.avail.insert(wid);
+                    }
+                }
+                out.push(HqAction::Requeued { task: id });
+                out.push(HqAction::Timer(t + backoff, HqTimer::Retry(id)));
+                self.dispatch_into(t, out);
+            }
+        }
+    }
+
+    fn task_live(&self, id: TaskId) -> bool {
+        self.tasks.contains_key(&id)
+    }
+
+    fn live_worker_ids_into(&self, out: &mut Vec<u64>) {
+        out.extend(self.workers.keys().copied());
     }
 
     fn on_timer_into(&mut self, t: Micros, timer: HqTimer, out: &mut Vec<HqAction>) {
@@ -432,6 +516,16 @@ impl TaskCore for HqCore {
                     out.push(HqAction::KillTask { task: id });
                     self.complete(t, id, true, out);
                 }
+            }
+            HqTimer::Retry(id) => {
+                let Some(task) = self.tasks.get_mut(&id) else { return };
+                if task.state != TaskState::Cooling {
+                    return;
+                }
+                task.state = TaskState::Pending;
+                self.queue.push_back(id);
+                self.autoalloc_into(out);
+                self.dispatch_into(t, out);
             }
         }
     }
@@ -690,6 +784,7 @@ mod tests {
                         records.push(record)
                     }
                     HqAction::KillTask { .. } => {}
+                    HqAction::Requeued { .. } => {}
                 }
             }
         }

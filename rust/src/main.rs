@@ -22,8 +22,8 @@ use uqsched::campaign::{
     PoissonBurst, SlurmMode, Submitter, UserMix, UserStream,
 };
 use uqsched::cli::Args;
-use uqsched::clock::SEC;
-use uqsched::coordinator::start_live;
+use uqsched::clock::{MS, SEC};
+use uqsched::coordinator::start_live_tuned;
 use uqsched::experiments::{run_naive_slurm, run_umbridge_hq, Config};
 use uqsched::json::Value;
 use uqsched::metrics::BoxStats;
@@ -52,7 +52,9 @@ fn main() -> Result<()> {
                  client     --url http://h:p --model NAME --params 1,2,...\n\
                  balancer   --models NAME[,NAME...] --backend slurm|hq\n\
                             [--scheduler fcfs|worksteal|edf] [--servers N]\n\
-                            [--per-job-servers]\n\
+                            [--per-job-servers] [--retry-attempts 2]\n\
+                            [--retry-backoff 50ms] [--probe-eviction-k 3]\n\
+                            [--breaker-floor 0.0]\n\
                  selftest   [--artifacts DIR]  (artifact check + live-plane\n\
                             smoke; artifacts optional)\n\
                  experiment --app gs2|GP|eigen-100|eigen-5000 [--queue 2]\n\
@@ -62,7 +64,9 @@ fn main() -> Result<()> {
                             [--app gs2] [--tasks 100] [--depth 2] [--seed 1]\n\
                             [--interarrival 2s] [--burst-min 1] [--burst-max 8]\n\
                             [--users gp:50:2,eigen-100:50:2] [--sigmas 0,0.8]\n\
-                            [--tol 0.02] [--workers N] [--out FILE.json]"
+                            [--tol 0.02] [--workers N] [--out FILE.json]\n\
+                            [--faults crash=300s,fail=0.02,attempts=3,\n\
+                             backoff=1s:60s,slow=0.05x8,seed=1]"
             );
             Ok(())
         }
@@ -125,9 +129,23 @@ fn balancer(args: &Args) -> Result<()> {
         anyhow!("unknown live scheduler '{sched_name}' \
                  (want fcfs|worksteal|edf)")
     })?;
+    // Robustness knobs (see ARCHITECTURE.md, failure model): per-task
+    // retry budget, probe-eviction threshold and circuit-breaker floor.
+    let retry_attempts = args.u64_or("retry-attempts", 2)? as u32;
+    let retry_backoff = args.micros_or("retry-backoff", 50 * MS)?;
+    let probe_k = args.u64_or("probe-eviction-k", 3)? as u32;
+    let breaker_floor = args.f64_or("breaker-floor", 0.0)?;
     let eng = engine(args)?;
-    let stack = start_live(eng, &model_names, &backend_kind, servers,
-                           scale, !args.flag("per-job-servers"), scheduler)?;
+    let stack = start_live_tuned(
+        eng, &model_names, &backend_kind, servers, scale,
+        !args.flag("per-job-servers"), scheduler,
+        |cfg| {
+            cfg.retry.max_attempts = retry_attempts;
+            cfg.retry.backoff_base = retry_backoff;
+            cfg.probe_eviction_k = probe_k;
+            cfg.breaker_floor = breaker_floor;
+        },
+    )?;
     log_info!("balancer",
               "front door at {} serving {:?} via {} (stats at {}/Stats)",
               stack.balancer.url(), model_names, scheduler.label(),
@@ -263,6 +281,12 @@ fn campaign_cmd(args: &Args) -> Result<()> {
         cfg.hq_backlog = w;
         cfg.hq_workers = w;
     }
+    if let Some(spec) = args.opt("faults") {
+        let fs = uqsched::sched::FaultSpec::parse(spec)
+            .map_err(|e| anyhow!("--faults: {e}"))?;
+        println!("fault plan: {}", fs.describe());
+        cfg.faults = Some(fs);
+    }
 
     let mut sub: Box<dyn Submitter> = match policy.as_str() {
         "fixed" => Box::new(FixedDepth::new(app, tasks, depth, seed)),
@@ -337,6 +361,12 @@ fn campaign_cmd(args: &Args) -> Result<()> {
         m.fairness_jain,
         m.des_events
     );
+    if m.retries + m.quarantined + m.worker_crashes > 0 {
+        println!(
+            "  faults: {} retries | {} quarantined | {} worker crashes",
+            m.retries, m.quarantined, m.worker_crashes
+        );
+    }
     for (n, t) in &m.time_to {
         println!("  time to {n:>7} results: {:>12.1} s", *t as f64 / SEC as f64);
     }

@@ -48,6 +48,10 @@ enum TaskState {
     Pending,
     Dispatched,
     Running,
+    /// Failed transiently; off every worker, waiting out its retry
+    /// backoff.  Re-enters the ready heap — with its *original*
+    /// deadline — when the `Retry` timer fires.
+    Cooling,
 }
 
 #[derive(Clone, Debug)]
@@ -298,6 +302,7 @@ impl TaskCore for EdfCore {
                         self.pending += 1;
                         let key = Self::key_of(task, id);
                         self.ready.push(Reverse(key));
+                        out.push(HqAction::Requeued { task: id });
                     }
                 }
             }
@@ -308,6 +313,49 @@ impl TaskCore for EdfCore {
     fn on_task_done_into(&mut self, t: Micros, id: TaskId,
                          out: &mut Vec<HqAction>) {
         self.complete(t, id, false, out)
+    }
+
+    fn on_task_failed_into(
+        &mut self,
+        t: Micros,
+        id: TaskId,
+        retry_in: Option<Micros>,
+        out: &mut Vec<HqAction>,
+    ) {
+        let Some(task) = self.tasks.get_mut(&id) else { return };
+        if !matches!(task.state, TaskState::Dispatched | TaskState::Running) {
+            return;
+        }
+        match retry_in {
+            None => {
+                out.push(HqAction::KillTask { task: id });
+                self.complete(t, id, true, out);
+            }
+            Some(backoff) => {
+                let wid = task.worker;
+                let cores = task.spec.cores;
+                task.state = TaskState::Cooling;
+                if let Some(w) = self.workers.get_mut(&wid) {
+                    if w.running.remove(&id) {
+                        w.cores_free += cores;
+                    }
+                }
+                out.push(HqAction::Requeued { task: id });
+                out.push(HqAction::Timer(
+                    t.saturating_add(backoff),
+                    HqTimer::Retry(id),
+                ));
+                self.pump(t, out);
+            }
+        }
+    }
+
+    fn task_live(&self, id: TaskId) -> bool {
+        self.tasks.contains_key(&id)
+    }
+
+    fn live_worker_ids_into(&self, out: &mut Vec<u64>) {
+        out.extend(self.workers.keys().copied());
     }
 
     fn on_timer_into(&mut self, t: Micros, timer: HqTimer,
@@ -343,6 +391,18 @@ impl TaskCore for EdfCore {
                     out.push(HqAction::KillTask { task: id });
                     self.complete(t, id, true, out);
                 }
+            }
+            HqTimer::Retry(id) => {
+                let Some(task) = self.tasks.get_mut(&id) else { return };
+                if task.state != TaskState::Cooling {
+                    return;
+                }
+                task.state = TaskState::Pending;
+                self.pending += 1;
+                // Original deadline: retries never relax EDF order.
+                let key = Self::key_of(task, id);
+                self.ready.push(Reverse(key));
+                self.pump(t, out);
             }
         }
     }

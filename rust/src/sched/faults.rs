@@ -1,0 +1,443 @@
+//! Deterministic fault-injection plans for both scheduler planes.
+//!
+//! A [`FaultPlan`] is a *pure function of its seed*: every decision —
+//! whether attempt `k` of task `tag` fails, where in the run it fails,
+//! how much a slow task is inflated, when the next worker crashes and
+//! which ordinal dies — is a keyed hash draw, never a shared sequential
+//! RNG stream.  That is the property the scheduler ablations need: the
+//! four cores consume events in different orders, but because no draw
+//! depends on consumption order, the same `(seed, tag)` produces the
+//! same per-task failure count, the same quarantine set and the same
+//! crash schedule under every core.  "Same plan, same seed, same
+//! failure trace" is structural, not coincidental.
+//!
+//! The plan is deliberately split from its *mechanics*: `faults.rs`
+//! only answers questions ("does attempt 2 of tag 17 fail?"); the
+//! virtual-time kernel ([`kernel::run_with_faults`](super::kernel::run_with_faults))
+//! and the wall-clock driver ([`realtime::RtDriver`](super::realtime::RtDriver))
+//! own injection, retry budgets and epoch-based invalidation.
+
+use crate::clock::{Micros, SEC};
+use crate::util::rng::Rng;
+
+/// Draw streams — namespace the keyed hashes so e.g. the failure draw
+/// for `(tag, attempt)` never collides with the slowdown draw.
+const STREAM_FAIL: u64 = 0x01;
+const STREAM_SLOW: u64 = 0x02;
+const STREAM_POINT: u64 = 0x03;
+const STREAM_CRASH: u64 = 0x04;
+const STREAM_VICTIM: u64 = 0x05;
+
+/// User-facing fault-plan parameters (`--faults` on the CLI).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Seed for every keyed draw (independent of the campaign seed so
+    /// the same workload can be replayed under a different fault trace).
+    pub seed: u64,
+    /// Mean worker-crash interarrival (exponential); 0 disables crashes.
+    pub crash_every: Micros,
+    /// Per-attempt transient-failure probability (before family bias).
+    pub task_fail_p: f64,
+    /// Attempts before a task is quarantined (>= 1).
+    pub max_attempts: u32,
+    /// First retry backoff; doubles per failure.
+    pub backoff_base: Micros,
+    /// Backoff ceiling.
+    pub backoff_cap: Micros,
+    /// Probability an attempt runs slow (straggler injection).
+    pub slow_p: f64,
+    /// Duration multiplier applied to slow attempts.
+    pub slow_factor: f64,
+    /// Per-family failure bias: `task_fail_p` is multiplied by
+    /// `family_bias[tag % len]`.  Empty = uniform.
+    pub family_bias: Vec<f64>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 1,
+            crash_every: 0,
+            task_fail_p: 0.0,
+            max_attempts: 3,
+            backoff_base: SEC,
+            backoff_cap: 60 * SEC,
+            slow_p: 0.0,
+            slow_factor: 1.0,
+            family_bias: Vec::new(),
+        }
+    }
+}
+
+impl FaultSpec {
+    /// The bench/example preset: node loss every ~5 min, 2% transient
+    /// failures with a 2x-biased odd family, 5% stragglers at 8x.
+    pub fn flaky(seed: u64) -> FaultSpec {
+        FaultSpec {
+            seed,
+            crash_every: 300 * SEC,
+            task_fail_p: 0.02,
+            max_attempts: 4,
+            backoff_base: SEC,
+            backoff_cap: 60 * SEC,
+            slow_p: 0.05,
+            slow_factor: 8.0,
+            family_bias: vec![1.0, 2.0],
+        }
+    }
+
+    /// Parse the compact CLI spec, e.g.
+    /// `crash=300s,fail=0.02,attempts=4,backoff=1s:60s,slow=0.05x8,bias=1:2,seed=9`.
+    /// Every key is optional; unknown keys are errors.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec: expected key=value, got `{part}`"))?;
+            match k {
+                "seed" => spec.seed = parse_u64(v)?,
+                "crash" => spec.crash_every = parse_dur(v)?,
+                "fail" => spec.task_fail_p = parse_f64(v)?,
+                "attempts" => {
+                    spec.max_attempts = parse_u64(v)?.max(1) as u32;
+                }
+                "backoff" => {
+                    let (base, cap) = v
+                        .split_once(':')
+                        .ok_or_else(|| format!("fault spec: backoff wants base:cap, got `{v}`"))?;
+                    spec.backoff_base = parse_dur(base)?;
+                    spec.backoff_cap = parse_dur(cap)?;
+                }
+                "slow" => {
+                    let (p, f) = v
+                        .split_once('x')
+                        .ok_or_else(|| format!("fault spec: slow wants p x factor, got `{v}`"))?;
+                    spec.slow_p = parse_f64(p)?;
+                    spec.slow_factor = parse_f64(f)?;
+                }
+                "bias" => {
+                    spec.family_bias = v
+                        .split(':')
+                        .map(parse_f64)
+                        .collect::<Result<Vec<f64>, String>>()?;
+                }
+                _ => return Err(format!("fault spec: unknown key `{k}`")),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// One-line human label for reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "crash_every={}s fail_p={} attempts={} slow={}x{} seed={}",
+            self.crash_every / SEC,
+            self.task_fail_p,
+            self.max_attempts,
+            self.slow_p,
+            self.slow_factor,
+            self.seed
+        )
+    }
+}
+
+/// A compiled, queryable fault plan.  Cheap to clone; all state is the
+/// spec itself — answers are recomputed keyed draws.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+}
+
+/// FNV-style combine for keyed draws.
+fn key(stream: u64, a: u64, b: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for v in [a, b] {
+        h ^= v;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        h ^= h >> 29;
+    }
+    h
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec) -> FaultPlan {
+        FaultPlan { spec }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    pub fn max_attempts(&self) -> u32 {
+        self.spec.max_attempts.max(1)
+    }
+
+    pub fn injects_crashes(&self) -> bool {
+        self.spec.crash_every > 0
+    }
+
+    /// One keyed uniform in [0, 1).
+    fn draw(&self, stream: u64, a: u64, b: u64) -> f64 {
+        Rng::new(self.spec.seed ^ key(stream, a, b)).uniform()
+    }
+
+    /// Effective per-attempt failure probability for a task family.
+    fn fail_p(&self, tag: u64) -> f64 {
+        let bias = if self.spec.family_bias.is_empty() {
+            1.0
+        } else {
+            self.spec.family_bias[(tag % self.spec.family_bias.len() as u64) as usize]
+        };
+        (self.spec.task_fail_p * bias).clamp(0.0, 1.0)
+    }
+
+    /// Number of leading attempts of `tag` that fail — a pure function
+    /// of `(seed, tag)`, capped at `max_attempts` (== quarantine).  This
+    /// is what makes the failure trace identical across cores: the k-th
+    /// attempt's fate never depends on *when* the core ran it.
+    pub fn fail_count(&self, tag: u64) -> u32 {
+        let p = self.fail_p(tag);
+        if p <= 0.0 {
+            return 0;
+        }
+        let cap = self.max_attempts();
+        let mut n = 0;
+        while n < cap && self.draw(STREAM_FAIL, tag, n as u64) < p {
+            n += 1;
+        }
+        n
+    }
+
+    /// Does the `attempt`-th run (1-based) of `tag` fail transiently?
+    pub fn attempt_fails(&self, tag: u64, attempt: u32) -> bool {
+        attempt <= self.fail_count(tag)
+    }
+
+    /// Will `tag` exhaust its retry budget and be quarantined?
+    pub fn quarantines(&self, tag: u64) -> bool {
+        self.fail_count(tag) >= self.max_attempts()
+    }
+
+    /// Duration multiplier for the `attempt`-th run of `tag`.
+    pub fn slowdown(&self, tag: u64, attempt: u32) -> f64 {
+        if self.spec.slow_p <= 0.0 || self.spec.slow_factor == 1.0 {
+            return 1.0;
+        }
+        if self.draw(STREAM_SLOW, tag, attempt as u64) < self.spec.slow_p {
+            self.spec.slow_factor.max(1.0)
+        } else {
+            1.0
+        }
+    }
+
+    /// Where inside a `dur`-long attempt the failure strikes: in
+    /// `[1, dur]`, so a failed attempt always burns some worker time.
+    pub fn fail_point(&self, tag: u64, attempt: u32, dur: Micros) -> Micros {
+        let frac = self.draw(STREAM_POINT, tag, attempt as u64);
+        ((dur as f64 * frac) as Micros).clamp(1, dur.max(1))
+    }
+
+    /// Capped exponential backoff before retry number `fails + 1`.
+    pub fn backoff(&self, fails: u32) -> Micros {
+        let shift = fails.saturating_sub(1).min(20);
+        self.spec
+            .backoff_base
+            .max(1)
+            .saturating_mul(1u64 << shift)
+            .min(self.spec.backoff_cap.max(1))
+    }
+
+    /// Gap before the `k`-th worker crash (exponential interarrival).
+    pub fn crash_gap(&self, k: u64) -> Micros {
+        let mut r = Rng::new(self.spec.seed ^ key(STREAM_CRASH, k, 0));
+        (r.exponential(self.spec.crash_every as f64) as Micros).max(1)
+    }
+
+    /// Which of `n` (sorted) live workers the `k`-th crash kills.
+    pub fn crash_victim(&self, k: u64, n: usize) -> usize {
+        (Rng::new(self.spec.seed ^ key(STREAM_VICTIM, k, 0)).below(n as u64)) as usize
+    }
+}
+
+fn parse_u64(s: &str) -> Result<u64, String> {
+    s.parse::<u64>()
+        .map_err(|_| format!("fault spec: bad integer `{s}`"))
+}
+
+fn parse_f64(s: &str) -> Result<f64, String> {
+    s.parse::<f64>()
+        .map_err(|_| format!("fault spec: bad number `{s}`"))
+}
+
+/// Duration with unit suffix: `500ms`, `300s`, `5m`; bare numbers are
+/// seconds.
+fn parse_dur(s: &str) -> Result<Micros, String> {
+    let (num, mult) = if let Some(n) = s.strip_suffix("ms") {
+        (n, crate::clock::MS)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, SEC)
+    } else if let Some(n) = s.strip_suffix('m') {
+        (n, 60 * SEC)
+    } else {
+        (s, SEC)
+    };
+    let v = num
+        .parse::<f64>()
+        .map_err(|_| format!("fault spec: bad duration `{s}`"))?;
+    Ok((v * mult as f64) as Micros)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let s = FaultSpec::parse(
+            "crash=300s,fail=0.02,attempts=4,backoff=1s:60s,slow=0.05x8,bias=1:2,seed=9",
+        )
+        .unwrap();
+        assert_eq!(s.crash_every, 300 * SEC);
+        assert_eq!(s.task_fail_p, 0.02);
+        assert_eq!(s.max_attempts, 4);
+        assert_eq!(s.backoff_base, SEC);
+        assert_eq!(s.backoff_cap, 60 * SEC);
+        assert_eq!(s.slow_p, 0.05);
+        assert_eq!(s.slow_factor, 8.0);
+        assert_eq!(s.family_bias, vec![1.0, 2.0]);
+        assert_eq!(s.seed, 9);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultSpec::parse("nope=1").is_err());
+        assert!(FaultSpec::parse("fail").is_err());
+        assert!(FaultSpec::parse("backoff=1s").is_err());
+        assert!(FaultSpec::parse("crash=xyz").is_err());
+    }
+
+    #[test]
+    fn durations_parse_units() {
+        assert_eq!(parse_dur("500ms").unwrap(), 500 * crate::clock::MS);
+        assert_eq!(parse_dur("2s").unwrap(), 2 * SEC);
+        assert_eq!(parse_dur("5m").unwrap(), 300 * SEC);
+        assert_eq!(parse_dur("3").unwrap(), 3 * SEC);
+    }
+
+    #[test]
+    fn fail_count_is_order_independent() {
+        let p = FaultPlan::new(FaultSpec {
+            task_fail_p: 0.5,
+            max_attempts: 4,
+            ..FaultSpec::default()
+        });
+        // Query in scrambled orders; answers must not drift.
+        let a: Vec<u32> = (0..100).map(|t| p.fail_count(t)).collect();
+        let b: Vec<u32> = (0..100).rev().map(|t| p.fail_count(t)).collect();
+        for t in 0..100usize {
+            assert_eq!(a[t], b[99 - t]);
+        }
+        // And attempt_fails agrees with the count.
+        for t in 0..100u64 {
+            let n = p.fail_count(t);
+            for k in 1..=4u32 {
+                assert_eq!(p.attempt_fails(t, k), k <= n);
+            }
+        }
+    }
+
+    #[test]
+    fn quarantine_matches_budget_exhaustion() {
+        let p = FaultPlan::new(FaultSpec {
+            task_fail_p: 0.9,
+            max_attempts: 3,
+            ..FaultSpec::default()
+        });
+        let q: Vec<u64> = (0..200).filter(|&t| p.quarantines(t)).collect();
+        assert!(!q.is_empty(), "0.9^3 should quarantine some of 200 tags");
+        for &t in &q {
+            assert_eq!(p.fail_count(t), 3);
+        }
+        // Non-quarantined tags fail strictly fewer than max_attempts.
+        for t in (0..200).filter(|&t| !p.quarantines(t)) {
+            assert!(p.fail_count(t) < 3);
+        }
+    }
+
+    #[test]
+    fn family_bias_shifts_failure_mass() {
+        let p = FaultPlan::new(FaultSpec {
+            task_fail_p: 0.2,
+            max_attempts: 8,
+            family_bias: vec![0.0, 4.0],
+            ..FaultSpec::default()
+        });
+        let even: u32 = (0..400).step_by(2).map(|t| p.fail_count(t)).sum();
+        let odd: u32 = (1..400).step_by(2).map(|t| p.fail_count(t)).sum();
+        assert_eq!(even, 0, "bias 0.0 family must never fail");
+        assert!(odd > 100, "bias 4.0 family should fail often, got {odd}");
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = FaultPlan::new(FaultSpec {
+            backoff_base: SEC,
+            backoff_cap: 60 * SEC,
+            ..FaultSpec::default()
+        });
+        assert_eq!(p.backoff(1), SEC);
+        assert_eq!(p.backoff(2), 2 * SEC);
+        assert_eq!(p.backoff(3), 4 * SEC);
+        assert_eq!(p.backoff(7), 60 * SEC); // capped
+        assert_eq!(p.backoff(40), 60 * SEC); // shift clamp
+    }
+
+    #[test]
+    fn crash_schedule_is_seed_deterministic() {
+        let a = FaultPlan::new(FaultSpec { crash_every: 300 * SEC, ..FaultSpec::default() });
+        let b = FaultPlan::new(FaultSpec { crash_every: 300 * SEC, ..FaultSpec::default() });
+        for k in 0..50 {
+            assert_eq!(a.crash_gap(k), b.crash_gap(k));
+            assert_eq!(a.crash_victim(k, 16), b.crash_victim(k, 16));
+            assert!(a.crash_victim(k, 16) < 16);
+        }
+        let c = FaultPlan::new(FaultSpec {
+            crash_every: 300 * SEC,
+            seed: 2,
+            ..FaultSpec::default()
+        });
+        assert!((0..50).any(|k| a.crash_gap(k) != c.crash_gap(k)));
+    }
+
+    #[test]
+    fn fail_point_is_within_attempt() {
+        let p = FaultPlan::new(FaultSpec { task_fail_p: 1.0, ..FaultSpec::default() });
+        for tag in 0..50 {
+            for attempt in 1..4 {
+                let fp = p.fail_point(tag, attempt, 10 * SEC);
+                assert!((1..=10 * SEC).contains(&fp));
+            }
+        }
+        // Degenerate zero-length attempt still burns one microsecond.
+        assert_eq!(p.fail_point(1, 1, 0), 1);
+    }
+
+    #[test]
+    fn slowdown_only_inflates() {
+        let p = FaultPlan::new(FaultSpec {
+            slow_p: 0.3,
+            slow_factor: 8.0,
+            ..FaultSpec::default()
+        });
+        let mut slowed = 0;
+        for tag in 0..300 {
+            let f = p.slowdown(tag, 1);
+            assert!(f == 1.0 || f == 8.0);
+            if f > 1.0 {
+                slowed += 1;
+            }
+        }
+        assert!(slowed > 40 && slowed < 160, "slowed {slowed}/300 at p=0.3");
+    }
+}

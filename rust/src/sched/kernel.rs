@@ -18,13 +18,34 @@
 //! submitter, whose sink drains back into the heap.  Stop when the
 //! submitter reports the campaign finished.
 //!
+//! # Fault plane
+//!
+//! [`run_with_faults`] threads an optional seeded [`FaultPlan`] through
+//! the same loop.  With a plan active, each [`Effect::Start`] opens an
+//! *attempt*: the kernel consults the plan (pure keyed draws — see
+//! `faults.rs`) to decide whether this attempt fails, where it fails,
+//! and how much a straggler inflates it, then schedules an epoch-tagged
+//! `WorkDoneAt`/`WorkFailed` event.  Epochs are bumped on every `Start`
+//! *and* every [`Effect::Requeued`], so a completion or failure racing a
+//! worker-loss requeue arrives with a stale epoch and is dropped — no
+//! task ever double-completes.  Failures route through
+//! [`SchedulerCore::on_work_failed_into`] with either a backoff (retry
+//! budget remaining) or `None` (quarantine: the core kills the task and
+//! reports a truncated record).  Worker crashes are scheduled from the
+//! plan's interarrival stream and kill a deterministic ordinal of the
+//! core's sorted live-worker set.  With `plan == None` the event
+//! schedule is byte-identical to the pre-fault kernel
+//! (`tests/campaign_equiv.rs` pins it).
+//!
 //! # Cost
 //!
 //! Per event: O(core transition) + O(log heap) + O(1) kernel
 //! bookkeeping (two hash-map ops and a depth-trajectory update), so
 //! campaigns inherit the indexed cores' million-task scaling (PERF.md).
 //! The effect buffer and the per-core action scratch buffers are reused
-//! across the whole run.
+//! across the whole run.  Timers whose task already finished are
+//! dropped at pop via [`SchedulerCore::timer_is_stale`] instead of
+//! re-entering the core as no-op transitions.
 //!
 //! # Equivalence
 //!
@@ -47,7 +68,8 @@ use crate::campaign::submitter::{Sink, Submission, Submitter};
 use crate::clock::{Des, Micros};
 use crate::metrics::Experiment;
 
-use super::{Completion, Effect, SchedulerCore};
+use super::faults::FaultPlan;
+use super::{CapacityChange, Completion, Effect, SchedulerCore};
 
 /// Kernel-level DES events: everything scheduler-agnostic.  Core timers
 /// ride along as the core's own associated timer type.
@@ -59,8 +81,15 @@ enum Ev<I, T> {
     Wake(u64),
     /// A deferred submission (emitted from a completion callback).
     Submit(Submission),
-    /// The sampled workload duration of `id` elapsed.
+    /// The sampled workload duration of `id` elapsed (clean plane).
     WorkDone(I),
+    /// Epoch-tagged completion (fault plane): delivered only if the
+    /// task's attempt epoch still matches.
+    WorkDoneAt(I, u64),
+    /// Epoch-tagged injected transient failure (fault plane).
+    WorkFailed(I, u64),
+    /// The `k`-th planned worker crash.
+    Crash(u64),
 }
 
 /// Drain a submitter sink into the DES at time `t`: submissions become
@@ -74,13 +103,63 @@ fn drain_sink<I, T>(sink: &mut Sink, des: &mut Des<Ev<I, T>>, t: Micros) {
     }
 }
 
-/// Run a campaign: any [`Submitter`] against any [`SchedulerCore`].
-///
-/// Returns once the submitter reports the campaign finished (or the
-/// event queue drains, whichever comes first).
+/// Per-task fault-plane bookkeeping (allocated only when a plan is
+/// active, keyed by core id, dropped at `Finish`).
+#[derive(Default)]
+struct FaultBook<I> {
+    /// id -> submission tag (the plan's draw key).
+    tags: HashMap<I, u64>,
+    /// id -> attempt epoch: bumped on every Start and Requeued; events
+    /// carrying an older epoch are stale and dropped.
+    epochs: HashMap<I, u64>,
+    /// id -> number of Starts (the plan's 1-based attempt counter).
+    execs: HashMap<I, u32>,
+    /// id -> accepted transient failures (drives backoff + quarantine).
+    fails: HashMap<I, u32>,
+}
+
+impl<I: Copy + Eq + std::hash::Hash> FaultBook<I> {
+    fn track(&mut self, id: I, tag: u64) {
+        self.tags.insert(id, tag);
+        self.epochs.insert(id, 0);
+    }
+
+    fn forget(&mut self, id: &I) {
+        self.tags.remove(id);
+        self.epochs.remove(id);
+        self.execs.remove(id);
+        self.fails.remove(id);
+    }
+
+    fn bump_epoch(&mut self, id: I) -> u64 {
+        let e = self.epochs.entry(id).or_insert(0);
+        *e += 1;
+        *e
+    }
+
+    fn epoch_is(&self, id: &I, ep: u64) -> bool {
+        self.epochs.get(id) == Some(&ep)
+    }
+}
+
+/// Run a campaign on a perfect cluster: any [`Submitter`] against any
+/// [`SchedulerCore`], no injected faults.
 pub fn run<S: SchedulerCore>(
     core: &mut S,
     sub: &mut dyn Submitter,
+) -> CampaignResult {
+    run_with_faults(core, sub, None)
+}
+
+/// Run a campaign, optionally under a seeded [`FaultPlan`] (worker
+/// crashes, transient task failures, stragglers — see module docs).
+///
+/// Returns once the submitter reports the campaign finished (or the
+/// event queue drains, whichever comes first).
+pub fn run_with_faults<S: SchedulerCore>(
+    core: &mut S,
+    sub: &mut dyn Submitter,
+    plan: Option<&FaultPlan>,
 ) -> CampaignResult {
     let mut des: Des<Ev<S::Id, S::Timer>> = Des::new();
     let mut exp = Experiment::new(core.label());
@@ -96,6 +175,13 @@ pub fn run<S: SchedulerCore>(
     let mut submitted: u64 = 0;
     let mut completed: u64 = 0;
 
+    // Fault-plane state (unused allocations when plan is None).
+    let mut book: FaultBook<S::Id> = FaultBook::default();
+    let mut retries: u64 = 0;
+    let mut quarantined: u64 = 0;
+    let mut worker_crashes: u64 = 0;
+    let mut victim_scratch: Vec<u64> = Vec::new();
+
     // One reusable effect buffer for the whole run (see PERF.md).
     let mut effects: Vec<Effect<S::Id, S::Timer>> = Vec::new();
     core.bootstrap_into(0, &mut effects);
@@ -104,6 +190,11 @@ pub fn run<S: SchedulerCore>(
             Effect::SetTimer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
             Effect::Queued => depth.submit(0),
             _ => {}
+        }
+    }
+    if let Some(p) = plan {
+        if p.injects_crashes() {
+            des.schedule(p.crash_gap(0), Ev::Crash(0));
         }
     }
 
@@ -117,13 +208,22 @@ pub fn run<S: SchedulerCore>(
         assert!(guard < 50_000_000, "runaway campaign");
         effects.clear();
         match ev {
-            Ev::Timer(tm) => core.on_timer_into(t, tm, &mut effects),
+            Ev::Timer(tm) => {
+                // Dead-timer hygiene: a parked dispatch/limit/retry timer
+                // whose task already finished never re-enters the core.
+                if !core.timer_is_stale(&tm) {
+                    core.on_timer_into(t, tm, &mut effects);
+                }
+            }
             Ev::Wake(token) => {
                 sub.wake(t, token, &mut sink);
                 for s in sink.submissions.drain(..) {
                     let (id, dur) = core.submit_into(t, &s, &mut effects);
                     durations.insert(id, dur);
                     users.insert(id, s.user);
+                    if plan.is_some() {
+                        book.track(id, s.tag);
+                    }
                     depth.submit(t);
                     submitted += 1;
                 }
@@ -135,10 +235,57 @@ pub fn run<S: SchedulerCore>(
                 let (id, dur) = core.submit_into(t, &s, &mut effects);
                 durations.insert(id, dur);
                 users.insert(id, s.user);
+                if plan.is_some() {
+                    book.track(id, s.tag);
+                }
                 depth.submit(t);
                 submitted += 1;
             }
             Ev::WorkDone(id) => core.on_work_done_into(t, id, &mut effects),
+            Ev::WorkDoneAt(id, ep) => {
+                if book.epoch_is(&id, ep) {
+                    core.on_work_done_into(t, id, &mut effects);
+                }
+            }
+            Ev::WorkFailed(id, ep) => {
+                if book.epoch_is(&id, ep) && durations.contains_key(&id) {
+                    let plan = plan.expect("WorkFailed without a plan");
+                    // Invalidate anything else in flight for this attempt.
+                    book.bump_epoch(id);
+                    let f = {
+                        let f = book.fails.entry(id).or_insert(0);
+                        *f += 1;
+                        *f
+                    };
+                    if f >= plan.max_attempts() {
+                        quarantined += 1;
+                        core.on_work_failed_into(t, id, None, &mut effects);
+                    } else {
+                        let backoff = plan.backoff(f);
+                        core.on_work_failed_into(
+                            t, id, Some(backoff), &mut effects,
+                        );
+                    }
+                }
+            }
+            Ev::Crash(k) => {
+                let plan = plan.expect("Crash without a plan");
+                victim_scratch.clear();
+                core.live_worker_ids(&mut victim_scratch);
+                victim_scratch.sort_unstable();
+                victim_scratch.dedup();
+                if !victim_scratch.is_empty() {
+                    let v = victim_scratch
+                        [plan.crash_victim(k, victim_scratch.len())];
+                    worker_crashes += 1;
+                    core.on_capacity_change_into(
+                        t,
+                        CapacityChange::WorkerLost(v),
+                        &mut effects,
+                    );
+                }
+                des.schedule(t + plan.crash_gap(k + 1), Ev::Crash(k + 1));
+            }
         }
         for e in effects.drain(..) {
             match e {
@@ -146,15 +293,64 @@ pub fn run<S: SchedulerCore>(
                 Effect::Start { id, contention, .. } => {
                     // Work the kernel never submitted (background jobs)
                     // finishes itself inside the core.
-                    if let Some(&d) = durations.get(&id) {
-                        let dd = (d as f64 * contention) as Micros;
-                        des.schedule(t + dd, Ev::WorkDone(id));
+                    match plan {
+                        None => {
+                            if let Some(&d) = durations.get(&id) {
+                                let dd = (d as f64 * contention) as Micros;
+                                des.schedule(t + dd, Ev::WorkDone(id));
+                            }
+                        }
+                        Some(p) => {
+                            let dt = (durations.get(&id).copied())
+                                .zip(book.tags.get(&id).copied());
+                            if let Some((d, tag)) = dt {
+                                let ep = book.bump_epoch(id);
+                                let exec = {
+                                    let x = book.execs.entry(id).or_insert(0);
+                                    *x += 1;
+                                    *x
+                                };
+                                let dd = (d as f64
+                                    * contention
+                                    * p.slowdown(tag, exec))
+                                    as Micros;
+                                // Fate is keyed on *accepted* failures, not
+                                // raw starts: a crash-interrupted attempt
+                                // (epoch invalidated, no failure accepted)
+                                // does not consume a planned failure, so
+                                // every core sees the same per-tag failure
+                                // count whatever its crash interactions.
+                                let f =
+                                    book.fails.get(&id).copied().unwrap_or(0);
+                                if p.attempt_fails(tag, f + 1) {
+                                    let fp = p.fail_point(tag, exec, dd);
+                                    des.schedule(
+                                        t + fp,
+                                        Ev::WorkFailed(id, ep),
+                                    );
+                                } else {
+                                    des.schedule(
+                                        t + dd,
+                                        Ev::WorkDoneAt(id, ep),
+                                    );
+                                }
+                            }
+                        }
                     }
                 }
                 Effect::Queued => depth.submit(t),
                 Effect::Retire { .. } => {}
+                Effect::Requeued { id } => {
+                    // The task left its worker without finishing; any
+                    // in-flight done/failed event is now stale.
+                    retries += 1;
+                    if plan.is_some() {
+                        book.bump_epoch(id);
+                    }
+                }
                 Effect::Finish { id, record } => {
                     durations.remove(&id);
+                    book.forget(&id);
                     match core.classify(&record) {
                         Completion::Background => {}
                         Completion::Registration => {
@@ -197,6 +393,9 @@ pub fn run<S: SchedulerCore>(
         per_user: per_user_stats,
         fairness_jain: fairness,
         des_events: des.processed(),
+        retries,
+        quarantined,
+        worker_crashes,
     };
     CampaignResult { experiment: exp, metrics }
 }

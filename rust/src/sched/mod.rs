@@ -48,6 +48,7 @@
 //! `experiments::reference`, for every app and both paper schedulers.
 
 pub mod edf;
+pub mod faults;
 pub mod kernel;
 pub mod realtime;
 pub mod slurm;
@@ -62,7 +63,8 @@ use crate::clock::Micros;
 use crate::metrics::JobRecord;
 
 pub use edf::EdfCore;
-pub use kernel::run;
+pub use faults::{FaultPlan, FaultSpec};
+pub use kernel::{run, run_with_faults};
 pub use realtime::{LivePolicy, LiveSched, RtDriver};
 pub use slurm::SlurmSched;
 pub use stack::{EdfSched, HqSched, MetaStack, StackTimer, WorkStealSched};
@@ -91,6 +93,12 @@ pub enum Effect<I, T> {
     /// The work was forcibly stopped (time limit).  Informational — the
     /// matching [`Effect::Finish`] carries the truncated record.
     Retire { id: I },
+    /// The work left a worker without finishing (transient failure or
+    /// worker loss) and will run again.  The kernel invalidates any
+    /// in-flight completion it scheduled for the previous attempt — a
+    /// requeued task's next [`Effect::Start`] opens a fresh epoch — and
+    /// counts the retry.
+    Requeued { id: I },
     /// Internal (core-originated) work entered the stream — depth
     /// tracking only.  Used by the HQ stack's registration pre-jobs.
     Queued,
@@ -196,6 +204,25 @@ pub trait SchedulerCore {
         out: &mut Vec<Effect<Self::Id, Self::Timer>>,
     );
 
+    /// The workload of `id` failed mid-run (injected by a fault plan).
+    /// `retry_in: Some(backoff)` means the retry budget allows another
+    /// attempt: the core must free the worker, park the task, and arm a
+    /// retry timer `backoff` from now (emitting [`Effect::Requeued`]).
+    /// `None` means the budget is exhausted: the core must kill the task
+    /// and emit a *truncated* [`Effect::Finish`] so the quarantine is
+    /// reported, never silently dropped.  Default: cores without retry
+    /// semantics treat the failure as a (poisoned) completion so no task
+    /// is ever lost.
+    fn on_work_failed_into(
+        &mut self,
+        t: Micros,
+        id: Self::Id,
+        _retry_in: Option<Micros>,
+        out: &mut Vec<Effect<Self::Id, Self::Timer>>,
+    ) {
+        self.on_work_done_into(t, id, out);
+    }
+
     /// External capacity change.  Default: no-op (cores without an
     /// elastic worker pool).
     fn on_capacity_change_into(
@@ -205,6 +232,21 @@ pub trait SchedulerCore {
         _out: &mut Vec<Effect<Self::Id, Self::Timer>>,
     ) {
     }
+
+    /// Is this parked timer dead (its task already finished)?  The
+    /// kernel skips stale timers at pop instead of invoking the core —
+    /// dead dispatch/limit timers no longer ride the heap as no-op
+    /// transitions across a million-task campaign.  Default: never
+    /// stale (cores that cannot tell must be called).
+    fn timer_is_stale(&self, _timer: &Self::Timer) -> bool {
+        false
+    }
+
+    /// Append the ids of currently live workers (the id space of
+    /// [`CapacityChange::WorkerLost`]).  The fault plane samples crash
+    /// victims from this set; cores without an addressable worker pool
+    /// (native SLURM) leave it empty and are crash-immune.
+    fn live_worker_ids(&self, _out: &mut Vec<u64>) {}
 
     /// Classify a terminal record (per-core: tag `u64::MAX` means
     /// background load under SLURM but a registration pre-job on the HQ

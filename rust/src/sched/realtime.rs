@@ -197,6 +197,9 @@ impl<M: TaskCore> LiveSched<M> {
                 HqAction::KillTask { task } => {
                     out.push(Effect::Retire { id: task });
                 }
+                HqAction::Requeued { task } => {
+                    out.push(Effect::Requeued { id: task });
+                }
             }
         }
     }
@@ -262,6 +265,39 @@ impl<M: TaskCore> SchedulerCore for LiveSched<M> {
     ) {
         self.meta.on_task_done_into(t, id, &mut self.acts);
         self.flush(out);
+    }
+
+    fn on_work_failed_into(
+        &mut self,
+        t: Micros,
+        id: TaskId,
+        retry_in: Option<Micros>,
+        out: &mut Vec<Effect<TaskId, HqTimer>>,
+    ) {
+        self.meta.on_task_failed_into(t, id, retry_in, &mut self.acts);
+        self.flush(out);
+    }
+
+    fn timer_is_stale(&self, timer: &HqTimer) -> bool {
+        match timer {
+            HqTimer::Dispatched(id)
+            | HqTimer::Limit(id)
+            | HqTimer::Retry(id) => !self.meta.task_live(*id),
+        }
+    }
+
+    fn live_worker_ids(&self, out: &mut Vec<u64>) {
+        let start = out.len();
+        self.meta.live_worker_ids_into(out);
+        // Translate the core's internal ids to the caller's ids.
+        let mut w = start;
+        for r in start..out.len() {
+            if let Some(&ext) = self.int2ext.get(&(out[r] as WorkerId)) {
+                out[w] = ext;
+                w += 1;
+            }
+        }
+        out.truncate(w);
     }
 
     fn on_capacity_change_into(
@@ -332,6 +368,54 @@ impl Ord for TimerEntry {
     }
 }
 
+/// Retry budget and backoff for live evaluations that fail on a lease
+/// (the forwarder's HTTP round died with the server).  Live defaults
+/// are aggressive — one fast retry on a replacement server before the
+/// error surfaces to the client — because a live request is already
+/// burning its deadline budget while it cools.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts per task (first run included).
+    pub max_attempts: u32,
+    /// First backoff; doubles per failure.
+    pub backoff_base: Micros,
+    /// Backoff ceiling.
+    pub backoff_cap: Micros,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 2,
+            backoff_base: 50 * MS,
+            backoff_cap: SEC,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before attempt `fails + 1`, after `fails` failures
+    /// (capped exponential, same shape as the fault plan's).
+    pub fn backoff(&self, fails: u32) -> Micros {
+        let shift = fails.saturating_sub(1).min(20);
+        self.backoff_base
+            .max(1)
+            .saturating_mul(1u64 << shift)
+            .min(self.backoff_cap.max(1))
+    }
+}
+
+/// What [`RtDriver::work_failed`] decided for a failed evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Recovery {
+    /// The task re-enters the queue after `backoff`; `attempt` is the
+    /// attempt number the retry will run as (2 = first retry).
+    Retrying { attempt: u32, backoff: Micros },
+    /// Retry budget exhausted after `attempts` attempts: the core
+    /// reported a truncated record; the caller surfaces the error.
+    Quarantined { attempts: u32 },
+}
+
 /// The wall-clock driver around one live core (the balancer holds one
 /// per model).  Owns the monotonic clock origin, the timer heap fed by
 /// `SetTimer` effects, and the ready queue fed by `Start` effects; every
@@ -352,6 +436,9 @@ pub struct RtDriver {
     /// for the full deadline budget — the heap tracks in-flight work,
     /// not lifetime throughput.
     live: HashSet<TaskId>,
+    retry: RetryPolicy,
+    /// Accepted failures per in-flight task (cleared on completion).
+    attempts: HashMap<TaskId, u32>,
     next_tag: u64,
 }
 
@@ -365,8 +452,17 @@ impl RtDriver {
             ready: VecDeque::new(),
             effects: Vec::new(),
             live: HashSet::new(),
+            retry: RetryPolicy::default(),
+            attempts: HashMap::new(),
             next_tag: 0,
         }
+    }
+
+    /// Replace the retry policy (builder-style; the balancer sets this
+    /// from its CLI knobs).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> RtDriver {
+        self.retry = retry;
+        self
     }
 
     /// Shorthand: driver over the boxed core for `policy`.
@@ -404,17 +500,27 @@ impl RtDriver {
                 }
                 Effect::Finish { id, .. } => {
                     self.live.remove(&id);
+                    self.attempts.remove(&id);
+                }
+                Effect::Requeued { id } => {
+                    // The task left its worker (failure or worker loss):
+                    // a ready entry not yet claimed by a forwarder is
+                    // stale — the core re-dispatches it itself.
+                    self.ready.retain(|&(r, _)| r != id);
                 }
                 Effect::Retire { .. } | Effect::Queued => {}
             }
         }
     }
 
-    /// Is a timer entry for a task that already finished?
+    /// Is a timer entry for a task that already finished?  Dispatch
+    /// latency, kill-limit, and retry-backoff timers all die with their
+    /// task.
     fn is_stale(live: &HashSet<TaskId>, tm: &HqTimer) -> bool {
         match tm {
-            HqTimer::Limit(id) => !live.contains(id),
-            HqTimer::Dispatched(_) => false,
+            HqTimer::Limit(id)
+            | HqTimer::Dispatched(id)
+            | HqTimer::Retry(id) => !live.contains(id),
         }
     }
 
@@ -490,6 +596,43 @@ impl RtDriver {
         self.core.on_work_done_into(t, id, &mut self.effects);
         self.absorb();
         self.advance();
+    }
+
+    /// A forward failed with its lease (server died mid-evaluation).
+    /// Charges one attempt against the retry budget: within budget the
+    /// core requeues the task behind a backoff timer (it will re-enter
+    /// `next_ready`, typically placed on a replacement server); past
+    /// budget the core kills it and reports a truncated record, and the
+    /// caller surfaces the error to the client.
+    pub fn work_failed(&mut self, id: TaskId) -> Recovery {
+        let t = self.now();
+        let fails = {
+            let n = self.attempts.entry(id).or_insert(0);
+            *n += 1;
+            *n
+        };
+        let verdict = if fails >= self.retry.max_attempts {
+            self.attempts.remove(&id);
+            self.core.on_work_failed_into(t, id, None, &mut self.effects);
+            Recovery::Quarantined { attempts: fails }
+        } else {
+            let backoff = self.retry.backoff(fails);
+            self.core.on_work_failed_into(
+                t,
+                id,
+                Some(backoff),
+                &mut self.effects,
+            );
+            Recovery::Retrying { attempt: fails + 1, backoff }
+        };
+        self.absorb();
+        self.advance();
+        verdict
+    }
+
+    /// The retry policy in force (introspection; /Stats).
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.retry
     }
 
     /// A model server registered: announce one worker under `ext` id.
@@ -618,6 +761,52 @@ mod tests {
         let (next, w) = d.next_ready().expect("requeued task re-placed");
         assert_eq!(w, Some(2));
         assert!(next == a || next == b);
+    }
+
+    #[test]
+    fn failed_work_retries_then_quarantines() {
+        for policy in [LivePolicy::Fcfs, LivePolicy::WorkSteal,
+                       LivePolicy::Edf] {
+            let mut d = RtDriver::for_policy(policy).with_retry(
+                RetryPolicy {
+                    max_attempts: 2,
+                    backoff_base: 1,
+                    backoff_cap: 1,
+                },
+            );
+            d.worker_up(1, 1);
+            d.worker_up(2, 1);
+            let id = d.submit(60 * SEC);
+            let (got, _) = d.next_ready().expect("dispatch");
+            assert_eq!(got, id);
+            // The server dies mid-forward: one retry, ~1µs backoff.
+            match d.work_failed(id) {
+                Recovery::Retrying { attempt, .. } => {
+                    assert_eq!(attempt, 2, "{}", d.label())
+                }
+                r => panic!("{}: expected retry, got {r:?}", d.label()),
+            }
+            // Wait out the backoff; the task re-enters the ready queue.
+            let redispatched = loop {
+                d.advance();
+                if let Some(e) = d.next_ready() {
+                    break e;
+                }
+                std::thread::yield_now();
+            };
+            assert_eq!(redispatched.0, id, "{}", d.label());
+            // A second failure exhausts the budget.
+            match d.work_failed(id) {
+                Recovery::Quarantined { attempts } => {
+                    assert_eq!(attempts, 2, "{}", d.label())
+                }
+                r => panic!("{}: expected quarantine, got {r:?}",
+                            d.label()),
+            }
+            assert!(d.next_ready().is_none(),
+                    "{}: quarantined task must not redispatch",
+                    d.label());
+        }
     }
 
     #[test]

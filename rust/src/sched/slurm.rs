@@ -9,6 +9,8 @@
 //! duration and the balancer's proxy latency into each submission
 //! (Appendix A) — exactly what the old `run_slurm` driver hard-coded.
 
+use std::collections::HashMap;
+
 use crate::campaign::driver::{CampaignConfig, SlurmMode};
 use crate::campaign::submitter::Submission;
 use crate::clock::{Micros, MS, SEC};
@@ -18,6 +20,20 @@ use crate::slurmlite::core::{Action, BatchCore, JobId, SlurmCore, Timer,
 use crate::workload::scenario;
 
 use super::{Completion, Effect, SchedulerCore};
+
+/// Timer payload for [`SlurmSched`]: the wrapped [`SlurmCore`] timers
+/// plus the retry-backoff timers this adapter owns.  SLURM retries a
+/// transiently failed evaluation *in place* — the allocation survives
+/// the failure (an `srun` step died, not the job), so the retry re-runs
+/// on the same nodes after the backoff instead of re-entering the
+/// queue.
+#[derive(Clone, Copy, Debug)]
+pub enum SlurmSchedTimer {
+    /// A timer owned by the wrapped [`SlurmCore`].
+    Core(Timer),
+    /// Retry backoff elapsed for a transiently failed job.
+    Retry(JobId),
+}
 
 /// SLURM native log granularity (whole seconds; paper section V).
 const SLURM_LOG_GRAIN: Micros = SEC;
@@ -44,6 +60,9 @@ pub struct SlurmSched {
     submit_extra: Micros,
     /// Reusable action scratch, translated into effects per call.
     acts: Vec<Action>,
+    /// Contention captured at launch, per running job: a retry re-runs
+    /// in place with the same contention its allocation started under.
+    running: HashMap<JobId, f64>,
 }
 
 impl SlurmSched {
@@ -65,25 +84,33 @@ impl SlurmSched {
             per_job_extra,
             submit_extra,
             acts: Vec::new(),
+            running: HashMap::new(),
         }
     }
 
     /// Translate the scratch actions into effects, in order (the kernel
     /// interprets effects sequentially, so DES schedule order is
     /// preserved exactly).
-    fn flush(&mut self, out: &mut Vec<Effect<JobId, Timer>>) {
+    fn flush(&mut self, out: &mut Vec<Effect<JobId, SlurmSchedTimer>>) {
         for a in self.acts.drain(..) {
             out.push(match a {
-                Action::Timer(tt, tm) => Effect::SetTimer(tt, tm),
+                Action::Timer(tt, tm) => {
+                    Effect::SetTimer(tt, SlurmSchedTimer::Core(tm))
+                }
                 Action::Launched { job, contention, node } => {
+                    self.running.insert(job, contention);
                     Effect::Start {
                         id: job,
                         contention,
                         worker: Some(node as u64),
                     }
                 }
-                Action::TimedOut { job } => Effect::Retire { id: job },
+                Action::TimedOut { job } => {
+                    self.running.remove(&job);
+                    Effect::Retire { id: job }
+                }
                 Action::Completed { job, record } => {
+                    self.running.remove(&job);
                     Effect::Finish { id: job, record }
                 }
             });
@@ -93,7 +120,7 @@ impl SlurmSched {
 
 impl SchedulerCore for SlurmSched {
     type Id = JobId;
-    type Timer = Timer;
+    type Timer = SlurmSchedTimer;
 
     fn label(&self) -> &'static str {
         self.label
@@ -106,7 +133,7 @@ impl SchedulerCore for SlurmSched {
     fn bootstrap_into(
         &mut self,
         t: Micros,
-        out: &mut Vec<Effect<JobId, Timer>>,
+        out: &mut Vec<Effect<JobId, SlurmSchedTimer>>,
     ) {
         self.acts = self.core.bootstrap(t);
         self.flush(out);
@@ -116,7 +143,7 @@ impl SchedulerCore for SlurmSched {
         &mut self,
         t: Micros,
         s: &Submission,
-        out: &mut Vec<Effect<JobId, Timer>>,
+        out: &mut Vec<Effect<JobId, SlurmSchedTimer>>,
     ) -> (JobId, Micros) {
         debug_assert!(s.tag != u64::MAX, "tag u64::MAX is reserved");
         let id = self.core.submit_into(
@@ -134,7 +161,7 @@ impl SchedulerCore for SlurmSched {
         &mut self,
         t: Micros,
         id: JobId,
-        out: &mut Vec<Effect<JobId, Timer>>,
+        out: &mut Vec<Effect<JobId, SlurmSchedTimer>>,
     ) {
         self.core.cancel_into(t, id, &mut self.acts);
         self.flush(out);
@@ -143,21 +170,73 @@ impl SchedulerCore for SlurmSched {
     fn on_timer_into(
         &mut self,
         t: Micros,
-        timer: Timer,
-        out: &mut Vec<Effect<JobId, Timer>>,
+        timer: SlurmSchedTimer,
+        out: &mut Vec<Effect<JobId, SlurmSchedTimer>>,
     ) {
-        self.core.on_timer_into(t, timer, &mut self.acts);
-        self.flush(out);
+        match timer {
+            SlurmSchedTimer::Core(tm) => {
+                self.core.on_timer_into(t, tm, &mut self.acts);
+                self.flush(out);
+            }
+            SlurmSchedTimer::Retry(id) => {
+                // Re-run in place on the surviving allocation.  The
+                // kernel opens a fresh attempt (new epoch, new fate
+                // draw) off this Start.
+                if let Some(&contention) = self.running.get(&id) {
+                    out.push(Effect::Start {
+                        id,
+                        contention,
+                        worker: None,
+                    });
+                }
+            }
+        }
     }
 
     fn on_work_done_into(
         &mut self,
         t: Micros,
         id: JobId,
-        out: &mut Vec<Effect<JobId, Timer>>,
+        out: &mut Vec<Effect<JobId, SlurmSchedTimer>>,
     ) {
         self.core.on_finish_into(t, id, &mut self.acts);
         self.flush(out);
+    }
+
+    fn on_work_failed_into(
+        &mut self,
+        t: Micros,
+        id: JobId,
+        retry_in: Option<Micros>,
+        out: &mut Vec<Effect<JobId, SlurmSchedTimer>>,
+    ) {
+        if !self.running.contains_key(&id) {
+            return;
+        }
+        match retry_in {
+            // Quarantine: cancel through the core so the job surfaces
+            // as a truncated record instead of vanishing.
+            None => {
+                self.core.cancel_into(t, id, &mut self.acts);
+                self.flush(out);
+            }
+            Some(backoff) => {
+                out.push(Effect::Requeued { id });
+                out.push(Effect::SetTimer(
+                    t.saturating_add(backoff),
+                    SlurmSchedTimer::Retry(id),
+                ));
+            }
+        }
+    }
+
+    fn timer_is_stale(&self, timer: &SlurmSchedTimer) -> bool {
+        match timer {
+            // A retry for a job that already completed, timed out, or
+            // was quarantined has nothing left to re-run.
+            SlurmSchedTimer::Retry(id) => !self.running.contains_key(id),
+            SlurmSchedTimer::Core(_) => false,
+        }
     }
 
     fn classify(&self, record: &JobRecord) -> Completion {

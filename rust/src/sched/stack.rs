@@ -191,6 +191,9 @@ impl<M: TaskCore> MetaStack<M> {
                     HqAction::KillTask { task } => {
                         out.push(Effect::Retire { id: task });
                     }
+                    HqAction::Requeued { task } => {
+                        out.push(Effect::Requeued { id: task });
+                    }
                 }
             }
             self.meta_batch = batch;
@@ -326,6 +329,34 @@ impl<M: TaskCore> SchedulerCore for MetaStack<M> {
     ) {
         self.meta.on_task_done_into(t, id, &mut self.meta_acts);
         self.route(t, out);
+    }
+
+    fn on_work_failed_into(
+        &mut self,
+        t: Micros,
+        id: TaskId,
+        retry_in: Option<Micros>,
+        out: &mut Vec<Effect<TaskId, StackTimer>>,
+    ) {
+        self.meta.on_task_failed_into(t, id, retry_in, &mut self.meta_acts);
+        self.route(t, out);
+    }
+
+    fn timer_is_stale(&self, timer: &StackTimer) -> bool {
+        // Per-task meta timers die with their task; everything else
+        // (periodic SLURM ticks, allocation lifecycle) stays live.
+        match timer {
+            StackTimer::Meta(
+                HqTimer::Dispatched(id)
+                | HqTimer::Limit(id)
+                | HqTimer::Retry(id),
+            ) => !self.meta.task_live(*id),
+            _ => false,
+        }
+    }
+
+    fn live_worker_ids(&self, out: &mut Vec<u64>) {
+        self.meta.live_worker_ids_into(out);
     }
 
     fn on_capacity_change_into(

@@ -45,6 +45,10 @@ enum TaskState {
     Pending,
     Dispatched,
     Running,
+    /// Failed transiently; off every worker and every deque, waiting
+    /// out its retry backoff.  Re-enters via the shared backlog when
+    /// the `Retry` timer fires.
+    Cooling,
 }
 
 #[derive(Clone, Debug)]
@@ -446,6 +450,7 @@ impl TaskCore for WorkStealCore {
                         task.state = TaskState::Pending;
                         self.pending += 1;
                         self.backlog.push_back(id);
+                        out.push(HqAction::Requeued { task: id });
                     }
                 }
             }
@@ -483,7 +488,60 @@ impl TaskCore for WorkStealCore {
                     self.complete(t, id, true, out);
                 }
             }
+            HqTimer::Retry(id) => {
+                let Some(task) = self.tasks.get_mut(&id) else { return };
+                if task.state != TaskState::Cooling {
+                    return;
+                }
+                task.state = TaskState::Pending;
+                self.pending += 1;
+                self.backlog.push_back(id);
+                self.pump(t, out);
+            }
         }
+    }
+
+    fn on_task_failed_into(
+        &mut self,
+        t: Micros,
+        id: TaskId,
+        retry_in: Option<Micros>,
+        out: &mut Vec<HqAction>,
+    ) {
+        let Some(task) = self.tasks.get_mut(&id) else { return };
+        if !matches!(task.state, TaskState::Dispatched | TaskState::Running) {
+            return;
+        }
+        match retry_in {
+            None => {
+                out.push(HqAction::KillTask { task: id });
+                self.complete(t, id, true, out);
+            }
+            Some(backoff) => {
+                let wid = task.worker;
+                let cores = task.spec.cores;
+                task.state = TaskState::Cooling;
+                if let Some(w) = self.workers.get_mut(&wid) {
+                    if w.running.remove(&id) {
+                        w.cores_free += cores;
+                    }
+                }
+                out.push(HqAction::Requeued { task: id });
+                out.push(HqAction::Timer(
+                    t + backoff,
+                    HqTimer::Retry(id),
+                ));
+                self.pump(t, out);
+            }
+        }
+    }
+
+    fn task_live(&self, id: TaskId) -> bool {
+        self.tasks.contains_key(&id)
+    }
+
+    fn live_worker_ids_into(&self, out: &mut Vec<u64>) {
+        out.extend(self.workers.keys().copied());
     }
 
     fn expire_workers_into(&mut self, t: Micros, out: &mut Vec<HqAction>) {
@@ -584,6 +642,7 @@ mod tests {
                         records.push(record)
                     }
                     HqAction::KillTask { .. } => {}
+                    HqAction::Requeued { .. } => {}
                 }
             }
         }

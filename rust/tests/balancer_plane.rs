@@ -4,7 +4,7 @@
 //! leases, backpressure (503 + Retry-After) and abandoned-work
 //! cancellation — with no PJRT, no scheduler daemon and no port files.
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -307,6 +307,150 @@ fn client_timeout_cancels_queued_work() {
     // Only A's forward ever ran: B was skipped, the server never
     // evaluated it.
     assert_eq!(st.served.load(Ordering::Relaxed), 1);
+    lb.shutdown();
+}
+
+/// A model whose server "dies" when the shared kill switch is armed:
+/// the evaluate panics its connection thread, so the socket drops
+/// mid-request exactly like a crashed server process.  The switch
+/// clears on use — the next attempt (on a replacement server)
+/// succeeds.
+struct KillableModel {
+    inner: SyntheticModel,
+    kill_next: Arc<AtomicBool>,
+}
+
+impl Model for KillableModel {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn input_sizes(&self) -> Vec<usize> {
+        self.inner.input_sizes()
+    }
+    fn output_sizes(&self) -> Vec<usize> {
+        self.inner.output_sizes()
+    }
+    fn evaluate(&self, inputs: &[Vec<f64>], config: &Value)
+                -> anyhow::Result<Vec<Vec<f64>>> {
+        if self.kill_next.swap(false, Ordering::SeqCst) {
+            panic!("injected server death (test)");
+        }
+        self.inner.evaluate(inputs, config)
+    }
+}
+
+#[test]
+fn server_killed_mid_evaluation_recovers_on_replacement() {
+    let kill = Arc::new(AtomicBool::new(false));
+    let kill2 = kill.clone();
+    let factory: uqsched::coordinator::ModelFactory =
+        Arc::new(move |name: &str| {
+            if name != "mortal" {
+                anyhow::bail!("unknown test model '{name}'");
+            }
+            Ok(Arc::new(KillableModel {
+                inner: SyntheticModel::new("mortal", &[2], &[1]),
+                kill_next: kill2.clone(),
+            }) as Arc<dyn Model>)
+        });
+    let mut lb = LoadBalancer::start(
+        BalancerConfig {
+            models: vec!["mortal".into()],
+            max_servers: 2,
+            forwarders: 2,
+            ..Default::default()
+        },
+        LocalBackend::new(factory),
+    )
+    .expect("balancer");
+    let url = lb.url();
+    wait_servers(&lb, 1);
+
+    let mut m = HttpModel::connect(&url, "mortal").unwrap();
+    let cfgv = Value::Obj(Default::default());
+    let out = m.evaluate(&[vec![1.0, 2.0]], &cfgv).expect("healthy");
+    assert_eq!(out[0][0], 3.0);
+
+    // Arm the switch: the next forward dies with its server.  The
+    // balancer must retire the dead server, requeue the evaluation
+    // through its scheduler core, and complete it on a replacement —
+    // the client sees one slower success, never an error.
+    kill.store(true, Ordering::SeqCst);
+    let out = m
+        .evaluate(&[vec![5.0, 7.0]], &cfgv)
+        .expect("must complete on a replacement server");
+    assert_eq!(out[0][0], 12.0);
+
+    let st = lb.stats().model("mortal").unwrap();
+    assert_eq!(st.retries.load(Ordering::Relaxed), 1);
+    assert!(st.worker_lost.load(Ordering::Relaxed) >= 1);
+    assert_eq!(st.quarantined.load(Ordering::Relaxed), 0);
+    assert_eq!(st.served.load(Ordering::Relaxed), 2);
+    assert_eq!(st.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(st.retry_backoff.count(), 1,
+               "the retry's backoff must be recorded");
+    lb.shutdown();
+}
+
+/// Every server of this model dies on evaluate: the retry budget
+/// (2 attempts by default) must exhaust and surface an error — a
+/// quarantined evaluation is reported, never silently dropped or
+/// retried forever.
+struct DoomedModel {
+    inner: SyntheticModel,
+}
+
+impl Model for DoomedModel {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn input_sizes(&self) -> Vec<usize> {
+        self.inner.input_sizes()
+    }
+    fn output_sizes(&self) -> Vec<usize> {
+        self.inner.output_sizes()
+    }
+    fn evaluate(&self, _inputs: &[Vec<f64>], _config: &Value)
+                -> anyhow::Result<Vec<Vec<f64>>> {
+        panic!("injected permanent server death (test)");
+    }
+}
+
+#[test]
+fn repeated_server_death_exhausts_retry_budget() {
+    let factory: uqsched::coordinator::ModelFactory =
+        Arc::new(|name: &str| {
+            if name != "doomed" {
+                anyhow::bail!("unknown test model '{name}'");
+            }
+            Ok(Arc::new(DoomedModel {
+                inner: SyntheticModel::new("doomed", &[1], &[1]),
+            }) as Arc<dyn Model>)
+        });
+    let mut lb = LoadBalancer::start(
+        BalancerConfig {
+            models: vec!["doomed".into()],
+            max_servers: 2,
+            forwarders: 2,
+            ..Default::default()
+        },
+        LocalBackend::new(factory),
+    )
+    .expect("balancer");
+    let url = lb.url();
+    wait_servers(&lb, 1);
+
+    let mut m = HttpModel::connect(&url, "doomed").unwrap();
+    let cfgv = Value::Obj(Default::default());
+    let out = m.evaluate(&[vec![1.0]], &cfgv);
+    assert!(out.is_err(), "budget exhausted: the error must surface");
+
+    let st = lb.stats().model("doomed").unwrap();
+    assert_eq!(st.retries.load(Ordering::Relaxed), 1,
+               "one retry before the budget (2 attempts) exhausts");
+    assert_eq!(st.quarantined.load(Ordering::Relaxed), 1);
+    assert_eq!(st.errors.load(Ordering::Relaxed), 1);
+    assert_eq!(st.served.load(Ordering::Relaxed), 0);
     lb.shutdown();
 }
 

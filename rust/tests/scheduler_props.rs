@@ -10,7 +10,8 @@
 
 use std::collections::HashMap;
 
-use uqsched::campaign::{CampaignConfig, CampaignResult, FixedDepth,
+use uqsched::campaign::{run_edf, run_hq, run_slurm, run_worksteal,
+                        CampaignConfig, CampaignResult, FixedDepth,
                         SlurmMode, Submission};
 use uqsched::cluster::{ClusterSpec, JobRequest, OverheadModel};
 use uqsched::clock::{Des, Micros, MS, SEC};
@@ -19,8 +20,9 @@ use uqsched::experiments::{run_naive_slurm, run_umbridge_hq,
 use uqsched::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer,
                       ReferenceHqCore, TaskCore, TaskId, TaskSpec};
 use uqsched::metrics::JobRecord;
-use uqsched::sched::{kernel, CapacityChange, EdfCore, Effect, MetaStack,
-                     SchedulerCore, SlurmSched, StackTimer, WorkStealCore};
+use uqsched::sched::{kernel, CapacityChange, EdfCore, Effect, FaultPlan,
+                     FaultSpec, MetaStack, SchedulerCore, SlurmSched,
+                     StackTimer, WorkStealCore};
 use uqsched::slurmlite::core::{Action, BatchCore, JobId, SlurmCore, Timer,
                                USER_EXPERIMENT};
 use uqsched::slurmlite::ReferenceSlurmCore;
@@ -1012,6 +1014,177 @@ fn prop_edf_campaign_deterministic_under_seed() {
         for (x, y) in a.experiment.records.iter().zip(&b.experiment.records) {
             assert_eq!(x, y, "edf campaign not seed-deterministic");
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Chaos properties: seeded fault plans through the generic kernel.
+//
+// The plan is a pure function of (seed, tag) — see faults.rs — so all
+// four cores must exhibit the *same* failure trace: the same per-tag
+// retry totals and the exact same quarantine set, however differently
+// they order the work.  No task may be lost or double-completed, and a
+// quarantined task must still surface as a (truncated) record.
+// ---------------------------------------------------------------------------
+
+/// Chaos configs stick to the fast apps (durations of seconds against
+/// minutes-scale time limits) so retry accumulation can never trip a
+/// wall-clock limit — truncation then has exactly one cause
+/// (quarantine), which the assertions below rely on.
+fn chaos_cfg(rng: &mut Rng) -> Config {
+    let app = if rng.uniform() < 0.5 { App::Eigen100 } else { App::Gp };
+    let qd = [1usize, 2, 3][rng.below(3) as usize];
+    let mut cfg = Config::paper(app, qd, rng.next_u64());
+    cfg.n_evals = 6 + rng.below(10);
+    cfg.cluster = ClusterSpec::small(4 + rng.below(4) as usize);
+    cfg.overheads.bg_interarrival = Micros::MAX;
+    cfg
+}
+
+fn chaos_sub(cfg: &Config) -> FixedDepth {
+    FixedDepth::new(cfg.app, cfg.n_evals, cfg.queue_depth, cfg.seed)
+}
+
+/// Everything failure-observable about a run: (retries, quarantined,
+/// sorted quarantined tags).
+fn fail_sig(r: &CampaignResult) -> (u64, u64, Vec<u64>) {
+    let mut q: Vec<u64> = r
+        .experiment
+        .records
+        .iter()
+        .filter(|x| x.truncated)
+        .map(|x| x.tag)
+        .collect();
+    q.sort_unstable();
+    (r.metrics.retries, r.metrics.quarantined, q)
+}
+
+fn assert_chaos_invariants(r: &CampaignResult, cfg: &Config, plan: &FaultPlan) {
+    let label = &r.metrics.scheduler;
+    assert_eq!(r.experiment.records.len() as u64, cfg.n_evals,
+               "{label}: lost records under faults");
+    assert_eq!(r.metrics.completed, cfg.n_evals,
+               "{label}: wrong completion count under faults");
+    let mut tags: Vec<u64> =
+        r.experiment.records.iter().map(|x| x.tag).collect();
+    tags.sort_unstable();
+    tags.dedup();
+    assert_eq!(tags.len() as u64, cfg.n_evals,
+               "{label}: duplicated/lost tags under faults");
+    // Truncation has exactly one cause here: budget exhaustion, which
+    // the plan predicts per tag independently of the core.
+    for rec in &r.experiment.records {
+        assert_eq!(rec.truncated, plan.quarantines(rec.tag),
+                   "{label}: tag {} truncated={} but plan.quarantines={}",
+                   rec.tag, rec.truncated, plan.quarantines(rec.tag));
+    }
+    let q = r.experiment.records.iter().filter(|x| x.truncated).count();
+    assert_eq!(r.metrics.quarantined, q as u64,
+               "{label}: quarantine counter disagrees with records");
+}
+
+#[test]
+fn prop_chaos_identical_failure_traces_across_all_four_cores() {
+    prop::check("chaos-cross-core", 6, |rng| {
+        let cfg = chaos_cfg(rng);
+        let spec = FaultSpec {
+            seed: rng.next_u64(),
+            task_fail_p: 0.15 + rng.uniform() * 0.25,
+            max_attempts: 2 + rng.below(3) as u32, // 2..=4
+            backoff_base: 500 * MS,
+            backoff_cap: 2 * SEC,
+            ..FaultSpec::default()
+        };
+        let plan = FaultPlan::new(spec.clone());
+        let mut ccfg = cfg.campaign();
+        ccfg.faults = Some(spec);
+        let results = [
+            run_slurm(&ccfg, &mut chaos_sub(&cfg), SlurmMode::Native),
+            run_hq(&ccfg, &mut chaos_sub(&cfg)),
+            run_worksteal(&ccfg, &mut chaos_sub(&cfg)),
+            run_edf(&ccfg, &mut chaos_sub(&cfg)),
+        ];
+        for r in &results {
+            assert_chaos_invariants(r, &cfg, &plan);
+            assert_eq!(r.metrics.worker_crashes, 0);
+        }
+        // The headline: one plan, one seed, one failure trace — on
+        // every scheduler.  (No crashes here, so even the retry totals
+        // must agree; crash-driven requeues are core-dependent.)
+        let sig0 = fail_sig(&results[0]);
+        for r in &results[1..] {
+            assert_eq!(fail_sig(r), sig0,
+                       "{}: failure trace diverged from {}",
+                       r.metrics.scheduler, results[0].metrics.scheduler);
+        }
+    });
+}
+
+#[test]
+fn prop_chaos_crashes_never_lose_tasks_and_quarantine_is_crash_immune() {
+    prop::check("chaos-crash", 5, |rng| {
+        let cfg = chaos_cfg(rng);
+        let spec = FaultSpec {
+            seed: rng.next_u64(),
+            crash_every: (20 + rng.below(40)) * SEC,
+            task_fail_p: 0.1,
+            max_attempts: 3,
+            backoff_base: 500 * MS,
+            backoff_cap: 2 * SEC,
+            ..FaultSpec::default()
+        };
+        let plan = FaultPlan::new(spec.clone());
+        let mut ccfg = cfg.campaign();
+        ccfg.faults = Some(spec);
+        let results = [
+            run_slurm(&ccfg, &mut chaos_sub(&cfg), SlurmMode::Native),
+            run_hq(&ccfg, &mut chaos_sub(&cfg)),
+            run_worksteal(&ccfg, &mut chaos_sub(&cfg)),
+            run_edf(&ccfg, &mut chaos_sub(&cfg)),
+        ];
+        // Crash interactions may reorder work and force extra (free)
+        // requeues, but the failure *fate* is keyed on accepted failures
+        // — so the quarantine set is identical across cores even though
+        // each core loses different workers at different moments.
+        for r in &results {
+            assert_chaos_invariants(r, &cfg, &plan);
+        }
+    });
+}
+
+#[test]
+fn prop_chaos_runs_are_seed_deterministic_and_zero_plan_is_noop() {
+    prop::check("chaos-determinism", 4, |rng| {
+        let cfg = chaos_cfg(rng);
+        // A plan that injects nothing must be byte-equivalent to no
+        // plan at all: same records, same order, same timings.
+        let clean = cfg.campaign();
+        let mut zero = cfg.campaign();
+        zero.faults = Some(FaultSpec {
+            seed: rng.next_u64(),
+            ..FaultSpec::default()
+        });
+        let a = run_hq(&clean, &mut chaos_sub(&cfg));
+        let b = run_hq(&zero, &mut chaos_sub(&cfg));
+        assert_eq!(a.experiment.records, b.experiment.records,
+                   "a zero fault plan changed the schedule");
+        // And a genuinely chaotic run replays bit-for-bit on its seed.
+        let mut chaos = cfg.campaign();
+        chaos.faults = Some(FaultSpec {
+            seed: rng.next_u64(),
+            crash_every: 30 * SEC,
+            task_fail_p: 0.2,
+            max_attempts: 3,
+            backoff_base: 500 * MS,
+            backoff_cap: 2 * SEC,
+            ..FaultSpec::default()
+        });
+        let c = run_worksteal(&chaos, &mut chaos_sub(&cfg));
+        let d = run_worksteal(&chaos, &mut chaos_sub(&cfg));
+        assert_eq!(c.experiment.records, d.experiment.records,
+                   "chaotic run not seed-deterministic");
+        assert_eq!(fail_sig(&c), fail_sig(&d));
+        assert_eq!(c.metrics.worker_crashes, d.metrics.worker_crashes);
     });
 }
 
