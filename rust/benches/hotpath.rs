@@ -7,9 +7,9 @@
 //!   * end-to-end balancer throughput (queue -> registry -> forward)
 //!   * multi-model balancer throughput: N models through one front
 //!     door, fixed forwarder pool, zero per-evaluation thread spawns —
-//!     run once per live scheduler core (fcfs | worksteal | edf), so
-//!     the serving plane's scheduler ablation is measured under real
-//!     HTTP load
+//!     run once per live scheduler core (fcfs | worksteal | edf |
+//!     gang), so the serving plane's scheduler ablation is measured
+//!     under real HTTP load
 //!
 //! The PJRT sections need `make artifacts` and self-skip without them;
 //! the multi-model sections run anywhere (synthetic models over the
@@ -64,7 +64,7 @@ fn main() {
     // The serving-plane scheduler ablation: the same workload through
     // every live core, one BENCH_hotpath.json row per scheduler.
     let rows: Vec<Value> = [LivePolicy::Fcfs, LivePolicy::WorkSteal,
-                            LivePolicy::Edf]
+                            LivePolicy::Edf, LivePolicy::Gang]
         .into_iter()
         .map(multi_model_section)
         .collect();

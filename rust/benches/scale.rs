@@ -1,8 +1,9 @@
-//! Million-task scale benchmark for all four scheduler cores.
+//! Million-task scale benchmark for all five scheduler cores.
 //!
 //! Drives the indexed `SlurmCore`/`HqCore` (and their seed-semantics
-//! reference twins) plus the partitioned `WorkStealCore` and the
-//! deadline-EDF `EdfCore` through synthetic task streams at several
+//! reference twins) plus the partitioned `WorkStealCore`, the
+//! deadline-EDF `EdfCore` and the moldable `GangCore` through
+//! synthetic task streams at several
 //! queue depths, printing tasks/s and peak resident map sizes and
 //! emitting `BENCH_scale.json` so the perf trajectory is tracked across
 //! PRs.
@@ -38,7 +39,7 @@ use uqsched::workload::App;
 use uqsched::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer,
                       ReferenceHqCore, TaskCore, TaskSpec};
 use uqsched::json::Value;
-use uqsched::sched::{EdfCore, FaultSpec, WorkStealCore};
+use uqsched::sched::{EdfCore, FaultSpec, GangCore, WorkStealCore};
 use uqsched::slurmlite::core::{Action, BatchCore, SlurmCore, Timer,
                                USER_EXPERIMENT};
 use uqsched::slurmlite::ReferenceSlurmCore;
@@ -309,6 +310,24 @@ impl HqDriver for EdfCore {
     }
 }
 
+impl HqDriver for GangCore {
+    fn drv_submit(&mut self, t: Micros, tag: u64, out: &mut Vec<HqAction>) {
+        self.submit_task_into(t, hq_spec(tag), out);
+    }
+    fn drv_alloc_up(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        self.on_alloc_up_into(t, HQ_ALLOC_LIFE, 16, out);
+    }
+    fn drv_timer(&mut self, t: Micros, tm: HqTimer, out: &mut Vec<HqAction>) {
+        self.on_timer_into(t, tm, out);
+    }
+    fn drv_task_done(&mut self, t: Micros, id: u64, out: &mut Vec<HqAction>) {
+        self.on_task_done_into(t, id, out);
+    }
+    fn drv_resident(&self) -> usize {
+        self.resident_tasks()
+    }
+}
+
 impl HqDriver for ReferenceHqCore {
     fn drv_submit(&mut self, t: Micros, tag: u64, out: &mut Vec<HqAction>) {
         let (_, acts) = self.submit_task(t, hq_spec(tag));
@@ -364,7 +383,8 @@ fn run_hq<C: HqDriver>(
                 HqAction::SubmitAllocation { .. } => {
                     des.schedule(t + HQ_ALLOC_DELAY, HEv::AllocUp)
                 }
-                HqAction::StartTask { task, .. } => {
+                HqAction::StartTask { task, .. }
+                | HqAction::StartGang { task, .. } => {
                     des.schedule(t + HQ_DUR, HEv::TaskDone(task))
                 }
                 HqAction::Timer(tt, tm) => des.schedule(tt, HEv::Timer(tm)),
@@ -373,6 +393,8 @@ fn run_hq<C: HqDriver>(
                     des.schedule(t, HEv::Submit);
                 }
                 HqAction::KillTask { .. } => {}
+                // No faults in this driver: nothing ever requeues.
+                HqAction::Requeued { .. } => {}
             }
         }
         peak_resident = peak_resident.max(core.drv_resident());
@@ -478,9 +500,20 @@ fn campaign_edf(n: u64) -> Row {
     campaign_row("edf-bursty", n, res, t0.elapsed().as_secs_f64())
 }
 
+/// And through the moldable-gang stack: same arrival process, same
+/// 256-worker pool, fifth scheduler (each task reserves 1..=2 workers
+/// atomically, strict FCFS over the backlog).
+fn campaign_gang(n: u64) -> Row {
+    let cfg = campaign_cfg();
+    let mut sub = PoissonBurst::new(App::Eigen100, n, 20 * MS, (1, 64), 42);
+    let t0 = Instant::now();
+    let res = campaign::run_gang(&cfg, &mut sub);
+    campaign_row("gang-bursty", n, res, t0.elapsed().as_secs_f64())
+}
+
 /// Flaky-cluster campaign: the same bursty stream under the seeded
 /// `FaultSpec::flaky` plan (node loss every ~5 virtual minutes, biased
-/// transient failures, 5% stragglers at 8x) on each of the four cores.
+/// transient failures, 5% stragglers at 8x) on each of the five cores.
 /// Each core gets one row plus a `<core>_flaky_makespan_inflation`
 /// summary entry — the virtual-time cost of riding out the same seeded
 /// failure trace, relative to its own clean run.
@@ -500,6 +533,7 @@ fn campaign_flaky_rows(
             "slurm" => campaign::run_slurm(&cfg, &mut sub, SlurmMode::Native),
             "hq" => campaign::run_hq(&cfg, &mut sub),
             "worksteal" => campaign::run_worksteal(&cfg, &mut sub),
+            "gang" => campaign::run_gang(&cfg, &mut sub),
             _ => campaign::run_edf(&cfg, &mut sub),
         };
         (res, t0.elapsed().as_secs_f64())
@@ -510,6 +544,7 @@ fn campaign_flaky_rows(
         ("worksteal", "flaky-worksteal",
          "worksteal_flaky_makespan_inflation"),
         ("edf", "flaky-edf", "edf_flaky_makespan_inflation"),
+        ("gang", "flaky-gang", "gang_flaky_makespan_inflation"),
     ] {
         let (clean, _) = run(false, which);
         let (flaky, wall) = run(true, which);
@@ -590,6 +625,16 @@ fn edf_indexed(n: u64, depth: usize) -> Row {
     run_hq(&mut EdfCore::new(hq_cfg()), "edf", "indexed", n, depth)
 }
 
+/// The fifth scheduler through the same driver: strict-FCFS moldable
+/// gangs (each task atomically reserves a slot on 1..=2 workers or
+/// holds the queue head) at the same workload and worker geometry, so
+/// the cost of the atomic multi-worker reservation is directly
+/// comparable to the single-slot dispatchers.
+fn gang_indexed(n: u64, depth: usize) -> Row {
+    run_hq(&mut GangCore::new(hq_cfg()).with_gang(1, 2), "gang", "indexed",
+           n, depth)
+}
+
 fn main() {
     let max_tasks = env_u64("SCALE_TASKS", 1_000_000);
     let naive_max = env_u64("SCALE_NAIVE_TASKS", 100_000);
@@ -626,7 +671,7 @@ fn main() {
     // several queue depths (0 = everything submitted up front).  The
     // worksteal and edf rows run the third and fourth schedulers
     // through the same driver and workload as the hq rows.
-    println!("-- scale-out (indexed cores, all four schedulers) --");
+    println!("-- scale-out (indexed cores, all five schedulers) --");
     let mut sizes: Vec<u64> = [250_000u64, 500_000, 1_000_000]
         .into_iter()
         .filter(|&s| s <= max_tasks)
@@ -642,6 +687,7 @@ fn main() {
                 hq_indexed(n, depth),
                 worksteal_indexed(n, depth),
                 edf_indexed(n, depth),
+                gang_indexed(n, depth),
             ] {
                 r.print();
                 rows.push(r);
@@ -653,12 +699,13 @@ fn main() {
     let campaign_tasks = env_u64("SCALE_CAMPAIGN_TASKS", 100_000);
     if campaign_tasks > 0 {
         println!("-- campaign mode (bursty + adaptive on hq, bursty on \
-                  worksteal + edf) --");
+                  worksteal + edf + gang) --");
         for r in [
             campaign_bursty(campaign_tasks),
             campaign_adaptive(campaign_tasks),
             campaign_worksteal(campaign_tasks),
             campaign_edf(campaign_tasks),
+            campaign_gang(campaign_tasks),
         ] {
             r.print();
             rows.push(r);
@@ -671,7 +718,7 @@ fn main() {
     // Flaky-cluster mode: the bursty campaign under the seeded fault
     // plan, one row per core, inflation vs each core's clean run.
     if campaign_tasks > 0 {
-        println!("-- flaky-cluster campaign (all four cores, seeded \
+        println!("-- flaky-cluster campaign (all five cores, seeded \
                   fault plan) --");
         campaign_flaky_rows(campaign_tasks, &mut rows, &mut summary);
     }
@@ -735,6 +782,17 @@ fn main() {
             edf.tasks
         );
         summary.push(("edf_over_hq_depth8192", Value::num(ratio)));
+    }
+    let gang_row = rows.iter().find(|r| {
+        r.core == "gang" && r.imp == "indexed" && r.depth == 8_192
+    });
+    if let (Some(hq), Some(gang)) = (hq_row, gang_row) {
+        let ratio = gang.tasks_per_s / hq.tasks_per_s.max(1e-9);
+        println!(
+            "gang vs hq throughput at depth 8192 ({} tasks): {ratio:.2}x",
+            gang.tasks
+        );
+        summary.push(("gang_over_hq_depth8192", Value::num(ratio)));
     }
 
     let out_path = std::env::var("SCALE_OUT")

@@ -19,6 +19,9 @@
 //! * [`run_edf`] — `MetaStack<EdfCore>`: the same UM-Bridge stack over
 //!   the deadline-EDF dispatcher (earliest deadline first, laxity
 //!   tie-break).
+//! * [`run_gang`] — `MetaStack<GangCore>`: the same UM-Bridge stack over
+//!   the moldable gang dispatcher (each task atomically reserves a slot
+//!   on 1..=2 workers, or holds the frontier until it can).
 //!
 //! With the [`FixedDepth`](super::submitter::FixedDepth) policy the
 //! SLURM and HQ paths reproduce the PR 1 experiment drivers
@@ -34,8 +37,9 @@
 use crate::cluster::{ClusterSpec, OverheadModel};
 use crate::hqlite::{AutoAllocConfig, HqCore};
 use crate::metrics::Experiment;
-use crate::sched::{kernel, EdfCore, EdfSched, FaultPlan, FaultSpec, HqSched,
-                   MetaStack, SlurmSched, WorkStealCore, WorkStealSched};
+use crate::sched::{kernel, EdfCore, EdfSched, FaultPlan, FaultSpec, GangCore,
+                   GangSched, HqSched, MetaStack, SlurmSched, WorkStealCore,
+                   WorkStealSched};
 use crate::workload::{scenario, App};
 
 use super::metrics::CampaignMetrics;
@@ -168,6 +172,22 @@ pub fn run_edf(cfg: &CampaignConfig, sub: &mut dyn Submitter)
     kernel::run_with_faults(&mut core, sub, plan.as_ref())
 }
 
+/// Run a campaign against the UM-Bridge + gang stack (same allocation
+/// mechanics as [`run_hq`], dispatch strictly FCFS with each task run as
+/// a moldable gang: it atomically reserves one slot on every eligible
+/// worker — at least 1, at most 2 — or holds the queue head until
+/// enough workers are free).
+pub fn run_gang(cfg: &CampaignConfig, sub: &mut dyn Submitter)
+                -> CampaignResult {
+    let mut core: GangSched = MetaStack::new(
+        cfg,
+        GangCore::new(cfg.autoalloc()).with_gang(1, 2),
+        "gang",
+    );
+    let plan = cfg.fault_plan();
+    kernel::run_with_faults(&mut core, sub, plan.as_ref())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,6 +235,13 @@ mod tests {
         assert_eq!(r4.metrics.completed, 12);
         assert!(r4.metrics.peak_in_flight as u64 <= 2 + cfg.registration_jobs);
         assert_eq!(r4.metrics.scheduler, "edf");
+
+        let mut s5 = FixedDepth::new(App::Eigen100, 12, 2, cfg.seed);
+        let r5 = run_gang(&cfg, &mut s5);
+        assert_eq!(r5.experiment.records.len(), 12);
+        assert_eq!(r5.metrics.completed, 12);
+        assert!(r5.metrics.peak_in_flight as u64 <= 2 + cfg.registration_jobs);
+        assert_eq!(r5.metrics.scheduler, "gang");
     }
 
     #[test]

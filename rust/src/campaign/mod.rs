@@ -14,12 +14,13 @@
 //!   (runtime-heteroskedastic task families), and [`AdaptiveBayes`]
 //!   (Bayesian-inversion-style feedback batches whose size depends on
 //!   completed results).
-//! * [`run_slurm`] / [`run_hq`] / [`run_worksteal`] / [`run_edf`] —
-//!   thin config adapters selecting a
+//! * [`run_slurm`] / [`run_hq`] / [`run_worksteal`] / [`run_edf`] /
+//!   [`run_gang`] — thin config adapters selecting a
 //!   [`SchedulerCore`](crate::sched::SchedulerCore) implementation
 //!   (SLURM native/UM-Bridge, UM-Bridge + HQ, UM-Bridge + work
-//!   stealing, UM-Bridge + deadline-EDF) and handing it to the one
-//!   generic event kernel in [`crate::sched::kernel`].
+//!   stealing, UM-Bridge + deadline-EDF, UM-Bridge + moldable gangs)
+//!   and handing it to the one generic event kernel in
+//!   [`crate::sched::kernel`].
 //!   `experiments::run_naive_slurm`, `run_umbridge_slurm`,
 //!   `run_umbridge_hq`, `run_umbridge_worksteal` and
 //!   `run_umbridge_edf` are thin wrappers over these.
@@ -45,8 +46,8 @@ pub mod driver;
 pub mod metrics;
 pub mod submitter;
 
-pub use driver::{run_edf, run_hq, run_slurm, run_worksteal, CampaignConfig,
-                 CampaignResult, SlurmMode};
+pub use driver::{run_edf, run_gang, run_hq, run_slurm, run_worksteal,
+                 CampaignConfig, CampaignResult, SlurmMode};
 pub use metrics::{jain_fairness, CampaignMetrics, UserStats};
 pub use submitter::{
     AdaptiveBayes, Family, FixedDepth, HeteroFamilies, PoissonBurst, Sink,

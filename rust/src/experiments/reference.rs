@@ -265,7 +265,8 @@ pub fn run_umbridge_hq(cfg: &Config) -> Experiment {
                         );
                         alloc_jobs.insert(id, alloc_tag);
                     }
-                    HqAction::StartTask { task, .. } => {
+                    HqAction::StartTask { task, .. }
+                    | HqAction::StartGang { task, .. } => {
                         let dur = task_durations[&task];
                         des.schedule(t + dur, Ev::TaskDone(task));
                     }
@@ -289,6 +290,10 @@ pub fn run_umbridge_hq(cfg: &Config) -> Experiment {
                         }
                     }
                     HqAction::KillTask { .. } => {}
+                    // This reference loop injects no faults, so nothing
+                    // is ever requeued; the arm keeps the frozen module
+                    // compiling as the action vocabulary grows.
+                    HqAction::Requeued { .. } => {}
                 }
             }
             if !progressed {

@@ -27,13 +27,22 @@
 //! * Every transition appends into a caller-supplied action buffer (the
 //!   [`TaskCore`] trait's `*_into` methods); the allocating wrappers are
 //!   provided (default) trait methods for low-rate callers.
+//!
+//! The task/worker structs and the full lifecycle (timers, completion
+//! records, autoalloc, Cooling/Retry recovery) live in the shared
+//! [`TaskTable`](crate::sched::table::TaskTable); [`HqCore`] keeps only
+//! its ready structure — the FCFS queue with the failure frontier — and
+//! its lowest-id-first placement policy.  The same table carries
+//! [`WorkStealCore`](crate::sched::WorkStealCore),
+//! [`EdfCore`](crate::sched::EdfCore) and the gang scheduler
+//! [`GangCore`](crate::sched::GangCore).
 
 use std::cmp::Reverse;
-use std::collections::{BTreeSet, BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeSet, BinaryHeap, VecDeque};
 
 use crate::cluster::JobRequest;
 use crate::clock::Micros;
-use crate::metrics::JobRecord;
+use crate::sched::table::{FailVerdict, TaskTable, TimerVerdict};
 
 pub type TaskId = u64;
 pub type WorkerId = u64;
@@ -65,34 +74,6 @@ pub struct AutoAllocConfig {
     pub dispatch_latency: Micros,
 }
 
-#[derive(Clone, Copy, Debug, PartialEq)]
-enum TaskState {
-    Pending,
-    Dispatched,
-    Running,
-    /// Failed transiently; off every worker, waiting out its retry
-    /// backoff (re-enters the queue when the `Retry` timer fires).
-    Cooling,
-}
-
-#[derive(Clone, Debug)]
-struct Task {
-    spec: TaskSpec,
-    state: TaskState,
-    submit_t: Micros,
-    start_t: Micros,
-    worker: WorkerId,
-}
-
-#[derive(Clone, Debug)]
-struct Worker {
-    cores_free: u32,
-    /// Virtual time at which the surrounding allocation expires.
-    expires_t: Micros,
-    /// Tasks currently dispatched to / running on this worker.
-    running: BTreeSet<TaskId>,
-}
-
 /// Actions the driver must interpret.
 #[derive(Clone, Debug)]
 pub enum HqAction {
@@ -102,10 +83,15 @@ pub enum HqAction {
     /// Begin task execution on a worker: the driver runs the workload and
     /// calls [`TaskCore::on_task_done`] (sim: after the sampled duration).
     StartTask { task: TaskId, worker: WorkerId },
+    /// Begin a moldable gang task on its full worker set (ascending ids;
+    /// the first member is the lead).  Emitted instead of `StartTask`
+    /// whenever the reservation spans more than one worker — the
+    /// single-worker cores never emit it.
+    StartGang { task: TaskId, workers: Vec<WorkerId> },
     /// Kill the task (exceeded its time limit).
     KillTask { task: TaskId },
     /// Terminal per-task record.
-    TaskCompleted { task: TaskId, record: JobRecord },
+    TaskCompleted { task: TaskId, record: crate::metrics::JobRecord },
     /// The task left its worker without finishing (transient failure or
     /// worker loss) and will run again later — the driver must
     /// invalidate any completion it scheduled for the aborted attempt.
@@ -127,9 +113,11 @@ pub enum HqTimer {
 /// The HyperQueue-style task-scheduler event surface: the pluggable seam
 /// between a meta-scheduler implementation and its driver.
 ///
-/// [`HqCore`] (FCFS + failure frontier) and
+/// [`HqCore`] (FCFS + failure frontier),
 /// [`WorkStealCore`](crate::sched::WorkStealCore) (partitioned per-worker
-/// deques with stealing) both implement it, so the campaign stack
+/// deques with stealing), [`EdfCore`](crate::sched::EdfCore) (deadline
+/// heap) and [`GangCore`](crate::sched::GangCore) (moldable multi-worker
+/// gangs) all implement it, so the campaign stack
 /// ([`crate::sched::MetaStack`]) and the property/bench harnesses run
 /// generically over any implementation.
 ///
@@ -275,8 +263,8 @@ pub trait TaskCore {
 
 /// Pop every worker due at or before `t` off an expiry min-heap,
 /// skipping lazily-deleted entries (`alive` returns false for workers
-/// already gone).  Shared by the HQ and work-stealing cores — both keep
-/// `(expires_t, worker)` min-heaps with lazy deletion.
+/// already gone).  Shared by the [`TaskTable`] and the reference core —
+/// both keep `(expires_t, worker)` min-heaps with lazy deletion.
 pub(crate) fn drain_due_workers(
     expiry: &mut BinaryHeap<Reverse<(Micros, WorkerId)>>,
     t: Micros,
@@ -295,63 +283,37 @@ pub(crate) fn drain_due_workers(
     expired
 }
 
-/// The HQ server.
+/// The HQ server: FCFS queue + failure frontier over the shared
+/// [`TaskTable`].
 pub struct HqCore {
-    cfg: AutoAllocConfig,
-    /// In-flight tasks only; finished tasks are evicted.
-    tasks: HashMap<TaskId, Task>,
+    table: TaskTable,
     /// FCFS dispatch queue.  May lazily contain ids of tasks that
-    /// finished while requeued (`stale_in_queue` counts them); they are
-    /// dropped when next encountered.
+    /// finished while requeued; they are dropped when next encountered.
     queue: VecDeque<TaskId>,
-    stale_in_queue: usize,
-    /// Live workers only; a lost/expired worker leaves the map.
-    workers: HashMap<WorkerId, Worker>,
     /// Live workers with at least one free core, ordered by id (HQ picks
     /// the lowest-id qualifying worker).
     avail: BTreeSet<WorkerId>,
-    /// (expires_t, worker) min-heap; entries for already-lost workers are
-    /// skipped lazily.
-    expiry: BinaryHeap<Reverse<(Micros, WorkerId)>>,
     /// Conservative minimums over every queued request (monotone).
     min_cores_floor: u32,
     min_treq_floor: Micros,
-    retired: u64,
-    next_task: TaskId,
-    next_worker: WorkerId,
-    next_alloc_tag: u64,
-    /// Allocations submitted to the native scheduler, not yet up.
-    allocs_in_queue: u32,
     workers_started: u32,
-    /// Stats: dispatches performed.
-    pub dispatches: u64,
 }
 
 impl HqCore {
     pub fn new(cfg: AutoAllocConfig) -> Self {
         HqCore {
-            cfg,
-            tasks: HashMap::new(),
+            table: TaskTable::new(cfg),
             queue: VecDeque::new(),
-            stale_in_queue: 0,
-            workers: HashMap::new(),
             avail: BTreeSet::new(),
-            expiry: BinaryHeap::new(),
             min_cores_floor: u32::MAX,
             min_treq_floor: Micros::MAX,
-            retired: 0,
-            next_task: 1,
-            next_worker: 1,
-            next_alloc_tag: 1,
-            allocs_in_queue: 0,
             workers_started: 0,
-            dispatches: 0,
         }
     }
 
-    /// Pending tasks excluding lazily-dropped stale queue entries.
-    fn queued(&self) -> usize {
-        self.queue.len().saturating_sub(self.stale_in_queue)
+    /// Stats: dispatches performed.
+    pub fn dispatches(&self) -> u64 {
+        self.table.dispatches()
     }
 }
 
@@ -362,22 +324,11 @@ impl TaskCore for HqCore {
         spec: TaskSpec,
         out: &mut Vec<HqAction>,
     ) -> TaskId {
-        let id = self.next_task;
-        self.next_task += 1;
         self.min_cores_floor = self.min_cores_floor.min(spec.cores);
         self.min_treq_floor = self.min_treq_floor.min(spec.time_request);
-        self.tasks.insert(
-            id,
-            Task {
-                spec,
-                state: TaskState::Pending,
-                submit_t: t,
-                start_t: 0,
-                worker: 0,
-            },
-        );
+        let id = self.table.admit(t, spec);
         self.queue.push_back(id);
-        self.autoalloc_into(out);
+        self.table.autoalloc_into(out);
         self.dispatch_into(t, out);
         id
     }
@@ -391,25 +342,10 @@ impl TaskCore for HqCore {
         cores_per_worker: u32,
         out: &mut Vec<HqAction>,
     ) {
-        self.allocs_in_queue = self.allocs_in_queue.saturating_sub(1);
-        for _ in 0..self.cfg.workers_per_alloc {
-            if self.workers.len() as u32 >= self.cfg.max_worker_count {
-                break;
-            }
-            let wid = self.next_worker;
-            self.next_worker += 1;
-            self.workers.insert(
-                wid,
-                Worker {
-                    cores_free: cores_per_worker,
-                    expires_t: t + time_limit,
-                    running: BTreeSet::new(),
-                },
-            );
+        for wid in self.table.admit_workers(t, time_limit, cores_per_worker) {
             if cores_per_worker > 0 {
                 self.avail.insert(wid);
             }
-            self.expiry.push(Reverse((t + time_limit, wid)));
             self.workers_started += 1;
         }
         self.dispatch_into(t, out);
@@ -423,29 +359,19 @@ impl TaskCore for HqCore {
         wid: WorkerId,
         out: &mut Vec<HqAction>,
     ) {
-        if let Some(worker) = self.workers.remove(&wid) {
-            self.avail.remove(&wid);
-            // Requeue in ascending task-id order (deterministic; the
-            // worker's set holds exactly its Dispatched/Running tasks).
-            for id in worker.running {
-                if let Some(task) = self.tasks.get_mut(&id) {
-                    if matches!(
-                        task.state,
-                        TaskState::Running | TaskState::Dispatched
-                    ) {
-                        task.state = TaskState::Pending;
-                        self.queue.push_back(id);
-                        out.push(HqAction::Requeued { task: id });
-                    }
-                }
-            }
+        self.avail.remove(&wid);
+        for id in self.table.worker_lost(wid, out) {
+            self.queue.push_back(id);
         }
-        self.autoalloc_into(out);
+        self.table.autoalloc_into(out);
         self.dispatch_into(t, out);
     }
 
     fn on_task_done_into(&mut self, t: Micros, id: TaskId, out: &mut Vec<HqAction>) {
-        self.complete(t, id, false, out)
+        if self.table.complete(t, id, false, out) {
+            self.reindex_freed();
+            self.dispatch_into(t, out);
+        }
     }
 
     fn on_task_failed_into(
@@ -455,76 +381,33 @@ impl TaskCore for HqCore {
         retry_in: Option<Micros>,
         out: &mut Vec<HqAction>,
     ) {
-        let Some(task) = self.tasks.get_mut(&id) else { return };
-        if !matches!(task.state, TaskState::Dispatched | TaskState::Running) {
-            return;
-        }
-        match retry_in {
-            // Quarantine: kill and report a truncated record (complete
-            // frees the worker's cores).
-            None => {
-                out.push(HqAction::KillTask { task: id });
-                self.complete(t, id, true, out);
-            }
-            // Transient: free the worker now, cool the task until the
-            // backoff elapses.
-            Some(backoff) => {
-                let wid = task.worker;
-                let cores = task.spec.cores;
-                task.state = TaskState::Cooling;
-                if let Some(w) = self.workers.get_mut(&wid) {
-                    if w.running.remove(&id) && cores > 0 {
-                        w.cores_free += cores;
-                        self.avail.insert(wid);
-                    }
-                }
-                out.push(HqAction::Requeued { task: id });
-                out.push(HqAction::Timer(t + backoff, HqTimer::Retry(id)));
+        match self.table.fail(t, id, retry_in, out) {
+            FailVerdict::Ignored => {}
+            FailVerdict::Killed | FailVerdict::Cooling => {
+                self.reindex_freed();
                 self.dispatch_into(t, out);
             }
         }
     }
 
     fn task_live(&self, id: TaskId) -> bool {
-        self.tasks.contains_key(&id)
+        self.table.task_live(id)
     }
 
     fn live_worker_ids_into(&self, out: &mut Vec<u64>) {
-        out.extend(self.workers.keys().copied());
+        self.table.live_worker_ids_into(out);
     }
 
     fn on_timer_into(&mut self, t: Micros, timer: HqTimer, out: &mut Vec<HqAction>) {
-        match timer {
-            HqTimer::Dispatched(id) => {
-                let Some(task) = self.tasks.get_mut(&id) else { return };
-                if task.state != TaskState::Dispatched {
-                    return;
-                }
-                task.state = TaskState::Running;
-                task.start_t = t;
-                let worker = task.worker;
-                let limit = task.spec.time_limit;
-                out.push(HqAction::StartTask { task: id, worker });
-                out.push(HqAction::Timer(t + limit, HqTimer::Limit(id)));
+        match self.table.timer(t, timer, out) {
+            TimerVerdict::Ignored | TimerVerdict::Started => {}
+            TimerVerdict::Killed => {
+                self.reindex_freed();
+                self.dispatch_into(t, out);
             }
-            HqTimer::Limit(id) => {
-                let running = matches!(
-                    self.tasks.get(&id).map(|x| x.state),
-                    Some(TaskState::Running)
-                );
-                if running {
-                    out.push(HqAction::KillTask { task: id });
-                    self.complete(t, id, true, out);
-                }
-            }
-            HqTimer::Retry(id) => {
-                let Some(task) = self.tasks.get_mut(&id) else { return };
-                if task.state != TaskState::Cooling {
-                    return;
-                }
-                task.state = TaskState::Pending;
+            TimerVerdict::Requeue(id) => {
                 self.queue.push_back(id);
-                self.autoalloc_into(out);
+                self.table.autoalloc_into(out);
                 self.dispatch_into(t, out);
             }
         }
@@ -533,86 +416,41 @@ impl TaskCore for HqCore {
     /// Cost: O(expired log workers) — due entries pop off the expiry
     /// heap instead of scanning everyone.
     fn expire_workers_into(&mut self, t: Micros, out: &mut Vec<HqAction>) {
-        let expired = drain_due_workers(&mut self.expiry, t, |wid| {
-            self.workers.contains_key(&wid)
-        });
-        for wid in expired {
+        for wid in self.table.expire_due(t) {
             self.on_worker_lost_into(t, wid, out);
         }
     }
 
     fn pending_tasks(&self) -> usize {
-        self.queued()
+        self.table.pending_tasks()
     }
 
     fn live_workers(&self) -> usize {
-        self.workers.len()
+        self.table.live_workers()
     }
 
     fn allocs_waiting(&self) -> u32 {
-        self.allocs_in_queue
+        self.table.allocs_waiting()
     }
 
     fn resident_tasks(&self) -> usize {
-        self.tasks.len()
+        self.table.resident_tasks()
     }
 
     fn retired_count(&self) -> u64 {
-        self.retired
+        self.table.retired_count()
     }
 }
 
-// Private transition helpers (shared by the trait impl above).
+// Private placement helpers (shared by the trait impl above).
 impl HqCore {
-    fn complete(&mut self, t: Micros, id: TaskId, truncated: bool, out: &mut Vec<HqAction>) {
-        // Finished tasks are evicted, so a stale duplicate completion
-        // (e.g. the driver's original done-timer firing after a requeue)
-        // simply misses the map, like the seed's Done-state check.
-        let Some(task) = self.tasks.remove(&id) else { return };
-        if task.state == TaskState::Pending {
-            // Completed while requeued: its queue entry is now stale.
-            self.stale_in_queue += 1;
-        }
-        self.retired += 1;
-        let record = JobRecord {
-            tag: task.spec.tag,
-            submit: task.submit_t,
-            start: task.start_t,
-            end: t,
-            // HQ CPU time: from task start on the worker (includes the
-            // model-server init the driver folds into the duration).
-            cpu: t.saturating_sub(task.start_t),
-            truncated,
-        };
-        let wid = task.worker;
-        if let Some(w) = self.workers.get_mut(&wid) {
-            if w.running.remove(&id) {
-                w.cores_free += task.spec.cores;
-                if w.cores_free > 0 {
-                    self.avail.insert(wid);
-                }
+    /// Workers whose cores the table just released re-enter `avail`
+    /// (a worker already present is a set no-op).
+    fn reindex_freed(&mut self) {
+        for &wid in self.table.freed() {
+            if self.table.worker(wid).map_or(false, |w| w.cores_free > 0) {
+                self.avail.insert(wid);
             }
-        }
-        out.push(HqAction::TaskCompleted { task: id, record });
-        self.dispatch_into(t, out);
-    }
-
-    /// Submit allocations while there are pending tasks, the backlog
-    /// allows it, and the worker cap is not reached.
-    fn autoalloc_into(&mut self, out: &mut Vec<HqAction>) {
-        while self.queued() > 0
-            && self.allocs_in_queue < self.cfg.backlog
-            && self.workers.len() as u32
-                + self.allocs_in_queue * self.cfg.workers_per_alloc
-                < self.cfg.max_worker_count
-        {
-            self.allocs_in_queue += 1;
-            let tag = self.next_alloc_tag;
-            self.next_alloc_tag += 1;
-            out.push(HqAction::SubmitAllocation {
-                alloc_tag: tag,
-                req: self.cfg.alloc_request,
-            });
         }
     }
 
@@ -630,9 +468,9 @@ impl HqCore {
         // entries stay for a later pass (the effective count already
         // excludes them).
         let nothing_fits = self.avail.is_empty()
-            && (self.min_cores_floor > 0 || self.workers.is_empty());
+            && (self.min_cores_floor > 0 || self.table.live_workers() == 0);
         if self.queue.is_empty() || nothing_fits {
-            self.autoalloc_into(out);
+            self.table.autoalloc_into(out);
             return;
         }
         let mut failed: Vec<(u32, Micros)> = Vec::new();
@@ -642,12 +480,11 @@ impl HqCore {
         for _ in 0..n0 {
             let Some(id) = self.queue.pop_front() else { break };
             // Drop stale entries (task finished while requeued).
-            if self.tasks.get(&id).map(|x| x.state) != Some(TaskState::Pending) {
-                self.stale_in_queue = self.stale_in_queue.saturating_sub(1);
+            if !self.table.is_pending(id) {
                 continue;
             }
             let (need, tr) = {
-                let task = &self.tasks[&id];
+                let task = self.table.task(id).expect("pending task resident");
                 (task.spec.cores, task.spec.time_request)
             };
             if failed.iter().any(|&(c, r)| c <= need && r <= tr) {
@@ -664,15 +501,15 @@ impl HqCore {
                 // enough allocation left qualifies, including fully-busy
                 // ones the `avail` set excludes (seed semantics).
                 pick = self
-                    .workers
+                    .table
+                    .workers_map()
                     .iter()
-                    .filter(|(_, w)| w.expires_t >= t + tr)
+                    .filter(|(_, w)| w.expires_t >= t.saturating_add(tr))
                     .map(|(wid, _)| *wid)
                     .min();
             } else {
                 for &wid in self.avail.iter() {
-                    let w = &self.workers[&wid];
-                    if w.cores_free >= need && w.expires_t >= t + tr {
+                    if self.table.can_start(t, id, wid) {
                         pick = Some(wid);
                         break;
                     }
@@ -680,20 +517,11 @@ impl HqCore {
             }
             match pick {
                 Some(wid) => {
-                    let w = self.workers.get_mut(&wid).unwrap();
-                    w.cores_free -= need;
-                    w.running.insert(id);
-                    if w.cores_free == 0 {
+                    self.table.reserve(t, id, &[wid], out);
+                    if self.table.worker(wid).map_or(true, |w| w.cores_free == 0)
+                    {
                         self.avail.remove(&wid);
                     }
-                    let task = self.tasks.get_mut(&id).unwrap();
-                    task.state = TaskState::Dispatched;
-                    task.worker = wid;
-                    self.dispatches += 1;
-                    out.push(HqAction::Timer(
-                        t + self.cfg.dispatch_latency,
-                        HqTimer::Dispatched(id),
-                    ));
                 }
                 None => {
                     // Minimal-antichain failure frontier.
@@ -720,7 +548,7 @@ impl HqCore {
             self.queue.rotate_right(pushed_back);
         }
         // Unschedulable tasks may need more allocations.
-        self.autoalloc_into(out);
+        self.table.autoalloc_into(out);
     }
 }
 
@@ -728,6 +556,7 @@ impl HqCore {
 mod tests {
     use super::*;
     use crate::clock::{Des, MS, SEC};
+    use crate::metrics::JobRecord;
 
     fn cfg() -> AutoAllocConfig {
         AutoAllocConfig {
@@ -774,9 +603,8 @@ mod tests {
                     HqAction::SubmitAllocation { .. } => {
                         des.schedule(t + alloc_delay, Ev::AllocUp)
                     }
-                    HqAction::StartTask { task, .. } => {
-                        let tag = records.len() as u64; // not used for dur
-                        let _ = tag;
+                    HqAction::StartTask { task, .. }
+                    | HqAction::StartGang { task, .. } => {
                         des.schedule(t + dur(task), Ev::TaskDone(task));
                     }
                     HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),

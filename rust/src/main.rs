@@ -51,7 +51,7 @@ fn main() -> Result<()> {
                  serve      --model gp|gs2|eigen-100|eigen-5000|qoi [--port N]\n\
                  client     --url http://h:p --model NAME --params 1,2,...\n\
                  balancer   --models NAME[,NAME...] --backend slurm|hq\n\
-                            [--scheduler fcfs|worksteal|edf] [--servers N]\n\
+                            [--scheduler fcfs|worksteal|edf|gang] [--servers N]\n\
                             [--per-job-servers] [--retry-attempts 2]\n\
                             [--retry-backoff 50ms] [--probe-eviction-k 3]\n\
                             [--breaker-floor 0.0]\n\
@@ -60,7 +60,7 @@ fn main() -> Result<()> {
                  experiment --app gs2|GP|eigen-100|eigen-5000 [--queue 2]\n\
                             [--evals 100] [--seed 1]\n\
                  campaign   --policy fixed|bursty|mix|hetero|adaptive\n\
-                            --scheduler slurm|umbridge-slurm|hq|worksteal|edf\n\
+                            --scheduler slurm|umbridge-slurm|hq|worksteal|edf|gang\n\
                             [--app gs2] [--tasks 100] [--depth 2] [--seed 1]\n\
                             [--interarrival 2s] [--burst-min 1] [--burst-max 8]\n\
                             [--users gp:50:2,eigen-100:50:2] [--sigmas 0,0.8]\n\
@@ -127,7 +127,7 @@ fn balancer(args: &Args) -> Result<()> {
         .unwrap_or("fcfs");
     let scheduler = LivePolicy::parse(sched_name).ok_or_else(|| {
         anyhow!("unknown live scheduler '{sched_name}' \
-                 (want fcfs|worksteal|edf)")
+                 (want fcfs|worksteal|edf|gang)")
     })?;
     // Robustness knobs (see ARCHITECTURE.md, failure model): per-task
     // retry budget, probe-eviction threshold and circuit-breaker floor.
@@ -346,6 +346,7 @@ fn campaign_cmd(args: &Args) -> Result<()> {
         "hq" => campaign::run_hq(&cfg, sub.as_mut()),
         "worksteal" => campaign::run_worksteal(&cfg, sub.as_mut()),
         "edf" => campaign::run_edf(&cfg, sub.as_mut()),
+        "gang" => campaign::run_gang(&cfg, sub.as_mut()),
         other => bail!("unknown scheduler '{other}'"),
     };
 

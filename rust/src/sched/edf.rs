@@ -19,62 +19,33 @@
 //! deadline is fixed while every newcomer's is `now + limit`, so
 //! sustained short-deadline load overtakes it only for a bounded window.
 //!
-//! Everything around dispatch keeps hqlite's semantics so the stack and
-//! the live balancer treat all [`TaskCore`] implementations
-//! interchangeably: the same [`AutoAllocConfig`] automatic allocation,
-//! the same expiry min-heap, the same dispatch-latency and time-limit
-//! timers, the same action vocabulary ([`HqAction`]/[`HqTimer`]).  In
-//! the campaign plane it rides `MetaStack<EdfCore>` (`uqsched campaign
-//! --scheduler edf`); in the live plane it rides
-//! [`LiveSched`](crate::sched::LiveSched) (`uqsched balancer
-//! --scheduler edf`), where each model's front-door queue is its own
-//! `EdfCore` — the per-model deadline heap.
+//! The task/worker lifecycle lives in the shared
+//! [`TaskTable`](crate::sched::table::TaskTable), built
+//! [`with_exact_limit`](crate::sched::table::TaskTable::with_exact_limit):
+//! only the `Limit` timer armed for the *current* run kills — a stale
+//! limit from a pre-requeue run must not truncate the rerun, just as
+//! requeued tasks keep their original deadline.  This file keeps only
+//! the deadline heap and the strict-EDF pump.  The stack and the live
+//! balancer treat all [`TaskCore`] implementations interchangeably: the
+//! same [`AutoAllocConfig`] automatic allocation, the same expiry
+//! min-heap, the same dispatch-latency and time-limit timers, the same
+//! action vocabulary ([`HqAction`]/[`HqTimer`]).  In the campaign plane
+//! it rides `MetaStack<EdfCore>` (`uqsched campaign --scheduler edf`);
+//! in the live plane it rides [`LiveSched`](crate::sched::LiveSched)
+//! (`uqsched balancer --scheduler edf`), where each model's front-door
+//! queue is its own `EdfCore` — the per-model deadline heap.
 //!
 //! Cost (w = live workers, p = ready tasks): submission is O(log p) +
 //! one pump; a pump pass pops each startable task at O(log p + w); a
 //! blocked head costs O(w) once per pump.  See PERF.md.
 
 use std::cmp::Reverse;
-use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 
 use crate::clock::Micros;
-use crate::hqlite::core::drain_due_workers;
 use crate::hqlite::{AutoAllocConfig, HqAction, HqTimer, TaskCore, TaskId,
                     TaskSpec, WorkerId};
-use crate::metrics::JobRecord;
-
-#[derive(Clone, Copy, Debug, PartialEq)]
-enum TaskState {
-    Pending,
-    Dispatched,
-    Running,
-    /// Failed transiently; off every worker, waiting out its retry
-    /// backoff.  Re-enters the ready heap — with its *original*
-    /// deadline — when the `Retry` timer fires.
-    Cooling,
-}
-
-#[derive(Clone, Debug)]
-struct Task {
-    spec: TaskSpec,
-    state: TaskState,
-    submit_t: Micros,
-    start_t: Micros,
-    worker: WorkerId,
-    /// Absolute deadline: `submit_t + spec.time_limit`, fixed at
-    /// submission (a requeue after worker loss keeps it — deadlines do
-    /// not reset, which is what makes EDF starvation-free).
-    deadline: Micros,
-}
-
-#[derive(Clone, Debug)]
-struct Worker {
-    cores_free: u32,
-    /// Virtual time at which the surrounding allocation expires.
-    expires_t: Micros,
-    /// Tasks currently dispatched to / running on this worker.
-    running: BTreeSet<TaskId>,
-}
+use crate::sched::table::{FailVerdict, TableTask, TaskTable, TimerVerdict};
 
 /// Heap key: earliest deadline first, then least static laxity, then
 /// lowest task id (total order ⇒ deterministic pops).
@@ -82,81 +53,42 @@ type EdfKey = (Micros, Micros, TaskId);
 
 /// The deadline-EDF task scheduler.
 pub struct EdfCore {
-    cfg: AutoAllocConfig,
-    /// In-flight tasks only; finished tasks are evicted.
-    tasks: HashMap<TaskId, Task>,
+    /// Shared task/worker lifecycle engine (exact limit guard).
+    table: TaskTable,
     /// Deadline min-heap over Pending tasks.  May lazily contain ids of
     /// tasks that completed while requeued; dropped when popped.
     ready: BinaryHeap<Reverse<EdfKey>>,
-    /// Live workers, id-ordered for deterministic host scans.
-    workers: BTreeMap<WorkerId, Worker>,
-    /// (expires_t, worker) min-heap; entries for already-lost workers
-    /// are skipped lazily.
-    expiry: BinaryHeap<Reverse<(Micros, WorkerId)>>,
-    /// Live tasks currently Pending (ready heap minus stale entries).
-    pending: usize,
-    retired: u64,
-    next_task: TaskId,
-    next_worker: WorkerId,
-    next_alloc_tag: u64,
-    allocs_in_queue: u32,
-    /// Stats: dispatches performed.
-    pub dispatches: u64,
 }
 
 impl EdfCore {
     pub fn new(cfg: AutoAllocConfig) -> Self {
         EdfCore {
-            cfg,
-            tasks: HashMap::new(),
+            table: TaskTable::new(cfg).with_exact_limit(),
             ready: BinaryHeap::new(),
-            workers: BTreeMap::new(),
-            expiry: BinaryHeap::new(),
-            pending: 0,
-            retired: 0,
-            next_task: 1,
-            next_worker: 1,
-            next_alloc_tag: 1,
-            allocs_in_queue: 0,
-            dispatches: 0,
         }
     }
 
-    fn is_pending(&self, id: TaskId) -> bool {
-        self.tasks.get(&id).map(|t| t.state) == Some(TaskState::Pending)
+    /// Stats: dispatches performed.
+    pub fn dispatches(&self) -> u64 {
+        self.table.dispatches()
     }
 
-    /// A task's heap key: (deadline, static laxity, id).
-    fn key_of(task: &Task, id: TaskId) -> EdfKey {
+    /// A task's heap key: (deadline, static laxity, id).  The deadline
+    /// is fixed at submission — a requeue keeps it, which is what makes
+    /// EDF starvation-free.
+    fn key_of(task: &TableTask, id: TaskId) -> EdfKey {
         let laxity = task.spec.time_limit
             .saturating_sub(task.spec.time_request);
         (task.deadline, laxity, id)
     }
 
-    /// Start `id` on `wid` now (capacity already checked).
-    fn start(&mut self, t: Micros, id: TaskId, wid: WorkerId,
-             out: &mut Vec<HqAction>) {
-        let need = self.tasks[&id].spec.cores;
-        let w = self.workers.get_mut(&wid).unwrap();
-        w.cores_free -= need;
-        w.running.insert(id);
-        let task = self.tasks.get_mut(&id).unwrap();
-        task.state = TaskState::Dispatched;
-        task.worker = wid;
-        self.pending -= 1;
-        self.dispatches += 1;
-        out.push(HqAction::Timer(
-            t + self.cfg.dispatch_latency,
-            HqTimer::Dispatched(id),
-        ));
-    }
-
-    /// Can `wid` start `id` right now?  Needs the cores free and an
-    /// allocation outliving the task's time request (HQ semantics).
-    fn can_start(&self, t: Micros, id: TaskId, wid: WorkerId) -> bool {
-        let w = &self.workers[&wid];
-        let spec = &self.tasks[&id].spec;
-        w.cores_free >= spec.cores && w.expires_t >= t + spec.time_request
+    /// Re-enter a (live, Pending) task into the ready heap with its
+    /// original deadline.
+    fn push_ready(&mut self, id: TaskId) {
+        if let Some(task) = self.table.task(id) {
+            let key = Self::key_of(task, id);
+            self.ready.push(Reverse(key));
+        }
     }
 
     /// Dispatch strictly earliest-deadline-first: pop the heap while the
@@ -165,70 +97,23 @@ impl EdfCore {
     /// tops up capacity for whatever is still pending.
     fn pump(&mut self, t: Micros, out: &mut Vec<HqAction>) {
         while let Some(&Reverse((_, _, id))) = self.ready.peek() {
-            if !self.is_pending(id) {
+            if !self.table.is_pending(id) {
                 // Stale entry (completed while requeued, or re-pushed by
                 // a worker loss after an earlier pop): drop lazily.
                 self.ready.pop();
                 continue;
             }
             let host = self
-                .workers
+                .table
+                .workers_map()
                 .keys()
                 .copied()
-                .find(|&wid| self.can_start(t, id, wid));
+                .find(|&wid| self.table.can_start(t, id, wid));
             let Some(wid) = host else { break };
             self.ready.pop();
-            self.start(t, id, wid, out);
+            self.table.reserve(t, id, &[wid], out);
         }
-        self.autoalloc_into(out);
-    }
-
-    /// Submit allocations while there are pending tasks, the backlog
-    /// allows it, and the worker cap is not reached (hqlite semantics).
-    fn autoalloc_into(&mut self, out: &mut Vec<HqAction>) {
-        while self.pending > 0
-            && self.allocs_in_queue < self.cfg.backlog
-            && self.workers.len() as u32
-                + self.allocs_in_queue * self.cfg.workers_per_alloc
-                < self.cfg.max_worker_count
-        {
-            self.allocs_in_queue += 1;
-            let tag = self.next_alloc_tag;
-            self.next_alloc_tag += 1;
-            out.push(HqAction::SubmitAllocation {
-                alloc_tag: tag,
-                req: self.cfg.alloc_request,
-            });
-        }
-    }
-
-    fn complete(&mut self, t: Micros, id: TaskId, truncated: bool,
-                out: &mut Vec<HqAction>) {
-        // Finished tasks are evicted, so a stale duplicate completion
-        // (the driver's original done-timer firing after a requeue)
-        // simply misses the map.
-        let Some(task) = self.tasks.remove(&id) else { return };
-        if task.state == TaskState::Pending {
-            // Completed while requeued: its heap entry is now stale and
-            // will be lazily dropped.
-            self.pending -= 1;
-        }
-        self.retired += 1;
-        let record = JobRecord {
-            tag: task.spec.tag,
-            submit: task.submit_t,
-            start: task.start_t,
-            end: t,
-            cpu: t.saturating_sub(task.start_t),
-            truncated,
-        };
-        if let Some(w) = self.workers.get_mut(&task.worker) {
-            if w.running.remove(&id) {
-                w.cores_free += task.spec.cores;
-            }
-        }
-        out.push(HqAction::TaskCompleted { task: id, record });
-        self.pump(t, out);
+        self.table.autoalloc_into(out);
     }
 }
 
@@ -239,19 +124,8 @@ impl TaskCore for EdfCore {
         spec: TaskSpec,
         out: &mut Vec<HqAction>,
     ) -> TaskId {
-        let id = self.next_task;
-        self.next_task += 1;
-        let task = Task {
-            deadline: t.saturating_add(spec.time_limit),
-            spec,
-            state: TaskState::Pending,
-            submit_t: t,
-            start_t: 0,
-            worker: 0,
-        };
-        self.ready.push(Reverse(Self::key_of(&task, id)));
-        self.tasks.insert(id, task);
-        self.pending += 1;
+        let id = self.table.admit(t, spec);
+        self.push_ready(id);
         self.pump(t, out);
         id
     }
@@ -263,23 +137,7 @@ impl TaskCore for EdfCore {
         cores_per_worker: u32,
         out: &mut Vec<HqAction>,
     ) {
-        self.allocs_in_queue = self.allocs_in_queue.saturating_sub(1);
-        for _ in 0..self.cfg.workers_per_alloc {
-            if self.workers.len() as u32 >= self.cfg.max_worker_count {
-                break;
-            }
-            let wid = self.next_worker;
-            self.next_worker += 1;
-            self.workers.insert(
-                wid,
-                Worker {
-                    cores_free: cores_per_worker,
-                    expires_t: t.saturating_add(time_limit),
-                    running: BTreeSet::new(),
-                },
-            );
-            self.expiry.push(Reverse((t.saturating_add(time_limit), wid)));
-        }
+        let _ = self.table.admit_workers(t, time_limit, cores_per_worker);
         self.pump(t, out);
     }
 
@@ -289,30 +147,21 @@ impl TaskCore for EdfCore {
         wid: WorkerId,
         out: &mut Vec<HqAction>,
     ) {
-        if let Some(worker) = self.workers.remove(&wid) {
-            // No task lost: the in-flight set requeues with its original
-            // deadlines (ascending task-id order, deterministic).
-            for id in worker.running {
-                if let Some(task) = self.tasks.get_mut(&id) {
-                    if matches!(
-                        task.state,
-                        TaskState::Running | TaskState::Dispatched
-                    ) {
-                        task.state = TaskState::Pending;
-                        self.pending += 1;
-                        let key = Self::key_of(task, id);
-                        self.ready.push(Reverse(key));
-                        out.push(HqAction::Requeued { task: id });
-                    }
-                }
-            }
+        // No task lost: the in-flight set requeues with its original
+        // deadlines (ascending task-id order, deterministic).
+        for id in self.table.worker_lost(wid, out) {
+            self.push_ready(id);
         }
         self.pump(t, out);
     }
 
     fn on_task_done_into(&mut self, t: Micros, id: TaskId,
                          out: &mut Vec<HqAction>) {
-        self.complete(t, id, false, out)
+        // A stale duplicate completion (the driver's original done-timer
+        // firing after a requeue) misses the table: no pump.
+        if self.table.complete(t, id, false, out) {
+            self.pump(t, out);
+        }
     }
 
     fn on_task_failed_into(
@@ -322,118 +171,57 @@ impl TaskCore for EdfCore {
         retry_in: Option<Micros>,
         out: &mut Vec<HqAction>,
     ) {
-        let Some(task) = self.tasks.get_mut(&id) else { return };
-        if !matches!(task.state, TaskState::Dispatched | TaskState::Running) {
-            return;
-        }
-        match retry_in {
-            None => {
-                out.push(HqAction::KillTask { task: id });
-                self.complete(t, id, true, out);
-            }
-            Some(backoff) => {
-                let wid = task.worker;
-                let cores = task.spec.cores;
-                task.state = TaskState::Cooling;
-                if let Some(w) = self.workers.get_mut(&wid) {
-                    if w.running.remove(&id) {
-                        w.cores_free += cores;
-                    }
-                }
-                out.push(HqAction::Requeued { task: id });
-                out.push(HqAction::Timer(
-                    t.saturating_add(backoff),
-                    HqTimer::Retry(id),
-                ));
-                self.pump(t, out);
-            }
+        match self.table.fail(t, id, retry_in, out) {
+            FailVerdict::Ignored => {}
+            FailVerdict::Killed | FailVerdict::Cooling => self.pump(t, out),
         }
     }
 
     fn task_live(&self, id: TaskId) -> bool {
-        self.tasks.contains_key(&id)
+        self.table.task_live(id)
     }
 
     fn live_worker_ids_into(&self, out: &mut Vec<u64>) {
-        out.extend(self.workers.keys().copied());
+        self.table.live_worker_ids_into(out);
     }
 
     fn on_timer_into(&mut self, t: Micros, timer: HqTimer,
                      out: &mut Vec<HqAction>) {
-        match timer {
-            HqTimer::Dispatched(id) => {
-                let Some(task) = self.tasks.get_mut(&id) else { return };
-                if task.state != TaskState::Dispatched {
-                    return;
-                }
-                task.state = TaskState::Running;
-                task.start_t = t;
-                let worker = task.worker;
-                let limit = task.spec.time_limit;
-                out.push(HqAction::StartTask { task: id, worker });
-                out.push(HqAction::Timer(t.saturating_add(limit),
-                                         HqTimer::Limit(id)));
-            }
-            HqTimer::Limit(id) => {
-                // Only the timer armed for *this* run kills (it fires
-                // exactly at start_t + time_limit).  A stale limit from
-                // a pre-requeue run fires at the old start and must not
-                // truncate the rerun — requeued tasks keep their full
-                // limit, just as they keep their original deadline.
-                let due = self
-                    .tasks
-                    .get(&id)
-                    .filter(|task| task.state == TaskState::Running)
-                    .map(|task| {
-                        task.start_t.saturating_add(task.spec.time_limit)
-                    });
-                if due == Some(t) {
-                    out.push(HqAction::KillTask { task: id });
-                    self.complete(t, id, true, out);
-                }
-            }
-            HqTimer::Retry(id) => {
-                let Some(task) = self.tasks.get_mut(&id) else { return };
-                if task.state != TaskState::Cooling {
-                    return;
-                }
-                task.state = TaskState::Pending;
-                self.pending += 1;
+        match self.table.timer(t, timer, out) {
+            TimerVerdict::Ignored | TimerVerdict::Started => {}
+            TimerVerdict::Killed => self.pump(t, out),
+            TimerVerdict::Requeue(id) => {
                 // Original deadline: retries never relax EDF order.
-                let key = Self::key_of(task, id);
-                self.ready.push(Reverse(key));
+                self.push_ready(id);
                 self.pump(t, out);
             }
         }
     }
 
     fn expire_workers_into(&mut self, t: Micros, out: &mut Vec<HqAction>) {
-        let expired = drain_due_workers(&mut self.expiry, t, |wid| {
-            self.workers.contains_key(&wid)
-        });
-        for wid in expired {
+        for wid in self.table.expire_due(t) {
             self.on_worker_lost_into(t, wid, out);
         }
     }
 
     fn pending_tasks(&self) -> usize {
-        self.pending
+        self.table.pending_tasks()
     }
 
     fn live_workers(&self) -> usize {
-        self.workers.len()
+        self.table.live_workers()
     }
 
     fn allocs_waiting(&self) -> u32 {
-        self.allocs_in_queue
+        self.table.allocs_waiting()
     }
 
     fn resident_tasks(&self) -> usize {
-        self.tasks.len()
+        self.table.resident_tasks()
     }
 
     fn retired_count(&self) -> u64 {
-        self.retired
+        self.table.retired_count()
     }
 }
 

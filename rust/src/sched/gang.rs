@@ -1,0 +1,489 @@
+//! [`GangCore`]: moldable gang scheduling — the fifth pluggable core,
+//! and the first whose tasks span a *set* of workers.
+//!
+//! The paper's GS2 simulations are MPI-parallel jobs: one logical task
+//! occupies many nodes at once, and it either holds **all** of its slots
+//! or none — a half-started MPI job is a deadlock, not a schedule.
+//! `GangCore` models exactly that.  A task declares a moldable width
+//! `min..=max` (workers); at dispatch the core collects the eligible
+//! workers in ascending id order — each must have `spec.cores` free and
+//! an allocation outliving the task's `time_request` — and
+//!
+//! * if at least `min` are eligible, it reserves `min(max, eligible)`
+//!   members **atomically** through one
+//!   [`TaskTable::reserve`](crate::sched::table::TaskTable::reserve)
+//!   call (moldable: the gang widens to whatever is available up to
+//!   `max`), emitting [`HqAction::StartGang`] when the set has more
+//!   than one member;
+//! * otherwise the frontier **holds**: strict head-of-line FCFS, no
+//!   backfilling around an unsatisfiable gang — the same discipline
+//!   strict EDF applies to its deadline head, here applied to width.
+//!
+//! Every release path — completion, transient failure, worker loss,
+//! time-limit kill — frees *all* members through the shared table, so
+//! no partial gang is ever observable ([`no_partial_gangs`]
+//! (GangCore::no_partial_gangs) sweeps that invariant; the chaos suite
+//! replays identical [`FaultPlan`](crate::campaign::FaultPlan) crash
+//! traces against it).  Losing one member of an assembling or running
+//! gang returns every surviving member's cores in the same transition
+//! that requeues the task.
+//!
+//! Lifecycle (timers, records, autoalloc, Cooling/Retry) rides the
+//! shared [`TaskTable`](crate::sched::table::TaskTable), so the stack
+//! and the live balancer drive `GangCore` exactly like the other cores:
+//! `uqsched campaign --scheduler gang` (via `MetaStack<GangCore>`) and
+//! `uqsched balancer --scheduler gang` (via
+//! [`LiveSched`](crate::sched::LiveSched), width 1..=1 per request —
+//! the live front door dispatches single jobs).
+//!
+//! Cost (w = live workers, g = gang width): a dispatch attempt is O(w);
+//! a started gang adds O(g log w) reservation work; completion frees
+//! O(g) members.  See PERF.md.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::clock::Micros;
+use crate::hqlite::{AutoAllocConfig, HqAction, HqTimer, TaskCore, TaskId,
+                    TaskSpec, WorkerId};
+use crate::sched::table::{FailVerdict, TaskState, TaskTable, TimerVerdict};
+
+/// The moldable gang scheduler.
+pub struct GangCore {
+    /// Shared task/worker lifecycle engine.
+    table: TaskTable,
+    /// Strict FCFS frontier.  May lazily contain ids of tasks evicted
+    /// while queued; dropped when next at the head.
+    queue: VecDeque<TaskId>,
+    /// Per-task moldable width `(min, max)`; entries live as long as the
+    /// task does (a Cooling task keeps its width for the retry).
+    bounds: HashMap<TaskId, (u32, u32)>,
+    /// Width assigned to tasks submitted through the width-less
+    /// [`TaskCore::submit_task_into`] seam (stack/balancer drivers).
+    default_bounds: (u32, u32),
+    /// Reusable member scratch for dispatch passes.
+    members: Vec<WorkerId>,
+}
+
+impl GangCore {
+    /// A gang core whose plain submissions are single-worker
+    /// (`1..=1`) — drop-in for the existing driver seams.
+    pub fn new(cfg: AutoAllocConfig) -> Self {
+        GangCore {
+            table: TaskTable::new(cfg),
+            queue: VecDeque::new(),
+            bounds: HashMap::new(),
+            default_bounds: (1, 1),
+            members: Vec::new(),
+        }
+    }
+
+    /// Set the moldable width `min..=max` applied to plain
+    /// [`TaskCore::submit_task_into`] submissions (both clamped to at
+    /// least 1; `max` to at least `min`).
+    pub fn with_gang(mut self, min: u32, max: u32) -> Self {
+        let min = min.max(1);
+        self.default_bounds = (min, max.max(min));
+        self
+    }
+
+    /// Stats: dispatches performed (a gang counts once).
+    pub fn dispatches(&self) -> u64 {
+        self.table.dispatches()
+    }
+
+    /// Submit a task with an explicit moldable width `min..=max`.
+    pub fn submit_gang_task_into(
+        &mut self,
+        t: Micros,
+        spec: TaskSpec,
+        min: u32,
+        max: u32,
+        out: &mut Vec<HqAction>,
+    ) -> TaskId {
+        let min = min.max(1);
+        let max = max.max(min);
+        let id = self.table.admit(t, spec);
+        self.bounds.insert(id, (min, max));
+        self.queue.push_back(id);
+        self.pump(t, out);
+        id
+    }
+
+    /// The all-slots-or-none invariant, swept over every resident task:
+    /// a Dispatched/Running gang holds a slot on *every* one of its
+    /// members (each member is live and lists the task as running), and
+    /// a Pending/Cooling task holds none.  The chaos suite calls this
+    /// after every fault event.
+    pub fn no_partial_gangs(&self) -> bool {
+        self.table.iter_tasks().all(|(id, task)| match task.state {
+            TaskState::Dispatched | TaskState::Running => {
+                !task.workers.is_empty()
+                    && task.workers.iter().all(|&m| {
+                        self.table
+                            .worker(m)
+                            .map_or(false, |w| w.running.contains(&id))
+                    })
+            }
+            TaskState::Pending | TaskState::Cooling => {
+                task.workers.is_empty()
+            }
+        })
+    }
+
+    /// Workers currently reserved by `id` (empty unless in flight).
+    pub fn gang_of(&self, id: TaskId) -> Vec<WorkerId> {
+        self.table
+            .task(id)
+            .map(|task| task.workers.clone())
+            .unwrap_or_default()
+    }
+
+    /// Strict head-of-line dispatch: assemble the head's gang or hold
+    /// the frontier; then autoalloc tops up capacity for whatever is
+    /// still pending.
+    fn pump(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        loop {
+            let Some(&front) = self.queue.front() else { break };
+            if !self.table.is_pending(front) {
+                // Stale entry: evicted while queued (live-plane cancel).
+                self.queue.pop_front();
+                self.bounds.remove(&front);
+                continue;
+            }
+            let (min, max) = self
+                .bounds
+                .get(&front)
+                .copied()
+                .unwrap_or(self.default_bounds);
+            self.members.clear();
+            for &wid in self.table.workers_map().keys() {
+                if self.members.len() as u32 >= max {
+                    break;
+                }
+                if self.table.can_start(t, front, wid) {
+                    self.members.push(wid);
+                }
+            }
+            if (self.members.len() as u32) < min {
+                // Frontier holds: no backfilling around an
+                // unsatisfiable gang.
+                break;
+            }
+            self.queue.pop_front();
+            // Atomic: every member's slots are taken in one table
+            // transition — no assembly window with a partial gang.
+            let members = std::mem::take(&mut self.members);
+            self.table.reserve(t, front, &members, out);
+            self.members = members;
+        }
+        self.table.autoalloc_into(out);
+    }
+
+    /// Drop the width entry of an evicted task.
+    fn forget(&mut self, id: TaskId) {
+        self.bounds.remove(&id);
+    }
+}
+
+impl TaskCore for GangCore {
+    fn submit_task_into(
+        &mut self,
+        t: Micros,
+        spec: TaskSpec,
+        out: &mut Vec<HqAction>,
+    ) -> TaskId {
+        let (min, max) = self.default_bounds;
+        self.submit_gang_task_into(t, spec, min, max, out)
+    }
+
+    fn on_alloc_up_into(
+        &mut self,
+        t: Micros,
+        time_limit: Micros,
+        cores_per_worker: u32,
+        out: &mut Vec<HqAction>,
+    ) {
+        let _ = self.table.admit_workers(t, time_limit, cores_per_worker);
+        self.pump(t, out);
+    }
+
+    fn on_worker_lost_into(
+        &mut self,
+        t: Micros,
+        wid: WorkerId,
+        out: &mut Vec<HqAction>,
+    ) {
+        // A lost member takes the whole gang down: the table frees every
+        // surviving member's slots in the same transition that requeues
+        // the task (ascending id order, deterministic).
+        for id in self.table.worker_lost(wid, out) {
+            self.queue.push_back(id);
+        }
+        self.pump(t, out);
+    }
+
+    fn on_task_done_into(&mut self, t: Micros, id: TaskId,
+                         out: &mut Vec<HqAction>) {
+        // A stale duplicate completion (the driver's original done-timer
+        // firing after a requeue) misses the table: no pump.
+        if self.table.complete(t, id, false, out) {
+            self.forget(id);
+            self.pump(t, out);
+        }
+    }
+
+    fn on_timer_into(&mut self, t: Micros, timer: HqTimer,
+                     out: &mut Vec<HqAction>) {
+        match self.table.timer(t, timer, out) {
+            TimerVerdict::Ignored | TimerVerdict::Started => {}
+            TimerVerdict::Killed => {
+                if let HqTimer::Limit(id) = timer {
+                    self.forget(id);
+                }
+                self.pump(t, out);
+            }
+            TimerVerdict::Requeue(id) => {
+                self.queue.push_back(id);
+                self.pump(t, out);
+            }
+        }
+    }
+
+    fn on_task_failed_into(
+        &mut self,
+        t: Micros,
+        id: TaskId,
+        retry_in: Option<Micros>,
+        out: &mut Vec<HqAction>,
+    ) {
+        match self.table.fail(t, id, retry_in, out) {
+            FailVerdict::Ignored => {}
+            FailVerdict::Killed => {
+                self.forget(id);
+                self.pump(t, out);
+            }
+            // Cooling keeps its width for the retry.
+            FailVerdict::Cooling => self.pump(t, out),
+        }
+    }
+
+    fn task_live(&self, id: TaskId) -> bool {
+        self.table.task_live(id)
+    }
+
+    fn live_worker_ids_into(&self, out: &mut Vec<u64>) {
+        self.table.live_worker_ids_into(out);
+    }
+
+    fn expire_workers_into(&mut self, t: Micros, out: &mut Vec<HqAction>) {
+        for wid in self.table.expire_due(t) {
+            self.on_worker_lost_into(t, wid, out);
+        }
+    }
+
+    fn pending_tasks(&self) -> usize {
+        self.table.pending_tasks()
+    }
+
+    fn live_workers(&self) -> usize {
+        self.table.live_workers()
+    }
+
+    fn allocs_waiting(&self) -> u32 {
+        self.table.allocs_waiting()
+    }
+
+    fn resident_tasks(&self) -> usize {
+        self.table.resident_tasks()
+    }
+
+    fn retired_count(&self) -> u64 {
+        self.table.retired_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::{MS, SEC};
+    use crate::cluster::JobRequest;
+
+    fn cfg(max_workers: u32) -> AutoAllocConfig {
+        AutoAllocConfig {
+            backlog: 2,
+            workers_per_alloc: 1,
+            max_worker_count: max_workers,
+            alloc_request: JobRequest::new(16, 16, 3600 * SEC),
+            dispatch_latency: 1 * MS,
+        }
+    }
+
+    fn spec(tag: u64, cores: u32) -> TaskSpec {
+        TaskSpec {
+            tag,
+            cores,
+            time_request: SEC,
+            time_limit: 100 * SEC,
+        }
+    }
+
+    fn gang_starts(out: &[HqAction]) -> Vec<(TaskId, Vec<WorkerId>)> {
+        out.iter()
+            .filter_map(|a| match a {
+                HqAction::StartGang { task, workers } => {
+                    Some((*task, workers.clone()))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn moldable_gang_takes_every_eligible_worker_up_to_max() {
+        let mut core = GangCore::new(cfg(4));
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
+        }
+        let id = core.submit_gang_task_into(0, spec(1, 8), 2, 4, &mut out);
+        // 3 workers live, max 4: the gang molds to width 3.
+        assert_eq!(core.gang_of(id), vec![1, 2, 3]);
+        assert!(core.no_partial_gangs());
+        // The StartGang action lists every member once dispatched.
+        out.clear();
+        core.on_timer_into(1 * MS, HqTimer::Dispatched(id), &mut out);
+        assert_eq!(gang_starts(&out), vec![(id, vec![1, 2, 3])]);
+        // Completion releases all three members' slots.
+        out.clear();
+        core.on_task_done_into(SEC, id, &mut out);
+        assert!(core.no_partial_gangs());
+        assert_eq!(core.resident_tasks(), 0);
+        assert_eq!(core.retired_count(), 1);
+    }
+
+    #[test]
+    fn frontier_holds_until_min_workers_are_eligible() {
+        let mut core = GangCore::new(cfg(4));
+        let mut out = Vec::new();
+        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
+        let id = core.submit_gang_task_into(0, spec(1, 16), 2, 2, &mut out);
+        // Only one worker up: the gang must hold, all slots free.
+        assert!(core.gang_of(id).is_empty());
+        assert_eq!(core.pending_tasks(), 1);
+        assert!(core.no_partial_gangs());
+        // Strict head-of-line: a 1-wide newcomer must NOT overtake it.
+        let solo = core.submit_gang_task_into(1, spec(2, 1), 1, 1, &mut out);
+        assert!(core.gang_of(solo).is_empty(), "no backfill past the gang");
+        // Second worker arrives: the head assembles atomically.
+        out.clear();
+        core.on_alloc_up_into(2, 3600 * SEC, 16, &mut out);
+        assert_eq!(core.gang_of(id), vec![1, 2]);
+        // The 16-core gang filled both workers, so the solo task still
+        // waits — it was held by FCFS before, by capacity now.
+        assert!(core.gang_of(solo).is_empty());
+        assert!(core.no_partial_gangs());
+    }
+
+    #[test]
+    fn losing_a_member_releases_every_reserved_slot() {
+        // Crash during gang assembly (the Dispatched latency window):
+        // every reserved slot must come back, no partial gang remains.
+        let mut core = GangCore::new(cfg(4));
+        let mut out = Vec::new();
+        for _ in 0..2 {
+            core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
+        }
+        let id = core.submit_gang_task_into(0, spec(1, 16), 2, 2, &mut out);
+        assert_eq!(core.gang_of(id), vec![1, 2]);
+        // Member 2 dies before the Dispatched timer fires.
+        out.clear();
+        core.on_worker_lost_into(MS / 2, 2, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            HqAction::Requeued { task } if *task == id
+        )));
+        // Survivor's slots are fully released; the task is whole-pending.
+        assert!(core.gang_of(id).is_empty());
+        assert!(core.no_partial_gangs());
+        assert_eq!(core.table.worker(1).unwrap().cores_free, 16);
+        // The stale Dispatched timer must not start a ghost gang.
+        out.clear();
+        core.on_timer_into(1 * MS, HqTimer::Dispatched(id), &mut out);
+        assert!(gang_starts(&out).is_empty());
+        assert!(core.no_partial_gangs());
+        // A replacement worker restores width 2: the gang reassembles.
+        out.clear();
+        core.on_alloc_up_into(SEC, 3600 * SEC, 16, &mut out);
+        assert_eq!(core.gang_of(id), vec![1, 3]);
+        assert!(core.no_partial_gangs());
+    }
+
+    #[test]
+    fn transient_failure_parks_the_whole_gang_and_retries() {
+        let mut core = GangCore::new(cfg(4));
+        let mut out = Vec::new();
+        for _ in 0..2 {
+            core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
+        }
+        let id = core.submit_gang_task_into(0, spec(1, 16), 2, 2, &mut out);
+        core.on_timer_into(1 * MS, HqTimer::Dispatched(id), &mut out);
+        // Mid-run transient failure: both members' cores come back.
+        out.clear();
+        core.on_task_failed_into(SEC, id, Some(5 * SEC), &mut out);
+        assert!(core.gang_of(id).is_empty());
+        assert!(core.no_partial_gangs());
+        assert_eq!(core.table.worker(1).unwrap().cores_free, 16);
+        assert_eq!(core.table.worker(2).unwrap().cores_free, 16);
+        // Retry fires: the gang reassembles at full width.
+        out.clear();
+        core.on_timer_into(6 * SEC, HqTimer::Retry(id), &mut out);
+        assert_eq!(core.gang_of(id), vec![1, 2]);
+        assert!(core.no_partial_gangs());
+    }
+
+    #[test]
+    fn width_one_gang_degenerates_to_fcfs() {
+        // The live plane runs GangCore with width 1..=1: plain FCFS
+        // single-worker dispatch, StartTask (not StartGang) actions.
+        let mut core = GangCore::new(cfg(2)).with_gang(1, 1);
+        let mut out = Vec::new();
+        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
+        let a = core.submit_task_into(0, spec(1, 16), &mut out);
+        let b = core.submit_task_into(0, spec(2, 16), &mut out);
+        assert_eq!(core.gang_of(a), vec![1]);
+        assert!(core.gang_of(b).is_empty());
+        out.clear();
+        core.on_timer_into(1 * MS, HqTimer::Dispatched(a), &mut out);
+        assert!(out.iter().any(|x| matches!(
+            x,
+            HqAction::StartTask { task, worker: 1 } if *task == a
+        )), "single-member gangs start as plain StartTask: {out:?}");
+        // a completes; b follows in FCFS order.
+        out.clear();
+        core.on_task_done_into(SEC, a, &mut out);
+        assert_eq!(core.gang_of(b), vec![1]);
+        assert_eq!(core.retired_count(), 1);
+    }
+
+    #[test]
+    fn autoalloc_tops_up_for_a_held_gang() {
+        let mut core = GangCore::new(cfg(4));
+        let mut out = Vec::new();
+        // Width-3 gang with no workers: autoalloc must ask for capacity
+        // (backlog=2 caps the queued allocations).
+        core.submit_gang_task_into(0, spec(1, 16), 3, 3, &mut out);
+        let allocs = out.iter().filter(|a| matches!(
+            a,
+            HqAction::SubmitAllocation { .. }
+        )).count();
+        assert_eq!(allocs, 2);
+        // Workers arrive one by one; the gang assembles only at three.
+        out.clear();
+        core.on_alloc_up_into(1, 3600 * SEC, 16, &mut out);
+        core.on_alloc_up_into(2, 3600 * SEC, 16, &mut out);
+        assert_eq!(core.pending_tasks(), 1, "held below min width");
+        core.on_alloc_up_into(3, 3600 * SEC, 16, &mut out);
+        assert_eq!(core.gang_of(1), vec![1, 2, 3]);
+        assert!(core.no_partial_gangs());
+    }
+}

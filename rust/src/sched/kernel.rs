@@ -290,7 +290,29 @@ pub fn run_with_faults<S: SchedulerCore>(
         for e in effects.drain(..) {
             match e {
                 Effect::SetTimer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
-                Effect::Start { id, contention, .. } => {
+                Effect::Start { id, contention, workers } => {
+                    // Placement policy of the virtual plane, stated once:
+                    // the kernel *validates* the worker set but does not
+                    // act on it — in virtual time every worker advances
+                    // at the same simulated rate, so where the work runs
+                    // cannot change when it finishes (the real-time
+                    // driver, by contrast, leases the set's lead
+                    // member).  The check keeps gang placement honest on
+                    // this plane: a core can never claim workers it does
+                    // not have, so placement is carried — not silently
+                    // dropped — end to end.
+                    if cfg!(debug_assertions) && !workers.is_empty() {
+                        victim_scratch.clear();
+                        core.live_worker_ids(&mut victim_scratch);
+                        debug_assert!(
+                            workers
+                                .ids()
+                                .iter()
+                                .all(|w| victim_scratch.contains(w)),
+                            "core placed {id:?} on unknown workers \
+                             {workers:?} (live: {victim_scratch:?})",
+                        );
+                    }
                     // Work the kernel never submitted (background jobs)
                     // finishes itself inside the core.
                     match plan {

@@ -17,10 +17,17 @@
 //!   │ user-mix ...  │ <───────── │ drain loop  │ <────── │ MetaStack<HqCore>    │
 //!   └───────────────┘ completed  └─────────────┘ Effect  │ MetaStack<WorkSteal> │
 //!                                                        │ MetaStack<EdfCore>   │
-//!   /Evaluate ───┐   realtime::RtDriver (wall clock)     │ LiveSched<HqCore>    │
-//!   server up ───┼─> │ timer heap · ready queue │ ─────> │ LiveSched<WorkSteal> │
-//!   forward done ┘   (balancer forwarder pool)   Effect  │ LiveSched<EdfCore>   │
+//!   /Evaluate ───┐   realtime::RtDriver (wall clock)     │ MetaStack<GangCore>  │
+//!   server up ───┼─> │ timer heap · ready queue │ ─────> │ LiveSched<HqCore>    │
+//!   forward done ┘   (balancer forwarder pool)   Effect  │ LiveSched<WorkSteal> │
+//!                                                        │ LiveSched<EdfCore>   │
+//!                                                        │ LiveSched<GangCore>  │
 //!                                                        └──────────────────────┘
+//!
+//!   All four HQ-family cores ride one shared lifecycle engine,
+//!   [`table::TaskTable`] — each core is its ready structure (FCFS
+//!   queue, per-worker deques, deadline heap, gang frontier) plus a
+//!   placement policy; see `sched/table.rs`.
 //! ```
 //!
 //! * **Events** flow kernel → core as trait-method calls: `submit`,
@@ -49,10 +56,12 @@
 
 pub mod edf;
 pub mod faults;
+pub mod gang;
 pub mod kernel;
 pub mod realtime;
 pub mod slurm;
 pub mod stack;
+pub mod table;
 pub mod worksteal;
 
 use std::fmt::Debug;
@@ -64,11 +73,71 @@ use crate::metrics::JobRecord;
 
 pub use edf::EdfCore;
 pub use faults::{FaultPlan, FaultSpec};
+pub use gang::GangCore;
 pub use kernel::{run, run_with_faults};
 pub use realtime::{LivePolicy, LiveSched, RtDriver};
 pub use slurm::SlurmSched;
-pub use stack::{EdfSched, HqSched, MetaStack, StackTimer, WorkStealSched};
+pub use stack::{EdfSched, GangSched, HqSched, MetaStack, StackTimer,
+                WorkStealSched};
+pub use table::TaskTable;
 pub use worksteal::WorkStealCore;
+
+/// The workers a unit of work occupies, in the id space the driver used
+/// for [`CapacityChange::WorkerUp`].  Empty when the core does not place
+/// by worker (native SLURM background lanes); one element for the
+/// single-worker cores; the full gang, ascending, for
+/// [`GangCore`] — the first member is the *lead* (the server the
+/// real-time driver leases).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WorkerSet(Vec<u64>);
+
+impl WorkerSet {
+    /// No placement information.
+    pub fn empty() -> Self {
+        WorkerSet(Vec::new())
+    }
+
+    /// A single-worker placement.
+    pub fn one(id: u64) -> Self {
+        WorkerSet(vec![id])
+    }
+
+    /// A gang placement (callers pass members ascending; the first is
+    /// the lead).
+    pub fn many(ids: Vec<u64>) -> Self {
+        WorkerSet(ids)
+    }
+
+    /// Adapter for the previous `Option<u64>` placement shape.
+    pub fn from_opt(id: Option<u64>) -> Self {
+        match id {
+            Some(id) => WorkerSet::one(id),
+            None => WorkerSet::empty(),
+        }
+    }
+
+    /// The lead worker (None when the set is empty).
+    pub fn primary(&self) -> Option<u64> {
+        self.0.first().copied()
+    }
+
+    /// All members, ascending.
+    pub fn ids(&self) -> &[u64] {
+        &self.0
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.0.contains(&id)
+    }
+}
 
 /// What the kernel must do in response to a core transition — the
 /// unified action vocabulary shared by every scheduler.
@@ -81,11 +150,13 @@ pub enum Effect<I, T> {
     /// `contention` (1.0 where the scheduler models no co-location).
     /// Work the kernel did not submit (background jobs) is ignored; work
     /// may start more than once (requeue after a lost worker).
-    /// `worker` names where the core placed the work, in the id space
-    /// the driver used for [`CapacityChange::WorkerUp`] (cores that
-    /// place by node/worker set it; the virtual kernel ignores it, the
-    /// real-time driver leases exactly that server).
-    Start { id: I, contention: f64, worker: Option<u64> },
+    /// `workers` names where the core placed the work — a [`WorkerSet`]
+    /// so gang placement survives the seam (empty where the core does
+    /// not place, one member for single-worker cores, the full gang for
+    /// [`GangCore`]).  The virtual kernel validates but does not act on
+    /// placement (every worker shares the simulated clock; see
+    /// `kernel.rs`); the real-time driver leases the *lead* member.
+    Start { id: I, contention: f64, workers: WorkerSet },
     /// Terminal record for a unit of work.  The kernel classifies it via
     /// [`SchedulerCore::classify`] and quantises times to the core's
     /// [`log_grain`](SchedulerCore::log_grain).

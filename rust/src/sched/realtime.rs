@@ -50,8 +50,9 @@ use crate::metrics::JobRecord;
 use crate::workload::App;
 
 use super::edf::EdfCore;
+use super::gang::GangCore;
 use super::worksteal::WorkStealCore;
-use super::{CapacityChange, Completion, Effect, SchedulerCore};
+use super::{CapacityChange, Completion, Effect, SchedulerCore, WorkerSet};
 
 /// Lifetime of a live worker in the core's virtual clock: effectively
 /// forever (a model server has no allocation walltime; it lives until
@@ -85,6 +86,10 @@ pub enum LivePolicy {
     /// ([`EdfCore`](super::EdfCore)); the deadline is the client's
     /// request-timeout budget.
     Edf,
+    /// Strict-FCFS gang dispatcher ([`GangCore`]); live evaluations are
+    /// width-1 gangs (one server each), so the policy degenerates to
+    /// head-of-line FCFS with atomic slot reservation.
+    Gang,
 }
 
 impl LivePolicy {
@@ -93,6 +98,7 @@ impl LivePolicy {
             "fcfs" | "hq" => Some(LivePolicy::Fcfs),
             "worksteal" => Some(LivePolicy::WorkSteal),
             "edf" => Some(LivePolicy::Edf),
+            "gang" => Some(LivePolicy::Gang),
             _ => None,
         }
     }
@@ -102,6 +108,7 @@ impl LivePolicy {
             LivePolicy::Fcfs => "fcfs",
             LivePolicy::WorkSteal => "worksteal",
             LivePolicy::Edf => "edf",
+            LivePolicy::Gang => "gang",
         }
     }
 }
@@ -134,6 +141,12 @@ pub fn live_core(policy: LivePolicy) -> LiveCore {
         LivePolicy::Edf => {
             Box::new(LiveSched::new(EdfCore::new(live_autoalloc()), "edf"))
         }
+        // Width-1 gangs: every live evaluation is a one-server task, so
+        // the gang machinery reduces to strict FCFS over servers.
+        LivePolicy::Gang => Box::new(LiveSched::new(
+            GangCore::new(live_autoalloc()).with_gang(1, 1),
+            "gang",
+        )),
     }
 }
 
@@ -185,7 +198,24 @@ impl<M: TaskCore> LiveSched<M> {
                     out.push(Effect::Start {
                         id: task,
                         contention: 1.0,
-                        worker: self.int2ext.get(&worker).copied(),
+                        workers: WorkerSet::from_opt(
+                            self.int2ext.get(&worker).copied(),
+                        ),
+                    });
+                }
+                HqAction::StartGang { task, workers } => {
+                    // Translate every member to the caller's id space; a
+                    // member whose mapping raced away (just-retired
+                    // server) is dropped — the lead member carries the
+                    // dispatch.
+                    let ext: Vec<u64> = workers
+                        .iter()
+                        .filter_map(|w| self.int2ext.get(w).copied())
+                        .collect();
+                    out.push(Effect::Start {
+                        id: task,
+                        contention: 1.0,
+                        workers: WorkerSet::many(ext),
                     });
                 }
                 HqAction::Timer(tt, tm) => {
@@ -495,8 +525,10 @@ impl RtDriver {
                     )));
                     self.timer_seq += 1;
                 }
-                Effect::Start { id, worker, .. } => {
-                    self.ready.push_back((id, worker));
+                Effect::Start { id, workers, .. } => {
+                    // A forwarder executes on one server: the gang's
+                    // lead member (first id) carries the lease.
+                    self.ready.push_back((id, workers.primary()));
                 }
                 Effect::Finish { id, .. } => {
                     self.live.remove(&id);
@@ -694,9 +726,11 @@ mod tests {
         assert_eq!(LivePolicy::parse("worksteal"),
                    Some(LivePolicy::WorkSteal));
         assert_eq!(LivePolicy::parse("edf"), Some(LivePolicy::Edf));
+        assert_eq!(LivePolicy::parse("gang"), Some(LivePolicy::Gang));
         assert_eq!(LivePolicy::parse("nope"), None);
         assert_eq!(LivePolicy::default(), LivePolicy::Fcfs);
-        for p in [LivePolicy::Fcfs, LivePolicy::WorkSteal, LivePolicy::Edf] {
+        for p in [LivePolicy::Fcfs, LivePolicy::WorkSteal, LivePolicy::Edf,
+                  LivePolicy::Gang] {
             assert_eq!(LivePolicy::parse(p.label()), Some(p));
         }
     }
@@ -704,7 +738,7 @@ mod tests {
     #[test]
     fn submit_then_capacity_dispatches_in_order() {
         for policy in [LivePolicy::Fcfs, LivePolicy::WorkSteal,
-                       LivePolicy::Edf] {
+                       LivePolicy::Edf, LivePolicy::Gang] {
             let mut d = RtDriver::for_policy(policy);
             let a = d.submit(60 * SEC);
             let b = d.submit(60 * SEC);
@@ -766,7 +800,7 @@ mod tests {
     #[test]
     fn failed_work_retries_then_quarantines() {
         for policy in [LivePolicy::Fcfs, LivePolicy::WorkSteal,
-                       LivePolicy::Edf] {
+                       LivePolicy::Edf, LivePolicy::Gang] {
             let mut d = RtDriver::for_policy(policy).with_retry(
                 RetryPolicy {
                     max_attempts: 2,

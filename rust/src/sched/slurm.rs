@@ -19,7 +19,7 @@ use crate::slurmlite::core::{Action, BatchCore, JobId, SlurmCore, Timer,
                              USER_EXPERIMENT};
 use crate::workload::scenario;
 
-use super::{Completion, Effect, SchedulerCore};
+use super::{Completion, Effect, SchedulerCore, WorkerSet};
 
 /// Timer payload for [`SlurmSched`]: the wrapped [`SlurmCore`] timers
 /// plus the retry-backoff timers this adapter owns.  SLURM retries a
@@ -102,7 +102,7 @@ impl SlurmSched {
                     Effect::Start {
                         id: job,
                         contention,
-                        worker: Some(node as u64),
+                        workers: WorkerSet::one(node as u64),
                     }
                 }
                 Action::TimedOut { job } => {
@@ -186,7 +186,7 @@ impl SchedulerCore for SlurmSched {
                     out.push(Effect::Start {
                         id,
                         contention,
-                        worker: None,
+                        workers: WorkerSet::empty(),
                     });
                 }
             }

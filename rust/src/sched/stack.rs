@@ -14,8 +14,11 @@
 //!
 //! Generic over the meta-scheduler: `MetaStack<HqCore>` is the paper's
 //! UM-Bridge + HyperQueue stack; `MetaStack<WorkStealCore>` swaps in the
-//! partitioned work-stealing dispatcher.  A future task scheduler costs
-//! one [`TaskCore`] impl.
+//! partitioned work-stealing dispatcher, `MetaStack<EdfCore>` the
+//! deadline-EDF one, and `MetaStack<GangCore>` the moldable gang
+//! scheduler (whose `StartGang` actions surface as multi-member
+//! [`Effect::Start`] worker sets).  A future task scheduler costs one
+//! [`TaskCore`] impl.
 
 use std::collections::{HashMap, HashSet};
 
@@ -29,8 +32,9 @@ use crate::slurmlite::core::{Action, BatchCore, JobId, SlurmCore,
 use crate::workload::{scenario, App, Scenario};
 
 use super::edf::EdfCore;
+use super::gang::GangCore;
 use super::worksteal::WorkStealCore;
-use super::{CapacityChange, Completion, Effect, SchedulerCore};
+use super::{CapacityChange, Completion, Effect, SchedulerCore, WorkerSet};
 
 /// The paper's UM-Bridge + HyperQueue stack.
 pub type HqSched = MetaStack<HqCore>;
@@ -40,6 +44,9 @@ pub type WorkStealSched = MetaStack<WorkStealCore>;
 
 /// The UM-Bridge stack over the deadline-EDF dispatcher.
 pub type EdfSched = MetaStack<EdfCore>;
+
+/// The UM-Bridge stack over the moldable gang dispatcher.
+pub type GangSched = MetaStack<GangCore>;
 
 /// Composite timers: both cores' timers plus the stack's own lifecycle
 /// events (registration pre-jobs, allocation expiry).
@@ -175,7 +182,23 @@ impl<M: TaskCore> MetaStack<M> {
                             out.push(Effect::Start {
                                 id: task,
                                 contention: 1.0,
-                                worker: Some(worker),
+                                workers: WorkerSet::one(worker),
+                            });
+                        }
+                    }
+                    HqAction::StartGang { task, workers } => {
+                        if self.reg_tasks.contains(&task) {
+                            // A registration pre-job ganged across
+                            // workers still just runs its server init.
+                            out.push(Effect::SetTimer(
+                                t + self.server_init,
+                                StackTimer::RegDone(task),
+                            ));
+                        } else {
+                            out.push(Effect::Start {
+                                id: task,
+                                contention: 1.0,
+                                workers: WorkerSet::many(workers),
                             });
                         }
                     }

@@ -1,0 +1,730 @@
+//! [`TaskTable`]: the shared task/worker lifecycle engine under every
+//! HQ-family scheduler core.
+//!
+//! Before this module, `hqlite/core.rs`, `sched/worksteal.rs` and
+//! `sched/edf.rs` each hand-maintained near-identical copies of the task
+//! lifecycle: the task/worker structs, the dispatch-latency and
+//! time-limit timers, completion records, alloc-up bookkeeping and
+//! autoalloc, and the Cooling/Retry recovery machinery.  The table owns
+//! all of that exactly once; a core shrinks to its *ready structure*
+//! (FCFS queue, per-worker deques, deadline heap, gang frontier) plus a
+//! *placement policy*, and calls back into the table for every state
+//! transition.
+//!
+//! ```text
+//!   HqCore ─┐                      ┌─ tasks: id -> TableTask
+//!   WorkStealCore ─┤               │  workers: id -> TableWorker
+//!   EdfCore ─┼──> TaskTable ──────>│  expiry min-heap, autoalloc
+//!   GangCore ─┘   (lifecycle)      │  Dispatched/Limit/Retry timers
+//!                                  └─ completion records, Requeued
+//! ```
+//!
+//! Placement is a worker *set*: [`TableTask::workers`] holds every
+//! worker whose cores the task occupies.  The single-worker cores always
+//! reserve one-element sets; [`GangCore`](crate::sched::GangCore)
+//! reserves moldable multi-worker gangs atomically through the same
+//! [`reserve`](TaskTable::reserve) call, and every release path
+//! (completion, failure, worker loss) frees *all* members — the
+//! all-slots-or-none invariant the chaos suite pins.
+//!
+//! Behavioral-compatibility notes (the refactor is pinned record-for-
+//! record by `tests/scheduler_props.rs` and `tests/campaign_equiv.rs`):
+//!
+//! * `pending` counts live `Pending` tasks.  It replaces `HqCore`'s
+//!   `queue.len() - stale_in_queue` arithmetic — equivalent because every
+//!   live Pending task sits in the FCFS queue exactly once and a task
+//!   completed while requeued leaves exactly one stale entry behind.
+//! * The `Limit` timer guard is configurable: the HQ and work-stealing
+//!   cores kill any `Running` task (state-only guard), while the EDF core
+//!   kills only when the timer armed for *this* run fires
+//!   (`start_t + time_limit == now`) — [`TaskTable::with_exact_limit`].
+//! * Arithmetic on virtual time saturates, matching `EdfCore`; for the
+//!   other cores this is identical to the previous unchecked additions on
+//!   every non-degenerate input.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, BTreeSet, HashMap};
+use std::ops::Range;
+
+use crate::clock::Micros;
+use crate::hqlite::core::drain_due_workers;
+use crate::hqlite::{AutoAllocConfig, HqAction, HqTimer, TaskId, TaskSpec,
+                    WorkerId};
+use crate::metrics::JobRecord;
+
+/// Task lifecycle states, shared by every core riding the table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    /// Waiting in some core's ready structure.
+    Pending,
+    /// Slots reserved; the dispatch-latency timer is in flight.
+    Dispatched,
+    /// Started on its worker set; the limit timer is armed.
+    Running,
+    /// Failed transiently; off every worker, waiting out its retry
+    /// backoff (re-enters the core's ready structure when `Retry` fires).
+    Cooling,
+}
+
+/// One in-flight task (finished tasks are evicted from the table).
+#[derive(Clone, Debug)]
+pub struct TableTask {
+    /// The submitted spec (tag, cores per worker, time request/limit).
+    pub spec: TaskSpec,
+    /// Current lifecycle state.
+    pub state: TaskState,
+    /// Submission time.
+    pub submit_t: Micros,
+    /// Start time of the current run (0 until first started).
+    pub start_t: Micros,
+    /// Workers whose cores this task currently occupies: empty while
+    /// Pending/Cooling, one entry for single-worker cores, the full gang
+    /// for moldable tasks.
+    pub workers: Vec<WorkerId>,
+    /// Absolute deadline, `submit_t + time_limit`, fixed at submission
+    /// (requeues keep it — what makes EDF starvation-free).
+    pub deadline: Micros,
+}
+
+/// One live worker (lost/expired workers leave the map).
+#[derive(Clone, Debug)]
+pub struct TableWorker {
+    /// Cores this worker was provisioned with.
+    pub cores_total: u32,
+    /// Cores currently unreserved.
+    pub cores_free: u32,
+    /// Virtual time at which the surrounding allocation expires.
+    pub expires_t: Micros,
+    /// Tasks currently dispatched to / running on this worker.
+    pub running: BTreeSet<TaskId>,
+}
+
+/// Outcome of [`TaskTable::timer`]; tells the core whether to pump.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimerVerdict {
+    /// Stale timer (evicted/requeued task); nothing happened.
+    Ignored,
+    /// `Dispatched` elapsed: the task is now Running, `StartTask` /
+    /// `StartGang` and its limit timer were emitted.  No pump needed.
+    Started,
+    /// `Limit` fired on a running task: killed, truncated completion
+    /// emitted, slots freed ([`TaskTable::freed`]).  The core must pump.
+    Killed,
+    /// `Retry` fired: the task is Pending again.  The core must re-enter
+    /// it into its ready structure and pump.
+    Requeue(TaskId),
+}
+
+/// Outcome of [`TaskTable::fail`]; tells the core whether to pump.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailVerdict {
+    /// Task absent or not in-flight; nothing happened.
+    Ignored,
+    /// Retry budget exhausted: killed, truncated completion emitted,
+    /// slots freed ([`TaskTable::freed`]).  The core must pump.
+    Killed,
+    /// Transient failure: all slots released ([`TaskTable::freed`]), the
+    /// task is Cooling and a `Retry` timer was emitted.  The core must
+    /// pump.
+    Cooling,
+}
+
+/// The shared lifecycle engine.  See the module docs for the seam.
+pub struct TaskTable {
+    cfg: AutoAllocConfig,
+    /// In-flight tasks only; finished tasks are evicted.
+    tasks: HashMap<TaskId, TableTask>,
+    /// Live workers, id-ordered for deterministic scans.
+    workers: BTreeMap<WorkerId, TableWorker>,
+    /// (expires_t, worker) min-heap; entries for already-lost workers
+    /// are skipped lazily.
+    expiry: BinaryHeap<Reverse<(Micros, WorkerId)>>,
+    /// Live tasks currently in the Pending state — drives autoalloc.
+    pending: usize,
+    retired: u64,
+    next_task: TaskId,
+    next_worker: WorkerId,
+    next_alloc_tag: u64,
+    allocs_in_queue: u32,
+    /// EDF semantics: a `Limit` timer kills only if it is the one armed
+    /// for the current run (`start_t + time_limit == now`).
+    limit_exact: bool,
+    /// Workers whose cores the last `complete`/`fail` released — read via
+    /// [`freed`](TaskTable::freed) so cores can re-index availability
+    /// without a per-event allocation.
+    freed_scratch: Vec<WorkerId>,
+    /// Stats: dispatches performed (a gang counts once).
+    dispatches: u64,
+}
+
+impl TaskTable {
+    /// A fresh table with the state-only limit guard (HQ semantics).
+    pub fn new(cfg: AutoAllocConfig) -> Self {
+        TaskTable {
+            cfg,
+            tasks: HashMap::new(),
+            workers: BTreeMap::new(),
+            expiry: BinaryHeap::new(),
+            pending: 0,
+            retired: 0,
+            next_task: 1,
+            next_worker: 1,
+            next_alloc_tag: 1,
+            allocs_in_queue: 0,
+            limit_exact: false,
+            freed_scratch: Vec::new(),
+            dispatches: 0,
+        }
+    }
+
+    /// Switch to the exact limit guard: a `Limit` timer kills only when
+    /// it fires at precisely `start_t + time_limit` for the current run
+    /// (EDF semantics — a stale limit from a pre-requeue run must not
+    /// truncate the rerun).
+    pub fn with_exact_limit(mut self) -> Self {
+        self.limit_exact = true;
+        self
+    }
+
+    // ---- admission ------------------------------------------------------
+
+    /// Admit a task as Pending; the caller enqueues the returned id into
+    /// its ready structure.
+    pub fn admit(&mut self, t: Micros, spec: TaskSpec) -> TaskId {
+        let id = self.next_task;
+        self.next_task += 1;
+        let deadline = t.saturating_add(spec.time_limit);
+        self.tasks.insert(
+            id,
+            TableTask {
+                spec,
+                state: TaskState::Pending,
+                submit_t: t,
+                start_t: 0,
+                workers: Vec::new(),
+                deadline,
+            },
+        );
+        self.pending += 1;
+        id
+    }
+
+    /// A native allocation came up: start `workers_per_alloc` workers
+    /// (bounded by `max_worker_count`), each living until the
+    /// allocation's time limit.  Returns the new worker-id range so the
+    /// caller can index them (availability sets, private deques).
+    pub fn admit_workers(
+        &mut self,
+        t: Micros,
+        time_limit: Micros,
+        cores_per_worker: u32,
+    ) -> Range<WorkerId> {
+        self.allocs_in_queue = self.allocs_in_queue.saturating_sub(1);
+        let first = self.next_worker;
+        for _ in 0..self.cfg.workers_per_alloc {
+            if self.workers.len() as u32 >= self.cfg.max_worker_count {
+                break;
+            }
+            let wid = self.next_worker;
+            self.next_worker += 1;
+            let expires_t = t.saturating_add(time_limit);
+            self.workers.insert(
+                wid,
+                TableWorker {
+                    cores_total: cores_per_worker,
+                    cores_free: cores_per_worker,
+                    expires_t,
+                    running: BTreeSet::new(),
+                },
+            );
+            self.expiry.push(Reverse((expires_t, wid)));
+        }
+        first..self.next_worker
+    }
+
+    /// Submit allocations while there are pending tasks, the backlog
+    /// allows it, and the worker cap is not reached (hqlite semantics).
+    pub fn autoalloc_into(&mut self, out: &mut Vec<HqAction>) {
+        while self.pending > 0
+            && self.allocs_in_queue < self.cfg.backlog
+            && self.workers.len() as u32
+                + self.allocs_in_queue * self.cfg.workers_per_alloc
+                < self.cfg.max_worker_count
+        {
+            self.allocs_in_queue += 1;
+            let tag = self.next_alloc_tag;
+            self.next_alloc_tag += 1;
+            out.push(HqAction::SubmitAllocation {
+                alloc_tag: tag,
+                req: self.cfg.alloc_request,
+            });
+        }
+    }
+
+    // ---- dispatch -------------------------------------------------------
+
+    /// Can `wid` host `id` right now?  Needs `spec.cores` free and an
+    /// allocation outliving the task's time request (HQ semantics).
+    /// False for unknown tasks/workers.
+    pub fn can_start(&self, t: Micros, id: TaskId, wid: WorkerId) -> bool {
+        let (Some(task), Some(w)) = (self.tasks.get(&id), self.workers.get(&wid))
+        else {
+            return false;
+        };
+        w.cores_free >= task.spec.cores
+            && w.expires_t >= t.saturating_add(task.spec.time_request)
+    }
+
+    /// Atomically reserve `spec.cores` on *every* member for a Pending
+    /// task (capacity already checked by the core's placement policy) and
+    /// arm the dispatch-latency timer.  Single-worker cores pass one
+    /// member; `GangCore` passes the whole gang — all slots are taken in
+    /// one transition, so no partial gang is ever observable.
+    pub fn reserve(
+        &mut self,
+        t: Micros,
+        id: TaskId,
+        members: &[WorkerId],
+        out: &mut Vec<HqAction>,
+    ) {
+        debug_assert!(!members.is_empty(), "reserve with an empty gang");
+        let task = self.tasks.get_mut(&id).expect("reserve: unknown task");
+        debug_assert_eq!(task.state, TaskState::Pending);
+        let need = task.spec.cores;
+        task.state = TaskState::Dispatched;
+        task.workers = members.to_vec();
+        for &wid in members {
+            let w = self.workers.get_mut(&wid).expect("reserve: dead worker");
+            w.cores_free -= need;
+            w.running.insert(id);
+        }
+        self.pending -= 1;
+        self.dispatches += 1;
+        out.push(HqAction::Timer(
+            t.saturating_add(self.cfg.dispatch_latency),
+            HqTimer::Dispatched(id),
+        ));
+    }
+
+    // ---- release paths --------------------------------------------------
+
+    /// Remove a worker.  Every task it hosted releases *all* of its slots
+    /// (gang members on other workers included), turns Pending, and emits
+    /// [`HqAction::Requeued`] — in ascending task-id order.  Returns the
+    /// requeued ids for the core to re-enter into its ready structure.
+    pub fn worker_lost(
+        &mut self,
+        wid: WorkerId,
+        out: &mut Vec<HqAction>,
+    ) -> Vec<TaskId> {
+        let mut requeued = Vec::new();
+        if let Some(worker) = self.workers.remove(&wid) {
+            for id in worker.running {
+                let Some(task) = self.tasks.get_mut(&id) else { continue };
+                if !matches!(
+                    task.state,
+                    TaskState::Running | TaskState::Dispatched
+                ) {
+                    continue;
+                }
+                let need = task.spec.cores;
+                for &m in &task.workers {
+                    if m == wid {
+                        continue; // the dead worker's slots died with it
+                    }
+                    if let Some(w) = self.workers.get_mut(&m) {
+                        if w.running.remove(&id) {
+                            w.cores_free += need;
+                        }
+                    }
+                }
+                task.workers.clear();
+                task.state = TaskState::Pending;
+                self.pending += 1;
+                out.push(HqAction::Requeued { task: id });
+                requeued.push(id);
+            }
+        }
+        requeued
+    }
+
+    /// Complete a task: evict it, emit its [`JobRecord`], free every
+    /// member's cores.  Returns false for a stale id (already evicted —
+    /// e.g. the driver's original done-timer firing after a requeue).
+    /// On true the core must pump; [`freed`](TaskTable::freed) lists the
+    /// workers whose cores were released.
+    pub fn complete(
+        &mut self,
+        t: Micros,
+        id: TaskId,
+        truncated: bool,
+        out: &mut Vec<HqAction>,
+    ) -> bool {
+        self.freed_scratch.clear();
+        let Some(task) = self.tasks.remove(&id) else { return false };
+        if task.state == TaskState::Pending {
+            // Completed while requeued: its ready-structure entry is now
+            // stale and the owning core drops it lazily.
+            self.pending -= 1;
+        }
+        self.retired += 1;
+        let record = JobRecord {
+            tag: task.spec.tag,
+            submit: task.submit_t,
+            start: task.start_t,
+            end: t,
+            // HQ CPU time: from task start on the worker (includes the
+            // model-server init the driver folds into the duration).
+            cpu: t.saturating_sub(task.start_t),
+            truncated,
+        };
+        for &m in &task.workers {
+            if let Some(w) = self.workers.get_mut(&m) {
+                if w.running.remove(&id) {
+                    w.cores_free += task.spec.cores;
+                    self.freed_scratch.push(m);
+                }
+            }
+        }
+        out.push(HqAction::TaskCompleted { task: id, record });
+        true
+    }
+
+    /// The task's attempt failed mid-run.  `Some(backoff)`: release every
+    /// slot, park the task Cooling, arm `Retry`, emit `Requeued`.
+    /// `None`: quarantine — kill and emit a truncated completion so the
+    /// poison task is reported, never dropped.
+    pub fn fail(
+        &mut self,
+        t: Micros,
+        id: TaskId,
+        retry_in: Option<Micros>,
+        out: &mut Vec<HqAction>,
+    ) -> FailVerdict {
+        let Some(task) = self.tasks.get_mut(&id) else {
+            return FailVerdict::Ignored;
+        };
+        if !matches!(task.state, TaskState::Dispatched | TaskState::Running) {
+            return FailVerdict::Ignored;
+        }
+        match retry_in {
+            None => {
+                out.push(HqAction::KillTask { task: id });
+                self.complete(t, id, true, out);
+                FailVerdict::Killed
+            }
+            Some(backoff) => {
+                let need = task.spec.cores;
+                task.state = TaskState::Cooling;
+                let members = std::mem::take(&mut task.workers);
+                self.freed_scratch.clear();
+                for &m in &members {
+                    if let Some(w) = self.workers.get_mut(&m) {
+                        if w.running.remove(&id) {
+                            w.cores_free += need;
+                            self.freed_scratch.push(m);
+                        }
+                    }
+                }
+                out.push(HqAction::Requeued { task: id });
+                out.push(HqAction::Timer(
+                    t.saturating_add(backoff),
+                    HqTimer::Retry(id),
+                ));
+                FailVerdict::Cooling
+            }
+        }
+    }
+
+    /// Dispatch one timer.  See [`TimerVerdict`] for what the core must
+    /// do afterwards.
+    pub fn timer(
+        &mut self,
+        t: Micros,
+        timer: HqTimer,
+        out: &mut Vec<HqAction>,
+    ) -> TimerVerdict {
+        match timer {
+            HqTimer::Dispatched(id) => {
+                let Some(task) = self.tasks.get_mut(&id) else {
+                    return TimerVerdict::Ignored;
+                };
+                if task.state != TaskState::Dispatched {
+                    return TimerVerdict::Ignored;
+                }
+                task.state = TaskState::Running;
+                task.start_t = t;
+                let limit = task.spec.time_limit;
+                match task.workers.as_slice() {
+                    [worker] => out.push(HqAction::StartTask {
+                        task: id,
+                        worker: *worker,
+                    }),
+                    gang => out.push(HqAction::StartGang {
+                        task: id,
+                        workers: gang.to_vec(),
+                    }),
+                }
+                out.push(HqAction::Timer(
+                    t.saturating_add(limit),
+                    HqTimer::Limit(id),
+                ));
+                TimerVerdict::Started
+            }
+            HqTimer::Limit(id) => {
+                let due = self
+                    .tasks
+                    .get(&id)
+                    .filter(|task| task.state == TaskState::Running)
+                    .map(|task| {
+                        task.start_t.saturating_add(task.spec.time_limit)
+                    });
+                let kill = match due {
+                    Some(d) => !self.limit_exact || d == t,
+                    None => false,
+                };
+                if kill {
+                    out.push(HqAction::KillTask { task: id });
+                    self.complete(t, id, true, out);
+                    TimerVerdict::Killed
+                } else {
+                    TimerVerdict::Ignored
+                }
+            }
+            HqTimer::Retry(id) => {
+                let Some(task) = self.tasks.get_mut(&id) else {
+                    return TimerVerdict::Ignored;
+                };
+                if task.state != TaskState::Cooling {
+                    return TimerVerdict::Ignored;
+                }
+                task.state = TaskState::Pending;
+                self.pending += 1;
+                TimerVerdict::Requeue(id)
+            }
+        }
+    }
+
+    /// Pop every worker whose allocation lapsed at or before `t`; the
+    /// core routes each through its worker-lost path.
+    pub fn expire_due(&mut self, t: Micros) -> Vec<WorkerId> {
+        drain_due_workers(&mut self.expiry, t, |wid| {
+            self.workers.contains_key(&wid)
+        })
+    }
+
+    // ---- introspection --------------------------------------------------
+
+    /// Workers whose cores the last `complete`/`fail`/`timer(Limit)`
+    /// call released (cores may still be partially busy).
+    pub fn freed(&self) -> &[WorkerId] {
+        &self.freed_scratch
+    }
+
+    /// The shared autoalloc configuration.
+    pub fn cfg(&self) -> &AutoAllocConfig {
+        &self.cfg
+    }
+
+    /// The task, if still in flight.
+    pub fn task(&self, id: TaskId) -> Option<&TableTask> {
+        self.tasks.get(&id)
+    }
+
+    /// Every resident (in-flight) task, unordered — invariant probes
+    /// (e.g. [`GangCore::no_partial_gangs`](crate::sched::GangCore::no_partial_gangs))
+    /// sweep this.
+    pub fn iter_tasks(&self) -> impl Iterator<Item = (TaskId, &TableTask)> {
+        self.tasks.iter().map(|(&id, task)| (id, task))
+    }
+
+    /// Is the task alive and waiting for dispatch?
+    pub fn is_pending(&self, id: TaskId) -> bool {
+        self.tasks.get(&id).map(|t| t.state) == Some(TaskState::Pending)
+    }
+
+    /// Is the task still resident (not yet completed)?
+    pub fn task_live(&self, id: TaskId) -> bool {
+        self.tasks.contains_key(&id)
+    }
+
+    /// The live-worker map, id-ordered (placement scans iterate this).
+    pub fn workers_map(&self) -> &BTreeMap<WorkerId, TableWorker> {
+        &self.workers
+    }
+
+    /// The worker, if live.
+    pub fn worker(&self, wid: WorkerId) -> Option<&TableWorker> {
+        self.workers.get(&wid)
+    }
+
+    /// Live tasks currently Pending.
+    pub fn pending_tasks(&self) -> usize {
+        self.pending
+    }
+
+    /// Live workers.
+    pub fn live_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Allocations submitted to the native scheduler, not yet up.
+    pub fn allocs_waiting(&self) -> u32 {
+        self.allocs_in_queue
+    }
+
+    /// Tasks resident in the hot map (bounded by in-flight work).
+    pub fn resident_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Tasks completed and evicted.
+    pub fn retired_count(&self) -> u64 {
+        self.retired
+    }
+
+    /// Dispatches performed (a gang counts once).
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches
+    }
+
+    /// Append the ids of live workers (crash-victim candidates for the
+    /// fault plane), ascending.
+    pub fn live_worker_ids_into(&self, out: &mut Vec<u64>) {
+        out.extend(self.workers.keys().copied());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::{MS, SEC};
+    use crate::cluster::JobRequest;
+
+    fn cfg() -> AutoAllocConfig {
+        AutoAllocConfig {
+            backlog: 2,
+            workers_per_alloc: 1,
+            max_worker_count: 4,
+            alloc_request: JobRequest::new(16, 16, 3600 * SEC),
+            dispatch_latency: MS,
+        }
+    }
+
+    fn spec(tag: u64, cores: u32) -> TaskSpec {
+        TaskSpec { tag, cores, time_request: SEC, time_limit: 100 * SEC }
+    }
+
+    #[test]
+    fn gang_reserve_takes_and_releases_all_slots_atomically() {
+        let mut tab = TaskTable::new(cfg());
+        let mut out = Vec::new();
+        tab.admit_workers(0, 3600 * SEC, 16);
+        tab.admit_workers(0, 3600 * SEC, 16);
+        let id = tab.admit(0, spec(1, 8));
+        tab.reserve(0, id, &[1, 2], &mut out);
+        assert_eq!(tab.worker(1).unwrap().cores_free, 8);
+        assert_eq!(tab.worker(2).unwrap().cores_free, 8);
+        assert!(tab.worker(1).unwrap().running.contains(&id));
+        assert!(tab.worker(2).unwrap().running.contains(&id));
+        // Completion frees every member.
+        out.clear();
+        assert!(tab.complete(SEC, id, false, &mut out));
+        assert_eq!(tab.freed(), &[1, 2]);
+        assert_eq!(tab.worker(1).unwrap().cores_free, 16);
+        assert_eq!(tab.worker(2).unwrap().cores_free, 16);
+    }
+
+    #[test]
+    fn losing_one_gang_member_releases_the_others() {
+        let mut tab = TaskTable::new(cfg());
+        let mut out = Vec::new();
+        tab.admit_workers(0, 3600 * SEC, 16);
+        tab.admit_workers(0, 3600 * SEC, 16);
+        let id = tab.admit(0, spec(1, 16));
+        tab.reserve(0, id, &[1, 2], &mut out);
+        out.clear();
+        let requeued = tab.worker_lost(1, &mut out);
+        assert_eq!(requeued, vec![id]);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            HqAction::Requeued { task } if *task == id
+        )));
+        // The surviving member's slots are back and hold nothing.
+        let w2 = tab.worker(2).unwrap();
+        assert_eq!(w2.cores_free, 16);
+        assert!(w2.running.is_empty());
+        assert!(tab.is_pending(id));
+        assert_eq!(tab.task(id).unwrap().workers, Vec::<WorkerId>::new());
+    }
+
+    #[test]
+    fn gang_start_action_lists_every_member() {
+        let mut tab = TaskTable::new(cfg());
+        let mut out = Vec::new();
+        tab.admit_workers(0, 3600 * SEC, 16);
+        tab.admit_workers(0, 3600 * SEC, 16);
+        let id = tab.admit(0, spec(1, 4));
+        tab.reserve(0, id, &[1, 2], &mut out);
+        out.clear();
+        assert_eq!(tab.timer(MS, HqTimer::Dispatched(id), &mut out),
+                   TimerVerdict::Started);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            HqAction::StartGang { task, workers }
+                if *task == id && workers == &vec![1, 2]
+        )));
+        // Single-worker reservations still emit plain StartTask.
+        let solo = tab.admit(0, spec(2, 4));
+        tab.reserve(0, solo, &[1], &mut out);
+        out.clear();
+        tab.timer(2 * MS, HqTimer::Dispatched(solo), &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            HqAction::StartTask { task, worker: 1 } if *task == solo
+        )));
+    }
+
+    #[test]
+    fn exact_limit_guard_ignores_stale_limits() {
+        let mut tab = TaskTable::new(cfg()).with_exact_limit();
+        let mut out = Vec::new();
+        tab.admit_workers(0, 3600 * SEC, 16);
+        let id = tab.admit(0, spec(1, 16));
+        tab.reserve(0, id, &[1], &mut out);
+        tab.timer(MS, HqTimer::Dispatched(id), &mut out);
+        // A limit not matching start_t + time_limit is stale.
+        out.clear();
+        assert_eq!(tab.timer(50 * SEC, HqTimer::Limit(id), &mut out),
+                   TimerVerdict::Ignored);
+        assert!(out.is_empty());
+        // The armed one (start_t = 1 ms) kills.
+        assert_eq!(
+            tab.timer(MS + 100 * SEC, HqTimer::Limit(id), &mut out),
+            TimerVerdict::Killed
+        );
+        assert!(!tab.task_live(id));
+    }
+
+    #[test]
+    fn pending_counter_tracks_requeue_retry_cycle() {
+        let mut tab = TaskTable::new(cfg());
+        let mut out = Vec::new();
+        tab.admit_workers(0, 3600 * SEC, 16);
+        let id = tab.admit(0, spec(1, 16));
+        assert_eq!(tab.pending_tasks(), 1);
+        tab.reserve(0, id, &[1], &mut out);
+        assert_eq!(tab.pending_tasks(), 0);
+        assert_eq!(tab.fail(MS, id, Some(SEC), &mut out),
+                   FailVerdict::Cooling);
+        assert_eq!(tab.freed(), &[1]);
+        assert_eq!(tab.pending_tasks(), 0, "cooling is not pending");
+        assert_eq!(tab.timer(MS + SEC, HqTimer::Retry(id), &mut out),
+                   TimerVerdict::Requeue(id));
+        assert_eq!(tab.pending_tasks(), 1);
+        // Completing the task while Pending drops the counter.
+        assert!(tab.complete(2 * SEC, id, false, &mut out));
+        assert_eq!(tab.pending_tasks(), 0);
+        assert_eq!(tab.retired_count(), 1);
+    }
+}

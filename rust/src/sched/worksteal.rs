@@ -10,13 +10,17 @@
 //! the classic owner-takes-head / thief-takes-tail discipline, which
 //! keeps the per-deque FIFO order of everything left behind intact.
 //!
-//! Everything around dispatch keeps hqlite's semantics so the stack
-//! drivers treat the two interchangeably: the same
-//! [`AutoAllocConfig`] automatic allocation (backlog, workers-per-alloc,
-//! worker cap), the same expiry min-heap, the same time-request gating
-//! (a task only starts on a worker whose allocation outlives its
-//! `time_request`), the same dispatch-latency and time-limit timers, and
-//! the same action vocabulary ([`HqAction`]/[`HqTimer`]).
+//! The task/worker lifecycle (timers, completion records, autoalloc,
+//! Cooling/Retry recovery) lives in the shared
+//! [`TaskTable`](crate::sched::table::TaskTable); this file keeps only
+//! the ready structure — the per-worker deques and the shared backlog —
+//! and the placement/steal policy.  The stack drivers treat every table
+//! rider interchangeably: the same [`AutoAllocConfig`] automatic
+//! allocation (backlog, workers-per-alloc, worker cap), the same expiry
+//! min-heap, the same time-request gating (a task only starts on a
+//! worker whose allocation outlives its `time_request`), the same
+//! dispatch-latency and time-limit timers, and the same action
+//! vocabulary ([`HqAction`]/[`HqTimer`]).
 //!
 //! Determinism: workers live in a `BTreeMap` and every scan (placement,
 //! backlog drain, steal) runs in worker-id order with explicit
@@ -31,77 +35,30 @@
 //! O(w + d); submission placement is O(w); completion is O(log w) map
 //! access + one pump.  See PERF.md for the full table.
 
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::clock::Micros;
-use crate::hqlite::core::drain_due_workers;
 use crate::hqlite::{AutoAllocConfig, HqAction, HqTimer, TaskCore, TaskId,
                     TaskSpec, WorkerId};
-use crate::metrics::JobRecord;
-
-#[derive(Clone, Copy, Debug, PartialEq)]
-enum TaskState {
-    Pending,
-    Dispatched,
-    Running,
-    /// Failed transiently; off every worker and every deque, waiting
-    /// out its retry backoff.  Re-enters via the shared backlog when
-    /// the `Retry` timer fires.
-    Cooling,
-}
-
-#[derive(Clone, Debug)]
-struct Task {
-    spec: TaskSpec,
-    state: TaskState,
-    submit_t: Micros,
-    start_t: Micros,
-    worker: WorkerId,
-}
-
-#[derive(Clone, Debug)]
-struct Worker {
-    cores_total: u32,
-    cores_free: u32,
-    /// Virtual time at which the surrounding allocation expires.
-    expires_t: Micros,
-    /// This worker's private FIFO dispatch deque (pending tasks; may
-    /// lazily hold ids of tasks evicted while queued — dropped when
-    /// next encountered, like the backlog).
-    deque: VecDeque<TaskId>,
-    /// Tasks currently dispatched to / running on this worker.
-    running: BTreeSet<TaskId>,
-}
+use crate::sched::table::{FailVerdict, TaskTable, TimerVerdict};
 
 /// The partitioned work-stealing task scheduler.
 pub struct WorkStealCore {
-    cfg: AutoAllocConfig,
-    /// In-flight tasks only; finished tasks are evicted.
-    tasks: HashMap<TaskId, Task>,
+    /// Shared task/worker lifecycle engine.
+    table: TaskTable,
     /// Tasks no live worker could host at submission time (no worker up,
     /// or none with enough total cores).  Drained oldest-first as
     /// capacity appears.  May lazily contain ids of tasks that finished
     /// while requeued; they are dropped when next encountered.
     backlog: VecDeque<TaskId>,
-    /// Live workers, id-ordered for deterministic scans.
-    workers: BTreeMap<WorkerId, Worker>,
-    /// (expires_t, worker) min-heap; entries for already-lost workers
-    /// are skipped lazily.
-    expiry: BinaryHeap<Reverse<(Micros, WorkerId)>>,
-    /// Live tasks currently in the Pending state (deques + backlog,
-    /// minus stale entries) — drives autoalloc.
-    pending: usize,
-    retired: u64,
-    next_task: TaskId,
-    next_worker: WorkerId,
-    next_alloc_tag: u64,
-    allocs_in_queue: u32,
+    /// Per-worker private FIFO dispatch deques (pending tasks; may
+    /// lazily hold ids of tasks evicted while queued — dropped when next
+    /// encountered, like the backlog).  Keys mirror the table's live
+    /// worker map.
+    deques: BTreeMap<WorkerId, VecDeque<TaskId>>,
     /// Reusable worker-id scratch for pump passes (allocation-lean on
     /// the per-event hot path, like the kernel's effect buffer).
     wid_scratch: Vec<WorkerId>,
-    /// Stats: dispatches performed.
-    pub dispatches: u64,
     /// Stats: dispatches that went through a steal.
     pub steals: u64,
 }
@@ -109,26 +66,22 @@ pub struct WorkStealCore {
 impl WorkStealCore {
     pub fn new(cfg: AutoAllocConfig) -> Self {
         WorkStealCore {
-            cfg,
-            tasks: HashMap::new(),
+            table: TaskTable::new(cfg),
             backlog: VecDeque::new(),
-            workers: BTreeMap::new(),
-            expiry: BinaryHeap::new(),
-            pending: 0,
-            retired: 0,
-            next_task: 1,
-            next_worker: 1,
-            next_alloc_tag: 1,
-            allocs_in_queue: 0,
+            deques: BTreeMap::new(),
             wid_scratch: Vec::new(),
-            dispatches: 0,
             steals: 0,
         }
     }
 
+    /// Stats: dispatches performed.
+    pub fn dispatches(&self) -> u64 {
+        self.table.dispatches()
+    }
+
     /// Queued (not yet started) tasks on one worker's private deque.
     pub fn deque_len(&self, wid: WorkerId) -> usize {
-        self.workers.get(&wid).map_or(0, |w| w.deque.len())
+        self.deques.get(&wid).map_or(0, |d| d.len())
     }
 
     /// Steal/FIFO invariant probe: every worker's private deque holds
@@ -136,65 +89,31 @@ impl WorkStealCore {
     /// pop the front, thieves the back, placement appends — so any
     /// violation means an illegal mid-deque mutation.
     pub fn deques_fifo(&self) -> bool {
-        self.workers.values().all(|w| {
-            w.deque
-                .iter()
-                .zip(w.deque.iter().skip(1))
-                .all(|(a, b)| a < b)
+        self.deques.values().all(|d| {
+            d.iter().zip(d.iter().skip(1)).all(|(a, b)| a < b)
         })
-    }
-
-    /// Is this task id still alive and waiting for dispatch?
-    fn is_pending(&self, id: TaskId) -> bool {
-        self.tasks.get(&id).map(|t| t.state) == Some(TaskState::Pending)
     }
 
     /// Assign a freshly submitted task to the least-loaded worker whose
     /// total cores could ever host it (ties: lowest id), or the backlog.
     fn place(&mut self, id: TaskId) {
-        let need = self.tasks[&id].spec.cores;
+        let need = self.table.task(id).expect("placing unknown task").spec.cores;
         let mut best: Option<(usize, WorkerId)> = None;
-        for (&wid, w) in self.workers.iter() {
+        for (&wid, w) in self.table.workers_map().iter() {
             if w.cores_total < need {
                 continue;
             }
-            let len = w.deque.len();
+            let len = self.deques.get(&wid).map_or(0, |d| d.len());
             if best.map_or(true, |(bl, _)| len < bl) {
                 best = Some((len, wid));
             }
         }
         match best {
             Some((_, wid)) => {
-                self.workers.get_mut(&wid).unwrap().deque.push_back(id)
+                self.deques.get_mut(&wid).unwrap().push_back(id)
             }
             None => self.backlog.push_back(id),
         }
-    }
-
-    /// Start `id` on `wid` now (capacity already checked).
-    fn start(&mut self, t: Micros, id: TaskId, wid: WorkerId,
-             out: &mut Vec<HqAction>) {
-        let need = self.tasks[&id].spec.cores;
-        let w = self.workers.get_mut(&wid).unwrap();
-        w.cores_free -= need;
-        w.running.insert(id);
-        let task = self.tasks.get_mut(&id).unwrap();
-        task.state = TaskState::Dispatched;
-        task.worker = wid;
-        self.pending -= 1;
-        self.dispatches += 1;
-        out.push(HqAction::Timer(
-            t + self.cfg.dispatch_latency,
-            HqTimer::Dispatched(id),
-        ));
-    }
-
-    /// Can `wid` start `id` right now?  Needs the cores free and an
-    /// allocation outliving the task's time request (HQ semantics).
-    fn can_start(&self, t: Micros, id: TaskId, wid: WorkerId) -> bool {
-        let w = &self.workers[&wid];
-        let spec = &self.tasks[&id].spec;
-        w.cores_free >= spec.cores && w.expires_t >= t + spec.time_request
     }
 
     /// One owner-dispatch sweep: every worker starts the front of its
@@ -204,26 +123,26 @@ impl WorkStealCore {
         let mut progressed = false;
         let mut wids = std::mem::take(&mut self.wid_scratch);
         wids.clear();
-        wids.extend(self.workers.keys().copied());
+        wids.extend(self.deques.keys().copied());
         for &wid in &wids {
             loop {
-                let Some(&front) = self.workers[&wid].deque.front() else {
+                let Some(&front) = self.deques[&wid].front() else {
                     break;
                 };
-                if !self.is_pending(front) {
+                if !self.table.is_pending(front) {
                     // Stale entry: the task completed while still
                     // queued (the live plane evicts cancelled Pending
                     // tasks via `on_task_done`).  Drop lazily, same
                     // discipline as the backlog.
-                    self.workers.get_mut(&wid).unwrap().deque.pop_front();
+                    self.deques.get_mut(&wid).unwrap().pop_front();
                     progressed = true;
                     continue;
                 }
-                if !self.can_start(t, front, wid) {
+                if !self.table.can_start(t, front, wid) {
                     break;
                 }
-                self.workers.get_mut(&wid).unwrap().deque.pop_front();
-                self.start(t, front, wid, out);
+                self.deques.get_mut(&wid).unwrap().pop_front();
+                self.table.reserve(t, front, &[wid], out);
                 progressed = true;
             }
         }
@@ -237,19 +156,20 @@ impl WorkStealCore {
     fn drain_backlog(&mut self, t: Micros, out: &mut Vec<HqAction>) -> bool {
         let mut progressed = false;
         while let Some(&front) = self.backlog.front() {
-            if !self.is_pending(front) {
+            if !self.table.is_pending(front) {
                 self.backlog.pop_front();
                 progressed = true;
                 continue;
             }
             let pick = self
-                .workers
+                .table
+                .workers_map()
                 .keys()
                 .copied()
-                .find(|&wid| self.can_start(t, front, wid));
+                .find(|&wid| self.table.can_start(t, front, wid));
             let Some(wid) = pick else { break };
             self.backlog.pop_front();
-            self.start(t, front, wid, out);
+            self.table.reserve(t, front, &[wid], out);
             progressed = true;
         }
         progressed
@@ -264,9 +184,13 @@ impl WorkStealCore {
         let mut thieves = std::mem::take(&mut self.wid_scratch);
         thieves.clear();
         thieves.extend(
-            self.workers
+            self.table
+                .workers_map()
                 .iter()
-                .filter(|(_, w)| w.cores_free > 0 && w.deque.is_empty())
+                .filter(|&(wid, w)| {
+                    w.cores_free > 0
+                        && self.deques.get(wid).map_or(true, |d| d.is_empty())
+                })
                 .map(|(&wid, _)| wid),
         );
         let mut stole = false;
@@ -274,27 +198,27 @@ impl WorkStealCore {
             // Victim: longest deque (ties: lowest id), excluding the
             // thief (whose deque is empty anyway).
             let mut victim: Option<(usize, WorkerId)> = None;
-            for (&wid, w) in self.workers.iter() {
-                if wid == thief || w.deque.is_empty() {
+            for (&wid, d) in self.deques.iter() {
+                if wid == thief || d.is_empty() {
                     continue;
                 }
-                let len = w.deque.len();
+                let len = d.len();
                 if victim.map_or(true, |(bl, _)| len > bl) {
                     victim = Some((len, wid));
                 }
             }
             let Some((_, vid)) = victim else { continue };
-            let &tail = self.workers[&vid].deque.back().unwrap();
-            if !self.is_pending(tail) {
+            let &tail = self.deques[&vid].back().unwrap();
+            if !self.table.is_pending(tail) {
                 // Stale tail (see dispatch_local): drop it and report
                 // progress so the pump rescans.
-                self.workers.get_mut(&vid).unwrap().deque.pop_back();
+                self.deques.get_mut(&vid).unwrap().pop_back();
                 stole = true;
                 break;
             }
-            if self.can_start(t, tail, thief) {
-                self.workers.get_mut(&vid).unwrap().deque.pop_back();
-                self.start(t, tail, thief, out);
+            if self.table.can_start(t, tail, thief) {
+                self.deques.get_mut(&vid).unwrap().pop_back();
+                self.table.reserve(t, tail, &[thief], out);
                 self.steals += 1;
                 stole = true;
                 break;
@@ -320,55 +244,7 @@ impl WorkStealCore {
                 break;
             }
         }
-        self.autoalloc_into(out);
-    }
-
-    /// Submit allocations while there are pending tasks, the backlog
-    /// allows it, and the worker cap is not reached (hqlite semantics).
-    fn autoalloc_into(&mut self, out: &mut Vec<HqAction>) {
-        while self.pending > 0
-            && self.allocs_in_queue < self.cfg.backlog
-            && self.workers.len() as u32
-                + self.allocs_in_queue * self.cfg.workers_per_alloc
-                < self.cfg.max_worker_count
-        {
-            self.allocs_in_queue += 1;
-            let tag = self.next_alloc_tag;
-            self.next_alloc_tag += 1;
-            out.push(HqAction::SubmitAllocation {
-                alloc_tag: tag,
-                req: self.cfg.alloc_request,
-            });
-        }
-    }
-
-    fn complete(&mut self, t: Micros, id: TaskId, truncated: bool,
-                out: &mut Vec<HqAction>) {
-        // Finished tasks are evicted, so a stale duplicate completion
-        // (the driver's original done-timer firing after a requeue)
-        // simply misses the map.
-        let Some(task) = self.tasks.remove(&id) else { return };
-        if task.state == TaskState::Pending {
-            // Completed while requeued: its deque/backlog entry is now
-            // stale and will be lazily dropped.
-            self.pending -= 1;
-        }
-        self.retired += 1;
-        let record = JobRecord {
-            tag: task.spec.tag,
-            submit: task.submit_t,
-            start: task.start_t,
-            end: t,
-            cpu: t.saturating_sub(task.start_t),
-            truncated,
-        };
-        if let Some(w) = self.workers.get_mut(&task.worker) {
-            if w.running.remove(&id) {
-                w.cores_free += task.spec.cores;
-            }
-        }
-        out.push(HqAction::TaskCompleted { task: id, record });
-        self.pump(t, out);
+        self.table.autoalloc_into(out);
     }
 }
 
@@ -379,19 +255,7 @@ impl TaskCore for WorkStealCore {
         spec: TaskSpec,
         out: &mut Vec<HqAction>,
     ) -> TaskId {
-        let id = self.next_task;
-        self.next_task += 1;
-        self.tasks.insert(
-            id,
-            Task {
-                spec,
-                state: TaskState::Pending,
-                submit_t: t,
-                start_t: 0,
-                worker: 0,
-            },
-        );
-        self.pending += 1;
+        let id = self.table.admit(t, spec);
         self.place(id);
         self.pump(t, out);
         id
@@ -404,24 +268,8 @@ impl TaskCore for WorkStealCore {
         cores_per_worker: u32,
         out: &mut Vec<HqAction>,
     ) {
-        self.allocs_in_queue = self.allocs_in_queue.saturating_sub(1);
-        for _ in 0..self.cfg.workers_per_alloc {
-            if self.workers.len() as u32 >= self.cfg.max_worker_count {
-                break;
-            }
-            let wid = self.next_worker;
-            self.next_worker += 1;
-            self.workers.insert(
-                wid,
-                Worker {
-                    cores_total: cores_per_worker,
-                    cores_free: cores_per_worker,
-                    expires_t: t + time_limit,
-                    deque: VecDeque::new(),
-                    running: BTreeSet::new(),
-                },
-            );
-            self.expiry.push(Reverse((t + time_limit, wid)));
+        for wid in self.table.admit_workers(t, time_limit, cores_per_worker) {
+            self.deques.insert(wid, VecDeque::new());
         }
         self.pump(t, out);
     }
@@ -432,69 +280,37 @@ impl TaskCore for WorkStealCore {
         wid: WorkerId,
         out: &mut Vec<HqAction>,
     ) {
-        if let Some(worker) = self.workers.remove(&wid) {
-            // No task lost: the private deque requeues in FIFO order,
-            // then the in-flight set in ascending task-id order
-            // (deterministic), all onto the shared backlog.
-            for id in worker.deque {
-                if self.is_pending(id) {
+        // No task lost: the private deque requeues in FIFO order, then
+        // the in-flight set in ascending task-id order (deterministic),
+        // all onto the shared backlog.
+        if let Some(deque) = self.deques.remove(&wid) {
+            for id in deque {
+                if self.table.is_pending(id) {
                     self.backlog.push_back(id);
                 }
             }
-            for id in worker.running {
-                if let Some(task) = self.tasks.get_mut(&id) {
-                    if matches!(
-                        task.state,
-                        TaskState::Running | TaskState::Dispatched
-                    ) {
-                        task.state = TaskState::Pending;
-                        self.pending += 1;
-                        self.backlog.push_back(id);
-                        out.push(HqAction::Requeued { task: id });
-                    }
-                }
-            }
+        }
+        for id in self.table.worker_lost(wid, out) {
+            self.backlog.push_back(id);
         }
         self.pump(t, out);
     }
 
     fn on_task_done_into(&mut self, t: Micros, id: TaskId,
                          out: &mut Vec<HqAction>) {
-        self.complete(t, id, false, out)
+        // A stale duplicate completion (the driver's original done-timer
+        // firing after a requeue) misses the table: no pump.
+        if self.table.complete(t, id, false, out) {
+            self.pump(t, out);
+        }
     }
 
     fn on_timer_into(&mut self, t: Micros, timer: HqTimer,
                      out: &mut Vec<HqAction>) {
-        match timer {
-            HqTimer::Dispatched(id) => {
-                let Some(task) = self.tasks.get_mut(&id) else { return };
-                if task.state != TaskState::Dispatched {
-                    return;
-                }
-                task.state = TaskState::Running;
-                task.start_t = t;
-                let worker = task.worker;
-                let limit = task.spec.time_limit;
-                out.push(HqAction::StartTask { task: id, worker });
-                out.push(HqAction::Timer(t + limit, HqTimer::Limit(id)));
-            }
-            HqTimer::Limit(id) => {
-                let running = matches!(
-                    self.tasks.get(&id).map(|x| x.state),
-                    Some(TaskState::Running)
-                );
-                if running {
-                    out.push(HqAction::KillTask { task: id });
-                    self.complete(t, id, true, out);
-                }
-            }
-            HqTimer::Retry(id) => {
-                let Some(task) = self.tasks.get_mut(&id) else { return };
-                if task.state != TaskState::Cooling {
-                    return;
-                }
-                task.state = TaskState::Pending;
-                self.pending += 1;
+        match self.table.timer(t, timer, out) {
+            TimerVerdict::Ignored | TimerVerdict::Started => {}
+            TimerVerdict::Killed => self.pump(t, out),
+            TimerVerdict::Requeue(id) => {
                 self.backlog.push_back(id);
                 self.pump(t, out);
             }
@@ -508,69 +324,44 @@ impl TaskCore for WorkStealCore {
         retry_in: Option<Micros>,
         out: &mut Vec<HqAction>,
     ) {
-        let Some(task) = self.tasks.get_mut(&id) else { return };
-        if !matches!(task.state, TaskState::Dispatched | TaskState::Running) {
-            return;
-        }
-        match retry_in {
-            None => {
-                out.push(HqAction::KillTask { task: id });
-                self.complete(t, id, true, out);
-            }
-            Some(backoff) => {
-                let wid = task.worker;
-                let cores = task.spec.cores;
-                task.state = TaskState::Cooling;
-                if let Some(w) = self.workers.get_mut(&wid) {
-                    if w.running.remove(&id) {
-                        w.cores_free += cores;
-                    }
-                }
-                out.push(HqAction::Requeued { task: id });
-                out.push(HqAction::Timer(
-                    t + backoff,
-                    HqTimer::Retry(id),
-                ));
-                self.pump(t, out);
-            }
+        match self.table.fail(t, id, retry_in, out) {
+            FailVerdict::Ignored => {}
+            FailVerdict::Killed | FailVerdict::Cooling => self.pump(t, out),
         }
     }
 
     fn task_live(&self, id: TaskId) -> bool {
-        self.tasks.contains_key(&id)
+        self.table.task_live(id)
     }
 
     fn live_worker_ids_into(&self, out: &mut Vec<u64>) {
-        out.extend(self.workers.keys().copied());
+        self.table.live_worker_ids_into(out);
     }
 
     fn expire_workers_into(&mut self, t: Micros, out: &mut Vec<HqAction>) {
-        let expired = drain_due_workers(&mut self.expiry, t, |wid| {
-            self.workers.contains_key(&wid)
-        });
-        for wid in expired {
+        for wid in self.table.expire_due(t) {
             self.on_worker_lost_into(t, wid, out);
         }
     }
 
     fn pending_tasks(&self) -> usize {
-        self.pending
+        self.table.pending_tasks()
     }
 
     fn live_workers(&self) -> usize {
-        self.workers.len()
+        self.table.live_workers()
     }
 
     fn allocs_waiting(&self) -> u32 {
-        self.allocs_in_queue
+        self.table.allocs_waiting()
     }
 
     fn resident_tasks(&self) -> usize {
-        self.tasks.len()
+        self.table.resident_tasks()
     }
 
     fn retired_count(&self) -> u64 {
-        self.retired
+        self.table.retired_count()
     }
 }
 
@@ -579,6 +370,7 @@ mod tests {
     use super::*;
     use crate::clock::{Des, MS, SEC};
     use crate::cluster::JobRequest;
+    use crate::metrics::JobRecord;
 
     fn cfg() -> AutoAllocConfig {
         AutoAllocConfig {
@@ -634,7 +426,8 @@ mod tests {
                     HqAction::SubmitAllocation { .. } => {
                         des.schedule(t + alloc_delay, Ev::AllocUp)
                     }
-                    HqAction::StartTask { task, .. } => {
+                    HqAction::StartTask { task, .. }
+                    | HqAction::StartGang { task, .. } => {
                         des.schedule(t + dur(task), Ev::TaskDone(task));
                     }
                     HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),

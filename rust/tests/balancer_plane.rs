@@ -124,7 +124,8 @@ fn multi_model_mixed_clients() {
 /// policy, not just the default FCFS core.
 #[test]
 fn alternate_schedulers_serve_end_to_end() {
-    for policy in [LivePolicy::WorkSteal, LivePolicy::Edf] {
+    for policy in [LivePolicy::WorkSteal, LivePolicy::Edf,
+                   LivePolicy::Gang] {
         let mut lb = start(BalancerConfig {
             models: vec!["alpha".into(), "beta".into()],
             max_servers: 2,

@@ -1,0 +1,382 @@
+//! Differential cross-core fuzz harness: seeded random event scripts
+//! (submit / cancel / complete / fail / worker-up / worker-lost / timer
+//! interleavings) driven through ALL five scheduler cores via the
+//! generic `SchedulerCore` seam, checking the structural invariants no
+//! correct scheduler may break:
+//!
+//! * no task is lost — every submitted evaluation reaches exactly one
+//!   terminal record (normal, truncated, cancelled or quarantined);
+//! * no task double-starts — every `Effect::Start` is matched by a
+//!   `Finish` or `Requeued` before the next `Start` of the same id;
+//! * timers never act on evicted ids — a stale timer is either reported
+//!   stale by `timer_is_stale` or is a no-op (it must not resurrect a
+//!   finished task);
+//! * the five cores agree on the terminal tag set for the same script
+//!   (the differential part — schedulers order work differently, but
+//!   none may drop or duplicate an evaluation the others retire).
+//!
+//! A failing script is shrunk by greedy one-op removal to a minimal
+//! repro and printed together with its seed.  The case count defaults
+//! to 200 and is overridable with `CORE_FUZZ_CASES`.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use uqsched::campaign::{CampaignConfig, SlurmMode, Submission};
+use uqsched::clock::{Des, Micros, SEC};
+use uqsched::cluster::ClusterSpec;
+use uqsched::hqlite::HqCore;
+use uqsched::sched::{CapacityChange, Completion, EdfCore, Effect, GangCore,
+                     MetaStack, SchedulerCore, SlurmSched, WorkStealCore};
+use uqsched::util::Rng;
+use uqsched::workload::App;
+
+/// One abstract script operation, core-agnostic: `nth` indexes the
+/// submissions in script order, so the same script addresses the same
+/// logical work on every core regardless of its id space.
+#[derive(Clone, Debug)]
+enum Op {
+    Submit { duration: Micros },
+    Cancel { nth: usize },
+    Fail { nth: usize, retry: Option<Micros> },
+    WorkerUp { id: u64, cores: u32 },
+    WorkerLost { id: u64 },
+}
+
+type Script = Vec<(Micros, Op)>;
+
+fn gen_script(rng: &mut Rng) -> Script {
+    let n_ops = 5 + rng.below(25) as usize;
+    let mut script: Script = Vec::with_capacity(n_ops + 1);
+    let mut submits = 0usize;
+    for _ in 0..n_ops {
+        let t = rng.below(120) * SEC;
+        let op = match rng.below(10) {
+            0..=4 => {
+                submits += 1;
+                Op::Submit { duration: (1 + rng.below(8)) * SEC }
+            }
+            5 => Op::Cancel { nth: rng.below(12) as usize },
+            6 | 7 => Op::Fail {
+                nth: rng.below(12) as usize,
+                retry: if rng.uniform() < 0.5 {
+                    Some((1 + rng.below(3)) * SEC)
+                } else {
+                    None
+                },
+            },
+            8 => Op::WorkerUp { id: 100 + rng.below(4), cores: 16 },
+            _ => Op::WorkerLost { id: 1 + rng.below(6) },
+        };
+        script.push((t, op));
+    }
+    if submits == 0 {
+        script.push((0, Op::Submit { duration: SEC }));
+    }
+    script.sort_by_key(|(t, _)| *t);
+    script
+}
+
+fn fmt_script(script: &Script) -> String {
+    script
+        .iter()
+        .map(|(t, op)| format!("  t={:>4}s {op:?}", t / SEC))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Per-submission bookkeeping in the generic driver.
+struct Work<I> {
+    id: I,
+    /// Driver-owned workload duration returned by `submit_into`.
+    dur: Micros,
+    /// An `Effect::Start` is open (no `Finish`/`Requeued` yet).
+    running: bool,
+    /// A terminal record was observed.
+    finished: bool,
+    /// Attempt counter; a pending work-done from a previous attempt is
+    /// stale once this moves (mirrors the production kernel's epochs).
+    epoch: u64,
+}
+
+/// Drive one core through the script with a miniature DES, checking
+/// invariants at every transition.  Returns the sorted terminal
+/// evaluation tags.
+fn run_script<S: SchedulerCore>(core: &mut S, script: &Script) -> Vec<u64> {
+    enum Ev<T> {
+        Op(usize),
+        Timer(T),
+        WorkDone { nth: usize, epoch: u64 },
+    }
+    let label = core.label();
+    let mut des: Des<Ev<S::Timer>> = Des::new();
+    for (i, (t, _)) in script.iter().enumerate() {
+        des.schedule(*t, Ev::Op(i));
+    }
+    let mut works: Vec<Work<S::Id>> = Vec::new();
+    let mut by_id: HashMap<S::Id, usize> = HashMap::new();
+    let mut tags: Vec<u64> = Vec::new();
+    let mut effects: Vec<Effect<S::Id, S::Timer>> = Vec::new();
+    let mut ops_left = script.len();
+    let mut now: Micros = 0;
+    core.bootstrap_into(0, &mut effects);
+    let mut guard = 0u64;
+    loop {
+        guard += 1;
+        assert!(guard < 2_000_000,
+                "{label}: runaway fuzz script (task lost or livelock)");
+        for e in effects.drain(..) {
+            match e {
+                Effect::SetTimer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                Effect::Start { id, contention, workers } => {
+                    // Work the driver did not submit (none expected with
+                    // background load and registrations disabled) would
+                    // be ignored, mirroring the production kernel.
+                    let Some(&nth) = by_id.get(&id) else { continue };
+                    let w = &mut works[nth];
+                    assert!(!w.finished,
+                            "{label}: Start for evicted task #{nth}");
+                    assert!(!w.running,
+                            "{label}: double Start without Requeued for \
+                             task #{nth}");
+                    let members = workers.ids();
+                    let mut uniq = members.to_vec();
+                    uniq.sort_unstable();
+                    uniq.dedup();
+                    assert_eq!(uniq.len(), members.len(),
+                               "{label}: duplicate members in placement \
+                                {members:?} for task #{nth}");
+                    w.running = true;
+                    w.epoch += 1;
+                    let dd = (w.dur as f64 * contention) as Micros;
+                    des.schedule(now + dd,
+                                 Ev::WorkDone { nth, epoch: w.epoch });
+                }
+                Effect::Requeued { id } => {
+                    let Some(&nth) = by_id.get(&id) else { continue };
+                    let w = &mut works[nth];
+                    assert!(!w.finished,
+                            "{label}: Requeued after Finish for task #{nth}");
+                    w.running = false;
+                    w.epoch += 1;
+                }
+                Effect::Finish { id, record } => {
+                    match core.classify(&record) {
+                        Completion::Evaluation => {
+                            let Some(&nth) = by_id.get(&id) else {
+                                panic!("{label}: evaluation record for \
+                                        unknown work")
+                            };
+                            let w = &mut works[nth];
+                            assert!(!w.finished,
+                                    "{label}: double Finish for task #{nth}");
+                            w.finished = true;
+                            w.running = false;
+                            tags.push(record.tag);
+                        }
+                        Completion::Registration
+                        | Completion::Background => {}
+                    }
+                }
+                Effect::Retire { .. } | Effect::Queued => {}
+            }
+        }
+        if ops_left == 0 && works.iter().all(|w| w.finished) {
+            break;
+        }
+        let Some((t, ev)) = des.pop() else { break };
+        now = t;
+        match ev {
+            Ev::Op(i) => {
+                ops_left -= 1;
+                match &script[i].1 {
+                    Op::Submit { duration } => {
+                        let tag = works.len() as u64;
+                        let s = Submission {
+                            tag,
+                            user: 0,
+                            app: App::Gp,
+                            duration: *duration,
+                        };
+                        let (id, dur) = core.submit_into(t, &s, &mut effects);
+                        by_id.insert(id, works.len());
+                        works.push(Work {
+                            id,
+                            dur,
+                            running: false,
+                            finished: false,
+                            epoch: 0,
+                        });
+                    }
+                    Op::Cancel { nth } => {
+                        // Cancel in any state — including already
+                        // finished (must be a no-op) and cores that do
+                        // not support cancel (documented no-op).
+                        if let Some(w) = works.get(*nth) {
+                            core.cancel_into(t, w.id, &mut effects);
+                        }
+                    }
+                    Op::Fail { nth, retry } => {
+                        // In-contract fault injection: the seam defines
+                        // failure as "failed mid-run", so only a
+                        // currently running attempt can fail (exactly
+                        // when the production fault plane injects).
+                        if let Some(w) = works.get(*nth) {
+                            if w.running && !w.finished {
+                                core.on_work_failed_into(
+                                    t, w.id, *retry, &mut effects,
+                                );
+                            }
+                        }
+                    }
+                    Op::WorkerUp { id, cores } => {
+                        core.on_capacity_change_into(
+                            t,
+                            CapacityChange::WorkerUp {
+                                id: *id,
+                                cores: *cores,
+                            },
+                            &mut effects,
+                        );
+                    }
+                    Op::WorkerLost { id } => {
+                        core.on_capacity_change_into(
+                            t,
+                            CapacityChange::WorkerLost(*id),
+                            &mut effects,
+                        );
+                    }
+                }
+            }
+            Ev::Timer(tm) => {
+                // The kernel contract: stale timers are skipped at pop;
+                // live ones are delivered.  A delivered timer acting on
+                // an evicted id trips the Start/Finish assertions above.
+                if !core.timer_is_stale(&tm) {
+                    core.on_timer_into(t, tm, &mut effects);
+                }
+            }
+            Ev::WorkDone { nth, epoch } => {
+                let w = &works[nth];
+                if !w.finished && w.running && w.epoch == epoch {
+                    core.on_work_done_into(t, w.id, &mut effects);
+                }
+            }
+        }
+    }
+    assert_eq!(ops_left, 0, "{label}: script not fully delivered");
+    for (nth, w) in works.iter().enumerate() {
+        assert!(w.finished,
+                "{label}: task #{nth} lost — no terminal record");
+    }
+    tags.sort_unstable();
+    let n = tags.len();
+    tags.dedup();
+    assert_eq!(tags.len(), n, "{label}: duplicate terminal tags");
+    tags
+}
+
+/// One script through all five cores; panics on any invariant breach or
+/// cross-core terminal-set divergence.
+fn run_all_cores(core_seed: u64, script: &Script) {
+    let mut ccfg = CampaignConfig::paper(App::Gp, 2, core_seed);
+    ccfg.cluster = ClusterSpec::small(8);
+    // Quiet cluster, no registration pre-jobs: every Start/Finish the
+    // harness sees belongs to script work.
+    ccfg.overheads.bg_interarrival = Micros::MAX;
+    ccfg.registration_jobs = 0;
+
+    let mut tagsets: Vec<(&'static str, Vec<u64>)> = Vec::new();
+    {
+        let mut core = SlurmSched::new(&ccfg, SlurmMode::Native);
+        tagsets.push(("slurm", run_script(&mut core, script)));
+    }
+    {
+        let mut core =
+            MetaStack::new(&ccfg, HqCore::new(ccfg.autoalloc()), "HQ");
+        tagsets.push(("hq", run_script(&mut core, script)));
+    }
+    {
+        let mut core = MetaStack::new(
+            &ccfg,
+            WorkStealCore::new(ccfg.autoalloc()),
+            "worksteal",
+        );
+        tagsets.push(("worksteal", run_script(&mut core, script)));
+    }
+    {
+        let mut core =
+            MetaStack::new(&ccfg, EdfCore::new(ccfg.autoalloc()), "edf");
+        tagsets.push(("edf", run_script(&mut core, script)));
+    }
+    {
+        let mut core = MetaStack::new(
+            &ccfg,
+            GangCore::new(ccfg.autoalloc()).with_gang(1, 2),
+            "gang",
+        );
+        tagsets.push(("gang", run_script(&mut core, script)));
+    }
+    let (first_label, first_tags) = &tagsets[0];
+    for (label, tags) in &tagsets[1..] {
+        assert_eq!(tags, first_tags,
+                   "{label}: terminal tag set diverged from {first_label}");
+    }
+}
+
+/// Did the script fail?  Returns the panic message when it did.
+fn script_fails(core_seed: u64, script: &Script) -> Option<String> {
+    catch_unwind(AssertUnwindSafe(|| run_all_cores(core_seed, script)))
+        .err()
+        .map(|e| {
+            e.downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into())
+        })
+}
+
+/// Greedy one-op-removal shrink: keep deleting any single op whose
+/// removal preserves the failure, until no removal does.
+fn shrink(core_seed: u64, mut script: Script) -> Script {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut i = 0;
+    while i < script.len() && script.len() > 1 {
+        let mut cand = script.clone();
+        cand.remove(i);
+        if script_fails(core_seed, &cand).is_some() {
+            script = cand;
+            i = 0; // a removal can unlock earlier removals: rescan
+        } else {
+            i += 1;
+        }
+    }
+    std::panic::set_hook(prev);
+    script
+}
+
+#[test]
+fn fuzz_random_event_scripts_across_all_five_cores() {
+    let cases: u64 = std::env::var("CORE_FUZZ_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    for case in 0..cases {
+        let seed = 0x5EED_C0DE_0000u64.wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        let script = gen_script(&mut rng);
+        let core_seed = rng.next_u64();
+        if let Some(msg) = script_fails(core_seed, &script) {
+            let minimal = shrink(core_seed, script);
+            let repro = script_fails(core_seed, &minimal)
+                .unwrap_or_else(|| msg.clone());
+            panic!(
+                "core fuzz failed at case {case} (seed {seed:#x}): {msg}\n\
+                 minimal repro ({} ops, shrunk failure: {repro}):\n{}",
+                minimal.len(),
+                fmt_script(&minimal),
+            );
+        }
+    }
+}

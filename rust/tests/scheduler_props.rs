@@ -3,14 +3,15 @@
 //! structural properties of correct scheduling regardless of seed —
 //! plus observational-equivalence tests pinning the indexed scheduler
 //! cores to the seed semantics preserved in the `reference` modules,
-//! plus pluggability tests running all four schedulers generically
+//! plus pluggability tests running all five schedulers generically
 //! through one `SchedulerCore` harness, pinning the work-stealing
-//! core's no-task-lost / FIFO-deque invariants under worker churn and
-//! the EDF core's pop-order / no-starvation / determinism invariants.
+//! core's no-task-lost / FIFO-deque invariants under worker churn, the
+//! EDF core's pop-order / no-starvation / determinism invariants, and
+//! the gang core's no-partial-gang invariant under worker churn.
 
 use std::collections::HashMap;
 
-use uqsched::campaign::{run_edf, run_hq, run_slurm, run_worksteal,
+use uqsched::campaign::{run_edf, run_gang, run_hq, run_slurm, run_worksteal,
                         CampaignConfig, CampaignResult, FixedDepth,
                         SlurmMode, Submission};
 use uqsched::cluster::{ClusterSpec, JobRequest, OverheadModel};
@@ -21,8 +22,8 @@ use uqsched::hqlite::{AutoAllocConfig, HqAction, HqCore, HqTimer,
                       ReferenceHqCore, TaskCore, TaskId, TaskSpec};
 use uqsched::metrics::JobRecord;
 use uqsched::sched::{kernel, CapacityChange, EdfCore, Effect, FaultPlan,
-                     FaultSpec, MetaStack, SchedulerCore, SlurmSched,
-                     StackTimer, WorkStealCore};
+                     FaultSpec, GangCore, MetaStack, SchedulerCore,
+                     SlurmSched, StackTimer, WorkStealCore};
 use uqsched::slurmlite::core::{Action, BatchCore, JobId, SlurmCore, Timer,
                                USER_EXPERIMENT};
 use uqsched::slurmlite::ReferenceSlurmCore;
@@ -427,12 +428,20 @@ fn drive_hq_trace<C: HqLike>(
                     let dur = durations[(task - 1) as usize];
                     des.schedule(t + dur, Ev::TaskDone(task));
                 }
+                // Single-worker cores never emit gang starts; a stray
+                // one would be an equivalence break, so fail loudly.
+                HqAction::StartGang { task, .. } => {
+                    panic!("unexpected StartGang for task {task}")
+                }
                 HqAction::KillTask { task } => obs.kills.push(task),
                 HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
                 HqAction::TaskCompleted { task, record } => {
                     records += 1;
                     obs.records.push((task, record));
                 }
+                // Worker expiry requeues running tasks; the core
+                // re-dispatches them itself, so the trace just observes.
+                HqAction::Requeued { .. } => {}
             }
         }
         if records >= submissions.len() {
@@ -558,12 +567,13 @@ fn cancel_while_pending_under_indexed_queue() {
 }
 
 // ---------------------------------------------------------------------------
-// Pluggability: all four schedulers through ONE generic harness.
+// Pluggability: all five schedulers through ONE generic harness.
 //
 // The `SchedulerCore` seam promises that a campaign is scheduler-
 // agnostic: the same protocol, driven by the same generic kernel, must
 // satisfy the same structural properties on every implementation —
-// SLURM, the HQ stack, the work-stealing stack, and the EDF stack.
+// SLURM, the HQ stack, the work-stealing stack, the EDF stack, and the
+// moldable-gang stack.
 // ---------------------------------------------------------------------------
 
 /// The paper's fixed-depth protocol through the generic kernel, against
@@ -575,7 +585,7 @@ fn run_generic<S: SchedulerCore>(core: &mut S, cfg: &Config) -> CampaignResult {
 }
 
 #[test]
-fn prop_all_four_cores_through_one_scheduler_core_harness() {
+fn prop_all_five_cores_through_one_scheduler_core_harness() {
     prop::check("sched-core-generic", 8, |rng| {
         let cfg = random_cfg(rng);
         let ccfg = cfg.campaign();
@@ -602,6 +612,14 @@ fn prop_all_four_cores_through_one_scheduler_core_harness() {
                 &ccfg,
                 EdfCore::new(ccfg.autoalloc()),
                 "edf",
+            );
+            results.push(run_generic(&mut core, &cfg));
+        }
+        {
+            let mut core = MetaStack::new(
+                &ccfg,
+                GangCore::new(ccfg.autoalloc()).with_gang(1, 2),
+                "gang",
             );
             results.push(run_generic(&mut core, &cfg));
         }
@@ -818,7 +836,8 @@ fn prop_worksteal_no_task_lost_and_deques_fifo_under_churn() {
                     HqAction::SubmitAllocation { .. } => {
                         des.schedule(t + alloc_delay, Ev::AllocUp);
                     }
-                    HqAction::StartTask { task, .. } => {
+                    HqAction::StartTask { task, .. }
+                    | HqAction::StartGang { task, .. } => {
                         let dur = durs[(task - 1) as usize];
                         des.schedule(t + dur, Ev::Done(task));
                     }
@@ -827,6 +846,7 @@ fn prop_worksteal_no_task_lost_and_deques_fifo_under_churn() {
                         records.push(record);
                     }
                     HqAction::KillTask { .. } => {}
+                    HqAction::Requeued { .. } => {}
                 }
             }
             if records.len() >= n {
@@ -892,7 +912,8 @@ fn drive_edf(
                 HqAction::SubmitAllocation { .. } => {
                     des.schedule(t + alloc_delay, Ev::AllocUp);
                 }
-                HqAction::StartTask { task, .. } => {
+                HqAction::StartTask { task, .. }
+                | HqAction::StartGang { task, .. } => {
                     starts.push(task);
                     des.schedule(t + dur, Ev::Done(task));
                 }
@@ -901,6 +922,7 @@ fn drive_edf(
                     records.push(record);
                 }
                 HqAction::KillTask { .. } => {}
+                HqAction::Requeued { .. } => {}
             }
         }
         if records.len() >= submissions.len() {
@@ -1021,7 +1043,7 @@ fn prop_edf_campaign_deterministic_under_seed() {
 // Chaos properties: seeded fault plans through the generic kernel.
 //
 // The plan is a pure function of (seed, tag) — see faults.rs — so all
-// four cores must exhibit the *same* failure trace: the same per-tag
+// five cores must exhibit the *same* failure trace: the same per-tag
 // retry totals and the exact same quarantine set, however differently
 // they order the work.  No task may be lost or double-completed, and a
 // quarantined task must still surface as a (truncated) record.
@@ -1084,7 +1106,7 @@ fn assert_chaos_invariants(r: &CampaignResult, cfg: &Config, plan: &FaultPlan) {
 }
 
 #[test]
-fn prop_chaos_identical_failure_traces_across_all_four_cores() {
+fn prop_chaos_identical_failure_traces_across_all_five_cores() {
     prop::check("chaos-cross-core", 6, |rng| {
         let cfg = chaos_cfg(rng);
         let spec = FaultSpec {
@@ -1103,6 +1125,7 @@ fn prop_chaos_identical_failure_traces_across_all_four_cores() {
             run_hq(&ccfg, &mut chaos_sub(&cfg)),
             run_worksteal(&ccfg, &mut chaos_sub(&cfg)),
             run_edf(&ccfg, &mut chaos_sub(&cfg)),
+            run_gang(&ccfg, &mut chaos_sub(&cfg)),
         ];
         for r in &results {
             assert_chaos_invariants(r, &cfg, &plan);
@@ -1141,6 +1164,7 @@ fn prop_chaos_crashes_never_lose_tasks_and_quarantine_is_crash_immune() {
             run_hq(&ccfg, &mut chaos_sub(&cfg)),
             run_worksteal(&ccfg, &mut chaos_sub(&cfg)),
             run_edf(&ccfg, &mut chaos_sub(&cfg)),
+            run_gang(&ccfg, &mut chaos_sub(&cfg)),
         ];
         // Crash interactions may reorder work and force extra (free)
         // requeues, but the failure *fate* is keyed on accepted failures
@@ -1185,6 +1209,269 @@ fn prop_chaos_runs_are_seed_deterministic_and_zero_plan_is_noop() {
                    "chaotic run not seed-deterministic");
         assert_eq!(fail_sig(&c), fail_sig(&d));
         assert_eq!(c.metrics.worker_crashes, d.metrics.worker_crashes);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Gang invariants under worker churn: moldable-width submissions with
+// workers yanked away mid-flight.  The all-slots-or-none invariant
+// (`no_partial_gangs`) must hold after *every* event — losing one gang
+// member releases every other member's slots in the same transition —
+// and no task may be lost.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gang_no_partial_gangs_under_churn() {
+    prop::check("gang-churn", 10, |rng| {
+        let n = 5 + rng.below(20) as usize;
+        let cfg = AutoAllocConfig {
+            backlog: 1 + rng.below(3) as u32,
+            workers_per_alloc: 1 + rng.below(2) as u32,
+            max_worker_count: 2 + rng.below(4) as u32,
+            alloc_request: JobRequest::new(16, 16, 1000 * SEC),
+            dispatch_latency: 1 * MS,
+        };
+        // (submit time, spec, duration, min width, max width): moldable
+        // bounds are random but always satisfiable by the worker cap.
+        let specs: Vec<(Micros, TaskSpec, Micros, u32, u32)> = (0..n)
+            .map(|i| {
+                let t = rng.below(60) * SEC;
+                let spec = TaskSpec {
+                    tag: i as u64,
+                    cores: 1 + rng.below(16) as u32,
+                    time_request: (1 + rng.below(20)) * SEC,
+                    time_limit: 1000 * SEC,
+                };
+                let dur = (1 + rng.below(12)) * SEC / 2;
+                let min = 1 + rng.below(2) as u32; // 1..=2 <= worker cap
+                let max = min + rng.below(3) as u32;
+                (t, spec, dur, min, max)
+            })
+            .collect();
+
+        #[derive(Debug)]
+        enum Ev {
+            Submit(usize),
+            AllocUp,
+            Timer(HqTimer),
+            Done(TaskId),
+            Lose(u64),
+        }
+        let mut des: Des<Ev> = Des::new();
+        for (i, (t, ..)) in specs.iter().enumerate() {
+            des.schedule(*t, Ev::Submit(i));
+        }
+        // Worker churn against random (possibly never-existing) worker
+        // ids — losing a gang member must take the whole gang down
+        // cleanly; misses must be no-ops.
+        for _ in 0..(1 + rng.below(4)) {
+            des.schedule((5 + rng.below(120)) * SEC,
+                         Ev::Lose(1 + rng.below(8)));
+        }
+        let alloc_delay = (1 + rng.below(10)) * SEC;
+
+        let mut core = GangCore::new(cfg);
+        // Durations and widths by task id (ids are assigned in
+        // submission-fire order, which matches the DES pop order of the
+        // Submit events — not the order of `specs`).
+        let mut durs: Vec<Micros> = Vec::new();
+        let mut widths: Vec<(u32, u32)> = Vec::new();
+        let mut records: Vec<JobRecord> = Vec::new();
+        let mut gang_starts = 0usize;
+        let mut acts: Vec<HqAction> = Vec::new();
+        let mut guard = 0u64;
+        while let Some((t, ev)) = des.pop() {
+            guard += 1;
+            assert!(guard < 500_000, "runaway gang churn trace");
+            acts.clear();
+            let ev_dbg = format!("{ev:?}");
+            match ev {
+                Ev::Submit(i) => {
+                    let (_, spec, dur, min, max) = &specs[i];
+                    durs.push(*dur);
+                    widths.push((*min, *max));
+                    core.submit_gang_task_into(t, spec.clone(), *min, *max,
+                                               &mut acts);
+                }
+                Ev::AllocUp => {
+                    core.on_alloc_up_into(t, 1000 * SEC, 16, &mut acts)
+                }
+                Ev::Timer(tm) => core.on_timer_into(t, tm, &mut acts),
+                Ev::Done(id) => core.on_task_done_into(t, id, &mut acts),
+                Ev::Lose(wid) => core.on_worker_lost_into(t, wid, &mut acts),
+            }
+            assert!(core.no_partial_gangs(),
+                    "partial gang observable after {ev_dbg} at t={t}");
+            for a in acts.drain(..) {
+                match a {
+                    HqAction::SubmitAllocation { .. } => {
+                        des.schedule(t + alloc_delay, Ev::AllocUp);
+                    }
+                    HqAction::StartTask { task, .. } => {
+                        let dur = durs[(task - 1) as usize];
+                        des.schedule(t + dur, Ev::Done(task));
+                    }
+                    HqAction::StartGang { task, ref workers } => {
+                        // A started gang is within bounds and every
+                        // member is distinct.
+                        gang_starts += 1;
+                        let (min, max) = widths[(task - 1) as usize];
+                        assert!((workers.len() as u32) >= min.max(2)
+                                && (workers.len() as u32) <= max,
+                                "gang width {} outside {min}..={max}",
+                                workers.len());
+                        let mut uniq = workers.clone();
+                        uniq.sort_unstable();
+                        uniq.dedup();
+                        assert_eq!(uniq.len(), workers.len(),
+                                   "duplicate members in gang {workers:?}");
+                        let dur = durs[(task - 1) as usize];
+                        des.schedule(t + dur, Ev::Done(task));
+                    }
+                    HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                    HqAction::TaskCompleted { record, .. } => {
+                        records.push(record);
+                    }
+                    HqAction::KillTask { .. } => {}
+                    HqAction::Requeued { .. } => {}
+                }
+            }
+            if records.len() >= n {
+                break;
+            }
+        }
+        assert_eq!(records.len(), n,
+                   "worker churn lost gang tasks: {} of {n} completed",
+                   records.len());
+        let mut tags: Vec<u64> = records.iter().map(|r| r.tag).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), n, "duplicate/lost completions under churn");
+        assert_eq!(core.resident_tasks(), 0, "hot map drained");
+        // Multi-worker gangs start with probability ~1/2 per task; on a
+        // busy trace at least one dispatch (gang or solo) must happen.
+        assert!(gang_starts + records.len() > 0);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Byte-equality pin: the TaskTable-backed HqCore must emit the *exact*
+// action stream — same variants, same payloads, same order, same
+// timestamps — as the frozen `hqlite::reference` core on identical
+// traces.  Stronger than the observational `HqObs` equivalence above:
+// nothing is projected out before comparison.
+// ---------------------------------------------------------------------------
+
+/// Drive a task trace exactly like [`drive_hq_trace`], but record every
+/// emitted action verbatim (`Debug`-formatted with its timestamp)
+/// instead of projecting observations.
+fn collect_hq_action_stream<C: HqLike>(
+    core: &mut C,
+    submissions: &[(Micros, TaskSpec)],
+    durations: &[Micros],
+    alloc_delay: Micros,
+    alloc_life: Micros,
+) -> Vec<String> {
+    #[derive(Debug)]
+    enum Ev {
+        Submit(usize),
+        AllocUp,
+        Timer(HqTimer),
+        TaskDone(TaskId),
+        Expire,
+    }
+    let mut des: Des<Ev> = Des::new();
+    for (i, (t, _)) in submissions.iter().enumerate() {
+        des.schedule(*t, Ev::Submit(i));
+    }
+    for k in 1..150u64 {
+        des.schedule(k * alloc_life / 7 + k * SEC, Ev::Expire);
+    }
+    let mut stream = Vec::new();
+    let mut records = 0usize;
+    let mut guard = 0u64;
+    while let Some((t, ev)) = des.pop() {
+        guard += 1;
+        assert!(guard < 2_000_000, "runaway hq action-stream trace");
+        let acts = match ev {
+            Ev::Submit(i) => core.submit_task(t, submissions[i].1.clone()).1,
+            Ev::AllocUp => core.on_alloc_up(t, alloc_life, 16),
+            Ev::Timer(tm) => core.on_timer(t, tm),
+            Ev::TaskDone(id) => core.on_task_done(t, id),
+            Ev::Expire => core.expire_workers(t),
+        };
+        for a in acts {
+            stream.push(format!("t={t} {a:?}"));
+            match a {
+                HqAction::SubmitAllocation { .. } => {
+                    des.schedule(t + alloc_delay, Ev::AllocUp);
+                }
+                HqAction::StartTask { task, .. } => {
+                    let dur = durations[(task - 1) as usize];
+                    des.schedule(t + dur, Ev::TaskDone(task));
+                }
+                HqAction::StartGang { task, .. } => {
+                    panic!("unexpected StartGang for task {task}")
+                }
+                HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                HqAction::TaskCompleted { .. } => records += 1,
+                HqAction::KillTask { .. } | HqAction::Requeued { .. } => {}
+            }
+        }
+        if records >= submissions.len() {
+            break;
+        }
+    }
+    assert_eq!(records, submissions.len(), "hq action stream incomplete");
+    stream
+}
+
+#[test]
+fn prop_hq_table_core_action_stream_is_byte_identical_to_reference() {
+    prop::check("hq-action-stream-equality", 12, |rng| {
+        let n = 4 + rng.below(24) as usize;
+        let mut subs: Vec<(Micros, TaskSpec, Micros)> = (0..n)
+            .map(|i| {
+                let t = rng.below(90) * SEC;
+                let spec = TaskSpec {
+                    tag: i as u64,
+                    cores: 1 + rng.below(16) as u32,
+                    time_request: (1 + rng.below(40)) * SEC,
+                    time_limit: if rng.uniform() < 0.15 {
+                        (1 + rng.below(4)) * SEC
+                    } else {
+                        1000 * SEC
+                    },
+                };
+                let dur = (1 + rng.below(16)) * SEC / 2;
+                (t, spec, dur)
+            })
+            .collect();
+        subs.sort_by_key(|(t, ..)| *t);
+        let submissions: Vec<(Micros, TaskSpec)> =
+            subs.iter().map(|(t, s, _)| (*t, s.clone())).collect();
+        let durations: Vec<Micros> = subs.iter().map(|(.., d)| *d).collect();
+        let alloc_delay = (1 + rng.below(20)) * SEC;
+        let alloc_life = (60 + rng.below(300)) * SEC;
+        let cfg = AutoAllocConfig {
+            backlog: 1 + rng.below(3) as u32,
+            workers_per_alloc: 1 + rng.below(2) as u32,
+            max_worker_count: 2 + rng.below(4) as u32,
+            alloc_request: JobRequest::new(16, 16, alloc_life),
+            dispatch_latency: 1 * MS,
+        };
+        let mut indexed = HqCore::new(cfg.clone());
+        let mut reference = ReferenceHqCore::new(cfg);
+        let a = collect_hq_action_stream(&mut indexed, &submissions,
+                                         &durations, alloc_delay, alloc_life);
+        let b = collect_hq_action_stream(&mut reference, &submissions,
+                                         &durations, alloc_delay, alloc_life);
+        assert_eq!(a.len(), b.len(),
+                   "action stream lengths diverged: {} vs {}",
+                   a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x, y, "action stream diverged at index {i}");
+        }
     });
 }
 
