@@ -10,15 +10,21 @@
 //!     run once per live scheduler core (fcfs | worksteal | edf |
 //!     gang), so the serving plane's scheduler ablation is measured
 //!     under real HTTP load
+//!   * shard scaling: the dispatch plane driven directly (no HTTP) at
+//!     1/2/4/8 shards per model for every live policy; the headline
+//!     submit/s uses the partitioned critical path (max per-shard busy
+//!     time), which measures the plane's parallelism independently of
+//!     how many host cores the bench machine has
 //!
 //! The PJRT sections need `make artifacts` and self-skip without them;
 //! the multi-model sections run anywhere (synthetic models over the
 //! in-process LocalBackend) and write `BENCH_hotpath.json` with one row
 //! per scheduler (each carrying the balancer's /Stats document:
-//! queue-wait + forward histograms).
+//! queue-wait + forward histograms) plus the `shard_scaling` rows.
 //!
 //! Knobs: `UQSCHED_HOTPATH_ITERS` (default 300 evals per client),
-//! `UQSCHED_HOTPATH_MODELS` (default 4).
+//! `UQSCHED_HOTPATH_MODELS` (default 4), `UQSCHED_SHARD_EVALS`
+//! (default 1000 evals per model per shard-scaling cell).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -69,15 +75,17 @@ fn main() {
         .map(multi_model_section)
         .collect();
     let degraded = degraded_fleet_section();
+    let shard_rows = shard_scaling_section();
     let doc = Value::obj(vec![
         ("schedulers", Value::arr(rows)),
         ("degraded_fleet", degraded),
+        ("shard_scaling", shard_rows),
     ]);
     std::fs::write("BENCH_hotpath.json", json::write(&doc))
         .expect("write BENCH_hotpath.json");
     println!("wrote BENCH_hotpath.json (one row per balancer scheduler, \
-              per-model queue-wait/forward histograms, plus the \
-              degraded-fleet section)");
+              per-model queue-wait/forward histograms, the degraded-fleet \
+              section and the shard_scaling rows)");
     println!("hotpath done");
     std::process::exit(0); // skip slow teardown of live threads
 }
@@ -223,6 +231,10 @@ fn multi_model_section(scheduler: LivePolicy) -> Value {
     );
 
     let stats = lb.stats_json();
+    // Thundering-herd check: one targeted notify_one per dispatched
+    // order, so wakeups/request stays ~1 (broadcast wakeups would put
+    // it at the forwarder-pool size).
+    let wakeups = lb.plane().wakeups_total();
     let row = Value::obj(vec![
         ("scheduler", Value::str(scheduler.label())),
         ("multi_model", Value::obj(vec![
@@ -231,11 +243,177 @@ fn multi_model_section(scheduler: LivePolicy) -> Value {
             ("evals", Value::num(total)),
             ("wall_s", Value::num(dt)),
             ("evals_per_s", Value::num(total / dt)),
+            ("wakeups_per_request", Value::num(wakeups as f64 / total)),
         ])),
         ("stats", stats),
     ]);
     lb.shutdown();
     row
+}
+
+/// The tentpole headline: the sharded dispatch plane driven directly
+/// (plane submit -> shard thread -> order queue -> inline executor, no
+/// HTTP, no front door) at 1/2/4/8 shards per model, once per live
+/// policy.  Each cell reports wall time plus the **partitioned critical
+/// path** (max per-shard busy microseconds): submit/s and served/s
+/// against the critical path measure how the plane's work parallelizes
+/// across shards independently of the bench host's core count.
+fn shard_scaling_section() -> Value {
+    let mut rows = Vec::new();
+    for policy in [LivePolicy::Fcfs, LivePolicy::WorkSteal,
+                   LivePolicy::Edf, LivePolicy::Gang] {
+        for shards in [1usize, 2, 4, 8] {
+            rows.push(shard_scaling_cell(policy, shards));
+        }
+    }
+    Value::arr(rows)
+}
+
+fn shard_scaling_cell(policy: LivePolicy, shards: usize) -> Value {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::time::Duration;
+    use uqsched::coordinator::{BalancerStats, DispatchPlane, PlaneConfig,
+                               Registry, SubmitOutcome};
+    use uqsched::sched::realtime::RetryPolicy;
+    use uqsched::umbridge::ModelContract;
+
+    let evals = env_usize("UQSCHED_SHARD_EVALS", 1000).max(1);
+    let n_models = 2usize;
+    let workers_per_model = 8usize;
+
+    let names: Vec<String> =
+        (0..n_models).map(|i| format!("shard-syn-{i}")).collect();
+    let registry = Arc::new(Registry::new());
+    let stats = Arc::new(BalancerStats::new(&names));
+    let plane = DispatchPlane::start(
+        PlaneConfig {
+            models: names.clone(),
+            shards_per_model: shards,
+            queue_capacity: evals * 4,
+            scheduler: policy,
+            retry: RetryPolicy::default(),
+            request_timeout: Duration::from_secs(60),
+            persistent_servers: true,
+        },
+        registry.clone(),
+        stats,
+        Arc::new(AtomicU64::new(0)),
+    );
+    let contract = ModelContract {
+        input_sizes: vec![1],
+        output_sizes: vec![1],
+    };
+    for (j, m) in names.iter().enumerate() {
+        for k in 0..workers_per_model {
+            let ep = format!("shard-bench-{j}-{k}");
+            registry.register(&ep, m, &contract);
+            plane.worker_up(&ep, m);
+        }
+    }
+    let t0 = Instant::now();
+    while names.iter().any(|m| plane.workers_for(m) < workers_per_model) {
+        if t0.elapsed().as_secs() > 30 {
+            panic!("shard bench workers failed to announce");
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // Executors: one per shard index, completing orders inline — the
+    // forward hop itself is not under test, only the dispatch plane.
+    let stop = Arc::new(AtomicBool::new(false));
+    let execs: Vec<_> = (0..plane.shard_count())
+        .map(|s| {
+            let plane = plane.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    if let Some(order) =
+                        plane.take_order(s, Duration::from_millis(10))
+                    {
+                        plane.complete_order(order, Ok("done".into()));
+                    }
+                }
+            })
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    // One submitting client per model; each waits for all of its
+    // evaluations to resolve.
+    let subs: Vec<_> = names
+        .iter()
+        .map(|m| {
+            let plane = plane.clone();
+            let m = m.clone();
+            std::thread::spawn(move || {
+                let mut handles = Vec::with_capacity(evals);
+                for i in 0..evals {
+                    loop {
+                        match plane.submit(&m, format!("p-{i}")) {
+                            SubmitOutcome::Queued(h) => {
+                                handles.push(h);
+                                break;
+                            }
+                            SubmitOutcome::Full => std::thread::sleep(
+                                Duration::from_micros(200),
+                            ),
+                            _ => panic!("shard bench submit rejected"),
+                        }
+                    }
+                }
+                for h in handles {
+                    let r = h
+                        .wait_deadline(
+                            Instant::now() + Duration::from_secs(60),
+                        )
+                        .expect("shard bench eval resolved");
+                    assert!(r.is_ok(), "shard bench eval failed");
+                }
+            })
+        })
+        .collect();
+    for t in subs {
+        t.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    for t in execs {
+        t.join().unwrap();
+    }
+
+    let counts = plane.counts();
+    let submitted: u64 = counts.iter().map(|(_, c)| c.submitted).sum();
+    let served: u64 = counts.iter().map(|(_, c)| c.served).sum();
+    let busy_max_us =
+        counts.iter().map(|(_, c)| c.busy_us).max().unwrap_or(1).max(1);
+    let busy_total_us: u64 = counts.iter().map(|(_, c)| c.busy_us).sum();
+    let wakeups = plane.wakeups_total();
+    plane.shutdown();
+
+    let busy_max_s = busy_max_us as f64 / 1e6;
+    let submit_per_s = submitted as f64 / busy_max_s;
+    let served_per_s = served as f64 / busy_max_s;
+    let wpr = wakeups as f64 / submitted.max(1) as f64;
+    println!(
+        "  shard scaling [{:<9} x{shards}]  {submit_per_s:>12.0} submit/s  \
+         {served_per_s:>12.0} served/s (critical path)  wall {wall:.3}s  \
+         wakeups/req {wpr:.2}",
+        policy.label(),
+    );
+    Value::obj(vec![
+        ("scheduler", Value::str(policy.label())),
+        ("shards", Value::num(shards as f64)),
+        ("models", Value::num(n_models as f64)),
+        ("workers_per_model", Value::num(workers_per_model as f64)),
+        ("evals", Value::num(submitted as f64)),
+        ("served", Value::num(served as f64)),
+        ("wall_s", Value::num(wall)),
+        ("busy_max_s", Value::num(busy_max_s)),
+        ("busy_total_s", Value::num(busy_total_us as f64 / 1e6)),
+        ("submit_per_s", Value::num(submit_per_s)),
+        ("served_per_s", Value::num(served_per_s)),
+        ("wakeups_per_request", Value::num(wpr)),
+    ])
 }
 
 /// Degraded-fleet section: the same balancer workload while an injector

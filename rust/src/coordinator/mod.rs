@@ -30,11 +30,18 @@
 //! * a full queue answers `503 Service Unavailable` with a `Retry-After`
 //!   derived from the live queue-wait histogram's p50 (clamped to
 //!   [1, 30] s) instead of growing without bound;
-//! * a **fixed pool of forwarder workers** consumes the cores' `Start`
-//!   effects via condvar handoff (the wait deadline follows the cores'
-//!   `SetTimer` effects), leasing exactly the server the policy placed
-//!   the work on ([`registry::ServerLease`]: release on drop, retire on
-//!   failure/per-job mode);
+//! * dispatch runs on a **sharded event plane** ([`shard`]): each model
+//!   owns one or more dispatch shards (`--shards-per-model`), each with
+//!   its own scheduler core and a dedicated event thread fed by an MPSC
+//!   channel, so an `/Evaluate` submit is one atomic admission-gate
+//!   bump plus one channel push — no cross-model (or shared dispatch)
+//!   lock anywhere on the hot path, and `/Stats` reads epoch-stamped
+//!   per-shard snapshots without touching a shard thread;
+//! * a **fixed pool of forwarder workers**, each bound to one shard,
+//!   consumes dispatched work orders behind targeted per-shard
+//!   `notify_one` wakeups (no thundering herd), leasing exactly the
+//!   server the policy placed the work on ([`registry::ServerLease`]:
+//!   release on drop, retire on failure/per-job mode);
 //! * queue-wait and forward-latency histograms plus per-model counters
 //!   are exposed on `GET /Stats` (and via [`LoadBalancer::stats_json`]).
 //!
@@ -53,19 +60,19 @@ pub mod backend;
 pub mod live;
 pub mod portfile;
 pub mod registry;
+pub mod shard;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::hqlite::TaskId;
 use crate::httpd::{Handler, HttpClient, Request, Response, Server};
 use crate::json::{self, Value};
 use crate::metrics::Histogram;
-use crate::sched::realtime::{Recovery, RetryPolicy, RtDriver};
+use crate::sched::realtime::RetryPolicy;
 use crate::sched::LivePolicy;
 use crate::umbridge::{HttpModel, ModelContract};
 
@@ -73,6 +80,8 @@ pub use backend::{Backend, HqBackend, LocalBackend, ModelFactory,
                   SlurmBackend};
 pub use live::{start_live, start_live_tuned, LiveStack};
 pub use registry::{Registry, ServerLease, ServerState};
+pub use shard::{DispatchPlane, ForwardError, PendingEval, PlaneConfig,
+                ShardCounts, ShardSnapshot, SubmitOutcome, WorkOrder};
 
 /// Balancer configuration.
 #[derive(Clone)]
@@ -92,6 +101,12 @@ pub struct BalancerConfig {
     /// answers 503 + Retry-After (backpressure instead of unbounded
     /// growth).
     pub queue_capacity: usize,
+    /// Dispatch shards per model (>= 1).  Requests round-robin across a
+    /// model's shards, each with its own scheduler core, admission gate
+    /// and event thread, so submission/dispatch/completion for a hot
+    /// model scale across cores instead of serializing on one thread.
+    /// `queue_capacity` is split evenly across a model's shards.
+    pub shards_per_model: usize,
     /// Minimum forwarder worker-pool size.  The pool is sized to at
     /// least `models.len() * max_servers` — the lease capacity bounds
     /// concurrent forwards, so at that size one slow model can never
@@ -132,6 +147,7 @@ impl Default for BalancerConfig {
             persistent_servers: true,
             poll_interval: Duration::from_millis(5),
             queue_capacity: 256,
+            shards_per_model: 1,
             forwarders: 4,
             request_timeout: Duration::from_secs(600),
             warm_start: true,
@@ -196,7 +212,9 @@ pub struct BalancerStats {
 }
 
 impl BalancerStats {
-    fn new(models: &[String]) -> BalancerStats {
+    /// Fresh counters for a fixed model set (public so the benches can
+    /// drive a [`DispatchPlane`] directly, without a front door).
+    pub fn new(models: &[String]) -> BalancerStats {
         BalancerStats {
             per_model: models
                 .iter()
@@ -210,108 +228,23 @@ impl BalancerStats {
     }
 }
 
-/// One queued /Evaluate awaiting dispatch.
-struct Queued {
-    model: String,
-    body: String,
-    enqueued: Instant,
-    /// Set when the waiting client gave up; dispatch skips it instead
-    /// of burning a server on a result nobody reads.
-    cancelled: AtomicBool,
-    done: Mutex<Option<Result<String, String>>>,
-    cv: Condvar,
-}
-
-/// One model's slice of the dispatch plane: a real-time driver over its
-/// scheduler core, the queued items keyed by the core's task ids, and
-/// the endpoint ↔ worker-id binding announced to the core.
-struct RtModel {
-    driver: RtDriver,
-    /// Submitted evaluations a forwarder has not yet taken.
-    items: HashMap<TaskId, Arc<Queued>>,
-    /// endpoint -> live worker id announced via `CapacityChange`.
-    wid_of: HashMap<String, u64>,
-    /// live worker id -> endpoint (resolves `Start::worker` to a lease).
-    ep_of: HashMap<u64, String>,
-    next_wid: u64,
-    /// `timed_out` counter value at the last cancellation sweep: the
-    /// O(items) sweep only runs when a client has actually timed out
-    /// since, keeping the no-timeout hot path O(1).
-    timeouts_seen: u64,
-}
-
-impl RtModel {
-    fn new(policy: LivePolicy, retry: RetryPolicy) -> RtModel {
-        RtModel {
-            driver: RtDriver::for_policy(policy).with_retry(retry),
-            items: HashMap::new(),
-            wid_of: HashMap::new(),
-            ep_of: HashMap::new(),
-            next_wid: 1,
-            timeouts_seen: 0,
-        }
-    }
-
-    /// A server registered: announce one single-core worker to the
-    /// core.  Idempotent — a re-surfaced endpoint (port-file re-read)
-    /// must not become a phantom second worker.
-    fn server_up(&mut self, endpoint: &str) {
-        if self.wid_of.contains_key(endpoint) {
-            return;
-        }
-        let wid = self.next_wid;
-        self.next_wid += 1;
-        self.wid_of.insert(endpoint.to_string(), wid);
-        self.ep_of.insert(wid, endpoint.to_string());
-        self.driver.worker_up(wid, 1);
-    }
-
-    /// A server retired or died: withdraw its worker (the core requeues
-    /// and re-places anything bound to it).  Idempotent; reports
-    /// whether a worker was actually withdrawn so failure paths can
-    /// count losses without double-counting.
-    fn server_lost(&mut self, endpoint: &str) -> bool {
-        if let Some(wid) = self.wid_of.remove(endpoint) {
-            self.ep_of.remove(&wid);
-            self.driver.worker_lost(wid);
-            true
-        } else {
-            false
-        }
-    }
-}
-
-/// All per-model dispatch state, behind one mutex (the live analogue of
-/// the DES kernel's single event loop).
-struct Dispatch {
-    models: HashMap<String, RtModel>,
-}
-
 /// State shared by the front door, the forwarder pool and the watcher.
 struct Shared {
     cfg: BalancerConfig,
-    dispatch: Mutex<Dispatch>,
-    cv: Condvar,
+    /// The sharded dispatch plane (per-model event shards; see
+    /// [`shard`]).
+    plane: Arc<DispatchPlane>,
     stop: AtomicBool,
-    stats: BalancerStats,
+    stats: Arc<BalancerStats>,
     registry: Arc<Registry>,
-    /// Persistent connections to model servers, pooled per endpoint.
-    conn_pool: Mutex<HashMap<String, Vec<HttpClient>>>,
     requests_served: Arc<AtomicU64>,
 }
 
 impl Shared {
-    /// Wake the forwarder pool.  The lock round-trip closes the race
-    /// with a forwarder that checked the dispatch state and is about to
-    /// wait.
-    fn wake(&self) {
-        drop(self.dispatch.lock().unwrap());
-        self.cv.notify_all();
-    }
-
     /// Backpressure hint: how long a client should wait before
     /// retrying, from the model's live queue-wait p50 (the observed
-    /// drain rate), clamped to [1, 30] s.
+    /// drain rate), clamped to [1, 30] s.  Reads only the lock-free
+    /// histogram snapshot — no dispatch state is locked.
     fn retry_after_secs(&self, model: &str) -> u32 {
         let p50_us = self
             .stats
@@ -321,8 +254,10 @@ impl Shared {
         ((p50_us + 999_999) / 1_000_000).clamp(1, 30) as u32
     }
 
+    /// The `/Stats` document, assembled entirely from the published
+    /// per-shard snapshots, registry counters and stats atomics — no
+    /// shard thread is consulted and no dispatch state is locked.
     fn stats_json(&self) -> Value {
-        let d = self.dispatch.lock().unwrap();
         let models: Vec<Value> = self
             .cfg
             .models
@@ -332,11 +267,26 @@ impl Shared {
                 let load = |c: &AtomicU64| {
                     Value::num(c.load(Ordering::Relaxed) as f64)
                 };
-                let queued = d
-                    .models
-                    .get(m)
-                    .map(|rt| rt.items.len())
-                    .unwrap_or(0);
+                let shards: Vec<Value> = self
+                    .plane
+                    .counts_for(m)
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| {
+                        Value::obj(vec![
+                            ("index", Value::num(i as f64)),
+                            ("epoch", Value::num(c.epoch as f64)),
+                            ("queued", Value::num(c.queued as f64)),
+                            ("workers", Value::num(c.workers as f64)),
+                            ("submitted", Value::num(c.submitted as f64)),
+                            ("dispatched", Value::num(c.dispatched as f64)),
+                            ("served", Value::num(c.served as f64)),
+                            ("wakeups", Value::num(c.wakeups as f64)),
+                            ("busy_us", Value::num(c.busy_us as f64)),
+                        ])
+                    })
+                    .collect();
+                let queued = self.plane.queued_for(m);
                 Value::obj(vec![
                     ("name", Value::str(m)),
                     ("queued", Value::num(queued as f64)),
@@ -355,17 +305,22 @@ impl Shared {
                     ("queue_wait", st.queue_wait.json()),
                     ("forward", st.forward.json()),
                     ("retry_backoff", st.retry_backoff.json()),
+                    ("shards", Value::arr(shards)),
                 ])
             })
             .collect();
         Value::obj(vec![
             ("scheduler", Value::str(self.cfg.scheduler.label())),
+            ("shards_per_model",
+             Value::num(self.cfg.shards_per_model.max(1) as f64)),
             ("models", Value::arr(models)),
             ("servers_total", Value::num(self.registry.total() as f64)),
             ("servers_registered_lifetime",
              Value::num(self.registry.registered_total() as f64)),
             ("requests_served",
              Value::num(self.requests_served.load(Ordering::Relaxed) as f64)),
+            ("forwarder_wakeups",
+             Value::num(self.plane.wakeups_total() as f64)),
         ])
     }
 }
@@ -397,32 +352,34 @@ impl LoadBalancer {
         let requests_served = Arc::new(AtomicU64::new(0));
         let registration_queries = Arc::new(AtomicU64::new(0));
 
-        let dispatch = Dispatch {
-            models: cfg
-                .models
-                .iter()
-                .map(|m| (m.clone(), RtModel::new(cfg.scheduler, cfg.retry)))
-                .collect(),
-        };
+        let stats = Arc::new(BalancerStats::new(&cfg.models));
+        // The sharded dispatch plane: one event thread per shard.  It
+        // installs per-model registry wakers, so registry transitions
+        // (register/release/retire/remove) poke exactly the shards that
+        // can use the freed capacity — dispatch is event-driven end to
+        // end, with no broadcast wakeups.
+        let plane = DispatchPlane::start(
+            PlaneConfig {
+                models: cfg.models.clone(),
+                shards_per_model: cfg.shards_per_model.max(1),
+                queue_capacity: cfg.queue_capacity,
+                scheduler: cfg.scheduler,
+                retry: cfg.retry,
+                request_timeout: cfg.request_timeout,
+                persistent_servers: cfg.persistent_servers,
+            },
+            registry.clone(),
+            stats.clone(),
+            requests_served.clone(),
+        );
         let shared = Arc::new(Shared {
-            stats: BalancerStats::new(&cfg.models),
             cfg: cfg.clone(),
-            dispatch: Mutex::new(dispatch),
-            cv: Condvar::new(),
+            plane: plane.clone(),
             stop: AtomicBool::new(false),
+            stats,
             registry: registry.clone(),
-            conn_pool: Mutex::new(HashMap::new()),
             requests_served: requests_served.clone(),
         });
-
-        // Registry transitions (register/release/retire/remove) wake the
-        // forwarder pool — dispatch is event-driven end to end.
-        let weak = Arc::downgrade(&shared);
-        registry.set_waker(Arc::new(move || {
-            if let Some(s) = weak.upgrade() {
-                s.wake();
-            }
-        }));
 
         // Front door: an UM-Bridge-compatible HTTP surface.
         let s2 = shared.clone();
@@ -447,22 +404,26 @@ impl LoadBalancer {
                 .spawn(move || watcher_loop(shared, backend, regq))?
         };
 
-        // Fixed forwarder pool: the cores' Start effects -> leased
-        // servers.  Sized to the total lease capacity so every model's
-        // full server pool can forward concurrently (no cross-model
-        // starvation by slow evaluations).
+        // Fixed forwarder pool, each worker bound to one shard (orders
+        // hand off through that shard's own queue behind targeted
+        // `notify_one` wakeups).  Sized to the total lease capacity so
+        // every model's full server pool can forward concurrently (no
+        // cross-model starvation by slow evaluations), and to at least
+        // one forwarder per shard.
         let pool_size = cfg
             .forwarders
             .max(cfg.models.len() * cfg.max_servers)
+            .max(plane.shard_count())
             .max(1);
         let mut forwarders = Vec::with_capacity(pool_size);
         for i in 0..pool_size {
             let shared = shared.clone();
             let backend = backend.clone();
+            let slot = i % plane.shard_count();
             forwarders.push(
                 std::thread::Builder::new()
                     .name(format!("lb-fwd-{i}"))
-                    .spawn(move || forwarder_loop(shared, backend))?,
+                    .spawn(move || forwarder_loop(shared, backend, slot))?,
             );
         }
 
@@ -487,16 +448,15 @@ impl LoadBalancer {
         &self.registry
     }
 
-    /// Total queued requests across all models.
+    /// Total queued requests across all models (from the shards'
+    /// lock-free admission gates).
     pub fn queue_len(&self) -> usize {
-        self.shared
-            .dispatch
-            .lock()
-            .unwrap()
-            .models
-            .values()
-            .map(|m| m.items.len())
-            .sum()
+        self.shared.plane.queue_len()
+    }
+
+    /// The dispatch plane (benches drive shard counters directly).
+    pub fn plane(&self) -> &Arc<DispatchPlane> {
+        &self.shared.plane
     }
 
     /// The live dispatch policy this balancer runs.
@@ -521,7 +481,6 @@ impl LoadBalancer {
     /// longest in-flight evaluation.
     pub fn shutdown(&mut self) {
         self.shared.stop.store(true, Ordering::SeqCst);
-        self.shared.wake();
         if let Some(mut f) = self.front.take() {
             f.shutdown();
         }
@@ -530,25 +489,17 @@ impl LoadBalancer {
         // backend entry points are safe to call from draining workers
         // after teardown (idempotent).
         self.backend.teardown();
+        // Forwarders observe the stop flag within one order-wait tick.
+        self.shared.plane.wake_forwarders();
         for t in self.forwarders.drain(..) {
             let _ = t.join();
         }
         if let Some(t) = self.watcher.take() {
             let _ = t.join();
         }
-        // Fail anything still queued so blocked clients return promptly.
-        let drained: Vec<Arc<Queued>> = {
-            let mut d = self.shared.dispatch.lock().unwrap();
-            d.models
-                .values_mut()
-                .flat_map(|m| m.items.drain().map(|(_, item)| item))
-                .collect()
-        };
-        for item in drained {
-            *item.done.lock().unwrap() =
-                Some(Err("balancer shutting down".to_string()));
-            item.cv.notify_all();
-        }
+        // Stop and join the shard threads; they fail anything still
+        // queued so blocked clients return promptly.
+        self.shared.plane.shutdown();
     }
 }
 
@@ -675,11 +626,14 @@ fn evaluate_handler(req: &Request, shared: &Arc<Shared>) -> Response {
     // Circuit breaker: if the model's fleet has collapsed below the
     // configured fraction of its peak, shed immediately — queueing onto
     // a fleet that cannot drain only converts the 503 into a slower
-    // 504.  Admission resumes as replacement servers register.
+    // 504.  Admission resumes as replacement servers register.  The
+    // healthy count comes from the published shard snapshots (every
+    // shard of a model sees the full announced worker set), so the
+    // check is lock-free.
     if shared.cfg.breaker_floor > 0.0 {
         if let Some(st) = shared.stats.model(&name) {
             let peak = st.peak_servers.load(Ordering::Relaxed);
-            let healthy = shared.registry.count_for(&name) as f64;
+            let healthy = shared.plane.workers_for(&name) as f64;
             if peak > 0
                 && healthy < shared.cfg.breaker_floor * peak as f64
             {
@@ -695,21 +649,13 @@ fn evaluate_handler(req: &Request, shared: &Arc<Shared>) -> Response {
         }
     }
 
-    let item = Arc::new(Queued {
-        model: name.clone(),
-        body,
-        enqueued: Instant::now(),
-        cancelled: AtomicBool::new(false),
-        done: Mutex::new(None),
-        cv: Condvar::new(),
-    });
-    {
-        let mut d = shared.dispatch.lock().unwrap();
-        if shared.stop.load(Ordering::SeqCst) {
-            return Response::error("balancer shutting down");
-        }
-        let rt = d.models.get_mut(&name).expect("configured model");
-        if rt.items.len() >= shared.cfg.queue_capacity {
+    // Lock-free admission: the submit is one atomic gate bump plus one
+    // channel push into the model's shard — the evaluation becomes a
+    // Submit event whose deadline budget is the request timeout (EDF
+    // orders by it, every core kills past it as a backstop).
+    let item = match shared.plane.submit(&name, body) {
+        SubmitOutcome::Queued(item) => item,
+        SubmitOutcome::Full => {
             if let Some(st) = shared.stats.model(&name) {
                 st.rejected.fetch_add(1, Ordering::Relaxed);
             }
@@ -718,47 +664,34 @@ fn evaluate_handler(req: &Request, shared: &Arc<Shared>) -> Response {
                 shared.retry_after_secs(&name),
             );
         }
-        // The evaluation becomes a Submit event; the request timeout is
-        // its deadline budget (EDF orders by it, every core kills past
-        // it as a backstop).
-        rt.driver.advance();
-        let budget = shared
-            .cfg
-            .request_timeout
-            .as_micros()
-            .min(u64::MAX as u128) as u64;
-        let id = rt.driver.submit(budget);
-        rt.items.insert(id, item.clone());
-        shared.cv.notify_all();
-    }
+        SubmitOutcome::Stopping => {
+            return Response::error("balancer shutting down");
+        }
+        SubmitOutcome::UnknownModel => {
+            // Unreachable: request_model validated the name.
+            return Response::error(&format!("unknown model '{name}'"));
+        }
+    };
 
-    // Block until resolved, looping on the condition (spurious wakeups
-    // must not be reported as timeouts) and honoring the real deadline.
-    let deadline = item.enqueued + shared.cfg.request_timeout;
-    let mut done = item.done.lock().unwrap();
-    loop {
-        if let Some(result) = done.take() {
-            return match result {
-                Ok(body) => Response::ok_json(body),
-                Err(e) => Response::error(&e),
-            };
+    // Block until a forwarder resolves the item or the deadline passes.
+    let deadline = item.enqueued() + shared.cfg.request_timeout;
+    match item.wait_deadline(deadline) {
+        Some(Ok(body)) => Response::ok_json(body),
+        Some(Err(e)) => Response::error(&e),
+        None => {
+            // Deadline passed: cancel so a forwarder doesn't burn a
+            // server on a result nobody reads.  The flag is stored
+            // before the counter advances (both SeqCst) so a shard
+            // sweep that observes the new count is guaranteed to
+            // observe the flag too; the poke makes the sweep prompt.
+            item.cancel();
+            if let Some(st) = shared.stats.model(&name) {
+                st.timed_out.fetch_add(1, Ordering::SeqCst);
+            }
+            shared.plane.poke_model(&name);
+            Response::text(504, "evaluation timed out")
         }
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        let (g, _timeout) = item.cv.wait_timeout(done, deadline - now).unwrap();
-        done = g;
     }
-    // Deadline passed: cancel so a forwarder doesn't burn a server on a
-    // result nobody reads.  The flag is stored before the counter
-    // advances (both SeqCst) so a forwarder sweep that observes the new
-    // count is guaranteed to observe the flag too.
-    item.cancelled.store(true, Ordering::SeqCst);
-    if let Some(st) = shared.stats.model(&name) {
-        st.timed_out.fetch_add(1, Ordering::SeqCst);
-    }
-    Response::text(504, "evaluation timed out")
 }
 
 // ---------------------------------------------------------------------------
@@ -799,12 +732,9 @@ fn watcher_loop(
             match preliminary_checks(&endpoint, &shared) {
                 Ok((queries, model)) => {
                     regq.fetch_add(queries, Ordering::Relaxed);
-                    {
-                        let mut d = shared.dispatch.lock().unwrap();
-                        if let Some(rt) = d.models.get_mut(&model) {
-                            rt.server_up(&endpoint);
-                        }
-                    }
+                    // Announce the worker to every shard of its model
+                    // (the WorkerUp event wakes the shard threads).
+                    shared.plane.worker_up(&endpoint, &model);
                     // The breaker's 100% mark: the largest fleet this
                     // model has ever had.
                     if let Some(st) = shared.stats.model(&model) {
@@ -813,7 +743,6 @@ fn watcher_loop(
                             Ordering::Relaxed,
                         );
                     }
-                    shared.cv.notify_all();
                     crate::log_info!("balancer",
                                      "registered server {endpoint}");
                 }
@@ -828,21 +757,15 @@ fn watcher_loop(
         // drain their own; this covers the last one before idle).
         drain_retired(&shared, &backend);
         // Capacity management: spawn while demand outstrips supply.
-        // Single-threaded here (no double-spawn race) and outside the
-        // dispatch lock, so a slow backend never stalls the front door
-        // or the forwarders.
-        let backlogs: Vec<(String, usize)> = {
-            let d = shared.dispatch.lock().unwrap();
-            shared
-                .cfg
-                .models
-                .iter()
-                .map(|m| {
-                    (m.clone(),
-                     d.models.get(m).map(|rt| rt.items.len()).unwrap_or(0))
-                })
-                .collect()
-        };
+        // Single-threaded here (no double-spawn race) and reading only
+        // the shards' admission-gate atomics, so a slow backend never
+        // stalls the front door or the shard threads.
+        let backlogs: Vec<(String, usize)> = shared
+            .cfg
+            .models
+            .iter()
+            .map(|m| (m.clone(), shared.plane.queued_for(m)))
+            .collect();
         for (model, mut backlog) in backlogs {
             let pending = backend.spawns_in_flight(&model);
             // A warm-start model with no server, no spawn in flight and
@@ -943,22 +866,13 @@ fn watcher_loop(
                     "balancer",
                     "server {ep} unhealthy ({f} consecutive probes), \
                      dropping");
+                let model = shared.registry.model_of(&ep);
                 shared.registry.remove(&ep);
-                shared.conn_pool.lock().unwrap().remove(&ep);
-                // Withdraw the worker from whichever model owned it
-                // (the core re-places anything bound to it).
-                {
-                    let mut d = shared.dispatch.lock().unwrap();
-                    for (m, rt) in d.models.iter_mut() {
-                        if rt.server_lost(&ep) {
-                            if let Some(st) = shared.stats.model(m) {
-                                st.probe_evictions
-                                    .fetch_add(1, Ordering::Relaxed);
-                                st.worker_lost
-                                    .fetch_add(1, Ordering::Relaxed);
-                            }
-                        }
-                    }
+                // Withdraw the worker from its model's shards (the
+                // cores re-place anything bound to it); the plane
+                // accounts the eviction exactly once.
+                if let Some(model) = model {
+                    shared.plane.worker_lost_external(&ep, &model);
                 }
                 backend.server_lost(&ep);
             }
@@ -971,7 +885,7 @@ fn watcher_loop(
 /// connections.
 fn drain_retired(shared: &Shared, backend: &Arc<dyn Backend>) {
     for ep in shared.registry.take_retired() {
-        shared.conn_pool.lock().unwrap().remove(&ep);
+        shared.plane.purge_conns(&ep);
         backend.retire_server(&ep);
     }
 }
@@ -1025,232 +939,42 @@ fn health_check(endpoint: &str) -> bool {
 // Forwarder pool
 // ---------------------------------------------------------------------------
 
-/// One worker of the fixed forwarder pool: consumes the scheduler
-/// cores' `Start` effects via condvar handoff (the wait deadline tracks
-/// the cores' `SetTimer` effects), leases exactly the server the policy
-/// placed the work on, forwards over a pooled connection, and resolves
-/// the waiting client.  Completion feeds `WorkDone` back into the core;
-/// a retiring lease feeds a worker `CapacityChange`.  (Capacity
-/// scale-up lives in the watcher, single-threaded and outside the
-/// dispatch lock.)
-fn forwarder_loop(shared: Arc<Shared>, backend: Arc<dyn Backend>) {
+/// One worker of the fixed forwarder pool, bound to a single shard: it
+/// pops dispatched work orders from that shard's queue (each order
+/// already carries the server lease the policy placed the work on),
+/// forwards over the shard's own connection pool, and hands the result
+/// back to the plane — which resolves the waiting client and feeds the
+/// completion event to the shard thread (`WorkDone` frees the synthetic
+/// worker; a transport failure charges the retry budget; a retiring
+/// lease becomes a capacity loss).  Scheduling itself happens on the
+/// shard threads; the forwarder only performs the blocking HTTP hop.
+fn forwarder_loop(shared: Arc<Shared>, backend: Arc<dyn Backend>,
+                  slot: usize) {
     loop {
-        // (queued item, task id, server lease) picked under the
-        // dispatch lock by consuming ready Start effects.
-        let mut job: Option<(Arc<Queued>, TaskId, ServerLease<'_>)> = None;
-        {
-            let mut d = shared.dispatch.lock().unwrap();
-            if shared.stop.load(Ordering::SeqCst) {
-                return;
-            }
-            'models: for model in &shared.cfg.models {
-                let Some(rt) = d.models.get_mut(model) else { continue };
-                rt.driver.advance();
-                // Purge items whose client gave up while still
-                // undispatched: they must not hold queue capacity (or
-                // core state) waiting for a worker that may never come
-                // (zero-server model).  `work_done` evicts the task
-                // from the core whatever its state; a stale ready
-                // entry, if one was already emitted, lands in the
-                // missing-item path below as a no-op.  Gated on the
-                // timed-out counter (SeqCst on both sides) so the
-                // no-timeout hot path never scans the items map.
-                let timed_out = shared
-                    .stats
-                    .model(model)
-                    .map(|st| st.timed_out.load(Ordering::SeqCst))
-                    .unwrap_or(0);
-                if timed_out != rt.timeouts_seen {
-                    rt.timeouts_seen = timed_out;
-                    let given_up: Vec<TaskId> = rt
-                        .items
-                        .iter()
-                        .filter(|(_, it)| {
-                            it.cancelled.load(Ordering::SeqCst)
-                        })
-                        .map(|(&id, _)| id)
-                        .collect();
-                    for id in given_up {
-                        rt.items.remove(&id);
-                        if let Some(st) = shared.stats.model(model) {
-                            st.cancelled.fetch_add(1, Ordering::Relaxed);
-                        }
-                        rt.driver.work_done(id);
-                    }
-                }
-                while let Some((id, worker)) = rt.driver.next_ready() {
-                    let Some(item) = rt.items.get(&id).cloned() else {
-                        // Item already resolved (shutdown drain raced a
-                        // late Start): free the synthetic capacity.
-                        rt.driver.work_done(id);
-                        continue;
-                    };
-                    // Skip work whose client already gave up.
-                    if item.cancelled.load(Ordering::SeqCst) {
-                        rt.items.remove(&id);
-                        if let Some(st) = shared.stats.model(model) {
-                            st.cancelled.fetch_add(1, Ordering::Relaxed);
-                        }
-                        rt.driver.work_done(id);
-                        continue;
-                    }
-                    let bound = worker
-                        .and_then(|w| rt.ep_of.get(&w).cloned());
-                    let lease = match bound {
-                        Some(ep) => {
-                            match shared.registry.acquire_endpoint(&ep) {
-                                Some(l) => Some(l),
-                                None if shared.registry.state(&ep)
-                                    .is_none() =>
-                                {
-                                    // Endpoint vanished (health check):
-                                    // withdraw the worker; the core
-                                    // re-places this task.
-                                    rt.server_lost(&ep);
-                                    continue;
-                                }
-                                None => {
-                                    // Momentarily busy (its lease drop
-                                    // has not landed): retry on the next
-                                    // wake.
-                                    rt.driver.requeue_ready((id, worker));
-                                    continue 'models;
-                                }
-                            }
-                        }
-                        // Core placed without a binding: any idle server.
-                        None => shared.registry.acquire(model),
-                    };
-                    let Some(lease) = lease else {
-                        rt.driver.requeue_ready((id, worker));
-                        continue 'models;
-                    };
-                    rt.items.remove(&id);
-                    if let Some(st) = shared.stats.model(model) {
-                        st.queue_wait.record(item.enqueued.elapsed());
-                    }
-                    job = Some((item, id, lease));
-                    break 'models;
-                }
-            }
-            if job.is_none() {
-                // Condvar handoff; the deadline follows the earliest
-                // core timer (SetTimer effects), with a 50 ms liveness
-                // backstop (stop flag, slow backends).
-                let mut wait = Duration::from_millis(50);
-                for rt in d.models.values() {
-                    if let Some(due) = rt.driver.next_timer_due() {
-                        let dt = due.saturating_sub(rt.driver.now());
-                        wait = wait
-                            .min(Duration::from_micros(dt))
-                            .max(Duration::from_millis(1));
-                    }
-                }
-                let (_d, _t) =
-                    shared.cv.wait_timeout(d, wait).unwrap();
-                continue;
-            }
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
         }
-        let (item, id, mut lease) = job.expect("checked above");
-        let st = shared.stats.model(&item.model);
+        // Targeted handoff: this forwarder sleeps on its own shard's
+        // order queue (woken by that shard's `notify_one`, never a
+        // plane-wide broadcast), with a 50 ms liveness backstop.
+        let Some(order) = shared
+            .plane
+            .take_order(slot, Duration::from_millis(50))
+        else {
+            continue;
+        };
         let t0 = Instant::now();
-        let result = forward(&shared.conn_pool, lease.endpoint(), &item.body);
-        let ok = result.is_ok();
-        // A dead transport means the server likely died with the
-        // evaluation — worth retrying on a replacement.  An HTTP error
-        // *answer* came from a live server and is deterministic;
-        // retrying the same body cannot help.
-        let transport_fail = matches!(&result, Err(e) if e.transport);
-        if let Some(st) = st {
+        let result = forward(
+            shared.plane.forward_pool(slot),
+            order.endpoint(),
+            order.item().body(),
+        );
+        if let Some(st) = shared.stats.model(order.item().model()) {
             st.forward.record(t0.elapsed());
         }
-        // Per-job servers retire after one evaluation (the paper's
-        // measured configuration); failed forwards retire either way.
-        let retire = !shared.cfg.persistent_servers || !ok;
-        if retire {
-            lease.mark_retire();
-        }
-        let endpoint = lease.endpoint().to_string();
-        drop(lease); // release or retire; wakes the pool via the waker
-        if transport_fail {
-            // The forward died with its server: withdraw the worker,
-            // then charge one attempt against the retry budget.  Within
-            // budget the core requeues the task behind its backoff and
-            // re-places it — on a replacement server once one is leased
-            // — while the client keeps waiting on its condvar; past
-            // budget the error surfaces.
-            let verdict = {
-                let mut d = shared.dispatch.lock().unwrap();
-                d.models.get_mut(&item.model).map(|rt| {
-                    if rt.server_lost(&endpoint) {
-                        if let Some(st) = st {
-                            st.worker_lost.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
-                    let verdict = rt.driver.work_failed(id);
-                    if matches!(verdict, Recovery::Retrying { .. }) {
-                        // Back into the queue under the same task id:
-                        // the retry's Start finds the waiting client.
-                        rt.items.insert(id, item.clone());
-                    }
-                    verdict
-                })
-            };
-            if let Some(Recovery::Retrying { backoff, .. }) = verdict {
-                if let Some(st) = st {
-                    st.retries.fetch_add(1, Ordering::Relaxed);
-                    st.retry_backoff.record(Duration::from_micros(backoff));
-                }
-            } else {
-                // Quarantined (or the model vanished): surface the error.
-                if let Some(st) = st {
-                    st.errors.fetch_add(1, Ordering::Relaxed);
-                    if matches!(verdict,
-                                Some(Recovery::Quarantined { .. })) {
-                        st.quarantined.fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-                shared.requests_served.fetch_add(1, Ordering::Relaxed);
-                *item.done.lock().unwrap() =
-                    Some(result.map_err(|e| e.msg));
-                item.cv.notify_all();
-            }
-        } else {
-            // A completed attempt: success, or a definitive error
-            // answer from a live server.
-            if let Some(st) = st {
-                if ok {
-                    st.served.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    st.errors.fetch_add(1, Ordering::Relaxed);
-                }
-            }
-            shared.requests_served.fetch_add(1, Ordering::Relaxed);
-            *item.done.lock().unwrap() = Some(result.map_err(|e| e.msg));
-            item.cv.notify_all();
-            // Feed the completion back through the seam: WorkDone frees
-            // the synthetic worker (and may surface the next Start); a
-            // retiring server is a capacity loss.
-            let mut d = shared.dispatch.lock().unwrap();
-            if let Some(rt) = d.models.get_mut(&item.model) {
-                rt.driver.work_done(id);
-                if retire {
-                    rt.server_lost(&endpoint);
-                }
-            }
-        }
-        shared.cv.notify_all();
+        shared.plane.complete_order(order, result);
         drain_retired(&shared, &backend);
     }
-}
-
-/// A failed forward.  `transport: true` means the connection itself
-/// died (connect/read/write failure — the server is likely gone, a
-/// retry on a replacement can succeed); `false` means a live server
-/// answered with an HTTP error (deterministic; not retried).
-struct ForwardError {
-    transport: bool,
-    msg: String,
 }
 
 fn forward(

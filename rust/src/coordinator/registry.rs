@@ -6,6 +6,13 @@
 //!   full-table scan (and the racy `last_acquired` side-channel is
 //!   gone: [`Registry::acquire`] hands back a [`ServerLease`] that
 //!   *is* the acquisition).
+//! * **Per-model locking.**  Every model's pool (server table + idle
+//!   index + contract) sits behind its own mutex, routed through a
+//!   read-mostly `endpoint -> model` index, so lease traffic for model
+//!   A never contends with model B — the registry-side requirement for
+//!   the sharded dispatch plane.  Cross-model bookkeeping (retirement
+//!   queue, lifetime counters) lives in a separate lock that is off
+//!   the lease hot path.
 //! * The model's wire contract ([`ModelContract`]) is learned at
 //!   registration from the preliminary checks and kept per model, so
 //!   the front door answers metadata queries locally.
@@ -13,13 +20,16 @@
 //!   lease marked for retirement instead removes the server and parks
 //!   its endpoint in a retirement queue the balancer drains into
 //!   `Backend::retire_server` — the forwarder never talks to the
-//!   backend while holding registry state.
-//! * Every state change invokes the optional waker, which the balancer
-//!   points at the dispatcher condvar: registration, release and
-//!   removal are event-driven, not poll-detected.
+//!   backend while holding registry state.  Leases own an
+//!   `Arc<Registry>`, so they travel freely through the shard plane's
+//!   work-order channels.
+//! * Every state change invokes the model's waker (or the global
+//!   fallback): the balancer points each model's waker at the shards
+//!   that own it, so registration, release and removal poke exactly
+//!   the threads that can use the freed capacity.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::umbridge::ModelContract;
 
@@ -29,58 +39,108 @@ pub enum ServerState {
     Busy,
 }
 
-struct ServerInfo {
-    model: String,
-    state: ServerState,
-}
-
 type Waker = Arc<dyn Fn() + Send + Sync>;
 
+/// One model's servers: everything a lease operation touches, behind
+/// the model's own lock.
 #[derive(Default)]
-struct Inner {
-    /// endpoint -> info (ordered for deterministic iteration).
-    servers: BTreeMap<String, ServerInfo>,
-    /// model -> idle endpoints (ordered: FCFS by endpoint, O(log n) pop).
-    idle: HashMap<String, BTreeSet<String>>,
-    /// model -> live server count (idle + busy).
-    totals: HashMap<String, usize>,
-    /// model -> learned wire contract (survives server churn).
-    contracts: HashMap<String, ModelContract>,
-    /// model -> lifetime registration count (the balancer's spawn
-    /// governor resets its failure backoff when this advances).
-    registered_by_model: HashMap<String, u64>,
+struct Pool {
+    /// endpoint -> state (ordered: FCFS by endpoint, deterministic).
+    servers: BTreeMap<String, ServerState>,
+    /// Idle endpoints (ordered subset of `servers`).
+    idle: BTreeSet<String>,
+    /// Learned wire contract (survives server churn).
+    contract: Option<ModelContract>,
+    /// Lifetime registration count (the balancer's spawn governor
+    /// resets its failure backoff when this advances).
+    registered: u64,
+}
+
+/// Cross-model bookkeeping, off the lease hot path.
+#[derive(Default)]
+struct GlobalBook {
     /// Endpoints retired by lease drop, awaiting backend teardown.
     retired: Vec<String>,
-    /// Lifetime counters.
     registered_total: u64,
     removed_total: u64,
 }
 
-/// Thread-safe registry of model-server endpoints.
+/// Thread-safe registry of model-server endpoints with per-model locks.
+///
+/// Lock discipline: `index`/`pools` guards are never held across a pool
+/// mutex acquisition except `pools.read()` (shared, writer only in
+/// [`Registry::pool`] which holds no pool mutex), and no operation ever
+/// holds two pool mutexes — so the lock graph is acyclic.
 pub struct Registry {
-    inner: Mutex<Inner>,
-    waker: Mutex<Option<Waker>>,
+    /// model -> pool (created at first registration or pre-seeded).
+    pools: RwLock<HashMap<String, Arc<Mutex<Pool>>>>,
+    /// endpoint -> model: read-mostly routing index.
+    index: RwLock<HashMap<String, String>>,
+    global: Mutex<GlobalBook>,
+    /// model -> waker (the dispatch shards owning that model).
+    wakers: RwLock<HashMap<String, Waker>>,
+    /// Fallback waker for models without a dedicated one.
+    fallback: Mutex<Option<Waker>>,
 }
 
 impl Registry {
     pub fn new() -> Registry {
         Registry {
-            inner: Mutex::new(Inner::default()),
-            waker: Mutex::new(None),
+            pools: RwLock::new(HashMap::new()),
+            index: RwLock::new(HashMap::new()),
+            global: Mutex::new(GlobalBook::default()),
+            wakers: RwLock::new(HashMap::new()),
+            fallback: Mutex::new(None),
         }
     }
 
-    /// Install the dispatcher wake-up hook (called after every
-    /// registration, release, retirement or removal).
+    /// Install the fallback wake-up hook (called after every
+    /// registration, release, retirement or removal of a model that has
+    /// no dedicated waker).
     pub fn set_waker(&self, w: Waker) {
-        *self.waker.lock().unwrap() = Some(w);
+        *self.fallback.lock().unwrap() = Some(w);
     }
 
-    fn wake(&self) {
-        let w = self.waker.lock().unwrap().clone();
+    /// Install a per-model wake-up hook; the sharded balancer points
+    /// this at the shards owning `model`, so a freed lease pokes only
+    /// the threads that can use it.
+    pub fn set_model_waker(&self, model: &str, w: Waker) {
+        self.wakers.write().unwrap().insert(model.to_string(), w);
+    }
+
+    fn wake(&self, model: &str) {
+        if let Some(w) = self.wakers.read().unwrap().get(model) {
+            let w = w.clone();
+            w();
+            return;
+        }
+        let w = self.fallback.lock().unwrap().clone();
         if let Some(w) = w {
             w();
         }
+    }
+
+    /// The pool for `model`, created if absent.
+    fn pool(&self, model: &str) -> Arc<Mutex<Pool>> {
+        if let Some(p) = self.pools.read().unwrap().get(model) {
+            return p.clone();
+        }
+        self.pools
+            .write()
+            .unwrap()
+            .entry(model.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// The pool for `model` if it exists (no creation on read paths).
+    fn pool_of(&self, model: &str) -> Option<Arc<Mutex<Pool>>> {
+        self.pools.read().unwrap().get(model).cloned()
+    }
+
+    /// The model served by `endpoint`, via the routing index.
+    pub fn model_of(&self, endpoint: &str) -> Option<String> {
+        self.index.read().unwrap().get(endpoint).cloned()
     }
 
     /// Register an endpoint serving `model`, learning the contract on
@@ -89,75 +149,68 @@ impl Registry {
     pub fn register(&self, endpoint: &str, model: &str,
                     contract: &ModelContract) {
         {
-            let mut g = self.inner.lock().unwrap();
-            if g.servers.contains_key(endpoint) {
+            let mut idx = self.index.write().unwrap();
+            if idx.contains_key(endpoint) {
                 return;
             }
-            g.servers.insert(
-                endpoint.to_string(),
-                ServerInfo { model: model.to_string(), state: ServerState::Idle },
-            );
-            g.idle
-                .entry(model.to_string())
-                .or_default()
-                .insert(endpoint.to_string());
-            *g.totals.entry(model.to_string()).or_default() += 1;
-            g.contracts
-                .entry(model.to_string())
-                .or_insert_with(|| contract.clone());
-            *g.registered_by_model.entry(model.to_string()).or_default() += 1;
-            g.registered_total += 1;
+            idx.insert(endpoint.to_string(), model.to_string());
         }
-        self.wake();
+        let pool = self.pool(model);
+        {
+            let mut p = pool.lock().unwrap();
+            p.servers.insert(endpoint.to_string(), ServerState::Idle);
+            p.idle.insert(endpoint.to_string());
+            if p.contract.is_none() {
+                p.contract = Some(contract.clone());
+            }
+            p.registered += 1;
+        }
+        self.global.lock().unwrap().registered_total += 1;
+        self.wake(model);
     }
 
     /// Learned contract for a model (from its first registered server).
     pub fn contract(&self, model: &str) -> Option<ModelContract> {
-        self.inner.lock().unwrap().contracts.get(model).cloned()
+        self.pool_of(model)?.lock().unwrap().contract.clone()
     }
 
     /// Remove an endpoint entirely (health-check failure path).
     pub fn remove(&self, endpoint: &str) {
-        {
-            let mut g = self.inner.lock().unwrap();
-            if !Self::purge(&mut g, endpoint) {
-                return;
-            }
+        if let Some(model) = self.purge(endpoint) {
+            self.wake(&model);
         }
-        self.wake();
     }
 
-    /// Drop `endpoint` from all maps; true if it was present.
-    fn purge(g: &mut Inner, endpoint: &str) -> bool {
-        let Some(info) = g.servers.remove(endpoint) else {
-            return false;
-        };
-        if let Some(set) = g.idle.get_mut(&info.model) {
-            set.remove(endpoint);
+    /// Drop `endpoint` from the index and its pool; returns the model
+    /// it served, if it was present.
+    fn purge(&self, endpoint: &str) -> Option<String> {
+        let model = self.index.write().unwrap().remove(endpoint)?;
+        if let Some(pool) = self.pool_of(&model) {
+            let mut p = pool.lock().unwrap();
+            p.servers.remove(endpoint);
+            p.idle.remove(endpoint);
         }
-        if let Some(n) = g.totals.get_mut(&info.model) {
-            *n = n.saturating_sub(1);
-        }
-        g.removed_total += 1;
-        true
+        self.global.lock().unwrap().removed_total += 1;
+        Some(model)
     }
 
-    /// Lease the first idle server for `model` (O(log n)).  The lease
-    /// releases the server on drop unless marked for retirement.
-    pub fn acquire(&self, model: &str) -> Option<ServerLease<'_>> {
+    /// Lease the first idle server for `model` (O(log n), touching only
+    /// that model's lock).  The lease releases the server on drop
+    /// unless marked for retirement.
+    pub fn acquire(self: &Arc<Self>, model: &str) -> Option<ServerLease> {
+        let pool = self.pool_of(model)?;
         let endpoint = {
-            let mut g = self.inner.lock().unwrap();
-            let set = g.idle.get_mut(model)?;
-            let ep = set.iter().next().cloned()?;
-            set.remove(&ep);
-            g.servers
+            let mut p = pool.lock().unwrap();
+            let ep = p.idle.iter().next().cloned()?;
+            p.idle.remove(&ep);
+            *p.servers
                 .get_mut(&ep)
-                .expect("idle index entry without server")
-                .state = ServerState::Busy;
+                .expect("idle index entry without server") =
+                ServerState::Busy;
             ep
         };
         Some(ServerLease {
-            registry: self,
+            registry: Arc::clone(self),
             endpoint,
             model: model.to_string(),
             retire: false,
@@ -169,22 +222,22 @@ impl Registry {
     /// worker (server) the scheduling policy placed it on.  `None` if
     /// the endpoint is unknown or not idle (disambiguate with
     /// [`Registry::state`]).
-    pub fn acquire_endpoint(&self, endpoint: &str) -> Option<ServerLease<'_>> {
-        let model = {
-            let mut g = self.inner.lock().unwrap();
-            let info = g.servers.get_mut(endpoint)?;
-            if info.state != ServerState::Idle {
-                return None;
+    pub fn acquire_endpoint(self: &Arc<Self>,
+                            endpoint: &str) -> Option<ServerLease> {
+        let model = self.model_of(endpoint)?;
+        let pool = self.pool_of(&model)?;
+        {
+            let mut p = pool.lock().unwrap();
+            match p.servers.get_mut(endpoint) {
+                Some(state) if *state == ServerState::Idle => {
+                    *state = ServerState::Busy;
+                }
+                _ => return None, // busy, or purged since the index read
             }
-            info.state = ServerState::Busy;
-            let model = info.model.clone();
-            if let Some(set) = g.idle.get_mut(&model) {
-                set.remove(endpoint);
-            }
-            model
-        };
+            p.idle.remove(endpoint);
+        }
         Some(ServerLease {
-            registry: self,
+            registry: Arc::clone(self),
             endpoint: endpoint.to_string(),
             model,
             retire: false,
@@ -192,104 +245,95 @@ impl Registry {
     }
 
     fn release_endpoint(&self, endpoint: &str) {
+        let Some(model) = self.model_of(endpoint) else {
+            return; // removed while leased; nothing to release
+        };
+        let Some(pool) = self.pool_of(&model) else {
+            return;
+        };
         {
-            let mut g = self.inner.lock().unwrap();
-            let Some(info) = g.servers.get_mut(endpoint) else {
-                return; // removed while leased; nothing to release
+            let mut p = pool.lock().unwrap();
+            let Some(state) = p.servers.get_mut(endpoint) else {
+                return; // purged between the index read and the lock
             };
-            info.state = ServerState::Idle;
-            let model = info.model.clone();
-            g.idle
-                .entry(model)
-                .or_default()
-                .insert(endpoint.to_string());
+            *state = ServerState::Idle;
+            p.idle.insert(endpoint.to_string());
         }
-        self.wake();
+        self.wake(&model);
     }
 
     fn retire_endpoint(&self, endpoint: &str) {
-        {
-            let mut g = self.inner.lock().unwrap();
-            if !Self::purge(&mut g, endpoint) {
-                return;
-            }
-            g.retired.push(endpoint.to_string());
-        }
-        self.wake();
+        let Some(model) = self.purge(endpoint) else {
+            return;
+        };
+        self.global
+            .lock()
+            .unwrap()
+            .retired
+            .push(endpoint.to_string());
+        self.wake(&model);
     }
 
     /// Endpoints retired by lease drop since the last call; the
     /// balancer hands them to `Backend::retire_server`.
     pub fn take_retired(&self) -> Vec<String> {
-        std::mem::take(&mut self.inner.lock().unwrap().retired)
+        std::mem::take(&mut self.global.lock().unwrap().retired)
     }
 
     pub fn state(&self, endpoint: &str) -> Option<ServerState> {
-        self.inner
+        let model = self.model_of(endpoint)?;
+        self.pool_of(&model)?
             .lock()
             .unwrap()
             .servers
             .get(endpoint)
-            .map(|i| i.state)
+            .copied()
     }
 
     pub fn endpoints(&self) -> Vec<String> {
-        self.inner.lock().unwrap().servers.keys().cloned().collect()
+        let mut eps: Vec<String> =
+            self.index.read().unwrap().keys().cloned().collect();
+        eps.sort();
+        eps
     }
 
     pub fn total(&self) -> usize {
-        self.inner.lock().unwrap().servers.len()
+        self.index.read().unwrap().len()
     }
 
-    /// Live servers (idle + busy) for one model — O(1).
+    /// Live servers (idle + busy) for one model — one pool lock.
     pub fn count_for(&self, model: &str) -> usize {
-        self.inner
-            .lock()
-            .unwrap()
-            .totals
-            .get(model)
-            .copied()
+        self.pool_of(model)
+            .map(|p| p.lock().unwrap().servers.len())
             .unwrap_or(0)
     }
 
     pub fn idle_count(&self) -> usize {
-        self.inner
-            .lock()
-            .unwrap()
-            .idle
-            .values()
-            .map(|s| s.len())
-            .sum()
+        let pools: Vec<_> =
+            self.pools.read().unwrap().values().cloned().collect();
+        pools.iter().map(|p| p.lock().unwrap().idle.len()).sum()
     }
 
-    /// Idle servers for one model — O(1).
+    /// Idle servers for one model — one pool lock.
     pub fn idle_for(&self, model: &str) -> usize {
-        self.inner
-            .lock()
-            .unwrap()
-            .idle
-            .get(model)
-            .map(|s| s.len())
+        self.pool_of(model)
+            .map(|p| p.lock().unwrap().idle.len())
             .unwrap_or(0)
     }
 
     pub fn registered_total(&self) -> u64 {
-        self.inner.lock().unwrap().registered_total
+        self.global.lock().unwrap().registered_total
     }
 
     /// Lifetime registrations for one model.
     pub fn registered_for(&self, model: &str) -> u64 {
-        self.inner
-            .lock()
-            .unwrap()
-            .registered_by_model
-            .get(model)
-            .copied()
+        self.pool_of(model)
+            .map(|p| p.lock().unwrap().registered)
             .unwrap_or(0)
     }
 
     pub fn removed_total(&self) -> u64 {
-        self.inner.lock().unwrap().removed_total
+        self.global.lock().unwrap().removed_total
     }
 }
 
@@ -305,15 +349,17 @@ impl Default for Registry {
 /// [`ServerLease::mark_retire`] (failed forward, per-job mode, or a
 /// panic unwinding past a poisoned evaluation path when the caller
 /// pre-marks), dropping removes the server and queues its endpoint for
-/// backend teardown instead.
-pub struct ServerLease<'a> {
-    registry: &'a Registry,
+/// backend teardown instead.  The lease owns an `Arc` of its registry,
+/// so it can ride through channels to whichever thread finishes the
+/// work.
+pub struct ServerLease {
+    registry: Arc<Registry>,
     endpoint: String,
     model: String,
     retire: bool,
 }
 
-impl ServerLease<'_> {
+impl ServerLease {
     pub fn endpoint(&self) -> &str {
         &self.endpoint
     }
@@ -332,7 +378,7 @@ impl ServerLease<'_> {
     }
 }
 
-impl Drop for ServerLease<'_> {
+impl Drop for ServerLease {
     fn drop(&mut self) {
         if self.retire {
             self.registry.retire_endpoint(&self.endpoint);
@@ -481,5 +527,45 @@ mod tests {
         lease.mark_retire();
         drop(lease); // wake 3 (retire)
         assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn model_waker_overrides_fallback_per_model() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let r = reg();
+        let global = Arc::new(AtomicU64::new(0));
+        let gp = Arc::new(AtomicU64::new(0));
+        let (g2, p2) = (global.clone(), gp.clone());
+        r.set_waker(Arc::new(move || {
+            g2.fetch_add(1, Ordering::SeqCst);
+        }));
+        r.set_model_waker("gp", Arc::new(move || {
+            p2.fetch_add(1, Ordering::SeqCst);
+        }));
+        r.register("http://h:1", "gp", &contract());
+        r.register("http://h:2", "other", &contract());
+        // gp transitions hit the model waker, never the fallback.
+        assert_eq!(gp.load(Ordering::SeqCst), 1);
+        assert_eq!(global.load(Ordering::SeqCst), 1); // "other" only
+        drop(r.acquire("gp").unwrap());
+        assert_eq!(gp.load(Ordering::SeqCst), 2);
+        assert_eq!(global.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn lease_is_sendable_across_threads() {
+        let r = reg();
+        r.register("http://h:1", "gp", &contract());
+        let lease = r.acquire("gp").unwrap();
+        // The Arc-owning lease rides a channel to another thread and
+        // releases from there — the shard plane's work-order path.
+        let (tx, rx) = std::sync::mpsc::channel::<ServerLease>();
+        let h = std::thread::spawn(move || {
+            let lease = rx.recv().unwrap();
+            drop(lease);
+        });
+        tx.send(lease).unwrap();
+        h.join().unwrap();
+        assert_eq!(r.idle_for("gp"), 1);
     }
 }

@@ -1,0 +1,1078 @@
+//! Sharded live dispatch plane.
+//!
+//! The front door used to funnel every `/Evaluate`, completion, timer pop and
+//! `/Stats` read through a single `Mutex<Dispatch>`. This module replaces that
+//! lock with one **dispatch shard per model** (times `--shards-per-model`):
+//! each shard owns its own [`RtDriver`], pending-item table and endpoint↔wid
+//! mirror, and runs a dedicated event thread fed by an MPSC channel. The front
+//! door submits by pushing a shard event — one atomic admission-gate bump
+//! plus one channel send, with zero shared-lock acquisitions and zero
+//! cross-model contention. Completions, worker churn, probe evictions and
+//! cancellation sweeps flow through the same channel; the shard thread drains
+//! the channel in batches and pays one [`RtDriver`] pump pass per burst, not
+//! one per event.
+//!
+//! Worker placement: every healthy endpoint of model M is announced to all of
+//! M's shards, and the registry's atomic [`Registry::acquire_endpoint`] is
+//! the single source of truth for who actually holds a server — a shard whose
+//! driver surfaces a ready task for a momentarily-busy endpoint requeues it
+//! and is poked by the model's registry waker when the lease returns. This
+//! keeps every shard able to dispatch (no shard can starve behind an empty
+//! worker set) while queued requests stay partitioned for lock-free
+//! admission.
+//!
+//! `/Stats` never touches a shard thread: each shard publishes an
+//! epoch-stamped [`ShardSnapshot`] of plain atomics that readers aggregate
+//! lock-free. Backpressure (`Retry-After`, circuit-breaker floor) is likewise
+//! recomputed from the published snapshots.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{mpsc, Arc, Condvar, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+use crate::hqlite::TaskId;
+use crate::httpd::HttpClient;
+
+use super::registry::{Registry, ServerLease};
+use super::{BalancerStats, ModelStats};
+use crate::sched::realtime::{LivePolicy, Recovery, RetryPolicy, RtDriver};
+
+/// How long a shard thread sleeps waiting for events before it re-checks
+/// timers and the stop flag anyway.
+const SHARD_IDLE_WAIT: Duration = Duration::from_millis(50);
+
+/// Static configuration for a [`DispatchPlane`].
+#[derive(Clone)]
+pub struct PlaneConfig {
+    /// Model names, one shard group each.
+    pub models: Vec<String>,
+    /// Shards per model (>= 1); requests round-robin across them.
+    pub shards_per_model: usize,
+    /// Total queued-request capacity per model (split across its shards).
+    pub queue_capacity: usize,
+    /// Live scheduling policy for every shard's driver.
+    pub scheduler: LivePolicy,
+    /// Retry policy for failed dispatches.
+    pub retry: RetryPolicy,
+    /// Per-request budget handed to the driver (EDF deadline seed).
+    pub request_timeout: Duration,
+    /// Whether leases return to the idle pool after a successful forward.
+    pub persistent_servers: bool,
+}
+
+/// A queued evaluation: the front door parks on
+/// [`PendingEval::wait_deadline`] while a shard thread and a forwarder carry
+/// the request to a backend.
+pub struct PendingEval {
+    model: String,
+    body: String,
+    enqueued: Instant,
+    cancelled: AtomicBool,
+    done: Mutex<Option<Result<String, String>>>,
+    cv: Condvar,
+}
+
+impl PendingEval {
+    fn new(model: &str, body: String) -> Arc<Self> {
+        Arc::new(Self {
+            model: model.to_string(),
+            body,
+            enqueued: Instant::now(),
+            cancelled: AtomicBool::new(false),
+            done: Mutex::new(None),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn body(&self) -> &str {
+        &self.body
+    }
+
+    pub fn enqueued(&self) -> Instant {
+        self.enqueued
+    }
+
+    /// Mark the request abandoned (client gave up). The shard thread purges
+    /// cancelled items on its next sweep.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// Publish the final result and wake any waiter. First resolution wins;
+    /// later calls are dropped.
+    pub fn resolve(&self, result: Result<String, String>) {
+        let mut slot = self.done.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(result);
+        }
+        drop(slot);
+        self.cv.notify_all();
+    }
+
+    /// Block until resolved or `deadline`; `None` means timed out.
+    pub fn wait_deadline(&self, deadline: Instant) -> Option<Result<String, String>> {
+        let mut slot = self.done.lock().unwrap();
+        loop {
+            if let Some(r) = slot.take() {
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(slot, deadline - now).unwrap();
+            slot = guard;
+        }
+    }
+}
+
+/// Events applied by a shard thread, in arrival order, in batches.
+enum ShardEvent {
+    Submit(Arc<PendingEval>),
+    /// Forward finished (success or definitive HTTP-error answer).
+    Done { id: TaskId },
+    /// Forward died with its server: withdraw the worker, charge a retry.
+    Failed { id: TaskId, item: Arc<PendingEval>, endpoint: String, err: String },
+    WorkerUp { endpoint: String },
+    /// Core-state-only withdrawal; all stats accounting happens at the
+    /// plane level, exactly once per actual loss.
+    WorkerLost { endpoint: String },
+    /// Wake the shard thread (registry waker, cancellation sweep hint).
+    Poke,
+    Stop,
+}
+
+/// Epoch-stamped, lock-free per-shard counters. The shard thread is the only
+/// writer; `/Stats` readers aggregate these without touching the thread.
+#[derive(Default)]
+pub struct ShardSnapshot {
+    pub epoch: AtomicU64,
+    pub queued: AtomicU64,
+    pub workers: AtomicU64,
+    pub ready: AtomicU64,
+    pub submitted: AtomicU64,
+    pub dispatched: AtomicU64,
+    pub served: AtomicU64,
+    pub wakeups: AtomicU64,
+    pub busy_us: AtomicU64,
+}
+
+/// Plain-value copy of a [`ShardSnapshot`] at one instant.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardCounts {
+    pub epoch: u64,
+    pub queued: u64,
+    pub workers: u64,
+    pub ready: u64,
+    pub submitted: u64,
+    pub dispatched: u64,
+    pub served: u64,
+    pub wakeups: u64,
+    pub busy_us: u64,
+}
+
+impl ShardSnapshot {
+    fn read(&self) -> ShardCounts {
+        ShardCounts {
+            epoch: self.epoch.load(Ordering::Acquire),
+            queued: self.queued.load(Ordering::Relaxed),
+            workers: self.workers.load(Ordering::Relaxed),
+            ready: self.ready.load(Ordering::Relaxed),
+            submitted: self.submitted.load(Ordering::Relaxed),
+            dispatched: self.dispatched.load(Ordering::Relaxed),
+            served: self.served.load(Ordering::Relaxed),
+            wakeups: self.wakeups.load(Ordering::Relaxed),
+            busy_us: self.busy_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One dispatch shard: the front-door-facing half (admission gate, event
+/// sender, published snapshot, order queue, connection pool). The scheduler
+/// half lives in [`ShardState`] on the shard's own thread.
+struct Shard {
+    model: String,
+    index: usize,
+    capacity: usize,
+    tx: Sender<ShardEvent>,
+    /// Admission gate: requests admitted but not yet dispatched. Bounded
+    /// here (not in the channel) so completion events can never be dropped.
+    gate: AtomicUsize,
+    snap: ShardSnapshot,
+    /// Dispatched work waiting for a forwarder.
+    orders: Mutex<VecDeque<WorkOrder>>,
+    orders_cv: Condvar,
+    /// Keep-alive connections used by forwarders bound to this shard —
+    /// forwarders for model A never touch model B's pool lock.
+    conn_pool: Mutex<HashMap<String, Vec<HttpClient>>>,
+}
+
+impl Shard {
+    fn gate_dec(&self) {
+        let _ = self
+            .gate
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| Some(v.saturating_sub(1)));
+    }
+}
+
+/// A dispatched request: item + scheduler task id + the server lease that
+/// backs it. Handed from the shard thread to a forwarder.
+pub struct WorkOrder {
+    item: Arc<PendingEval>,
+    id: TaskId,
+    lease: ServerLease,
+    shard: usize,
+}
+
+impl WorkOrder {
+    pub fn item(&self) -> &Arc<PendingEval> {
+        &self.item
+    }
+
+    pub fn endpoint(&self) -> &str {
+        self.lease.endpoint()
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+}
+
+/// A failed forward. `transport: true` means the connection itself died
+/// (connect/read/write failure — the server is likely gone, a retry on a
+/// replacement can succeed); `false` means a live server answered with an
+/// HTTP error (deterministic; not retried).
+pub struct ForwardError {
+    pub transport: bool,
+    pub msg: String,
+}
+
+/// Outcome of a lock-free submission.
+pub enum SubmitOutcome {
+    /// Accepted; park on the handle.
+    Queued(Arc<PendingEval>),
+    /// Shard at capacity — backpressure (503 + Retry-After).
+    Full,
+    UnknownModel,
+    /// Plane is shutting down.
+    Stopping,
+}
+
+struct Group {
+    start: usize,
+    count: usize,
+    rr: AtomicUsize,
+}
+
+/// The sharded dispatch plane. See the module docs for the design.
+pub struct DispatchPlane {
+    cfg: PlaneConfig,
+    shards: Vec<Arc<Shard>>,
+    groups: HashMap<String, Group>,
+    stats: Arc<BalancerStats>,
+    requests_served: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl DispatchPlane {
+    /// Build the plane and start one event thread per shard.
+    pub fn start(
+        cfg: PlaneConfig,
+        registry: Arc<Registry>,
+        stats: Arc<BalancerStats>,
+        requests_served: Arc<AtomicU64>,
+    ) -> Arc<Self> {
+        let spm = cfg.shards_per_model.max(1);
+        let per_shard_cap = (cfg.queue_capacity / spm).max(1);
+        let budget_us = cfg.request_timeout.as_micros().max(1) as u64;
+
+        let mut shards = Vec::new();
+        let mut groups = HashMap::new();
+        let mut receivers = Vec::new();
+        for model in &cfg.models {
+            let start = shards.len();
+            for k in 0..spm {
+                let (tx, rx) = mpsc::channel();
+                shards.push(Arc::new(Shard {
+                    model: model.clone(),
+                    index: start + k,
+                    capacity: per_shard_cap,
+                    tx,
+                    gate: AtomicUsize::new(0),
+                    snap: ShardSnapshot::default(),
+                    orders: Mutex::new(VecDeque::new()),
+                    orders_cv: Condvar::new(),
+                    conn_pool: Mutex::new(HashMap::new()),
+                }));
+                receivers.push(rx);
+            }
+            groups.insert(model.clone(), Group { start, count: spm, rr: AtomicUsize::new(0) });
+        }
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let plane = Arc::new(Self {
+            cfg: cfg.clone(),
+            shards,
+            groups,
+            stats: stats.clone(),
+            requests_served: requests_served.clone(),
+            stop: stop.clone(),
+            threads: Mutex::new(Vec::new()),
+        });
+
+        let mut threads = Vec::new();
+        for (shard, rx) in plane.shards.iter().cloned().zip(receivers) {
+            let mut state = ShardState {
+                shard: shard.clone(),
+                rx,
+                driver: RtDriver::for_policy(cfg.scheduler).with_retry(cfg.retry),
+                budget_us,
+                items: HashMap::new(),
+                wid_of: HashMap::new(),
+                ep_of: HashMap::new(),
+                next_wid: 1,
+                timeouts_seen: 0,
+                registry: registry.clone(),
+                stats: stats.clone(),
+                requests_served: requests_served.clone(),
+                stop: stop.clone(),
+            };
+            let name = format!("lb-shard-{}-{}", shard.model, shard.index);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || state.run())
+                    .expect("spawn shard thread"),
+            );
+        }
+        *plane.threads.lock().unwrap() = threads;
+
+        plane.install_wakers(&registry);
+        plane
+    }
+
+    /// Register per-model registry wakers: a lease release or retirement in
+    /// model M pokes only M's shards, never the whole plane.
+    fn install_wakers(self: &Arc<Self>, registry: &Arc<Registry>) {
+        for model in &self.cfg.models {
+            let weak: Weak<Self> = Arc::downgrade(self);
+            let m = model.clone();
+            registry.set_model_waker(
+                model,
+                Arc::new(move || {
+                    if let Some(plane) = weak.upgrade() {
+                        plane.poke_model(&m);
+                    }
+                }),
+            );
+        }
+    }
+
+    /// Wake every shard thread of one model (registry waker target; also
+    /// used by the front door after flagging a client timeout so the
+    /// cancellation sweep runs promptly).
+    pub fn poke_model(&self, model: &str) {
+        if let Some(g) = self.groups.get(model) {
+            for shard in &self.shards[g.start..g.start + g.count] {
+                let _ = shard.tx.send(ShardEvent::Poke);
+            }
+        }
+    }
+
+    /// Lock-free submission: one atomic gate bump + one channel push.
+    pub fn submit(&self, model: &str, body: String) -> SubmitOutcome {
+        let Some(g) = self.groups.get(model) else {
+            return SubmitOutcome::UnknownModel;
+        };
+        if self.stop.load(Ordering::Acquire) {
+            return SubmitOutcome::Stopping;
+        }
+        let k = g.rr.fetch_add(1, Ordering::Relaxed) % g.count;
+        let shard = &self.shards[g.start + k];
+        if shard
+            .gate
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+                if v < shard.capacity {
+                    Some(v + 1)
+                } else {
+                    None
+                }
+            })
+            .is_err()
+        {
+            return SubmitOutcome::Full;
+        }
+        let item = PendingEval::new(model, body);
+        shard.snap.submitted.fetch_add(1, Ordering::Relaxed);
+        if shard.tx.send(ShardEvent::Submit(item.clone())).is_err() {
+            shard.gate_dec();
+            return SubmitOutcome::Stopping;
+        }
+        SubmitOutcome::Queued(item)
+    }
+
+    /// Announce a healthy endpoint to every shard of its model. Idempotent
+    /// per shard: re-announcing a known endpoint is a no-op.
+    pub fn worker_up(&self, endpoint: &str, model: &str) {
+        if let Some(g) = self.groups.get(model) {
+            for shard in &self.shards[g.start..g.start + g.count] {
+                let _ = shard.tx.send(ShardEvent::WorkerUp { endpoint: endpoint.to_string() });
+            }
+        }
+    }
+
+    /// Health watcher evicted an endpoint after K failed probes: withdraw it
+    /// from every shard of its model and account the loss once.
+    pub fn worker_lost_external(&self, endpoint: &str, model: &str) {
+        if let Some(st) = self.stats.model(model) {
+            st.worker_lost.fetch_add(1, Ordering::Relaxed);
+            st.probe_evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        self.withdraw(endpoint, model);
+    }
+
+    /// Remove an endpoint's connections and core-state from every shard of
+    /// `model` (no stats — callers account the loss).
+    fn withdraw(&self, endpoint: &str, model: &str) {
+        if let Some(g) = self.groups.get(model) {
+            for shard in &self.shards[g.start..g.start + g.count] {
+                shard.conn_pool.lock().unwrap().remove(endpoint);
+                let _ = shard.tx.send(ShardEvent::WorkerLost { endpoint: endpoint.to_string() });
+            }
+        }
+    }
+
+    /// Blocking pop for forwarders bound to `shard`.
+    pub fn take_order(&self, shard: usize, timeout: Duration) -> Option<WorkOrder> {
+        let s = &self.shards[shard];
+        let mut q = s.orders.lock().unwrap();
+        if let Some(o) = q.pop_front() {
+            return Some(o);
+        }
+        let (mut q, _timed_out) = s.orders_cv.wait_timeout(q, timeout).unwrap();
+        q.pop_front()
+    }
+
+    /// Forwarder hands back a finished attempt. Settles lease, stats and
+    /// client bookkeeping, and routes the completion event to the shard that
+    /// dispatched the order. (The forward-latency histogram is recorded by
+    /// the forwarder itself, which knows the elapsed time.)
+    pub fn complete_order(&self, order: WorkOrder, result: Result<String, ForwardError>) {
+        let WorkOrder { item, id, mut lease, shard } = order;
+        let endpoint = lease.endpoint().to_string();
+        let model = lease.model().to_string();
+        let ok = result.is_ok();
+        // Per-job servers retire after one evaluation (the paper's measured
+        // configuration); failed forwards retire either way.
+        let retire = !self.cfg.persistent_servers || !ok;
+        if retire {
+            lease.mark_retire();
+        }
+        drop(lease); // release or retire; the model waker pokes its shards
+
+        let st = self.stats.model(&model);
+        match result {
+            Err(e) if e.transport => {
+                // The forward died with its server: withdraw the worker
+                // from every shard, account the loss once, then charge one
+                // attempt against the retry budget on the dispatching
+                // shard. Within budget the core requeues the task behind
+                // its backoff while the client keeps waiting; past budget
+                // the error surfaces.
+                if let Some(st) = st {
+                    st.worker_lost.fetch_add(1, Ordering::Relaxed);
+                }
+                if let Some(g) = self.groups.get(&model) {
+                    for s in &self.shards[g.start..g.start + g.count] {
+                        s.conn_pool.lock().unwrap().remove(&endpoint);
+                        if s.index != shard {
+                            let _ = s
+                                .tx
+                                .send(ShardEvent::WorkerLost { endpoint: endpoint.clone() });
+                        }
+                    }
+                }
+                let failed = ShardEvent::Failed {
+                    id,
+                    item: item.clone(),
+                    endpoint,
+                    err: e.msg.clone(),
+                };
+                if self.shards[shard].tx.send(failed).is_err() {
+                    // Shard already gone (shutdown): surface the error.
+                    if let Some(st) = st {
+                        st.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.requests_served.fetch_add(1, Ordering::Relaxed);
+                    item.resolve(Err(e.msg));
+                }
+            }
+            _ => {
+                // A completed attempt: success, or a definitive error
+                // answer from a live server.
+                if let Some(st) = st {
+                    if ok {
+                        st.served.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        st.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                self.requests_served.fetch_add(1, Ordering::Relaxed);
+                if ok {
+                    self.shards[shard].snap.served.fetch_add(1, Ordering::Relaxed);
+                }
+                item.resolve(result.map_err(|e| e.msg));
+                let _ = self.shards[shard].tx.send(ShardEvent::Done { id });
+                if retire {
+                    // Planned retirement (per-job server, or a live server
+                    // that answered an HTTP error): capacity loss, no
+                    // worker_lost accounting — matches the unsharded plane.
+                    self.withdraw(&endpoint, &model);
+                }
+            }
+        }
+    }
+
+    /// Per-shard connection pool (forwarders for model A never touch model
+    /// B's pool lock).
+    pub fn forward_pool(&self, shard: usize) -> &Mutex<HashMap<String, Vec<HttpClient>>> {
+        &self.shards[shard].conn_pool
+    }
+
+    /// Drop any pooled connections to `endpoint` (retirement teardown).
+    pub fn purge_conns(&self, endpoint: &str) {
+        for s in &self.shards {
+            s.conn_pool.lock().unwrap().remove(endpoint);
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The `(start, count)` shard-index range serving `model`.
+    pub fn shards_for(&self, model: &str) -> Option<(usize, usize)> {
+        self.groups.get(model).map(|g| (g.start, g.count))
+    }
+
+    /// Snapshot counters for every shard of `model`, in shard order.
+    pub fn counts_for(&self, model: &str) -> Vec<ShardCounts> {
+        match self.groups.get(model) {
+            Some(g) => self.shards[g.start..g.start + g.count]
+                .iter()
+                .map(|s| s.snap.read())
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Snapshot counters for every shard in the plane.
+    pub fn counts(&self) -> Vec<(String, ShardCounts)> {
+        self.shards.iter().map(|s| (s.model.clone(), s.snap.read())).collect()
+    }
+
+    /// Queued (admitted, not yet dispatched) requests for one model.
+    pub fn queued_for(&self, model: &str) -> usize {
+        match self.groups.get(model) {
+            Some(g) => self.shards[g.start..g.start + g.count]
+                .iter()
+                .map(|s| s.gate.load(Ordering::Acquire))
+                .sum(),
+            None => 0,
+        }
+    }
+
+    /// Live workers announced to one model's shards. Every shard of a model
+    /// sees the full worker set, so the model's count is the max across its
+    /// shards (not the sum).
+    pub fn workers_for(&self, model: &str) -> usize {
+        self.counts_for(model).iter().map(|c| c.workers as usize).max().unwrap_or(0)
+    }
+
+    /// Total queued requests across the plane.
+    pub fn queue_len(&self) -> usize {
+        self.shards.iter().map(|s| s.gate.load(Ordering::Acquire)).sum()
+    }
+
+    /// Total forwarder wakeups issued (bench: wakeups-per-request ≈ 1).
+    pub fn wakeups_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.snap.wakeups.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Wake all forwarders parked on order queues (shutdown).
+    pub fn wake_forwarders(&self) {
+        for s in &self.shards {
+            s.orders_cv.notify_all();
+        }
+    }
+
+    /// Stop shard threads, join them, and fail any stranded work.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        for s in &self.shards {
+            let _ = s.tx.send(ShardEvent::Stop);
+        }
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        for t in threads {
+            let _ = t.join();
+        }
+        // Shard threads have drained their item tables; clear any orders
+        // still parked for forwarders that already exited.
+        for s in &self.shards {
+            let mut q = s.orders.lock().unwrap();
+            while let Some(o) = q.pop_front() {
+                o.item.resolve(Err("balancer shutting down".into()));
+            }
+            drop(q);
+            s.orders_cv.notify_all();
+        }
+    }
+}
+
+/// The scheduler half of a shard: lives on the shard thread,
+/// single-threaded, and touches no lock shared with the front door.
+struct ShardState {
+    shard: Arc<Shard>,
+    rx: Receiver<ShardEvent>,
+    driver: RtDriver,
+    budget_us: u64,
+    /// Submitted evaluations not yet handed to a forwarder.
+    items: HashMap<TaskId, Arc<PendingEval>>,
+    /// endpoint -> live worker id announced to the core.
+    wid_of: HashMap<String, u64>,
+    /// live worker id -> endpoint (resolves a ready binding to a lease).
+    ep_of: HashMap<u64, String>,
+    next_wid: u64,
+    /// `timed_out` counter value at the last cancellation sweep.
+    timeouts_seen: u64,
+    registry: Arc<Registry>,
+    stats: Arc<BalancerStats>,
+    requests_served: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ShardState {
+    fn st(&self) -> Option<&ModelStats> {
+        self.stats.model(&self.shard.model)
+    }
+
+    fn run(&mut self) {
+        loop {
+            if self.stop.load(Ordering::Acquire) {
+                break;
+            }
+            // Sleep until the next event or the earliest core timer, with a
+            // 50 ms liveness backstop (stop flag, slow backends).
+            let wait = match self.driver.next_timer_due() {
+                Some(due) => {
+                    let dt = due.saturating_sub(self.driver.now());
+                    Duration::from_micros(dt.clamp(1_000, 50_000))
+                }
+                None => SHARD_IDLE_WAIT,
+            };
+            let first = match self.rx.recv_timeout(wait) {
+                Ok(ev) => Some(ev),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break,
+            };
+            let t0 = Instant::now();
+            let mut stopped = false;
+            if let Some(ev) = first {
+                stopped = self.apply(ev);
+            }
+            // Batch: drain whatever arrived while we slept or applied, then
+            // pay a single pump pass for the whole burst.
+            while !stopped {
+                match self.rx.try_recv() {
+                    Ok(ev) => stopped = self.apply(ev),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        stopped = true;
+                        break;
+                    }
+                }
+            }
+            self.driver.pump();
+            self.sweep_cancelled();
+            self.dispatch();
+            self.publish();
+            let busy = t0.elapsed().as_micros() as u64;
+            self.shard.snap.busy_us.fetch_add(busy, Ordering::Relaxed);
+            if stopped {
+                break;
+            }
+        }
+        self.drain();
+    }
+
+    /// Apply one event without pumping. Returns true on `Stop`.
+    fn apply(&mut self, ev: ShardEvent) -> bool {
+        match ev {
+            ShardEvent::Submit(item) => {
+                if item.is_cancelled() {
+                    // Client already gave up; never enters the scheduler.
+                    self.shard.gate_dec();
+                    if let Some(st) = self.st() {
+                        st.cancelled.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return false;
+                }
+                let id = self.driver.submit_batched(self.budget_us);
+                self.items.insert(id, item);
+            }
+            ShardEvent::Done { id } => {
+                self.driver.work_done_batched(id);
+            }
+            ShardEvent::Failed { id, item, endpoint, err } => {
+                self.server_lost_local(&endpoint);
+                match self.driver.work_failed_batched(id) {
+                    Recovery::Retrying { backoff, .. } => {
+                        if let Some(st) = self.st() {
+                            st.retries.fetch_add(1, Ordering::Relaxed);
+                            st.retry_backoff.record(Duration::from_micros(backoff));
+                        }
+                        // Back into the queue under the same task id (the
+                        // retry's Start finds the waiting client), so the
+                        // admission gate re-opens a slot for it. Plain add,
+                        // not capped: the request was admitted once already
+                        // and must not be shed.
+                        self.shard.gate.fetch_add(1, Ordering::AcqRel);
+                        self.items.insert(id, item);
+                    }
+                    Recovery::Quarantined { .. } => {
+                        if let Some(st) = self.st() {
+                            st.errors.fetch_add(1, Ordering::Relaxed);
+                            st.quarantined.fetch_add(1, Ordering::Relaxed);
+                        }
+                        self.requests_served.fetch_add(1, Ordering::Relaxed);
+                        item.resolve(Err(err));
+                    }
+                }
+            }
+            ShardEvent::WorkerUp { endpoint } => {
+                self.server_up_local(&endpoint);
+            }
+            ShardEvent::WorkerLost { endpoint } => {
+                self.server_lost_local(&endpoint);
+            }
+            ShardEvent::Poke => {}
+            ShardEvent::Stop => return true,
+        }
+        false
+    }
+
+    fn server_up_local(&mut self, endpoint: &str) {
+        if self.wid_of.contains_key(endpoint) {
+            return;
+        }
+        let wid = self.next_wid;
+        self.next_wid += 1;
+        self.wid_of.insert(endpoint.to_string(), wid);
+        self.ep_of.insert(wid, endpoint.to_string());
+        self.driver.worker_up_batched(wid, 1);
+    }
+
+    fn server_lost_local(&mut self, endpoint: &str) -> bool {
+        match self.wid_of.remove(endpoint) {
+            Some(wid) => {
+                self.ep_of.remove(&wid);
+                self.driver.worker_lost_batched(wid);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Purge client-abandoned items. Gated on the model's timed-out counter
+    /// (SeqCst on both sides) so the no-timeout hot path never scans the
+    /// items map.
+    fn sweep_cancelled(&mut self) {
+        let seen = match self.st() {
+            Some(st) => st.timed_out.load(Ordering::SeqCst),
+            None => return,
+        };
+        if seen == self.timeouts_seen {
+            return;
+        }
+        self.timeouts_seen = seen;
+        let given_up: Vec<TaskId> = self
+            .items
+            .iter()
+            .filter(|(_, it)| it.is_cancelled())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in given_up {
+            self.items.remove(&id);
+            self.shard.gate_dec();
+            if let Some(st) = self.st() {
+                st.cancelled.fetch_add(1, Ordering::Relaxed);
+            }
+            self.driver.work_done_batched(id);
+        }
+        self.driver.pump();
+    }
+
+    /// Pull ready tasks off the driver, pair each with a lease from the
+    /// registry, and hand the orders to forwarders — one targeted
+    /// `notify_one` per order, never a plane-wide broadcast.
+    fn dispatch(&mut self) {
+        let mut ready_orders: Vec<WorkOrder> = Vec::new();
+        while let Some((id, worker)) = self.driver.next_ready() {
+            let Some(item) = self.items.get(&id).cloned() else {
+                // Item already resolved (shutdown drain or cancellation
+                // raced a late Start): free the synthetic capacity.
+                self.driver.work_done_batched(id);
+                continue;
+            };
+            if item.is_cancelled() {
+                self.items.remove(&id);
+                self.shard.gate_dec();
+                if let Some(st) = self.st() {
+                    st.cancelled.fetch_add(1, Ordering::Relaxed);
+                }
+                self.driver.work_done_batched(id);
+                continue;
+            }
+            let bound = worker.and_then(|w| self.ep_of.get(&w).cloned());
+            let lease = match bound {
+                Some(ep) => match self.registry.acquire_endpoint(&ep) {
+                    Some(l) => Some(l),
+                    None if self.registry.state(&ep).is_none() => {
+                        // Endpoint vanished (health check): withdraw the
+                        // worker; the core re-places this task.
+                        self.server_lost_local(&ep);
+                        continue;
+                    }
+                    None => {
+                        // Momentarily busy (another shard holds it, or its
+                        // lease drop has not landed): retry on the next
+                        // poke.
+                        self.driver.requeue_ready((id, worker));
+                        break;
+                    }
+                },
+                // Core placed without a binding: any idle server.
+                None => self.registry.acquire(&self.shard.model),
+            };
+            let Some(lease) = lease else {
+                self.driver.requeue_ready((id, worker));
+                break;
+            };
+            self.items.remove(&id);
+            self.shard.gate_dec();
+            if let Some(st) = self.st() {
+                st.queue_wait.record(item.enqueued.elapsed());
+            }
+            self.shard.snap.dispatched.fetch_add(1, Ordering::Relaxed);
+            ready_orders.push(WorkOrder { item, id, lease, shard: self.shard.index });
+        }
+        self.driver.pump();
+        if !ready_orders.is_empty() {
+            let mut q = self.shard.orders.lock().unwrap();
+            for order in ready_orders {
+                q.push_back(order);
+                self.shard.snap.wakeups.fetch_add(1, Ordering::Relaxed);
+                self.shard.orders_cv.notify_one();
+            }
+        }
+    }
+
+    /// Publish the lock-free snapshot for `/Stats` readers.
+    fn publish(&mut self) {
+        let snap = &self.shard.snap;
+        snap.queued.store(self.shard.gate.load(Ordering::Acquire) as u64, Ordering::Relaxed);
+        snap.workers.store(self.wid_of.len() as u64, Ordering::Relaxed);
+        snap.ready.store(self.driver.ready_len() as u64, Ordering::Relaxed);
+        snap.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    /// Fail everything still pending at shutdown.
+    fn drain(&mut self) {
+        loop {
+            match self.rx.try_recv() {
+                Ok(ShardEvent::Submit(item)) => {
+                    self.shard.gate_dec();
+                    item.resolve(Err("balancer shutting down".into()));
+                }
+                Ok(ShardEvent::Failed { item, .. }) => {
+                    item.resolve(Err("balancer shutting down".into()));
+                }
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        for (_, item) in self.items.drain() {
+            self.shard.gate_dec();
+            item.resolve(Err("balancer shutting down".into()));
+        }
+        self.publish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::umbridge::ModelContract;
+
+    fn contract() -> ModelContract {
+        ModelContract { input_sizes: vec![1], output_sizes: vec![1] }
+    }
+
+    fn test_cfg(models: &[&str], spm: usize, cap: usize) -> PlaneConfig {
+        PlaneConfig {
+            models: models.iter().map(|m| m.to_string()).collect(),
+            shards_per_model: spm,
+            queue_capacity: cap,
+            scheduler: LivePolicy::Fcfs,
+            retry: RetryPolicy::default(),
+            request_timeout: Duration::from_secs(5),
+            persistent_servers: true,
+        }
+    }
+
+    fn start_plane(cfg: PlaneConfig) -> (Arc<DispatchPlane>, Arc<Registry>) {
+        let registry = Arc::new(Registry::new());
+        let stats = Arc::new(BalancerStats::new(&cfg.models));
+        let served = Arc::new(AtomicU64::new(0));
+        let plane = DispatchPlane::start(cfg, registry.clone(), stats, served);
+        (plane, registry)
+    }
+
+    fn wait_until(mut pred: impl FnMut() -> bool, what: &str) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !pred() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn fcfs_order_holds_within_a_shard() {
+        let (plane, registry) = start_plane(test_cfg(&["m"], 1, 64));
+        registry.register("s1", "m", &contract());
+        plane.worker_up("s1", "m");
+        wait_until(|| plane.workers_for("m") == 1, "worker announce");
+
+        let mut items = Vec::new();
+        for i in 0..6 {
+            match plane.submit("m", format!("req-{i}")) {
+                SubmitOutcome::Queued(it) => items.push(it),
+                _ => panic!("submit {i} rejected"),
+            }
+        }
+        // Single server: orders surface strictly one at a time, FCFS.
+        for i in 0..6 {
+            let deadline = Instant::now() + Duration::from_secs(5);
+            let order = loop {
+                if let Some(o) = plane.take_order(0, Duration::from_millis(50)) {
+                    break o;
+                }
+                assert!(Instant::now() < deadline, "order {i} never surfaced");
+            };
+            assert_eq!(order.item().body(), format!("req-{i}"), "FCFS violated");
+            plane.complete_order(order, Ok(format!("ok-{i}")));
+        }
+        for (i, it) in items.iter().enumerate() {
+            let r = it
+                .wait_deadline(Instant::now() + Duration::from_secs(2))
+                .expect("resolved");
+            assert_eq!(r.unwrap(), format!("ok-{i}"));
+        }
+        let counts = plane.counts_for("m");
+        assert_eq!(counts.len(), 1);
+        assert_eq!(counts[0].submitted, 6);
+        assert_eq!(counts[0].dispatched, 6);
+        assert_eq!(counts[0].served, 6);
+        plane.shutdown();
+    }
+
+    #[test]
+    fn full_shard_sheds_load() {
+        let (plane, _registry) = start_plane(test_cfg(&["m"], 1, 2));
+        // No workers: submissions pile up at the admission gate.
+        let a = plane.submit("m", "a".into());
+        let b = plane.submit("m", "b".into());
+        assert!(matches!(a, SubmitOutcome::Queued(_)));
+        assert!(matches!(b, SubmitOutcome::Queued(_)));
+        assert!(matches!(plane.submit("m", "c".into()), SubmitOutcome::Full));
+        assert!(matches!(plane.submit("nope", "d".into()), SubmitOutcome::UnknownModel));
+        assert_eq!(plane.queued_for("m"), 2);
+        plane.shutdown();
+        // Shutdown resolves the stranded items as errors.
+        if let SubmitOutcome::Queued(it) = a {
+            let r = it.wait_deadline(Instant::now() + Duration::from_secs(2)).unwrap();
+            assert!(r.is_err());
+        }
+    }
+
+    #[test]
+    fn workers_are_shared_across_a_models_shards() {
+        let (plane, registry) = start_plane(test_cfg(&["m"], 2, 16));
+        for i in 0..3 {
+            let ep = format!("s{i}");
+            registry.register(&ep, "m", &contract());
+            plane.worker_up(&ep, "m");
+        }
+        // Every shard of the model sees the full worker set.
+        wait_until(
+            || plane.counts_for("m").iter().all(|c| c.workers == 3),
+            "both shards see 3 workers",
+        );
+        assert_eq!(plane.workers_for("m"), 3);
+        // Re-announcing is idempotent per shard.
+        plane.worker_up("s0", "m");
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(plane.workers_for("m"), 3);
+        plane.shutdown();
+    }
+
+    #[test]
+    fn snapshot_totals_track_the_gate() {
+        let (plane, registry) = start_plane(test_cfg(&["m"], 2, 8));
+        registry.register("s1", "m", &contract());
+        plane.worker_up("s1", "m");
+        wait_until(|| plane.workers_for("m") == 1, "worker announce");
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            match plane.submit("m", format!("r{i}")) {
+                SubmitOutcome::Queued(it) => handles.push(it),
+                _ => panic!("submit rejected"),
+            }
+        }
+        let (start, count) = plane.shards_for("m").unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut served = 0;
+        while served < 4 {
+            assert!(Instant::now() < deadline, "orders stalled at {served}/4");
+            for shard in start..start + count {
+                if let Some(order) = plane.take_order(shard, Duration::from_millis(20)) {
+                    plane.complete_order(order, Ok("done".into()));
+                    served += 1;
+                }
+            }
+        }
+        for it in &handles {
+            let r = it.wait_deadline(Instant::now() + Duration::from_secs(2)).unwrap();
+            assert!(r.is_ok());
+        }
+        wait_until(|| plane.queued_for("m") == 0, "gate drains to zero");
+        let total_submitted: u64 = plane.counts_for("m").iter().map(|c| c.submitted).sum();
+        let total_served: u64 = plane.counts_for("m").iter().map(|c| c.served).sum();
+        assert_eq!(total_submitted, 4);
+        assert_eq!(total_served, 4);
+        // One targeted wakeup per dispatched order — no thundering herd.
+        assert_eq!(plane.wakeups_total(), 4);
+        plane.shutdown();
+    }
+}

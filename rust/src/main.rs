@@ -52,11 +52,12 @@ fn main() -> Result<()> {
                  client     --url http://h:p --model NAME --params 1,2,...\n\
                  balancer   --models NAME[,NAME...] --backend slurm|hq\n\
                             [--scheduler fcfs|worksteal|edf|gang] [--servers N]\n\
-                            [--per-job-servers] [--retry-attempts 2]\n\
-                            [--retry-backoff 50ms] [--probe-eviction-k 3]\n\
-                            [--breaker-floor 0.0]\n\
-                 selftest   [--artifacts DIR]  (artifact check + live-plane\n\
-                            smoke; artifacts optional)\n\
+                            [--shards-per-model 1] [--per-job-servers]\n\
+                            [--retry-attempts 2] [--retry-backoff 50ms]\n\
+                            [--probe-eviction-k 3] [--breaker-floor 0.0]\n\
+                 selftest   [--artifacts DIR] [--shards-per-model 1]\n\
+                            (artifact check + live-plane smoke; artifacts\n\
+                            optional)\n\
                  experiment --app gs2|GP|eigen-100|eigen-5000 [--queue 2]\n\
                             [--evals 100] [--seed 1]\n\
                  campaign   --policy fixed|bursty|mix|hetero|adaptive\n\
@@ -135,6 +136,10 @@ fn balancer(args: &Args) -> Result<()> {
     let retry_backoff = args.micros_or("retry-backoff", 50 * MS)?;
     let probe_k = args.u64_or("probe-eviction-k", 3)? as u32;
     let breaker_floor = args.f64_or("breaker-floor", 0.0)?;
+    // Dispatch shards per model: >1 spreads a hot model's submissions,
+    // scheduling and completions across event threads (see
+    // ARCHITECTURE.md, sharded dispatch plane).
+    let shards = args.usize_or("shards-per-model", 1)?.max(1);
     let eng = engine(args)?;
     let stack = start_live_tuned(
         eng, &model_names, &backend_kind, servers, scale,
@@ -144,6 +149,7 @@ fn balancer(args: &Args) -> Result<()> {
             cfg.retry.backoff_base = retry_backoff;
             cfg.probe_eviction_k = probe_k;
             cfg.breaker_floor = breaker_floor;
+            cfg.shards_per_model = shards;
         },
     )?;
     log_info!("balancer",
@@ -178,13 +184,14 @@ fn selftest(args: &Args) -> Result<()> {
             println!("SKIP artifact self-test (no artifacts: {e:#})");
         }
     }
-    balancer_smoke()
+    balancer_smoke(args.usize_or("shards-per-model", 1)?.max(1))
 }
 
 /// Live-plane smoke: two synthetic models through one balancer front
 /// door (LocalBackend — no scheduler, no artifacts), verifying routing,
-/// learned contracts and the stats surface.
-fn balancer_smoke() -> Result<()> {
+/// learned contracts and the stats surface.  `shards` exercises the
+/// sharded dispatch plane (CI runs it at 2).
+fn balancer_smoke(shards: usize) -> Result<()> {
     use std::sync::atomic::Ordering;
     use uqsched::coordinator::{BalancerConfig, LoadBalancer, LocalBackend};
     use uqsched::models::SyntheticModel;
@@ -200,6 +207,7 @@ fn balancer_smoke() -> Result<()> {
     let cfg = BalancerConfig {
         models: vec!["syn-a".into(), "syn-b".into()],
         max_servers: 2,
+        shards_per_model: shards,
         ..Default::default()
     };
     let mut lb = LoadBalancer::start(cfg, backend)?;

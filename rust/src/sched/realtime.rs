@@ -604,9 +604,11 @@ impl RtDriver {
         self.prune_timers();
     }
 
-    /// Submit one evaluation with a deadline budget (the client's
-    /// request timeout).  Returns the core's task id.
-    pub fn submit(&mut self, budget: Micros) -> TaskId {
+    /// Batch-apply entry point: like [`submit`](Self::submit) but
+    /// without the trailing timer pass, so a shard thread draining an
+    /// event batch applies N events and pays one [`pump`](Self::pump),
+    /// not N `advance` passes.
+    pub fn submit_batched(&mut self, budget: Micros) -> TaskId {
         let t = self.now();
         let s = Submission {
             tag: self.next_tag,
@@ -618,25 +620,34 @@ impl RtDriver {
         let (id, _) = self.core.submit_into(t, &s, &mut self.effects);
         self.live.insert(id);
         self.absorb();
-        self.advance();
         id
+    }
+
+    /// Submit one evaluation with a deadline budget (the client's
+    /// request timeout).  Returns the core's task id.
+    pub fn submit(&mut self, budget: Micros) -> TaskId {
+        let id = self.submit_batched(budget);
+        self.pump();
+        id
+    }
+
+    /// Batch-apply variant of [`work_done`](Self::work_done): no timer
+    /// pass (call [`pump`](Self::pump) once per batch).
+    pub fn work_done_batched(&mut self, id: TaskId) {
+        let t = self.now();
+        self.core.on_work_done_into(t, id, &mut self.effects);
+        self.absorb();
     }
 
     /// A forward finished (or was skipped): free the capacity.
     pub fn work_done(&mut self, id: TaskId) {
-        let t = self.now();
-        self.core.on_work_done_into(t, id, &mut self.effects);
-        self.absorb();
-        self.advance();
+        self.work_done_batched(id);
+        self.pump();
     }
 
-    /// A forward failed with its lease (server died mid-evaluation).
-    /// Charges one attempt against the retry budget: within budget the
-    /// core requeues the task behind a backoff timer (it will re-enter
-    /// `next_ready`, typically placed on a replacement server); past
-    /// budget the core kills it and reports a truncated record, and the
-    /// caller surfaces the error to the client.
-    pub fn work_failed(&mut self, id: TaskId) -> Recovery {
+    /// Batch-apply variant of [`work_failed`](Self::work_failed): same
+    /// retry-budget accounting, no timer pass.
+    pub fn work_failed_batched(&mut self, id: TaskId) -> Recovery {
         let t = self.now();
         let fails = {
             let n = self.attempts.entry(id).or_insert(0);
@@ -658,7 +669,18 @@ impl RtDriver {
             Recovery::Retrying { attempt: fails + 1, backoff }
         };
         self.absorb();
-        self.advance();
+        verdict
+    }
+
+    /// A forward failed with its lease (server died mid-evaluation).
+    /// Charges one attempt against the retry budget: within budget the
+    /// core requeues the task behind a backoff timer (it will re-enter
+    /// `next_ready`, typically placed on a replacement server); past
+    /// budget the core kills it and reports a truncated record, and the
+    /// caller surfaces the error to the client.
+    pub fn work_failed(&mut self, id: TaskId) -> Recovery {
+        let verdict = self.work_failed_batched(id);
+        self.pump();
         verdict
     }
 
@@ -667,8 +689,8 @@ impl RtDriver {
         self.retry
     }
 
-    /// A model server registered: announce one worker under `ext` id.
-    pub fn worker_up(&mut self, ext: u64, cores: u32) {
+    /// Batch-apply variant of [`worker_up`](Self::worker_up).
+    pub fn worker_up_batched(&mut self, ext: u64, cores: u32) {
         let t = self.now();
         self.core.on_capacity_change_into(
             t,
@@ -676,13 +698,16 @@ impl RtDriver {
             &mut self.effects,
         );
         self.absorb();
-        self.advance();
     }
 
-    /// A server retired or died: ready entries bound to it are stale
-    /// (the core requeues and re-places their tasks), then the core
-    /// processes the loss.
-    pub fn worker_lost(&mut self, ext: u64) {
+    /// A model server registered: announce one worker under `ext` id.
+    pub fn worker_up(&mut self, ext: u64, cores: u32) {
+        self.worker_up_batched(ext, cores);
+        self.pump();
+    }
+
+    /// Batch-apply variant of [`worker_lost`](Self::worker_lost).
+    pub fn worker_lost_batched(&mut self, ext: u64) {
         self.ready.retain(|&(_, w)| w != Some(ext));
         let t = self.now();
         self.core.on_capacity_change_into(
@@ -691,6 +716,21 @@ impl RtDriver {
             &mut self.effects,
         );
         self.absorb();
+    }
+
+    /// A server retired or died: ready entries bound to it are stale
+    /// (the core requeues and re-places their tasks), then the core
+    /// processes the loss.
+    pub fn worker_lost(&mut self, ext: u64) {
+        self.worker_lost_batched(ext);
+        self.pump();
+    }
+
+    /// One timer pass over the whole batch: fire everything due, prune
+    /// stale timers.  The shard thread calls this once after applying a
+    /// drained event batch via the `*_batched` entry points — a burst of
+    /// N submissions pays one pump, not N.
+    pub fn pump(&mut self) {
         self.advance();
     }
 
@@ -840,6 +880,46 @@ mod tests {
             assert!(d.next_ready().is_none(),
                     "{}: quarantined task must not redispatch",
                     d.label());
+        }
+    }
+
+    #[test]
+    fn batched_apply_matches_eager_apply() {
+        for policy in [LivePolicy::Fcfs, LivePolicy::WorkSteal,
+                       LivePolicy::Edf, LivePolicy::Gang] {
+            // Batched: N events, one pump.
+            let mut batched = RtDriver::for_policy(policy);
+            batched.worker_up_batched(1, 1);
+            batched.worker_up_batched(2, 1);
+            let b1 = batched.submit_batched(60 * SEC);
+            let b2 = batched.submit_batched(60 * SEC);
+            let b3 = batched.submit_batched(60 * SEC);
+            batched.pump();
+            // Eager: one pump per event (the legacy entry points).
+            let mut eager = RtDriver::for_policy(policy);
+            eager.worker_up(1, 1);
+            eager.worker_up(2, 1);
+            let e1 = eager.submit(60 * SEC);
+            let e2 = eager.submit(60 * SEC);
+            let e3 = eager.submit(60 * SEC);
+            assert_eq!((b1, b2, b3), (e1, e2, e3), "{}", batched.label());
+            // Two single-core workers: both dispatch the same task set
+            // in the same order regardless of batching.
+            let mut bd = Vec::new();
+            while let Some(e) = batched.next_ready() {
+                bd.push(e);
+            }
+            let mut ed = Vec::new();
+            while let Some(e) = eager.next_ready() {
+                ed.push(e);
+            }
+            assert_eq!(bd, ed, "{}: batch apply drifted", batched.label());
+            assert_eq!(bd.len(), 2, "{}", batched.label());
+            batched.work_done_batched(bd[0].0);
+            batched.pump();
+            eager.work_done(ed[0].0);
+            assert_eq!(batched.next_ready(), eager.next_ready(),
+                       "{}: post-completion drift", batched.label());
         }
     }
 

@@ -455,6 +455,198 @@ fn repeated_server_death_exhausts_retry_budget() {
     lb.shutdown();
 }
 
+/// Multi-shard drill: mixed clients across 3 models × 2 shards with a
+/// mid-run server kill.  Every accepted request must resolve (the killed
+/// evaluation retries on a replacement server), and the front door's
+/// /Stats totals must equal the sum of the per-shard snapshots.
+#[test]
+fn multi_shard_drill_no_request_lost_and_snapshots_sum() {
+    let kill = Arc::new(AtomicBool::new(false));
+    let kill2 = kill.clone();
+    let factory: uqsched::coordinator::ModelFactory =
+        Arc::new(move |name: &str| {
+            if !name.starts_with("drill-") {
+                anyhow::bail!("unknown test model '{name}'");
+            }
+            Ok(Arc::new(KillableModel {
+                inner: SyntheticModel::new(name, &[2], &[1]),
+                kill_next: kill2.clone(),
+            }) as Arc<dyn Model>)
+        });
+    let names: Vec<String> = (0..3).map(|i| format!("drill-{i}")).collect();
+    let mut lb = LoadBalancer::start(
+        BalancerConfig {
+            models: names.clone(),
+            max_servers: 2,
+            forwarders: 6,
+            shards_per_model: 2,
+            ..Default::default()
+        },
+        LocalBackend::new(factory),
+    )
+    .expect("balancer");
+    let url = lb.url();
+    wait_servers(&lb, 3);
+
+    let evals = 20usize;
+    let threads: Vec<_> = names
+        .iter()
+        .flat_map(|name| {
+            (0..2usize).map(|c| {
+                let url = url.clone();
+                let name = name.clone();
+                let kill = kill.clone();
+                std::thread::spawn(move || {
+                    let mut m = HttpModel::connect(&url, &name).unwrap();
+                    let cfgv = Value::Obj(Default::default());
+                    for i in 0..evals {
+                        if c == 0 && i == evals / 2 && name.ends_with("-1") {
+                            // Mid-run: the next forward dies with its
+                            // server, whichever model it serves.
+                            kill.store(true, Ordering::SeqCst);
+                        }
+                        let x = vec![c as f64, i as f64];
+                        let sum: f64 = x.iter().sum();
+                        let out = m.evaluate(&[x], &cfgv).unwrap_or_else(
+                            |e| panic!("{name} c{c} i{i}: {e:#}"));
+                        assert_eq!(out[0][0], sum, "{name} routed wrong");
+                    }
+                })
+            }).collect::<Vec<_>>()
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    // No accepted request lost: every one of the 120 evaluations
+    // resolved successfully (the killed forward recovered via retry).
+    assert_eq!(lb.requests_served.load(Ordering::Relaxed), 120);
+    let total_retries: u64 = names
+        .iter()
+        .map(|m| lb.stats().model(m).unwrap()
+                 .retries.load(Ordering::Relaxed))
+        .sum();
+    assert!(total_retries >= 1, "the mid-run kill must have forced a retry");
+
+    // /Stats totals equal the sum of the per-shard snapshots.
+    let doc = lb.stats_json();
+    assert_eq!(doc.get("shards_per_model").and_then(|v| v.as_f64()),
+               Some(2.0));
+    let ms = doc.get("models").and_then(|v| v.as_arr()).expect("models");
+    assert_eq!(ms.len(), 3);
+    for row in ms {
+        let name = row.get("name").and_then(|v| v.as_str()).unwrap();
+        let shards = row.get("shards").and_then(|v| v.as_arr())
+            .expect("per-shard snapshots");
+        assert_eq!(shards.len(), 2, "{name}: one snapshot per shard");
+        let snap_served: f64 = shards.iter()
+            .map(|s| s.get("served").and_then(|v| v.as_f64()).unwrap())
+            .sum();
+        let snap_submitted: f64 = shards.iter()
+            .map(|s| s.get("submitted").and_then(|v| v.as_f64()).unwrap())
+            .sum();
+        let served = row.get("served").and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(served, 40.0, "{name} lost requests");
+        assert_eq!(snap_served, served,
+                   "{name}: /Stats total != sum of shard snapshots");
+        assert_eq!(snap_submitted, 40.0,
+                   "{name}: shard snapshots lost submissions");
+    }
+    lb.shutdown();
+}
+
+/// Per-model FCFS must hold within each shard of a group: drive the
+/// dispatch plane directly (3 models × 2 shards, one shared server per
+/// model) and check every shard's order stream surfaces each model's
+/// submissions in order.
+#[test]
+fn fcfs_order_holds_within_each_shard_of_a_group() {
+    use std::collections::HashMap;
+    use std::sync::atomic::AtomicU64;
+    use uqsched::coordinator::{BalancerStats, DispatchPlane, PlaneConfig,
+                               Registry, SubmitOutcome};
+    use uqsched::sched::realtime::RetryPolicy;
+    use uqsched::umbridge::ModelContract;
+
+    let names: Vec<String> = (0..3).map(|i| format!("m{i}")).collect();
+    let registry = Arc::new(Registry::new());
+    let stats = Arc::new(BalancerStats::new(&names));
+    let plane = DispatchPlane::start(
+        PlaneConfig {
+            models: names.clone(),
+            shards_per_model: 2,
+            queue_capacity: 64,
+            scheduler: LivePolicy::Fcfs,
+            retry: RetryPolicy::default(),
+            request_timeout: Duration::from_secs(10),
+            persistent_servers: true,
+        },
+        registry.clone(),
+        stats,
+        Arc::new(AtomicU64::new(0)),
+    );
+    let contract = ModelContract {
+        input_sizes: vec![1],
+        output_sizes: vec![1],
+    };
+    for (j, m) in names.iter().enumerate() {
+        let ep = format!("fcfs-drill-{j}");
+        registry.register(&ep, m, &contract);
+        plane.worker_up(&ep, m);
+    }
+    let t0 = Instant::now();
+    while names.iter().any(|m| plane.workers_for(m) < 1) {
+        assert!(t0.elapsed() < Duration::from_secs(10),
+                "workers failed to announce");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let mut handles = Vec::new();
+    for m in &names {
+        for i in 0..8 {
+            match plane.submit(m, format!("{m}:{i}")) {
+                SubmitOutcome::Queued(h) => handles.push(h),
+                _ => panic!("submit rejected"),
+            }
+        }
+    }
+
+    // Drain the order queues; within each (shard, model) stream the
+    // submission index must be strictly increasing.
+    let mut last_seen: HashMap<(usize, String), i64> = HashMap::new();
+    let mut served = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while served < handles.len() {
+        assert!(Instant::now() < deadline,
+                "orders stalled at {served}/{}", handles.len());
+        for s in 0..plane.shard_count() {
+            while let Some(order) =
+                plane.take_order(s, Duration::from_millis(5))
+            {
+                let body = order.item().body().to_string();
+                let (m, idx) = body.split_once(':').unwrap();
+                let idx: i64 = idx.parse().unwrap();
+                if let Some(prev) =
+                    last_seen.insert((order.shard(), m.to_string()), idx)
+                {
+                    assert!(idx > prev,
+                            "FCFS violated within shard {}: {m}:{idx} \
+                             after {m}:{prev}", order.shard());
+                }
+                plane.complete_order(order, Ok("ok".into()));
+                served += 1;
+            }
+        }
+    }
+    for h in &handles {
+        let r = h.wait_deadline(Instant::now() + Duration::from_secs(5))
+            .expect("resolved");
+        assert!(r.is_ok());
+    }
+    plane.shutdown();
+}
+
 #[test]
 fn stats_endpoint_reports_histograms() {
     let mut lb = start(BalancerConfig {
