@@ -12,6 +12,10 @@
 //! * a flaky cluster: one seeded fault plan (worker crashes, failing
 //!   attempts, retry budgets) replayed identically against all four
 //!   cores, so the makespan deltas are pure recovery-policy cost,
+//! * dependency DAGs through the same kernel: an MLDA multilevel
+//!   campaign (coarse chains gate fine ones; per-level time-to-Nth is
+//!   the headline metric, compared across hq / edf / gang) and a
+//!   stage-in -> fanout computes -> reduce pipeline,
 //!
 //! and — via the `SchedulerCore` seam — that every policy runs
 //! unchanged against a *third* and *fourth* scheduler (`worksteal`, the
@@ -25,7 +29,8 @@
 
 use uqsched::campaign::{
     self, AdaptiveBayes, CampaignConfig, CampaignResult, Family, FixedDepth,
-    HeteroFamilies, PoissonBurst, SlurmMode, Submitter, UserMix, UserStream,
+    HeteroFamilies, Mlda, MldaLevel, PoissonBurst, SlurmMode, StageInOut,
+    Submitter, UserMix, UserStream,
 };
 use uqsched::cli::Args;
 use uqsched::clock::SEC;
@@ -157,5 +162,58 @@ fn main() -> anyhow::Result<()> {
     report_flaky(&campaign::run_worksteal(&cfg, &mut sub));
     let mut sub = FixedDepth::new(App::Gp, tasks, 4, seed);
     report_flaky(&campaign::run_edf(&cfg, &mut sub));
+    cfg.faults = None;
+
+    println!("== MLDA multilevel campaign (per-level time-to-Nth) ==");
+    // Three levels, coarsest first: lots of cheap coarse chains, fewer
+    // medium ones, a handful of expensive fine evaluations.  Chains are
+    // dependency edges — a child waits Blocked in the kernel until its
+    // parent's record is terminal — so the per-level completion curves
+    // below are pure scheduler policy, not submitter luck.
+    let levels = || {
+        vec![
+            MldaLevel { count: (tasks / 2).max(4), runtime_scale: 0.5 },
+            MldaLevel { count: (tasks / 4).max(2), runtime_scale: 1.0 },
+            MldaLevel { count: (tasks / 8).max(1), runtime_scale: 2.0 },
+        ]
+    };
+    let mlda = |seed| Mlda::new(App::Gp, levels(), seed).with_occupancy(4, 1, 16);
+    let runs: [(&str, fn(&CampaignConfig, &mut dyn Submitter) -> CampaignResult); 3] = [
+        ("hq", campaign::run_hq),
+        ("edf", campaign::run_edf),
+        ("gang", campaign::run_gang),
+    ];
+    for (name, run) in runs {
+        let mut sub = mlda(seed);
+        let r = run(&cfg, &mut sub);
+        report(&r);
+        let m = &r.metrics;
+        println!(
+            "  {:<33} {} edges | {} released | {} skipped | peak blocked {}",
+            "", m.dep_edges, m.released, m.skipped, m.peak_blocked
+        );
+        for (user, ms) in &m.per_user_time_to {
+            if let Some(&(n, t)) = ms.last() {
+                println!(
+                    "  {:<33} [{name}] level {user}: all {n} results by {:.1} s",
+                    "",
+                    t as f64 / SEC as f64
+                );
+            }
+        }
+    }
+
+    println!("== stage-in / compute / reduce rounds ==");
+    // Each round: one transfer task gates a fanout of computes, which
+    // all gate one reduce — a data-intensive DAG with exact structure
+    // (rounds x (fanout + 2) records, 2 x fanout edges per round).
+    let mut sub = StageInOut::new(App::Gp, 8, 6, 2, seed);
+    let r = campaign::run_hq(&cfg, &mut sub);
+    report(&r);
+    let m = &r.metrics;
+    println!(
+        "  {:<33} {} edges | {} released | peak blocked {}",
+        "", m.dep_edges, m.released, m.peak_blocked
+    );
     Ok(())
 }

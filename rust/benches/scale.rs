@@ -31,8 +31,9 @@
 
 use std::time::Instant;
 
-use uqsched::campaign::{self, AdaptiveBayes, CampaignConfig, PoissonBurst,
-                        SlurmMode};
+use uqsched::campaign::{self, AdaptiveBayes, CampaignConfig, Mlda,
+                        MldaLevel, PoissonBurst, SlurmMode, StageInOut,
+                        Submitter};
 use uqsched::clock::{Des, Micros, MS, SEC};
 use uqsched::cluster::{ClusterSpec, JobRequest, OverheadModel};
 use uqsched::workload::App;
@@ -576,6 +577,117 @@ fn campaign_flaky_rows(
     }
 }
 
+/// DAG campaigns at scale: the dependency plane (Blocked → Ready via
+/// the kernel's `DepTracker`) on every core.  The MLDA rows run
+/// three-level delayed-acceptance chains — the final task count is
+/// seed-dependent (chains extend under a promotion draw and surprises
+/// refine), so each row records the completed count; the stage-in/out
+/// rows have an exact round structure and assert it.  The summary gains
+/// `mlda_level_ttn`: per core, the virtual time to the *last* result of
+/// each level — the multilevel analogue of time-to-Nth-result.
+fn campaign_dag_rows(
+    n: u64,
+    rows: &mut Vec<Row>,
+    summary: &mut Vec<(&'static str, Value)>,
+) {
+    let run = |which: &str,
+               sub: &mut dyn Submitter|
+     -> (campaign::CampaignResult, f64) {
+        let cfg = campaign_cfg();
+        let t0 = Instant::now();
+        let res = match which {
+            "slurm" => campaign::run_slurm(&cfg, sub, SlurmMode::Native),
+            "hq" => campaign::run_hq(&cfg, sub),
+            "worksteal" => campaign::run_worksteal(&cfg, sub),
+            "gang" => campaign::run_gang(&cfg, sub),
+            _ => campaign::run_edf(&cfg, sub),
+        };
+        (res, t0.elapsed().as_secs_f64())
+    };
+    // Level budgets scale with the campaign knob: half the stream is
+    // coarse, the fine tail is short and slow (2x runtimes).
+    let levels = || {
+        vec![
+            MldaLevel { count: (n / 2).max(4), runtime_scale: 0.5 },
+            MldaLevel { count: (n * 3 / 10).max(2), runtime_scale: 1.0 },
+            MldaLevel { count: (n / 5).max(1), runtime_scale: 2.0 },
+        ]
+    };
+    let occ = 256u64.min((n / 2).max(4));
+    let mut ttn: Vec<(String, Value)> = Vec::new();
+    for (which, imp) in [
+        ("slurm", "mlda-slurm"),
+        ("hq", "mlda-hq"),
+        ("worksteal", "mlda-worksteal"),
+        ("edf", "mlda-edf"),
+        ("gang", "mlda-gang"),
+    ] {
+        let mut sub = Mlda::new(App::Eigen100, levels(), 42)
+            .with_occupancy(occ, 1, occ * 4);
+        let (res, wall) = run(which, &mut sub);
+        let m = &res.metrics;
+        assert_eq!(m.completed, m.submitted, "{imp} campaign lost tasks");
+        assert!(m.dep_edges > 0, "{imp}: chains carry edges");
+        assert!(m.released > 0, "{imp}: gated tasks were released");
+        let r = Row {
+            core: "campaign",
+            imp,
+            tasks: m.completed,
+            depth: 0,
+            wall_s: wall,
+            tasks_per_s: m.completed as f64 / wall,
+            peak_resident: m.peak_in_flight as usize,
+            des_events: m.des_events,
+        };
+        r.print();
+        rows.push(r);
+        // Per-level time to the last result, in virtual seconds.
+        let per_level: std::collections::BTreeMap<String, Value> = m
+            .per_user_time_to
+            .iter()
+            .filter_map(|(user, ms)| {
+                ms.last().map(|(_, t)| {
+                    (format!("level{user}"),
+                     Value::num(*t as f64 / SEC as f64))
+                })
+            })
+            .collect();
+        ttn.push((which.to_string(), Value::Obj(per_level)));
+    }
+    summary.push(("mlda_level_ttn", Value::Obj(ttn.into_iter().collect())));
+
+    let fanout = 8u64;
+    let rounds = (n / (fanout + 2)).max(1);
+    for (which, imp) in [
+        ("slurm", "stageio-slurm"),
+        ("hq", "stageio-hq"),
+        ("worksteal", "stageio-worksteal"),
+        ("edf", "stageio-edf"),
+        ("gang", "stageio-gang"),
+    ] {
+        let mut sub = StageInOut::new(App::Eigen100, rounds, fanout, 8, 42);
+        let total = sub.total_tasks();
+        let (res, wall) = run(which, &mut sub);
+        let m = &res.metrics;
+        assert_eq!(m.completed, total, "{imp} campaign incomplete");
+        // Every compute gates on its transfer, every reduce fans in
+        // over every compute: 2 * fanout edges per round.
+        assert_eq!(m.dep_edges, rounds * 2 * fanout, "{imp} edge count");
+        let r = Row {
+            core: "campaign",
+            imp,
+            tasks: total,
+            depth: 0,
+            wall_s: wall,
+            tasks_per_s: total as f64 / wall,
+            peak_resident: m.peak_in_flight as usize,
+            des_events: m.des_events,
+        };
+        r.print();
+        rows.push(r);
+    }
+}
+
 // ---------------------------------------------------------------------------
 
 fn env_u64(name: &str, default: u64) -> u64 {
@@ -721,6 +833,12 @@ fn main() {
         println!("-- flaky-cluster campaign (all five cores, seeded \
                   fault plan) --");
         campaign_flaky_rows(campaign_tasks, &mut rows, &mut summary);
+    }
+
+    // DAG campaigns: MLDA chains + stage-in/out rounds on every core.
+    if campaign_tasks > 0 {
+        println!("-- dag campaigns (mlda + stageio, all five cores) --");
+        campaign_dag_rows(campaign_tasks, &mut rows, &mut summary);
     }
     for core in ["slurm", "hq"] {
         if let (Some(naive), Some(indexed)) = (

@@ -1,0 +1,602 @@
+//! DAG-capable workload policies: multilevel MLDA chains and
+//! Balsam-style stage-in/compute/stage-out rounds.
+//!
+//! Both policies speak the dependency vocabulary the kernel's
+//! [`DepTracker`](crate::sched::DepTracker) layer provides through
+//! [`Sink::submit_after`]: a gated submission enters the scheduler only
+//! once every parent reached a terminal record, and a failed ancestor
+//! propagates truncated `Skipped` records instead — closed loops never
+//! deadlock, even under `--faults`.
+//!
+//! * [`Mlda`] — L-level delayed-acceptance chains in the style of
+//!   multilevel Bayesian inversion (Loi, Wille & Reinarz, PAPERS.md): a
+//!   coarse evaluation gates the fine one, chains extend level-by-level
+//!   under a seeded promotion draw, surprising results spawn
+//!   result-dependent refinement children, and the number of open
+//!   chains adapts online to the gated backlog (level occupancy).
+//!   Levels map to campaign users, so the per-level completion curves
+//!   land in [`CampaignMetrics::per_user_time_to`]
+//!   (crate::campaign::CampaignMetrics::per_user_time_to).
+//! * [`StageInOut`] — data-intensive rounds (Balsam, PAPERS.md):
+//!   a stage-in transfer gates N computes, whose fan-in gates one
+//!   reduce; several rounds run in flight, the next launching as a
+//!   reduce lands.
+//!
+//! Determinism contract (same as every submitter): all randomness is
+//! keyed on the seed and task tags, so a campaign is a pure function of
+//! `(config, policy, seed)` — `tests/campaign_equiv.rs` pins repeats
+//! byte-for-byte.
+
+use std::collections::HashMap;
+
+use crate::clock::{Micros, SEC};
+use crate::metrics::JobRecord;
+use crate::util::Rng;
+use crate::workload::{App, RuntimeModel};
+
+use super::submitter::{Sink, Submission, Submitter};
+
+// ---------------------------------------------------------------------------
+// MLDA: multilevel delayed-acceptance chains.
+// ---------------------------------------------------------------------------
+
+/// One MLDA level: how many tasks its budget allows and how its runtime
+/// scales against the app's calibrated model (coarse levels < 1, fine
+/// levels > 1).
+#[derive(Clone, Debug)]
+pub struct MldaLevel {
+    pub count: u64,
+    pub runtime_scale: f64,
+}
+
+/// Parse a `--levels` spec: comma-separated `count:runtime_scale` pairs,
+/// coarsest first — e.g. `32:0.5,16:1,8:2`.
+pub fn parse_levels(spec: &str) -> Result<Vec<MldaLevel>, String> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let fields: Vec<&str> = part.trim().split(':').collect();
+        if fields.len() != 2 {
+            return Err(format!(
+                "bad level '{part}' (want count:runtime_scale)"
+            ));
+        }
+        let count: u64 = fields[0]
+            .parse()
+            .map_err(|_| format!("bad count in '{part}'"))?;
+        let runtime_scale: f64 = fields[1]
+            .parse()
+            .map_err(|_| format!("bad scale in '{part}'"))?;
+        if runtime_scale <= 0.0 {
+            return Err(format!("non-positive scale in '{part}'"));
+        }
+        out.push(MldaLevel { count, runtime_scale });
+    }
+    if out.is_empty() || out[0].count == 0 {
+        return Err("level 0 needs a non-zero count".to_string());
+    }
+    Ok(out)
+}
+
+/// Multilevel delayed-acceptance chains: each chain starts at level 0
+/// (coarse) and extends level-by-level under a seeded per-task
+/// promotion draw, every extension gated on its parent
+/// ([`Sink::submit_after`]) — the fine model runs only after the coarse
+/// one delivered.  Completions feed back twice: a *surprising*
+/// pseudo-QoI (outside `refine_z` standard deviations of the running
+/// mean) spawns a result-dependent refinement child at the next level,
+/// and the count of open chains (`occ0`) adapts online to the gated
+/// backlog so no level starves or drowns.
+pub struct Mlda {
+    app: App,
+    levels: Vec<MldaLevel>,
+    remaining: Vec<u64>,
+    promote_p: f64,
+    refine_z: f64,
+    occ0: u64,
+    occ_min: u64,
+    occ_max: u64,
+    rtm: RuntimeModel,
+    seed: u64,
+    next_tag: u64,
+    submitted: u64,
+    completed: u64,
+    /// Level-0 tasks in flight (chain admission control).
+    roots_out: u64,
+    /// Gated (level > 0) tasks in flight — blocked, running or skipped
+    /// but not yet reported; the occupancy controller's observable.
+    gated_out: u64,
+    level_of: HashMap<u64, u32>,
+    /// Running pseudo-QoI moments (Welford) for refinement decisions.
+    qoi_n: u64,
+    qoi_mean: f64,
+    qoi_m2: f64,
+    refined: u64,
+    occupancy_trace: Vec<(Micros, u64)>,
+    started: bool,
+}
+
+impl Mlda {
+    /// `levels` is coarsest-first; level 0 must have a non-zero count.
+    pub fn new(app: App, levels: Vec<MldaLevel>, seed: u64) -> Self {
+        assert!(!levels.is_empty(), "Mlda needs at least one level");
+        assert!(levels[0].count > 0, "level 0 needs a non-zero count");
+        let remaining = levels.iter().map(|l| l.count).collect();
+        Mlda {
+            app,
+            levels,
+            remaining,
+            promote_p: 0.7,
+            refine_z: 1.5,
+            occ0: 8,
+            occ_min: 1,
+            occ_max: 64,
+            rtm: RuntimeModel::new(seed),
+            seed,
+            next_tag: 0,
+            submitted: 0,
+            completed: 0,
+            roots_out: 0,
+            gated_out: 0,
+            level_of: HashMap::new(),
+            qoi_n: 0,
+            qoi_mean: 0.0,
+            qoi_m2: 0.0,
+            refined: 0,
+            occupancy_trace: Vec::new(),
+            started: false,
+        }
+    }
+
+    /// Override the per-task promotion probability (chain extension).
+    pub fn with_promote(mut self, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        self.promote_p = p;
+        self
+    }
+
+    /// Override the refinement surprise threshold in standard
+    /// deviations (`<= 0` disables result-dependent refinements).
+    pub fn with_refine_z(mut self, z: f64) -> Self {
+        self.refine_z = z;
+        self
+    }
+
+    /// Override the initial/min/max level-0 occupancy targets.
+    pub fn with_occupancy(mut self, init: u64, min: u64, max: u64) -> Self {
+        assert!(min >= 1 && init >= min && max >= init);
+        self.occ0 = init;
+        self.occ_min = min;
+        self.occ_max = max;
+        self
+    }
+
+    /// The occupancy controller's decisions `(t, occ0)` over the run.
+    pub fn occupancy_trace(&self) -> &[(Micros, u64)] {
+        &self.occupancy_trace
+    }
+
+    /// Result-dependent refinement children spawned so far.
+    pub fn refined(&self) -> u64 {
+        self.refined
+    }
+
+    /// Seeded per-tag draw in `[0, 1)` — order-independent, so repeats
+    /// are byte-identical whatever the completion interleaving.
+    fn draw(&self, tag: u64, salt: u64) -> f64 {
+        Rng::new(
+            self.seed
+                ^ salt
+                ^ (tag + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        )
+        .uniform()
+    }
+
+    fn alloc(&mut self, level: usize) -> Submission {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        self.remaining[level] -= 1;
+        let base = self.rtm.duration(self.app, tag) as f64;
+        let duration =
+            (base * self.levels[level].runtime_scale).max(1.0) as Micros;
+        self.level_of.insert(tag, level as u32);
+        self.submitted += 1;
+        Submission { tag, user: level as u32, app: self.app, duration }
+    }
+
+    /// Open one chain: a level-0 root plus its pre-gated extensions up
+    /// to the promotion draw's stopping point (or a drained budget).
+    fn submit_chain(&mut self, sink: &mut Sink) {
+        if self.remaining[0] == 0 {
+            return;
+        }
+        let root = self.alloc(0);
+        let mut parent = root.tag;
+        sink.submit(root);
+        self.roots_out += 1;
+        for l in 1..self.levels.len() {
+            if self.remaining[l] == 0
+                || self.draw(parent, 0x51D0) >= self.promote_p
+            {
+                break;
+            }
+            let s = self.alloc(l);
+            let tag = s.tag;
+            sink.submit_after(s, &[parent]);
+            self.gated_out += 1;
+            parent = tag;
+        }
+    }
+
+    /// Noisy pseudo-QoI from a record (log CPU seconds + seeded
+    /// observation noise — the same observable `AdaptiveBayes` uses),
+    /// folded into the running moments; returns whether it surprises.
+    fn qoi_surprises(&mut self, rec: &JobRecord) -> bool {
+        let mut r = Rng::new(
+            self.seed
+                ^ 0xC0A7
+                ^ (rec.tag + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let cpu_s = (rec.cpu.max(1) as f64) / SEC as f64;
+        let q = cpu_s.ln() + 0.05 * r.normal();
+        self.qoi_n += 1;
+        let delta = q - self.qoi_mean;
+        self.qoi_mean += delta / self.qoi_n as f64;
+        self.qoi_m2 += delta * (q - self.qoi_mean);
+        if self.refine_z <= 0.0 || self.qoi_n < 8 {
+            return false;
+        }
+        let sd = (self.qoi_m2 / self.qoi_n as f64).sqrt();
+        (q - self.qoi_mean).abs() > self.refine_z * sd.max(1e-12)
+    }
+}
+
+impl Submitter for Mlda {
+    fn label(&self) -> &'static str {
+        "mlda"
+    }
+
+    fn start(&mut self, sink: &mut Sink) {
+        self.started = true;
+        let k = self.occ0;
+        for _ in 0..k {
+            if self.remaining[0] == 0 {
+                break;
+            }
+            self.submit_chain(sink);
+        }
+    }
+
+    fn wake(&mut self, _t: Micros, _token: u64, _sink: &mut Sink) {}
+
+    fn completed(&mut self, t: Micros, rec: &JobRecord, sink: &mut Sink) {
+        self.completed += 1;
+        let lvl = self.level_of.remove(&rec.tag).unwrap_or(0) as usize;
+        if lvl == 0 {
+            self.roots_out = self.roots_out.saturating_sub(1);
+        } else {
+            self.gated_out = self.gated_out.saturating_sub(1);
+        }
+
+        // Result-dependent child: a surprising (and untruncated) result
+        // at level l buys one refinement evaluation at level l+1, gated
+        // on the completed task — the late-edge path (its parent is
+        // already terminal, so the dependency layer admits it at once).
+        if !rec.truncated
+            && lvl + 1 < self.levels.len()
+            && self.remaining[lvl + 1] > 0
+            && self.qoi_surprises(rec)
+        {
+            let s = self.alloc(lvl + 1);
+            sink.submit_after(s, &[rec.tag]);
+            self.gated_out += 1;
+            self.refined += 1;
+        }
+
+        // Online level-occupancy adaptation: a deep gated backlog means
+        // open chains are outpacing the fine levels — throttle root
+        // admission; a dry one means the fine levels are starved —
+        // open more chains.
+        let old = self.occ0;
+        if self.gated_out > 4 * self.occ0 {
+            self.occ0 = (self.occ0 - 1).max(self.occ_min);
+        } else if self.gated_out < self.occ0 {
+            self.occ0 = (self.occ0 + 1).min(self.occ_max);
+        }
+        if self.occ0 != old {
+            self.occupancy_trace.push((t, self.occ0));
+        }
+
+        // Keep the chain frontier at the occupancy target.  Running
+        // this on *every* completion (not just roots) maintains the
+        // invariant: whenever submitted == completed, the level-0
+        // budget is spent — so `finished` below can never fire early.
+        while self.roots_out < self.occ0 && self.remaining[0] > 0 {
+            self.submit_chain(sink);
+        }
+    }
+
+    fn finished(&self, _completed: u64) -> bool {
+        self.started
+            && self.completed >= self.submitted
+            && self.remaining[0] == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage-in / compute / stage-out rounds.
+// ---------------------------------------------------------------------------
+
+/// Transfer and reduce duration scales against the app's calibrated
+/// compute model (data staging is cheaper than the solve).
+const TRANSFER_SCALE: f64 = 0.25;
+const REDUCE_SCALE: f64 = 0.25;
+
+/// Balsam-style data-intensive rounds: one stage-in transfer gates
+/// `fanout` computes, whose fan-in gates one reduce (stage-out).  Whole
+/// rounds are pre-submitted through the dependency layer; `inflight`
+/// rounds overlap, and each completed (or skipped) reduce launches the
+/// next round — so the campaign drains even when a fault quarantines a
+/// transfer and its whole round skips.
+pub struct StageInOut {
+    app: App,
+    rounds: u64,
+    fanout: u64,
+    inflight: u64,
+    rtm: RuntimeModel,
+    next_round: u64,
+    rounds_done: u64,
+    next_tag: u64,
+    /// reduce tag -> round index (removed when the reduce reports).
+    reduce_of: HashMap<u64, u64>,
+}
+
+impl StageInOut {
+    pub fn new(
+        app: App,
+        rounds: u64,
+        fanout: u64,
+        inflight: u64,
+        seed: u64,
+    ) -> Self {
+        assert!(rounds >= 1 && fanout >= 1 && inflight >= 1);
+        StageInOut {
+            app,
+            rounds,
+            fanout,
+            inflight,
+            rtm: RuntimeModel::new(seed),
+            next_round: 0,
+            rounds_done: 0,
+            next_tag: 0,
+            reduce_of: HashMap::new(),
+        }
+    }
+
+    /// Every round is transfer + fanout computes + reduce.
+    pub fn total_tasks(&self) -> u64 {
+        self.rounds * (self.fanout + 2)
+    }
+
+    fn alloc(&mut self, user: u32, scale: f64) -> Submission {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        let base = self.rtm.duration(self.app, tag) as f64;
+        Submission {
+            tag,
+            user,
+            app: self.app,
+            duration: (base * scale).max(1.0) as Micros,
+        }
+    }
+
+    fn launch_round(&mut self, sink: &mut Sink) {
+        if self.next_round >= self.rounds {
+            return;
+        }
+        let round = self.next_round;
+        self.next_round += 1;
+        let transfer = self.alloc(0, TRANSFER_SCALE);
+        let tin = transfer.tag;
+        sink.submit(transfer);
+        let mut computes = Vec::with_capacity(self.fanout as usize);
+        for _ in 0..self.fanout {
+            let c = self.alloc(1, 1.0);
+            computes.push(c.tag);
+            sink.submit_after(c, &[tin]);
+        }
+        let reduce = self.alloc(2, REDUCE_SCALE);
+        self.reduce_of.insert(reduce.tag, round);
+        sink.submit_after(reduce, &computes);
+    }
+}
+
+impl Submitter for StageInOut {
+    fn label(&self) -> &'static str {
+        "stageio"
+    }
+
+    fn start(&mut self, sink: &mut Sink) {
+        for _ in 0..self.inflight.min(self.rounds) {
+            self.launch_round(sink);
+        }
+    }
+
+    fn wake(&mut self, _t: Micros, _token: u64, _sink: &mut Sink) {}
+
+    fn completed(&mut self, _t: Micros, rec: &JobRecord, sink: &mut Sink) {
+        // The reduce is the last record of its round (it is gated on
+        // every compute, which are gated on the transfer) — its report,
+        // skipped or not, retires the round and admits the next.
+        if self.reduce_of.remove(&rec.tag).is_some() {
+            self.rounds_done += 1;
+            self.launch_round(sink);
+        }
+    }
+
+    fn finished(&self, _completed: u64) -> bool {
+        self.rounds_done >= self.rounds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(
+        sink: &mut Sink,
+    ) -> (Vec<Submission>, Vec<(Submission, Vec<u64>)>) {
+        (
+            std::mem::take(&mut sink.submissions),
+            std::mem::take(&mut sink.gated),
+        )
+    }
+
+    fn rec(tag: u64, cpu: Micros) -> JobRecord {
+        JobRecord { tag, submit: 0, start: 0, end: cpu, cpu, truncated: false }
+    }
+
+    #[test]
+    fn mlda_chains_gate_fine_on_coarse() {
+        let levels = vec![
+            MldaLevel { count: 8, runtime_scale: 0.5 },
+            MldaLevel { count: 8, runtime_scale: 1.0 },
+            MldaLevel { count: 8, runtime_scale: 2.0 },
+        ];
+        let mut m = Mlda::new(App::Gp, levels, 7)
+            .with_promote(1.0)
+            .with_occupancy(2, 1, 4);
+        let mut sink = Sink::new();
+        m.start(&mut sink);
+        let (plain, gated) = drain(&mut sink);
+        // Two chains, each a full 3-level column (promote 1.0).
+        assert_eq!(plain.len(), 2);
+        assert_eq!(gated.len(), 4);
+        for s in &plain {
+            assert_eq!(s.user, 0);
+        }
+        // Every gated task names exactly its chain predecessor.
+        for (s, parents) in &gated {
+            assert_eq!(parents.len(), 1);
+            assert!(s.user >= 1);
+            assert!(parents[0] < s.tag, "parent precedes child");
+        }
+        // Fine levels run longer than coarse under the scale knob.
+        let coarse = plain[0].duration;
+        let finest = gated
+            .iter()
+            .find(|(s, _)| s.user == 2)
+            .map(|(s, _)| s.duration)
+            .unwrap();
+        assert!(finest > coarse, "runtime scales with level");
+    }
+
+    #[test]
+    fn mlda_never_finishes_with_budget_or_flight_pending() {
+        let levels = vec![
+            MldaLevel { count: 6, runtime_scale: 1.0 },
+            MldaLevel { count: 6, runtime_scale: 2.0 },
+        ];
+        let mut m = Mlda::new(App::Gp, levels, 3)
+            .with_promote(0.5)
+            .with_refine_z(0.0)
+            .with_occupancy(2, 1, 8);
+        let mut sink = Sink::new();
+        m.start(&mut sink);
+        assert!(!m.finished(0), "open chains pending");
+        let mut pending: Vec<Submission> = Vec::new();
+        let mut done = 0u64;
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            assert!(guard < 1000, "mlda did not drain");
+            let (plain, gated) = drain(&mut sink);
+            pending.extend(plain);
+            pending.extend(gated.into_iter().map(|(s, _)| s));
+            let Some(s) = pending.pop() else { break };
+            done += 1;
+            m.completed(done * SEC, &rec(s.tag, s.duration), &mut sink);
+            if m.finished(done) {
+                break;
+            }
+        }
+        assert!(m.finished(done));
+        // All six level-0 roots were spent.
+        assert_eq!(m.remaining[0], 0);
+    }
+
+    #[test]
+    fn mlda_occupancy_adapts_upward_when_backlog_dry() {
+        let levels = vec![
+            MldaLevel { count: 64, runtime_scale: 1.0 },
+            MldaLevel { count: 4, runtime_scale: 2.0 },
+        ];
+        let mut m = Mlda::new(App::Gp, levels, 5)
+            .with_promote(0.0) // no chains: gated backlog stays dry
+            .with_refine_z(0.0)
+            .with_occupancy(2, 1, 16);
+        let mut sink = Sink::new();
+        m.start(&mut sink);
+        let (plain, _) = drain(&mut sink);
+        for s in &plain {
+            m.completed(SEC, &rec(s.tag, s.duration), &mut sink);
+        }
+        assert!(
+            m.occ0 > 2,
+            "dry gated backlog must raise the occupancy target"
+        );
+        assert!(!m.occupancy_trace().is_empty());
+    }
+
+    #[test]
+    fn stageio_round_shape_and_fanin() {
+        let mut s = StageInOut::new(App::Gp, 3, 4, 2, 9);
+        assert_eq!(s.total_tasks(), 18);
+        let mut sink = Sink::new();
+        s.start(&mut sink);
+        let (plain, gated) = drain(&mut sink);
+        // Two rounds in flight: 2 transfers, 2x(4 computes + 1 reduce).
+        assert_eq!(plain.len(), 2);
+        assert_eq!(gated.len(), 10);
+        let reduces: Vec<&(Submission, Vec<u64>)> =
+            gated.iter().filter(|(s, _)| s.user == 2).collect();
+        assert_eq!(reduces.len(), 2);
+        for (_, parents) in &reduces {
+            assert_eq!(parents.len(), 4, "reduce fans in over every compute");
+        }
+        for (c, parents) in gated.iter().filter(|(s, _)| s.user == 1) {
+            assert_eq!(parents.len(), 1, "compute gates on its transfer");
+            assert!(plain.iter().any(|t| t.tag == parents[0]));
+            assert!(c.duration > 0);
+        }
+        // Completing a compute launches nothing; the reduce launches
+        // round 3.
+        let compute_tag = gated.iter().find(|(s, _)| s.user == 1).unwrap().0.tag;
+        s.completed(SEC, &rec(compute_tag, SEC), &mut sink);
+        assert!(sink.is_empty());
+        let reduce_tag = reduces[0].0.tag;
+        s.completed(2 * SEC, &rec(reduce_tag, SEC), &mut sink);
+        let (plain, gated) = drain(&mut sink);
+        assert_eq!(plain.len(), 1);
+        assert_eq!(gated.len(), 5);
+        assert!(!s.finished(0));
+        // Remaining reduces retire the campaign.
+        let second_reduce = reduces[1].0.tag;
+        s.completed(3 * SEC, &rec(second_reduce, SEC), &mut sink);
+        let (_, g3) = drain(&mut sink);
+        let third_reduce =
+            g3.iter().find(|(x, _)| x.user == 2).unwrap().0.tag;
+        s.completed(4 * SEC, &rec(third_reduce, SEC), &mut sink);
+        assert!(s.finished(0));
+    }
+
+    #[test]
+    fn parse_levels_accepts_the_cli_shape() {
+        let ls = parse_levels("32:0.5,16:1,8:2").unwrap();
+        assert_eq!(ls.len(), 3);
+        assert_eq!(ls[0].count, 32);
+        assert!((ls[2].runtime_scale - 2.0).abs() < 1e-12);
+        assert!(parse_levels("0:1").is_err());
+        assert!(parse_levels("bad").is_err());
+        assert!(parse_levels("4:-1").is_err());
+    }
+}

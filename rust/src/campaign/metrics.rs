@@ -90,6 +90,10 @@ struct UserAcc {
     sum_makespan: f64,
     sum_overhead: f64,
     sum_slr: f64,
+    /// Record end times, submission order (sorted on demand) — feeds the
+    /// per-user/per-level time-to-Nth-result milestones the MLDA
+    /// campaigns report (each MLDA level is a campaign user).
+    ends: Vec<Micros>,
 }
 
 /// Aggregated per-user service statistics.
@@ -119,6 +123,7 @@ impl UserTrack {
         a.sum_makespan += rec.makespan() as f64 / SEC as f64;
         a.sum_overhead += rec.overhead() as f64 / SEC as f64;
         a.sum_slr += rec.slr();
+        a.ends.push(rec.end);
     }
 
     /// Per-user means, sorted by user id.
@@ -135,6 +140,35 @@ impl UserTrack {
             })
             .collect();
         out.sort_by_key(|s| s.user);
+        out
+    }
+
+    /// Per-user time-to-Nth-result milestones (same 1 / 10..100 %
+    /// schedule as the campaign-level curve), sorted by user id.  For
+    /// DAG campaigns where users encode levels (MLDA) this is the
+    /// per-level completion curve.
+    pub fn time_to(&self) -> Vec<(u32, Vec<(u64, Micros)>)> {
+        let mut out: Vec<(u32, Vec<(u64, Micros)>)> = self
+            .accs
+            .iter()
+            .map(|(&user, a)| {
+                let mut ends = a.ends.clone();
+                ends.sort_unstable();
+                let n = ends.len() as u64;
+                let mut ns: Vec<u64> = vec![1];
+                for pct in [10u64, 25, 50, 75, 90, 100] {
+                    ns.push(((n * pct) / 100).max(1));
+                }
+                ns.sort_unstable();
+                ns.dedup();
+                let ms = ns
+                    .iter()
+                    .map(|&k| (k, ends[(k - 1) as usize]))
+                    .collect();
+                (user, ms)
+            })
+            .collect();
+        out.sort_by_key(|&(user, _)| user);
         out
     }
 }
@@ -173,6 +207,10 @@ pub struct CampaignMetrics {
     pub depth_trajectory: Vec<(Micros, u32)>,
     pub peak_in_flight: u32,
     pub per_user: Vec<UserStats>,
+    /// Per-user time-to-Nth-result milestones `(user, [(n, t)])` — the
+    /// per-level completion curves for MLDA-style campaigns (level =
+    /// campaign user).
+    pub per_user_time_to: Vec<(u32, Vec<(u64, Micros)>)>,
     /// Jain index over per-user mean SLRs (1.0 when <= 1 user).
     pub fairness_jain: f64,
     /// DES events the run processed (cost proxy for the sim plane).
@@ -184,6 +222,20 @@ pub struct CampaignMetrics {
     pub quarantined: u64,
     /// Workers the fault plane crashed mid-campaign.
     pub worker_crashes: u64,
+    /// Decimated Blocked-state trajectory `(t, blocked count)` — tasks
+    /// submitted with unresolved dependency edges, not yet released or
+    /// skipped.  Empty for edge-free campaigns.
+    pub blocked_trajectory: Vec<(Micros, u32)>,
+    /// Peak of the Blocked-state trajectory.
+    pub peak_blocked: u32,
+    /// Tasks that left Blocked into Ready (all parents finished ok).
+    pub released: u64,
+    /// Tasks skipped because an ancestor failed/was quarantined; their
+    /// truncated zero-CPU records stay in the experiment, so "records
+    /// emitted == tasks submitted" holds even under `--faults`.
+    pub skipped: u64,
+    /// Dependency edges the campaign registered.
+    pub dep_edges: u64,
 }
 
 impl CampaignMetrics {
@@ -265,11 +317,61 @@ impl CampaignMetrics {
                         .collect(),
                 ),
             ),
+            (
+                "per_user_time_to",
+                Value::arr(
+                    self.per_user_time_to
+                        .iter()
+                        .map(|(user, ms)| {
+                            Value::obj(vec![
+                                ("user", Value::num(*user as f64)),
+                                (
+                                    "time_to",
+                                    Value::arr(
+                                        ms.iter()
+                                            .map(|&(n, t)| {
+                                                Value::obj(vec![
+                                                    ("n", Value::num(n as f64)),
+                                                    (
+                                                        "t_s",
+                                                        Value::num(
+                                                            t as f64
+                                                                / SEC as f64,
+                                                        ),
+                                                    ),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("fairness_jain", Value::num(self.fairness_jain)),
             ("des_events", Value::num(self.des_events as f64)),
             ("retries", Value::num(self.retries as f64)),
             ("quarantined", Value::num(self.quarantined as f64)),
             ("worker_crashes", Value::num(self.worker_crashes as f64)),
+            (
+                "blocked_trajectory",
+                Value::arr(
+                    self.blocked_trajectory
+                        .iter()
+                        .map(|&(t, d)| {
+                            Value::arr(vec![
+                                Value::num(t as f64 / SEC as f64),
+                                Value::num(d as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("peak_blocked", Value::num(self.peak_blocked as f64)),
+            ("released", Value::num(self.released as f64)),
+            ("skipped", Value::num(self.skipped as f64)),
+            ("dep_edges", Value::num(self.dep_edges as f64)),
         ])
     }
 }

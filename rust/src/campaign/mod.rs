@@ -14,6 +14,13 @@
 //!   (runtime-heteroskedastic task families), and [`AdaptiveBayes`]
 //!   (Bayesian-inversion-style feedback batches whose size depends on
 //!   completed results).
+//! * DAG policies in [`dag`]: [`Mlda`] (multilevel delayed-acceptance
+//!   chains — coarse gates fine via [`Sink::submit_after`], with
+//!   result-dependent refinement and online level-occupancy
+//!   adaptation) and [`StageInOut`] (transfer → N computes → reduce
+//!   rounds).  Their edges ride the kernel's
+//!   [`DepTracker`](crate::sched::DepTracker) layer: no scheduler core
+//!   knows dependencies exist.
 //! * [`run_slurm`] / [`run_hq`] / [`run_worksteal`] / [`run_edf`] /
 //!   [`run_gang`] — thin config adapters selecting a
 //!   [`SchedulerCore`](crate::sched::SchedulerCore) implementation
@@ -42,10 +49,12 @@
 //! for per-event complexity; `benches/scale.rs` runs bursty and adaptive
 //! campaigns at 100k+ tasks.
 
+pub mod dag;
 pub mod driver;
 pub mod metrics;
 pub mod submitter;
 
+pub use dag::{parse_levels, Mlda, MldaLevel, StageInOut};
 pub use driver::{run_edf, run_gang, run_hq, run_slurm, run_worksteal,
                  CampaignConfig, CampaignResult, SlurmMode};
 pub use metrics::{jain_fairness, CampaignMetrics, UserStats};

@@ -46,6 +46,11 @@ pub struct Submission {
 pub struct Sink {
     pub(crate) submissions: Vec<Submission>,
     pub(crate) wakes: Vec<(Micros, u64)>,
+    /// Dependency-carrying submissions `(task, parent tags)`: the kernel
+    /// routes these through its [`DepTracker`](crate::sched::DepTracker)
+    /// layer — the scheduler core sees a plain submit only once every
+    /// parent reached a terminal record.
+    pub(crate) gated: Vec<(Submission, Vec<u64>)>,
 }
 
 impl Sink {
@@ -58,14 +63,37 @@ impl Sink {
         self.submissions.push(s);
     }
 
+    /// Submit an evaluation gated on `parents` (tags of previously
+    /// submitted evaluations): it enters the scheduler only once every
+    /// parent is terminal.  A failed/quarantined parent propagates a
+    /// truncated `Skipped` record instead — the submitter still sees a
+    /// `completed` callback for every gated task, so closed loops never
+    /// deadlock.  `parents = &[]` is byte-identical to [`Sink::submit`].
+    pub fn submit_after(&mut self, s: Submission, parents: &[u64]) {
+        self.gated.push((s, parents.to_vec()));
+    }
+
     /// Request a [`Submitter::wake`] callback at absolute time `t` with an
     /// opaque `token` (policies use it to route the wake internally).
     pub fn wake_at(&mut self, t: Micros, token: u64) {
         self.wakes.push((t, token));
     }
 
+    /// Re-route every pending plain submission through the zero-edge
+    /// dependency path (`submit_after(s, &[])`).  Test hook:
+    /// `tests/campaign_equiv.rs` wraps existing policies with it to pin
+    /// the zero-edge DAG path record-for-record against today's kernel.
+    pub fn gate_pending(&mut self) {
+        let subs: Vec<Submission> = self.submissions.drain(..).collect();
+        for s in subs {
+            self.gated.push((s, Vec::new()));
+        }
+    }
+
     pub fn is_empty(&self) -> bool {
-        self.submissions.is_empty() && self.wakes.is_empty()
+        self.submissions.is_empty()
+            && self.wakes.is_empty()
+            && self.gated.is_empty()
     }
 }
 

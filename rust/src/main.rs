@@ -18,8 +18,9 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use uqsched::campaign::{
-    self, AdaptiveBayes, CampaignConfig, Family, FixedDepth, HeteroFamilies,
-    PoissonBurst, SlurmMode, Submitter, UserMix, UserStream,
+    self, parse_levels, AdaptiveBayes, CampaignConfig, Family, FixedDepth,
+    HeteroFamilies, Mlda, PoissonBurst, SlurmMode, StageInOut, Submitter,
+    UserMix, UserStream,
 };
 use uqsched::cli::Args;
 use uqsched::clock::{MS, SEC};
@@ -61,11 +62,15 @@ fn main() -> Result<()> {
                  experiment --app gs2|GP|eigen-100|eigen-5000 [--queue 2]\n\
                             [--evals 100] [--seed 1]\n\
                  campaign   --policy fixed|bursty|mix|hetero|adaptive\n\
+                            |mlda|stageio  (--campaign is an alias)\n\
                             --scheduler slurm|umbridge-slurm|hq|worksteal|edf|gang\n\
                             [--app gs2] [--tasks 100] [--depth 2] [--seed 1]\n\
                             [--interarrival 2s] [--burst-min 1] [--burst-max 8]\n\
                             [--users gp:50:2,eigen-100:50:2] [--sigmas 0,0.8]\n\
                             [--tol 0.02] [--workers N] [--out FILE.json]\n\
+                            mlda: [--levels 32:0.5,16:1,8:2] [--promote 0.7]\n\
+                                  [--refine 1.5] [--occ 8]\n\
+                            stageio: [--rounds 16] [--fanout 8] [--inflight 2]\n\
                             [--faults crash=300s,fail=0.02,attempts=3,\n\
                              backoff=1s:60s,slow=0.05x8,seed=1]"
             );
@@ -274,7 +279,12 @@ fn box_json(vals: &[f64]) -> Value {
 fn campaign_cmd(args: &Args) -> Result<()> {
     let app = App::parse(&args.str_or("app", "gs2"))
         .ok_or_else(|| anyhow!("unknown --app"))?;
-    let policy = args.str_or("policy", "fixed");
+    // `--campaign` is an alias for `--policy` (reads naturally for the
+    // DAG campaigns: `uqsched campaign --campaign mlda`).
+    let policy = args
+        .opt("campaign")
+        .map(str::to_string)
+        .unwrap_or_else(|| args.str_or("policy", "fixed"));
     // `--scheduler` is the canonical spelling; `--sched` stays accepted.
     let sched = args
         .opt("scheduler")
@@ -343,6 +353,25 @@ fn campaign_cmd(args: &Args) -> Result<()> {
             let tol = args.f64_or("tol", 0.02)?;
             Box::new(AdaptiveBayes::new(app, tasks, seed).with_tol(tol))
         }
+        "mlda" => {
+            let levels = parse_levels(&args.str_or("levels", "32:0.5,16:1,8:2"))
+                .map_err(|e| anyhow!("--levels: {e}"))?;
+            let promote = args.f64_or("promote", 0.7)?;
+            let refine = args.f64_or("refine", 1.5)?;
+            let occ = args.u64_or("occ", 8)?.max(1);
+            Box::new(
+                Mlda::new(app, levels, seed)
+                    .with_promote(promote)
+                    .with_refine_z(refine)
+                    .with_occupancy(occ, 1, (occ * 8).max(occ)),
+            )
+        }
+        "stageio" => {
+            let rounds = args.u64_or("rounds", 16)?.max(1);
+            let fanout = args.u64_or("fanout", 8)?.max(1);
+            let inflight = args.u64_or("inflight", 2)?.max(1);
+            Box::new(StageInOut::new(app, rounds, fanout, inflight, seed))
+        }
         other => bail!("unknown policy '{other}'"),
     };
 
@@ -376,8 +405,24 @@ fn campaign_cmd(args: &Args) -> Result<()> {
             m.retries, m.quarantined, m.worker_crashes
         );
     }
+    if m.dep_edges > 0 {
+        println!(
+            "  dag: {} edges | {} released | {} skipped | peak blocked {}",
+            m.dep_edges, m.released, m.skipped, m.peak_blocked
+        );
+    }
     for (n, t) in &m.time_to {
         println!("  time to {n:>7} results: {:>12.1} s", *t as f64 / SEC as f64);
+    }
+    if m.dep_edges > 0 {
+        for (user, milestones) in &m.per_user_time_to {
+            if let Some((n, t)) = milestones.last() {
+                println!(
+                    "  level {user}: {n} results by {:.1} s",
+                    *t as f64 / SEC as f64
+                );
+            }
+        }
     }
     for u in &m.per_user {
         println!(

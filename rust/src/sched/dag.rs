@@ -1,0 +1,291 @@
+//! The dependency layer: task→parents edges, the `Blocked` state, and
+//! release-on-terminal bookkeeping — entirely **above** the
+//! [`SchedulerCore`](super::SchedulerCore) seam.
+//!
+//! UQ campaigns are increasingly chained: MLDA/MLMC chains gate a fine
+//! model evaluation on a coarse or surrogate one, and facility
+//! workflows (Balsam) gate compute on stage-in transfers and reductions
+//! on their fan-in.  [`DepTracker`] gives every scheduler core that DAG
+//! vocabulary for free: the kernel consults it on each
+//! `Ev::SubmitBlocked { parents }` event and on each terminal record,
+//! and the core itself keeps seeing plain submissions — at *release*
+//! time, once every parent is terminal.  No per-core code changes; all
+//! five of slurm / hq / worksteal / edf / gang run DAG campaigns
+//! unmodified.
+//!
+//! # State machine
+//!
+//! ```text
+//!   submit_after(s, parents)
+//!        │
+//!        ▼            every parent terminal-ok
+//!   ┌─────────┐   ┌──────────────────────────────► Ready ──► core.submit
+//!   │ Blocked │───┤
+//!   └─────────┘   └──────────────────────────────► Skipped ──► truncated
+//!        ▲            any parent failed/quarantined           record
+//!        │            (all parents terminal)
+//!   parents pending
+//! ```
+//!
+//! * A task with zero pending parents is admitted immediately
+//!   ([`Admit::Ready`]), or skipped immediately when a parent already
+//!   finished poisoned ([`Admit::Skip`]) — the late-edge path.
+//! * A blocked task waits until **all** parents are terminal, then
+//!   releases (every parent ok) or skips (any parent failed).  Skips
+//!   cascade transitively through the kernel — a quarantined ancestor
+//!   truncates its whole subtree, so no campaign ever deadlocks and
+//!   "records emitted == tasks submitted" holds even under `--faults`.
+//! * A parent is *failed* for dependency purposes iff its record is
+//!   truncated (fault-plane quarantine or a kill-limit truncation) —
+//!   the child was promised a result that never materialised.
+//!
+//! # Cost
+//!
+//! O(1) amortised per edge: `submit` does one hash probe per parent and
+//! `on_terminal` pays one probe per waiting child of the finished task.
+//! The terminal set grows O(completed tasks) — same order as the record
+//! vector the kernel already keeps.  Unknown parent tags (never
+//! submitted) stay pending forever by design; submitters own tag
+//! hygiene, and the differential fuzz harness (`tests/core_fuzz.rs`,
+//! DAG scripts) checks every generated script drains on every core.
+
+use std::collections::HashMap;
+
+use crate::campaign::submitter::Submission;
+
+/// Immediate verdict for a dependency-carrying submission.
+#[derive(Debug)]
+pub enum Admit {
+    /// Every parent already terminal and ok: submit to the core now.
+    Ready(Submission),
+    /// At least one parent pending: parked; the tracker will hand the
+    /// submission back from [`DepTracker::on_terminal`].
+    Blocked,
+    /// A parent already finished poisoned: emit a truncated record now
+    /// (the task never reaches the core).
+    Skip(Submission),
+}
+
+/// A parked submission waiting on its remaining parents.
+#[derive(Debug)]
+struct Parked {
+    sub: Submission,
+    /// Parents not yet terminal.
+    pending: u32,
+    /// A terminal parent failed: when the last parent lands this task
+    /// skips instead of releasing.
+    doomed: bool,
+}
+
+/// Owns the task→parents edges and the Blocked→Ready/Skipped
+/// bookkeeping for one campaign run.  Tags live in the campaign's tag
+/// space (`Submission::tag` / `JobRecord::tag`).
+#[derive(Debug, Default)]
+pub struct DepTracker {
+    /// tag -> finished ok (false = truncated/quarantined/skipped).
+    terminal: HashMap<u64, bool>,
+    /// parent tag -> tags of parked children waiting on it.
+    waiting: HashMap<u64, Vec<u64>>,
+    /// child tag -> parked state.
+    parked: HashMap<u64, Parked>,
+    /// Tasks currently parked (the blocked depth).
+    blocked_now: u32,
+    /// Cumulative releases (tasks that left Blocked into Ready).
+    released: u64,
+    /// Total edges registered (complexity accounting).
+    edges: u64,
+}
+
+impl DepTracker {
+    pub fn new() -> DepTracker {
+        DepTracker::default()
+    }
+
+    /// Admit a submission with dependency edges.  `parents` may be
+    /// empty (the zero-edge path — always [`Admit::Ready`], pinned
+    /// byte-identical to a plain submit by `tests/campaign_equiv.rs`).
+    pub fn submit(&mut self, sub: Submission, parents: &[u64]) -> Admit {
+        self.edges += parents.len() as u64;
+        let mut pending = 0u32;
+        let mut doomed = false;
+        for &p in parents {
+            match self.terminal.get(&p) {
+                Some(&ok) => doomed |= !ok,
+                None => {
+                    pending += 1;
+                    self.waiting.entry(p).or_default().push(sub.tag);
+                }
+            }
+        }
+        if pending == 0 {
+            return if doomed { Admit::Skip(sub) } else { Admit::Ready(sub) };
+        }
+        self.blocked_now += 1;
+        self.parked.insert(sub.tag, Parked { sub, pending, doomed });
+        Admit::Blocked
+    }
+
+    /// A task reached a terminal record (`ok = !record.truncated`).
+    /// Returns the *directly* waiting children that just became
+    /// unblocked, partitioned into releases and skips.  Skip cascades
+    /// are the caller's business: each skip is itself terminal
+    /// (`ok = false`) and must be fed back through `on_terminal` — the
+    /// kernel does so from its `Skipped` event so cascades stay in
+    /// virtual-time order.
+    pub fn on_terminal(
+        &mut self,
+        tag: u64,
+        ok: bool,
+    ) -> (Vec<Submission>, Vec<Submission>) {
+        self.terminal.insert(tag, ok);
+        let mut releases = Vec::new();
+        let mut skips = Vec::new();
+        if let Some(children) = self.waiting.remove(&tag) {
+            for c in children {
+                let done = {
+                    let p = self
+                        .parked
+                        .get_mut(&c)
+                        .expect("waiting child without parked state");
+                    p.pending -= 1;
+                    p.doomed |= !ok;
+                    p.pending == 0
+                };
+                if done {
+                    let p = self.parked.remove(&c).unwrap();
+                    self.blocked_now -= 1;
+                    if p.doomed {
+                        skips.push(p.sub);
+                    } else {
+                        self.released += 1;
+                        releases.push(p.sub);
+                    }
+                }
+            }
+        }
+        (releases, skips)
+    }
+
+    /// Tasks currently in the Blocked state.
+    pub fn blocked_now(&self) -> u32 {
+        self.blocked_now
+    }
+
+    /// Tasks that left Blocked into Ready so far.
+    pub fn released(&self) -> u64 {
+        self.released
+    }
+
+    /// Dependency edges registered so far.
+    pub fn edges(&self) -> u64 {
+        self.edges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::App;
+
+    fn sub(tag: u64) -> Submission {
+        Submission { tag, user: 0, app: App::Gp, duration: 1 }
+    }
+
+    #[test]
+    fn zero_edge_is_ready_immediately() {
+        let mut d = DepTracker::new();
+        assert!(matches!(d.submit(sub(1), &[]), Admit::Ready(s) if s.tag == 1));
+        assert_eq!(d.blocked_now(), 0);
+        assert_eq!(d.edges(), 0);
+    }
+
+    #[test]
+    fn releases_on_last_parent_only() {
+        let mut d = DepTracker::new();
+        assert!(matches!(d.submit(sub(10), &[1, 2]), Admit::Blocked));
+        assert_eq!(d.blocked_now(), 1);
+        let (r, s) = d.on_terminal(1, true);
+        assert!(r.is_empty() && s.is_empty(), "one parent still pending");
+        let (r, s) = d.on_terminal(2, true);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].tag, 10);
+        assert!(s.is_empty());
+        assert_eq!(d.blocked_now(), 0);
+        assert_eq!(d.released(), 1);
+        assert_eq!(d.edges(), 2);
+    }
+
+    #[test]
+    fn diamond_releases_join_after_both_arms() {
+        // 1 -> {2, 3} -> 4 (both arms gate the join).
+        let mut d = DepTracker::new();
+        assert!(matches!(d.submit(sub(2), &[1]), Admit::Blocked));
+        assert!(matches!(d.submit(sub(3), &[1]), Admit::Blocked));
+        assert!(matches!(d.submit(sub(4), &[2, 3]), Admit::Blocked));
+        let (r, _) = d.on_terminal(1, true);
+        assert_eq!(r.len(), 2, "both arms release together");
+        let (r, _) = d.on_terminal(2, true);
+        assert!(r.is_empty());
+        let (r, _) = d.on_terminal(3, true);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].tag, 4);
+    }
+
+    #[test]
+    fn failed_parent_skips_descendants() {
+        let mut d = DepTracker::new();
+        assert!(matches!(d.submit(sub(5), &[1]), Admit::Blocked));
+        assert!(matches!(d.submit(sub(6), &[5]), Admit::Blocked));
+        let (r, s) = d.on_terminal(1, false);
+        assert!(r.is_empty());
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].tag, 5);
+        // The cascade: the caller reports the skip as terminal-failed.
+        let (r, s) = d.on_terminal(5, false);
+        assert!(r.is_empty());
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].tag, 6);
+        assert_eq!(d.blocked_now(), 0);
+        assert_eq!(d.released(), 0);
+    }
+
+    #[test]
+    fn mixed_parents_one_failure_dooms_the_join() {
+        let mut d = DepTracker::new();
+        assert!(matches!(d.submit(sub(9), &[1, 2]), Admit::Blocked));
+        d.on_terminal(1, true);
+        let (r, s) = d.on_terminal(2, false);
+        assert!(r.is_empty());
+        assert_eq!(s.len(), 1, "any failed parent dooms the child");
+    }
+
+    #[test]
+    fn late_edges_resolve_against_the_terminal_set() {
+        let mut d = DepTracker::new();
+        d.on_terminal(1, true);
+        d.on_terminal(2, false);
+        assert!(matches!(d.submit(sub(7), &[1]), Admit::Ready(_)));
+        assert!(matches!(d.submit(sub(8), &[2]), Admit::Skip(_)));
+        assert!(matches!(d.submit(sub(9), &[1, 2]), Admit::Skip(_)));
+        assert_eq!(d.blocked_now(), 0);
+    }
+
+    #[test]
+    fn deep_chain_releases_in_order() {
+        let mut d = DepTracker::new();
+        for i in 1..100u64 {
+            assert!(matches!(d.submit(sub(i + 1), &[i]), Admit::Blocked));
+        }
+        assert_eq!(d.blocked_now(), 99);
+        let mut tag = 1;
+        for _ in 0..99 {
+            let (r, s) = d.on_terminal(tag, true);
+            assert!(s.is_empty());
+            assert_eq!(r.len(), 1);
+            assert_eq!(r[0].tag, tag + 1);
+            tag = r[0].tag;
+        }
+        assert_eq!(d.blocked_now(), 0);
+        assert_eq!(d.released(), 99);
+    }
+}

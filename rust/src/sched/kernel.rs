@@ -66,8 +66,9 @@ use crate::campaign::metrics::{jain_fairness, CampaignMetrics, DepthTrack,
                                UserTrack};
 use crate::campaign::submitter::{Sink, Submission, Submitter};
 use crate::clock::{Des, Micros};
-use crate::metrics::Experiment;
+use crate::metrics::{Experiment, JobRecord};
 
+use super::dag::{Admit, DepTracker};
 use super::faults::FaultPlan;
 use super::{CapacityChange, Completion, Effect, SchedulerCore};
 
@@ -81,6 +82,17 @@ enum Ev<I, T> {
     Wake(u64),
     /// A deferred submission (emitted from a completion callback).
     Submit(Submission),
+    /// A dependency-carrying submission (`Sink::submit_after`): consult
+    /// the [`DepTracker`] — submit now, park as Blocked, or skip.
+    SubmitBlocked(Submission, Vec<u64>),
+    /// A parked task whose parents all finished ok: leaves Blocked into
+    /// Ready — the kernel emits [`Effect::Released`] and submits it to
+    /// the core at this instant.
+    Release(Submission),
+    /// A task whose ancestry failed (quarantine / truncation): emit a
+    /// truncated zero-CPU record at this instant, never touching the
+    /// core, and cascade to its own waiting descendants.
+    Skipped(Submission),
     /// The sampled workload duration of `id` elapsed (clean plane).
     WorkDone(I),
     /// Epoch-tagged completion (fault plane): delivered only if the
@@ -97,6 +109,9 @@ enum Ev<I, T> {
 fn drain_sink<I, T>(sink: &mut Sink, des: &mut Des<Ev<I, T>>, t: Micros) {
     for s in sink.submissions.drain(..) {
         des.schedule(t, Ev::Submit(s));
+    }
+    for (s, parents) in sink.gated.drain(..) {
+        des.schedule(t, Ev::SubmitBlocked(s, parents));
     }
     for (tw, tok) in sink.wakes.drain(..) {
         des.schedule(tw, Ev::Wake(tok));
@@ -175,6 +190,14 @@ pub fn run_with_faults<S: SchedulerCore>(
     let mut submitted: u64 = 0;
     let mut completed: u64 = 0;
 
+    // Dependency layer: task→parents edges, Blocked state, release on
+    // terminal (see `dag.rs`).  Sits above the core — with no
+    // `submit_after` calls the only cost is one terminal-set insert per
+    // completion, and the event schedule is unchanged.
+    let mut dep = DepTracker::new();
+    let mut blocked = DepthTrack::new();
+    let mut skipped: u64 = 0;
+
     // Fault-plane state (unused allocations when plan is None).
     let mut book: FaultBook<S::Id> = FaultBook::default();
     let mut retries: u64 = 0;
@@ -227,6 +250,9 @@ pub fn run_with_faults<S: SchedulerCore>(
                     depth.submit(t);
                     submitted += 1;
                 }
+                for (s, parents) in sink.gated.drain(..) {
+                    des.schedule(t, Ev::SubmitBlocked(s, parents));
+                }
                 for (tw, tok) in sink.wakes.drain(..) {
                     des.schedule(tw, Ev::Wake(tok));
                 }
@@ -240,6 +266,67 @@ pub fn run_with_faults<S: SchedulerCore>(
                 }
                 depth.submit(t);
                 submitted += 1;
+            }
+            Ev::SubmitBlocked(s, parents) => {
+                // Counted as submitted the moment the campaign hands it
+                // over, whatever the dependency layer decides — the
+                // "records emitted == tasks submitted" invariant is over
+                // this counter.
+                submitted += 1;
+                match dep.submit(s, &parents) {
+                    Admit::Ready(s) => {
+                        let (id, dur) = core.submit_into(t, &s, &mut effects);
+                        durations.insert(id, dur);
+                        users.insert(id, s.user);
+                        if plan.is_some() {
+                            book.track(id, s.tag);
+                        }
+                        depth.submit(t);
+                    }
+                    Admit::Blocked => blocked.submit(t),
+                    Admit::Skip(s) => des.schedule(t, Ev::Skipped(s)),
+                }
+            }
+            Ev::Release(s) => {
+                // The Released effect rides the same buffer as the
+                // core's own effects for this submission, so the release
+                // is visible on the seam's effect stream.
+                effects.push(Effect::Released { tag: s.tag });
+                let (id, dur) = core.submit_into(t, &s, &mut effects);
+                durations.insert(id, dur);
+                users.insert(id, s.user);
+                if plan.is_some() {
+                    book.track(id, s.tag);
+                }
+                depth.submit(t);
+            }
+            Ev::Skipped(s) => {
+                skipped += 1;
+                completed += 1;
+                let rec = JobRecord {
+                    tag: s.tag,
+                    submit: t,
+                    start: t,
+                    end: t,
+                    cpu: 0,
+                    truncated: true,
+                }
+                .quantised(grain);
+                per_user.complete(s.user, &rec);
+                exp.records.push(rec.clone());
+                // A skip is terminal-failed: cascade to descendants in
+                // virtual-time order.
+                let (rel, skp) = dep.on_terminal(s.tag, false);
+                for c in rel {
+                    blocked.complete(t);
+                    des.schedule(t, Ev::Release(c));
+                }
+                for c in skp {
+                    blocked.complete(t);
+                    des.schedule(t, Ev::Skipped(c));
+                }
+                sub.completed(t, &rec, &mut sink);
+                drain_sink(&mut sink, &mut des, t);
             }
             Ev::WorkDone(id) => core.on_work_done_into(t, id, &mut effects),
             Ev::WorkDoneAt(id, ep) => {
@@ -361,6 +448,11 @@ pub fn run_with_faults<S: SchedulerCore>(
                     }
                 }
                 Effect::Queued => depth.submit(t),
+                // Emitted by this kernel itself at Release time (just
+                // before the core's submit effects); informational on
+                // the interpretation side — `dep` already did the
+                // bookkeeping.
+                Effect::Released { .. } => {}
                 Effect::Retire { .. } => {}
                 Effect::Requeued { id } => {
                     // The task left its worker without finishing; any
@@ -387,6 +479,20 @@ pub fn run_with_faults<S: SchedulerCore>(
                             per_user.complete(user, &rec);
                             depth.complete(t);
                             exp.records.push(rec.clone());
+                            // Dependency layer: this tag is terminal.  A
+                            // truncated record (kill limit or fault-plane
+                            // quarantine) poisons its descendants —
+                            // they skip instead of running.
+                            let ok = !rec.truncated;
+                            let (rel, skp) = dep.on_terminal(rec.tag, ok);
+                            for c in rel {
+                                blocked.complete(t);
+                                des.schedule(t, Ev::Release(c));
+                            }
+                            for c in skp {
+                                blocked.complete(t);
+                                des.schedule(t, Ev::Skipped(c));
+                            }
                             sub.completed(t, &rec, &mut sink);
                             drain_sink(&mut sink, &mut des, t);
                         }
@@ -401,8 +507,10 @@ pub fn run_with_faults<S: SchedulerCore>(
     exp.records.sort_by_key(|r| r.tag);
 
     let per_user_stats = per_user.stats();
+    let per_user_time_to = per_user.time_to();
     let fairness = jain_fairness(&per_user_stats);
     let peak = depth.peak();
+    let peak_blocked = blocked.peak();
     let metrics = CampaignMetrics {
         policy: sub.label(),
         scheduler: core.label().to_string(),
@@ -413,11 +521,17 @@ pub fn run_with_faults<S: SchedulerCore>(
         depth_trajectory: depth.into_samples(),
         peak_in_flight: peak,
         per_user: per_user_stats,
+        per_user_time_to,
         fairness_jain: fairness,
         des_events: des.processed(),
         retries,
         quarantined,
         worker_crashes,
+        blocked_trajectory: blocked.into_samples(),
+        peak_blocked,
+        released: dep.released(),
+        skipped,
+        dep_edges: dep.edges(),
     };
     CampaignResult { experiment: exp, metrics }
 }

@@ -54,6 +54,7 @@
 //! record-for-record to the hand-written PR 1 loops preserved in
 //! `experiments::reference`, for every app and both paper schedulers.
 
+pub mod dag;
 pub mod edf;
 pub mod faults;
 pub mod gang;
@@ -71,6 +72,7 @@ use crate::campaign::submitter::Submission;
 use crate::clock::Micros;
 use crate::metrics::JobRecord;
 
+pub use dag::{Admit, DepTracker};
 pub use edf::EdfCore;
 pub use faults::{FaultPlan, FaultSpec};
 pub use gang::GangCore;
@@ -173,6 +175,13 @@ pub enum Effect<I, T> {
     /// Internal (core-originated) work entered the stream — depth
     /// tracking only.  Used by the HQ stack's registration pre-jobs.
     Queued,
+    /// A dependency-blocked task left the Blocked state into Ready: its
+    /// parents all reached terminal records and the kernel is submitting
+    /// it to the core *now* (the core's own effects for that submission
+    /// follow in the same buffer).  Emitted by the kernel's dependency
+    /// layer ([`dag::DepTracker`]), never by a core; drivers without a
+    /// dependency plane (the real-time balancer) ignore it.
+    Released { tag: u64 },
 }
 
 /// How the kernel should account a [`Effect::Finish`] record.

@@ -540,7 +540,11 @@ impl RtDriver {
                     // stale — the core re-dispatches it itself.
                     self.ready.retain(|&(r, _)| r != id);
                 }
-                Effect::Retire { .. } | Effect::Queued => {}
+                // No dependency plane on the live path: Released is a
+                // campaign-kernel notification and cannot occur here.
+                Effect::Retire { .. }
+                | Effect::Queued
+                | Effect::Released { .. } => {}
             }
         }
     }

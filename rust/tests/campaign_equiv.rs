@@ -14,10 +14,11 @@
 //!    under seed, distinct streams under distinct seeds.
 
 use uqsched::campaign::{
-    self, AdaptiveBayes, CampaignConfig, FixedDepth, PoissonBurst, SlurmMode,
-    UserMix, UserStream,
+    self, AdaptiveBayes, CampaignConfig, FixedDepth, Mlda, MldaLevel,
+    PoissonBurst, Sink, SlurmMode, StageInOut, Submitter, UserMix,
+    UserStream,
 };
-use uqsched::clock::SEC;
+use uqsched::clock::{Micros, SEC};
 use uqsched::cluster::ClusterSpec;
 use uqsched::experiments::{
     reference, run_naive_slurm, run_umbridge_hq, run_umbridge_slurm, Config,
@@ -248,4 +249,131 @@ fn user_mix_is_deterministic_and_complete() {
                          &b.experiment.records);
     assert_eq!(a.experiment.records.len(), 20);
     assert_eq!(a.metrics.per_user.len(), 2);
+}
+
+// ---------------------------------------------------------------------------
+// DAG plane: seed determinism and the zero-edge equivalence pin.
+// ---------------------------------------------------------------------------
+
+fn dag_cfg(app: App, seed: u64) -> CampaignConfig {
+    let mut cfg = CampaignConfig::paper(app, 4, seed);
+    cfg.cluster = ClusterSpec::small(8);
+    cfg.overheads.bg_interarrival = 300 * SEC;
+    cfg.registration_jobs = 0;
+    cfg
+}
+
+fn mlda_records(seed: u64) -> Vec<JobRecord> {
+    let levels = vec![
+        MldaLevel { count: 12, runtime_scale: 0.5 },
+        MldaLevel { count: 8, runtime_scale: 1.0 },
+        MldaLevel { count: 4, runtime_scale: 2.0 },
+    ];
+    let mut sub =
+        Mlda::new(App::Gp, levels, seed).with_occupancy(3, 1, 12);
+    campaign::run_hq(&dag_cfg(App::Gp, seed), &mut sub).experiment.records
+}
+
+#[test]
+fn mlda_stream_is_deterministic_under_seed() {
+    let a = mlda_records(5);
+    let b = mlda_records(5);
+    assert_records_equal("mlda/seed5", &a, &b);
+    assert!(!a.is_empty());
+    let c = mlda_records(6);
+    assert_ne!(a, c, "different seed must change the stream");
+}
+
+fn stageio_records(seed: u64) -> Vec<JobRecord> {
+    let mut sub = StageInOut::new(App::Gp, 4, 3, 2, seed);
+    campaign::run_hq(&dag_cfg(App::Gp, seed), &mut sub).experiment.records
+}
+
+#[test]
+fn stageio_stream_is_deterministic_under_seed() {
+    let a = stageio_records(5);
+    let b = stageio_records(5);
+    assert_records_equal("stageio/seed5", &a, &b);
+    assert_eq!(a.len(), 4 * (3 + 2));
+    let c = stageio_records(6);
+    assert_ne!(a, c, "different seed must change the stream");
+}
+
+/// Wrapper that re-routes every plain submission through the dependency
+/// layer with an empty parent list (`Sink::gate_pending`) — the
+/// zero-edge DAG path.  A dependency plane that perturbs campaigns
+/// without dependencies would be a regression; this pins the records
+/// bit-for-bit against the ungated kernel.
+struct GateAll<S>(S);
+
+impl<S: Submitter> Submitter for GateAll<S> {
+    fn label(&self) -> &'static str {
+        self.0.label()
+    }
+
+    fn start(&mut self, sink: &mut Sink) {
+        self.0.start(sink);
+        sink.gate_pending();
+    }
+
+    fn wake(&mut self, t: Micros, token: u64, sink: &mut Sink) {
+        self.0.wake(t, token, sink);
+        sink.gate_pending();
+    }
+
+    fn completed(&mut self, t: Micros, rec: &JobRecord, sink: &mut Sink) {
+        self.0.completed(t, rec, sink);
+        sink.gate_pending();
+    }
+
+    fn registration_completed(&mut self, t: Micros, sink: &mut Sink) {
+        self.0.registration_completed(t, sink);
+        sink.gate_pending();
+    }
+
+    fn finished(&self, completed: u64) -> bool {
+        self.0.finished(completed)
+    }
+}
+
+#[test]
+fn zero_edge_gating_is_record_identical_to_the_plain_kernel() {
+    let cfg = dag_cfg(App::Eigen100, 11);
+    let run = |gated: bool, which: &str| -> Vec<JobRecord> {
+        let inner = FixedDepth::new(App::Eigen100, 16, 2, cfg.seed);
+        let res = if gated {
+            let mut sub = GateAll(inner);
+            match which {
+                "slurm" => {
+                    campaign::run_slurm(&cfg, &mut sub, SlurmMode::Native)
+                }
+                "hq" => campaign::run_hq(&cfg, &mut sub),
+                "worksteal" => campaign::run_worksteal(&cfg, &mut sub),
+                "gang" => campaign::run_gang(&cfg, &mut sub),
+                _ => campaign::run_edf(&cfg, &mut sub),
+            }
+        } else {
+            let mut sub = inner;
+            match which {
+                "slurm" => {
+                    campaign::run_slurm(&cfg, &mut sub, SlurmMode::Native)
+                }
+                "hq" => campaign::run_hq(&cfg, &mut sub),
+                "worksteal" => campaign::run_worksteal(&cfg, &mut sub),
+                "gang" => campaign::run_gang(&cfg, &mut sub),
+                _ => campaign::run_edf(&cfg, &mut sub),
+            }
+        };
+        assert_eq!(res.metrics.completed, 16);
+        if gated {
+            assert_eq!(res.metrics.dep_edges, 0, "zero-edge run");
+            assert_eq!(res.metrics.skipped, 0);
+        }
+        res.experiment.records
+    };
+    for which in ["slurm", "hq", "worksteal", "edf", "gang"] {
+        let plain = run(false, which);
+        let gated = run(true, which);
+        assert_records_equal(&format!("zero-edge/{which}"), &plain, &gated);
+    }
 }

@@ -178,7 +178,9 @@ fn run_script<S: SchedulerCore>(core: &mut S, script: &Script) -> Vec<u64> {
                         | Completion::Background => {}
                     }
                 }
-                Effect::Retire { .. } | Effect::Queued => {}
+                Effect::Retire { .. }
+                | Effect::Queued
+                | Effect::Released { .. } => {}
             }
         }
         if ops_left == 0 && works.iter().all(|w| w.finished) {
@@ -378,5 +380,284 @@ fn fuzz_random_event_scripts_across_all_five_cores() {
                 fmt_script(&minimal),
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DAG script fuzz: seeded forests (plus deterministic diamonds, deep
+// chains and wide fan-ins) submitted through the kernel's dependency
+// layer (`Sink::submit_after` -> `DepTracker`) on all five cores.  The
+// invariants no correct dependency plane may break:
+//
+// * the campaign drains — one record per submitted node, no deadlock;
+// * no child starts before every parent's record ended;
+// * a truncated parent poisons its descendants (skip cascade) — under
+//   faults, a quarantined ancestor's subtree surfaces as truncated
+//   records, never as lost work;
+// * without faults, nothing truncates and the five cores retire the
+//   identical tag set.
+//
+// The case count defaults to 20 and is overridable with
+// `CORE_FUZZ_DAG_CASES`.
+// ---------------------------------------------------------------------------
+
+use uqsched::campaign::{self, Sink, Submitter};
+use uqsched::metrics::JobRecord;
+use uqsched::sched::FaultSpec;
+
+/// A whole DAG pre-submitted at t = 0: node `i` is tag `i`, and its
+/// parents all have smaller tags (generation guarantees acyclicity).
+struct DagScriptSub {
+    parents: Vec<Vec<u64>>,
+    durations: Vec<Micros>,
+    started: bool,
+}
+
+impl DagScriptSub {
+    fn new(parents: Vec<Vec<u64>>, durations: Vec<Micros>) -> Self {
+        assert_eq!(parents.len(), durations.len());
+        DagScriptSub { parents, durations, started: false }
+    }
+}
+
+impl Submitter for DagScriptSub {
+    fn label(&self) -> &'static str {
+        "dag-fuzz"
+    }
+
+    fn start(&mut self, sink: &mut Sink) {
+        self.started = true;
+        for (i, ps) in self.parents.iter().enumerate() {
+            let s = Submission {
+                tag: i as u64,
+                user: 0,
+                app: App::Gp,
+                duration: self.durations[i],
+            };
+            if ps.is_empty() {
+                sink.submit(s);
+            } else {
+                sink.submit_after(s, ps);
+            }
+        }
+    }
+
+    fn wake(&mut self, _t: Micros, _token: u64, _sink: &mut Sink) {}
+
+    fn completed(&mut self, _t: Micros, _rec: &JobRecord, _sink: &mut Sink) {}
+
+    fn finished(&self, completed: u64) -> bool {
+        self.started && completed >= self.parents.len() as u64
+    }
+}
+
+/// Random forest: ~70% of non-first nodes draw 1..=3 distinct parents
+/// among earlier nodes, the rest are roots — covers disconnected trees,
+/// diamonds and deep paths in one generator.
+fn gen_dag(rng: &mut Rng) -> (Vec<Vec<u64>>, Vec<Micros>) {
+    let n = 4 + rng.below(40) as usize;
+    let mut parents: Vec<Vec<u64>> = Vec::with_capacity(n);
+    let mut durations: Vec<Micros> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut ps: Vec<u64> = Vec::new();
+        if i > 0 && rng.uniform() < 0.7 {
+            let k = 1 + rng.below(3.min(i as u64));
+            for _ in 0..k {
+                let p = rng.below(i as u64);
+                if !ps.contains(&p) {
+                    ps.push(p);
+                }
+            }
+        }
+        parents.push(ps);
+        durations.push((1 + rng.below(5)) * SEC);
+    }
+    (parents, durations)
+}
+
+fn dag_cfg(faults: Option<FaultSpec>) -> CampaignConfig {
+    let mut cfg = CampaignConfig::paper(App::Gp, 2, 9);
+    cfg.cluster = ClusterSpec::small(8);
+    cfg.overheads.bg_interarrival = 300 * SEC;
+    cfg.registration_jobs = 0;
+    cfg.faults = faults;
+    cfg
+}
+
+/// Drive the DAG through all five cores; return per-core records.
+fn run_dag_all_cores(
+    parents: &[Vec<u64>],
+    durations: &[Micros],
+    faults: Option<FaultSpec>,
+) -> Vec<(&'static str, Vec<JobRecord>)> {
+    let cfg = dag_cfg(faults);
+    let mut out = Vec::new();
+    for which in ["slurm", "hq", "worksteal", "edf", "gang"] {
+        let mut sub =
+            DagScriptSub::new(parents.to_vec(), durations.to_vec());
+        let res = match which {
+            "slurm" => campaign::run_slurm(&cfg, &mut sub, SlurmMode::Native),
+            "hq" => campaign::run_hq(&cfg, &mut sub),
+            "worksteal" => campaign::run_worksteal(&cfg, &mut sub),
+            "gang" => campaign::run_gang(&cfg, &mut sub),
+            _ => campaign::run_edf(&cfg, &mut sub),
+        };
+        out.push((which, res.experiment.records));
+    }
+    out
+}
+
+/// The per-core structural invariants: drain, edge ordering, skip
+/// cascade.  `clean` additionally forbids truncation outright.
+fn check_dag_invariants(
+    label: &str,
+    parents: &[Vec<u64>],
+    runs: &[(&'static str, Vec<JobRecord>)],
+    clean: bool,
+) {
+    let n = parents.len();
+    for (name, recs) in runs {
+        assert_eq!(
+            recs.len(),
+            n,
+            "{label}/{name}: {} records for {} submitted nodes \
+             (lost work or deadlock)",
+            recs.len(),
+            n
+        );
+        let mut by_tag: HashMap<u64, &JobRecord> = HashMap::new();
+        for r in recs {
+            assert!(
+                by_tag.insert(r.tag, r).is_none(),
+                "{label}/{name}: duplicate record for tag {}",
+                r.tag
+            );
+            assert!((r.tag as usize) < n, "{label}/{name}: unknown tag");
+            if clean {
+                assert!(
+                    !r.truncated,
+                    "{label}/{name}: tag {} truncated without faults",
+                    r.tag
+                );
+            }
+        }
+        for (child, ps) in parents.iter().enumerate() {
+            let cr = by_tag[&(child as u64)];
+            for p in ps {
+                let pr = by_tag[p];
+                assert!(
+                    cr.start >= pr.end,
+                    "{label}/{name}: child {child} started at {} before \
+                     parent {p} ended at {}",
+                    cr.start,
+                    pr.end
+                );
+                assert!(
+                    !pr.truncated || cr.truncated,
+                    "{label}/{name}: child {child} ran although parent \
+                     {p} was truncated (skip cascade broken)"
+                );
+            }
+        }
+    }
+    // Differential part: every core retires the identical tag set.
+    let tags = |recs: &[JobRecord]| -> Vec<u64> {
+        let mut t: Vec<u64> = recs.iter().map(|r| r.tag).collect();
+        t.sort_unstable();
+        t
+    };
+    let first = tags(&runs[0].1);
+    for (name, recs) in &runs[1..] {
+        assert_eq!(
+            tags(recs),
+            first,
+            "{label}/{name}: terminal tag set diverges from {}",
+            runs[0].0
+        );
+    }
+}
+
+#[test]
+fn dag_diamond_and_deep_chain_release_in_order_on_all_cores() {
+    // Diamond: 0 -> {1, 2} -> 3.
+    let diamond: Vec<Vec<u64>> =
+        vec![vec![], vec![0], vec![0], vec![1, 2]];
+    let durs = vec![2 * SEC; 4];
+    let runs = run_dag_all_cores(&diamond, &durs, None);
+    check_dag_invariants("diamond", &diamond, &runs, true);
+
+    // 64-deep chain: strictly serial no matter how wide the cluster.
+    let chain: Vec<Vec<u64>> =
+        (0..64).map(|i| if i == 0 { vec![] } else { vec![i - 1] }).collect();
+    let durs = vec![SEC; 64];
+    let runs = run_dag_all_cores(&chain, &durs, None);
+    check_dag_invariants("chain", &chain, &runs, true);
+    for (name, recs) in &runs {
+        let mut by_tag: HashMap<u64, &JobRecord> = HashMap::new();
+        for r in recs {
+            by_tag.insert(r.tag, r);
+        }
+        // The chain's serial lower bound: 64 tasks x 1 s.
+        let last = by_tag[&63];
+        assert!(
+            last.end - by_tag[&0].start >= 64 * SEC,
+            "{name}: 64-deep chain finished impossibly fast"
+        );
+    }
+
+    // Wide fan-in: 16 independent parents join into one reduce.
+    let mut fanin: Vec<Vec<u64>> = (0..16).map(|_| vec![]).collect();
+    fanin.push((0..16).collect());
+    let durs = vec![SEC; 17];
+    let runs = run_dag_all_cores(&fanin, &durs, None);
+    check_dag_invariants("fanin", &fanin, &runs, true);
+}
+
+#[test]
+fn fuzz_random_dags_across_all_five_cores() {
+    let cases: u64 = std::env::var("CORE_FUZZ_DAG_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20);
+    for case in 0..cases {
+        let seed = 0xDA6_5EED_0000u64.wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        let (parents, durations) = gen_dag(&mut rng);
+        let runs = run_dag_all_cores(&parents, &durations, None);
+        check_dag_invariants(
+            &format!("case {case} (seed {seed:#x})"),
+            &parents,
+            &runs,
+            true,
+        );
+    }
+}
+
+#[test]
+fn fuzz_random_dags_under_faults_never_lose_work() {
+    let cases: u64 = std::env::var("CORE_FUZZ_DAG_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20)
+        .min(8);
+    let spec = FaultSpec::parse(
+        "crash=60s,fail=0.25,attempts=2,backoff=1s:8s,seed=7",
+    )
+    .expect("fault spec");
+    for case in 0..cases {
+        let seed = 0xFA17_DA60u64.wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        let (parents, durations) = gen_dag(&mut rng);
+        let runs =
+            run_dag_all_cores(&parents, &durations, Some(spec.clone()));
+        // Straggler slowdowns are keyed per (tag, attempt), so which
+        // task quarantines CAN differ across cores — the per-core
+        // invariants (drain, edge order, skip cascade) must not.
+        check_dag_invariants(
+            &format!("faulted case {case} (seed {seed:#x})"),
+            &parents,
+            &runs,
+            false,
+        );
     }
 }

@@ -725,7 +725,9 @@ fn stack_capacity_change_requeues_without_loss() {
                     assert_ne!(record.tag, u64::MAX);
                     tags.push(record.tag);
                 }
-                Effect::Retire { .. } | Effect::Queued => {}
+                Effect::Retire { .. }
+                | Effect::Queued
+                | Effect::Released { .. } => {}
             }
         }
         if tags.len() as u64 >= n {
