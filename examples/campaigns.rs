@@ -29,15 +29,58 @@
 
 use uqsched::campaign::{
     self, AdaptiveBayes, CampaignConfig, CampaignResult, Family, FixedDepth,
-    HeteroFamilies, Mlda, MldaLevel, PoissonBurst, SlurmMode, StageInOut,
-    Submitter, UserMix, UserStream,
+    HeteroFamilies, Mlda, MldaLevel, PoissonBurst, Sink, SlurmMode,
+    StageInOut, Submission, Submitter, UserMix, UserStream,
 };
 use uqsched::cli::Args;
-use uqsched::clock::SEC;
+use uqsched::clock::{Micros, SEC};
 use uqsched::cluster::ClusterSpec;
-use uqsched::metrics::BoxStats;
+use uqsched::metrics::{BoxStats, JobRecord};
 use uqsched::sched::FaultSpec;
-use uqsched::workload::App;
+use uqsched::workload::{App, RuntimeModel};
+
+/// Open-loop wave submitter: the whole campaign arrives in **one**
+/// [`Sink::submit_many`] call — a single sink reservation and one
+/// kernel drain pass, where per-item [`Sink::submit`] would grow the
+/// buffer and schedule follow-ups item by item.  The adaptive policy
+/// below batches each of its rounds through the same API.
+struct OneWave {
+    app: App,
+    n: u64,
+    rtm: RuntimeModel,
+    started: bool,
+}
+
+impl OneWave {
+    fn new(app: App, n: u64, seed: u64) -> Self {
+        OneWave { app, n, rtm: RuntimeModel::new(seed), started: false }
+    }
+}
+
+impl Submitter for OneWave {
+    fn label(&self) -> &'static str {
+        "one-wave"
+    }
+
+    fn start(&mut self, sink: &mut Sink) {
+        self.started = true;
+        let (app, rtm) = (self.app, &self.rtm);
+        sink.submit_many((0..self.n).map(|tag| Submission {
+            tag,
+            user: 0,
+            app,
+            duration: rtm.duration(app, tag),
+        }));
+    }
+
+    fn wake(&mut self, _t: Micros, _token: u64, _sink: &mut Sink) {}
+
+    fn completed(&mut self, _t: Micros, _rec: &JobRecord, _sink: &mut Sink) {}
+
+    fn finished(&self, completed: u64) -> bool {
+        self.started && completed >= self.n
+    }
+}
 
 fn report(r: &CampaignResult) {
     let m = &r.metrics;
@@ -143,6 +186,15 @@ fn main() -> anyhow::Result<()> {
         r.metrics.completed,
         tasks
     );
+
+    println!("== batched wave (whole campaign in one submit_many) ==");
+    // The entire budget lands in the kernel as one burst: queue depth
+    // peaks at `tasks`, and the sink grows exactly once.  Contrast with
+    // the adaptive policy above, which meters the same API per round.
+    let mut sub = OneWave::new(App::Gp, tasks, seed);
+    report(&campaign::run_hq(&cfg, &mut sub));
+    let mut sub = OneWave::new(App::Gp, tasks, seed);
+    report(&campaign::run_worksteal(&cfg, &mut sub));
 
     println!("== flaky cluster (one seeded fault plan, all four cores) ==");
     // The same deterministic fault trace — a worker crash every ~2

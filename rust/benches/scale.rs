@@ -19,6 +19,9 @@
 //!   SCALE_NAIVE_TASKS     max task count for the naive baseline (default 100_000)
 //!   SCALE_CAMPAIGN_TASKS  campaign-mode task count, 0 disables  (default 100_000)
 //!   SCALE_OUT             output path                           (default BENCH_scale.json)
+//!   UQSCHED_ALLOC_TASKS   N for the marginal alloc profile      (default 20_000)
+//!   UQSCHED_ALLOC_ROWS=1  hard-assert the allocs/task ceiling (CI smoke)
+//!   UQSCHED_MIN_TASKS_PER_S  opt-in throughput floor for indexed rows
 //!
 //! The workload is deliberately UQ-shaped: a stream of identical small
 //! tasks (the paper's "thousands or even millions of similar tasks"),
@@ -29,6 +32,8 @@
 //! (statically dispatched trait shims), so the indexed-vs-naive speedup
 //! can never be skewed by divergent driver loops.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Instant;
 
 use uqsched::campaign::{self, AdaptiveBayes, CampaignConfig, Mlda,
@@ -44,6 +49,62 @@ use uqsched::sched::{EdfCore, FaultSpec, GangCore, WorkStealCore};
 use uqsched::slurmlite::core::{Action, BatchCore, SlurmCore, Timer,
                                USER_EXPERIMENT};
 use uqsched::slurmlite::ReferenceSlurmCore;
+
+// ---------------------------------------------------------------------------
+// Counting allocator: every heap allocation in this bench binary ticks
+// a call counter and a live-bytes watermark, so the slab-arena hot path
+// can be held to an allocations-per-task budget.  The profile uses the
+// marginal two-size method — allocs(2N) - allocs(N), over N — so
+// one-time setup (core construction, pool warm-up, container growth to
+// the depth-bounded working set) cancels and only the steady-state
+// drain cost remains.  The instrumented path costs two relaxed atomic
+// ops per allocation; the throughput rows allocate (by design) almost
+// never, so they are unaffected.
+// ---------------------------------------------------------------------------
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static LIVE_BYTES: AtomicUsize = AtomicUsize::new(0);
+static PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+#[inline]
+fn note_grow(by: usize) {
+    let live = LIVE_BYTES.fetch_add(by, Ordering::Relaxed) + by;
+    PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = unsafe { System.alloc(layout) };
+        if !p.is_null() {
+            ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+            note_grow(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE_BYTES.fetch_sub(layout.size(), Ordering::Relaxed);
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = unsafe { System.realloc(ptr, layout, new_size) };
+        if !p.is_null() {
+            ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+            if new_size >= layout.size() {
+                note_grow(new_size - layout.size());
+            } else {
+                LIVE_BYTES.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC_METER: CountingAlloc = CountingAlloc;
 
 /// One measurement row.
 struct Row {
@@ -262,7 +323,7 @@ impl HqDriver for HqCore {
         self.submit_task_into(t, hq_spec(tag), out);
     }
     fn drv_alloc_up(&mut self, t: Micros, out: &mut Vec<HqAction>) {
-        self.on_alloc_up_into(t, HQ_ALLOC_LIFE, 16, out);
+        let _ = self.on_alloc_up_into(t, HQ_ALLOC_LIFE, 16, out);
     }
     fn drv_timer(&mut self, t: Micros, tm: HqTimer, out: &mut Vec<HqAction>) {
         self.on_timer_into(t, tm, out);
@@ -280,7 +341,7 @@ impl HqDriver for WorkStealCore {
         self.submit_task_into(t, hq_spec(tag), out);
     }
     fn drv_alloc_up(&mut self, t: Micros, out: &mut Vec<HqAction>) {
-        self.on_alloc_up_into(t, HQ_ALLOC_LIFE, 16, out);
+        let _ = self.on_alloc_up_into(t, HQ_ALLOC_LIFE, 16, out);
     }
     fn drv_timer(&mut self, t: Micros, tm: HqTimer, out: &mut Vec<HqAction>) {
         self.on_timer_into(t, tm, out);
@@ -298,7 +359,7 @@ impl HqDriver for EdfCore {
         self.submit_task_into(t, hq_spec(tag), out);
     }
     fn drv_alloc_up(&mut self, t: Micros, out: &mut Vec<HqAction>) {
-        self.on_alloc_up_into(t, HQ_ALLOC_LIFE, 16, out);
+        let _ = self.on_alloc_up_into(t, HQ_ALLOC_LIFE, 16, out);
     }
     fn drv_timer(&mut self, t: Micros, tm: HqTimer, out: &mut Vec<HqAction>) {
         self.on_timer_into(t, tm, out);
@@ -316,7 +377,7 @@ impl HqDriver for GangCore {
         self.submit_task_into(t, hq_spec(tag), out);
     }
     fn drv_alloc_up(&mut self, t: Micros, out: &mut Vec<HqAction>) {
-        self.on_alloc_up_into(t, HQ_ALLOC_LIFE, 16, out);
+        let _ = self.on_alloc_up_into(t, HQ_ALLOC_LIFE, 16, out);
     }
     fn drv_timer(&mut self, t: Micros, tm: HqTimer, out: &mut Vec<HqAction>) {
         self.on_timer_into(t, tm, out);
@@ -747,6 +808,67 @@ fn gang_indexed(n: u64, depth: usize) -> Row {
            n, depth)
 }
 
+/// Depth for the allocation profile: deep enough that every core runs a
+/// real steady-state pending queue, small enough that the depth-bounded
+/// working set is identical between the N and 2N runs.
+const ALLOC_DEPTH: usize = 1_024;
+
+/// Steady-state allocation profile for all five cores.  Each core runs
+/// the same bounded-depth drain at N and 2N tasks; the marginal
+/// allocation count over the extra N tasks is the per-task cost of the
+/// slab-arena hot path (slot reuse, pooled effect buffers, recycled
+/// scratch).  With `UQSCHED_ALLOC_ROWS=1` the ceiling is a hard assert
+/// — the CI smoke step that keeps the hot path allocation-free.
+fn alloc_rows(summary: &mut Vec<(&'static str, Value)>) -> Vec<Value> {
+    let n = env_u64("UQSCHED_ALLOC_TASKS", 20_000).max(1_000);
+    let enforce = std::env::var("UQSCHED_ALLOC_ROWS").ok().as_deref()
+        == Some("1");
+    let runs: [(&'static str, &'static str, fn(u64, usize) -> Row); 5] = [
+        ("slurm", "slurm_allocs_per_task", slurm_indexed),
+        ("hq", "hq_allocs_per_task", hq_indexed),
+        ("worksteal", "worksteal_allocs_per_task", worksteal_indexed),
+        ("edf", "edf_allocs_per_task", edf_indexed),
+        ("gang", "gang_allocs_per_task", gang_indexed),
+    ];
+    let mut out = Vec::new();
+    for (core, key, run) in runs {
+        // Warm-up run outside the measured windows: lazy statics, stdio
+        // buffers and the first heap growths are billed to nobody.
+        let _ = run(1_000, ALLOC_DEPTH);
+        let a0 = ALLOC_CALLS.load(Ordering::Relaxed);
+        let _ = run(n, ALLOC_DEPTH);
+        let a1 = ALLOC_CALLS.load(Ordering::Relaxed);
+        PEAK_BYTES.store(LIVE_BYTES.load(Ordering::Relaxed),
+                         Ordering::Relaxed);
+        let _ = run(2 * n, ALLOC_DEPTH);
+        let a2 = ALLOC_CALLS.load(Ordering::Relaxed);
+        let peak = PEAK_BYTES.load(Ordering::Relaxed);
+        let marginal = (a2 - a1).saturating_sub(a1 - a0);
+        let per_task = marginal as f64 / n as f64;
+        println!(
+            "  {core:<9} {per_task:>6.3} allocs/task (marginal over {n} \
+             extra tasks, depth {ALLOC_DEPTH})  peak live {:.2} MiB",
+            peak as f64 / (1024.0 * 1024.0)
+        );
+        if enforce {
+            assert!(
+                per_task <= 2.0,
+                "{core}: steady-state drain costs {per_task:.3} allocs/task \
+                 (ceiling 2) — a slab/pool regression on the hot path"
+            );
+        }
+        summary.push((key, Value::num(per_task)));
+        out.push(Value::obj(vec![
+            ("core", Value::str(core)),
+            ("tasks", Value::num(n as f64)),
+            ("depth", Value::num(ALLOC_DEPTH as f64)),
+            ("allocs_per_task", Value::num(per_task)),
+            ("peak_live_bytes", Value::num(peak as f64)),
+        ]));
+    }
+    out
+}
+
 fn main() {
     let max_tasks = env_u64("SCALE_TASKS", 1_000_000);
     let naive_max = env_u64("SCALE_NAIVE_TASKS", 100_000);
@@ -824,8 +946,27 @@ fn main() {
         }
     }
 
+    // Opt-in CI floor: machines differ, so the absolute throughput
+    // assert only fires when the harness pins a floor for its runner.
+    let floor = env_u64("UQSCHED_MIN_TASKS_PER_S", 0) as f64;
+    if floor > 0.0 {
+        for r in rows.iter().filter(|r| r.imp == "indexed") {
+            assert!(
+                r.tasks_per_s >= floor,
+                "{} at {} tasks: {:.0} tasks/s under floor {floor}",
+                r.core, r.tasks, r.tasks_per_s
+            );
+        }
+    }
+
     // Headline derived numbers.
     let mut summary: Vec<(&'static str, Value)> = Vec::new();
+
+    // Steady-state allocation profile: the slab-arena budget, one row
+    // per core (see `alloc_rows`).
+    println!("-- allocation profile (counting allocator, all five \
+              cores) --");
+    let allocs = alloc_rows(&mut summary);
 
     // Flaky-cluster mode: the bursty campaign under the seeded fault
     // plan, one row per core, inflation vs each core's clean run.
@@ -921,6 +1062,7 @@ fn main() {
         ("naive_max_tasks", Value::num(naive_max as f64)),
         ("campaign_tasks", Value::num(campaign_tasks as f64)),
         ("results", Value::arr(rows.iter().map(Row::json).collect())),
+        ("allocs", Value::arr(allocs)),
         ("summary", Value::Obj(
             summary.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
         )),

@@ -63,6 +63,19 @@ impl Sink {
         self.submissions.push(s);
     }
 
+    /// Submit a batch of evaluations at the current event time in one
+    /// call: a single buffer reservation instead of per-item growth,
+    /// and one kernel drain pass for the whole burst.  Equivalent to
+    /// calling [`Sink::submit`] per item, in order — burst policies
+    /// (Poisson arrivals, adaptive batch rounds, DAG wave fronts) hand
+    /// the kernel their whole wave at once.
+    pub fn submit_many<I>(&mut self, subs: I)
+    where
+        I: IntoIterator<Item = Submission>,
+    {
+        self.submissions.extend(subs);
+    }
+
     /// Submit an evaluation gated on `parents` (tags of previously
     /// submitted evaluations): it enters the scheduler only once every
     /// parent is terminal.  A failed/quarantined parent propagates a
@@ -539,21 +552,18 @@ impl AdaptiveBayes {
     }
 
     fn emit_batch(&mut self, k: u64, sink: &mut Sink) {
-        let mut emitted = 0;
-        for _ in 0..k {
-            if self.next >= self.budget {
-                break;
-            }
-            let tag = self.next;
-            self.next += 1;
-            sink.submit(Submission {
-                tag,
-                user: 0,
-                app: self.app,
-                duration: self.rtm.duration(self.app, tag),
-            });
-            emitted += 1;
-        }
+        // One batched hand-off for the whole round: same submissions in
+        // the same order as per-item `submit`, one sink reservation.
+        let emitted = k.min(self.budget.saturating_sub(self.next));
+        let first = self.next;
+        self.next += emitted;
+        let (app, rtm) = (self.app, &self.rtm);
+        sink.submit_many((first..first + emitted).map(|tag| Submission {
+            tag,
+            user: 0,
+            app,
+            duration: rtm.duration(app, tag),
+        }));
         if emitted > 0 {
             self.rounds += 1;
             self.outstanding += emitted;

@@ -139,6 +139,9 @@ impl PendingEval {
 /// Events applied by a shard thread, in arrival order, in batches.
 enum ShardEvent {
     Submit(Arc<PendingEval>),
+    /// A batch admitted in one gate bump: one channel send, one thread
+    /// wake and one pump pass for the whole burst.
+    SubmitMany(Vec<Arc<PendingEval>>),
     /// Forward finished (success or definitive HTTP-error answer).
     Done { id: TaskId },
     /// Forward died with its server: withdraw the worker, charge a retry.
@@ -271,7 +274,39 @@ pub enum SubmitOutcome {
 struct Group {
     start: usize,
     count: usize,
+    /// Probe sequence for power-of-two-choices (not a placement: the
+    /// counter only decides which two shards get depth-compared).
     rr: AtomicUsize,
+}
+
+impl Group {
+    /// Power-of-two-choices shard pick: draw two distinct probe shards
+    /// from the rotation counter and take the shallower queue.  The
+    /// depth compared is the admission gate — the same live counter the
+    /// epoch-stamped [`ShardSnapshot`] publishes as `queued`, read at
+    /// its source so back-to-back submits in one burst see each other's
+    /// admissions instead of herding onto a stale snapshot.  Under a
+    /// skewed model mix this bounds the max/min shard imbalance where
+    /// blind round-robin lets one hot shard run away (see
+    /// `tests/balancer_plane.rs`).
+    fn pick<'s>(&self, shards: &'s [Arc<Shard>]) -> &'s Arc<Shard> {
+        let n = self.rr.fetch_add(1, Ordering::Relaxed);
+        let first = &shards[self.start + n % self.count];
+        if self.count == 1 {
+            return first;
+        }
+        // Second probe: a rotating non-zero offset, so over time every
+        // pair of shards gets compared (not just neighbours).
+        let off = 1 + (n / self.count) % (self.count - 1);
+        let second = &shards[self.start + (n + off) % self.count];
+        let da = first.gate.load(Ordering::Acquire);
+        let db = second.gate.load(Ordering::Acquire);
+        if db < da {
+            second
+        } else {
+            first
+        }
+    }
 }
 
 /// The sharded dispatch plane. See the module docs for the design.
@@ -391,6 +426,15 @@ impl DispatchPlane {
     }
 
     /// Lock-free submission: one atomic gate bump + one channel push.
+    /// The target shard is picked by power-of-two-choices on the
+    /// admission-gate depths ([`Group::pick`]).
+    ///
+    /// Gate discipline: the bump is retracted on **every** non-`Queued`
+    /// outcome.  The closed-channel path used to leak the slot (and a
+    /// phantom `submitted` count) — with the gate also feeding
+    /// backpressure and the p2c depth compare, a leak would permanently
+    /// shrink the shard's usable capacity and skew placement away from
+    /// it for the rest of the process.
     pub fn submit(&self, model: &str, body: String) -> SubmitOutcome {
         let Some(g) = self.groups.get(model) else {
             return SubmitOutcome::UnknownModel;
@@ -398,8 +442,7 @@ impl DispatchPlane {
         if self.stop.load(Ordering::Acquire) {
             return SubmitOutcome::Stopping;
         }
-        let k = g.rr.fetch_add(1, Ordering::Relaxed) % g.count;
-        let shard = &self.shards[g.start + k];
+        let shard = g.pick(&self.shards);
         if shard
             .gate
             .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
@@ -414,12 +457,69 @@ impl DispatchPlane {
             return SubmitOutcome::Full;
         }
         let item = PendingEval::new(model, body);
-        shard.snap.submitted.fetch_add(1, Ordering::Relaxed);
         if shard.tx.send(ShardEvent::Submit(item.clone())).is_err() {
             shard.gate_dec();
             return SubmitOutcome::Stopping;
         }
+        shard.snap.submitted.fetch_add(1, Ordering::Relaxed);
         SubmitOutcome::Queued(item)
+    }
+
+    /// Batched submission: admit as many of `bodies` as one p2c-picked
+    /// shard has gate room for, in one gate transaction and **one**
+    /// channel send — the whole burst costs the shard thread a single
+    /// wake and a single pump pass, where per-item [`Self::submit`]
+    /// would pay one of each per request.  Returns one outcome per body,
+    /// in order; bodies beyond the shard's free capacity get
+    /// [`SubmitOutcome::Full`] (callers may resubmit those elsewhere —
+    /// the gate never over-admits).
+    pub fn submit_many(&self, model: &str, bodies: Vec<String>) -> Vec<SubmitOutcome> {
+        let n = bodies.len();
+        let Some(g) = self.groups.get(model) else {
+            return bodies.into_iter().map(|_| SubmitOutcome::UnknownModel).collect();
+        };
+        if self.stop.load(Ordering::Acquire) {
+            return bodies.into_iter().map(|_| SubmitOutcome::Stopping).collect();
+        }
+        if n == 0 {
+            return Vec::new();
+        }
+        let shard = g.pick(&self.shards);
+        // One gate transaction admits the largest prefix that fits.
+        let mut admitted = 0usize;
+        let _ = shard.gate.fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+            admitted = n.min(shard.capacity.saturating_sub(v));
+            Some(v + admitted)
+        });
+        if admitted == 0 {
+            return bodies.into_iter().map(|_| SubmitOutcome::Full).collect();
+        }
+        let mut out: Vec<SubmitOutcome> = Vec::with_capacity(n);
+        let mut batch: Vec<Arc<PendingEval>> = Vec::with_capacity(admitted);
+        for (i, body) in bodies.into_iter().enumerate() {
+            if i < admitted {
+                let item = PendingEval::new(model, body);
+                batch.push(item.clone());
+                out.push(SubmitOutcome::Queued(item));
+            } else {
+                out.push(SubmitOutcome::Full);
+            }
+        }
+        if shard.tx.send(ShardEvent::SubmitMany(batch)).is_err() {
+            // Retract the whole admission (closed channel: shard gone).
+            for _ in 0..admitted {
+                shard.gate_dec();
+            }
+            for slot in out.iter_mut().take(admitted) {
+                if let SubmitOutcome::Queued(item) = slot {
+                    item.resolve(Err("balancer shutting down".into()));
+                }
+                *slot = SubmitOutcome::Stopping;
+            }
+            return out;
+        }
+        shard.snap.submitted.fetch_add(admitted as u64, Ordering::Relaxed);
+        out
     }
 
     /// Announce a healthy endpoint to every shard of its model. Idempotent
@@ -720,16 +820,12 @@ impl ShardState {
     fn apply(&mut self, ev: ShardEvent) -> bool {
         match ev {
             ShardEvent::Submit(item) => {
-                if item.is_cancelled() {
-                    // Client already gave up; never enters the scheduler.
-                    self.shard.gate_dec();
-                    if let Some(st) = self.st() {
-                        st.cancelled.fetch_add(1, Ordering::Relaxed);
-                    }
-                    return false;
+                self.admit(item);
+            }
+            ShardEvent::SubmitMany(batch) => {
+                for item in batch {
+                    self.admit(item);
                 }
-                let id = self.driver.submit_batched(self.budget_us);
-                self.items.insert(id, item);
             }
             ShardEvent::Done { id } => {
                 self.driver.work_done_batched(id);
@@ -770,6 +866,20 @@ impl ShardState {
             ShardEvent::Stop => return true,
         }
         false
+    }
+
+    /// Enter one admitted item into the scheduler (or drop it if the
+    /// client already gave up — it then never enters the core).
+    fn admit(&mut self, item: Arc<PendingEval>) {
+        if item.is_cancelled() {
+            self.shard.gate_dec();
+            if let Some(st) = self.st() {
+                st.cancelled.fetch_add(1, Ordering::Relaxed);
+            }
+            return;
+        }
+        let id = self.driver.submit_batched(self.budget_us);
+        self.items.insert(id, item);
     }
 
     fn server_up_local(&mut self, endpoint: &str) {
@@ -905,6 +1015,12 @@ impl ShardState {
                     self.shard.gate_dec();
                     item.resolve(Err("balancer shutting down".into()));
                 }
+                Ok(ShardEvent::SubmitMany(batch)) => {
+                    for item in batch {
+                        self.shard.gate_dec();
+                        item.resolve(Err("balancer shutting down".into()));
+                    }
+                }
                 Ok(ShardEvent::Failed { item, .. }) => {
                     item.resolve(Err("balancer shutting down".into()));
                 }
@@ -994,6 +1110,92 @@ mod tests {
         assert_eq!(counts[0].submitted, 6);
         assert_eq!(counts[0].dispatched, 6);
         assert_eq!(counts[0].served, 6);
+        plane.shutdown();
+    }
+
+    #[test]
+    fn closed_channel_submit_retracts_the_gate() {
+        // Drive the closed-channel path directly: shut the plane down
+        // (threads joined, receivers dropped), then clear the stop flag
+        // so `submit` gets past the early return and races the dead
+        // channel. The admission bump must be retracted — a leak here
+        // would permanently eat shard capacity and skew the p2c depth
+        // compare.
+        let (plane, _registry) = start_plane(test_cfg(&["m"], 1, 4));
+        plane.shutdown();
+        plane.stop.store(false, Ordering::Release);
+        let before = plane.shards[0].snap.submitted.load(Ordering::Relaxed);
+        assert!(matches!(plane.submit("m", "x".into()), SubmitOutcome::Stopping));
+        assert_eq!(plane.queue_len(), 0, "gate slot leaked on closed channel");
+        assert_eq!(
+            plane.shards[0].snap.submitted.load(Ordering::Relaxed),
+            before,
+            "phantom submitted count on closed channel"
+        );
+        // Batched path: same discipline, and the stranded handles resolve.
+        let outs = plane.submit_many("m", vec!["a".into(), "b".into()]);
+        assert_eq!(outs.len(), 2);
+        assert!(outs.iter().all(|o| matches!(o, SubmitOutcome::Stopping)));
+        assert_eq!(plane.queue_len(), 0, "gate slots leaked on batched path");
+    }
+
+    #[test]
+    fn p2c_steers_submissions_away_from_the_deeper_shard() {
+        let (plane, _registry) = start_plane(test_cfg(&["m"], 2, 64));
+        let (start, count) = plane.shards_for("m").unwrap();
+        assert_eq!(count, 2);
+        // Pre-load shard `start` with synthetic depth: every subsequent
+        // probe pair compares both shards (count == 2), so all new work
+        // must land on the shallow one until the depths meet.
+        plane.shards[start].gate.store(8, Ordering::Release);
+        let mut items = Vec::new();
+        for i in 0..6 {
+            match plane.submit("m", format!("r{i}")) {
+                SubmitOutcome::Queued(it) => items.push(it),
+                _ => panic!("submit {i} rejected"),
+            }
+        }
+        assert_eq!(plane.shards[start].gate.load(Ordering::Acquire), 8,
+                   "deep shard took new work under p2c");
+        assert_eq!(plane.shards[start + 1].gate.load(Ordering::Acquire), 6);
+        plane.shards[start].gate.store(0, Ordering::Release);
+        plane.shutdown();
+    }
+
+    #[test]
+    fn submit_many_admits_in_one_batch_and_sheds_the_overflow() {
+        let (plane, registry) = start_plane(test_cfg(&["m"], 1, 4));
+        let outs = plane.submit_many("m", (0..6).map(|i| format!("req-{i}")).collect());
+        assert_eq!(outs.len(), 6);
+        assert_eq!(
+            outs.iter().filter(|o| matches!(o, SubmitOutcome::Queued(_))).count(),
+            4,
+            "batch must admit exactly the shard's free capacity"
+        );
+        assert!(outs[4..].iter().all(|o| matches!(o, SubmitOutcome::Full)));
+        assert_eq!(plane.queued_for("m"), 4);
+        // The batch entered the scheduler in order: serve it FCFS.
+        registry.register("s1", "m", &contract());
+        plane.worker_up("s1", "m");
+        for i in 0..4 {
+            let deadline = Instant::now() + Duration::from_secs(5);
+            let order = loop {
+                if let Some(o) = plane.take_order(0, Duration::from_millis(50)) {
+                    break o;
+                }
+                assert!(Instant::now() < deadline, "order {i} never surfaced");
+            };
+            assert_eq!(order.item().body(), format!("req-{i}"), "batch order lost");
+            plane.complete_order(order, Ok(format!("ok-{i}")));
+        }
+        for (i, o) in outs.iter().take(4).enumerate() {
+            let SubmitOutcome::Queued(it) = o else { unreachable!() };
+            let r = it
+                .wait_deadline(Instant::now() + Duration::from_secs(2))
+                .expect("resolved");
+            assert_eq!(r.unwrap(), format!("ok-{i}"));
+        }
+        assert_eq!(plane.counts_for("m")[0].submitted, 4);
         plane.shutdown();
     }
 

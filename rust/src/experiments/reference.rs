@@ -235,7 +235,7 @@ pub fn run_umbridge_hq(cfg: &Config) -> Experiment {
                         if alloc_jobs.contains_key(&job) {
                             // Allocation is up: a worker registers for the
                             // remaining allocation lifetime.
-                            hq.on_alloc_up_into(
+                            let _ = hq.on_alloc_up_into(
                                 t,
                                 scen.hq_alloc_time,
                                 scen.cpus,

@@ -136,13 +136,16 @@ pub trait TaskCore {
     ) -> TaskId;
 
     /// Allocation arrival, appending actions into a reusable buffer.
+    /// Returns the id of the first worker admitted (None when the
+    /// worker cap swallowed the allocation) so drivers can map their
+    /// external worker handles onto the generational table ids.
     fn on_alloc_up_into(
         &mut self,
         t: Micros,
         time_limit: Micros,
         cores_per_worker: u32,
         out: &mut Vec<HqAction>,
-    );
+    ) -> Option<WorkerId>;
 
     /// Worker loss, appending actions into a reusable buffer.  Must not
     /// lose tasks: everything Dispatched/Running on the worker requeues.
@@ -226,7 +229,7 @@ pub trait TaskCore {
         cores_per_worker: u32,
     ) -> Vec<HqAction> {
         let mut out = Vec::new();
-        self.on_alloc_up_into(t, time_limit, cores_per_worker, &mut out);
+        let _ = self.on_alloc_up_into(t, time_limit, cores_per_worker, &mut out);
         out
     }
 
@@ -341,14 +344,17 @@ impl TaskCore for HqCore {
         time_limit: Micros,
         cores_per_worker: u32,
         out: &mut Vec<HqAction>,
-    ) {
-        for wid in self.table.admit_workers(t, time_limit, cores_per_worker) {
+    ) -> Option<WorkerId> {
+        let admitted = self.table.admit_workers(t, time_limit, cores_per_worker);
+        let first = admitted.first().copied();
+        for &wid in admitted {
             if cores_per_worker > 0 {
                 self.avail.insert(wid);
             }
             self.workers_started += 1;
         }
         self.dispatch_into(t, out);
+        first
     }
 
     /// A worker disappeared (allocation ended); requeue its tasks in
@@ -500,13 +506,11 @@ impl HqCore {
                 // Degenerate zero-core task: every live worker with
                 // enough allocation left qualifies, including fully-busy
                 // ones the `avail` set excludes (seed semantics).
-                pick = self
-                    .table
-                    .workers_map()
-                    .iter()
-                    .filter(|(_, w)| w.expires_t >= t.saturating_add(tr))
-                    .map(|(wid, _)| *wid)
-                    .min();
+                pick = self.table.worker_ids().find(|&wid| {
+                    self.table
+                        .worker(wid)
+                        .map_or(false, |w| w.expires_t >= t.saturating_add(tr))
+                });
             } else {
                 for &wid in self.avail.iter() {
                     if self.table.can_start(t, id, wid) {
@@ -734,7 +738,10 @@ mod tests {
         let (id, _) = core.submit_task(0, TaskSpec {
             tag: 1, cores: 1, time_request: SEC, time_limit: 100 * SEC,
         });
-        let acts = core.on_alloc_up(0, 3600 * SEC, 16);
+        let mut acts = Vec::new();
+        let wid = core
+            .on_alloc_up_into(0, 3600 * SEC, 16, &mut acts)
+            .expect("worker admitted");
         // Fire the dispatch timer.
         let mut started = false;
         for a in acts {
@@ -747,7 +754,6 @@ mod tests {
             }
         }
         assert!(started);
-        let wid = 1;
         core.on_worker_lost(5 * SEC, wid);
         assert_eq!(core.pending_tasks(), 1, "running task requeued");
         let _ = id;

@@ -105,9 +105,7 @@ impl EdfCore {
             }
             let host = self
                 .table
-                .workers_map()
-                .keys()
-                .copied()
+                .worker_ids()
                 .find(|&wid| self.table.can_start(t, id, wid));
             let Some(wid) = host else { break };
             self.ready.pop();
@@ -136,9 +134,14 @@ impl TaskCore for EdfCore {
         time_limit: Micros,
         cores_per_worker: u32,
         out: &mut Vec<HqAction>,
-    ) {
-        let _ = self.table.admit_workers(t, time_limit, cores_per_worker);
+    ) -> Option<WorkerId> {
+        let first = self
+            .table
+            .admit_workers(t, time_limit, cores_per_worker)
+            .first()
+            .copied();
         self.pump(t, out);
+        first
     }
 
     fn on_worker_lost_into(
@@ -287,16 +290,17 @@ mod tests {
         let mut core = EdfCore::new(cfg());
         let mut acts = Vec::new();
         let limits = [500 * SEC, 40 * SEC, 900 * SEC, 100 * SEC, 700 * SEC];
-        for (i, &l) in limits.iter().enumerate() {
-            core.submit_task_into(0, spec(i as u64, l), &mut acts);
-        }
+        let ids: Vec<TaskId> = limits
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| core.submit_task_into(0, spec(i as u64, l), &mut acts))
+            .collect();
         acts.clear();
-        core.on_alloc_up_into(SEC, 3600 * SEC, 16, &mut acts);
+        let _ = core.on_alloc_up_into(SEC, 3600 * SEC, 16, &mut acts);
         let starts = settle(&mut core, acts, 2 * SEC);
         assert_eq!(starts.len(), 5);
-        // All submitted at t=0 ⇒ deadline order == limit order.  Task
-        // ids are 1-based in submission order.
-        assert_eq!(starts, vec![2, 4, 1, 5, 3],
+        // All submitted at t=0 ⇒ deadline order == limit order.
+        assert_eq!(starts, vec![ids[1], ids[3], ids[0], ids[4], ids[2]],
                    "EDF must pop in ascending deadline order");
         assert_eq!(core.retired_count(), 5);
         assert_eq!(core.resident_tasks(), 0);
@@ -309,20 +313,20 @@ mod tests {
         // All queued before capacity.  Same limit (deadline); task 2
         // has the larger time_request ⇒ less laxity ⇒ must go first
         // despite the higher id.
-        core.submit_task_into(0, TaskSpec {
+        let t1 = core.submit_task_into(0, TaskSpec {
             tag: 1, cores: 16, time_request: SEC, time_limit: 100 * SEC,
         }, &mut acts);
-        core.submit_task_into(0, TaskSpec {
+        let t2 = core.submit_task_into(0, TaskSpec {
             tag: 2, cores: 16, time_request: 50 * SEC,
             time_limit: 100 * SEC,
         }, &mut acts);
-        core.submit_task_into(0, TaskSpec {
+        let t3 = core.submit_task_into(0, TaskSpec {
             tag: 3, cores: 16, time_request: SEC, time_limit: 100 * SEC,
         }, &mut acts);
         acts.clear();
-        core.on_alloc_up_into(SEC, 3600 * SEC, 16, &mut acts);
+        let _ = core.on_alloc_up_into(SEC, 3600 * SEC, 16, &mut acts);
         let starts = settle(&mut core, acts, SEC);
-        assert_eq!(starts, vec![2, 1, 3],
+        assert_eq!(starts, vec![t2, t1, t3],
                    "ties: least laxity first, then lowest id");
     }
 
@@ -332,7 +336,7 @@ mod tests {
         // 1-core task must NOT start around it while the head waits.
         let mut core = EdfCore::new(cfg());
         let mut acts = Vec::new();
-        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
+        let _ = core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
         // Occupy 8 cores.
         core.submit_task_into(0, TaskSpec {
             tag: 0, cores: 8, time_request: SEC, time_limit: 10 * SEC,
@@ -361,23 +365,23 @@ mod tests {
             ..cfg()
         });
         let mut acts = Vec::new();
-        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
-        for i in 0..4 {
-            core.submit_task_into(0, spec(i, (100 + i) * SEC), &mut acts);
-        }
+        let w1 = core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts).unwrap();
+        let ids: Vec<TaskId> = (0..4)
+            .map(|i| core.submit_task_into(0, spec(i, (100 + i) * SEC), &mut acts))
+            .collect();
         assert_eq!(core.resident_tasks(), 4);
         acts.clear();
-        core.on_worker_lost_into(SEC, 1, &mut acts);
+        core.on_worker_lost_into(SEC, w1, &mut acts);
         assert_eq!(core.pending_tasks(), 4, "in-flight work requeued");
         assert!(acts.iter().any(|a| matches!(
             a,
             HqAction::SubmitAllocation { .. }
         )));
         acts.clear();
-        core.on_alloc_up_into(2 * SEC, 3600 * SEC, 16, &mut acts);
+        let _ = core.on_alloc_up_into(2 * SEC, 3600 * SEC, 16, &mut acts);
         let starts = settle(&mut core, acts, SEC);
         // Original deadlines survive the requeue: EDF order unchanged.
-        assert_eq!(starts, vec![1, 2, 3, 4]);
+        assert_eq!(starts, ids);
         assert_eq!(core.retired_count(), 4);
         assert_eq!(core.resident_tasks(), 0);
     }
@@ -390,34 +394,34 @@ mod tests {
             ..cfg()
         });
         let mut acts = Vec::new();
-        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
-        core.submit_task_into(0, spec(1, 100 * SEC), &mut acts);
+        let w1 = core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts).unwrap();
+        let id = core.submit_task_into(0, spec(1, 100 * SEC), &mut acts);
         // First dispatch: Running at 1 ms, Limit armed for ~100 s.
         acts.clear();
-        core.on_timer_into(1 * MS, HqTimer::Dispatched(1), &mut acts);
+        core.on_timer_into(1 * MS, HqTimer::Dispatched(id), &mut acts);
         assert!(acts.iter().any(|a| matches!(
             a,
-            HqAction::StartTask { task: 1, .. }
+            HqAction::StartTask { task, .. } if *task == id
         )));
         // Worker dies mid-run; the task requeues and re-dispatches.
         acts.clear();
-        core.on_worker_lost_into(10 * SEC, 1, &mut acts);
-        core.on_alloc_up_into(20 * SEC, 3600 * SEC, 16, &mut acts);
+        core.on_worker_lost_into(10 * SEC, w1, &mut acts);
+        let _ = core.on_alloc_up_into(20 * SEC, 3600 * SEC, 16, &mut acts);
         acts.clear();
-        core.on_timer_into(20 * SEC + MS, HqTimer::Dispatched(1),
+        core.on_timer_into(20 * SEC + MS, HqTimer::Dispatched(id),
                            &mut acts);
         assert!(acts.iter().any(|a| matches!(
             a,
-            HqAction::StartTask { task: 1, .. }
+            HqAction::StartTask { task, .. } if *task == id
         )));
         // The FIRST run's limit timer fires: it must not kill the rerun
         // (which has its own limit armed for start2 + 100 s).
         acts.clear();
-        core.on_timer_into(100 * SEC + MS, HqTimer::Limit(1), &mut acts);
+        core.on_timer_into(100 * SEC + MS, HqTimer::Limit(id), &mut acts);
         assert!(acts.is_empty(), "stale limit must be ignored: {acts:?}");
         // The rerun completes normally, untruncated.
         acts.clear();
-        core.on_task_done_into(110 * SEC, 1, &mut acts);
+        core.on_task_done_into(110 * SEC, id, &mut acts);
         let rec = acts
             .iter()
             .find_map(|a| match a {
@@ -434,7 +438,7 @@ mod tests {
     fn time_limit_kills_runaway() {
         let mut core = EdfCore::new(cfg());
         let mut acts = Vec::new();
-        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
+        let _ = core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
         core.submit_task_into(0, spec(9, 5 * SEC), &mut acts);
         // Run the dispatch timer, then let the limit fire (no Done).
         use crate::clock::Des;
@@ -477,9 +481,9 @@ mod tests {
         assert_eq!(allocs, 2, "backlog=2 caps queued allocs");
         assert_eq!(core.allocs_waiting(), 2);
         let mut out = Vec::new();
-        core.on_alloc_up_into(10, 3600 * SEC, 16, &mut out);
-        core.on_alloc_up_into(11, 3600 * SEC, 16, &mut out);
-        core.on_alloc_up_into(12, 3600 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(10, 3600 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(11, 3600 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(12, 3600 * SEC, 16, &mut out);
         assert!(core.live_workers() <= 2);
     }
 
@@ -494,8 +498,8 @@ mod tests {
         for i in 0..4u64 {
             core.submit_task_into(i, spec(i, 100 * SEC), &mut out);
         }
-        core.on_alloc_up_into(0, 10 * SEC, 16, &mut out);
-        core.on_alloc_up_into(0, 50 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(0, 10 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(0, 50 * SEC, 16, &mut out);
         assert_eq!(core.live_workers(), 2);
         core.expire_workers_into(5 * SEC, &mut out);
         assert_eq!(core.live_workers(), 2);
@@ -509,7 +513,7 @@ mod tests {
     fn time_request_gates_dispatch() {
         let mut core = EdfCore::new(cfg());
         let mut out = Vec::new();
-        core.on_alloc_up_into(0, 10 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(0, 10 * SEC, 16, &mut out);
         core.submit_task_into(0, TaskSpec {
             tag: 1, cores: 1, time_request: 3600 * SEC,
             time_limit: 2 * 3600 * SEC,

@@ -40,12 +40,13 @@
 //! a started gang adds O(g log w) reservation work; completion frees
 //! O(g) members.  See PERF.md.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::clock::Micros;
 use crate::hqlite::{AutoAllocConfig, HqAction, HqTimer, TaskCore, TaskId,
                     TaskSpec, WorkerId};
-use crate::sched::table::{FailVerdict, TaskState, TaskTable, TimerVerdict};
+use crate::sched::table::{slot_of, FailVerdict, TaskState, TaskTable,
+                          TimerVerdict};
 
 /// The moldable gang scheduler.
 pub struct GangCore {
@@ -54,9 +55,12 @@ pub struct GangCore {
     /// Strict FCFS frontier.  May lazily contain ids of tasks evicted
     /// while queued; dropped when next at the head.
     queue: VecDeque<TaskId>,
-    /// Per-task moldable width `(min, max)`; entries live as long as the
-    /// task does (a Cooling task keeps its width for the retry).
-    bounds: HashMap<TaskId, (u32, u32)>,
+    /// Per-task moldable width `(min, max)`, indexed by the task id's
+    /// slab *slot* (see [`slot_of`]).  A slot is only re-read after the
+    /// table re-admits into it, which overwrites the entry first, so no
+    /// removal bookkeeping is needed — Cooling tasks keep their width
+    /// for the retry for free.
+    bounds: Vec<(u32, u32)>,
     /// Width assigned to tasks submitted through the width-less
     /// [`TaskCore::submit_task_into`] seam (stack/balancer drivers).
     default_bounds: (u32, u32),
@@ -71,7 +75,7 @@ impl GangCore {
         GangCore {
             table: TaskTable::new(cfg),
             queue: VecDeque::new(),
-            bounds: HashMap::new(),
+            bounds: Vec::new(),
             default_bounds: (1, 1),
             members: Vec::new(),
         }
@@ -103,7 +107,11 @@ impl GangCore {
         let min = min.max(1);
         let max = max.max(min);
         let id = self.table.admit(t, spec);
-        self.bounds.insert(id, (min, max));
+        let slot = slot_of(id);
+        if slot >= self.bounds.len() {
+            self.bounds.resize(slot + 1, self.default_bounds);
+        }
+        self.bounds[slot] = (min, max);
         self.queue.push_back(id);
         self.pump(t, out);
         id
@@ -147,16 +155,15 @@ impl GangCore {
             if !self.table.is_pending(front) {
                 // Stale entry: evicted while queued (live-plane cancel).
                 self.queue.pop_front();
-                self.bounds.remove(&front);
                 continue;
             }
             let (min, max) = self
                 .bounds
-                .get(&front)
+                .get(slot_of(front))
                 .copied()
                 .unwrap_or(self.default_bounds);
             self.members.clear();
-            for &wid in self.table.workers_map().keys() {
+            for wid in self.table.worker_ids() {
                 if self.members.len() as u32 >= max {
                     break;
                 }
@@ -178,11 +185,6 @@ impl GangCore {
         }
         self.table.autoalloc_into(out);
     }
-
-    /// Drop the width entry of an evicted task.
-    fn forget(&mut self, id: TaskId) {
-        self.bounds.remove(&id);
-    }
 }
 
 impl TaskCore for GangCore {
@@ -202,9 +204,14 @@ impl TaskCore for GangCore {
         time_limit: Micros,
         cores_per_worker: u32,
         out: &mut Vec<HqAction>,
-    ) {
-        let _ = self.table.admit_workers(t, time_limit, cores_per_worker);
+    ) -> Option<WorkerId> {
+        let first = self
+            .table
+            .admit_workers(t, time_limit, cores_per_worker)
+            .first()
+            .copied();
         self.pump(t, out);
+        first
     }
 
     fn on_worker_lost_into(
@@ -227,7 +234,6 @@ impl TaskCore for GangCore {
         // A stale duplicate completion (the driver's original done-timer
         // firing after a requeue) misses the table: no pump.
         if self.table.complete(t, id, false, out) {
-            self.forget(id);
             self.pump(t, out);
         }
     }
@@ -236,12 +242,7 @@ impl TaskCore for GangCore {
                      out: &mut Vec<HqAction>) {
         match self.table.timer(t, timer, out) {
             TimerVerdict::Ignored | TimerVerdict::Started => {}
-            TimerVerdict::Killed => {
-                if let HqTimer::Limit(id) = timer {
-                    self.forget(id);
-                }
-                self.pump(t, out);
-            }
+            TimerVerdict::Killed => self.pump(t, out),
             TimerVerdict::Requeue(id) => {
                 self.queue.push_back(id);
                 self.pump(t, out);
@@ -258,12 +259,8 @@ impl TaskCore for GangCore {
     ) {
         match self.table.fail(t, id, retry_in, out) {
             FailVerdict::Ignored => {}
-            FailVerdict::Killed => {
-                self.forget(id);
-                self.pump(t, out);
-            }
-            // Cooling keeps its width for the retry.
-            FailVerdict::Cooling => self.pump(t, out),
+            // Cooling keeps its width for the retry (slot entry stays).
+            FailVerdict::Killed | FailVerdict::Cooling => self.pump(t, out),
         }
     }
 
@@ -342,17 +339,21 @@ mod tests {
     fn moldable_gang_takes_every_eligible_worker_up_to_max() {
         let mut core = GangCore::new(cfg(4));
         let mut out = Vec::new();
+        let mut ws = Vec::new();
         for _ in 0..3 {
-            core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
+            let w = core
+                .on_alloc_up_into(0, 3600 * SEC, 16, &mut out)
+                .expect("worker admitted");
+            ws.push(w);
         }
         let id = core.submit_gang_task_into(0, spec(1, 8), 2, 4, &mut out);
         // 3 workers live, max 4: the gang molds to width 3.
-        assert_eq!(core.gang_of(id), vec![1, 2, 3]);
+        assert_eq!(core.gang_of(id), ws);
         assert!(core.no_partial_gangs());
         // The StartGang action lists every member once dispatched.
         out.clear();
         core.on_timer_into(1 * MS, HqTimer::Dispatched(id), &mut out);
-        assert_eq!(gang_starts(&out), vec![(id, vec![1, 2, 3])]);
+        assert_eq!(gang_starts(&out), vec![(id, ws.clone())]);
         // Completion releases all three members' slots.
         out.clear();
         core.on_task_done_into(SEC, id, &mut out);
@@ -365,7 +366,9 @@ mod tests {
     fn frontier_holds_until_min_workers_are_eligible() {
         let mut core = GangCore::new(cfg(4));
         let mut out = Vec::new();
-        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
+        let w1 = core
+            .on_alloc_up_into(0, 3600 * SEC, 16, &mut out)
+            .expect("worker admitted");
         let id = core.submit_gang_task_into(0, spec(1, 16), 2, 2, &mut out);
         // Only one worker up: the gang must hold, all slots free.
         assert!(core.gang_of(id).is_empty());
@@ -376,8 +379,10 @@ mod tests {
         assert!(core.gang_of(solo).is_empty(), "no backfill past the gang");
         // Second worker arrives: the head assembles atomically.
         out.clear();
-        core.on_alloc_up_into(2, 3600 * SEC, 16, &mut out);
-        assert_eq!(core.gang_of(id), vec![1, 2]);
+        let w2 = core
+            .on_alloc_up_into(2, 3600 * SEC, 16, &mut out)
+            .expect("worker admitted");
+        assert_eq!(core.gang_of(id), vec![w1, w2]);
         // The 16-core gang filled both workers, so the solo task still
         // waits — it was held by FCFS before, by capacity now.
         assert!(core.gang_of(solo).is_empty());
@@ -390,14 +395,17 @@ mod tests {
         // every reserved slot must come back, no partial gang remains.
         let mut core = GangCore::new(cfg(4));
         let mut out = Vec::new();
-        for _ in 0..2 {
-            core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
-        }
+        let w1 = core
+            .on_alloc_up_into(0, 3600 * SEC, 16, &mut out)
+            .expect("worker admitted");
+        let w2 = core
+            .on_alloc_up_into(0, 3600 * SEC, 16, &mut out)
+            .expect("worker admitted");
         let id = core.submit_gang_task_into(0, spec(1, 16), 2, 2, &mut out);
-        assert_eq!(core.gang_of(id), vec![1, 2]);
-        // Member 2 dies before the Dispatched timer fires.
+        assert_eq!(core.gang_of(id), vec![w1, w2]);
+        // Member w2 dies before the Dispatched timer fires.
         out.clear();
-        core.on_worker_lost_into(MS / 2, 2, &mut out);
+        core.on_worker_lost_into(MS / 2, w2, &mut out);
         assert!(out.iter().any(|a| matches!(
             a,
             HqAction::Requeued { task } if *task == id
@@ -405,7 +413,7 @@ mod tests {
         // Survivor's slots are fully released; the task is whole-pending.
         assert!(core.gang_of(id).is_empty());
         assert!(core.no_partial_gangs());
-        assert_eq!(core.table.worker(1).unwrap().cores_free, 16);
+        assert_eq!(core.table.worker(w1).unwrap().cores_free, 16);
         // The stale Dispatched timer must not start a ghost gang.
         out.clear();
         core.on_timer_into(1 * MS, HqTimer::Dispatched(id), &mut out);
@@ -413,8 +421,10 @@ mod tests {
         assert!(core.no_partial_gangs());
         // A replacement worker restores width 2: the gang reassembles.
         out.clear();
-        core.on_alloc_up_into(SEC, 3600 * SEC, 16, &mut out);
-        assert_eq!(core.gang_of(id), vec![1, 3]);
+        let w3 = core
+            .on_alloc_up_into(SEC, 3600 * SEC, 16, &mut out)
+            .expect("worker admitted");
+        assert_eq!(core.gang_of(id), vec![w1, w3]);
         assert!(core.no_partial_gangs());
     }
 
@@ -422,9 +432,12 @@ mod tests {
     fn transient_failure_parks_the_whole_gang_and_retries() {
         let mut core = GangCore::new(cfg(4));
         let mut out = Vec::new();
-        for _ in 0..2 {
-            core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
-        }
+        let w1 = core
+            .on_alloc_up_into(0, 3600 * SEC, 16, &mut out)
+            .expect("worker admitted");
+        let w2 = core
+            .on_alloc_up_into(0, 3600 * SEC, 16, &mut out)
+            .expect("worker admitted");
         let id = core.submit_gang_task_into(0, spec(1, 16), 2, 2, &mut out);
         core.on_timer_into(1 * MS, HqTimer::Dispatched(id), &mut out);
         // Mid-run transient failure: both members' cores come back.
@@ -432,12 +445,12 @@ mod tests {
         core.on_task_failed_into(SEC, id, Some(5 * SEC), &mut out);
         assert!(core.gang_of(id).is_empty());
         assert!(core.no_partial_gangs());
-        assert_eq!(core.table.worker(1).unwrap().cores_free, 16);
-        assert_eq!(core.table.worker(2).unwrap().cores_free, 16);
+        assert_eq!(core.table.worker(w1).unwrap().cores_free, 16);
+        assert_eq!(core.table.worker(w2).unwrap().cores_free, 16);
         // Retry fires: the gang reassembles at full width.
         out.clear();
         core.on_timer_into(6 * SEC, HqTimer::Retry(id), &mut out);
-        assert_eq!(core.gang_of(id), vec![1, 2]);
+        assert_eq!(core.gang_of(id), vec![w1, w2]);
         assert!(core.no_partial_gangs());
     }
 
@@ -447,21 +460,23 @@ mod tests {
         // single-worker dispatch, StartTask (not StartGang) actions.
         let mut core = GangCore::new(cfg(2)).with_gang(1, 1);
         let mut out = Vec::new();
-        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
+        let w1 = core
+            .on_alloc_up_into(0, 3600 * SEC, 16, &mut out)
+            .expect("worker admitted");
         let a = core.submit_task_into(0, spec(1, 16), &mut out);
         let b = core.submit_task_into(0, spec(2, 16), &mut out);
-        assert_eq!(core.gang_of(a), vec![1]);
+        assert_eq!(core.gang_of(a), vec![w1]);
         assert!(core.gang_of(b).is_empty());
         out.clear();
         core.on_timer_into(1 * MS, HqTimer::Dispatched(a), &mut out);
         assert!(out.iter().any(|x| matches!(
             x,
-            HqAction::StartTask { task, worker: 1 } if *task == a
+            HqAction::StartTask { task, worker } if *task == a && *worker == w1
         )), "single-member gangs start as plain StartTask: {out:?}");
         // a completes; b follows in FCFS order.
         out.clear();
         core.on_task_done_into(SEC, a, &mut out);
-        assert_eq!(core.gang_of(b), vec![1]);
+        assert_eq!(core.gang_of(b), vec![w1]);
         assert_eq!(core.retired_count(), 1);
     }
 
@@ -471,7 +486,7 @@ mod tests {
         let mut out = Vec::new();
         // Width-3 gang with no workers: autoalloc must ask for capacity
         // (backlog=2 caps the queued allocations).
-        core.submit_gang_task_into(0, spec(1, 16), 3, 3, &mut out);
+        let id = core.submit_gang_task_into(0, spec(1, 16), 3, 3, &mut out);
         let allocs = out.iter().filter(|a| matches!(
             a,
             HqAction::SubmitAllocation { .. }
@@ -479,11 +494,12 @@ mod tests {
         assert_eq!(allocs, 2);
         // Workers arrive one by one; the gang assembles only at three.
         out.clear();
-        core.on_alloc_up_into(1, 3600 * SEC, 16, &mut out);
-        core.on_alloc_up_into(2, 3600 * SEC, 16, &mut out);
+        let mut ws = Vec::new();
+        ws.push(core.on_alloc_up_into(1, 3600 * SEC, 16, &mut out).unwrap());
+        ws.push(core.on_alloc_up_into(2, 3600 * SEC, 16, &mut out).unwrap());
         assert_eq!(core.pending_tasks(), 1, "held below min width");
-        core.on_alloc_up_into(3, 3600 * SEC, 16, &mut out);
-        assert_eq!(core.gang_of(1), vec![1, 2, 3]);
+        ws.push(core.on_alloc_up_into(3, 3600 * SEC, 16, &mut out).unwrap());
+        assert_eq!(core.gang_of(id), ws);
         assert!(core.no_partial_gangs());
     }
 }

@@ -81,7 +81,7 @@ pub use realtime::{LivePolicy, LiveSched, RtDriver};
 pub use slurm::SlurmSched;
 pub use stack::{EdfSched, GangSched, HqSched, MetaStack, StackTimer,
                 WorkStealSched};
-pub use table::TaskTable;
+pub use table::{slot_of, Slab, TaskTable};
 pub use worksteal::WorkStealCore;
 
 /// The workers a unit of work occupies, in the id space the driver used
@@ -90,54 +90,75 @@ pub use worksteal::WorkStealCore;
 /// single-worker cores; the full gang, ascending, for
 /// [`GangCore`] — the first member is the *lead* (the server the
 /// real-time driver leases).
+/// The single-worker case is inline (no heap allocation): million-task
+/// streams emit one `Start` per attempt, and boxing a one-element `Vec`
+/// for each was the kernel's last per-event allocation.  Only true gangs
+/// (> 1 member) carry a `Vec`.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
-pub struct WorkerSet(Vec<u64>);
+pub enum WorkerSet {
+    /// No placement information.
+    #[default]
+    Empty,
+    /// A single-worker placement, stored inline.
+    One(u64),
+    /// A gang placement (ascending; the first member is the lead).
+    Many(Vec<u64>),
+}
 
 impl WorkerSet {
     /// No placement information.
     pub fn empty() -> Self {
-        WorkerSet(Vec::new())
+        WorkerSet::Empty
     }
 
     /// A single-worker placement.
     pub fn one(id: u64) -> Self {
-        WorkerSet(vec![id])
+        WorkerSet::One(id)
     }
 
     /// A gang placement (callers pass members ascending; the first is
-    /// the lead).
-    pub fn many(ids: Vec<u64>) -> Self {
-        WorkerSet(ids)
+    /// the lead).  Degenerate sizes normalise to `Empty`/`One` so
+    /// equality never depends on which constructor built the set.
+    pub fn many(mut ids: Vec<u64>) -> Self {
+        match ids.len() {
+            0 => WorkerSet::Empty,
+            1 => WorkerSet::One(ids.pop().expect("len checked")),
+            _ => WorkerSet::Many(ids),
+        }
     }
 
     /// Adapter for the previous `Option<u64>` placement shape.
     pub fn from_opt(id: Option<u64>) -> Self {
         match id {
-            Some(id) => WorkerSet::one(id),
-            None => WorkerSet::empty(),
+            Some(id) => WorkerSet::One(id),
+            None => WorkerSet::Empty,
         }
     }
 
     /// The lead worker (None when the set is empty).
     pub fn primary(&self) -> Option<u64> {
-        self.0.first().copied()
+        self.ids().first().copied()
     }
 
     /// All members, ascending.
     pub fn ids(&self) -> &[u64] {
-        &self.0
+        match self {
+            WorkerSet::Empty => &[],
+            WorkerSet::One(id) => std::slice::from_ref(id),
+            WorkerSet::Many(ids) => ids,
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.0.len()
+        self.ids().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.0.is_empty()
+        matches!(self, WorkerSet::Empty)
     }
 
     pub fn contains(&self, id: u64) -> bool {
-        self.0.contains(&id)
+        self.ids().contains(&id)
     }
 }
 

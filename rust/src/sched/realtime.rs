@@ -155,9 +155,10 @@ pub fn live_core(policy: LivePolicy) -> LiveCore {
 ///
 /// Contract: the meta core must be built with [`live_autoalloc`]
 /// geometry — `workers_per_alloc == 1` and an unreachable worker cap —
-/// because the adapter mirrors the core's sequential internal worker ids
-/// (1, 2, 3, …) to translate the caller's `WorkerUp`/`WorkerLost` ids
-/// and the worker named in each `Start` effect.
+/// so each `WorkerUp` admits exactly one worker, whose generational
+/// slab id [`TaskCore::on_alloc_up_into`] returns; the adapter maps it
+/// to the caller's id to translate `WorkerUp`/`WorkerLost` ids and the
+/// worker named in each `Start` effect.
 pub struct LiveSched<M: TaskCore> {
     meta: M,
     label: &'static str,
@@ -166,8 +167,6 @@ pub struct LiveSched<M: TaskCore> {
     ext2int: HashMap<u64, WorkerId>,
     /// Core-internal worker id -> caller id (for `Start::worker`).
     int2ext: HashMap<WorkerId, u64>,
-    /// Mirror of the core's sequential worker-id counter.
-    next_int: WorkerId,
 }
 
 impl<M: TaskCore> LiveSched<M> {
@@ -178,7 +177,6 @@ impl<M: TaskCore> LiveSched<M> {
             acts: Vec::new(),
             ext2int: HashMap::new(),
             int2ext: HashMap::new(),
-            next_int: 1,
         }
     }
 
@@ -338,15 +336,8 @@ impl<M: TaskCore> SchedulerCore for LiveSched<M> {
     ) {
         match change {
             CapacityChange::WorkerUp { id, cores } => {
-                // Map BEFORE pumping the core: the new worker may take
-                // work in this very pass, and those `Start` effects must
-                // already carry the caller's id.
-                let int = self.next_int;
-                self.next_int += 1;
-                self.ext2int.insert(id, int);
-                self.int2ext.insert(int, id);
                 let before = self.meta.live_workers();
-                self.meta.on_alloc_up_into(
+                let int = self.meta.on_alloc_up_into(
                     t,
                     LIVE_WORKER_LIFE,
                     cores,
@@ -357,6 +348,12 @@ impl<M: TaskCore> SchedulerCore for LiveSched<M> {
                     before + 1,
                     "live core must admit exactly one worker per WorkerUp"
                 );
+                // Map before flushing: any `Start` effect this pass
+                // buffered is translated below, after the mapping lands.
+                if let Some(int) = int {
+                    self.ext2int.insert(id, int);
+                    self.int2ext.insert(int, id);
+                }
             }
             CapacityChange::WorkerLost(id) => {
                 if let Some(int) = self.ext2int.remove(&id) {

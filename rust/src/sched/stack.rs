@@ -136,7 +136,7 @@ impl<M: TaskCore> MetaStack<M> {
                             // Allocation is up: a worker registers for
                             // the remaining allocation lifetime; the
                             // allocation job ends at its time limit.
-                            self.meta.on_alloc_up_into(
+                            let _ = self.meta.on_alloc_up_into(
                                 t,
                                 self.scen.hq_alloc_time,
                                 self.scen.cpus,

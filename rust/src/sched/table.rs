@@ -11,9 +11,33 @@
 //! *placement policy*, and calls back into the table for every state
 //! transition.
 //!
+//! # Slab-arena storage
+//!
+//! Tasks and workers live in dense, Vec-backed **generational slabs**
+//! ([`Slab`]).  An id packs a slot index in its low [`SLOT_BITS`] bits
+//! and a monotone sequence number above them:
+//!
 //! ```text
-//!   HqCore ─┐                      ┌─ tasks: id -> TableTask
-//!   WorkStealCore ─┤               │  workers: id -> TableWorker
+//!   id = (seq << 24) | slot          seq starts at 1, never reused
+//!
+//!   slots: [ (key, Some(T)) | (0, None) | (key, Some(T)) | ... ]
+//!   free:  [ 1, ... ]                 <- evicted slots, LIFO reuse
+//! ```
+//!
+//! * Lookup is one bounds check + one key compare — O(1), no hashing.
+//! * Eviction pushes the slot onto the free list; the next admission
+//!   reuses it under a **new** sequence number, so a stale id (old
+//!   generation) can never resurrect: its key no longer matches and
+//!   every table operation rejects it (`tests/core_fuzz.rs` pins this
+//!   property on all five cores).
+//! * Because the sequence number occupies the *high* bits, ascending id
+//!   order is exactly admission order — the invariant the EDF tie-break,
+//!   the lowest-id-first placement scans and the worker-lost requeue
+//!   order all rely on.
+//!
+//! ```text
+//!   HqCore ─┐                      ┌─ tasks: Slab<TableTask>
+//!   WorkStealCore ─┤               │  workers: Slab<TableWorker>
 //!   EdfCore ─┼──> TaskTable ──────>│  expiry min-heap, autoalloc
 //!   GangCore ─┘   (lifecycle)      │  Dispatched/Limit/Retry timers
 //!                                  └─ completion records, Requeued
@@ -26,6 +50,13 @@
 //! [`reserve`](TaskTable::reserve) call, and every release path
 //! (completion, failure, worker loss) frees *all* members — the
 //! all-slots-or-none invariant the chaos suite pins.
+//!
+//! Steady-state operations are allocation-free: the member vectors of
+//! evicted tasks are recycled through a bounded pool, worker `running`
+//! sets are sorted vectors reusing their capacity, and `admit_workers`
+//! returns a scratch slice instead of materialising a range.  The
+//! counting-allocator rows in `BENCH_scale.json` (`allocs_per_task`)
+//! assert the drain loop stays ≤ 2 allocations per task.
 //!
 //! Behavioral-compatibility notes (the refactor is pinned record-for-
 //! record by `tests/scheduler_props.rs` and `tests/campaign_equiv.rs`):
@@ -43,14 +74,118 @@
 //!   every non-degenerate input.
 
 use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, BTreeSet, HashMap};
-use std::ops::Range;
+use std::collections::{BinaryHeap, BTreeSet};
 
 use crate::clock::Micros;
 use crate::hqlite::core::drain_due_workers;
 use crate::hqlite::{AutoAllocConfig, HqAction, HqTimer, TaskId, TaskSpec,
                     WorkerId};
 use crate::metrics::JobRecord;
+
+/// Bits of an id reserved for the slab slot index (16M concurrent
+/// residents per slab; the sequence number above has 40 bits — enough
+/// for 10¹² admissions).
+pub const SLOT_BITS: u32 = 24;
+const SLOT_MASK: u64 = (1 << SLOT_BITS) - 1;
+
+/// The slot index an id decodes to.  Cores use this to keep per-task
+/// side tables as dense slot-indexed vectors instead of maps (a reused
+/// slot is always re-initialised at admission before it can be read).
+#[inline]
+pub fn slot_of(id: u64) -> usize {
+    (id & SLOT_MASK) as usize
+}
+
+/// A dense generational arena.  See the module docs for the id layout.
+#[derive(Clone, Debug)]
+pub struct Slab<T> {
+    /// `(key, value)` per slot; `key == 0` marks a vacant slot (sequence
+    /// numbers start at 1, so 0 is never a live id).
+    slots: Vec<(u64, Option<T>)>,
+    /// Vacant slot indices, reused LIFO.
+    free: Vec<u32>,
+    /// Next sequence number (generation); monotone, never reused.
+    next_seq: u64,
+    len: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Slab { slots: Vec::new(), free: Vec::new(), next_seq: 1, len: 0 }
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Self {
+        Slab::default()
+    }
+
+    /// Insert a value, returning its generational id.
+    pub fn insert(&mut self, value: T) -> u64 {
+        let slot = match self.free.pop() {
+            Some(s) => s as usize,
+            None => {
+                self.slots.push((0, None));
+                self.slots.len() - 1
+            }
+        };
+        debug_assert!(slot as u64 <= SLOT_MASK, "slab slot space exhausted");
+        let id = (self.next_seq << SLOT_BITS) | slot as u64;
+        self.next_seq += 1;
+        self.slots[slot] = (id, Some(value));
+        self.len += 1;
+        id
+    }
+
+    /// O(1) lookup; stale ids (old generation of a reused slot) miss.
+    pub fn get(&self, id: u64) -> Option<&T> {
+        match self.slots.get(slot_of(id)) {
+            Some((key, Some(v))) if *key == id => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut T> {
+        match self.slots.get_mut(slot_of(id)) {
+            Some((key, Some(v))) if *key == id => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Evict; the slot becomes reusable under the *next* generation.
+    pub fn remove(&mut self, id: u64) -> Option<T> {
+        let slot = slot_of(id);
+        match self.slots.get_mut(slot) {
+            Some(entry) if entry.0 == id && entry.1.is_some() => {
+                entry.0 = 0;
+                let v = entry.1.take();
+                self.free.push(slot as u32);
+                self.len -= 1;
+                v
+            }
+            _ => None,
+        }
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.get(id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Every resident entry, in *slot* order (not id order).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &T)> {
+        self.slots
+            .iter()
+            .filter_map(|(key, v)| v.as_ref().map(|v| (*key, v)))
+    }
+}
 
 /// Task lifecycle states, shared by every core riding the table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -79,14 +214,15 @@ pub struct TableTask {
     pub start_t: Micros,
     /// Workers whose cores this task currently occupies: empty while
     /// Pending/Cooling, one entry for single-worker cores, the full gang
-    /// for moldable tasks.
+    /// for moldable tasks.  The backing vector is recycled through the
+    /// table's pool when the task is evicted.
     pub workers: Vec<WorkerId>,
     /// Absolute deadline, `submit_t + time_limit`, fixed at submission
     /// (requeues keep it — what makes EDF starvation-free).
     pub deadline: Micros,
 }
 
-/// One live worker (lost/expired workers leave the map).
+/// One live worker (lost/expired workers leave the slab).
 #[derive(Clone, Debug)]
 pub struct TableWorker {
     /// Cores this worker was provisioned with.
@@ -95,8 +231,28 @@ pub struct TableWorker {
     pub cores_free: u32,
     /// Virtual time at which the surrounding allocation expires.
     pub expires_t: Micros,
-    /// Tasks currently dispatched to / running on this worker.
-    pub running: BTreeSet<TaskId>,
+    /// Tasks currently dispatched to / running on this worker — a sorted
+    /// vector (ascending task id == admission order), so the worker-lost
+    /// requeue order falls out of plain iteration.
+    pub running: Vec<TaskId>,
+}
+
+/// Insert into a sorted id vector (no-op on duplicates).
+fn sorted_insert(v: &mut Vec<u64>, id: u64) {
+    if let Err(i) = v.binary_search(&id) {
+        v.insert(i, id);
+    }
+}
+
+/// Remove from a sorted id vector; true when the id was present.
+fn sorted_remove(v: &mut Vec<u64>, id: u64) -> bool {
+    match v.binary_search(&id) {
+        Ok(i) => {
+            v.remove(i);
+            true
+        }
+        Err(_) => false,
+    }
 }
 
 /// Outcome of [`TaskTable::timer`]; tells the core whether to pump.
@@ -129,21 +285,25 @@ pub enum FailVerdict {
     Cooling,
 }
 
+/// Cap on recycled member vectors kept for reuse.
+const VEC_POOL_CAP: usize = 256;
+
 /// The shared lifecycle engine.  See the module docs for the seam.
 pub struct TaskTable {
     cfg: AutoAllocConfig,
-    /// In-flight tasks only; finished tasks are evicted.
-    tasks: HashMap<TaskId, TableTask>,
-    /// Live workers, id-ordered for deterministic scans.
-    workers: BTreeMap<WorkerId, TableWorker>,
+    /// In-flight tasks only; finished tasks are evicted (slot reused).
+    tasks: Slab<TableTask>,
+    /// Live workers.
+    workers: Slab<TableWorker>,
+    /// Id-ordered index over live workers, for deterministic placement
+    /// scans (the slab itself iterates in slot order).
+    worker_index: BTreeSet<WorkerId>,
     /// (expires_t, worker) min-heap; entries for already-lost workers
     /// are skipped lazily.
     expiry: BinaryHeap<Reverse<(Micros, WorkerId)>>,
     /// Live tasks currently in the Pending state — drives autoalloc.
     pending: usize,
     retired: u64,
-    next_task: TaskId,
-    next_worker: WorkerId,
     next_alloc_tag: u64,
     allocs_in_queue: u32,
     /// EDF semantics: a `Limit` timer kills only if it is the one armed
@@ -153,6 +313,11 @@ pub struct TaskTable {
     /// [`freed`](TaskTable::freed) so cores can re-index availability
     /// without a per-event allocation.
     freed_scratch: Vec<WorkerId>,
+    /// Ids admitted by the last `admit_workers` call (returned as a
+    /// slice — no range arithmetic works on generational ids).
+    admitted_scratch: Vec<WorkerId>,
+    /// Recycled member vectors (capacity-preserving; bounded).
+    vec_pool: Vec<Vec<WorkerId>>,
     /// Stats: dispatches performed (a gang counts once).
     dispatches: u64,
 }
@@ -162,17 +327,18 @@ impl TaskTable {
     pub fn new(cfg: AutoAllocConfig) -> Self {
         TaskTable {
             cfg,
-            tasks: HashMap::new(),
-            workers: BTreeMap::new(),
+            tasks: Slab::new(),
+            workers: Slab::new(),
+            worker_index: BTreeSet::new(),
             expiry: BinaryHeap::new(),
             pending: 0,
             retired: 0,
-            next_task: 1,
-            next_worker: 1,
             next_alloc_tag: 1,
             allocs_in_queue: 0,
             limit_exact: false,
             freed_scratch: Vec::new(),
+            admitted_scratch: Vec::new(),
+            vec_pool: Vec::new(),
             dispatches: 0,
         }
     }
@@ -189,57 +355,52 @@ impl TaskTable {
     // ---- admission ------------------------------------------------------
 
     /// Admit a task as Pending; the caller enqueues the returned id into
-    /// its ready structure.
+    /// its ready structure.  Ids are generational slab keys whose
+    /// ascending order is admission order.
     pub fn admit(&mut self, t: Micros, spec: TaskSpec) -> TaskId {
-        let id = self.next_task;
-        self.next_task += 1;
         let deadline = t.saturating_add(spec.time_limit);
-        self.tasks.insert(
-            id,
-            TableTask {
-                spec,
-                state: TaskState::Pending,
-                submit_t: t,
-                start_t: 0,
-                workers: Vec::new(),
-                deadline,
-            },
-        );
+        let workers = self.vec_pool.pop().unwrap_or_default();
+        let id = self.tasks.insert(TableTask {
+            spec,
+            state: TaskState::Pending,
+            submit_t: t,
+            start_t: 0,
+            workers,
+            deadline,
+        });
         self.pending += 1;
         id
     }
 
     /// A native allocation came up: start `workers_per_alloc` workers
     /// (bounded by `max_worker_count`), each living until the
-    /// allocation's time limit.  Returns the new worker-id range so the
-    /// caller can index them (availability sets, private deques).
+    /// allocation's time limit.  Returns the new worker ids so the
+    /// caller can index them (availability sets, private deques); the
+    /// slice is scratch, valid until the next `admit_workers` call.
     pub fn admit_workers(
         &mut self,
         t: Micros,
         time_limit: Micros,
         cores_per_worker: u32,
-    ) -> Range<WorkerId> {
+    ) -> &[WorkerId] {
         self.allocs_in_queue = self.allocs_in_queue.saturating_sub(1);
-        let first = self.next_worker;
+        self.admitted_scratch.clear();
         for _ in 0..self.cfg.workers_per_alloc {
             if self.workers.len() as u32 >= self.cfg.max_worker_count {
                 break;
             }
-            let wid = self.next_worker;
-            self.next_worker += 1;
             let expires_t = t.saturating_add(time_limit);
-            self.workers.insert(
-                wid,
-                TableWorker {
-                    cores_total: cores_per_worker,
-                    cores_free: cores_per_worker,
-                    expires_t,
-                    running: BTreeSet::new(),
-                },
-            );
+            let wid = self.workers.insert(TableWorker {
+                cores_total: cores_per_worker,
+                cores_free: cores_per_worker,
+                expires_t,
+                running: Vec::new(),
+            });
+            self.worker_index.insert(wid);
             self.expiry.push(Reverse((expires_t, wid)));
+            self.admitted_scratch.push(wid);
         }
-        first..self.next_worker
+        &self.admitted_scratch
     }
 
     /// Submit allocations while there are pending tasks, the backlog
@@ -265,9 +426,9 @@ impl TaskTable {
 
     /// Can `wid` host `id` right now?  Needs `spec.cores` free and an
     /// allocation outliving the task's time request (HQ semantics).
-    /// False for unknown tasks/workers.
+    /// False for unknown (or stale-generation) tasks/workers.
     pub fn can_start(&self, t: Micros, id: TaskId, wid: WorkerId) -> bool {
-        let (Some(task), Some(w)) = (self.tasks.get(&id), self.workers.get(&wid))
+        let (Some(task), Some(w)) = (self.tasks.get(id), self.workers.get(wid))
         else {
             return false;
         };
@@ -288,15 +449,16 @@ impl TaskTable {
         out: &mut Vec<HqAction>,
     ) {
         debug_assert!(!members.is_empty(), "reserve with an empty gang");
-        let task = self.tasks.get_mut(&id).expect("reserve: unknown task");
+        let task = self.tasks.get_mut(id).expect("reserve: unknown task");
         debug_assert_eq!(task.state, TaskState::Pending);
         let need = task.spec.cores;
         task.state = TaskState::Dispatched;
-        task.workers = members.to_vec();
+        task.workers.clear();
+        task.workers.extend_from_slice(members);
         for &wid in members {
-            let w = self.workers.get_mut(&wid).expect("reserve: dead worker");
+            let w = self.workers.get_mut(wid).expect("reserve: dead worker");
             w.cores_free -= need;
-            w.running.insert(id);
+            sorted_insert(&mut w.running, id);
         }
         self.pending -= 1;
         self.dispatches += 1;
@@ -318,9 +480,10 @@ impl TaskTable {
         out: &mut Vec<HqAction>,
     ) -> Vec<TaskId> {
         let mut requeued = Vec::new();
-        if let Some(worker) = self.workers.remove(&wid) {
+        if let Some(worker) = self.workers.remove(wid) {
+            self.worker_index.remove(&wid);
             for id in worker.running {
-                let Some(task) = self.tasks.get_mut(&id) else { continue };
+                let Some(task) = self.tasks.get_mut(id) else { continue };
                 if !matches!(
                     task.state,
                     TaskState::Running | TaskState::Dispatched
@@ -328,16 +491,19 @@ impl TaskTable {
                     continue;
                 }
                 let need = task.spec.cores;
-                for &m in &task.workers {
+                let members = std::mem::take(&mut task.workers);
+                for &m in &members {
                     if m == wid {
                         continue; // the dead worker's slots died with it
                     }
-                    if let Some(w) = self.workers.get_mut(&m) {
-                        if w.running.remove(&id) {
+                    if let Some(w) = self.workers.get_mut(m) {
+                        if sorted_remove(&mut w.running, id) {
                             w.cores_free += need;
                         }
                     }
                 }
+                let task = self.tasks.get_mut(id).expect("task vanished");
+                task.workers = members;
                 task.workers.clear();
                 task.state = TaskState::Pending;
                 self.pending += 1;
@@ -361,7 +527,7 @@ impl TaskTable {
         out: &mut Vec<HqAction>,
     ) -> bool {
         self.freed_scratch.clear();
-        let Some(task) = self.tasks.remove(&id) else { return false };
+        let Some(task) = self.tasks.remove(id) else { return false };
         if task.state == TaskState::Pending {
             // Completed while requeued: its ready-structure entry is now
             // stale and the owning core drops it lazily.
@@ -378,13 +544,18 @@ impl TaskTable {
             cpu: t.saturating_sub(task.start_t),
             truncated,
         };
-        for &m in &task.workers {
-            if let Some(w) = self.workers.get_mut(&m) {
-                if w.running.remove(&id) {
+        let mut members = task.workers;
+        for &m in &members {
+            if let Some(w) = self.workers.get_mut(m) {
+                if sorted_remove(&mut w.running, id) {
                     w.cores_free += task.spec.cores;
                     self.freed_scratch.push(m);
                 }
             }
+        }
+        members.clear();
+        if self.vec_pool.len() < VEC_POOL_CAP {
+            self.vec_pool.push(members);
         }
         out.push(HqAction::TaskCompleted { task: id, record });
         true
@@ -401,7 +572,7 @@ impl TaskTable {
         retry_in: Option<Micros>,
         out: &mut Vec<HqAction>,
     ) -> FailVerdict {
-        let Some(task) = self.tasks.get_mut(&id) else {
+        let Some(task) = self.tasks.get_mut(id) else {
             return FailVerdict::Ignored;
         };
         if !matches!(task.state, TaskState::Dispatched | TaskState::Running) {
@@ -416,15 +587,21 @@ impl TaskTable {
             Some(backoff) => {
                 let need = task.spec.cores;
                 task.state = TaskState::Cooling;
-                let members = std::mem::take(&mut task.workers);
+                let mut members = std::mem::take(&mut task.workers);
                 self.freed_scratch.clear();
                 for &m in &members {
-                    if let Some(w) = self.workers.get_mut(&m) {
-                        if w.running.remove(&id) {
+                    if let Some(w) = self.workers.get_mut(m) {
+                        if sorted_remove(&mut w.running, id) {
                             w.cores_free += need;
                             self.freed_scratch.push(m);
                         }
                     }
+                }
+                // Hand the (cleared) vector back to the task so the
+                // retry's reserve reuses its capacity.
+                members.clear();
+                if let Some(task) = self.tasks.get_mut(id) {
+                    task.workers = members;
                 }
                 out.push(HqAction::Requeued { task: id });
                 out.push(HqAction::Timer(
@@ -446,7 +623,7 @@ impl TaskTable {
     ) -> TimerVerdict {
         match timer {
             HqTimer::Dispatched(id) => {
-                let Some(task) = self.tasks.get_mut(&id) else {
+                let Some(task) = self.tasks.get_mut(id) else {
                     return TimerVerdict::Ignored;
                 };
                 if task.state != TaskState::Dispatched {
@@ -474,7 +651,7 @@ impl TaskTable {
             HqTimer::Limit(id) => {
                 let due = self
                     .tasks
-                    .get(&id)
+                    .get(id)
                     .filter(|task| task.state == TaskState::Running)
                     .map(|task| {
                         task.start_t.saturating_add(task.spec.time_limit)
@@ -492,7 +669,7 @@ impl TaskTable {
                 }
             }
             HqTimer::Retry(id) => {
-                let Some(task) = self.tasks.get_mut(&id) else {
+                let Some(task) = self.tasks.get_mut(id) else {
                     return TimerVerdict::Ignored;
                 };
                 if task.state != TaskState::Cooling {
@@ -509,7 +686,7 @@ impl TaskTable {
     /// core routes each through its worker-lost path.
     pub fn expire_due(&mut self, t: Micros) -> Vec<WorkerId> {
         drain_due_workers(&mut self.expiry, t, |wid| {
-            self.workers.contains_key(&wid)
+            self.workers.contains(wid)
         })
     }
 
@@ -526,36 +703,37 @@ impl TaskTable {
         &self.cfg
     }
 
-    /// The task, if still in flight.
+    /// The task, if still in flight (stale generations miss).
     pub fn task(&self, id: TaskId) -> Option<&TableTask> {
-        self.tasks.get(&id)
+        self.tasks.get(id)
     }
 
-    /// Every resident (in-flight) task, unordered — invariant probes
+    /// Every resident (in-flight) task, slot order — invariant probes
     /// (e.g. [`GangCore::no_partial_gangs`](crate::sched::GangCore::no_partial_gangs))
     /// sweep this.
     pub fn iter_tasks(&self) -> impl Iterator<Item = (TaskId, &TableTask)> {
-        self.tasks.iter().map(|(&id, task)| (id, task))
+        self.tasks.iter()
     }
 
     /// Is the task alive and waiting for dispatch?
     pub fn is_pending(&self, id: TaskId) -> bool {
-        self.tasks.get(&id).map(|t| t.state) == Some(TaskState::Pending)
+        self.tasks.get(id).map(|t| t.state) == Some(TaskState::Pending)
     }
 
     /// Is the task still resident (not yet completed)?
     pub fn task_live(&self, id: TaskId) -> bool {
-        self.tasks.contains_key(&id)
+        self.tasks.contains(id)
     }
 
-    /// The live-worker map, id-ordered (placement scans iterate this).
-    pub fn workers_map(&self) -> &BTreeMap<WorkerId, TableWorker> {
-        &self.workers
+    /// Live worker ids, ascending (placement scans iterate this; the
+    /// first hit is the lowest-id candidate).
+    pub fn worker_ids(&self) -> impl Iterator<Item = WorkerId> + '_ {
+        self.worker_index.iter().copied()
     }
 
-    /// The worker, if live.
+    /// The worker, if live (stale generations miss).
     pub fn worker(&self, wid: WorkerId) -> Option<&TableWorker> {
-        self.workers.get(&wid)
+        self.workers.get(wid)
     }
 
     /// Live tasks currently Pending.
@@ -591,7 +769,7 @@ impl TaskTable {
     /// Append the ids of live workers (crash-victim candidates for the
     /// fault plane), ascending.
     pub fn live_worker_ids_into(&self, out: &mut Vec<u64>) {
-        out.extend(self.workers.keys().copied());
+        out.extend(self.worker_index.iter().copied());
     }
 }
 
@@ -615,45 +793,70 @@ mod tests {
         TaskSpec { tag, cores, time_request: SEC, time_limit: 100 * SEC }
     }
 
+    fn worker_up(tab: &mut TaskTable) -> WorkerId {
+        tab.admit_workers(0, 3600 * SEC, 16)[0]
+    }
+
+    #[test]
+    fn slab_ids_ascend_in_admission_order_and_reject_stale() {
+        let mut slab: Slab<u32> = Slab::new();
+        let a = slab.insert(10);
+        let b = slab.insert(20);
+        assert!(b > a, "admission order must be id order");
+        assert_eq!(slab.get(a), Some(&10));
+        assert_eq!(slab.remove(a), Some(10));
+        // Slot reused under a fresh generation: higher id, same slot.
+        let c = slab.insert(30);
+        assert_eq!(slot_of(c), slot_of(a));
+        assert!(c > b);
+        // The stale id must miss every accessor.
+        assert_eq!(slab.get(a), None);
+        assert!(!slab.contains(a));
+        assert_eq!(slab.get_mut(a), None);
+        assert_eq!(slab.remove(a), None);
+        assert_eq!(slab.get(c), Some(&30));
+        assert_eq!(slab.len(), 2);
+    }
+
     #[test]
     fn gang_reserve_takes_and_releases_all_slots_atomically() {
         let mut tab = TaskTable::new(cfg());
         let mut out = Vec::new();
-        tab.admit_workers(0, 3600 * SEC, 16);
-        tab.admit_workers(0, 3600 * SEC, 16);
+        let w1 = worker_up(&mut tab);
+        let w2 = worker_up(&mut tab);
         let id = tab.admit(0, spec(1, 8));
-        tab.reserve(0, id, &[1, 2], &mut out);
-        assert_eq!(tab.worker(1).unwrap().cores_free, 8);
-        assert_eq!(tab.worker(2).unwrap().cores_free, 8);
-        assert!(tab.worker(1).unwrap().running.contains(&id));
-        assert!(tab.worker(2).unwrap().running.contains(&id));
+        tab.reserve(0, id, &[w1, w2], &mut out);
+        assert_eq!(tab.worker(w1).unwrap().cores_free, 8);
+        assert_eq!(tab.worker(w2).unwrap().cores_free, 8);
+        assert!(tab.worker(w1).unwrap().running.contains(&id));
+        assert!(tab.worker(w2).unwrap().running.contains(&id));
         // Completion frees every member.
         out.clear();
         assert!(tab.complete(SEC, id, false, &mut out));
-        assert_eq!(tab.freed(), &[1, 2]);
-        assert_eq!(tab.worker(1).unwrap().cores_free, 16);
-        assert_eq!(tab.worker(2).unwrap().cores_free, 16);
+        assert_eq!(tab.freed(), &[w1, w2]);
+        assert_eq!(tab.worker(w1).unwrap().cores_free, 16);
+        assert_eq!(tab.worker(w2).unwrap().cores_free, 16);
     }
 
     #[test]
     fn losing_one_gang_member_releases_the_others() {
         let mut tab = TaskTable::new(cfg());
         let mut out = Vec::new();
-        tab.admit_workers(0, 3600 * SEC, 16);
-        tab.admit_workers(0, 3600 * SEC, 16);
+        let w1 = worker_up(&mut tab);
+        let w2 = worker_up(&mut tab);
         let id = tab.admit(0, spec(1, 16));
-        tab.reserve(0, id, &[1, 2], &mut out);
+        tab.reserve(0, id, &[w1, w2], &mut out);
         out.clear();
-        let requeued = tab.worker_lost(1, &mut out);
+        let requeued = tab.worker_lost(w1, &mut out);
         assert_eq!(requeued, vec![id]);
         assert!(out.iter().any(|a| matches!(
             a,
             HqAction::Requeued { task } if *task == id
         )));
         // The surviving member's slots are back and hold nothing.
-        let w2 = tab.worker(2).unwrap();
-        assert_eq!(w2.cores_free, 16);
-        assert!(w2.running.is_empty());
+        let sw = tab.worker(w2).unwrap();
+        assert_eq!(sw.cores_free, 16);
+        assert!(sw.running.is_empty());
         assert!(tab.is_pending(id));
         assert_eq!(tab.task(id).unwrap().workers, Vec::<WorkerId>::new());
     }
@@ -662,26 +865,26 @@ mod tests {
     fn gang_start_action_lists_every_member() {
         let mut tab = TaskTable::new(cfg());
         let mut out = Vec::new();
-        tab.admit_workers(0, 3600 * SEC, 16);
-        tab.admit_workers(0, 3600 * SEC, 16);
+        let w1 = worker_up(&mut tab);
+        let w2 = worker_up(&mut tab);
         let id = tab.admit(0, spec(1, 4));
-        tab.reserve(0, id, &[1, 2], &mut out);
+        tab.reserve(0, id, &[w1, w2], &mut out);
         out.clear();
         assert_eq!(tab.timer(MS, HqTimer::Dispatched(id), &mut out),
                    TimerVerdict::Started);
         assert!(out.iter().any(|a| matches!(
             a,
             HqAction::StartGang { task, workers }
-                if *task == id && workers == &vec![1, 2]
+                if *task == id && workers == &vec![w1, w2]
         )));
         // Single-worker reservations still emit plain StartTask.
         let solo = tab.admit(0, spec(2, 4));
-        tab.reserve(0, solo, &[1], &mut out);
+        tab.reserve(0, solo, &[w1], &mut out);
         out.clear();
         tab.timer(2 * MS, HqTimer::Dispatched(solo), &mut out);
         assert!(out.iter().any(|a| matches!(
             a,
-            HqAction::StartTask { task, worker: 1 } if *task == solo
+            HqAction::StartTask { task, worker } if *task == solo && *worker == w1
         )));
     }
 
@@ -689,9 +892,9 @@ mod tests {
     fn exact_limit_guard_ignores_stale_limits() {
         let mut tab = TaskTable::new(cfg()).with_exact_limit();
         let mut out = Vec::new();
-        tab.admit_workers(0, 3600 * SEC, 16);
+        let w1 = worker_up(&mut tab);
         let id = tab.admit(0, spec(1, 16));
-        tab.reserve(0, id, &[1], &mut out);
+        tab.reserve(0, id, &[w1], &mut out);
         tab.timer(MS, HqTimer::Dispatched(id), &mut out);
         // A limit not matching start_t + time_limit is stale.
         out.clear();
@@ -710,14 +913,14 @@ mod tests {
     fn pending_counter_tracks_requeue_retry_cycle() {
         let mut tab = TaskTable::new(cfg());
         let mut out = Vec::new();
-        tab.admit_workers(0, 3600 * SEC, 16);
+        let w1 = worker_up(&mut tab);
         let id = tab.admit(0, spec(1, 16));
         assert_eq!(tab.pending_tasks(), 1);
-        tab.reserve(0, id, &[1], &mut out);
+        tab.reserve(0, id, &[w1], &mut out);
         assert_eq!(tab.pending_tasks(), 0);
         assert_eq!(tab.fail(MS, id, Some(SEC), &mut out),
                    FailVerdict::Cooling);
-        assert_eq!(tab.freed(), &[1]);
+        assert_eq!(tab.freed(), &[w1]);
         assert_eq!(tab.pending_tasks(), 0, "cooling is not pending");
         assert_eq!(tab.timer(MS + SEC, HqTimer::Retry(id), &mut out),
                    TimerVerdict::Requeue(id));
@@ -726,5 +929,53 @@ mod tests {
         assert!(tab.complete(2 * SEC, id, false, &mut out));
         assert_eq!(tab.pending_tasks(), 0);
         assert_eq!(tab.retired_count(), 1);
+    }
+
+    #[test]
+    fn stale_task_generation_rejected_by_every_op() {
+        let mut tab = TaskTable::new(cfg());
+        let mut out = Vec::new();
+        let w1 = worker_up(&mut tab);
+        let stale = tab.admit(0, spec(1, 4));
+        tab.reserve(0, stale, &[w1], &mut out);
+        assert!(tab.complete(SEC, stale, false, &mut out));
+        // The slot is reused by a fresh admission…
+        let fresh = tab.admit(SEC, spec(2, 4));
+        assert_eq!(slot_of(fresh), slot_of(stale));
+        // …and the stale id now misses every table operation.
+        out.clear();
+        assert!(!tab.task_live(stale));
+        assert!(!tab.is_pending(stale));
+        assert!(tab.task(stale).is_none());
+        assert!(!tab.can_start(SEC, stale, w1));
+        assert!(!tab.complete(2 * SEC, stale, false, &mut out));
+        assert_eq!(tab.fail(2 * SEC, stale, Some(SEC), &mut out),
+                   FailVerdict::Ignored);
+        assert_eq!(tab.timer(2 * SEC, HqTimer::Dispatched(stale), &mut out),
+                   TimerVerdict::Ignored);
+        assert_eq!(tab.timer(2 * SEC, HqTimer::Limit(stale), &mut out),
+                   TimerVerdict::Ignored);
+        assert_eq!(tab.timer(2 * SEC, HqTimer::Retry(stale), &mut out),
+                   TimerVerdict::Ignored);
+        assert!(out.is_empty());
+        // The fresh resident is untouched.
+        assert!(tab.is_pending(fresh));
+        assert_eq!(tab.pending_tasks(), 1);
+    }
+
+    #[test]
+    fn stale_worker_generation_rejected() {
+        let mut tab = TaskTable::new(cfg());
+        let mut out = Vec::new();
+        let w1 = worker_up(&mut tab);
+        tab.worker_lost(w1, &mut out);
+        let w2 = worker_up(&mut tab);
+        assert_eq!(slot_of(w2), slot_of(w1));
+        assert!(tab.worker(w1).is_none());
+        let id = tab.admit(0, spec(1, 4));
+        assert!(!tab.can_start(0, id, w1));
+        assert!(tab.can_start(0, id, w2));
+        assert!(tab.worker_lost(w1, &mut out).is_empty());
+        assert_eq!(tab.live_workers(), 1);
     }
 }

@@ -99,7 +99,8 @@ impl WorkStealCore {
     fn place(&mut self, id: TaskId) {
         let need = self.table.task(id).expect("placing unknown task").spec.cores;
         let mut best: Option<(usize, WorkerId)> = None;
-        for (&wid, w) in self.table.workers_map().iter() {
+        for wid in self.table.worker_ids() {
+            let w = self.table.worker(wid).expect("indexed worker live");
             if w.cores_total < need {
                 continue;
             }
@@ -163,9 +164,7 @@ impl WorkStealCore {
             }
             let pick = self
                 .table
-                .workers_map()
-                .keys()
-                .copied()
+                .worker_ids()
                 .find(|&wid| self.table.can_start(t, front, wid));
             let Some(wid) = pick else { break };
             self.backlog.pop_front();
@@ -183,16 +182,12 @@ impl WorkStealCore {
     fn steal_once(&mut self, t: Micros, out: &mut Vec<HqAction>) -> bool {
         let mut thieves = std::mem::take(&mut self.wid_scratch);
         thieves.clear();
-        thieves.extend(
+        thieves.extend(self.table.worker_ids().filter(|&wid| {
             self.table
-                .workers_map()
-                .iter()
-                .filter(|&(wid, w)| {
-                    w.cores_free > 0
-                        && self.deques.get(wid).map_or(true, |d| d.is_empty())
-                })
-                .map(|(&wid, _)| wid),
-        );
+                .worker(wid)
+                .map_or(false, |w| w.cores_free > 0)
+                && self.deques.get(&wid).map_or(true, |d| d.is_empty())
+        }));
         let mut stole = false;
         for &thief in &thieves {
             // Victim: longest deque (ties: lowest id), excluding the
@@ -267,11 +262,14 @@ impl TaskCore for WorkStealCore {
         time_limit: Micros,
         cores_per_worker: u32,
         out: &mut Vec<HqAction>,
-    ) {
-        for wid in self.table.admit_workers(t, time_limit, cores_per_worker) {
+    ) -> Option<WorkerId> {
+        let admitted = self.table.admit_workers(t, time_limit, cores_per_worker);
+        let first = admitted.first().copied();
+        for &wid in admitted {
             self.deques.insert(wid, VecDeque::new());
         }
         self.pump(t, out);
+        first
     }
 
     fn on_worker_lost_into(
@@ -489,15 +487,15 @@ mod tests {
         });
         // Worker 1 only, loaded with serial 16-core tasks…
         let mut out = Vec::new();
-        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
+        let w1 = core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out).unwrap();
         for i in 0..6 {
             core.submit_task_into(0, spec(i, 16), &mut out);
         }
         assert_eq!(core.live_workers(), 1);
-        assert!(core.deque_len(1) >= 5, "one runs, the rest queue");
+        assert!(core.deque_len(w1) >= 5, "one runs, the rest queue");
         // …then worker 2 appears idle: it must steal immediately.
         out.clear();
-        core.on_alloc_up_into(1, 3600 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(1, 3600 * SEC, 16, &mut out);
         assert_eq!(core.live_workers(), 2);
         assert!(core.steals >= 1, "idle worker steals, {} steals", core.steals);
         let started_on_2 = out.iter().any(|a| matches!(
@@ -556,31 +554,31 @@ mod tests {
             ..cfg()
         });
         let mut acts = Vec::new();
-        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
-        for i in 1..=6 {
-            core.submit_task_into(0, spec(i, 16), &mut acts);
-        }
-        assert!(core.deque_len(1) >= 5);
-        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts);
+        let w1 = core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts).unwrap();
+        let submitted: Vec<TaskId> = (1..=6)
+            .map(|i| core.submit_task_into(0, spec(i, 16), &mut acts))
+            .collect();
+        assert!(core.deque_len(w1) >= 5);
+        let w2 = core.on_alloc_up_into(0, 3600 * SEC, 16, &mut acts).unwrap();
         assert!(core.steals >= 1, "idle second worker must steal");
         let starts = settle(&mut core, acts, 5 * SEC);
         assert_eq!(starts.len(), 6, "every task starts exactly once");
         // Owner-side FIFO: worker 1 replays its deque in ascending
         // task-id (= submission) order, steals notwithstanding.
-        let w1: Vec<TaskId> = starts
+        let on_w1: Vec<TaskId> = starts
             .iter()
-            .filter(|&&(w, _)| w == 1)
+            .filter(|&&(w, _)| w == w1)
             .map(|&(_, id)| id)
             .collect();
-        let mut sorted = w1.clone();
+        let mut sorted = on_w1.clone();
         sorted.sort_unstable();
-        assert_eq!(w1, sorted, "victim deque replayed out of order");
+        assert_eq!(on_w1, sorted, "victim deque replayed out of order");
         // Nothing lost, nothing duplicated, and the thief did real work.
         let mut all: Vec<TaskId> = starts.iter().map(|&(_, id)| id).collect();
         all.sort_unstable();
         all.dedup();
-        assert_eq!(all, (1..=6).collect::<Vec<_>>());
-        assert!(starts.iter().any(|&(w, _)| w == 2));
+        assert_eq!(all, submitted);
+        assert!(starts.iter().any(|&(w, _)| w == w2));
         assert_eq!(core.retired_count(), 6);
     }
 
@@ -592,12 +590,12 @@ mod tests {
         // dispatched, never a panic.
         let mut core = WorkStealCore::new(cfg());
         let mut out = Vec::new();
-        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
+        let w1 = core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out).unwrap();
         let t1 = core.submit_task_into(0, spec(1, 16), &mut out);
         let t2 = core.submit_task_into(0, spec(2, 16), &mut out);
         let t3 = core.submit_task_into(0, spec(3, 16), &mut out);
         // t1 dispatched; t2, t3 queued behind it.
-        assert_eq!(core.deque_len(1), 2);
+        assert_eq!(core.deque_len(w1), 2);
         out.clear();
         core.on_task_done_into(SEC, t2, &mut out);
         assert!(out.iter().any(|a| matches!(
@@ -605,7 +603,7 @@ mod tests {
             HqAction::TaskCompleted { task, .. } if *task == t2
         )));
         // The pump already skimmed the stale entry off the deque front.
-        assert_eq!(core.deque_len(1), 1);
+        assert_eq!(core.deque_len(w1), 1);
         // Finishing t1 starts t3 — t2 is gone, not resurrected.
         out.clear();
         core.on_task_done_into(2 * SEC, t1, &mut out);
@@ -624,14 +622,14 @@ mod tests {
             ..cfg()
         });
         let mut out = Vec::new();
-        core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out);
-        for i in 0..5 {
-            core.submit_task_into(0, spec(i, 16), &mut out);
-        }
+        let w1 = core.on_alloc_up_into(0, 3600 * SEC, 16, &mut out).unwrap();
+        let submitted: Vec<TaskId> = (0..5)
+            .map(|i| core.submit_task_into(0, spec(i, 16), &mut out))
+            .collect();
         // One dispatched + four queued on worker 1.
         assert_eq!(core.resident_tasks(), 5);
         out.clear();
-        core.on_worker_lost_into(SEC, 1, &mut out);
+        core.on_worker_lost_into(SEC, w1, &mut out);
         // Everything is pending again (in-flight work requeued too) and
         // autoalloc asks for replacement capacity.
         assert_eq!(core.pending_tasks(), 5);
@@ -642,13 +640,12 @@ mod tests {
         )));
         // Capacity returns: all five run to completion.
         out.clear();
-        core.on_alloc_up_into(2 * SEC, 3600 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(2 * SEC, 3600 * SEC, 16, &mut out);
         let starts = settle(&mut core, out, SEC);
         let mut ids: Vec<TaskId> = starts.iter().map(|&(_, id)| id).collect();
         ids.sort_unstable();
         ids.dedup();
-        assert_eq!(ids, (1..=5).collect::<Vec<_>>(),
-                   "all five tasks restarted");
+        assert_eq!(ids, submitted, "all five tasks restarted");
         assert_eq!(core.retired_count(), 5);
         assert_eq!(core.resident_tasks(), 0);
     }
@@ -658,7 +655,7 @@ mod tests {
         let mut core = WorkStealCore::new(cfg());
         let mut out = Vec::new();
         // Allocation lives 10 s; task requests 3600 s: must NOT start.
-        core.on_alloc_up_into(0, 10 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(0, 10 * SEC, 16, &mut out);
         core.submit_task_into(0, TaskSpec {
             tag: 1, cores: 1, time_request: 3600 * SEC,
             time_limit: 2 * 3600 * SEC,
@@ -706,9 +703,9 @@ mod tests {
         assert_eq!(allocs, 2, "backlog=2 caps queued allocs");
         assert_eq!(core.allocs_waiting(), 2);
         let mut out = Vec::new();
-        core.on_alloc_up_into(10, 3600 * SEC, 16, &mut out);
-        core.on_alloc_up_into(11, 3600 * SEC, 16, &mut out);
-        core.on_alloc_up_into(12, 3600 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(10, 3600 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(11, 3600 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(12, 3600 * SEC, 16, &mut out);
         assert!(core.live_workers() <= 2);
     }
 
@@ -723,8 +720,8 @@ mod tests {
         for i in 0..4u64 {
             core.submit_task_into(i, spec(i, 16), &mut out);
         }
-        core.on_alloc_up_into(0, 10 * SEC, 16, &mut out);
-        core.on_alloc_up_into(0, 50 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(0, 10 * SEC, 16, &mut out);
+        let _ = core.on_alloc_up_into(0, 50 * SEC, 16, &mut out);
         assert_eq!(core.live_workers(), 2);
         core.expire_workers_into(5 * SEC, &mut out);
         assert_eq!(core.live_workers(), 2);

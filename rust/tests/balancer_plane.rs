@@ -556,6 +556,121 @@ fn multi_shard_drill_no_request_lost_and_snapshots_sum() {
     lb.shutdown();
 }
 
+/// Skewed-mix drill for the power-of-two-choices shard pick: a 90/10
+/// model mix (90 requests for `hot`, 10 for `cold`) over 2 shards per
+/// model.  P2C compares the two admission-gate depths on every submit,
+/// so within each model's group the queued work must stay balanced —
+/// no shard may starve behind its sibling — and once servers appear,
+/// every shard must actually dispatch its share.
+#[test]
+fn skewed_mix_p2c_keeps_every_shard_fed() {
+    use std::sync::atomic::AtomicU64;
+    use uqsched::coordinator::{BalancerStats, DispatchPlane, PlaneConfig,
+                               Registry, SubmitOutcome};
+    use uqsched::sched::realtime::RetryPolicy;
+    use uqsched::umbridge::ModelContract;
+
+    let names: Vec<String> = vec!["hot".into(), "cold".into()];
+    let registry = Arc::new(Registry::new());
+    let stats = Arc::new(BalancerStats::new(&names));
+    let plane = DispatchPlane::start(
+        PlaneConfig {
+            models: names.clone(),
+            shards_per_model: 2,
+            queue_capacity: 256,
+            scheduler: LivePolicy::Fcfs,
+            retry: RetryPolicy::default(),
+            request_timeout: Duration::from_secs(10),
+            persistent_servers: true,
+        },
+        registry.clone(),
+        stats,
+        Arc::new(AtomicU64::new(0)),
+    );
+
+    // Phase 1 — admission balance. No workers yet, so gate depths are
+    // exactly the queued counts: submit the skewed mix and check that
+    // neither model's group let one shard run away.
+    let mut handles = Vec::new();
+    for i in 0..100usize {
+        let model = if i % 10 == 9 { "cold" } else { "hot" };
+        match plane.submit(model, format!("{model}:{i}")) {
+            SubmitOutcome::Queued(h) => handles.push(h),
+            _ => panic!("submit {i} rejected"),
+        }
+    }
+    for model in ["hot", "cold"] {
+        let total: u64 = if model == "hot" { 90 } else { 10 };
+        assert_eq!(plane.queued_for(model), total as usize,
+                   "{model}: lost work at admission");
+        // Wait for the shard threads to publish their epoch-stamped
+        // snapshots, then check the per-shard split: depth-compared
+        // admission must keep the group level (45/45 and 5/5 here,
+        // with a little slack for publish timing).
+        let t0 = Instant::now();
+        let queued = loop {
+            let q: Vec<u64> =
+                plane.counts_for(model).iter().map(|c| c.queued).collect();
+            if q.iter().sum::<u64>() == total {
+                break q;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(10),
+                    "{model}: snapshots never converged ({q:?})");
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        assert_eq!(queued.len(), 2);
+        let (lo, hi) =
+            (*queued.iter().min().unwrap(), *queued.iter().max().unwrap());
+        assert!(hi - lo <= 2,
+                "{model}: p2c admission split {queued:?} is unbalanced");
+    }
+
+    // Phase 2 — service balance. One server per model; drain everything
+    // and require every shard of both groups to have dispatched work.
+    let contract = ModelContract { input_sizes: vec![1], output_sizes: vec![1] };
+    for (j, m) in names.iter().enumerate() {
+        let ep = format!("skew-{j}");
+        registry.register(&ep, m, &contract);
+        plane.worker_up(&ep, m);
+    }
+    let mut served = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while served < handles.len() {
+        assert!(Instant::now() < deadline,
+                "orders stalled at {served}/{}", handles.len());
+        for s in 0..plane.shard_count() {
+            while let Some(order) = plane.take_order(s, Duration::from_millis(5)) {
+                plane.complete_order(order, Ok("ok".into()));
+                served += 1;
+            }
+        }
+    }
+    for h in &handles {
+        let r = h.wait_deadline(Instant::now() + Duration::from_secs(5))
+            .expect("resolved");
+        assert!(r.is_ok());
+    }
+    for model in ["hot", "cold"] {
+        let counts = plane.counts_for(model);
+        let total: u64 = if model == "hot" { 90 } else { 10 };
+        let dispatched: Vec<u64> = counts.iter().map(|c| c.dispatched).collect();
+        assert_eq!(dispatched.iter().sum::<u64>(), total, "{model}: lost work");
+        assert!(dispatched.iter().all(|&d| d > 0),
+                "{model}: a shard starved under the 90/10 mix \
+                 (dispatched split {dispatched:?})");
+        // P2C bounds the split: with depth-compared admission neither
+        // shard may take more than ~2/3 of a 90-request stream the way
+        // a stale or unlucky round-robin can.
+        let (lo, hi) = (
+            *dispatched.iter().min().unwrap(),
+            *dispatched.iter().max().unwrap(),
+        );
+        assert!(hi - lo <= total / 3,
+                "{model}: shard imbalance {dispatched:?} exceeds the p2c bound");
+    }
+    plane.shutdown();
+}
+
 /// Per-model FCFS must hold within each shard of a group: drive the
 /// dispatch plane directly (3 models × 2 shards, one shared server per
 /// model) and check every shard's order stream surfaces each model's

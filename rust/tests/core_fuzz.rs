@@ -66,7 +66,11 @@ fn gen_script(rng: &mut Rng) -> Script {
                 },
             },
             8 => Op::WorkerUp { id: 100 + rng.below(4), cores: 16 },
-            _ => Op::WorkerLost { id: 1 + rng.below(6) },
+            // `id` is an abstract victim draw, resolved against the
+            // live worker pool at fire time (core id spaces differ:
+            // live cores use the announced ids, stacks use internal
+            // generational slab ids).
+            _ => Op::WorkerLost { id: rng.below(8) },
         };
         script.push((t, op));
     }
@@ -242,9 +246,23 @@ fn run_script<S: SchedulerCore>(core: &mut S, script: &Script) -> Vec<u64> {
                         );
                     }
                     Op::WorkerLost { id } => {
+                        // Resolve the abstract victim draw against the
+                        // pool that is actually live NOW (exactly how
+                        // the fault plane picks crash victims).  An
+                        // empty pool passes the raw draw through,
+                        // exercising the unknown-worker no-op path.
+                        let mut live = Vec::new();
+                        core.live_worker_ids(&mut live);
+                        live.sort_unstable();
+                        live.dedup();
+                        let wid = if live.is_empty() {
+                            *id
+                        } else {
+                            live[*id as usize % live.len()]
+                        };
                         core.on_capacity_change_into(
                             t,
-                            CapacityChange::WorkerLost(*id),
+                            CapacityChange::WorkerLost(wid),
                             &mut effects,
                         );
                     }
@@ -270,6 +288,32 @@ fn run_script<S: SchedulerCore>(core: &mut S, script: &Script) -> Vec<u64> {
     for (nth, w) in works.iter().enumerate() {
         assert!(w.finished,
                 "{label}: task #{nth} lost — no terminal record");
+    }
+    // Generation safety: every retired id is dead for good.  Scripts
+    // routinely evict early tasks and then submit more, so under the
+    // slab cores later ids sit in *recycled slots* of earlier ones —
+    // replaying the full stale-capable op surface with the evicted ids
+    // must emit nothing for them.  A slot reuse that resurrected the
+    // old generation would surface here as a Start/Finish/Requeued for
+    // a known (finished) id.
+    effects.clear();
+    for w in &works {
+        core.cancel_into(now, w.id, &mut effects);
+        core.on_work_done_into(now, w.id, &mut effects);
+        core.on_work_failed_into(now, w.id, None, &mut effects);
+        core.on_work_failed_into(now, w.id, Some(SEC), &mut effects);
+    }
+    for e in &effects {
+        let id = match e {
+            Effect::Start { id, .. }
+            | Effect::Requeued { id }
+            | Effect::Finish { id, .. } => id,
+            _ => continue,
+        };
+        let nth = by_id.get(id);
+        assert!(nth.is_none(),
+                "{label}: evicted task #{nth:?} resurrected by a stale \
+                 replay (generation safety broken)");
     }
     tags.sort_unstable();
     let n = tags.len();
@@ -381,6 +425,27 @@ fn fuzz_random_event_scripts_across_all_five_cores() {
             );
         }
     }
+}
+
+/// Deterministic generation-safety drill: wave one drains fully before
+/// wave two submits, so on the slab-backed cores wave two's tasks (and
+/// the workers admitted for them) recycle wave one's freed slots (LIFO
+/// free list).  The post-drain stale replay in [`run_script`] then
+/// replays *every* id — wave one's against slots owned by a newer
+/// generation — and must observe pure no-ops on all five cores.
+#[test]
+fn stale_ids_after_slot_reuse_are_rejected_on_all_five_cores() {
+    let mut script: Script = Vec::new();
+    for _ in 0..3 {
+        script.push((0, Op::Submit { duration: SEC }));
+    }
+    // Far enough out that wave one (including its allocation spin-up)
+    // has fully retired and its slots sit on the free list.
+    for _ in 0..3 {
+        script.push((3600 * SEC, Op::Submit { duration: SEC }));
+    }
+    script.sort_by_key(|(t, _)| *t);
+    run_all_cores(0xC0FFEE, &script);
 }
 
 // ---------------------------------------------------------------------------

@@ -405,13 +405,19 @@ fn drive_hq_trace<C: HqLike>(
         des.schedule(k * alloc_life / 7 + k * SEC, Ev::Expire);
     }
     let mut obs = HqObs::default();
+    let mut durs: HashMap<TaskId, Micros> = HashMap::new();
     let mut records = 0usize;
     let mut guard = 0u64;
     while let Some((t, ev)) = des.pop() {
         guard += 1;
         assert!(guard < 2_000_000, "runaway hq equivalence trace");
         let acts = match ev {
-            Ev::Submit(i) => core.submit_task(t, submissions[i].1.clone()).1,
+            Ev::Submit(i) => {
+                let (id, acts) =
+                    core.submit_task(t, submissions[i].1.clone());
+                durs.insert(id, durations[i]);
+                acts
+            }
             Ev::AllocUp => core.on_alloc_up(t, alloc_life, 16),
             Ev::Timer(tm) => core.on_timer(t, tm),
             Ev::TaskDone(id) => core.on_task_done(t, id),
@@ -425,7 +431,7 @@ fn drive_hq_trace<C: HqLike>(
                 }
                 HqAction::StartTask { task, worker } => {
                     obs.starts.push((task, worker));
-                    let dur = durations[(task - 1) as usize];
+                    let dur = durs[&task];
                     des.schedule(t + dur, Ev::TaskDone(task));
                 }
                 // Single-worker cores never emit gang starts; a stray
@@ -449,6 +455,43 @@ fn drive_hq_trace<C: HqLike>(
         }
     }
     assert_eq!(records, submissions.len(), "hq trace did not complete");
+    obs
+}
+
+/// Rewrite task and worker ids to admission ranks.  Ascending raw id ==
+/// admission order in *both* id schemes (the reference core's sequential
+/// counters and the table's generational slab keys, whose sequence lives
+/// in the high bits), so ranking over the sorted distinct ids compares
+/// the two cores' decisions without depending on the id encoding.
+fn normalise_obs(mut obs: HqObs) -> HqObs {
+    let mut tasks: Vec<TaskId> = obs
+        .starts
+        .iter()
+        .map(|&(task, _)| task)
+        .chain(obs.kills.iter().copied())
+        .chain(obs.records.iter().map(|&(task, _)| task))
+        .collect();
+    tasks.sort_unstable();
+    tasks.dedup();
+    let mut workers: Vec<u64> =
+        obs.starts.iter().map(|&(_, w)| w).collect();
+    workers.sort_unstable();
+    workers.dedup();
+    let trank = |id: TaskId| -> TaskId {
+        1 + tasks.binary_search(&id).expect("task seen in stream") as u64
+    };
+    let wrank = |id: u64| -> u64 {
+        1 + workers.binary_search(&id).expect("worker seen in stream") as u64
+    };
+    for s in &mut obs.starts {
+        *s = (trank(s.0), wrank(s.1));
+    }
+    for k in &mut obs.kills {
+        *k = trank(*k);
+    }
+    for r in &mut obs.records {
+        r.0 = trank(r.0);
+    }
     obs
 }
 
@@ -503,7 +546,8 @@ fn prop_indexed_hq_core_equals_reference() {
                                alloc_delay, alloc_life);
         let b = drive_hq_trace(&mut reference, &submissions, &durations,
                                alloc_delay, alloc_life);
-        assert_eq!(a, b, "indexed hq core diverged from seed semantics");
+        assert_eq!(normalise_obs(a), normalise_obs(b),
+                   "indexed hq core diverged from seed semantics");
     });
 }
 
@@ -716,7 +760,7 @@ fn stack_capacity_change_requeues_without_loss() {
                     if !lost_injected {
                         // Yank the first worker the moment it takes work.
                         lost_injected = true;
-                        des.schedule(now, Ev::Lose(1));
+                        des.schedule(now, Ev::Lose(0));
                     }
                     let dd = (durs[&id] as f64 * contention) as Micros;
                     des.schedule(now + dd, Ev::WorkDone(id));
@@ -738,11 +782,19 @@ fn stack_capacity_change_requeues_without_loss() {
         match ev {
             Ev::Timer(tm) => core.on_timer_into(t, tm, &mut effects),
             Ev::WorkDone(id) => core.on_work_done_into(t, id, &mut effects),
-            Ev::Lose(wid) => core.on_capacity_change_into(
-                t,
-                CapacityChange::WorkerLost(wid),
-                &mut effects,
-            ),
+            Ev::Lose(_) => {
+                // Resolve the victim at fire time: the lowest live
+                // worker id is the earliest-admitted worker.
+                let mut live = Vec::new();
+                core.live_worker_ids(&mut live);
+                live.sort_unstable();
+                let wid = *live.first().expect("a worker is live");
+                core.on_capacity_change_into(
+                    t,
+                    CapacityChange::WorkerLost(wid),
+                    &mut effects,
+                );
+            }
         }
     }
     assert!(lost_injected, "a worker must have taken work");
@@ -808,9 +860,12 @@ fn prop_worksteal_no_task_lost_and_deques_fifo_under_churn() {
         let alloc_delay = (1 + rng.below(10)) * SEC;
 
         let mut core = WorkStealCore::new(cfg);
-        // Durations by task id (ids are assigned in submission-fire
-        // order, which matches the DES pop order of the Submit events).
-        let mut durs: Vec<Micros> = Vec::new();
+        // Durations by the task id the core assigned at submit time.
+        let mut durs: HashMap<TaskId, Micros> = HashMap::new();
+        // Every worker ever admitted, in admission order: churn picks a
+        // victim from here (already-lost entries exercise the stale-id
+        // no-op path).
+        let mut admitted: Vec<u64> = Vec::new();
         let mut records: Vec<JobRecord> = Vec::new();
         let mut acts: Vec<HqAction> = Vec::new();
         let mut guard = 0u64;
@@ -821,15 +876,29 @@ fn prop_worksteal_no_task_lost_and_deques_fifo_under_churn() {
             match ev {
                 Ev::Submit(i) => {
                     let (_, spec, dur) = &specs[i];
-                    durs.push(*dur);
-                    core.submit_task_into(t, spec.clone(), &mut acts);
+                    let id = core.submit_task_into(t, spec.clone(),
+                                                   &mut acts);
+                    durs.insert(id, *dur);
                 }
                 Ev::AllocUp => {
-                    core.on_alloc_up_into(t, 1000 * SEC, 16, &mut acts)
+                    if let Some(w) =
+                        core.on_alloc_up_into(t, 1000 * SEC, 16, &mut acts)
+                    {
+                        admitted.push(w);
+                    }
                 }
                 Ev::Timer(tm) => core.on_timer_into(t, tm, &mut acts),
                 Ev::Done(id) => core.on_task_done_into(t, id, &mut acts),
-                Ev::Lose(wid) => core.on_worker_lost_into(t, wid, &mut acts),
+                Ev::Lose(r) => {
+                    // Pick a victim among ever-admitted workers; with
+                    // none yet, the raw draw is a guaranteed miss and
+                    // must be a no-op.
+                    let wid = admitted
+                        .get(r as usize % admitted.len().max(1))
+                        .copied()
+                        .unwrap_or(r);
+                    core.on_worker_lost_into(t, wid, &mut acts);
+                }
             }
             assert!(core.deques_fifo(),
                     "a steal or requeue broke per-deque FIFO order");
@@ -840,7 +909,7 @@ fn prop_worksteal_no_task_lost_and_deques_fifo_under_churn() {
                     }
                     HqAction::StartTask { task, .. }
                     | HqAction::StartGang { task, .. } => {
-                        let dur = durs[(task - 1) as usize];
+                        let dur = durs[&task];
                         des.schedule(t + dur, Ev::Done(task));
                     }
                     HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
@@ -873,13 +942,15 @@ fn prop_worksteal_no_task_lost_and_deques_fifo_under_churn() {
 
 /// Drive a bare `EdfCore` through a DES: submissions at given times,
 /// allocations come up `alloc_delay` after request, tasks run `dur`.
-/// Returns `(start_order, records)`.
+/// Returns `(start_order, records, submitted_ids)` — the last in
+/// submission-fire order, so callers can translate spec indices to the
+/// core's assigned ids.
 fn drive_edf(
     core: &mut EdfCore,
     submissions: &[(Micros, TaskSpec)],
     alloc_delay: Micros,
     dur: Micros,
-) -> (Vec<TaskId>, Vec<JobRecord>) {
+) -> (Vec<TaskId>, Vec<JobRecord>, Vec<TaskId>) {
     #[derive(Debug)]
     enum Ev {
         Submit(usize),
@@ -893,6 +964,7 @@ fn drive_edf(
     }
     let mut starts = Vec::new();
     let mut records = Vec::new();
+    let mut submitted = Vec::new();
     let mut acts: Vec<HqAction> = Vec::new();
     let mut guard = 0u64;
     while let Some((t, ev)) = des.pop() {
@@ -901,10 +973,14 @@ fn drive_edf(
         acts.clear();
         match ev {
             Ev::Submit(i) => {
-                core.submit_task_into(t, submissions[i].1.clone(), &mut acts);
+                submitted.push(core.submit_task_into(
+                    t,
+                    submissions[i].1.clone(),
+                    &mut acts,
+                ));
             }
             Ev::AllocUp => {
-                core.on_alloc_up_into(t, 100_000 * SEC, 16, &mut acts)
+                let _ = core.on_alloc_up_into(t, 100_000 * SEC, 16, &mut acts);
             }
             Ev::Timer(tm) => core.on_timer_into(t, tm, &mut acts),
             Ev::Done(id) => core.on_task_done_into(t, id, &mut acts),
@@ -932,7 +1008,7 @@ fn drive_edf(
         }
     }
     assert_eq!(records.len(), submissions.len(), "edf trace incomplete");
-    (starts, records)
+    (starts, records, submitted)
 }
 
 #[test]
@@ -959,13 +1035,17 @@ fn prop_edf_pops_in_deadline_laxity_id_order() {
             alloc_request: JobRequest::new(16, 16, 100_000 * SEC),
             dispatch_latency: 1 * MS,
         });
-        let (starts, _) = drive_edf(&mut core, &specs, SEC, 2 * SEC);
+        let (starts, _, submitted) = drive_edf(&mut core, &specs, SEC, 2 * SEC);
         assert_eq!(starts.len(), n);
-        let mut expect: Vec<TaskId> = (1..=n as u64).collect();
-        expect.sort_by_key(|&id| {
-            let s = &specs[(id - 1) as usize].1;
-            (s.time_limit, s.time_limit - s.time_request, id)
+        // All submissions fire at t=0 in spec order, so submitted[i] is
+        // spec i's core-assigned id (ascending — admission order).
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| {
+            let s = &specs[i].1;
+            (s.time_limit, s.time_limit - s.time_request, submitted[i])
         });
+        let expect: Vec<TaskId> =
+            order.iter().map(|&i| submitted[i]).collect();
         assert_eq!(starts, expect,
                    "EDF start order must follow (deadline, laxity, id)");
     });
@@ -1004,7 +1084,8 @@ fn edf_no_starvation_under_sustained_short_deadline_load() {
         alloc_request: JobRequest::new(16, 16, 100_000 * SEC),
         dispatch_latency: 1 * MS,
     });
-    let (_starts, records) = drive_edf(&mut core, &specs, SEC, 2 * SEC);
+    let (_starts, records, _submitted) =
+        drive_edf(&mut core, &specs, SEC, 2 * SEC);
     let long = records.iter().find(|r| r.tag == 0).expect("long task ran");
     assert!(!long.truncated, "long task must complete, not be killed");
     // Pressure was real: ~45 earlier-deadline shorts ran first…
@@ -1273,11 +1354,12 @@ fn prop_gang_no_partial_gangs_under_churn() {
         let alloc_delay = (1 + rng.below(10)) * SEC;
 
         let mut core = GangCore::new(cfg);
-        // Durations and widths by task id (ids are assigned in
-        // submission-fire order, which matches the DES pop order of the
-        // Submit events — not the order of `specs`).
-        let mut durs: Vec<Micros> = Vec::new();
-        let mut widths: Vec<(u32, u32)> = Vec::new();
+        // Durations and widths by the task id the core assigned at
+        // submit time; churn victims come from the ever-admitted worker
+        // list (already-lost entries exercise the stale-id no-op path).
+        let mut durs: HashMap<TaskId, Micros> = HashMap::new();
+        let mut widths: HashMap<TaskId, (u32, u32)> = HashMap::new();
+        let mut admitted: Vec<u64> = Vec::new();
         let mut records: Vec<JobRecord> = Vec::new();
         let mut gang_starts = 0usize;
         let mut acts: Vec<HqAction> = Vec::new();
@@ -1290,17 +1372,28 @@ fn prop_gang_no_partial_gangs_under_churn() {
             match ev {
                 Ev::Submit(i) => {
                     let (_, spec, dur, min, max) = &specs[i];
-                    durs.push(*dur);
-                    widths.push((*min, *max));
-                    core.submit_gang_task_into(t, spec.clone(), *min, *max,
-                                               &mut acts);
+                    let id = core.submit_gang_task_into(
+                        t, spec.clone(), *min, *max, &mut acts,
+                    );
+                    durs.insert(id, *dur);
+                    widths.insert(id, (*min, *max));
                 }
                 Ev::AllocUp => {
-                    core.on_alloc_up_into(t, 1000 * SEC, 16, &mut acts)
+                    if let Some(w) =
+                        core.on_alloc_up_into(t, 1000 * SEC, 16, &mut acts)
+                    {
+                        admitted.push(w);
+                    }
                 }
                 Ev::Timer(tm) => core.on_timer_into(t, tm, &mut acts),
                 Ev::Done(id) => core.on_task_done_into(t, id, &mut acts),
-                Ev::Lose(wid) => core.on_worker_lost_into(t, wid, &mut acts),
+                Ev::Lose(r) => {
+                    let wid = admitted
+                        .get(r as usize % admitted.len().max(1))
+                        .copied()
+                        .unwrap_or(r);
+                    core.on_worker_lost_into(t, wid, &mut acts);
+                }
             }
             assert!(core.no_partial_gangs(),
                     "partial gang observable after {ev_dbg} at t={t}");
@@ -1310,14 +1403,14 @@ fn prop_gang_no_partial_gangs_under_churn() {
                         des.schedule(t + alloc_delay, Ev::AllocUp);
                     }
                     HqAction::StartTask { task, .. } => {
-                        let dur = durs[(task - 1) as usize];
+                        let dur = durs[&task];
                         des.schedule(t + dur, Ev::Done(task));
                     }
                     HqAction::StartGang { task, ref workers } => {
                         // A started gang is within bounds and every
                         // member is distinct.
                         gang_starts += 1;
-                        let (min, max) = widths[(task - 1) as usize];
+                        let (min, max) = widths[&task];
                         assert!((workers.len() as u32) >= min.max(2)
                                 && (workers.len() as u32) <= max,
                                 "gang width {} outside {min}..={max}",
@@ -1327,7 +1420,7 @@ fn prop_gang_no_partial_gangs_under_churn() {
                         uniq.dedup();
                         assert_eq!(uniq.len(), workers.len(),
                                    "duplicate members in gang {workers:?}");
-                        let dur = durs[(task - 1) as usize];
+                        let dur = durs[&task];
                         des.schedule(t + dur, Ev::Done(task));
                     }
                     HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
@@ -1365,8 +1458,11 @@ fn prop_gang_no_partial_gangs_under_churn() {
 // ---------------------------------------------------------------------------
 
 /// Drive a task trace exactly like [`drive_hq_trace`], but record every
-/// emitted action verbatim (`Debug`-formatted with its timestamp)
-/// instead of projecting observations.
+/// emitted action verbatim with its timestamp, then render the stream
+/// with task/worker ids rewritten to admission ranks (sorted distinct
+/// ids — ascending id == admission order in both id schemes), so the
+/// byte pin compares variants, payloads, order and timestamps without
+/// depending on the id encoding.
 fn collect_hq_action_stream<C: HqLike>(
     core: &mut C,
     submissions: &[(Micros, TaskSpec)],
@@ -1389,43 +1485,121 @@ fn collect_hq_action_stream<C: HqLike>(
     for k in 1..150u64 {
         des.schedule(k * alloc_life / 7 + k * SEC, Ev::Expire);
     }
-    let mut stream = Vec::new();
+    let mut raw: Vec<(Micros, HqAction)> = Vec::new();
+    let mut durs: HashMap<TaskId, Micros> = HashMap::new();
     let mut records = 0usize;
     let mut guard = 0u64;
     while let Some((t, ev)) = des.pop() {
         guard += 1;
         assert!(guard < 2_000_000, "runaway hq action-stream trace");
         let acts = match ev {
-            Ev::Submit(i) => core.submit_task(t, submissions[i].1.clone()).1,
+            Ev::Submit(i) => {
+                let (id, acts) =
+                    core.submit_task(t, submissions[i].1.clone());
+                durs.insert(id, durations[i]);
+                acts
+            }
             Ev::AllocUp => core.on_alloc_up(t, alloc_life, 16),
             Ev::Timer(tm) => core.on_timer(t, tm),
             Ev::TaskDone(id) => core.on_task_done(t, id),
             Ev::Expire => core.expire_workers(t),
         };
         for a in acts {
-            stream.push(format!("t={t} {a:?}"));
-            match a {
+            match &a {
                 HqAction::SubmitAllocation { .. } => {
                     des.schedule(t + alloc_delay, Ev::AllocUp);
                 }
                 HqAction::StartTask { task, .. } => {
-                    let dur = durations[(task - 1) as usize];
-                    des.schedule(t + dur, Ev::TaskDone(task));
+                    let dur = durs[task];
+                    des.schedule(t + dur, Ev::TaskDone(*task));
                 }
                 HqAction::StartGang { task, .. } => {
                     panic!("unexpected StartGang for task {task}")
                 }
-                HqAction::Timer(tt, tm) => des.schedule(tt, Ev::Timer(tm)),
+                HqAction::Timer(tt, tm) => {
+                    des.schedule(*tt, Ev::Timer(*tm));
+                }
                 HqAction::TaskCompleted { .. } => records += 1,
                 HqAction::KillTask { .. } | HqAction::Requeued { .. } => {}
             }
+            raw.push((t, a));
         }
         if records >= submissions.len() {
             break;
         }
     }
     assert_eq!(records, submissions.len(), "hq action stream incomplete");
-    stream
+
+    // Second pass: rank ids, render canonically.
+    let mut tasks: Vec<TaskId> = Vec::new();
+    let mut workers: Vec<u64> = Vec::new();
+    for (_, a) in &raw {
+        match a {
+            HqAction::SubmitAllocation { .. } => {}
+            HqAction::StartTask { task, worker } => {
+                tasks.push(*task);
+                workers.push(*worker);
+            }
+            HqAction::StartGang { task, workers: ws } => {
+                tasks.push(*task);
+                workers.extend_from_slice(ws);
+            }
+            HqAction::KillTask { task }
+            | HqAction::Requeued { task }
+            | HqAction::TaskCompleted { task, .. } => tasks.push(*task),
+            HqAction::Timer(_, tm) => match tm {
+                HqTimer::Dispatched(id)
+                | HqTimer::Limit(id)
+                | HqTimer::Retry(id) => tasks.push(*id),
+            },
+        }
+    }
+    tasks.sort_unstable();
+    tasks.dedup();
+    workers.sort_unstable();
+    workers.dedup();
+    let trank = |id: &TaskId| -> u64 {
+        1 + tasks.binary_search(id).expect("task seen") as u64
+    };
+    let wrank = |id: &u64| -> u64 {
+        1 + workers.binary_search(id).expect("worker seen") as u64
+    };
+    raw.iter()
+        .map(|(t, a)| match a {
+            HqAction::SubmitAllocation { alloc_tag, req } => {
+                format!("t={t} SubmitAllocation alloc_tag={alloc_tag} \
+                         req={req:?}")
+            }
+            HqAction::StartTask { task, worker } => {
+                format!("t={t} StartTask task={} worker={}",
+                        trank(task), wrank(worker))
+            }
+            HqAction::StartGang { task, workers: ws } => {
+                let m: Vec<u64> = ws.iter().map(&wrank).collect();
+                format!("t={t} StartGang task={} workers={m:?}", trank(task))
+            }
+            HqAction::KillTask { task } => {
+                format!("t={t} KillTask task={}", trank(task))
+            }
+            HqAction::Requeued { task } => {
+                format!("t={t} Requeued task={}", trank(task))
+            }
+            HqAction::TaskCompleted { task, record } => {
+                format!("t={t} TaskCompleted task={} record={record:?}",
+                        trank(task))
+            }
+            HqAction::Timer(tt, tm) => {
+                let p = match tm {
+                    HqTimer::Dispatched(id) => {
+                        format!("Dispatched({})", trank(id))
+                    }
+                    HqTimer::Limit(id) => format!("Limit({})", trank(id)),
+                    HqTimer::Retry(id) => format!("Retry({})", trank(id)),
+                };
+                format!("t={t} Timer at={tt} {p}")
+            }
+        })
+        .collect()
 }
 
 #[test]
